@@ -1,0 +1,56 @@
+//! Replacement-policy ablation (live version of paper §7.3 / Fig. 17):
+//! run the same MMLU workload under PGDSF, GDSF, LRU and LFU and compare
+//! hit rate and TTFT at several host-memory sizes.
+//!
+//! Run: `cargo run --release --example policy_ablation`
+
+use ragcache::config::{PolicyKind, SystemConfig};
+use ragcache::controller::{RetrievalTiming, SimServer};
+use ragcache::workload::{datasets::MMLU, Corpus, Trace};
+
+fn main() -> anyhow::Result<()> {
+    let num_docs = 50_000;
+    let corpus = Corpus::wikipedia_like(num_docs, 1);
+    let trace = Trace::generate(&MMLU, &corpus, 0.8, 600, 2, 21);
+    const GIB: u64 = 1 << 30;
+
+    println!(
+        "{:<10} {:>10} {:>12} {:>12}",
+        "policy", "host(GiB)", "hit-rate", "ttft(s)"
+    );
+    for host_gib in [16u64, 64] {
+        for policy in [
+            PolicyKind::Pgdsf,
+            PolicyKind::Gdsf,
+            PolicyKind::Lru,
+            PolicyKind::Lfu,
+        ] {
+            let mut cfg = SystemConfig::default();
+            cfg.cache.policy = policy;
+            cfg.cache.host_bytes = host_gib * GIB;
+            let server = SimServer::build(
+                &cfg,
+                trace.clone(),
+                num_docs,
+                RetrievalTiming::default(),
+                3,
+            )?;
+            let out = server.run();
+            println!(
+                "{:<10} {:>10} {:>11.1}% {:>12.3}",
+                policy.name(),
+                host_gib,
+                out.recorder.hit_rate() * 100.0,
+                out.recorder.ttft().mean(),
+            );
+        }
+        println!();
+    }
+    println!(
+        "PGDSF's bilinear-interpolated per-token cost (Algorithm 1) keeps \
+         the most expensive-to-recompute prefixes resident — the paper \
+         reports 1.02-1.32x hit-rate gains over GDSF and up to 1.75x \
+         over LFU."
+    );
+    Ok(())
+}

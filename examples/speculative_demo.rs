@@ -1,0 +1,82 @@
+//! Dynamic speculative pipelining walkthrough (paper §5.3, Fig. 11) plus
+//! a small sweep showing the TTFT effect as vector-search latency grows.
+//!
+//! Run: `cargo run --release --example speculative_demo`
+
+use ragcache::config::SystemConfig;
+use ragcache::controller::{RetrievalTiming, SimServer};
+use ragcache::spec::{SpecAction, SpecState};
+use ragcache::workload::{datasets::MMLU, Corpus, Trace};
+
+fn main() -> anyhow::Result<()> {
+    // --- Part 1: the Fig. 11 walkthrough on the state machine itself.
+    println!("== Algorithm 2 walkthrough (paper Fig. 11) ==");
+    let mut s = SpecState::new();
+    let stages: [(&[u32], bool); 4] = [
+        (&[1, 3], false), // stage 1: candidates [D1, D3]
+        (&[1, 2], false), // stage 2: [D1, D2] — restart
+        (&[1, 2], false), // stage 3: unchanged — keep
+        (&[1, 2], true),  // final: matches — deliver speculation
+    ];
+    for (i, (docs, is_final)) in stages.iter().enumerate() {
+        let action = s.on_stage(docs, 0, 4, *is_final);
+        let desc = match action {
+            SpecAction::Start { terminate_prev: false } => {
+                "start speculative generation"
+            }
+            SpecAction::Start { terminate_prev: true } => {
+                "terminate stale speculation, start new one"
+            }
+            SpecAction::Keep => "candidates unchanged — keep running",
+            SpecAction::Defer { .. } => "defer (pool full)",
+        };
+        println!("  stage {} {:?}: {}", i + 1, docs, desc);
+    }
+    println!(
+        "  => {} generations started, {} wasted\n",
+        s.started, s.wasted
+    );
+
+    // --- Part 2: TTFT vs search latency, DSP on/off (Fig. 19's shape).
+    println!("== TTFT vs vector-search latency (rate 0.1 req/s) ==");
+    println!(
+        "{:>12} {:>12} {:>12} {:>8}",
+        "search(ms)", "DSP ttft(s)", "noDSP ttft(s)", "gain"
+    );
+    let num_docs = 20_000;
+    let corpus = Corpus::wikipedia_like(num_docs, 2);
+    let trace = Trace::generate(&MMLU, &corpus, 0.1, 150, 2, 5);
+    for search_ms in [50.0, 150.0, 400.0, 800.0] {
+        let timing = RetrievalTiming {
+            full_search_s: search_ms / 1e3,
+            stages: 4,
+            early_convergence: 0.55,
+        };
+        let mut ttfts = Vec::new();
+        for spec_on in [true, false] {
+            let mut cfg = SystemConfig::default();
+            cfg.spec.enabled = spec_on;
+            let server = SimServer::build(
+                &cfg,
+                trace.clone(),
+                num_docs,
+                timing,
+                9,
+            )?;
+            let out = server.run();
+            ttfts.push(out.recorder.ttft().mean());
+        }
+        println!(
+            "{:>12.0} {:>12.3} {:>12.3} {:>7.2}x",
+            search_ms,
+            ttfts[0],
+            ttfts[1],
+            ttfts[1] / ttfts[0]
+        );
+    }
+    println!(
+        "\nSpeculative prefill hides the search tail behind the GPU — the \
+         paper reports up to 1.6x TTFT reduction at high search ratios."
+    );
+    Ok(())
+}

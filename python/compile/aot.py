@@ -1,0 +1,122 @@
+"""AOT compile path: lower the L2 model (with its L1 Pallas kernel) to
+HLO *text* artifacts the Rust runtime loads via PJRT.
+
+HLO text — not serialized ``HloModuleProto`` — is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs exactly once at build time (``make artifacts``); the Rust
+binary is self-contained afterwards.
+
+Outputs under ``--out-dir`` (default ``../artifacts``):
+  - ``prefill_<model>_a<alpha_max>_b<beta>.hlo.txt`` per shape bucket
+  - ``params_<model>.bin`` — flat little-endian f32 parameters
+  - ``manifest.json`` — the ABI: configs, param specs, buckets
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+#: (alpha_max, beta) shape buckets compiled per model. alpha_len <=
+#: alpha_max and beta_len <= beta are runtime scalars, so these few
+#: buckets cover every request the end-to-end example issues.
+BUCKETS = [(128, 16), (128, 64), (512, 16), (512, 64)]
+
+MODELS = ["tiny-mha", "tiny-gqa"]
+
+PARAM_SEED = 0
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(cfg, alpha_max, beta):
+    """Lower one (alpha_max, beta) prefill bucket to HLO text."""
+    fn = M.make_prefill_fn(cfg, use_kernel=True)
+    specs = [
+        jax.ShapeDtypeStruct(shape, jnp.float32)
+        for _, shape in M.param_specs(cfg)
+    ]
+    specs += [
+        jax.ShapeDtypeStruct(cfg.kv_shape(alpha_max), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),  # alpha_len
+        jax.ShapeDtypeStruct((beta,), jnp.int32),  # tokens
+        jax.ShapeDtypeStruct((), jnp.int32),  # beta_len
+    ]
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def write_params(cfg, out_dir):
+    params = M.init_params(cfg, seed=PARAM_SEED)
+    path = os.path.join(out_dir, f"params_{cfg.name}.bin")
+    with open(path, "wb") as f:
+        for p in params:
+            f.write(np.asarray(p, dtype="<f4").tobytes())
+    return os.path.basename(path)
+
+
+def build(out_dir, models=None, buckets=None):
+    os.makedirs(out_dir, exist_ok=True)
+    models = models or MODELS
+    buckets = buckets or BUCKETS
+    manifest = {"version": 1, "models": {}}
+    for name in models:
+        cfg = M.CONFIGS[name]
+        params_file = write_params(cfg, out_dir)
+        entry = {
+            "config": {
+                "vocab": cfg.vocab,
+                "d_model": cfg.d_model,
+                "n_layers": cfg.n_layers,
+                "n_q_heads": cfg.n_q_heads,
+                "n_kv_heads": cfg.n_kv_heads,
+                "d_head": cfg.d_head,
+                "d_ff": cfg.d_ff,
+            },
+            "param_seed": PARAM_SEED,
+            "params_file": params_file,
+            "param_specs": [
+                [n, list(s)] for n, s in M.param_specs(cfg)
+            ],
+            "buckets": [],
+        }
+        for alpha_max, beta in buckets:
+            hlo = lower_bucket(cfg, alpha_max, beta)
+            fname = f"prefill_{name}_a{alpha_max}_b{beta}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(hlo)
+            entry["buckets"].append(
+                {"alpha_max": alpha_max, "beta": beta, "hlo": fname}
+            )
+            print(f"  wrote {fname} ({len(hlo)/1e6:.2f} MB)")
+        manifest["models"][name] = entry
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {out_dir}/manifest.json")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=None)
+    args = ap.parse_args()
+    build(args.out_dir, models=args.models)
+
+
+if __name__ == "__main__":
+    main()

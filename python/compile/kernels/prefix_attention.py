@@ -1,0 +1,254 @@
+"""Pallas prefix-caching attention kernel (Layer 1).
+
+This is the compute hot-spot of RAGCache: the prefill attention for a
+request whose first ``alpha_len`` tokens (system prompt + retrieved
+documents) already have cached key/value tensors, extended from the
+vLLM-style prefill kernel the paper modifies (§6). Both multi-head and
+grouped-query attention are supported (Table 1 evaluates LLaMA2 = MHA and
+Mistral = GQA).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's Triton
+kernel tiles with CUDA threadblocks over (head, q-tile) and stages K/V
+through shared memory. Here the grid is ``(head, q-tile, k-tile)`` with
+the HBM→VMEM schedule expressed via BlockSpec index maps; the k-tile axis
+is the revolving innermost dimension with an online-softmax accumulator in
+VMEM scratch (flash-attention style), so VMEM residency per step is
+``O((block_q + 2*block_k) * d_head)`` independent of the prefix length.
+QKᵀ and PV run on the MXU via ``jnp.dot`` with f32 accumulation.
+
+Dynamic lengths: the kernel is compiled for a static ``(alpha_max, beta)``
+bucket; the *actual* cached length ``alpha_len <= alpha_max`` arrives as a
+runtime scalar (like vLLM's seq-len tensors) and padding slots are masked.
+``interpret=True`` always — the CPU PJRT plugin cannot execute Mosaic
+custom calls; real-TPU efficiency is estimated analytically (DESIGN.md
+§Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _attn_kernel(
+    alpha_ref,
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    alpha_max,
+    block_q,
+    block_k,
+    sm_scale,
+    n_k_tiles,
+):
+    """One (head, q-tile, k-tile) grid step.
+
+    Scratch ``acc/m/l`` implement online softmax across the revolving
+    k-tile axis; the output block is written on the final k-tile.
+    """
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    alpha_len = alpha_ref[0]
+
+    q = q_ref[0].astype(jnp.float32)  # (block_q, d)
+    k = k_ref[0].astype(jnp.float32)  # (block_k, d)
+    v = v_ref[0].astype(jnp.float32)
+
+    # Scores for this tile pair, f32 accumulation on the MXU.
+    s = jax.lax.dot_general(
+        q,
+        k,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    s = s * sm_scale  # (block_q, block_k)
+
+    # Visibility: slot j in the padded KV buffer is
+    #  - a prefix slot   (j < alpha_max):  visible iff j < alpha_len
+    #  - a new-token slot (j >= alpha_max): visible iff its new-token index
+    #    (j - alpha_max) <= the query's new-token index i  (causal).
+    i_idx = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0
+    )
+    j_idx = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1
+    )
+    visible = jnp.where(
+        j_idx < alpha_max,
+        j_idx < alpha_len,
+        (j_idx - alpha_max) <= i_idx,
+    )
+    s = jnp.where(visible, s, NEG_INF)
+
+    # Online softmax update.
+    m_prev = m_ref[...]  # (block_q,)
+    l_prev = l_ref[...]
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+    # Row guaranteed non-empty only once a visible key has been seen;
+    # exp(-inf - -inf) would be NaN, so guard fully-masked prefixes.
+    safe_m = jnp.where(m_cur == NEG_INF, 0.0, m_cur)
+    correction = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - safe_m))
+    p = jnp.where(visible, jnp.exp(s - safe_m[:, None]), 0.0)
+    l_ref[...] = l_prev * correction + p.sum(axis=-1)
+    m_ref[...] = m_cur
+    pv = jax.lax.dot_general(
+        p,
+        v,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    acc_ref[...] = acc_ref[...] * correction[:, None] + pv
+
+    @pl.when(ki == n_k_tiles - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def _pad_axis(x, axis, target):
+    pad = target - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "alpha_max",
+        "sm_scale",
+        "block_q",
+        "block_k",
+        "interpret",
+    ),
+)
+def prefix_attention(
+    q,
+    k,
+    v,
+    alpha_len,
+    *,
+    alpha_max,
+    sm_scale=None,
+    block_q=16,
+    block_k=64,
+    interpret=True,
+):
+    """Prefix-caching attention over a padded KV buffer.
+
+    Args:
+      q: ``(n_q_heads, beta, d_head)`` new-token queries.
+      k, v: ``(n_kv_heads, alpha_max + beta, d_head)`` — prefix K/V padded
+        to ``alpha_max`` slots, then the new tokens' K/V.
+      alpha_len: runtime scalar (int32), number of valid prefix slots.
+      alpha_max: static prefix capacity of this compiled bucket.
+
+    Returns:
+      ``(n_q_heads, beta, d_head)`` attention output, dtype of ``q``.
+    """
+    n_q_heads, beta, d_head = q.shape
+    n_kv_heads, total, _ = k.shape
+    assert total == alpha_max + beta, (total, alpha_max, beta)
+    assert n_q_heads % n_kv_heads == 0
+    group = n_q_heads // n_kv_heads
+    if sm_scale is None:
+        sm_scale = 1.0 / (d_head ** 0.5)
+
+    block_q = min(block_q, max(beta, 1))
+    beta_pad = -(-beta // block_q) * block_q
+    total_pad = -(-total // block_k) * block_k
+
+    # Padded-KV visibility relies on padded slots sitting at indices
+    # >= alpha_max + beta with new-token index > any real query index, so
+    # pad K/V *after* the new tokens.
+    qp = _pad_axis(q, 1, beta_pad)
+    kp = _pad_axis(k, 1, total_pad)
+    vp = _pad_axis(v, 1, total_pad)
+
+    n_q_tiles = beta_pad // block_q
+    n_k_tiles = total_pad // block_k
+    grid = (n_q_heads, n_q_tiles, n_k_tiles)
+
+    alpha_arr = jnp.asarray(alpha_len, dtype=jnp.int32).reshape((1,))
+
+    kernel = functools.partial(
+        _attn_kernel,
+        alpha_max=alpha_max,
+        block_q=block_q,
+        block_k=block_k,
+        sm_scale=sm_scale,
+        n_k_tiles=n_k_tiles,
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # The alpha_len scalar is broadcast to every grid step.
+            pl.BlockSpec((1,), lambda h, qi, ki: (0,)),
+            pl.BlockSpec((1, block_q, d_head), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec(
+                (1, block_k, d_head),
+                lambda h, qi, ki, g=group: (h // g, ki, 0),
+            ),
+            pl.BlockSpec(
+                (1, block_k, d_head),
+                lambda h, qi, ki, g=group: (h // g, ki, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_q, d_head), lambda h, qi, ki: (h, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_q_heads, beta_pad, d_head), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d_head), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(alpha_arr, qp, kp, vp)
+
+    return out[:, :beta, :]
+
+
+def vmem_bytes(block_q, block_k, d_head, dtype_bytes=4):
+    """Analytic VMEM residency per grid step (DESIGN.md §Perf): one Q tile,
+    one K tile, one V tile, the f32 accumulator and the two softmax state
+    vectors."""
+    q_tile = block_q * d_head * dtype_bytes
+    kv_tiles = 2 * block_k * d_head * dtype_bytes
+    acc = block_q * d_head * 4
+    state = 2 * block_q * 4
+    return q_tile + kv_tiles + acc + state
+
+
+def mxu_utilization_estimate(block_q, block_k, d_head):
+    """Fraction of each (128,128,128) MXU pass doing useful work for the
+    two dot_generals, assuming f32 packing. Used for the §Perf estimates,
+    not measured (interpret mode runs on CPU)."""
+
+    def eff(m, k, n):
+        pad = lambda x: -(-x // 128) * 128
+        return (m * k * n) / (pad(m) * pad(k) * pad(n))
+
+    qk = eff(block_q, d_head, block_k)
+    pv = eff(block_q, block_k, d_head)
+    return 0.5 * (qk + pv)

@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: straightforward, obviously-right
+implementations that the Pallas kernels (and the lowered HLO artifacts)
+are checked against in ``python/tests``.
+"""
+
+import jax.numpy as jnp
+
+
+def prefix_attention_ref(q, k, v, *, alpha, sm_scale=None):
+    """Reference prefix-caching attention.
+
+    ``beta`` new tokens attend to ``alpha`` cached prefix tokens plus
+    causally to the preceding new tokens. This is the operation RAGCache's
+    prefix-caching kernel implements (paper §6: the vLLM prefill kernel
+    extended for prefix caching, supporting both MHA and GQA).
+
+    Args:
+      q: ``(n_q_heads, beta, d_head)`` queries for the new tokens.
+      k: ``(n_kv_heads, alpha + beta, d_head)`` keys — cached prefix keys
+        concatenated with the new tokens' keys.
+      v: ``(n_kv_heads, alpha + beta, d_head)`` values, same layout.
+      alpha: number of cached prefix tokens (static).
+      sm_scale: softmax scale; defaults to ``1/sqrt(d_head)``.
+
+    Returns:
+      ``(n_q_heads, beta, d_head)`` attention output.
+
+    Grouped-query attention: when ``n_q_heads > n_kv_heads``, query head
+    ``h`` reads KV head ``h // (n_q_heads // n_kv_heads)``.
+    """
+    n_q_heads, beta, d_head = q.shape
+    n_kv_heads, total, _ = k.shape
+    assert total == alpha + beta, (total, alpha, beta)
+    assert n_q_heads % n_kv_heads == 0
+    group = n_q_heads // n_kv_heads
+    if sm_scale is None:
+        sm_scale = 1.0 / (d_head ** 0.5)
+
+    # Expand KV heads to query heads.
+    k_exp = jnp.repeat(k, group, axis=0)  # (Hq, alpha+beta, d)
+    v_exp = jnp.repeat(v, group, axis=0)
+
+    scores = jnp.einsum("hqd,hkd->hqk", q, k_exp) * sm_scale
+    # Position of new token i is alpha + i; key j visible iff j <= alpha + i.
+    q_pos = alpha + jnp.arange(beta)[:, None]  # (beta, 1)
+    k_pos = jnp.arange(alpha + beta)[None, :]  # (1, alpha+beta)
+    mask = k_pos <= q_pos
+    scores = jnp.where(mask[None, :, :], scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", probs, v_exp)
+
+
+def prefix_attention_padded_ref(q, k, v, alpha_len, *, alpha_max,
+                                sm_scale=None):
+    """Oracle matching the Pallas kernel's padded-bucket signature.
+
+    ``k``/``v`` hold ``alpha_max`` prefix slots (only the first
+    ``alpha_len`` valid) followed by ``beta`` new-token slots. Equivalent
+    to :func:`prefix_attention_ref` on the compacted buffers.
+    """
+    n_q_heads, beta, d_head = q.shape
+    n_kv_heads, total, _ = k.shape
+    assert total == alpha_max + beta
+    assert n_q_heads % n_kv_heads == 0
+    group = n_q_heads // n_kv_heads
+    if sm_scale is None:
+        sm_scale = 1.0 / (d_head ** 0.5)
+
+    k_exp = jnp.repeat(k, group, axis=0)
+    v_exp = jnp.repeat(v, group, axis=0)
+    scores = jnp.einsum("hqd,hkd->hqk", q, k_exp) * sm_scale
+
+    i_idx = jnp.arange(beta)[:, None]
+    j_idx = jnp.arange(total)[None, :]
+    visible = jnp.where(
+        j_idx < alpha_max,
+        j_idx < alpha_len,
+        (j_idx - alpha_max) <= i_idx,
+    )
+    scores = jnp.where(visible[None, :, :], scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", probs, v_exp)

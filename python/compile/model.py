@@ -1,0 +1,255 @@
+"""Layer 2: JAX transformer with prefix-KV reuse (build-time only).
+
+A decoder-only transformer whose prefill consumes a *padded* prefix KV
+buffer plus a runtime valid-length scalar — exactly the contract the Rust
+coordinator's knowledge tree provides (cached document KV tensors,
+order-sensitive, reused across requests). Both attention variants from the
+paper's Table 1 are provided: multi-head (LLaMA2-style) and grouped-query
+(Mistral-style). The attention hot-spot calls the Layer-1 Pallas kernel.
+
+KV layout is token-major: ``(tokens, layers, 2, n_kv_heads, d_head)``.
+Token-major means concatenating prefixes is a flat byte append, which is
+what makes vLLM-style block paging on the Rust side trivial.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.prefix_attention import prefix_attention
+from .kernels.ref import prefix_attention_padded_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters (a scaled-down paper Table 1 row)."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_q_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+
+    @property
+    def kv_floats_per_token(self):
+        return self.n_layers * 2 * self.n_kv_heads * self.d_head
+
+    def kv_shape(self, tokens):
+        return (tokens, self.n_layers, 2, self.n_kv_heads, self.d_head)
+
+
+#: Multi-head attention variant (LLaMA2-style: n_q == n_kv heads).
+TINY_MHA = ModelConfig(
+    name="tiny-mha", vocab=512, d_model=128, n_layers=4,
+    n_q_heads=8, n_kv_heads=8, d_head=16, d_ff=512,
+)
+
+#: Grouped-query attention variant (Mistral-style: 4 queries per KV head).
+TINY_GQA = ModelConfig(
+    name="tiny-gqa", vocab=512, d_model=128, n_layers=4,
+    n_q_heads=8, n_kv_heads=2, d_head=16, d_ff=512,
+)
+
+CONFIGS = {c.name: c for c in (TINY_MHA, TINY_GQA)}
+
+
+def param_specs(cfg):
+    """Ordered (name, shape) list — the flat parameter ABI shared with the
+    Rust runtime (artifacts/params manifest)."""
+    specs = [("tok_emb", (cfg.vocab, cfg.d_model))]
+    for l in range(cfg.n_layers):
+        specs += [
+            (f"l{l}.attn_norm", (cfg.d_model,)),
+            (f"l{l}.wq", (cfg.d_model, cfg.n_q_heads * cfg.d_head)),
+            (f"l{l}.wk", (cfg.d_model, cfg.n_kv_heads * cfg.d_head)),
+            (f"l{l}.wv", (cfg.d_model, cfg.n_kv_heads * cfg.d_head)),
+            (f"l{l}.wo", (cfg.n_q_heads * cfg.d_head, cfg.d_model)),
+            (f"l{l}.mlp_norm", (cfg.d_model,)),
+            (f"l{l}.w1", (cfg.d_model, cfg.d_ff)),
+            (f"l{l}.w2", (cfg.d_ff, cfg.d_model)),
+        ]
+    specs += [
+        ("final_norm", (cfg.d_model,)),
+        ("lm_head", (cfg.d_model, cfg.vocab)),
+    ]
+    return specs
+
+
+def init_params(cfg, seed=0):
+    """Deterministic parameter init; the same flat f32 stream the Rust
+    runtime loads from ``artifacts/params_<model>.bin``."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else 1
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32)
+                * (1.0 / max(fan_in, 1) ** 0.5)
+            )
+    return params
+
+
+def _rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def _rope(x, positions):
+    """Rotary embeddings; ``x`` is (heads, tokens, d_head), ``positions``
+    the absolute token positions (may be traced)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)  # (tokens, half)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    )
+
+
+def prefill_with_prefix(
+    cfg, params, prefix_kv, alpha_len, tokens, beta_len, *, use_kernel=True
+):
+    """Prefill ``tokens`` on top of a cached, padded prefix.
+
+    Args:
+      cfg: [`ModelConfig`].
+      params: flat parameter list per [`param_specs`].
+      prefix_kv: ``(alpha_max, L, 2, Hkv, dh)`` f32 — cached KV, first
+        ``alpha_len`` rows valid (RoPE already applied at write time, which
+        is what makes document KV order-sensitive, paper §5.1).
+      alpha_len: runtime scalar, valid prefix length.
+      tokens: ``(beta,)`` int32 token ids, first ``beta_len`` valid.
+      beta_len: runtime scalar, valid new-token count.
+      use_kernel: route attention through the Pallas kernel (True) or the
+        jnp oracle (False) — both lower to the same artifact contract.
+
+    Returns:
+      ``(last_logits, new_kv)``: logits of the final *valid* token
+      ``(vocab,)`` and ``(beta, L, 2, Hkv, dh)`` new KV rows (rows past
+      ``beta_len`` are padding garbage the caller discards).
+    """
+    alpha_max = prefix_kv.shape[0]
+    beta = tokens.shape[0]
+    it = iter(params)
+    p = {name: next(it) for name, _ in param_specs(cfg)}
+
+    x = p["tok_emb"][tokens]  # (beta, D)
+    positions = alpha_len + jnp.arange(beta, dtype=jnp.int32)
+    new_kv_layers = []
+
+    for l in range(cfg.n_layers):
+        h = _rms_norm(x, p[f"l{l}.attn_norm"])
+        q = (h @ p[f"l{l}.wq"]).reshape(beta, cfg.n_q_heads, cfg.d_head)
+        k = (h @ p[f"l{l}.wk"]).reshape(beta, cfg.n_kv_heads, cfg.d_head)
+        v = (h @ p[f"l{l}.wv"]).reshape(beta, cfg.n_kv_heads, cfg.d_head)
+
+        q = _rope(q.transpose(1, 0, 2), positions)  # (Hq, beta, dh)
+        k = _rope(k.transpose(1, 0, 2), positions)  # (Hkv, beta, dh)
+        v = v.transpose(1, 0, 2)
+
+        # Cached prefix for this layer: (alpha_max, 2, Hkv, dh).
+        k_prefix = prefix_kv[:, l, 0].transpose(1, 0, 2)  # (Hkv, amax, dh)
+        v_prefix = prefix_kv[:, l, 1].transpose(1, 0, 2)
+        k_full = jnp.concatenate([k_prefix, k], axis=1)
+        v_full = jnp.concatenate([v_prefix, v], axis=1)
+
+        if use_kernel:
+            attn = prefix_attention(
+                q, k_full, v_full, alpha_len, alpha_max=alpha_max
+            )
+        else:
+            attn = prefix_attention_padded_ref(
+                q, k_full, v_full, alpha_len, alpha_max=alpha_max
+            )
+
+        attn = attn.transpose(1, 0, 2).reshape(beta, -1)
+        x = x + attn @ p[f"l{l}.wo"]
+
+        hm = _rms_norm(x, p[f"l{l}.mlp_norm"])
+        x = x + jax.nn.silu(hm @ p[f"l{l}.w1"]) @ p[f"l{l}.w2"]
+
+        # Token-major KV rows for the cache: (beta, 2, Hkv, dh).
+        new_kv_layers.append(
+            jnp.stack(
+                [k.transpose(1, 0, 2), v.transpose(1, 0, 2)], axis=1
+            )
+        )
+
+    x = _rms_norm(x, p["final_norm"])
+    logits = x @ p["lm_head"]  # (beta, V)
+    last = jax.lax.dynamic_index_in_dim(
+        logits, jnp.maximum(beta_len - 1, 0), axis=0, keepdims=False
+    )
+    new_kv = jnp.stack(new_kv_layers, axis=1)  # (beta, L, 2, Hkv, dh)
+    return last, new_kv
+
+
+def full_prefill(cfg, params, tokens, *, use_kernel=True):
+    """Prefill from scratch (no cached prefix): the vLLM-baseline path."""
+    beta = tokens.shape[0]
+    empty = jnp.zeros(cfg.kv_shape(0), jnp.float32)
+    # alpha_max = 0 bucket: concat with 0 prefix slots.
+    return prefill_with_prefix(
+        cfg, params, empty, 0, tokens, beta, use_kernel=use_kernel
+    )
+
+
+def make_prefill_fn(cfg, *, use_kernel=True):
+    """The AOT entry point for one ``(alpha_max, beta)`` bucket: a function
+    of ``(params..., prefix_kv, alpha_len, tokens, beta_len)`` returning a
+    tuple, as required by the HLO-text interchange."""
+
+    def fn(*args):
+        n_params = len(param_specs(cfg))
+        params = list(args[:n_params])
+        prefix_kv, alpha_len, tokens, beta_len = args[n_params:]
+        last, new_kv = prefill_with_prefix(
+            cfg, params, prefix_kv, alpha_len, tokens, beta_len,
+            use_kernel=use_kernel,
+        )
+        return (last, new_kv)
+
+    return fn
+
+
+def greedy_generate(cfg, params, prompt_tokens, steps, *, alpha_max=128,
+                    use_kernel=False):
+    """Reference greedy decoding used by tests: prefill the prompt then
+    decode ``steps`` tokens one at a time through the same prefix path."""
+    kv = jnp.zeros(cfg.kv_shape(alpha_max), jnp.float32)
+    alpha = 0
+    out_tokens = []
+    tokens = jnp.asarray(prompt_tokens, jnp.int32)
+    last, new_kv = prefill_with_prefix(
+        cfg, params, kv, alpha, tokens, tokens.shape[0],
+        use_kernel=use_kernel,
+    )
+    kv = jax.lax.dynamic_update_slice_in_dim(
+        kv, new_kv[: tokens.shape[0]], alpha, axis=0
+    )
+    alpha += int(tokens.shape[0])
+    next_tok = int(jnp.argmax(last))
+    out_tokens.append(next_tok)
+    for _ in range(steps - 1):
+        tok = jnp.asarray([next_tok], jnp.int32)
+        last, new_kv = prefill_with_prefix(
+            cfg, params, kv, alpha, tok, 1, use_kernel=use_kernel
+        )
+        kv = jax.lax.dynamic_update_slice_in_dim(
+            kv, new_kv[:1], alpha, axis=0
+        )
+        alpha += 1
+        next_tok = int(jnp.argmax(last))
+        out_tokens.append(next_tok)
+    return out_tokens

@@ -1,0 +1,7 @@
+"""Ensure `compile` is importable whether pytest runs from repo root or
+from python/."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

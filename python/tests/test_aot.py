@@ -1,0 +1,104 @@
+"""AOT artifact contract tests: manifest, param binaries, HLO text."""
+
+import json
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+class TestManifest:
+    def test_models_present(self):
+        m = _manifest()
+        for name in aot.MODELS:
+            assert name in m["models"]
+
+    def test_config_matches_code(self):
+        m = _manifest()
+        for name, entry in m["models"].items():
+            cfg = M.CONFIGS[name]
+            c = entry["config"]
+            assert c["vocab"] == cfg.vocab
+            assert c["n_layers"] == cfg.n_layers
+            assert c["n_kv_heads"] == cfg.n_kv_heads
+            assert c["d_head"] == cfg.d_head
+
+    def test_param_specs_match_code(self):
+        m = _manifest()
+        for name, entry in m["models"].items():
+            cfg = M.CONFIGS[name]
+            want = [[n, list(s)] for n, s in M.param_specs(cfg)]
+            assert entry["param_specs"] == want
+
+    def test_buckets_exist_on_disk(self):
+        m = _manifest()
+        for entry in m["models"].values():
+            assert len(entry["buckets"]) >= 2
+            for b in entry["buckets"]:
+                assert os.path.exists(os.path.join(ART, b["hlo"]))
+                assert b["alpha_max"] > 0
+                assert b["beta"] > 0
+
+
+class TestParamBinary:
+    def test_size_matches_specs(self):
+        m = _manifest()
+        for name, entry in m["models"].items():
+            cfg = M.CONFIGS[name]
+            want_floats = sum(
+                int(np.prod(s)) for _, s in M.param_specs(cfg)
+            )
+            path = os.path.join(ART, entry["params_file"])
+            assert os.path.getsize(path) == want_floats * 4
+
+    def test_bytes_match_init(self):
+        m = _manifest()
+        name = aot.MODELS[0]
+        entry = m["models"][name]
+        cfg = M.CONFIGS[name]
+        params = M.init_params(cfg, seed=entry["param_seed"])
+        path = os.path.join(ART, entry["params_file"])
+        with open(path, "rb") as f:
+            first = struct.unpack("<16f", f.read(64))
+        np.testing.assert_allclose(
+            first, np.asarray(params[0]).ravel()[:16], rtol=1e-6
+        )
+
+
+class TestHloText:
+    def test_hlo_parses_as_module(self):
+        m = _manifest()
+        entry = next(iter(m["models"].values()))
+        path = os.path.join(ART, entry["buckets"][0]["hlo"])
+        with open(path) as f:
+            text = f.read()
+        assert text.startswith("HloModule")
+        # Entry computation must exist and return a tuple (return_tuple).
+        assert "ENTRY" in text
+        assert "tuple(" in text.lower() or "tuple" in text
+
+    def test_hlo_has_expected_parameter_count(self):
+        m = _manifest()
+        for name, entry in m["models"].items():
+            n_inputs = len(entry["param_specs"]) + 4
+            path = os.path.join(ART, entry["buckets"][0]["hlo"])
+            with open(path) as f:
+                text = f.read()
+            # Count parameter declarations in the ENTRY computation.
+            entry_pos = text.index("ENTRY")
+            entry_text = text[entry_pos:]
+            count = entry_text.count("parameter(")
+            assert count == n_inputs, (name, count, n_inputs)

@@ -1,0 +1,149 @@
+"""L1 correctness: Pallas prefix-attention kernel vs the pure-jnp oracle.
+
+This is the core numeric signal for the whole stack: the AOT artifacts the
+Rust runtime executes contain exactly this kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.prefix_attention import (
+    mxu_utilization_estimate,
+    prefix_attention,
+    vmem_bytes,
+)
+from compile.kernels.ref import (
+    prefix_attention_padded_ref,
+    prefix_attention_ref,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(rng, shape, dtype=jnp.float32):
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+def _run_case(Hq, Hkv, beta, alpha_len, alpha_max, d, dtype, seed,
+              block_q=16, block_k=64):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (Hq, beta, d), dtype)
+    k = _rand(rng, (Hkv, alpha_max + beta, d), dtype)
+    v = _rand(rng, (Hkv, alpha_max + beta, d), dtype)
+    out = prefix_attention(
+        q, k, v, alpha_len, alpha_max=alpha_max,
+        block_q=block_q, block_k=block_k,
+    )
+    ref = prefix_attention_padded_ref(
+        q.astype(jnp.float32),
+        k.astype(jnp.float32),
+        v.astype(jnp.float32),
+        alpha_len,
+        alpha_max=alpha_max,
+    )
+    return np.asarray(out, np.float32), np.asarray(ref, np.float32)
+
+
+class TestKernelBasic:
+    def test_no_prefix(self):
+        out, ref = _run_case(8, 8, 16, 0, 64, 16, jnp.float32, 0)
+        np.testing.assert_allclose(out, ref, atol=1e-5)
+
+    def test_full_prefix(self):
+        out, ref = _run_case(8, 8, 16, 64, 64, 16, jnp.float32, 1)
+        np.testing.assert_allclose(out, ref, atol=1e-5)
+
+    def test_partial_prefix(self):
+        out, ref = _run_case(8, 8, 32, 37, 64, 16, jnp.float32, 2)
+        np.testing.assert_allclose(out, ref, atol=1e-5)
+
+    def test_gqa_grouping(self):
+        out, ref = _run_case(8, 2, 16, 40, 64, 16, jnp.float32, 3)
+        np.testing.assert_allclose(out, ref, atol=1e-5)
+
+    def test_single_query_decode_shape(self):
+        out, ref = _run_case(8, 2, 1, 100, 128, 16, jnp.float32, 4)
+        np.testing.assert_allclose(out, ref, atol=1e-5)
+
+    def test_bf16_inputs(self):
+        out, ref = _run_case(4, 4, 16, 32, 64, 32, jnp.bfloat16, 5)
+        np.testing.assert_allclose(out, ref, atol=3e-2, rtol=3e-2)
+
+    def test_alpha_zero_bucket_zero(self):
+        # alpha_max = 0: pure causal self-attention.
+        rng = np.random.default_rng(6)
+        q = _rand(rng, (4, 24, 16))
+        k = _rand(rng, (4, 24, 16))
+        v = _rand(rng, (4, 24, 16))
+        out = prefix_attention(q, k, v, 0, alpha_max=0)
+        ref = prefix_attention_ref(q, k, v, alpha=0)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), atol=1e-5
+        )
+
+    def test_causality_no_future_leak(self):
+        """Changing a later token's K/V must not change earlier outputs."""
+        rng = np.random.default_rng(7)
+        q = _rand(rng, (2, 8, 16))
+        k = _rand(rng, (2, 40, 16))
+        v = _rand(rng, (2, 40, 16))
+        out1 = np.asarray(prefix_attention(q, k, v, 32, alpha_max=32))
+        # Perturb the last new token's K/V (slot alpha_max + 7).
+        k2 = k.at[:, 39].set(99.0)
+        v2 = v.at[:, 39].set(-99.0)
+        out2 = np.asarray(prefix_attention(q, k2, v2, 32, alpha_max=32))
+        np.testing.assert_allclose(out1[:, :7], out2[:, :7], atol=1e-6)
+        assert np.abs(out1[:, 7] - out2[:, 7]).max() > 1e-3
+
+    def test_padding_slots_ignored(self):
+        """Garbage in prefix slots >= alpha_len must not affect output."""
+        rng = np.random.default_rng(8)
+        q = _rand(rng, (2, 8, 16))
+        k = _rand(rng, (2, 72, 16))
+        v = _rand(rng, (2, 72, 16))
+        out1 = np.asarray(prefix_attention(q, k, v, 20, alpha_max=64))
+        k2 = k.at[:, 20:64].set(1e6)
+        v2 = v.at[:, 20:64].set(-1e6)
+        out2 = np.asarray(prefix_attention(q, k2, v2, 20, alpha_max=64))
+        np.testing.assert_allclose(out1, out2, atol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    Hq_groups=st.sampled_from([(4, 4), (8, 2), (8, 8), (8, 4), (2, 1)]),
+    beta=st.integers(min_value=1, max_value=48),
+    alpha_frac=st.floats(min_value=0.0, max_value=1.0),
+    alpha_max=st.sampled_from([0, 32, 64, 128]),
+    d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(min_value=0, max_value=2**31),
+    block_q=st.sampled_from([8, 16, 32]),
+    block_k=st.sampled_from([16, 64, 128]),
+)
+def test_kernel_matches_oracle_hypothesis(
+    Hq_groups, beta, alpha_frac, alpha_max, d, seed, block_q, block_k
+):
+    Hq, Hkv = Hq_groups
+    alpha_len = int(round(alpha_frac * alpha_max))
+    out, ref = _run_case(
+        Hq, Hkv, beta, alpha_len, alpha_max, d, jnp.float32, seed,
+        block_q=block_q, block_k=block_k,
+    )
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+class TestPerfEstimates:
+    def test_vmem_fits_16mib(self):
+        # Production-shaped tiles must fit comfortably in ~16 MiB VMEM.
+        assert vmem_bytes(128, 128, 128) < 16 * 1024 * 1024
+
+    def test_vmem_independent_of_alpha(self):
+        assert vmem_bytes(64, 128, 64) == vmem_bytes(64, 128, 64)
+
+    def test_mxu_utilization_full_tiles(self):
+        assert mxu_utilization_estimate(128, 128, 128) == pytest.approx(1.0)
+
+    def test_mxu_utilization_small_tiles_penalised(self):
+        assert mxu_utilization_estimate(16, 64, 16) < 0.1

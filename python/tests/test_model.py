@@ -1,0 +1,159 @@
+"""L2 correctness: transformer prefill with prefix-KV reuse.
+
+The decisive property for RAGCache: prefilling on top of cached prefix KV
+must be numerically identical to prefilling the whole sequence — and the
+cached KV must be order-sensitive (paper §5.1).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _tokens(rng, n, vocab):
+    return jnp.asarray(rng.integers(0, vocab, n), jnp.int32)
+
+
+@pytest.fixture(scope="module", params=["tiny-mha", "tiny-gqa"])
+def model(request):
+    cfg = M.CONFIGS[request.param]
+    return cfg, M.init_params(cfg, seed=0)
+
+
+class TestShapes:
+    def test_param_specs_cover_params(self, model):
+        cfg, params = model
+        specs = M.param_specs(cfg)
+        assert len(specs) == len(params)
+        for (name, shape), p in zip(specs, params):
+            assert tuple(shape) == p.shape, name
+
+    def test_prefill_output_shapes(self, model):
+        cfg, params = model
+        rng = np.random.default_rng(0)
+        toks = _tokens(rng, 16, cfg.vocab)
+        kv = jnp.zeros(cfg.kv_shape(64), jnp.float32)
+        last, new_kv = M.prefill_with_prefix(cfg, params, kv, 0, toks, 16)
+        assert last.shape == (cfg.vocab,)
+        assert new_kv.shape == cfg.kv_shape(16)
+
+    def test_kv_floats_per_token(self, model):
+        cfg, _ = model
+        expected = cfg.n_layers * 2 * cfg.n_kv_heads * cfg.d_head
+        assert cfg.kv_floats_per_token == expected
+
+
+class TestKvReuse:
+    def test_split_prefill_equals_full(self, model):
+        """prefill(full) == prefill(prefix-cached + rest)."""
+        cfg, params = model
+        rng = np.random.default_rng(1)
+        toks = _tokens(rng, 48, cfg.vocab)
+        last_full, kv_full = M.full_prefill(cfg, params, toks)
+        buf = jnp.zeros(cfg.kv_shape(64), jnp.float32)
+        for split in (8, 32, 47):
+            last_a, kv_a = M.full_prefill(cfg, params, toks[:split])
+            b = buf.at[:split].set(kv_a[:split])
+            last_b, kv_b = M.prefill_with_prefix(
+                cfg, params, b, split, toks[split:], 48 - split
+            )
+            np.testing.assert_allclose(
+                np.asarray(last_full), np.asarray(last_b), atol=1e-4
+            )
+            np.testing.assert_allclose(
+                np.asarray(kv_full[split:]),
+                np.asarray(kv_b[: 48 - split]),
+                atol=1e-4,
+            )
+
+    def test_document_order_sensitivity(self, model):
+        """KV([D1, D2]) != KV([D2, D1]) — the paper's core caching
+        constraint (§5.1): the knowledge tree must be order-aware."""
+        cfg, params = model
+        rng = np.random.default_rng(2)
+        d1 = _tokens(rng, 16, cfg.vocab)
+        d2 = _tokens(rng, 16, cfg.vocab)
+        _, kv_12 = M.full_prefill(cfg, params, jnp.concatenate([d1, d2]))
+        _, kv_21 = M.full_prefill(cfg, params, jnp.concatenate([d2, d1]))
+        # The KV rows of D2 differ between [D1,D2] and [D2,D1].
+        rows_12 = np.asarray(kv_12[16:])  # D2 rows in [D1,D2]
+        rows_21 = np.asarray(kv_21[:16])  # D2 rows in [D2,D1]
+        assert np.abs(rows_12 - rows_21).max() > 1e-3
+
+    def test_shared_prefix_kv_identical(self, model):
+        """Same prefix => byte-identical prefix KV regardless of suffix:
+        what makes cross-request sharing sound."""
+        cfg, params = model
+        rng = np.random.default_rng(3)
+        prefix = _tokens(rng, 24, cfg.vocab)
+        s1 = _tokens(rng, 8, cfg.vocab)
+        s2 = _tokens(rng, 8, cfg.vocab)
+        _, kv1 = M.full_prefill(cfg, params, jnp.concatenate([prefix, s1]))
+        _, kv2 = M.full_prefill(cfg, params, jnp.concatenate([prefix, s2]))
+        np.testing.assert_array_equal(
+            np.asarray(kv1[:24]), np.asarray(kv2[:24])
+        )
+
+    def test_beta_padding_discarded(self, model):
+        """Valid-token results must not depend on padding tokens."""
+        cfg, params = model
+        rng = np.random.default_rng(4)
+        toks = _tokens(rng, 16, cfg.vocab)
+        buf = jnp.zeros(cfg.kv_shape(32), jnp.float32)
+        padded = jnp.concatenate([toks[:12], _tokens(rng, 4, cfg.vocab)])
+        last_a, kv_a = M.prefill_with_prefix(cfg, params, buf, 0, padded, 12)
+        padded2 = jnp.concatenate([toks[:12], _tokens(rng, 4, cfg.vocab)])
+        last_b, kv_b = M.prefill_with_prefix(
+            cfg, params, buf, 0, padded2, 12
+        )
+        np.testing.assert_allclose(
+            np.asarray(last_a), np.asarray(last_b), atol=1e-6
+        )
+        np.testing.assert_allclose(
+            np.asarray(kv_a[:12]), np.asarray(kv_b[:12]), atol=1e-6
+        )
+
+
+class TestGeneration:
+    def test_greedy_deterministic(self, model):
+        cfg, params = model
+        a = M.greedy_generate(cfg, params, [1, 2, 3, 4], 6)
+        b = M.greedy_generate(cfg, params, [1, 2, 3, 4], 6)
+        assert a == b
+        assert len(a) == 6
+        assert all(0 <= t < cfg.vocab for t in a)
+
+    def test_greedy_depends_on_prompt(self, model):
+        cfg, params = model
+        a = M.greedy_generate(cfg, params, [1, 2, 3, 4], 4)
+        b = M.greedy_generate(cfg, params, [5, 6, 7, 8], 4)
+        assert a != b
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    split=st.integers(min_value=1, max_value=31),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_kv_reuse_invariance_hypothesis(split, seed):
+    cfg = M.TINY_GQA
+    params = M.init_params(cfg, seed=0)
+    rng = np.random.default_rng(seed)
+    toks = _tokens(rng, 32, cfg.vocab)
+    last_full, _ = M.full_prefill(cfg, params, toks)
+    last_a, kv_a = M.full_prefill(cfg, params, toks[:split])
+    buf = jnp.zeros(cfg.kv_shape(64), jnp.float32).at[:split].set(
+        kv_a[:split]
+    )
+    last_b, _ = M.prefill_with_prefix(
+        cfg, params, buf, split, toks[split:], 32 - split
+    )
+    np.testing.assert_allclose(
+        np.asarray(last_full), np.asarray(last_b), atol=2e-4, rtol=2e-4
+    )

@@ -1,0 +1,80 @@
+//! Fig. 6 — the retrieval-pattern skew is robust across (a) embedding
+//! models and (b) ANN index types: real top-1 searches through the Rust
+//! vector indexes, counting which documents the searches actually return.
+
+use ragcache::bench::Report;
+use ragcache::embed::EmbeddingModel;
+use ragcache::util::json::Json;
+use ragcache::util::stats::{access_cdf, cdf_at};
+use ragcache::util::Rng;
+use ragcache::vectordb::{FlatIndex, HnswIndex, IvfIndex, VectorIndex};
+use ragcache::workload::datasets::MMLU;
+
+const NUM_DOCS: usize = 8_000;
+const QUERIES: usize = 20_000;
+const DIM: usize = 24;
+
+fn measure(index: &dyn VectorIndex, em: &EmbeddingModel, seed: u64) -> Vec<f64> {
+    let sampler = MMLU.popularity(NUM_DOCS);
+    let mut rng = Rng::new(seed);
+    let mut counts = vec![0u64; NUM_DOCS];
+    for _ in 0..QUERIES {
+        let target = sampler.sample(&mut rng);
+        let q = em.query(target, 0.05, &mut rng);
+        if let Some(&(_, hit)) = index.search(&q, 1).first() {
+            counts[hit as usize] += 1;
+        }
+    }
+    let cdf = access_cdf(&counts);
+    vec![
+        cdf_at(&cdf, 0.01),
+        cdf_at(&cdf, 0.03),
+        cdf_at(&cdf, 0.10),
+    ]
+}
+
+fn main() {
+    let mut r = Report::new(
+        "fig06_retrieval_settings",
+        "access CDF under different embedding models and ANN indexes \
+         (MMLU profile, real top-1 searches)",
+        &["setting", "top_1pct", "top_3pct", "top_10pct"],
+    );
+
+    // (a) Embedding-model sweep: three embedding geometries, Flat index.
+    for (name, seed) in [("embed-A", 7u64), ("embed-B", 21), ("embed-C", 63)]
+    {
+        let em = EmbeddingModel::new(DIM, seed);
+        let vecs: Vec<Vec<f32>> =
+            (0..NUM_DOCS as u32).map(|d| em.document(d)).collect();
+        let flat = FlatIndex::build(DIM, &vecs);
+        let c = measure(&flat, &em, 1);
+        r.row(vec![
+            Json::str(format!("{name}/flat")),
+            Json::num(c[0]),
+            Json::num(c[1]),
+            Json::num(c[2]),
+        ]);
+    }
+
+    // (b) ANN-index sweep: same embedding, three index types.
+    let em = EmbeddingModel::new(DIM, 7);
+    let vecs: Vec<Vec<f32>> =
+        (0..NUM_DOCS as u32).map(|d| em.document(d)).collect();
+    let indexes: Vec<(&str, Box<dyn VectorIndex>)> = vec![
+        ("flatl2", Box::new(FlatIndex::build(DIM, &vecs))),
+        ("ivf", Box::new(IvfIndex::build(DIM, &vecs, 64, 8, 3))),
+        ("hnsw", Box::new(HnswIndex::build(DIM, &vecs, 12, 48, 5))),
+    ];
+    for (name, idx) in &indexes {
+        let c = measure(idx.as_ref(), &em, 2);
+        r.row(vec![
+            Json::str(format!("embed-A/{name}")),
+            Json::num(c[0]),
+            Json::num(c[1]),
+            Json::num(c[2]),
+        ]);
+    }
+    r.note("paper: the skew is a property of the question distribution — all settings show it");
+    r.finish();
+}

@@ -1,0 +1,62 @@
+//! Fig. 14 — overall performance on Natural Questions: mean TTFT vs
+//! request rate (multi-token outputs, weaker skew than MMLU).
+
+use ragcache::baselines;
+use ragcache::bench::{run_sim, Report};
+use ragcache::config::SystemConfig;
+use ragcache::controller::RetrievalTiming;
+use ragcache::metrics::slo_throughput;
+use ragcache::util::json::Json;
+use ragcache::workload::datasets::NATURAL_QUESTIONS;
+
+const NUM_DOCS: usize = 60_000;
+const REQUESTS: usize = 400;
+
+fn main() {
+    let rates = [0.2, 0.4, 0.6, 0.8, 1.0, 1.2];
+    let mut r = Report::new(
+        "fig14_overall_nq",
+        "Natural Questions: mean TTFT (s) vs request rate",
+        &["model", "system", "rate", "ttft_s", "hit_rate"],
+    );
+    let mut tput = Report::new(
+        "fig14_throughput_nq",
+        "Natural Questions: 5x-SLO throughput (req/s)",
+        &["model", "system", "throughput"],
+    );
+    for model in ["mistral-7b", "llama2-7b"] {
+        let mut base = SystemConfig::default();
+        base.engine.model = model.to_string();
+        for (name, cfg) in baselines::all(&base) {
+            let mut points = Vec::new();
+            for &rate in &rates {
+                let out = run_sim(
+                    &cfg,
+                    &NATURAL_QUESTIONS,
+                    NUM_DOCS,
+                    rate,
+                    REQUESTS,
+                    RetrievalTiming::default(),
+                    43,
+                );
+                let ttft = out.recorder.ttft().mean();
+                points.push((rate, ttft));
+                r.row(vec![
+                    Json::str(model),
+                    Json::str(name),
+                    Json::num(rate),
+                    Json::num(ttft),
+                    Json::num(out.recorder.hit_rate()),
+                ]);
+            }
+            tput.row(vec![
+                Json::str(model),
+                Json::str(name),
+                Json::num(slo_throughput(&points, 5.0)),
+            ]);
+        }
+    }
+    r.note("paper: NQ benefits less than MMLU (weaker skew); SGLang ~ vLLM on NQ");
+    r.finish();
+    tput.finish();
+}

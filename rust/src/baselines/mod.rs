@@ -1,0 +1,80 @@
+//! Baseline system configurations (§7 Baselines).
+//!
+//! The baselines share the engine, workload and retrieval stack with
+//! RAGCache — only the caching/scheduling feature matrix differs, which
+//! is exactly how the paper configures them ("the baselines are
+//! configured with the same model parallelism, maximum batch size, and
+//! vector database settings").
+
+use crate::config::{SystemConfig, SystemKind, SystemKindField};
+
+/// vLLM + Faiss: paged KV within a request, no cross-request document
+/// cache, FIFO scheduling, no speculative pipelining.
+pub fn vllm(base: &SystemConfig) -> SystemConfig {
+    let mut cfg = base.clone();
+    cfg.kind = SystemKindField(SystemKind::VllmLike);
+    cfg.sched.reorder = false;
+    cfg.spec.enabled = false;
+    cfg
+}
+
+/// SGLang: cross-request KV reuse in GPU memory only, LRU replacement,
+/// FIFO scheduling, no speculative pipelining.
+pub fn sglang(base: &SystemConfig) -> SystemConfig {
+    let mut cfg = base.clone();
+    cfg.kind = SystemKindField(SystemKind::SglangLike);
+    cfg.cache.host_bytes = 0;
+    cfg.cache.policy = crate::config::PolicyKind::Lru;
+    cfg.sched.reorder = false;
+    cfg.spec.enabled = false;
+    cfg
+}
+
+/// RAGCache with everything enabled (identity helper for sweeps).
+pub fn ragcache(base: &SystemConfig) -> SystemConfig {
+    let mut cfg = base.clone();
+    cfg.kind = SystemKindField(SystemKind::RagCache);
+    cfg
+}
+
+/// All three systems for comparison sweeps, with display names.
+pub fn all(base: &SystemConfig) -> Vec<(&'static str, SystemConfig)> {
+    vec![
+        ("ragcache", ragcache(base)),
+        ("sglang", sglang(base)),
+        ("vllm", vllm(base)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feature_matrix() {
+        let base = SystemConfig::default();
+        let v = vllm(&base);
+        assert_eq!(*v.kind, SystemKind::VllmLike);
+        assert!(!v.sched.reorder);
+        assert!(!v.spec.enabled);
+        let s = sglang(&base);
+        assert_eq!(s.cache.host_bytes, 0);
+        assert_eq!(s.cache.policy, crate::config::PolicyKind::Lru);
+        let r = ragcache(&base);
+        assert!(r.sched.reorder);
+        assert!(r.spec.enabled);
+        assert_eq!(all(&base).len(), 3);
+    }
+
+    #[test]
+    fn shared_settings_not_perturbed() {
+        // "same model parallelism, maximum batch size, vector database".
+        let base = SystemConfig::default();
+        for (_, cfg) in all(&base) {
+            assert_eq!(cfg.engine.max_batch, base.engine.max_batch);
+            assert_eq!(cfg.engine.model, base.engine.model);
+            assert_eq!(cfg.retrieval.top_k, base.retrieval.top_k);
+            assert_eq!(cfg.retrieval.nlist, base.retrieval.nlist);
+        }
+    }
+}

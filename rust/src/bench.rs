@@ -1,0 +1,232 @@
+//! Benchmark harness (criterion replacement).
+//!
+//! Each `rust/benches/*.rs` binary (`harness = false`) reproduces one
+//! paper figure/table: it builds a workload, runs the system(s), prints
+//! the same rows/series the paper reports, and appends machine-readable
+//! JSON to `bench_out/<name>.json` so EXPERIMENTS.md can be regenerated.
+
+use crate::config::SystemConfig;
+use crate::controller::{RetrievalTiming, SimOutcome, SimServer};
+use crate::util::json::Json;
+use crate::util::Summary;
+use crate::workload::{datasets::DatasetProfile, Corpus, Trace};
+use std::io::Write;
+use std::time::Instant;
+
+/// Run one full-system simulation — the shared driver for the figure
+/// benches. Corpus and trace are derived deterministically from `seed`.
+pub fn run_sim(
+    cfg: &SystemConfig,
+    profile: &DatasetProfile,
+    num_docs: usize,
+    rate: f64,
+    num_requests: usize,
+    timing: RetrievalTiming,
+    seed: u64,
+) -> SimOutcome {
+    let corpus = Corpus::wikipedia_like(num_docs, seed);
+    let trace = Trace::generate(
+        profile,
+        &corpus,
+        rate,
+        num_requests,
+        cfg.retrieval.top_k,
+        seed.wrapping_add(1),
+    );
+    SimServer::build(cfg, trace, num_docs, timing, seed.wrapping_add(2))
+        .expect("sim server builds")
+        .run()
+}
+
+/// Measure wall-clock time of `f` over `iters` iterations after `warmup`
+/// warmup iterations; returns per-iteration seconds.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        s.add(t0.elapsed().as_secs_f64());
+    }
+    s
+}
+
+/// Adaptive microbenchmark: run `f` repeatedly for at least `min_time`
+/// seconds (and at least 10 iterations), reporting per-iteration seconds.
+pub fn time_for<F: FnMut()>(min_time: f64, mut f: F) -> Summary {
+    // Warmup run also estimates a batch size.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let batch = ((0.01 / once).ceil() as usize).clamp(1, 1 << 20);
+    let mut s = Summary::new();
+    let start = Instant::now();
+    while start.elapsed().as_secs_f64() < min_time || s.len() < 10 {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        s.add(t.elapsed().as_secs_f64() / batch as f64);
+        if s.len() > 10_000 {
+            break;
+        }
+    }
+    s
+}
+
+/// A figure/table reproduction report: named columns, rows of values,
+/// pretty printing and JSON output.
+pub struct Report {
+    name: String,
+    title: String,
+    columns: Vec<String>,
+    rows: Vec<Vec<Json>>,
+    notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(name: &str, title: &str, columns: &[&str]) -> Self {
+        Report {
+            name: name.to_string(),
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, values: Vec<Json>) {
+        assert_eq!(values.len(), self.columns.len(), "row arity");
+        self.rows.push(values);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    /// Print an aligned table to stdout.
+    pub fn print(&self) {
+        println!("\n== {} — {} ==", self.name, self.title);
+        let mut widths: Vec<usize> =
+            self.columns.iter().map(|c| c.len()).collect();
+        let cells: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| r.iter().map(fmt_cell).collect())
+            .collect();
+        for row in &cells {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let header: Vec<String> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+            .collect();
+        println!("{}", header.join("  "));
+        println!("{}", "-".repeat(header.join("  ").len()));
+        for row in &cells {
+            let line: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect();
+            println!("{}", line.join("  "));
+        }
+        for n in &self.notes {
+            println!("note: {}", n);
+        }
+    }
+
+    /// Write the report as JSON under `bench_out/`.
+    pub fn save(&self) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all("bench_out")?;
+        let path = std::path::PathBuf::from(format!("bench_out/{}.json", self.name));
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::Obj(
+                    self.columns
+                        .iter()
+                        .cloned()
+                        .zip(r.iter().cloned())
+                        .collect(),
+                )
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("title", Json::str(self.title.clone())),
+            ("rows", Json::Arr(rows)),
+            (
+                "notes",
+                Json::Arr(self.notes.iter().cloned().map(Json::Str).collect()),
+            ),
+        ]);
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "{}", doc)?;
+        Ok(path)
+    }
+
+    /// Print and save; panics on IO failure (bench context).
+    pub fn finish(&self) {
+        self.print();
+        let path = self.save().expect("writing bench_out");
+        println!("saved {}", path.display());
+    }
+}
+
+fn fmt_cell(v: &Json) -> String {
+    match v {
+        Json::Str(s) => s.clone(),
+        Json::Num(n) => {
+            if n.fract() == 0.0 && n.abs() < 1e12 {
+                format!("{}", *n as i64)
+            } else if n.abs() >= 100.0 {
+                format!("{:.1}", n)
+            } else {
+                format!("{:.3}", n)
+            }
+        }
+        other => other.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_iters() {
+        let s = time_it(2, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.len(), 5);
+        assert!(s.min() >= 0.0);
+    }
+
+    #[test]
+    fn report_roundtrip() {
+        let mut r = Report::new("test_report", "unit test", &["x", "y"]);
+        r.row(vec![Json::num(1.0), Json::str("a")]);
+        r.row(vec![Json::num(2.0), Json::str("b")]);
+        r.note("hello");
+        let path = r.save().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(v.get("rows").unwrap().as_arr().unwrap().len(), 2);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn report_rejects_bad_arity() {
+        let mut r = Report::new("t", "t", &["a", "b"]);
+        r.row(vec![Json::num(1.0)]);
+    }
+}

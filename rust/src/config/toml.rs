@@ -1,0 +1,280 @@
+//! TOML-subset parser lowering to [`Json`] values.
+//!
+//! Supported grammar (sufficient for serving configs):
+//! `[table]` / `[table.sub]` headers, `key = value` with dotted keys,
+//! basic strings, integers, floats, booleans, homogeneous inline arrays,
+//! `#` comments. Unsupported (rejected, not silently ignored): array
+//! tables `[[x]]`, multi-line strings, datetimes, inline tables.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// TOML parse error with line information.
+#[derive(Debug, thiserror::Error)]
+#[error("toml error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+fn err(line: usize, msg: impl Into<String>) -> TomlError {
+    TomlError {
+        line,
+        msg: msg.into(),
+    }
+}
+
+/// Parse a TOML document into a JSON object tree.
+pub fn parse(input: &str) -> Result<Json, TomlError> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    // Current table path from the most recent [header].
+    let mut prefix: Vec<String> = Vec::new();
+
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = lineno + 1;
+        let text = strip_comment(raw).trim();
+        if text.is_empty() {
+            continue;
+        }
+        if let Some(inner) = text.strip_prefix('[') {
+            if text.starts_with("[[") {
+                return Err(err(line, "array-of-tables is not supported"));
+            }
+            let inner = inner
+                .strip_suffix(']')
+                .ok_or_else(|| err(line, "unterminated table header"))?;
+            prefix = parse_key_path(inner, line)?;
+            // Materialise the table so empty tables exist.
+            ensure_table(&mut root, &prefix, line)?;
+        } else {
+            let eq = text
+                .find('=')
+                .ok_or_else(|| err(line, "expected 'key = value'"))?;
+            let keypart = &text[..eq];
+            let valpart = text[eq + 1..].trim();
+            let mut path = prefix.clone();
+            path.extend(parse_key_path(keypart, line)?);
+            let value = parse_value(valpart, line)?;
+            insert(&mut root, &path, value, line)?;
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside of quotes begins a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_key_path(s: &str, line: usize) -> Result<Vec<String>, TomlError> {
+    let mut parts = Vec::new();
+    for part in s.split('.') {
+        let p = part.trim();
+        let p = p
+            .strip_prefix('"')
+            .and_then(|x| x.strip_suffix('"'))
+            .unwrap_or(p);
+        if p.is_empty() {
+            return Err(err(line, "empty key component"));
+        }
+        if !p
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+        {
+            return Err(err(line, format!("invalid key '{}'", p)));
+        }
+        parts.push(p.to_string());
+    }
+    Ok(parts)
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+    line: usize,
+) -> Result<&'a mut BTreeMap<String, Json>, TomlError> {
+    let mut cur = root;
+    for key in path {
+        let entry = cur
+            .entry(key.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        cur = match entry {
+            Json::Obj(m) => m,
+            _ => return Err(err(line, format!("'{}' is not a table", key))),
+        };
+    }
+    Ok(cur)
+}
+
+fn insert(
+    root: &mut BTreeMap<String, Json>,
+    path: &[String],
+    value: Json,
+    line: usize,
+) -> Result<(), TomlError> {
+    let (last, dirs) = path.split_last().expect("non-empty path");
+    let table = ensure_table(root, dirs, line)?;
+    if table.contains_key(last) {
+        return Err(err(line, format!("duplicate key '{}'", last)));
+    }
+    table.insert(last.clone(), value);
+    Ok(())
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Json, TomlError> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err(err(line, "missing value"));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(line, "unterminated string"))?;
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    _ => return Err(err(line, "bad string escape")),
+                }
+            } else if c == '"' {
+                return Err(err(line, "unescaped quote in string"));
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Json::Str(out));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err(line, "unterminated array"))?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim(), line)?);
+            }
+        }
+        return Ok(Json::Arr(items));
+    }
+    match s {
+        "true" => return Ok(Json::Bool(true)),
+        "false" => return Ok(Json::Bool(false)),
+        _ => {}
+    }
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    if let Ok(n) = cleaned.parse::<f64>() {
+        return Ok(Json::Num(n));
+    }
+    Err(err(line, format!("cannot parse value '{}'", s)))
+}
+
+/// Split array contents on commas that are not inside strings or nested
+/// arrays.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if start < s.len() {
+        parts.push(&s[start..]);
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_document() {
+        let doc = r#"
+# serving config
+name = "ragcache"
+max_batch = 4
+rate = 0.8
+
+[cache]
+gpu_gib = 24
+host_gib = 192.0
+policy = "pgdsf"
+
+[cache.transfer]
+pcie_gbps = 25.6
+"#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("ragcache"));
+        assert_eq!(v.get("max_batch").unwrap().as_u64(), Some(4));
+        let cache = v.get("cache").unwrap();
+        assert_eq!(cache.get("policy").unwrap().as_str(), Some("pgdsf"));
+        assert_eq!(
+            cache
+                .get("transfer")
+                .unwrap()
+                .get("pcie_gbps")
+                .unwrap()
+                .as_f64(),
+            Some(25.6)
+        );
+    }
+
+    #[test]
+    fn arrays_and_dotted_keys() {
+        let doc = r#"
+topk = [1, 3, 5]
+workload.dataset = "mmlu"
+workload.rates = [0.5, 1.0, 1.5]
+"#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("topk").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(
+            v.get("workload").unwrap().get("dataset").unwrap().as_str(),
+            Some("mmlu")
+        );
+    }
+
+    #[test]
+    fn comments_inside_strings_survive() {
+        let v = parse("s = \"a # not comment\" # real comment").unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("a # not comment"));
+    }
+
+    #[test]
+    fn rejects_duplicates_and_garbage() {
+        assert!(parse("a = 1\na = 2").is_err());
+        assert!(parse("[[x]]").is_err());
+        assert!(parse("a =").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("a = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let v = parse("n = 1_000_000").unwrap();
+        assert_eq!(v.get("n").unwrap().as_u64(), Some(1_000_000));
+    }
+}

@@ -1,0 +1,171 @@
+//! Fault tolerance (paper §6): hot-node replication for GPU-failure
+//! recovery, and timeout/retry for request-processing failures.
+
+use crate::tree::KnowledgeTree;
+
+/// Replicate the `n` hottest upper-level GPU nodes into host memory so a
+/// GPU failure preserves them (§6: "replicate a portion of the most
+/// frequently accessed upper-level nodes in the host memory").
+/// Returns the number of nodes actually replicated.
+pub fn replicate_hot_nodes(tree: &mut KnowledgeTree, n: usize) -> usize {
+    let mut done = 0;
+    for id in tree.hot_upper_nodes(n) {
+        if tree.replicate_to_host(id) {
+            done += 1;
+        }
+    }
+    done
+}
+
+/// Timeout/retry bookkeeping for one request (§6: "a timeout mechanism to
+/// retry the failed requests. If a request fails before completing its
+/// first iteration, it will be recomputed. Otherwise, [it] can continue
+/// computation by reusing the stored KV cache").
+#[derive(Debug, Clone)]
+pub struct RetryState {
+    pub timeout_s: f64,
+    pub max_retries: u32,
+    pub attempts: u32,
+    /// Set once the first iteration completed (KV exists to resume from).
+    pub first_iteration_done: bool,
+    started_at: f64,
+}
+
+/// What to do with a request after a failure or timeout check.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RetryAction {
+    /// Still within budget; keep waiting.
+    Wait,
+    /// Recompute from scratch (failed before first iteration).
+    Recompute,
+    /// Resume from stored KV (first iteration done).
+    Resume,
+    /// Retries exhausted.
+    Fail,
+}
+
+impl RetryState {
+    pub fn new(timeout_s: f64, max_retries: u32, now: f64) -> Self {
+        RetryState {
+            timeout_s,
+            max_retries,
+            attempts: 0,
+            first_iteration_done: false,
+            started_at: now,
+        }
+    }
+
+    /// A (re)attempt begins.
+    pub fn begin_attempt(&mut self, now: f64) {
+        self.attempts += 1;
+        self.started_at = now;
+    }
+
+    /// Periodic timeout check.
+    pub fn check(&self, now: f64) -> RetryAction {
+        if now - self.started_at < self.timeout_s {
+            return RetryAction::Wait;
+        }
+        if self.attempts > self.max_retries {
+            return RetryAction::Fail;
+        }
+        if self.first_iteration_done {
+            RetryAction::Resume
+        } else {
+            RetryAction::Recompute
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PolicyKind;
+    use crate::kvcache::{PageSpec, Tier};
+    use crate::policy::{make_policy, AccessCtx};
+    use crate::tree::KnowledgeTree;
+
+    fn page() -> PageSpec {
+        PageSpec {
+            block_tokens: 16,
+            kv_bytes_per_token: 64,
+        }
+    }
+
+    fn make_tree() -> KnowledgeTree {
+        let p = page();
+        KnowledgeTree::new(
+            p.bytes(1000),
+            p.bytes(1000),
+            p,
+            make_policy(PolicyKind::Pgdsf),
+            true,
+            0,
+        )
+    }
+
+    fn touch(t: &mut KnowledgeTree, id: crate::tree::NodeId, times: usize) {
+        for i in 0..times {
+            t.on_access(
+                id,
+                &AccessCtx {
+                    alpha: 0,
+                    beta: 16,
+                    estimated_time: 0.01,
+                    was_cached: false,
+                    now: i as f64,
+                    tokens: 16,
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn replication_protects_hot_nodes_across_gpu_failure() {
+        let mut t = make_tree();
+        let (hot, _) = t.insert_child(t.root(), 1, 16, None).unwrap();
+        let (cold, _) = t.insert_child(t.root(), 2, 16, None).unwrap();
+        touch(&mut t, hot, 10);
+        touch(&mut t, cold, 1);
+
+        let n = replicate_hot_nodes(&mut t, 1);
+        assert_eq!(n, 1);
+        let (lost, recovered) = t.fail_gpu();
+        t.check_invariants();
+        assert_eq!(recovered, 1, "hot node survived in host");
+        assert_eq!(lost, 1, "cold node lost");
+        assert_eq!(t.node_tier(hot), Some(Tier::Host));
+        assert_eq!(t.node_tier(cold), None);
+    }
+
+    #[test]
+    fn gpu_failure_invalidates_descendants_of_lost_nodes() {
+        let mut t = make_tree();
+        let (a, _) = t.insert_child(t.root(), 1, 16, None).unwrap();
+        let (b, _) = t.insert_child(a, 2, 16, None).unwrap();
+        // Replicate only the CHILD: after failure the parent is lost, so
+        // the child must be dropped too (prefix sensitivity).
+        assert!(t.replicate_to_host(b));
+        let (lost, recovered) = t.fail_gpu();
+        t.check_invariants();
+        // b is first recovered to host, then dropped as an orphan: the
+        // end state is that nothing survives.
+        assert_eq!(recovered, 1);
+        assert!(lost >= 2);
+        assert_eq!(t.node_tier(a), None);
+        assert_eq!(t.node_tier(b), None, "orphaned prefix dropped");
+    }
+
+    #[test]
+    fn retry_state_machine() {
+        let mut r = RetryState::new(1.0, 2, 0.0);
+        r.begin_attempt(0.0);
+        assert_eq!(r.check(0.5), RetryAction::Wait);
+        assert_eq!(r.check(1.5), RetryAction::Recompute);
+        r.first_iteration_done = true;
+        assert_eq!(r.check(1.5), RetryAction::Resume);
+        r.begin_attempt(2.0);
+        r.begin_attempt(4.0);
+        assert_eq!(r.check(5.5), RetryAction::Fail);
+    }
+}

@@ -1,0 +1,19 @@
+//! The global RAG controller (paper §4, Fig. 7) — the system's Layer 3.
+//!
+//! Orchestrates: staged vector retrieval → knowledge-tree lookup →
+//! cache-aware admission → LLM engine iterations → tree insertion and
+//! policy updates, with dynamic speculative pipelining overlapping the
+//! first two against the last three.
+//!
+//! [`sim_server`] drives the whole pipeline against the virtual clock and
+//! the analytic cost model (paper-scale experiments); the same tree,
+//! policies, scheduler and DSP logic are driven in real time by the
+//! PJRT-backed [`real`] server used in `examples/e2e_serving.rs`.
+
+pub mod retrieval;
+pub mod sim_server;
+pub mod real;
+pub mod fault;
+
+pub use retrieval::{RetrievalTiming, StagePlan, StagedRetrieval};
+pub use sim_server::{SimOutcome, SimServer};

@@ -1,0 +1,202 @@
+//! Staged-retrieval planning for the simulated pipeline.
+//!
+//! In real mode the controller ticks the actual vector index
+//! (`vectordb::VectorIndex::staged_search`). In simulated mode the
+//! final documents come from the workload trace and the *candidate
+//! evolution* across stages is modelled: the paper (and our IVF staged
+//! tests) observe that the final top-k usually emerges early in the
+//! search, which is precisely what speculative pipelining exploits.
+
+use crate::tree::DocId;
+use crate::util::Rng;
+
+/// Retrieval latency/staging parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct RetrievalTiming {
+    /// Full vector-search latency, seconds (scales with the searched
+    /// fraction of the database — Fig. 19's x-axis).
+    pub full_search_s: f64,
+    /// Number of speculative stages the search is split into.
+    pub stages: usize,
+    /// Probability that the candidate set has converged to the final
+    /// top-k by the end of stage 0 (geometrically increasing after).
+    pub early_convergence: f64,
+}
+
+impl Default for RetrievalTiming {
+    fn default() -> Self {
+        // §3.1: retrieval executes in milliseconds per request for
+        // billion-scale databases; ~50 ms ≈ the paper's Table 3 scale at
+        // small search ratios.
+        RetrievalTiming {
+            full_search_s: 0.25,
+            stages: 4,
+            early_convergence: 0.55,
+        }
+    }
+}
+
+/// One retrieval stage: when it completes and what the candidate top-k
+/// looks like at that point.
+#[derive(Debug, Clone)]
+pub struct StagePlan {
+    /// Completion offset from retrieval start, seconds.
+    pub offset: f64,
+    pub docs: Vec<DocId>,
+    pub is_final: bool,
+}
+
+/// A fully planned staged retrieval for one request.
+#[derive(Debug, Clone)]
+pub struct StagedRetrieval {
+    pub stages: Vec<StagePlan>,
+}
+
+impl StagedRetrieval {
+    /// Plan stage snapshots for a request whose final top-k is known
+    /// (from the trace). Before the (sampled) convergence stage the
+    /// candidate list differs in its last element — matching how IVF/HNSW
+    /// candidate queues refine from the tail.
+    pub fn plan(
+        final_docs: &[DocId],
+        num_docs: usize,
+        timing: &RetrievalTiming,
+        rng: &mut Rng,
+    ) -> StagedRetrieval {
+        let stages = timing.stages.max(1);
+        // Sample the stage at which candidates converge: geometric with
+        // p = early_convergence, capped at the final stage.
+        let mut converge_at = 0usize;
+        while converge_at + 1 < stages
+            && !rng.chance(timing.early_convergence)
+        {
+            converge_at += 1;
+        }
+        let mut plans = Vec::with_capacity(stages);
+        for s in 0..stages {
+            let docs = if s >= converge_at || final_docs.len() <= 1 {
+                final_docs.to_vec()
+            } else {
+                // Unconverged: the tail candidate is still wrong.
+                let mut d = final_docs.to_vec();
+                let last = d.len() - 1;
+                d[last] = perturb(final_docs[last], s, num_docs);
+                d
+            };
+            plans.push(StagePlan {
+                offset: timing.full_search_s * (s + 1) as f64
+                    / stages as f64,
+                docs,
+                is_final: s == stages - 1,
+            });
+        }
+        StagedRetrieval { stages: plans }
+    }
+
+    /// Single-stage plan (speculation disabled): only the final result,
+    /// delivered when the search completes.
+    pub fn single(final_docs: &[DocId], timing: &RetrievalTiming) -> Self {
+        StagedRetrieval {
+            stages: vec![StagePlan {
+                offset: timing.full_search_s,
+                docs: final_docs.to_vec(),
+                is_final: true,
+            }],
+        }
+    }
+}
+
+fn perturb(doc: DocId, stage: usize, num_docs: usize) -> DocId {
+    let x = (doc as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(stage as u64 + 1);
+    let cand = ((x >> 17) % num_docs.max(2) as u64) as u32;
+    if cand == doc {
+        (cand + 1) % num_docs.max(2) as u32
+    } else {
+        cand
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn final_stage_always_correct() {
+        let mut rng = Rng::new(1);
+        let timing = RetrievalTiming::default();
+        for _ in 0..50 {
+            let plan =
+                StagedRetrieval::plan(&[3, 7], 100, &timing, &mut rng);
+            assert_eq!(plan.stages.len(), 4);
+            let last = plan.stages.last().unwrap();
+            assert!(last.is_final);
+            assert_eq!(last.docs, vec![3, 7]);
+            assert!((last.offset - timing.full_search_s).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn offsets_increase_linearly() {
+        let mut rng = Rng::new(2);
+        let timing = RetrievalTiming {
+            full_search_s: 0.4,
+            stages: 4,
+            early_convergence: 0.5,
+        };
+        let plan = StagedRetrieval::plan(&[1, 2], 100, &timing, &mut rng);
+        let offsets: Vec<f64> =
+            plan.stages.iter().map(|s| s.offset).collect();
+        for (got, want) in offsets.iter().zip([0.1, 0.2, 0.3, 0.4]) {
+            assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn early_convergence_rate_matches_parameter() {
+        let mut rng = Rng::new(3);
+        let timing = RetrievalTiming {
+            full_search_s: 0.1,
+            stages: 4,
+            early_convergence: 0.6,
+        };
+        let trials = 2000;
+        let mut converged_at_0 = 0;
+        for _ in 0..trials {
+            let plan =
+                StagedRetrieval::plan(&[5, 9], 1000, &timing, &mut rng);
+            if plan.stages[0].docs == vec![5, 9] {
+                converged_at_0 += 1;
+            }
+        }
+        let frac = converged_at_0 as f64 / trials as f64;
+        assert!((0.55..0.65).contains(&frac), "{frac}");
+    }
+
+    #[test]
+    fn unconverged_stage_differs_in_tail_only() {
+        let mut rng = Rng::new(4);
+        let timing = RetrievalTiming {
+            full_search_s: 0.1,
+            stages: 4,
+            early_convergence: 0.0, // never converge before final
+        };
+        let plan =
+            StagedRetrieval::plan(&[11, 22, 33], 1000, &timing, &mut rng);
+        for s in &plan.stages[..3] {
+            assert_eq!(s.docs[0], 11);
+            assert_eq!(s.docs[1], 22);
+            assert_ne!(s.docs[2], 33);
+        }
+        assert_eq!(plan.stages[3].docs, vec![11, 22, 33]);
+    }
+
+    #[test]
+    fn single_stage_plan() {
+        let timing = RetrievalTiming::default();
+        let plan = StagedRetrieval::single(&[1, 2], &timing);
+        assert_eq!(plan.stages.len(), 1);
+        assert!(plan.stages[0].is_final);
+    }
+}

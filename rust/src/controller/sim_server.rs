@@ -1,0 +1,731 @@
+//! Event-driven simulation server: the full RAGCache pipeline (and its
+//! vLLM/SGLang baseline configurations) against the virtual clock and the
+//! analytic GPU cost model. This is what every paper-scale bench drives.
+
+use super::retrieval::{RetrievalTiming, StagedRetrieval};
+use crate::config::{SystemConfig, SystemKind};
+use crate::kvcache::{PageSpec, TransferModel};
+use crate::llm::cost_model::{CostModel, CostProfile};
+use crate::llm::engine::{AbortOutcome, Engine, SeqEvent, SeqSpec};
+use crate::llm::models::{GpuSpec, ModelSpec};
+use crate::metrics::Recorder;
+use crate::policy::{make_policy, AccessCtx};
+use crate::sched::{PendingRequest, ReorderQueue};
+use crate::sim::{Clock, EventQueue, SimClock};
+use crate::spec::{SpecAction, SpecState};
+use crate::tree::{DocId, KnowledgeTree, NodeId};
+use crate::util::Rng;
+use crate::workload::Trace;
+use std::time::Instant;
+
+/// Generation-tagged engine sequence id: `request_index * GEN_BASE + gen`.
+const GEN_BASE: u64 = 1024;
+
+#[derive(Debug, Clone)]
+enum Event {
+    Arrival(usize),
+    Stage { req: usize, stage: usize },
+    /// Completion of the iteration with this epoch tag (stale tags are
+    /// ignored — the iteration was cancelled).
+    EngineDone(u64),
+}
+
+/// Info captured at admission, needed when the prefill completes.
+#[derive(Debug, Clone, Default)]
+struct AdmitInfo {
+    /// Matched (pinned) tree path.
+    path: Vec<NodeId>,
+    /// Docs to insert after compute: `(doc, tokens)`.
+    unmatched: Vec<(DocId, usize)>,
+    alpha: usize,
+    beta: usize,
+    estimated_time: f64,
+}
+
+#[derive(Debug, Default)]
+struct ReqSim {
+    spec: SpecState,
+    /// Planned candidate evolution of this request's staged retrieval.
+    spec_plan: Option<StagedRetrieval>,
+    /// Engine/queue sequence of the live generation (if any).
+    active_seq: Option<u64>,
+    active_docs: Vec<DocId>,
+    next_gen: u64,
+    confirmed: bool,
+    retrieval_done_at: Option<f64>,
+    /// When the generation carrying the *final* docs entered the queue.
+    final_enqueue_at: Option<f64>,
+    spec_first_token_at: Option<f64>,
+    spec_finished_at: Option<f64>,
+    done: bool,
+}
+
+/// Aggregated results of one simulation run.
+#[derive(Debug)]
+pub struct SimOutcome {
+    pub recorder: Recorder,
+    pub tree_counters: Option<crate::tree::TreeCounters>,
+    pub spec_started: u64,
+    pub spec_wasted: u64,
+    /// Mean controller decision time (tree lookup/update + reordering +
+    /// DSP decisions), seconds — Table 4.
+    pub mean_sched_time: f64,
+    pub completed: usize,
+}
+
+/// The simulation server.
+pub struct SimServer {
+    kind: SystemKind,
+    clock: SimClock,
+    events: EventQueue<Event>,
+    engine: Engine,
+    tree: Option<KnowledgeTree>,
+    queue: ReorderQueue,
+    profile: CostProfile,
+    transfer: TransferModel,
+    timing: RetrievalTiming,
+    spec_enabled: bool,
+    max_batch: usize,
+    requests: Vec<ReqSim>,
+    /// Admission context per engine sequence (pinned path + docs to
+    /// insert after the prefill). Keyed by seq id so aborted-but-
+    /// completing speculations still cache their KV.
+    admit_infos: std::collections::HashMap<u64, AdmitInfo>,
+    /// Docs of every generation ever started (for stale-seq insertion).
+    gen_docs: std::collections::HashMap<u64, Vec<DocId>>,
+    trace: Trace,
+    recorder: Recorder,
+    rng: Rng,
+    num_docs: usize,
+    sched_secs: f64,
+    sched_ops: u64,
+    /// Epoch of the currently in-flight engine iteration.
+    inflight_epoch: Option<u64>,
+    next_epoch: u64,
+}
+
+impl SimServer {
+    /// Assemble a server for the given system configuration. The
+    /// `SystemKind` selects the baseline behaviour matrix (§7 Baselines):
+    /// vLLM = no document cache, FIFO, no DSP; SGLang = GPU-only prefix
+    /// cache with LRU, FIFO, no DSP; RAGCache = everything.
+    pub fn build(
+        cfg: &SystemConfig,
+        trace: Trace,
+        num_docs: usize,
+        timing: RetrievalTiming,
+        seed: u64,
+    ) -> anyhow::Result<SimServer> {
+        let model = ModelSpec::lookup(&cfg.engine.model)?;
+        let gpu = GpuSpec::lookup(&cfg.engine.gpu)?;
+        let cost = CostModel::new(model.clone(), gpu.clone());
+        let profile = cost.profile(65536, 65536);
+        let engine = Engine::new(
+            cost,
+            cfg.engine.max_batch,
+            cfg.engine.max_prefill_tokens,
+        );
+        let page = PageSpec {
+            block_tokens: cfg.cache.block_tokens,
+            kv_bytes_per_token: model.kv_bytes_per_token,
+        };
+        let kind = *cfg.kind;
+        let tree = match kind {
+            SystemKind::VllmLike => None,
+            SystemKind::SglangLike => Some(KnowledgeTree::new(
+                cfg.cache.gpu_bytes,
+                0,
+                page,
+                make_policy(crate::config::PolicyKind::Lru),
+                false,
+                0,
+            )),
+            SystemKind::RagCache => Some(KnowledgeTree::new(
+                cfg.cache.gpu_bytes,
+                cfg.cache.host_bytes,
+                page,
+                make_policy(cfg.cache.policy),
+                cfg.cache.swap_out_only_once,
+                0,
+            )),
+        };
+        let reorder = kind == SystemKind::RagCache && cfg.sched.reorder;
+        let spec_enabled = kind == SystemKind::RagCache && cfg.spec.enabled;
+        let transfer = if cfg.engine.gpu == "h800x2" {
+            TransferModel::pcie5()
+        } else {
+            TransferModel::pcie4()
+        };
+        let n = trace.requests.len();
+        let mut requests = Vec::with_capacity(n);
+        requests.resize_with(n, ReqSim::default);
+        Ok(SimServer {
+            kind,
+            clock: SimClock::new(),
+            events: EventQueue::new(),
+            engine,
+            tree,
+            queue: ReorderQueue::new(reorder, cfg.sched.window),
+            profile,
+            transfer,
+            timing,
+            spec_enabled,
+            max_batch: cfg.engine.max_batch,
+            requests,
+            admit_infos: std::collections::HashMap::new(),
+            gen_docs: std::collections::HashMap::new(),
+            trace,
+            recorder: Recorder::new(),
+            rng: Rng::new(seed ^ 0x51_C0_FF_EE),
+            num_docs,
+            sched_secs: 0.0,
+            sched_ops: 0,
+            inflight_epoch: None,
+            next_epoch: 0,
+        })
+    }
+
+    pub fn kind(&self) -> SystemKind {
+        self.kind
+    }
+
+    /// Run the trace to completion and return the outcome.
+    pub fn run(mut self) -> SimOutcome {
+        for i in 0..self.trace.requests.len() {
+            let at = self.trace.requests[i].arrival;
+            self.events.schedule(at, Event::Arrival(i));
+        }
+        while let Some((t, ev)) = self.events.next() {
+            self.clock.advance_to(t);
+            match ev {
+                Event::Arrival(i) => self.on_arrival(i),
+                Event::Stage { req, stage } => self.on_stage(req, stage),
+                Event::EngineDone(epoch) => self.on_engine_done(epoch),
+            }
+            self.pump();
+        }
+        let completed =
+            self.requests.iter().filter(|r| r.done).count();
+        SimOutcome {
+            recorder: self.recorder,
+            tree_counters: self.tree.as_ref().map(|t| t.counters()),
+            spec_started: self
+                .requests
+                .iter()
+                .map(|r| r.spec.started)
+                .sum(),
+            spec_wasted: self.requests.iter().map(|r| r.spec.wasted).sum(),
+            mean_sched_time: if self.sched_ops == 0 {
+                0.0
+            } else {
+                self.sched_secs / self.sched_ops as f64
+            },
+            completed,
+        }
+    }
+
+    fn now(&self) -> f64 {
+        self.clock.now()
+    }
+
+    fn on_arrival(&mut self, i: usize) {
+        let now = self.now();
+        self.recorder.arrival(i as u64, now);
+        let docs = self.trace.requests[i].docs.clone();
+        let plan = if self.spec_enabled {
+            StagedRetrieval::plan(
+                &docs,
+                self.num_docs,
+                &self.timing,
+                &mut self.rng,
+            )
+        } else {
+            StagedRetrieval::single(&docs, &self.timing)
+        };
+        for (s, stage) in plan.stages.iter().enumerate() {
+            self.events
+                .schedule(now + stage.offset, Event::Stage { req: i, stage: s });
+        }
+        // Stash the plan's candidate docs on the request.
+        self.requests[i].active_docs = Vec::new();
+        self.requests[i].spec_plan = Some(plan);
+    }
+
+    fn on_stage(&mut self, req: usize, stage: usize) {
+        let t0 = Instant::now();
+        let now = self.now();
+        let plan = self.requests[req]
+            .spec_plan
+            .as_ref()
+            .expect("stage plan exists");
+        let sp = plan.stages[stage].clone();
+        let pool_len = self.engine.waiting_len() + self.queue.len();
+        let action = self.requests[req].spec.on_stage(
+            &sp.docs,
+            pool_len,
+            self.max_batch,
+            sp.is_final,
+        );
+        match action {
+            SpecAction::Start { terminate_prev } => {
+                if terminate_prev {
+                    self.abort_generation(req);
+                }
+                self.start_generation(req, &sp.docs);
+            }
+            SpecAction::Keep => {}
+            SpecAction::Defer { terminate_prev } => {
+                if terminate_prev {
+                    self.abort_generation(req);
+                }
+            }
+        }
+        if sp.is_final {
+            self.on_retrieval_final(req, now);
+        }
+        self.sched_secs += t0.elapsed().as_secs_f64();
+        self.sched_ops += 1;
+    }
+
+    /// Final retrieval results are in: confirm or nothing (re-generation
+    /// was already started by the Start action if docs changed).
+    fn on_retrieval_final(&mut self, req: usize, now: f64) {
+        let r = &mut self.requests[req];
+        r.retrieval_done_at = Some(now);
+        self.recorder.retrieval_done(req as u64, now);
+        r.confirmed = true;
+        // Deliver buffered speculative results.
+        if let Some(ft) = r.spec_first_token_at {
+            let deliver = ft.max(now);
+            self.recorder.first_token(req as u64, deliver);
+        }
+        if let Some(fin) = r.spec_finished_at {
+            let deliver = fin.max(now);
+            self.recorder.finished(req as u64, deliver);
+            self.recorder
+                .output_tokens(req as u64, self.trace.requests[req].output_tokens);
+            self.requests[req].done = true;
+        }
+        // Table 3 non-overlapping search time: the part of the retrieval
+        // not hidden behind LLM-side work on the final-docs generation.
+        let retrieval_time = self.timing.full_search_s;
+        let overlap = self.requests[req]
+            .final_enqueue_at
+            .map(|t| (now - t).clamp(0.0, retrieval_time))
+            .unwrap_or(0.0);
+        self.recorder.non_overlapped_search(
+            req as u64,
+            retrieval_time - overlap,
+        );
+    }
+
+    /// Abort the live generation of `req`, wherever it is. Sequences in
+    /// the in-flight prefill iteration complete it (their KV is cached on
+    /// the FirstToken that still fires); everything else is unpinned
+    /// here.
+    fn abort_generation(&mut self, req: usize) {
+        let Some(seq) = self.requests[req].active_seq.take() else {
+            return;
+        };
+        self.queue.remove(seq);
+        match self.engine.abort(seq) {
+            AbortOutcome::Deferred => {
+                if self.engine.in_flight_fully_killed() {
+                    // §5.3 batch-size-one case: nothing else shares the
+                    // iteration, terminate immediately. Partial work is
+                    // discarded (no KV cached).
+                    for id in self.engine.cancel_in_flight() {
+                        if let Some(info) = self.admit_infos.remove(&id) {
+                            if let Some(tree) = self.tree.as_mut() {
+                                tree.unpin(&info.path);
+                            }
+                        }
+                    }
+                    self.inflight_epoch = None;
+                }
+                // Otherwise FirstToken will arrive and handle unpin +
+                // insertion (the KV is computed and cached).
+            }
+            AbortOutcome::Removed | AbortOutcome::NotFound => {
+                if let Some(info) = self.admit_infos.remove(&seq) {
+                    if let Some(tree) = self.tree.as_mut() {
+                        tree.unpin(&info.path);
+                    }
+                }
+            }
+        }
+        self.requests[req].spec_first_token_at = None;
+        self.requests[req].spec_finished_at = None;
+    }
+
+    /// Create a generation for `docs` and enqueue it for admission.
+    fn start_generation(&mut self, req: usize, docs: &[DocId]) {
+        let now = self.now();
+        let gen = self.requests[req].next_gen;
+        self.requests[req].next_gen += 1;
+        let seq = req as u64 * GEN_BASE + gen;
+        // Cached/compute lengths for the reordering priority.
+        let doc_tokens: usize =
+            docs.iter().map(|&d| self.doc_tokens(req, d)).sum();
+        let tr = &self.trace.requests[req];
+        let (cached, compute) = match self.tree.as_ref() {
+            None => (0, tr.prompt_tokens()),
+            Some(tree) => {
+                let m = tree.lookup(docs);
+                (
+                    m.cached_tokens,
+                    doc_tokens.saturating_sub(m.cached_tokens)
+                        + tr.request_tokens,
+                )
+            }
+        };
+        let arrival = tr.arrival;
+        let is_final_docs = docs == tr.docs.as_slice();
+        let r = &mut self.requests[req];
+        r.active_seq = Some(seq);
+        r.active_docs = docs.to_vec();
+        if is_final_docs && r.final_enqueue_at.is_none() {
+            r.final_enqueue_at = Some(now);
+        }
+        self.gen_docs.insert(seq, docs.to_vec());
+        self.queue.push(PendingRequest {
+            id: seq,
+            arrival,
+            cached_tokens: cached,
+            compute_tokens: compute,
+            bypassed: 0,
+        });
+    }
+
+    /// Token count of `doc` for this request: trace value when the doc is
+    /// one of the final docs, corpus-independent fallback otherwise
+    /// (perturbed speculative candidates use the mean doc length).
+    fn doc_tokens(&self, req: usize, doc: DocId) -> usize {
+        let tr = &self.trace.requests[req];
+        for (i, &d) in tr.docs.iter().enumerate() {
+            if d == doc {
+                return tr.doc_tokens[i];
+            }
+        }
+        // Speculative candidate outside the final set.
+        let sum: usize = tr.doc_tokens.iter().sum();
+        (sum / tr.doc_tokens.len().max(1)).max(1)
+    }
+
+    /// Admit queued requests into free engine slots, then keep the engine
+    /// running.
+    fn pump(&mut self) {
+        loop {
+            let in_engine =
+                self.engine.waiting_len() + self.engine.decoding_len();
+            if in_engine >= self.max_batch || self.queue.is_empty() {
+                break;
+            }
+            let t0 = Instant::now();
+            let pending = self.queue.pop().unwrap();
+            self.admit(pending);
+            self.sched_secs += t0.elapsed().as_secs_f64();
+            self.sched_ops += 1;
+        }
+        if self.inflight_epoch.is_none() {
+            if let Some(plan) = self.engine.plan() {
+                let epoch = self.next_epoch;
+                self.next_epoch += 1;
+                self.inflight_epoch = Some(epoch);
+                self.events.schedule(
+                    self.now() + plan.duration,
+                    Event::EngineDone(epoch),
+                );
+            }
+        }
+    }
+
+    fn admit(&mut self, pending: PendingRequest) {
+        let req = (pending.id / GEN_BASE) as usize;
+        let now = self.now();
+        if self.requests[req].active_seq != Some(pending.id) {
+            return; // stale generation
+        }
+        let tr = &self.trace.requests[req];
+        let docs = self.gen_docs[&pending.id].clone();
+        let doc_token_list: Vec<(DocId, usize)> = docs
+            .iter()
+            .map(|&d| (d, self.doc_tokens(req, d)))
+            .collect();
+
+        let mut alpha = 0usize;
+        let mut extra_time = 0.0f64;
+        let mut path = Vec::new();
+        let mut matched = 0usize;
+        if let Some(tree) = self.tree.as_mut() {
+            let m = tree.lookup(&docs);
+            // Try to bring host-resident prefix into GPU; on failure fall
+            // back to the GPU-resident prefix only.
+            let (use_path, transfers) = match tree.promote(&m.path) {
+                Some(t) => (m.path.clone(), t),
+                None => {
+                    let gpu_prefix: Vec<NodeId> = m
+                        .path
+                        .iter()
+                        .take_while(|&&n| {
+                            tree.node_tier(n)
+                                == Some(crate::kvcache::Tier::Gpu)
+                        })
+                        .cloned()
+                        .collect();
+                    (gpu_prefix, crate::tree::Transfers::default())
+                }
+            };
+            matched = use_path.len();
+            alpha = use_path
+                .iter()
+                .map(|&n| tree.node_tokens(n))
+                .sum::<usize>();
+            extra_time += self
+                .transfer
+                .transfer_time(transfers.h2g_bytes + transfers.g2h_bytes);
+            tree.pin(&use_path);
+            path = use_path;
+        }
+        let beta: usize = doc_token_list[matched..]
+            .iter()
+            .map(|&(_, t)| t)
+            .sum::<usize>()
+            + tr.request_tokens;
+        let estimated_time = self.profile.estimate(alpha, beta);
+
+        // Policy updates for the matched (hit) nodes.
+        if let Some(tree) = self.tree.as_mut() {
+            for &n in &path {
+                let tokens = tree.node_tokens(n);
+                tree.on_access(
+                    n,
+                    &AccessCtx {
+                        alpha,
+                        beta,
+                        estimated_time,
+                        was_cached: true,
+                        now,
+                        tokens,
+                    },
+                );
+            }
+        }
+
+        // Metrics: hit accounting against the request's final docs.
+        if docs == tr.docs.as_slice() {
+            self.recorder.docs(req as u64, docs.len(), matched);
+            self.recorder.tokens(req as u64, alpha, beta);
+        }
+
+        self.admit_infos.insert(
+            pending.id,
+            AdmitInfo {
+                path,
+                unmatched: doc_token_list[matched..].to_vec(),
+                alpha,
+                beta,
+                estimated_time,
+            },
+        );
+        self.engine.admit(SeqSpec {
+            id: pending.id,
+            alpha,
+            beta,
+            output_tokens: tr.output_tokens,
+            extra_time,
+        });
+    }
+
+    fn on_engine_done(&mut self, epoch: u64) {
+        if self.inflight_epoch != Some(epoch) {
+            return; // iteration was cancelled
+        }
+        self.inflight_epoch = None;
+        let now = self.now();
+        let events = self.engine.complete();
+        for ev in events {
+            match ev {
+                SeqEvent::FirstToken { id } => self.on_first_token(id, now),
+                SeqEvent::Finished { id } => self.on_finished(id, now),
+            }
+        }
+    }
+
+    fn on_first_token(&mut self, seq: u64, now: f64) {
+        let req = (seq / GEN_BASE) as usize;
+        // Insert newly computed doc KV into the tree and update stats —
+        // even for terminated speculations: the prefill ran, the KV for
+        // its document sequence is valid, and caching it is precisely
+        // what makes restarted generations cheap (paper §4, Thm 5.1).
+        if let Some(info) = self.admit_infos.remove(&seq) {
+            if let Some(tree) = self.tree.as_mut() {
+                tree.unpin(&info.path);
+                let mut parent =
+                    info.path.last().copied().unwrap_or(tree.root());
+                for &(doc, tokens) in &info.unmatched {
+                    match tree.insert_child(parent, doc, tokens, None) {
+                        Some((id, _)) => {
+                            tree.on_access(
+                                id,
+                                &AccessCtx {
+                                    alpha: info.alpha,
+                                    beta: info.beta,
+                                    estimated_time: info.estimated_time,
+                                    was_cached: false,
+                                    now,
+                                    tokens,
+                                },
+                            );
+                            parent = id;
+                        }
+                        None => break, // does not fit: stays transient
+                    }
+                }
+            }
+        }
+        if self.requests[req].active_seq != Some(seq) {
+            return; // terminated speculation: cache filled, no delivery
+        }
+        let r = &mut self.requests[req];
+        if r.confirmed && r.active_docs == self.trace.requests[req].docs {
+            self.recorder.first_token(req as u64, now);
+        } else {
+            r.spec_first_token_at = Some(now);
+        }
+    }
+
+    fn on_finished(&mut self, seq: u64, now: f64) {
+        let req = (seq / GEN_BASE) as usize;
+        if self.requests[req].active_seq != Some(seq) {
+            return;
+        }
+        let out_tokens = self.trace.requests[req].output_tokens;
+        let r = &mut self.requests[req];
+        if r.confirmed && r.active_docs == self.trace.requests[req].docs {
+            self.recorder.finished(req as u64, now);
+            self.recorder.output_tokens(req as u64, out_tokens);
+            self.requests[req].done = true;
+        } else {
+            r.spec_finished_at = Some(now);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::workload::{datasets::MMLU, Corpus, Trace};
+
+    fn cfg_for(kind: &str) -> SystemConfig {
+        let mut cfg = SystemConfig::default();
+        cfg.kind = crate::config::SystemKindField(
+            SystemKind::parse(kind).unwrap(),
+        );
+        // Paper-testbed cache shares (Mistral-7B docs average ~465 MiB of
+        // KV each): GPU fits ~17 docs, host ~400.
+        cfg.cache.gpu_bytes = 8 * (1 << 30);
+        cfg.cache.host_bytes = 192 * (1 << 30);
+        cfg
+    }
+
+    fn run_kind(kind: &str, rate: f64, n: usize) -> SimOutcome {
+        let corpus = Corpus::wikipedia_like(2_000, 1);
+        let trace = Trace::generate(&MMLU, &corpus, rate, n, 2, 11);
+        let server = SimServer::build(
+            &cfg_for(kind),
+            trace,
+            2_000,
+            RetrievalTiming::default(),
+            5,
+        )
+        .unwrap();
+        server.run()
+    }
+
+    #[test]
+    fn all_requests_complete_all_systems() {
+        for kind in ["ragcache", "vllm", "sglang"] {
+            let out = run_kind(kind, 0.3, 40);
+            assert_eq!(out.completed, 40, "{kind}");
+            assert_eq!(out.recorder.ttft().len(), 40, "{kind}");
+        }
+    }
+
+    #[test]
+    fn ragcache_beats_vllm_ttft() {
+        // The headline (Fig. 13): document caching cuts mean TTFT.
+        let rag = run_kind("ragcache", 0.5, 120);
+        let vllm = run_kind("vllm", 0.5, 120);
+        let t_rag = rag.recorder.ttft().mean();
+        let t_vllm = vllm.recorder.ttft().mean();
+        assert!(
+            t_rag < t_vllm,
+            "ragcache {t_rag} should beat vllm {t_vllm}"
+        );
+        assert!(rag.recorder.hit_rate() > 0.2, "hit rate materialises");
+        assert_eq!(vllm.recorder.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn ragcache_beats_sglang_under_memory_pressure() {
+        let rag = run_kind("ragcache", 0.5, 120);
+        let sglang = run_kind("sglang", 0.5, 120);
+        let t_rag = rag.recorder.ttft().mean();
+        let t_sg = sglang.recorder.ttft().mean();
+        assert!(
+            t_rag <= t_sg * 1.05,
+            "ragcache {t_rag} vs sglang {t_sg}"
+        );
+        // SGLang's GPU-only cache yields a lower hit rate.
+        assert!(
+            rag.recorder.hit_rate() >= sglang.recorder.hit_rate(),
+            "multilevel cache wins on hit rate"
+        );
+    }
+
+    #[test]
+    fn speculation_counters_populate() {
+        let out = run_kind("ragcache", 0.2, 50);
+        assert!(out.spec_started >= 50);
+        // Baselines never speculate.
+        let v = run_kind("vllm", 0.2, 20);
+        assert_eq!(v.spec_wasted, 0);
+    }
+
+    #[test]
+    fn sched_time_sub_millisecond() {
+        // Table 4: controller decisions stay below 1 ms.
+        let out = run_kind("ragcache", 0.5, 60);
+        assert!(
+            out.mean_sched_time < 1e-3,
+            "mean sched {}",
+            out.mean_sched_time
+        );
+    }
+
+    #[test]
+    fn tree_invariants_hold_after_run() {
+        let corpus = Corpus::wikipedia_like(500, 2);
+        let trace = Trace::generate(&MMLU, &corpus, 1.0, 80, 2, 13);
+        let mut cfg = cfg_for("ragcache");
+        cfg.cache.gpu_bytes = 128 * 1024 * 1024; // force heavy eviction
+        cfg.cache.host_bytes = 512 * 1024 * 1024;
+        let server = SimServer::build(
+            &cfg,
+            trace,
+            500,
+            RetrievalTiming::default(),
+            7,
+        )
+        .unwrap();
+        // run() consumes; re-build a server to inspect the tree. Instead:
+        // rely on counters + completion as the observable signal here;
+        // invariants themselves are property-tested in tree::tests.
+        let out = server.run();
+        assert_eq!(out.completed, 80);
+        let c = out.tree_counters.unwrap();
+        assert!(c.gpu_evictions > 0, "eviction exercised: {c:?}");
+    }
+}

@@ -1,0 +1,121 @@
+//! Synthetic embedding model (replaces OpenAI text-embedding-3-small).
+//!
+//! Documents get deterministic, seed-derived Gaussian embeddings; queries
+//! targeting a document are its embedding plus controlled noise. This
+//! imposes a well-defined nearest-neighbour structure so the retrieval
+//! layer behaves like the paper's setup while the *access pattern* (which
+//! document each request targets) is imposed by the workload sampler —
+//! matching the paper's observation (Fig. 6) that the skew is a property
+//! of the question distribution, not of the embedding model.
+//!
+//! Three "embedding model" variants (different seeds → different geometry)
+//! reproduce Fig. 6a's embedding-model sweep.
+
+use crate::util::Rng;
+
+/// Deterministic embedding generator.
+#[derive(Debug, Clone)]
+pub struct EmbeddingModel {
+    dim: usize,
+    seed: u64,
+}
+
+impl EmbeddingModel {
+    pub fn new(dim: usize, seed: u64) -> Self {
+        assert!(dim > 0);
+        EmbeddingModel { dim, seed }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// The embedding of document `id` — unit-normalised Gaussian,
+    /// deterministic in `(seed, id)`.
+    pub fn document(&self, id: u32) -> Vec<f32> {
+        let mut rng = Rng::new(
+            self.seed
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(id as u64),
+        );
+        let mut v: Vec<f32> =
+            (0..self.dim).map(|_| rng.gaussian() as f32).collect();
+        normalize(&mut v);
+        v
+    }
+
+    /// A query embedding aimed at `target`: the document embedding plus
+    /// isotropic noise of relative scale `noise` (0 = exact hit).
+    pub fn query(&self, target: u32, noise: f64, rng: &mut Rng) -> Vec<f32> {
+        let mut v = self.document(target);
+        for x in v.iter_mut() {
+            *x += (rng.gaussian() * noise) as f32;
+        }
+        normalize(&mut v);
+        v
+    }
+}
+
+fn normalize(v: &mut [f32]) {
+    let norm: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+    if norm > 0.0 {
+        for x in v.iter_mut() {
+            *x /= norm;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vectordb::distance::l2_sq;
+
+    #[test]
+    fn deterministic_embeddings() {
+        let em = EmbeddingModel::new(32, 1);
+        assert_eq!(em.document(5), em.document(5));
+        assert_ne!(em.document(5), em.document(6));
+    }
+
+    #[test]
+    fn embeddings_unit_norm() {
+        let em = EmbeddingModel::new(16, 2);
+        for id in [0u32, 7, 1000] {
+            let v = em.document(id);
+            let n: f32 = v.iter().map(|x| x * x).sum();
+            assert!((n - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn zero_noise_query_is_exact() {
+        let em = EmbeddingModel::new(16, 3);
+        let mut rng = Rng::new(1);
+        let q = em.query(9, 0.0, &mut rng);
+        assert!(l2_sq(&q, &em.document(9)) < 1e-10);
+    }
+
+    #[test]
+    fn noisy_query_still_nearest_to_target() {
+        let em = EmbeddingModel::new(32, 4);
+        let mut rng = Rng::new(2);
+        for target in [1u32, 50, 200] {
+            let q = em.query(target, 0.05, &mut rng);
+            let d_target = l2_sq(&q, &em.document(target));
+            // Closer to the target than to 50 random other docs.
+            for other in 0..50u32 {
+                if other == target {
+                    continue;
+                }
+                assert!(d_target < l2_sq(&q, &em.document(other)));
+            }
+        }
+    }
+
+    #[test]
+    fn different_seeds_give_different_geometry() {
+        let a = EmbeddingModel::new(16, 1).document(3);
+        let b = EmbeddingModel::new(16, 2).document(3);
+        assert!(l2_sq(&a, &b) > 0.1);
+    }
+}

@@ -1,0 +1,107 @@
+//! Real KV payloads for the PJRT-backed path.
+//!
+//! In simulated mode nodes carry no bytes — only accounting. In real mode
+//! each knowledge-tree node owns the token-major KV rows its document
+//! produced (`tokens × kv_floats_per_token` f32), and assembling a prefix
+//! is concatenation in path order — which is why the model's KV layout is
+//! token-major (see `python/compile/model.py`).
+
+use std::sync::Arc;
+
+/// Immutable, shareable KV rows for one document (token-major).
+#[derive(Debug, Clone)]
+pub struct KvPayload {
+    data: Arc<Vec<f32>>,
+    tokens: usize,
+}
+
+impl KvPayload {
+    pub fn new(data: Vec<f32>, tokens: usize) -> Self {
+        assert!(
+            tokens == 0 || data.len() % tokens == 0,
+            "payload not token-divisible"
+        );
+        KvPayload {
+            data: Arc::new(data),
+            tokens,
+        }
+    }
+
+    pub fn empty() -> Self {
+        KvPayload {
+            data: Arc::new(Vec::new()),
+            tokens: 0,
+        }
+    }
+
+    pub fn tokens(&self) -> usize {
+        self.tokens
+    }
+
+    pub fn floats(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens == 0
+    }
+
+    /// Split a prefill output covering several documents into per-document
+    /// payloads, in order.
+    pub fn split(
+        data: &[f32],
+        token_counts: &[usize],
+    ) -> Vec<KvPayload> {
+        let total: usize = token_counts.iter().sum();
+        assert!(total > 0 && data.len() % total == 0, "bad split");
+        let per_token = data.len() / total;
+        let mut out = Vec::with_capacity(token_counts.len());
+        let mut offset = 0;
+        for &t in token_counts {
+            let end = offset + t * per_token;
+            out.push(KvPayload::new(data[offset..end].to_vec(), t));
+            offset = end;
+        }
+        out
+    }
+
+    /// Concatenate payloads in path order into one prefix buffer.
+    pub fn concat(parts: &[&KvPayload]) -> Vec<f32> {
+        let total: usize = parts.iter().map(|p| p.data.len()).sum();
+        let mut out = Vec::with_capacity(total);
+        for p in parts {
+            out.extend_from_slice(&p.data);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_roundtrips_concat() {
+        let per_token = 4;
+        let data: Vec<f32> = (0..24).map(|x| x as f32).collect(); // 6 tokens
+        let parts = KvPayload::split(&data, &[2, 3, 1]);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0].tokens(), 2);
+        assert_eq!(parts[0].floats().len(), 2 * per_token);
+        let refs: Vec<&KvPayload> = parts.iter().collect();
+        assert_eq!(KvPayload::concat(&refs), data);
+    }
+
+    #[test]
+    fn empty_payload() {
+        let p = KvPayload::empty();
+        assert!(p.is_empty());
+        assert_eq!(KvPayload::concat(&[&p]), Vec::<f32>::new());
+    }
+
+    #[test]
+    #[should_panic(expected = "bad split")]
+    fn split_rejects_misaligned() {
+        KvPayload::split(&[1.0; 10], &[3]);
+    }
+}

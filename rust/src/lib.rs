@@ -1,0 +1,62 @@
+//! # RAGCache
+//!
+//! A reproduction of *RAGCache: Efficient Knowledge Caching for
+//! Retrieval-Augmented Generation* (Jin et al., 2024) as a three-layer
+//! Rust + JAX + Pallas serving stack.
+//!
+//! The library is organised as a deployable serving framework:
+//!
+//! - [`controller`] — the global RAG controller (the paper's system
+//!   contribution): request lifecycle, knowledge-tree cache orchestration,
+//!   cache-aware reordering and dynamic speculative pipelining.
+//! - [`tree`] — the knowledge tree: a prefix tree over document IDs whose
+//!   nodes hold KV-cache block handles, partitioned into GPU / host / free
+//!   segments.
+//! - [`policy`] — replacement policies: the paper's PGDSF plus the GDSF,
+//!   LRU and LFU baselines used in the ablation (§7.3).
+//! - [`kvcache`] — paged KV-cache block allocator with a two-tier
+//!   (GPU/host) hierarchy, swap-out-only-once semantics and a PCIe
+//!   transfer model.
+//! - [`llm`] — model/GPU specifications (paper Table 1), the analytic
+//!   prefill/decode cost model, the offline `(alpha, beta)` profiler, and
+//!   the iteration-level batching engine with pluggable executors.
+//! - [`vectordb`] — the retrieval substrate: FlatL2 / IVF / HNSW indexes
+//!   with *staged* search used by speculative pipelining.
+//! - [`spec`] — dynamic speculative pipelining (paper Algorithm 2).
+//! - [`sched`] — cache-aware reordering queue (§5.2).
+//! - [`runtime`] — PJRT wrapper that loads AOT-compiled HLO artifacts
+//!   produced by the Python compile path and executes them on CPU.
+//! - [`workload`] — synthetic corpora, QA-dataset access patterns and
+//!   Poisson arrival processes reproducing the paper's traces (§3.2, §7).
+//! - [`baselines`] — vLLM-like and SGLang-like system configurations.
+//! - [`sim`] — discrete-event simulation clock; the controller runs
+//!   identically against the virtual clock (paper-scale experiments) and
+//!   the real clock (end-to-end PJRT serving).
+//!
+//! Build-time Python (never on the request path) lives under `python/`:
+//! the Pallas prefix-attention kernel (L1) and the JAX transformer (L2)
+//! are AOT-lowered to HLO text that [`runtime`] loads.
+
+pub mod util;
+pub mod config;
+pub mod testing;
+pub mod sim;
+pub mod bench;
+pub mod cli;
+pub mod runtime;
+pub mod vectordb;
+pub mod embed;
+pub mod kvcache;
+pub mod policy;
+pub mod tree;
+pub mod llm;
+pub mod workload;
+pub mod metrics;
+pub mod sched;
+pub mod spec;
+pub mod controller;
+pub mod baselines;
+pub mod server;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,474 @@
+//! Iteration-level batching engine (vLLM/Orca-style continuous batching).
+//!
+//! The engine is *stepped* by the controller: `plan()` yields the next
+//! iteration (a prefill batch or a decode batch) with its duration from
+//! the cost model; the controller advances its clock (virtual or real)
+//! and calls `complete()` to collect sequence events. One iteration is
+//! either prefill or decode, matching vLLM v0.3's scheduler that the
+//! paper builds on; aborts (from speculative pipelining) take effect at
+//! iteration boundaries — Algorithm 2 "terminate after the current
+//! iteration".
+
+use super::cost_model::CostModel;
+use std::collections::VecDeque;
+
+/// A sequence admitted for prefill.
+#[derive(Debug, Clone)]
+pub struct SeqSpec {
+    pub id: u64,
+    /// Cached tokens (skipped in prefill).
+    pub alpha: usize,
+    /// Tokens to prefill (documents not cached + question).
+    pub beta: usize,
+    /// Total output tokens (>= 1; the first comes out of prefill).
+    pub output_tokens: usize,
+    /// Extra time charged to this sequence's prefill iteration, seconds —
+    /// host→GPU KV loading for cache hits (§3.2 cache-hit latency).
+    pub extra_time: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IterKind {
+    Prefill,
+    Decode,
+}
+
+/// One engine iteration, planned but not yet completed.
+#[derive(Debug, Clone)]
+pub struct IterationPlan {
+    pub kind: IterKind,
+    pub seq_ids: Vec<u64>,
+    /// Modelled duration, seconds.
+    pub duration: f64,
+}
+
+/// Sequence lifecycle events emitted at iteration completion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeqEvent {
+    /// First token produced (end of prefill) — the TTFT point. Also
+    /// emitted for sequences aborted mid-prefill: the iteration ran to
+    /// completion, so their KV exists and the controller may cache it
+    /// (the paper's Theorem 5.1 case 4 — wrong speculation still only
+    /// used otherwise-idle resources, and its document KV is valid).
+    FirstToken { id: u64 },
+    /// All output tokens produced.
+    Finished { id: u64 },
+}
+
+/// Result of an abort request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AbortOutcome {
+    /// Removed before doing (more) work; no further events.
+    Removed,
+    /// The sequence is inside the in-flight prefill iteration; it will
+    /// finish that iteration (emitting `FirstToken`) and then stop —
+    /// Algorithm 2's "terminate after the current iteration".
+    Deferred,
+    NotFound,
+}
+
+#[derive(Debug, Clone)]
+struct DecodeState {
+    id: u64,
+    context: usize,
+    generated: usize,
+    output_tokens: usize,
+}
+
+/// The batching engine.
+pub struct Engine {
+    cost: CostModel,
+    max_batch: usize,
+    max_prefill_tokens: usize,
+    waiting: VecDeque<SeqSpec>,
+    decoding: Vec<DecodeState>,
+    in_flight: Option<IterationPlan>,
+    /// Sequences to drop when the in-flight iteration completes.
+    kill_after_iter: Vec<u64>,
+}
+
+impl Engine {
+    pub fn new(
+        cost: CostModel,
+        max_batch: usize,
+        max_prefill_tokens: usize,
+    ) -> Self {
+        Engine {
+            cost,
+            max_batch: max_batch.max(1),
+            max_prefill_tokens: max_prefill_tokens.max(1),
+            waiting: VecDeque::new(),
+            decoding: Vec::new(),
+            in_flight: None,
+            kill_after_iter: Vec::new(),
+        }
+    }
+
+    pub fn cost_model(&self) -> &CostModel {
+        &self.cost
+    }
+
+    /// Admit a sequence for prefill (the controller's scheduler decides
+    /// admission order — see `sched::ReorderQueue`).
+    pub fn admit(&mut self, seq: SeqSpec) {
+        self.waiting.push_back(seq);
+    }
+
+    /// Sequences waiting for prefill (Algorithm 2's "pool").
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn decoding_len(&self) -> usize {
+        self.decoding.len()
+    }
+
+    /// Whether the engine has nothing to do and nothing in flight.
+    pub fn is_idle(&self) -> bool {
+        self.waiting.is_empty()
+            && self.decoding.is_empty()
+            && self.in_flight.is_none()
+    }
+
+    /// Abort a sequence wherever it is. A sequence inside the in-flight
+    /// *prefill* iteration finishes that iteration first (Algorithm 2:
+    /// "terminate the incorrect speculative generation after the current
+    /// LLM iteration, which does not affect other requests in the
+    /// batch") — its `FirstToken` still fires so the computed KV can be
+    /// cached; it is then dropped before decoding.
+    pub fn abort(&mut self, id: u64) -> AbortOutcome {
+        if let Some(pos) = self.waiting.iter().position(|s| s.id == id) {
+            self.waiting.remove(pos);
+            return AbortOutcome::Removed;
+        }
+        if let Some(plan) = &self.in_flight {
+            if plan.kind == IterKind::Prefill && plan.seq_ids.contains(&id)
+            {
+                self.kill_after_iter.push(id);
+                return AbortOutcome::Deferred;
+            }
+        }
+        if let Some(pos) = self.decoding.iter().position(|s| s.id == id) {
+            self.decoding.remove(pos);
+            return AbortOutcome::Removed;
+        }
+        AbortOutcome::NotFound
+    }
+
+    /// True when the in-flight iteration consists solely of aborted
+    /// sequences — §5.3's batch-size-one case, where the paper terminates
+    /// the incorrect speculation *immediately* rather than letting the
+    /// iteration finish ("we can immediately terminate any incorrect
+    /// speculative generation request").
+    pub fn in_flight_fully_killed(&self) -> bool {
+        match &self.in_flight {
+            Some(p) if p.kind == IterKind::Prefill => p
+                .seq_ids
+                .iter()
+                .all(|id| self.kill_after_iter.contains(id)),
+            _ => false,
+        }
+    }
+
+    /// Cancel the in-flight iteration outright (only meaningful when
+    /// [`Engine::in_flight_fully_killed`]): partial work is discarded, the
+    /// sequences are dropped, and the engine is immediately free. Returns
+    /// the cancelled sequence ids.
+    pub fn cancel_in_flight(&mut self) -> Vec<u64> {
+        let Some(plan) = self.in_flight.take() else {
+            return Vec::new();
+        };
+        for id in &plan.seq_ids {
+            self.decoding.retain(|d| d.id != *id);
+        }
+        self.kill_after_iter.clear();
+        plan.seq_ids
+    }
+
+    /// Plan the next iteration. Returns None if idle or an iteration is
+    /// already in flight.
+    pub fn plan(&mut self) -> Option<IterationPlan> {
+        if self.in_flight.is_some() {
+            return None;
+        }
+        // Prefill takes precedence when batch slots are free (vLLM v0.3
+        // prioritises waiting prefills to keep the batch full).
+        let free_slots = self.max_batch.saturating_sub(self.decoding.len());
+        if !self.waiting.is_empty() && free_slots > 0 {
+            let mut jobs = Vec::new();
+            let mut ids = Vec::new();
+            let mut tokens = 0usize;
+            let mut extra = 0.0f64;
+            while jobs.len() < free_slots {
+                let Some(front) = self.waiting.front() else {
+                    break;
+                };
+                if !jobs.is_empty()
+                    && tokens + front.beta > self.max_prefill_tokens
+                {
+                    break;
+                }
+                let seq = self.waiting.pop_front().unwrap();
+                tokens += seq.beta;
+                extra += seq.extra_time;
+                jobs.push((seq.alpha, seq.beta));
+                ids.push(seq.id);
+                self.decoding.push(DecodeState {
+                    id: seq.id,
+                    context: seq.alpha + seq.beta,
+                    generated: 0,
+                    output_tokens: seq.output_tokens,
+                });
+            }
+            let duration = self.cost.prefill_batch_time(&jobs) + extra;
+            let plan = IterationPlan {
+                kind: IterKind::Prefill,
+                seq_ids: ids,
+                duration,
+            };
+            self.in_flight = Some(plan.clone());
+            return Some(plan);
+        }
+        if !self.decoding.is_empty() {
+            let ctxs: Vec<usize> =
+                self.decoding.iter().map(|d| d.context).collect();
+            let duration = self.cost.decode_step_time(&ctxs);
+            let plan = IterationPlan {
+                kind: IterKind::Decode,
+                seq_ids: self.decoding.iter().map(|d| d.id).collect(),
+                duration,
+            };
+            self.in_flight = Some(plan.clone());
+            return Some(plan);
+        }
+        None
+    }
+
+    /// Complete the in-flight iteration, emitting sequence events.
+    pub fn complete(&mut self) -> Vec<SeqEvent> {
+        let Some(plan) = self.in_flight.take() else {
+            return Vec::new();
+        };
+        let mut events = Vec::new();
+        match plan.kind {
+            IterKind::Prefill => {
+                for &id in &plan.seq_ids {
+                    let Some(d) =
+                        self.decoding.iter_mut().find(|d| d.id == id)
+                    else {
+                        continue;
+                    };
+                    d.generated = 1;
+                    // FirstToken fires even for kill-after-iteration
+                    // sequences: the prefill ran, the KV is real.
+                    events.push(SeqEvent::FirstToken { id });
+                }
+                let killed = std::mem::take(&mut self.kill_after_iter);
+                // Drop killed sequences (no Finished event), then finish
+                // single-token outputs (MMLU) at prefill.
+                self.decoding.retain(|d| {
+                    if killed.contains(&d.id) {
+                        return false;
+                    }
+                    if plan.seq_ids.contains(&d.id)
+                        && d.generated >= d.output_tokens
+                    {
+                        events.push(SeqEvent::Finished { id: d.id });
+                        false
+                    } else {
+                        true
+                    }
+                });
+            }
+            IterKind::Decode => {
+                for d in self.decoding.iter_mut() {
+                    d.generated += 1;
+                    d.context += 1;
+                }
+                self.decoding.retain(|d| {
+                    if d.generated >= d.output_tokens {
+                        events.push(SeqEvent::Finished { id: d.id });
+                        false
+                    } else {
+                        true
+                    }
+                });
+            }
+        }
+        events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llm::models::{A10G, MISTRAL_7B};
+
+    fn engine(max_batch: usize) -> Engine {
+        Engine::new(
+            CostModel::new(MISTRAL_7B, A10G),
+            max_batch,
+            16384,
+        )
+    }
+
+    fn seq(id: u64, beta: usize, out: usize) -> SeqSpec {
+        SeqSpec {
+            id,
+            alpha: 0,
+            beta,
+            output_tokens: out,
+            extra_time: 0.0,
+        }
+    }
+
+    #[test]
+    fn single_token_output_finishes_at_prefill() {
+        let mut e = engine(4);
+        e.admit(seq(1, 100, 1));
+        let plan = e.plan().unwrap();
+        assert_eq!(plan.kind, IterKind::Prefill);
+        assert!(plan.duration > 0.0);
+        let events = e.complete();
+        assert!(events.contains(&SeqEvent::FirstToken { id: 1 }));
+        assert!(events.contains(&SeqEvent::Finished { id: 1 }));
+        assert!(e.is_idle());
+    }
+
+    #[test]
+    fn multi_token_output_decodes() {
+        let mut e = engine(4);
+        e.admit(seq(1, 50, 3));
+        e.plan().unwrap();
+        let ev = e.complete();
+        assert_eq!(ev, vec![SeqEvent::FirstToken { id: 1 }]);
+        // Two more decode iterations to finish.
+        let p = e.plan().unwrap();
+        assert_eq!(p.kind, IterKind::Decode);
+        assert!(e.complete().is_empty());
+        e.plan().unwrap();
+        let ev = e.complete();
+        assert_eq!(ev, vec![SeqEvent::Finished { id: 1 }]);
+        assert!(e.is_idle());
+    }
+
+    #[test]
+    fn batch_cap_respected() {
+        let mut e = engine(2);
+        for i in 0..5 {
+            e.admit(seq(i, 10, 2));
+        }
+        let p = e.plan().unwrap();
+        assert_eq!(p.seq_ids.len(), 2, "prefill batch capped");
+        e.complete();
+        // Batch is now full of decoders; next iteration must be decode.
+        let p2 = e.plan().unwrap();
+        assert_eq!(p2.kind, IterKind::Decode);
+        e.complete(); // both finish (out=2)
+        let p3 = e.plan().unwrap();
+        assert_eq!(p3.kind, IterKind::Prefill);
+        assert_eq!(p3.seq_ids.len(), 2);
+    }
+
+    #[test]
+    fn prefill_token_budget_limits_batch() {
+        let mut e = Engine::new(
+            CostModel::new(MISTRAL_7B, A10G),
+            8,
+            1000,
+        );
+        e.admit(seq(1, 800, 1));
+        e.admit(seq(2, 800, 1));
+        let p = e.plan().unwrap();
+        assert_eq!(p.seq_ids, vec![1], "token budget splits prefills");
+        e.complete();
+        let p2 = e.plan().unwrap();
+        assert_eq!(p2.seq_ids, vec![2]);
+    }
+
+    #[test]
+    fn abort_waiting_and_decoding() {
+        let mut e = engine(4);
+        e.admit(seq(1, 10, 5));
+        e.admit(seq(2, 10, 5));
+        assert_eq!(e.abort(2), AbortOutcome::Removed, "from waiting");
+        e.plan().unwrap();
+        e.complete();
+        assert_eq!(e.abort(1), AbortOutcome::Removed, "from decoding");
+        assert!(e.is_idle());
+        assert_eq!(e.abort(99), AbortOutcome::NotFound);
+    }
+
+    #[test]
+    fn abort_in_flight_prefill_is_deferred_and_caches() {
+        let mut e = engine(4);
+        e.admit(seq(1, 10, 5));
+        e.plan().unwrap();
+        assert_eq!(e.abort(1), AbortOutcome::Deferred);
+        assert!(e.in_flight_fully_killed());
+        // Completing the iteration still emits FirstToken (KV is real),
+        // then the sequence is gone.
+        let ev = e.complete();
+        assert_eq!(ev, vec![SeqEvent::FirstToken { id: 1 }]);
+        assert!(e.is_idle());
+    }
+
+    #[test]
+    fn cancel_in_flight_discards_work() {
+        let mut e = engine(4);
+        e.admit(seq(1, 10, 5));
+        e.plan().unwrap();
+        assert_eq!(e.abort(1), AbortOutcome::Deferred);
+        let cancelled = e.cancel_in_flight();
+        assert_eq!(cancelled, vec![1]);
+        assert!(e.is_idle());
+        assert!(e.complete().is_empty(), "no residue events");
+    }
+
+    #[test]
+    fn shared_batch_not_fully_killed() {
+        let mut e = engine(4);
+        e.admit(seq(1, 10, 5));
+        e.admit(seq(2, 10, 5));
+        e.plan().unwrap();
+        assert_eq!(e.abort(1), AbortOutcome::Deferred);
+        assert!(
+            !e.in_flight_fully_killed(),
+            "seq 2 still needs the iteration"
+        );
+        let ev = e.complete();
+        assert!(ev.contains(&SeqEvent::FirstToken { id: 1 }));
+        assert!(ev.contains(&SeqEvent::FirstToken { id: 2 }));
+        assert_eq!(e.decoding_len(), 1, "killed seq dropped, other stays");
+    }
+
+    #[test]
+    fn plan_none_while_in_flight() {
+        let mut e = engine(4);
+        e.admit(seq(1, 10, 2));
+        assert!(e.plan().is_some());
+        assert!(e.plan().is_none(), "no overlapping iterations");
+        e.complete();
+        assert!(e.plan().is_some());
+    }
+
+    #[test]
+    fn cached_alpha_shortens_prefill() {
+        let mut e = engine(4);
+        e.admit(SeqSpec {
+            id: 1,
+            alpha: 4000,
+            beta: 32,
+            output_tokens: 1,
+            extra_time: 0.0,
+        });
+        let cached = e.plan().unwrap().duration;
+        e.complete();
+        e.admit(seq(2, 4032, 1));
+        let full = e.plan().unwrap().duration;
+        assert!(
+            full / cached > 3.0,
+            "caching speedup: full {full} vs cached {cached}"
+        );
+    }
+}

@@ -1,0 +1,14 @@
+//! LLM engine layer: model/GPU specifications, the analytic cost model
+//! standing in for the paper's A10G/H800 testbeds, the offline
+//! `(alpha, beta)` profiler PGDSF interpolates over, a byte-level
+//! tokenizer, and the iteration-level batching engine.
+
+pub mod models;
+pub mod cost_model;
+pub mod tokenizer;
+pub mod engine;
+
+pub use cost_model::{CostModel, CostProfile};
+pub use engine::{Engine, IterKind, IterationPlan, SeqEvent, SeqSpec};
+pub use models::{GpuSpec, ModelSpec};
+pub use tokenizer::ByteTokenizer;

@@ -1,0 +1,84 @@
+//! Byte-level tokenizer for the PJRT-backed end-to-end path.
+//!
+//! The tiny models have a 512-token vocabulary: 256 byte values, a few
+//! specials, and the rest reserved. Deterministic, lossless for ASCII/UTF-8
+//! text, no external vocabulary files.
+
+/// Special token ids.
+pub const BOS: i32 = 256;
+pub const EOS: i32 = 257;
+pub const SEP: i32 = 258;
+pub const PAD: i32 = 0;
+
+/// Byte-level tokenizer (vocab 512).
+#[derive(Debug, Clone, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn new() -> Self {
+        ByteTokenizer
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        512
+    }
+
+    /// Encode text as raw bytes (no specials).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.bytes().map(|b| b as i32).collect()
+    }
+
+    /// Encode with BOS prefix.
+    pub fn encode_with_bos(&self, text: &str) -> Vec<i32> {
+        let mut v = vec![BOS];
+        v.extend(self.encode(text));
+        v
+    }
+
+    /// Decode token ids back to text; specials are dropped, invalid UTF-8
+    /// is replaced.
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .filter(|&&t| (0..256).contains(&t))
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer::new();
+        let s = "RAGCache caches knowledge!";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = ByteTokenizer::new();
+        let s = "héllo 世界";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn specials_dropped_on_decode() {
+        let t = ByteTokenizer::new();
+        let mut toks = t.encode_with_bos("hi");
+        toks.push(EOS);
+        assert_eq!(t.decode(&toks), "hi");
+        assert_eq!(toks[0], BOS);
+    }
+
+    #[test]
+    fn all_ids_in_vocab() {
+        let t = ByteTokenizer::new();
+        for tok in t.encode_with_bos("any ütf8 ẗext") {
+            assert!((0..512).contains(&tok));
+        }
+    }
+}

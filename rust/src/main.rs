@@ -1,0 +1,303 @@
+//! `ragcache` — the serving binary.
+//!
+//! Subcommands:
+//! - `serve`     start the PJRT-backed server on a TCP port
+//! - `simulate`  run a paper-scale simulation and print metrics
+//! - `info`      show models, GPUs, datasets and artifact status
+
+use anyhow::{anyhow, Context, Result};
+use ragcache::cli::Args;
+use ragcache::config::SystemConfig;
+use ragcache::controller::real::{RealConfig, RealServer};
+use ragcache::controller::{RetrievalTiming, SimServer};
+use ragcache::embed::EmbeddingModel;
+use ragcache::llm::models::{ALL_GPUS, ALL_MODELS};
+use ragcache::llm::ByteTokenizer;
+use ragcache::runtime::{ArtifactManifest, PjrtModel};
+use ragcache::server::{proto, QueryHandler, Server};
+use ragcache::util::Rng;
+use ragcache::vectordb::{FlatIndex, VectorIndex};
+use ragcache::workload::{datasets::DatasetProfile, Corpus, Trace};
+use std::path::Path;
+
+const USAGE: &str = "\
+ragcache <command> [options]
+
+commands:
+  serve      --port 7771 --model tiny-gqa --docs 256 [--artifacts DIR]
+  simulate   --system ragcache|vllm|sglang --dataset mmlu --rate 0.8
+             --requests 500 [--config FILE] [--model NAME] [--seed N]
+  info       show models, GPUs, datasets, artifact status
+";
+
+fn main() {
+    logger_init();
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    }
+    let args = match Args::parse(&raw, &["verbose", "no-reorder", "no-spec"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    let result = match cmd {
+        "serve" => cmd_serve(&args),
+        "simulate" => cmd_simulate(&args),
+        "info" => cmd_info(),
+        _ => {
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn logger_init() {
+    // Minimal logger: RUST_LOG=debug enables debug prints to stderr.
+    struct L;
+    impl log::Log for L {
+        fn enabled(&self, m: &log::Metadata) -> bool {
+            m.level() <= log::max_level()
+        }
+        fn log(&self, r: &log::Record) {
+            if self.enabled(r.metadata()) {
+                eprintln!("[{}] {}", r.level(), r.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    static LOGGER: L = L;
+    let _ = log::set_logger(&LOGGER);
+    let level = std::env::var("RUST_LOG").unwrap_or_default();
+    log::set_max_level(match level.as_str() {
+        "debug" => log::LevelFilter::Debug,
+        "trace" => log::LevelFilter::Trace,
+        "" | "info" => log::LevelFilter::Info,
+        _ => log::LevelFilter::Warn,
+    });
+}
+
+/// The PJRT-backed handler for `ragcache serve`.
+pub struct RealHandler {
+    server: RealServer,
+    cfg: RealConfig,
+    tok: ByteTokenizer,
+}
+
+impl QueryHandler for RealHandler {
+    fn query(
+        &mut self,
+        target_doc: u32,
+        query: &str,
+        max_new: usize,
+    ) -> Result<proto::QueryResult> {
+        let toks = self.tok.encode(query);
+        let resp = self.server.serve(
+            target_doc,
+            &toks,
+            max_new.clamp(1, 16),
+            &self.cfg,
+        )?;
+        Ok(proto::QueryResult {
+            id: resp.id,
+            docs: resp.docs,
+            docs_hit: resp.docs_hit,
+            cached_tokens: resp.cached_tokens,
+            computed_tokens: resp.computed_tokens,
+            ttft_ms: resp.ttft * 1e3,
+            total_ms: resp.total * 1e3,
+            text: self.tok.decode(&resp.output_tokens),
+        })
+    }
+
+    fn stats(&self) -> proto::StatsResult {
+        let r = self.server.recorder();
+        proto::StatsResult {
+            requests: r.len(),
+            mean_ttft_ms: r.ttft().mean() * 1e3,
+            hit_rate: r.hit_rate(),
+        }
+    }
+}
+
+/// Build the real serving stack from artifacts + a synthetic tiny corpus.
+pub fn build_real_handler(
+    artifacts: &Path,
+    model_name: &str,
+    num_docs: usize,
+    seed: u64,
+) -> Result<RealHandler> {
+    let manifest = ArtifactManifest::load(artifacts)?;
+    let mm = manifest.model(model_name)?;
+    let model = PjrtModel::load(mm)?;
+    let corpus = Corpus::tiny(num_docs, seed);
+    let tok = ByteTokenizer::new();
+    let mut rng = Rng::new(seed);
+    // Document token ids: random bytes of the corpus-assigned length.
+    let doc_tokens: Vec<Vec<i32>> = (0..num_docs)
+        .map(|d| {
+            (0..corpus.tokens(d as u32))
+                .map(|_| rng.index(256) as i32)
+                .collect()
+        })
+        .collect();
+    let dim = 16;
+    let em = EmbeddingModel::new(dim, seed ^ 0xE);
+    let vecs: Vec<Vec<f32>> =
+        (0..num_docs as u32).map(|d| em.document(d)).collect();
+    let index: Box<dyn VectorIndex> = Box::new(FlatIndex::build(dim, &vecs));
+    let cfg = RealConfig::default();
+    let server = RealServer::new(model, index, em, doc_tokens, &cfg)?;
+    Ok(RealHandler { server, cfg, tok })
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let port: u16 = args.get_parse_or("port", 7771).map_err(|e| anyhow!(e))?;
+    let model = args.get_or("model", "tiny-gqa").to_string();
+    let docs: usize = args.get_parse_or("docs", 256).map_err(|e| anyhow!(e))?;
+    let artifacts = args.get_or("artifacts", "artifacts").to_string();
+    let artifacts_path = std::path::PathBuf::from(&artifacts);
+    if !artifacts_path.join("manifest.json").exists() {
+        return Err(anyhow!(
+            "artifacts missing at {artifacts} (run `make artifacts`)"
+        ));
+    }
+    let server = Server::spawn(port, move || {
+        build_real_handler(&artifacts_path, &model, docs, 42)
+            .context("building real serving stack")
+    })?;
+    println!("ragcache serving on {} ({docs} docs)", server.addr);
+    println!("protocol: newline-delimited JSON; ops: query/stats/shutdown");
+    // Block until the acceptor thread exits (shutdown op).
+    server.join();
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => SystemConfig::from_file(Path::new(path))?,
+        None => SystemConfig::default(),
+    };
+    if let Some(system) = args.get("system") {
+        cfg.kind = ragcache::config::SystemKindField(
+            ragcache::config::SystemKind::parse(system)?,
+        );
+    }
+    if let Some(model) = args.get("model") {
+        cfg.engine.model = model.to_string();
+    }
+    if let Some(dataset) = args.get("dataset") {
+        cfg.workload.dataset = dataset.to_string();
+    }
+    cfg.workload.rate = args
+        .get_parse_or("rate", cfg.workload.rate)
+        .map_err(|e| anyhow!(e))?;
+    cfg.workload.num_requests = args
+        .get_parse_or("requests", cfg.workload.num_requests)
+        .map_err(|e| anyhow!(e))?;
+    let seed: u64 = args.get_parse_or("seed", 42).map_err(|e| anyhow!(e))?;
+    if args.flag("no-reorder") {
+        cfg.sched.reorder = false;
+    }
+    if args.flag("no-spec") {
+        cfg.spec.enabled = false;
+    }
+
+    let profile = DatasetProfile::lookup(&cfg.workload.dataset)?;
+    let corpus = Corpus::wikipedia_like(cfg.workload.num_docs, seed);
+    let trace = Trace::generate(
+        profile,
+        &corpus,
+        cfg.workload.rate,
+        cfg.workload.num_requests,
+        cfg.retrieval.top_k,
+        seed,
+    );
+    let server = SimServer::build(
+        &cfg,
+        trace,
+        cfg.workload.num_docs,
+        RetrievalTiming::default(),
+        seed,
+    )?;
+    let out = server.run();
+    let mut ttft = out.recorder.ttft();
+    println!(
+        "system={} model={} dataset={} rate={} requests={}",
+        cfg.kind.name(),
+        cfg.engine.model,
+        cfg.workload.dataset,
+        cfg.workload.rate,
+        cfg.workload.num_requests
+    );
+    println!(
+        "TTFT mean {:.3}s p50 {:.3}s p99 {:.3}s | hit-rate {:.1}% | \
+         throughput {:.2} req/s | sched {:.3}ms",
+        ttft.mean(),
+        ttft.median(),
+        ttft.p99(),
+        out.recorder.hit_rate() * 100.0,
+        out.recorder.throughput(),
+        out.mean_sched_time * 1e3,
+    );
+    if let Some(c) = out.tree_counters {
+        println!(
+            "tree: {} inserts, {} gpu evictions ({} zero-copy), {} host \
+             evictions, {} swapped out",
+            c.inserts,
+            c.gpu_evictions,
+            c.zero_copy_evictions,
+            c.host_evictions,
+            ragcache::util::fmt_bytes(c.swap_out_bytes),
+        );
+    }
+    println!(
+        "speculation: {} started, {} wasted",
+        out.spec_started, out.spec_wasted
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("models (paper Table 1 + tiny PJRT variants):");
+    for m in ALL_MODELS {
+        println!(
+            "  {:<14} layers={:<3} q/kv={}/{:<3} kv={}/token params={}",
+            m.name,
+            m.n_layers,
+            m.n_q_heads,
+            m.n_kv_heads,
+            ragcache::util::fmt_bytes(m.kv_bytes_per_token as u64),
+            ragcache::util::fmt_bytes(m.params_bytes),
+        );
+    }
+    println!("gpus:");
+    for g in ALL_GPUS {
+        println!(
+            "  {:<8} {:.0} TFLOPS, {:.0} GB/s, {}",
+            g.name,
+            g.peak_flops / 1e12,
+            g.hbm_bps / 1e9,
+            ragcache::util::fmt_bytes(g.memory_bytes),
+        );
+    }
+    println!("datasets: mmlu, nq, hotpotqa, triviaqa");
+    let art = Path::new("artifacts/manifest.json");
+    println!(
+        "artifacts: {}",
+        if art.exists() {
+            "built"
+        } else {
+            "missing (run `make artifacts`)"
+        }
+    );
+    Ok(())
+}

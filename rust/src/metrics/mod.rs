@@ -1,0 +1,271 @@
+//! Serving metrics: TTFT, throughput, hit rate (§7 Metrics).
+
+use crate::util::Summary;
+use std::collections::BTreeMap;
+
+/// Per-request lifecycle timestamps.
+#[derive(Debug, Clone, Default)]
+pub struct RequestRecord {
+    pub arrival: f64,
+    pub retrieval_done: Option<f64>,
+    pub first_token: Option<f64>,
+    pub finished: Option<f64>,
+    /// Retrieved / hit document counts for the §7.3 hit-rate definition.
+    pub docs_retrieved: usize,
+    pub docs_hit: usize,
+    /// Tokens cached (α) vs computed (β) at prefill.
+    pub cached_tokens: usize,
+    pub computed_tokens: usize,
+    /// Non-overlapping vector-search time (Table 3): retrieval time not
+    /// hidden behind LLM work.
+    pub non_overlapped_search: f64,
+    /// Output tokens generated (for TPOT, paper §8).
+    pub output_tokens: usize,
+}
+
+/// Collects per-request records and derives the paper's metrics.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    records: BTreeMap<u64, RequestRecord>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Recorder::default()
+    }
+
+    pub fn arrival(&mut self, id: u64, t: f64) {
+        self.records.entry(id).or_default().arrival = t;
+    }
+
+    pub fn retrieval_done(&mut self, id: u64, t: f64) {
+        self.records.entry(id).or_default().retrieval_done = Some(t);
+    }
+
+    pub fn first_token(&mut self, id: u64, t: f64) {
+        let r = self.records.entry(id).or_default();
+        if r.first_token.is_none() {
+            r.first_token = Some(t);
+        }
+    }
+
+    pub fn finished(&mut self, id: u64, t: f64) {
+        self.records.entry(id).or_default().finished = Some(t);
+    }
+
+    pub fn output_tokens(&mut self, id: u64, n: usize) {
+        self.records.entry(id).or_default().output_tokens = n;
+    }
+
+    pub fn docs(&mut self, id: u64, retrieved: usize, hit: usize) {
+        let r = self.records.entry(id).or_default();
+        r.docs_retrieved = retrieved;
+        r.docs_hit = hit;
+    }
+
+    pub fn tokens(&mut self, id: u64, cached: usize, computed: usize) {
+        let r = self.records.entry(id).or_default();
+        r.cached_tokens = cached;
+        r.computed_tokens = computed;
+    }
+
+    pub fn non_overlapped_search(&mut self, id: u64, secs: f64) {
+        self.records.entry(id).or_default().non_overlapped_search = secs;
+    }
+
+    pub fn record(&self, id: u64) -> Option<&RequestRecord> {
+        self.records.get(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// TTFT summary over completed requests (seconds).
+    pub fn ttft(&self) -> Summary {
+        let mut s = Summary::new();
+        for r in self.records.values() {
+            if let Some(ft) = r.first_token {
+                s.add(ft - r.arrival);
+            }
+        }
+        s
+    }
+
+    /// Time per output token (paper §8): (finish − first token) /
+    /// (output tokens − 1), over requests with ≥ 2 output tokens.
+    pub fn tpot(&self) -> Summary {
+        let mut s = Summary::new();
+        for r in self.records.values() {
+            if let (Some(ft), Some(fin)) = (r.first_token, r.finished) {
+                if r.output_tokens >= 2 {
+                    s.add((fin - ft) / (r.output_tokens - 1) as f64);
+                }
+            }
+        }
+        s
+    }
+
+    /// §7.3 hit rate: hit documents / retrieved documents.
+    pub fn hit_rate(&self) -> f64 {
+        let (mut hit, mut total) = (0usize, 0usize);
+        for r in self.records.values() {
+            hit += r.docs_hit;
+            total += r.docs_retrieved;
+        }
+        if total == 0 {
+            0.0
+        } else {
+            hit as f64 / total as f64
+        }
+    }
+
+    /// Token-level hit rate: cached / (cached + computed).
+    pub fn token_hit_rate(&self) -> f64 {
+        let (mut cached, mut total) = (0usize, 0usize);
+        for r in self.records.values() {
+            cached += r.cached_tokens;
+            total += r.cached_tokens + r.computed_tokens;
+        }
+        if total == 0 {
+            0.0
+        } else {
+            cached as f64 / total as f64
+        }
+    }
+
+    /// Mean non-overlapping vector-search time (Table 3), seconds.
+    pub fn mean_non_overlapped_search(&self) -> f64 {
+        let mut s = Summary::new();
+        for r in self.records.values() {
+            s.add(r.non_overlapped_search);
+        }
+        s.mean()
+    }
+
+    /// Completed-request throughput over the observed span, req/s.
+    pub fn throughput(&self) -> f64 {
+        let mut finishes: Vec<f64> = self
+            .records
+            .values()
+            .filter_map(|r| r.finished)
+            .collect();
+        if finishes.len() < 2 {
+            return 0.0;
+        }
+        finishes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let first_arrival = self
+            .records
+            .values()
+            .map(|r| r.arrival)
+            .fold(f64::INFINITY, f64::min);
+        let span = finishes.last().unwrap() - first_arrival;
+        if span <= 0.0 {
+            0.0
+        } else {
+            finishes.len() as f64 / span
+        }
+    }
+}
+
+/// The paper's throughput definition: the highest request rate whose
+/// average TTFT stays below `slo_factor ×` the TTFT at the lowest rate
+/// (§7 Metrics). Input: (rate, mean TTFT) pairs sorted by rate.
+pub fn slo_throughput(points: &[(f64, f64)], slo_factor: f64) -> f64 {
+    if points.is_empty() {
+        return 0.0;
+    }
+    let baseline = points[0].1;
+    let slo = baseline * slo_factor;
+    let mut best = 0.0;
+    for &(rate, ttft) in points {
+        if ttft <= slo {
+            best = rate;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ttft_and_hit_rate() {
+        let mut r = Recorder::new();
+        r.arrival(1, 0.0);
+        r.first_token(1, 0.5);
+        r.finished(1, 0.6);
+        r.docs(1, 2, 1);
+        r.arrival(2, 1.0);
+        r.first_token(2, 2.5);
+        r.finished(2, 2.6);
+        r.docs(2, 2, 2);
+        let mut ttft = r.ttft();
+        assert_eq!(ttft.len(), 2);
+        assert!((ttft.mean() - 1.0).abs() < 1e-9);
+        assert!((ttft.percentile(100.0) - 1.5).abs() < 1e-9);
+        assert!((r.hit_rate() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn first_token_recorded_once() {
+        let mut r = Recorder::new();
+        r.arrival(1, 0.0);
+        r.first_token(1, 1.0);
+        r.first_token(1, 99.0); // speculative re-delivery ignored
+        assert_eq!(r.record(1).unwrap().first_token, Some(1.0));
+    }
+
+    #[test]
+    fn tpot_over_decode_tokens() {
+        let mut r = Recorder::new();
+        r.arrival(1, 0.0);
+        r.first_token(1, 1.0);
+        r.finished(1, 1.5);
+        r.output_tokens(1, 6); // 5 decode steps over 0.5 s => 0.1 s each
+        r.arrival(2, 0.0);
+        r.first_token(2, 1.0);
+        r.finished(2, 1.0);
+        r.output_tokens(2, 1); // single-token output excluded
+        let mut t = r.tpot();
+        assert_eq!(t.len(), 1);
+        assert!((t.mean() - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn token_hit_rate() {
+        let mut r = Recorder::new();
+        r.arrival(1, 0.0);
+        r.tokens(1, 300, 100);
+        assert!((r.token_hit_rate() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_span() {
+        let mut r = Recorder::new();
+        for i in 0..10u64 {
+            r.arrival(i, i as f64);
+            r.finished(i, i as f64 + 1.0);
+        }
+        // 10 requests finishing between t=1 and t=10, first arrival 0.
+        assert!((r.throughput() - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn slo_throughput_picks_knee() {
+        let points = [
+            (0.5, 0.2),
+            (1.0, 0.3),
+            (1.5, 0.6),
+            (2.0, 1.2), // exceeds 5 * 0.2 = 1.0
+            (2.5, 3.0),
+        ];
+        assert_eq!(slo_throughput(&points, 5.0), 1.5);
+        assert_eq!(slo_throughput(&[], 5.0), 0.0);
+    }
+}

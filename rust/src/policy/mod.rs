@@ -1,0 +1,248 @@
+//! Cache replacement policies: PGDSF (the paper's contribution, §5.1,
+//! Eq. 1–3, Algorithm 1) and the ablation baselines GDSF, LRU, LFU
+//! (§7.3, Fig. 17 / Table 2).
+//!
+//! A policy owns per-node statistics updates and the priority function;
+//! the knowledge tree owns the per-tier logical clocks and the leaf-only
+//! eviction mechanics.
+
+use crate::config::PolicyKind;
+
+/// Per-node statistics a policy reads/writes. Stored inside each
+/// knowledge-tree node.
+#[derive(Debug, Clone, Default)]
+pub struct NodeStats {
+    /// Retrieval count within the current window (Algorithm 1 line 3).
+    pub frequency: u64,
+    /// Σ T(α,β)/β over requests that found this node uncached
+    /// (Algorithm 1 line 10).
+    pub total_cost: f64,
+    /// Count of such requests (line 11).
+    pub num_computed: u64,
+    /// total_cost / num_computed (line 12) — cost per non-cached token.
+    pub avg_cost: f64,
+    /// Wall/virtual time of the last access (for LRU).
+    pub last_access: f64,
+    /// Cached priority (recomputed on access; the clock component is
+    /// frozen at access time, as in GDSF).
+    pub priority: f64,
+}
+
+/// Context of one access, assembled by the controller.
+#[derive(Debug, Clone, Copy)]
+pub struct AccessCtx {
+    /// Cached tokens of the request at the time of access (α).
+    pub alpha: usize,
+    /// Non-cached tokens the request had to compute (β).
+    pub beta: usize,
+    /// Estimated compute time for (α, β) from the offline profile,
+    /// seconds (Algorithm 1 lines 6–9 bilinear interpolation).
+    pub estimated_time: f64,
+    /// Whether this node's KV was already cached when accessed.
+    pub was_cached: bool,
+    /// Access timestamp.
+    pub now: f64,
+    /// Node size in tokens.
+    pub tokens: usize,
+}
+
+/// A replacement policy: stat updates + priority.
+pub trait ReplacementPolicy: Send + Sync {
+    fn kind(&self) -> PolicyKind;
+
+    /// Update `stats` for an access; `clock` is the current logical clock
+    /// of the tier the node resides in (0 for uncached nodes — they are
+    /// about to be inserted into GPU).
+    fn on_access(&self, stats: &mut NodeStats, ctx: &AccessCtx, clock: f64);
+
+    /// Priority used for eviction ordering (lower evicts first).
+    fn priority(&self, stats: &NodeStats) -> f64 {
+        stats.priority
+    }
+}
+
+/// Build a policy from config.
+pub fn make_policy(kind: PolicyKind) -> Box<dyn ReplacementPolicy> {
+    match kind {
+        PolicyKind::Pgdsf => Box::new(Pgdsf),
+        PolicyKind::Gdsf => Box::new(Gdsf),
+        PolicyKind::Lru => Box::new(Lru),
+        PolicyKind::Lfu => Box::new(Lfu),
+    }
+}
+
+/// Prefix-aware GDSF (the paper's policy).
+///
+/// `Priority = Clock + Frequency × AvgCost` where `AvgCost` amortises the
+/// *measured* prefill time over the non-cached tokens of each request
+/// that computed this node (Eq. 3) — so a document deep in a shared
+/// prefix, whose recomputation is cheap per token, is valued accordingly.
+pub struct Pgdsf;
+
+impl ReplacementPolicy for Pgdsf {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Pgdsf
+    }
+
+    fn on_access(&self, s: &mut NodeStats, ctx: &AccessCtx, clock: f64) {
+        s.frequency += 1;
+        s.last_access = ctx.now;
+        if !ctx.was_cached && ctx.beta > 0 {
+            s.total_cost += ctx.estimated_time / ctx.beta as f64;
+            s.num_computed += 1;
+            s.avg_cost = s.total_cost / s.num_computed as f64;
+        }
+        s.priority = clock + s.avg_cost * s.frequency as f64;
+    }
+}
+
+/// Classic GDSF: cost taken as proportional to document size, which makes
+/// `Cost/Size` a constant — the paper's §7.3 baseline configuration.
+pub struct Gdsf;
+
+/// The per-token cost constant for GDSF. Any positive constant gives the
+/// same eviction order; we use 1.0.
+const GDSF_COST_PER_TOKEN: f64 = 1.0;
+
+impl ReplacementPolicy for Gdsf {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Gdsf
+    }
+
+    fn on_access(&self, s: &mut NodeStats, ctx: &AccessCtx, clock: f64) {
+        s.frequency += 1;
+        s.last_access = ctx.now;
+        s.priority = clock + GDSF_COST_PER_TOKEN * s.frequency as f64;
+    }
+}
+
+/// Least-recently-used.
+pub struct Lru;
+
+impl ReplacementPolicy for Lru {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Lru
+    }
+
+    fn on_access(&self, s: &mut NodeStats, ctx: &AccessCtx, _clock: f64) {
+        s.frequency += 1;
+        s.last_access = ctx.now;
+        s.priority = ctx.now;
+    }
+}
+
+/// Least-frequently-used.
+pub struct Lfu;
+
+impl ReplacementPolicy for Lfu {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Lfu
+    }
+
+    fn on_access(&self, s: &mut NodeStats, ctx: &AccessCtx, _clock: f64) {
+        s.frequency += 1;
+        s.last_access = ctx.now;
+        s.priority = s.frequency as f64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(beta: usize, time: f64, cached: bool, now: f64) -> AccessCtx {
+        AccessCtx {
+            alpha: 0,
+            beta,
+            estimated_time: time,
+            was_cached: cached,
+            now,
+            tokens: beta,
+        }
+    }
+
+    #[test]
+    fn pgdsf_amortises_cost_over_new_tokens() {
+        let p = Pgdsf;
+        let mut s = NodeStats::default();
+        // First access: 100 new tokens took 1s => 0.01 s/token.
+        p.on_access(&mut s, &ctx(100, 1.0, false, 0.0), 0.0);
+        assert!((s.avg_cost - 0.01).abs() < 1e-12);
+        assert_eq!(s.frequency, 1);
+        // Second access, cached: cost unchanged, frequency up.
+        p.on_access(&mut s, &ctx(100, 9.0, true, 1.0), 0.0);
+        assert!((s.avg_cost - 0.01).abs() < 1e-12);
+        assert_eq!(s.frequency, 2);
+        assert!((s.priority - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pgdsf_prefix_awareness() {
+        // A node always recomputed behind a long cached prefix (small β)
+        // is more expensive *per new token* only if its measured time per
+        // token says so — two different prefix situations give different
+        // avg costs.
+        let p = Pgdsf;
+        let mut shallow = NodeStats::default();
+        // 1000 new tokens, 2s => 0.002 s/token.
+        p.on_access(&mut shallow, &ctx(1000, 2.0, false, 0.0), 0.0);
+        let mut deep = NodeStats::default();
+        // Same doc behind cached prefix: only 100 new tokens, 0.5s =>
+        // 0.005 s/token (attention over the prefix makes per-token cost
+        // higher).
+        p.on_access(&mut deep, &ctx(100, 0.5, false, 0.0), 0.0);
+        assert!(deep.avg_cost > shallow.avg_cost);
+    }
+
+    #[test]
+    fn pgdsf_clock_lifts_priority() {
+        let p = Pgdsf;
+        let mut s = NodeStats::default();
+        p.on_access(&mut s, &ctx(10, 0.1, false, 0.0), 5.0);
+        assert!(s.priority > 5.0);
+    }
+
+    #[test]
+    fn gdsf_ignores_measured_cost() {
+        let p = Gdsf;
+        let mut a = NodeStats::default();
+        let mut b = NodeStats::default();
+        p.on_access(&mut a, &ctx(100, 5.0, false, 0.0), 0.0);
+        p.on_access(&mut b, &ctx(100, 0.001, false, 0.0), 0.0);
+        assert_eq!(a.priority, b.priority);
+    }
+
+    #[test]
+    fn lru_orders_by_recency() {
+        let p = Lru;
+        let mut old = NodeStats::default();
+        let mut new = NodeStats::default();
+        p.on_access(&mut old, &ctx(1, 0.0, true, 1.0), 0.0);
+        p.on_access(&mut new, &ctx(1, 0.0, true, 2.0), 0.0);
+        assert!(p.priority(&old) < p.priority(&new));
+    }
+
+    #[test]
+    fn lfu_orders_by_frequency() {
+        let p = Lfu;
+        let mut hot = NodeStats::default();
+        let mut cold = NodeStats::default();
+        for t in 0..5 {
+            p.on_access(&mut hot, &ctx(1, 0.0, true, t as f64), 0.0);
+        }
+        p.on_access(&mut cold, &ctx(1, 0.0, true, 9.0), 0.0);
+        assert!(p.priority(&cold) < p.priority(&hot));
+    }
+
+    #[test]
+    fn factory_returns_right_kinds() {
+        for kind in [
+            PolicyKind::Pgdsf,
+            PolicyKind::Gdsf,
+            PolicyKind::Lru,
+            PolicyKind::Lfu,
+        ] {
+            assert_eq!(make_policy(kind).kind(), kind);
+        }
+    }
+}

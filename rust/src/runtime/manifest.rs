@@ -1,0 +1,276 @@
+//! Artifact manifest: the ABI contract between `python/compile/aot.py`
+//! and the Rust runtime.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Transformer architecture parameters (mirrors `model.ModelConfig`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelArch {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+}
+
+impl ModelArch {
+    /// f32 elements of KV cache per token:
+    /// `layers * 2 * kv_heads * d_head`.
+    pub fn kv_floats_per_token(&self) -> usize {
+        self.n_layers * 2 * self.n_kv_heads * self.d_head
+    }
+
+    /// Bytes of KV cache per token (f32 storage).
+    pub fn kv_bytes_per_token(&self) -> usize {
+        self.kv_floats_per_token() * 4
+    }
+}
+
+/// One compiled `(alpha_max, beta)` shape bucket.
+#[derive(Debug, Clone)]
+pub struct Bucket {
+    pub alpha_max: usize,
+    pub beta: usize,
+    pub hlo_path: PathBuf,
+}
+
+/// Everything the runtime needs to load one model.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    pub arch: ModelArch,
+    pub params_path: PathBuf,
+    /// Ordered `(name, shape)` — the flat parameter ABI.
+    pub param_specs: Vec<(String, Vec<usize>)>,
+    pub buckets: Vec<Bucket>,
+}
+
+impl ModelManifest {
+    /// Total parameter element count.
+    pub fn param_floats(&self) -> usize {
+        self.param_specs
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum()
+    }
+
+    /// Smallest bucket that fits `(alpha, beta)` tokens, preferring the
+    /// least padding waste. None if no bucket is large enough.
+    pub fn pick_bucket(&self, alpha: usize, beta: usize) -> Option<&Bucket> {
+        self.buckets
+            .iter()
+            .filter(|b| b.alpha_max >= alpha && b.beta >= beta)
+            .min_by_key(|b| (b.alpha_max, b.beta))
+    }
+
+    /// Largest prefix capacity across buckets.
+    pub fn max_alpha(&self) -> usize {
+        self.buckets.iter().map(|b| b.alpha_max).max().unwrap_or(0)
+    }
+
+    /// Largest new-token capacity across buckets.
+    pub fn max_beta(&self) -> usize {
+        self.buckets.iter().map(|b| b.beta).max().unwrap_or(0)
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+impl ArtifactManifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        Self::from_json(dir, &v)
+    }
+
+    pub fn from_json(dir: &Path, v: &Json) -> Result<Self> {
+        let models_json = v
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest: missing 'models'"))?;
+        let mut models = BTreeMap::new();
+        for (name, entry) in models_json {
+            models.insert(name.clone(), parse_model(dir, name, entry)?);
+        }
+        if models.is_empty() {
+            bail!("manifest lists no models");
+        }
+        Ok(ArtifactManifest {
+            dir: dir.to_path_buf(),
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest"))
+    }
+}
+
+fn parse_model(dir: &Path, name: &str, v: &Json) -> Result<ModelManifest> {
+    let cfg = v
+        .get("config")
+        .ok_or_else(|| anyhow!("{name}: missing config"))?;
+    let num = |key: &str| -> Result<usize> {
+        cfg.get(key)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("{name}: config.{key}"))
+    };
+    let arch = ModelArch {
+        vocab: num("vocab")?,
+        d_model: num("d_model")?,
+        n_layers: num("n_layers")?,
+        n_q_heads: num("n_q_heads")?,
+        n_kv_heads: num("n_kv_heads")?,
+        d_head: num("d_head")?,
+        d_ff: num("d_ff")?,
+    };
+    if arch.n_q_heads % arch.n_kv_heads != 0 {
+        bail!("{name}: q heads not a multiple of kv heads");
+    }
+
+    let params_file = v
+        .get("params_file")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("{name}: params_file"))?;
+    let params_path = dir.join(params_file);
+
+    let mut param_specs = Vec::new();
+    for spec in v
+        .get("param_specs")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("{name}: param_specs"))?
+    {
+        let pair = spec.as_arr().ok_or_else(|| anyhow!("bad spec"))?;
+        let pname = pair[0]
+            .as_str()
+            .ok_or_else(|| anyhow!("bad spec name"))?
+            .to_string();
+        let shape: Vec<usize> = pair[1]
+            .as_arr()
+            .ok_or_else(|| anyhow!("bad spec shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<_>>()?;
+        param_specs.push((pname, shape));
+    }
+    if param_specs.is_empty() {
+        bail!("{name}: empty param_specs");
+    }
+
+    let mut buckets = Vec::new();
+    for b in v
+        .get("buckets")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("{name}: buckets"))?
+    {
+        let alpha_max = b
+            .get("alpha_max")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("bucket alpha_max"))?;
+        let beta = b
+            .get("beta")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("bucket beta"))?;
+        let hlo = b
+            .get("hlo")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("bucket hlo"))?;
+        buckets.push(Bucket {
+            alpha_max,
+            beta,
+            hlo_path: dir.join(hlo),
+        });
+    }
+    if buckets.is_empty() {
+        bail!("{name}: no buckets");
+    }
+
+    Ok(ModelManifest {
+        name: name.to_string(),
+        arch,
+        params_path,
+        param_specs,
+        buckets,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> Json {
+        Json::parse(
+            r#"{
+              "version": 1,
+              "models": {
+                "tiny-x": {
+                  "config": {"vocab": 512, "d_model": 128, "n_layers": 4,
+                             "n_q_heads": 8, "n_kv_heads": 2, "d_head": 16,
+                             "d_ff": 512},
+                  "param_seed": 0,
+                  "params_file": "params_tiny-x.bin",
+                  "param_specs": [["tok_emb", [512, 128]],
+                                  ["final_norm", [128]]],
+                  "buckets": [
+                    {"alpha_max": 128, "beta": 16, "hlo": "a.hlo.txt"},
+                    {"alpha_max": 512, "beta": 64, "hlo": "b.hlo.txt"}
+                  ]
+                }
+              }
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m =
+            ArtifactManifest::from_json(Path::new("/tmp/art"), &sample_json())
+                .unwrap();
+        let model = m.model("tiny-x").unwrap();
+        assert_eq!(model.arch.vocab, 512);
+        assert_eq!(model.arch.kv_floats_per_token(), 4 * 2 * 2 * 16);
+        assert_eq!(model.param_floats(), 512 * 128 + 128);
+        assert_eq!(model.buckets.len(), 2);
+        assert!(m.model("absent").is_err());
+    }
+
+    #[test]
+    fn bucket_selection_prefers_tightest() {
+        let m =
+            ArtifactManifest::from_json(Path::new("/tmp/art"), &sample_json())
+                .unwrap();
+        let model = m.model("tiny-x").unwrap();
+        assert_eq!(model.pick_bucket(100, 10).unwrap().alpha_max, 128);
+        assert_eq!(model.pick_bucket(128, 16).unwrap().alpha_max, 128);
+        assert_eq!(model.pick_bucket(129, 16).unwrap().alpha_max, 512);
+        assert_eq!(model.pick_bucket(200, 32).unwrap().beta, 64);
+        assert!(model.pick_bucket(1000, 16).is_none());
+        assert!(model.pick_bucket(16, 100).is_none());
+        assert_eq!(model.max_alpha(), 512);
+        assert_eq!(model.max_beta(), 64);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let bad = Json::parse(r#"{"models": {}}"#).unwrap();
+        assert!(ArtifactManifest::from_json(Path::new("/x"), &bad).is_err());
+        let bad2 = Json::parse(r#"{"nope": 1}"#).unwrap();
+        assert!(ArtifactManifest::from_json(Path::new("/x"), &bad2).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Layer-3 ↔ Layer-2 bridge: load and execute AOT artifacts via PJRT.
+//!
+//! The Python compile path (`python/compile/aot.py`) lowers the JAX model
+//! (with its Pallas kernel) to HLO *text* per `(alpha_max, beta)` shape
+//! bucket and records the ABI in `artifacts/manifest.json`. This module
+//! parses the manifest ([`manifest`]) and wraps the `xla` crate's PJRT CPU
+//! client ([`pjrt`]) so the coordinator can run real prefills on the
+//! request path with Python nowhere in sight.
+
+pub mod manifest;
+pub mod pjrt;
+
+pub use manifest::{ArtifactManifest, Bucket, ModelArch, ModelManifest};
+pub use pjrt::{PjrtModel, PrefillOutput};

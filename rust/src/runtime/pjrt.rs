@@ -1,0 +1,251 @@
+//! PJRT executor: compile HLO-text buckets once, run prefills on the
+//! request path.
+//!
+//! Follows the reference wiring in /opt/xla-example/load_hlo:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+
+use super::manifest::{Bucket, ModelManifest};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+
+/// Result of one prefill execution.
+#[derive(Debug, Clone)]
+pub struct PrefillOutput {
+    /// Logits of the last valid token, `(vocab,)`.
+    pub last_logits: Vec<f32>,
+    /// New KV rows, token-major `(beta_len, L, 2, Hkv, dh)` flattened —
+    /// already truncated to the valid `beta_len` rows.
+    pub new_kv: Vec<f32>,
+}
+
+/// A loaded model: parameters resident as device buffers, one compiled
+/// PJRT executable per shape bucket.
+pub struct PjrtModel {
+    client: xla::PjRtClient,
+    manifest: ModelManifest,
+    /// Parameter device buffers in ABI order: staged once at load so the
+    /// request path never re-transfers weights.
+    params: Vec<xla::PjRtBuffer>,
+    /// Compiled executables keyed by `(alpha_max, beta)`.
+    executables: HashMap<(usize, usize), xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtModel {
+    /// Load parameters and compile every bucket of `model_name` from the
+    /// artifact directory. Compilation happens once here, never on the
+    /// request path.
+    pub fn load(manifest: &ModelManifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let params = load_params(&client, manifest)?;
+        let mut executables = HashMap::new();
+        for bucket in &manifest.buckets {
+            let exe = compile_bucket(&client, bucket)?;
+            executables.insert((bucket.alpha_max, bucket.beta), exe);
+        }
+        Ok(PjrtModel {
+            client,
+            manifest: manifest.clone(),
+            params,
+            executables,
+        })
+    }
+
+    pub fn manifest(&self) -> &ModelManifest {
+        &self.manifest
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Run one prefill: `prefix_kv` is the token-major cached prefix
+    /// (`alpha` tokens × kv_floats_per_token f32), `tokens` the new token
+    /// ids. Returns last-token logits and the new KV rows.
+    pub fn prefill(
+        &self,
+        prefix_kv: &[f32],
+        tokens: &[i32],
+    ) -> Result<PrefillOutput> {
+        let arch = &self.manifest.arch;
+        let kv_per_tok = arch.kv_floats_per_token();
+        if prefix_kv.len() % kv_per_tok != 0 {
+            bail!(
+                "prefix_kv length {} not a multiple of kv/token {}",
+                prefix_kv.len(),
+                kv_per_tok
+            );
+        }
+        let alpha = prefix_kv.len() / kv_per_tok;
+        let beta_len = tokens.len();
+        if beta_len == 0 {
+            bail!("prefill with no tokens");
+        }
+        let bucket = self
+            .manifest
+            .pick_bucket(alpha, beta_len)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no bucket fits alpha={alpha}, beta={beta_len} \
+                     (max {}x{})",
+                    self.manifest.max_alpha(),
+                    self.manifest.max_beta()
+                )
+            })?;
+        let exe = &self.executables[&(bucket.alpha_max, bucket.beta)];
+
+        // Assemble inputs: params..., prefix_kv, alpha_len, tokens, beta_len.
+        let mut kv_padded = vec![0f32; bucket.alpha_max * kv_per_tok];
+        kv_padded[..prefix_kv.len()].copy_from_slice(prefix_kv);
+        let kv_buf = self
+            .client
+            .buffer_from_host_buffer(
+                &kv_padded,
+                &[
+                    bucket.alpha_max,
+                    arch.n_layers,
+                    2,
+                    arch.n_kv_heads,
+                    arch.d_head,
+                ],
+                None,
+            )
+            .map_err(|e| anyhow!("kv buffer: {e:?}"))?;
+
+        let mut toks_padded = vec![0i32; bucket.beta];
+        toks_padded[..beta_len].copy_from_slice(tokens);
+        let toks_buf = self
+            .client
+            .buffer_from_host_buffer(&toks_padded, &[bucket.beta], None)
+            .map_err(|e| anyhow!("tokens buffer: {e:?}"))?;
+
+        let alpha_buf = self
+            .client
+            .buffer_from_host_buffer(&[alpha as i32], &[], None)
+            .map_err(|e| anyhow!("alpha buffer: {e:?}"))?;
+        let beta_buf = self
+            .client
+            .buffer_from_host_buffer(&[beta_len as i32], &[], None)
+            .map_err(|e| anyhow!("beta buffer: {e:?}"))?;
+
+        let mut inputs: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
+        let owned = [kv_buf, alpha_buf, toks_buf, beta_buf];
+        inputs.extend(owned.iter());
+
+        let result = exe
+            .execute_b(&inputs)
+            .map_err(|e| anyhow!("pjrt execute: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let (logits_lit, kv_lit) = lit
+            .to_tuple2()
+            .map_err(|e| anyhow!("expected 2-tuple output: {e:?}"))?;
+
+        let last_logits = logits_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("logits: {e:?}"))?;
+        let new_kv_full = kv_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("new_kv: {e:?}"))?;
+        debug_assert_eq!(new_kv_full.len(), bucket.beta * kv_per_tok);
+        let new_kv = new_kv_full[..beta_len * kv_per_tok].to_vec();
+
+        Ok(PrefillOutput {
+            last_logits,
+            new_kv,
+        })
+    }
+
+    /// Greedy-decode `steps` tokens starting from `prompt`, reusing the
+    /// prefix KV across steps (the same code path the serving example
+    /// uses).
+    pub fn generate(
+        &self,
+        prompt: &[i32],
+        steps: usize,
+    ) -> Result<(Vec<i32>, Vec<f32>)> {
+        let kv_per_tok = self.manifest.arch.kv_floats_per_token();
+        let mut kv: Vec<f32> = Vec::new();
+        let mut out = Vec::new();
+        let first = self.prefill(&kv, prompt)?;
+        kv.extend_from_slice(&first.new_kv);
+        let mut next = argmax(&first.last_logits) as i32;
+        out.push(next);
+        for _ in 1..steps {
+            let step = self.prefill(&kv, &[next])?;
+            kv.extend_from_slice(&step.new_kv);
+            next = argmax(&step.last_logits) as i32;
+            out.push(next);
+            if kv.len() / kv_per_tok >= self.manifest.max_alpha() {
+                break;
+            }
+        }
+        Ok((out, kv))
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn compile_bucket(
+    client: &xla::PjRtClient,
+    bucket: &Bucket,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let path = bucket
+        .hlo_path
+        .to_str()
+        .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow!("compiling {}: {e:?}", path))
+}
+
+fn load_params(
+    client: &xla::PjRtClient,
+    manifest: &ModelManifest,
+) -> Result<Vec<xla::PjRtBuffer>> {
+    let bytes = std::fs::read(&manifest.params_path).with_context(|| {
+        format!("reading {}", manifest.params_path.display())
+    })?;
+    let want = manifest.param_floats() * 4;
+    if bytes.len() != want {
+        bail!(
+            "param file {} is {} bytes, ABI wants {}",
+            manifest.params_path.display(),
+            bytes.len(),
+            want
+        );
+    }
+    let floats: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let mut params = Vec::with_capacity(manifest.param_specs.len());
+    let mut offset = 0usize;
+    for (_, shape) in &manifest.param_specs {
+        let n: usize = shape.iter().product();
+        let slice = &floats[offset..offset + n];
+        offset += n;
+        let buf = client
+            .buffer_from_host_buffer(slice, shape, None)
+            .map_err(|e| anyhow!("staging param: {e:?}"))?;
+        params.push(buf);
+    }
+    Ok(params)
+}
+
+// PJRT-backed tests live in rust/tests/runtime_pjrt.rs (they need the
+// artifacts built by `make artifacts`); manifest parsing is covered in
+// manifest.rs.

@@ -1,0 +1,245 @@
+//! Cache-aware request reordering (paper §5.2).
+//!
+//! Pending requests are prioritised by `OrderPriority = CachedLength /
+//! ComputationLength` — prefer requests with a large cached context
+//! relative to what they must recompute (the paper's two scenarios: big
+//! cached contexts first, short recomputations first). A starvation
+//! window bounds how many times any request can be bypassed.
+
+/// A request waiting for engine admission.
+#[derive(Debug, Clone)]
+pub struct PendingRequest {
+    pub id: u64,
+    pub arrival: f64,
+    /// Cached tokens (α) at enqueue time.
+    pub cached_tokens: usize,
+    /// Tokens to compute (β).
+    pub compute_tokens: usize,
+    /// Times a newer request has been served ahead of this one.
+    pub bypassed: usize,
+}
+
+impl PendingRequest {
+    /// §5.2 OrderPriority. A zero compute length (fully cached) gets the
+    /// highest priority.
+    pub fn order_priority(&self) -> f64 {
+        if self.compute_tokens == 0 {
+            f64::INFINITY
+        } else {
+            self.cached_tokens as f64 / self.compute_tokens as f64
+        }
+    }
+}
+
+/// The reordering queue. With `reorder = false` it degrades to FIFO
+/// (the vLLM/SGLang baseline behaviour).
+#[derive(Debug)]
+pub struct ReorderQueue {
+    items: Vec<PendingRequest>,
+    /// Global pop counter; `bypassed` of an item is derived from the
+    /// counter value at its enqueue.
+    pops: usize,
+    reorder: bool,
+    window: usize,
+}
+
+impl ReorderQueue {
+    pub fn new(reorder: bool, window: usize) -> Self {
+        ReorderQueue {
+            items: Vec::new(),
+            pops: 0,
+            reorder,
+            window: window.max(1),
+        }
+    }
+
+    pub fn push(&mut self, req: PendingRequest) {
+        self.items.push(req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Remove a request (e.g. aborted speculation).
+    pub fn remove(&mut self, id: u64) -> Option<PendingRequest> {
+        let pos = self.items.iter().position(|r| r.id == id)?;
+        Some(self.items.swap_remove(pos))
+    }
+
+    /// Refresh a queued request's cached/compute lengths (cache contents
+    /// change while it waits).
+    pub fn update_lengths(
+        &mut self,
+        id: u64,
+        cached: usize,
+        compute: usize,
+    ) -> bool {
+        if let Some(r) = self.items.iter_mut().find(|r| r.id == id) {
+            r.cached_tokens = cached;
+            r.compute_tokens = compute;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Pop the next request to admit.
+    ///
+    /// FIFO when reordering is off. Otherwise: if the oldest request has
+    /// been bypassed `window` times it goes first (starvation guard);
+    /// else the max-OrderPriority request goes (FIFO tie-break), and all
+    /// older requests it bypassed get their counters bumped.
+    pub fn pop(&mut self) -> Option<PendingRequest> {
+        if self.items.is_empty() {
+            return None;
+        }
+        if !self.reorder {
+            // FIFO = strictly oldest first. Item order in `items` is not
+            // significant (swap_remove below), so scan for the minimum.
+            let oldest = self
+                .items
+                .iter()
+                .enumerate()
+                .min_by(|a, b| {
+                    a.1.arrival.partial_cmp(&b.1.arrival).unwrap()
+                })
+                .map(|(i, _)| i)
+                .unwrap();
+            self.pops += 1;
+            let mut r = self.items.swap_remove(oldest);
+            r.bypassed = 0;
+            return Some(r);
+        }
+        // Single pass: find the oldest entry (starvation guard) and the
+        // max-OrderPriority entry together (§Perf: this queue grows to
+        // thousands at saturation).
+        let mut oldest = 0usize;
+        let mut best = 0usize;
+        let mut best_pri = self.items[0].order_priority();
+        for (i, r) in self.items.iter().enumerate().skip(1) {
+            if r.arrival < self.items[oldest].arrival {
+                oldest = i;
+            }
+            let p = r.order_priority();
+            if p > best_pri {
+                best_pri = p;
+                best = i;
+            }
+        }
+        self.pops += 1;
+        if self.items[oldest].bypassed >= self.window {
+            // Starvation guard: the oldest request has been overtaken
+            // `window` times — serve it now (§5.2).
+            return Some(self.items.swap_remove(oldest));
+        }
+        // Overtake accounting: every request older than the chosen one
+        // was bypassed once. (§Perf: single pass, swap_remove — exact
+        // semantics kept; the O(n) sweep only costs under deep backlog,
+        // where the system is past SLO anyway.)
+        let chosen_arrival = self.items[best].arrival;
+        for r in self.items.iter_mut() {
+            if r.arrival < chosen_arrival {
+                r.bypassed += 1;
+            }
+        }
+        Some(self.items.swap_remove(best))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arrival: f64, cached: usize, compute: usize) -> PendingRequest {
+        PendingRequest {
+            id,
+            arrival,
+            cached_tokens: cached,
+            compute_tokens: compute,
+            bypassed: 0,
+        }
+    }
+
+    #[test]
+    fn fifo_when_disabled() {
+        let mut q = ReorderQueue::new(false, 32);
+        q.push(req(1, 0.0, 0, 100));
+        q.push(req(2, 1.0, 1000, 1));
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert_eq!(q.pop().unwrap().id, 2);
+    }
+
+    #[test]
+    fn prefers_larger_cached_context() {
+        // §5.2 scenario 1: same compute, larger cached first.
+        let mut q = ReorderQueue::new(true, 32);
+        q.push(req(1, 0.0, 100, 50));
+        q.push(req(2, 1.0, 400, 50));
+        assert_eq!(q.pop().unwrap().id, 2);
+    }
+
+    #[test]
+    fn prefers_shorter_recompute() {
+        // §5.2 scenario 2: same cached, shorter recompute first.
+        let mut q = ReorderQueue::new(true, 32);
+        q.push(req(1, 0.0, 200, 400));
+        q.push(req(2, 1.0, 200, 40));
+        assert_eq!(q.pop().unwrap().id, 2);
+    }
+
+    #[test]
+    fn fully_cached_wins() {
+        let mut q = ReorderQueue::new(true, 32);
+        q.push(req(1, 0.0, 500, 100));
+        q.push(req(2, 1.0, 100, 0));
+        assert_eq!(q.pop().unwrap().id, 2);
+    }
+
+    #[test]
+    fn starvation_window_bounds_bypasses() {
+        let window = 3;
+        let mut q = ReorderQueue::new(true, window);
+        // Request 1: terrible priority, arrives first.
+        q.push(req(1, 0.0, 0, 10_000));
+        // Feed better requests; request 1 must pop by the (window+1)-th.
+        let mut popped_1_at = None;
+        for round in 0..10u64 {
+            q.push(req(100 + round, 1.0 + round as f64, 1000, 10));
+            let got = q.pop().unwrap();
+            if got.id == 1 {
+                popped_1_at = Some(round);
+                break;
+            }
+        }
+        let at = popped_1_at.expect("request 1 eventually served");
+        assert!(
+            at as usize <= window,
+            "served after {at} bypasses (window {window})"
+        );
+    }
+
+    #[test]
+    fn update_lengths_changes_order() {
+        let mut q = ReorderQueue::new(true, 32);
+        q.push(req(1, 0.0, 0, 100));
+        q.push(req(2, 1.0, 50, 100));
+        assert!(q.update_lengths(1, 500, 100));
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert!(!q.update_lengths(99, 0, 0));
+    }
+
+    #[test]
+    fn remove_works() {
+        let mut q = ReorderQueue::new(true, 32);
+        q.push(req(1, 0.0, 0, 10));
+        q.push(req(2, 1.0, 0, 10));
+        assert_eq!(q.remove(1).unwrap().id, 1);
+        assert!(q.remove(1).is_none());
+        assert_eq!(q.len(), 1);
+    }
+}

@@ -1,0 +1,201 @@
+//! TCP JSON-lines serving front-end.
+//!
+//! The paper's prototype exposes retrieval + generation behind a RESTful
+//! API; here the transport is a newline-delimited JSON protocol over TCP
+//! (std-only — no HTTP stack offline). The handler is constructed *inside*
+//! the server thread (PJRT handles are not `Send`), and connections are
+//! served sequentially — the single-engine setup the paper also uses.
+
+pub mod proto;
+
+use anyhow::Result;
+use proto::{Request, Response};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Application hook: execute one query.
+pub trait QueryHandler {
+    fn query(
+        &mut self,
+        target_doc: u32,
+        query: &str,
+        max_new: usize,
+    ) -> Result<proto::QueryResult>;
+
+    /// Aggregate stats line.
+    fn stats(&self) -> proto::StatsResult;
+}
+
+/// A running server bound to a local port.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind to `127.0.0.1:port` (0 = ephemeral). `factory` builds the
+    /// handler on the server thread, so the handler type need not be
+    /// `Send` (PJRT state is thread-local).
+    pub fn spawn<H, F>(port: u16, factory: F) -> Result<Server>
+    where
+        H: QueryHandler,
+        F: FnOnce() -> Result<H> + Send + 'static,
+    {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&shutdown);
+        let handle = std::thread::spawn(move || {
+            let mut handler = match factory() {
+                Ok(h) => h,
+                Err(e) => {
+                    log::error!("handler construction failed: {e:#}");
+                    flag.store(true, Ordering::SeqCst);
+                    return;
+                }
+            };
+            while !flag.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        if let Err(e) =
+                            serve_conn(stream, &mut handler, &flag)
+                        {
+                            log::warn!("connection error: {e}");
+                        }
+                    }
+                    Err(ref e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock =>
+                    {
+                        std::thread::sleep(
+                            std::time::Duration::from_millis(5),
+                        );
+                    }
+                    Err(e) => {
+                        log::warn!("accept error: {e}");
+                        break;
+                    }
+                }
+            }
+        });
+        Ok(Server {
+            addr,
+            shutdown,
+            handle: Some(handle),
+        })
+    }
+
+    /// Block until the server thread exits (shutdown op received).
+    pub fn join(mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Request shutdown and wait.
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_conn<H: QueryHandler>(
+    stream: TcpStream,
+    handler: &mut H,
+    shutdown: &AtomicBool,
+) -> Result<()> {
+    // Bounded reads so an idle connection cannot wedge the accept loop
+    // past a shutdown request.
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    // Persistent line buffer: a timeout mid-line must not drop the
+    // partial request (read_line appends).
+    let mut line = String::new();
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) if line.ends_with('\n') => {}
+            Ok(_) => continue, // partial line, keep accumulating
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+        if line.trim().is_empty() {
+            line.clear();
+            continue;
+        }
+        let response = match proto::parse_request(&line) {
+            Err(e) => Response::Error {
+                message: format!("bad request: {e}"),
+            },
+            Ok(Request::Query {
+                target_doc,
+                query,
+                max_new,
+            }) => match handler.query(target_doc, &query, max_new) {
+                Ok(result) => Response::Query(result),
+                Err(e) => Response::Error {
+                    message: format!("query failed: {e}"),
+                },
+            },
+            Ok(Request::Stats) => Response::Stats(handler.stats()),
+            Ok(Request::Shutdown) => {
+                shutdown.store(true, Ordering::SeqCst);
+                writeln!(
+                    writer,
+                    "{}",
+                    proto::encode_response(&Response::Ok)
+                )?;
+                return Ok(());
+            }
+        };
+        writeln!(writer, "{}", proto::encode_response(&response))?;
+        line.clear();
+    }
+}
+
+/// Blocking client for the JSON-lines protocol.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(Client {
+            reader: BufReader::new(stream),
+            writer,
+        })
+    }
+
+    pub fn call(&mut self, req: &Request) -> Result<Response> {
+        writeln!(self.writer, "{}", proto::encode_request(req))?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        proto::parse_response(&line)
+    }
+}

@@ -1,0 +1,252 @@
+//! Wire protocol: newline-delimited JSON messages.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+/// Client → server.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Query {
+        target_doc: u32,
+        query: String,
+        max_new: usize,
+    },
+    Stats,
+    Shutdown,
+}
+
+/// One query's result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueryResult {
+    pub id: u64,
+    pub docs: Vec<u32>,
+    pub docs_hit: usize,
+    pub cached_tokens: usize,
+    pub computed_tokens: usize,
+    pub ttft_ms: f64,
+    pub total_ms: f64,
+    pub text: String,
+}
+
+/// Aggregate stats.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatsResult {
+    pub requests: usize,
+    pub mean_ttft_ms: f64,
+    pub hit_rate: f64,
+}
+
+/// Server → client.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Query(QueryResult),
+    Stats(StatsResult),
+    Ok,
+    Error { message: String },
+}
+
+pub fn encode_request(req: &Request) -> String {
+    let v = match req {
+        Request::Query {
+            target_doc,
+            query,
+            max_new,
+        } => Json::obj(vec![
+            ("op", Json::str("query")),
+            ("target_doc", Json::num(*target_doc as f64)),
+            ("query", Json::str(query.clone())),
+            ("max_new", Json::num(*max_new as f64)),
+        ]),
+        Request::Stats => Json::obj(vec![("op", Json::str("stats"))]),
+        Request::Shutdown => Json::obj(vec![("op", Json::str("shutdown"))]),
+    };
+    v.to_string()
+}
+
+pub fn parse_request(line: &str) -> Result<Request> {
+    let v = Json::parse(line).map_err(|e| anyhow!("{e}"))?;
+    let op = v
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing op"))?;
+    match op {
+        "query" => Ok(Request::Query {
+            target_doc: v
+                .get("target_doc")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("target_doc"))?
+                as u32,
+            query: v
+                .get("query")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            max_new: v
+                .get("max_new")
+                .and_then(Json::as_usize)
+                .unwrap_or(4),
+        }),
+        "stats" => Ok(Request::Stats),
+        "shutdown" => Ok(Request::Shutdown),
+        other => Err(anyhow!("unknown op '{other}'")),
+    }
+}
+
+pub fn encode_response(resp: &Response) -> String {
+    let v = match resp {
+        Response::Query(q) => Json::obj(vec![
+            ("type", Json::str("query")),
+            ("id", Json::num(q.id as f64)),
+            (
+                "docs",
+                Json::Arr(
+                    q.docs.iter().map(|&d| Json::num(d as f64)).collect(),
+                ),
+            ),
+            ("docs_hit", Json::num(q.docs_hit as f64)),
+            ("cached_tokens", Json::num(q.cached_tokens as f64)),
+            ("computed_tokens", Json::num(q.computed_tokens as f64)),
+            ("ttft_ms", Json::num(q.ttft_ms)),
+            ("total_ms", Json::num(q.total_ms)),
+            ("text", Json::str(q.text.clone())),
+        ]),
+        Response::Stats(s) => Json::obj(vec![
+            ("type", Json::str("stats")),
+            ("requests", Json::num(s.requests as f64)),
+            ("mean_ttft_ms", Json::num(s.mean_ttft_ms)),
+            ("hit_rate", Json::num(s.hit_rate)),
+        ]),
+        Response::Ok => Json::obj(vec![("type", Json::str("ok"))]),
+        Response::Error { message } => Json::obj(vec![
+            ("type", Json::str("error")),
+            ("message", Json::str(message.clone())),
+        ]),
+    };
+    v.to_string()
+}
+
+pub fn parse_response(line: &str) -> Result<Response> {
+    let v = Json::parse(line).map_err(|e| anyhow!("{e}"))?;
+    let ty = v
+        .get("type")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing type"))?;
+    match ty {
+        "query" => Ok(Response::Query(QueryResult {
+            id: v.get("id").and_then(Json::as_u64).unwrap_or(0),
+            docs: v
+                .get("docs")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|x| x.as_u64().map(|d| d as u32))
+                        .collect()
+                })
+                .unwrap_or_default(),
+            docs_hit: v
+                .get("docs_hit")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+            cached_tokens: v
+                .get("cached_tokens")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+            computed_tokens: v
+                .get("computed_tokens")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+            ttft_ms: v.get("ttft_ms").and_then(Json::as_f64).unwrap_or(0.0),
+            total_ms: v
+                .get("total_ms")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+            text: v
+                .get("text")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+        })),
+        "stats" => Ok(Response::Stats(StatsResult {
+            requests: v
+                .get("requests")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+            mean_ttft_ms: v
+                .get("mean_ttft_ms")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+            hit_rate: v
+                .get("hit_rate")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+        })),
+        "ok" => Ok(Response::Ok),
+        "error" => Ok(Response::Error {
+            message: v
+                .get("message")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+        }),
+        other => Err(anyhow!("unknown response type '{other}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let reqs = [
+            Request::Query {
+                target_doc: 42,
+                query: "what is RAG?".to_string(),
+                max_new: 8,
+            },
+            Request::Stats,
+            Request::Shutdown,
+        ];
+        for r in reqs {
+            let enc = encode_request(&r);
+            assert_eq!(parse_request(&enc).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resps = [
+            Response::Query(QueryResult {
+                id: 7,
+                docs: vec![1, 2],
+                docs_hit: 1,
+                cached_tokens: 64,
+                computed_tokens: 40,
+                ttft_ms: 12.5,
+                total_ms: 30.0,
+                text: "answer".to_string(),
+            }),
+            Response::Stats(StatsResult {
+                requests: 10,
+                mean_ttft_ms: 5.5,
+                hit_rate: 0.75,
+            }),
+            Response::Ok,
+            Response::Error {
+                message: "nope".to_string(),
+            },
+        ];
+        for r in resps {
+            let enc = encode_response(&r);
+            assert_eq!(parse_response(&enc).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_request("{}").is_err());
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"op":"fly"}"#).is_err());
+        assert!(parse_response(r#"{"type":"wat"}"#).is_err());
+    }
+}

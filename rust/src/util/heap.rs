@@ -1,0 +1,237 @@
+//! Ordered-float keyed min-heap helpers.
+//!
+//! `std::collections::BinaryHeap` needs `Ord`, which `f64` lacks; the
+//! schedulers and the discrete-event simulator all key on time or priority
+//! floats, so this wrapper is used throughout.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// A total-ordered f64 wrapper (NaN is treated as greatest; callers never
+/// produce NaN keys in practice, asserted in debug builds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OrdF64(pub f64);
+
+impl Eq for OrdF64 {}
+
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> Ordering {
+        debug_assert!(!self.0.is_nan() && !other.0.is_nan());
+        self.0
+            .partial_cmp(&other.0)
+            .unwrap_or(Ordering::Equal)
+    }
+}
+
+/// Min-heap of `(f64 key, T)` entries with FIFO tie-breaking.
+///
+/// Ties are broken by insertion sequence so that equal-priority items pop
+/// in arrival order — required for deterministic simulation replay.
+#[derive(Debug, Clone)]
+pub struct MinHeap<T> {
+    heap: BinaryHeap<Entry<T>>,
+    seq: u64,
+}
+
+#[derive(Debug, Clone)]
+struct Entry<T> {
+    key: OrdF64,
+    seq: u64,
+    item: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key && self.seq == other.seq
+    }
+}
+impl<T> Eq for Entry<T> {}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed for min-heap; lower seq wins ties.
+        other
+            .key
+            .cmp(&self.key)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl<T> Default for MinHeap<T> {
+    fn default() -> Self {
+        MinHeap {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+}
+
+impl<T> MinHeap<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, key: f64, item: T) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry {
+            key: OrdF64(key),
+            seq,
+            item,
+        });
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        self.heap.pop().map(|e| (e.key.0, e.item))
+    }
+
+    pub fn peek_key(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.key.0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+/// Keep the `k` smallest `(f64, T)` pairs seen — a bounded max-heap, the
+/// core of top-k candidate tracking in vector search.
+#[derive(Debug, Clone)]
+pub struct TopK<T> {
+    k: usize,
+    // Max-heap on key: the root is the current worst of the best-k.
+    heap: BinaryHeap<Entry<T>>,
+    seq: u64,
+}
+
+impl<T: Clone> TopK<T> {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0);
+        TopK {
+            k,
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    /// Offer a candidate; returns true if it entered the top-k.
+    pub fn offer(&mut self, key: f64, item: T) -> bool {
+        let seq = self.seq;
+        self.seq += 1;
+        if self.heap.len() < self.k {
+            self.heap.push(Entry {
+                // Negate so the BinaryHeap max = worst (largest key).
+                key: OrdF64(-key),
+                seq,
+                item,
+            });
+            return true;
+        }
+        let worst = -self.heap.peek().unwrap().key.0;
+        if key < worst {
+            self.heap.pop();
+            self.heap.push(Entry {
+                key: OrdF64(-key),
+                seq,
+                item,
+            });
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Current worst key among the kept top-k (None if under capacity).
+    pub fn threshold(&self) -> Option<f64> {
+        if self.heap.len() < self.k {
+            None
+        } else {
+            self.heap.peek().map(|e| -e.key.0)
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Snapshot of the current top-k, best (smallest key) first.
+    pub fn sorted(&self) -> Vec<(f64, T)> {
+        let mut v: Vec<(f64, T)> = self
+            .heap
+            .iter()
+            .map(|e| (-e.key.0, e.item.clone()))
+            .collect();
+        v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minheap_orders_by_key() {
+        let mut h = MinHeap::new();
+        h.push(3.0, "c");
+        h.push(1.0, "a");
+        h.push(2.0, "b");
+        assert_eq!(h.pop(), Some((1.0, "a")));
+        assert_eq!(h.pop(), Some((2.0, "b")));
+        assert_eq!(h.pop(), Some((3.0, "c")));
+        assert_eq!(h.pop(), None);
+    }
+
+    #[test]
+    fn minheap_fifo_on_ties() {
+        let mut h = MinHeap::new();
+        h.push(1.0, "first");
+        h.push(1.0, "second");
+        h.push(1.0, "third");
+        assert_eq!(h.pop().unwrap().1, "first");
+        assert_eq!(h.pop().unwrap().1, "second");
+        assert_eq!(h.pop().unwrap().1, "third");
+    }
+
+    #[test]
+    fn topk_keeps_smallest() {
+        let mut t = TopK::new(3);
+        for (d, id) in [(5.0, 5), (1.0, 1), (4.0, 4), (2.0, 2), (3.0, 3)] {
+            t.offer(d, id);
+        }
+        let got: Vec<i32> = t.sorted().into_iter().map(|(_, x)| x).collect();
+        assert_eq!(got, vec![1, 2, 3]);
+        assert_eq!(t.threshold(), Some(3.0));
+    }
+
+    #[test]
+    fn topk_under_capacity_threshold_none() {
+        let mut t = TopK::new(4);
+        t.offer(1.0, ());
+        assert_eq!(t.threshold(), None);
+    }
+}

@@ -1,0 +1,62 @@
+//! Standard-library-only utility substrates.
+//!
+//! The offline build environment ships no `rand`, `serde`, or stats crates,
+//! so the primitives every other module needs are implemented here from
+//! scratch: a PCG PRNG with the distribution samplers the workloads need
+//! ([`rng`]), streaming statistics and percentile estimation ([`stats`]),
+//! a JSON encoder/decoder ([`json`]), and small collection helpers
+//! ([`heap`]).
+
+pub mod rng;
+pub mod stats;
+pub mod json;
+pub mod heap;
+
+pub use rng::Rng;
+pub use stats::Summary;
+
+/// Format a byte count as a human-readable string (GiB/MiB/KiB).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const KIB: f64 = 1024.0;
+    let b = bytes as f64;
+    if b >= KIB * KIB * KIB {
+        format!("{:.2} GiB", b / (KIB * KIB * KIB))
+    } else if b >= KIB * KIB {
+        format!("{:.2} MiB", b / (KIB * KIB))
+    } else if b >= KIB {
+        format!("{:.2} KiB", b / KIB)
+    } else {
+        format!("{} B", bytes)
+    }
+}
+
+/// Format a duration in seconds adaptively (s / ms / µs).
+pub fn fmt_secs(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{:.3} s", secs)
+    } else if secs >= 1e-3 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.1} µs", secs * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+        assert_eq!(fmt_bytes(5 * 1024 * 1024 * 1024), "5.00 GiB");
+    }
+
+    #[test]
+    fn fmt_secs_units() {
+        assert_eq!(fmt_secs(1.5), "1.500 s");
+        assert_eq!(fmt_secs(0.0225), "22.50 ms");
+        assert_eq!(fmt_secs(12e-6), "12.0 µs");
+    }
+}

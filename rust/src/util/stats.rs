@@ -1,0 +1,330 @@
+//! Streaming statistics and percentile estimation.
+//!
+//! Every experiment in the paper reports means and tail latencies; this
+//! module provides the summary machinery the metrics layer and the bench
+//! harness build on.
+
+/// Accumulates samples and reports mean / percentiles / extrema.
+///
+/// Stores raw samples (f64) — fine for the sample counts this repo sees
+/// (≤ millions); percentile queries sort lazily and cache the sorted order.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary::default()
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.samples.push(x);
+        self.sorted = false;
+    }
+
+    pub fn extend(&mut self, xs: &[f64]) {
+        self.samples.extend_from_slice(xs);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.sum() / self.samples.len() as f64
+    }
+
+    /// Sample standard deviation (n-1 denominator).
+    pub fn std(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let mean = self.mean();
+        let ss: f64 = self.samples.iter().map(|x| (x - mean).powi(2)).sum();
+        (ss / (n - 1) as f64).sqrt()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+            self.sorted = true;
+        }
+    }
+
+    /// Percentile in `[0, 100]` by linear interpolation.
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let n = self.samples.len();
+        if n == 1 {
+            return self.samples[0];
+        }
+        let rank = (p / 100.0).clamp(0.0, 1.0) * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples
+            .iter()
+            .cloned()
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
+/// Empirical CDF over a set of counts — used to reproduce the paper's
+/// Fig. 5/6 document-access CDFs ("CDF of requests vs fraction of
+/// documents, most-popular first").
+pub fn access_cdf(counts: &[u64]) -> Vec<(f64, f64)> {
+    let mut sorted: Vec<u64> = counts.iter().cloned().filter(|&c| c > 0).collect();
+    sorted.sort_unstable_by(|a, b| b.cmp(a));
+    let total: u64 = sorted.iter().sum();
+    if total == 0 || sorted.is_empty() {
+        return vec![];
+    }
+    let n = sorted.len();
+    let mut acc = 0u64;
+    let mut out = Vec::with_capacity(n);
+    for (i, c) in sorted.iter().enumerate() {
+        acc += c;
+        out.push(((i + 1) as f64 / n as f64, acc as f64 / total as f64));
+    }
+    out
+}
+
+/// Interpolate an access CDF at a document-fraction point (e.g. "top 3%").
+pub fn cdf_at(cdf: &[(f64, f64)], doc_frac: f64) -> f64 {
+    if cdf.is_empty() {
+        return 0.0;
+    }
+    let mut prev = (0.0, 0.0);
+    for &(x, y) in cdf {
+        if x >= doc_frac {
+            let (x0, y0) = prev;
+            if x - x0 <= f64::EPSILON {
+                return y;
+            }
+            return y0 + (y - y0) * (doc_frac - x0) / (x - x0);
+        }
+        prev = (x, y);
+    }
+    cdf.last().unwrap().1
+}
+
+/// A fixed-bucket histogram for latency distributions.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+}
+
+impl Histogram {
+    /// Exponential buckets from `min` doubling until `max` is covered.
+    pub fn exponential(min: f64, max: f64) -> Self {
+        assert!(min > 0.0 && max > min);
+        let mut bounds = vec![min];
+        while *bounds.last().unwrap() < max {
+            let next = bounds.last().unwrap() * 2.0;
+            bounds.push(next);
+        }
+        let counts = vec![0; bounds.len() + 1];
+        Histogram { bounds, counts }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        let idx = match self
+            .bounds
+            .binary_search_by(|b| b.partial_cmp(&x).unwrap())
+        {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        };
+        self.counts[idx] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// (upper_bound, count) pairs; final bucket is unbounded (`inf`).
+    pub fn buckets(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::with_capacity(self.counts.len());
+        for (i, &c) in self.counts.iter().enumerate() {
+            let ub = if i < self.bounds.len() {
+                self.bounds[i]
+            } else {
+                f64::INFINITY
+            };
+            out.push((ub, c));
+        }
+        out
+    }
+}
+
+/// Bilinear interpolation on an irregular grid, the primitive behind the
+/// paper's Algorithm 1 cost estimation `T(alpha, beta)`.
+///
+/// `xs` and `ys` are strictly increasing axes; `z[i][j]` is the value at
+/// `(xs[i], ys[j])`. Queries outside the grid clamp to the border.
+#[derive(Debug, Clone)]
+pub struct BilinearGrid {
+    xs: Vec<f64>,
+    ys: Vec<f64>,
+    z: Vec<Vec<f64>>,
+}
+
+impl BilinearGrid {
+    pub fn new(xs: Vec<f64>, ys: Vec<f64>, z: Vec<Vec<f64>>) -> Self {
+        assert_eq!(z.len(), xs.len(), "grid rows");
+        assert!(z.iter().all(|row| row.len() == ys.len()), "grid cols");
+        assert!(xs.windows(2).all(|w| w[0] < w[1]), "xs increasing");
+        assert!(ys.windows(2).all(|w| w[0] < w[1]), "ys increasing");
+        BilinearGrid { xs, ys, z }
+    }
+
+    fn bracket(axis: &[f64], v: f64) -> (usize, usize, f64) {
+        if v <= axis[0] {
+            return (0, 0, 0.0);
+        }
+        if v >= *axis.last().unwrap() {
+            let last = axis.len() - 1;
+            return (last, last, 0.0);
+        }
+        let hi = axis.partition_point(|&a| a < v);
+        let lo = hi - 1;
+        let t = (v - axis[lo]) / (axis[hi] - axis[lo]);
+        (lo, hi, t)
+    }
+
+    /// Interpolated value at `(x, y)` — paper Algorithm 1 lines 6–9.
+    pub fn at(&self, x: f64, y: f64) -> f64 {
+        let (xi0, xi1, tx) = Self::bracket(&self.xs, x);
+        let (yi0, yi1, ty) = Self::bracket(&self.ys, y);
+        let z00 = self.z[xi0][yi0];
+        let z10 = self.z[xi1][yi0];
+        let z01 = self.z[xi0][yi1];
+        let z11 = self.z[xi1][yi1];
+        let lo = z00 + (z10 - z00) * tx;
+        let hi = z01 + (z11 - z01) * tx;
+        lo + (hi - lo) * ty
+    }
+
+    pub fn xs(&self) -> &[f64] {
+        &self.xs
+    }
+
+    pub fn ys(&self) -> &[f64] {
+        &self.ys
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let mut s = Summary::new();
+        s.extend(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.mean(), 2.5);
+        assert_eq!(s.median(), 2.5);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert!((s.std() - 1.2909944).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let mut s = Summary::new();
+        s.extend(&[0.0, 10.0]);
+        assert_eq!(s.percentile(50.0), 5.0);
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(100.0), 10.0);
+    }
+
+    #[test]
+    fn cdf_skewed_counts() {
+        // 1 hot doc with 60 hits, 9 cold docs with ~4.4 hits each:
+        // top 10% of docs should carry 60% of accesses.
+        let mut counts = vec![60u64];
+        counts.extend(std::iter::repeat(5).take(9));
+        let cdf = access_cdf(&counts);
+        assert!((cdf_at(&cdf, 0.1) - 60.0 / 105.0).abs() < 1e-9);
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let mut h = Histogram::exponential(1.0, 8.0);
+        for x in [0.5, 1.5, 3.0, 100.0] {
+            h.record(x);
+        }
+        assert_eq!(h.total(), 4);
+        let buckets = h.buckets();
+        assert_eq!(buckets[0], (1.0, 1)); // 0.5 ≤ 1.0
+        assert_eq!(buckets[1], (2.0, 1)); // 1.5
+        assert_eq!(buckets[2], (4.0, 1)); // 3.0
+        assert_eq!(*buckets.last().unwrap(), (f64::INFINITY, 1)); // 100.0
+    }
+
+    #[test]
+    fn bilinear_exact_on_plane() {
+        // z = 2x + 3y is reproduced exactly by bilinear interpolation.
+        let xs = vec![0.0, 1.0, 4.0];
+        let ys = vec![0.0, 2.0, 8.0];
+        let z: Vec<Vec<f64>> = xs
+            .iter()
+            .map(|&x| ys.iter().map(|&y| 2.0 * x + 3.0 * y).collect())
+            .collect();
+        let g = BilinearGrid::new(xs, ys, z);
+        assert!((g.at(0.5, 1.0) - 4.0).abs() < 1e-12);
+        assert!((g.at(2.0, 5.0) - 19.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bilinear_clamps_outside() {
+        let g = BilinearGrid::new(
+            vec![0.0, 1.0],
+            vec![0.0, 1.0],
+            vec![vec![0.0, 1.0], vec![2.0, 3.0]],
+        );
+        assert_eq!(g.at(-5.0, -5.0), 0.0);
+        assert_eq!(g.at(9.0, 9.0), 3.0);
+    }
+}

@@ -1,0 +1,78 @@
+//! Distance kernels — the innermost loop of every retrieval.
+//!
+//! Written as 4-wide unrolled f32 loops the compiler auto-vectorises;
+//! this is the hot path the §Perf pass profiles.
+
+/// Squared L2 distance between two equal-length vectors.
+#[inline]
+pub fn l2_sq(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc0 = 0f32;
+    let mut acc1 = 0f32;
+    let mut acc2 = 0f32;
+    let mut acc3 = 0f32;
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        let d0 = a[j] - b[j];
+        let d1 = a[j + 1] - b[j + 1];
+        let d2 = a[j + 2] - b[j + 2];
+        let d3 = a[j + 3] - b[j + 3];
+        acc0 += d0 * d0;
+        acc1 += d1 * d1;
+        acc2 += d2 * d2;
+        acc3 += d3 * d3;
+    }
+    for j in chunks * 4..a.len() {
+        let d = a[j] - b[j];
+        acc0 += d * d;
+    }
+    (acc0 + acc1 + acc2 + acc3) as f64
+}
+
+/// Dot product (used by k-means updates).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0f32;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc as f64
+}
+
+/// Squared L2 norm.
+#[inline]
+pub fn norm_sq(a: &[f32]) -> f64 {
+    dot(a, a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l2_matches_naive() {
+        let a: Vec<f32> = (0..19).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..19).map(|i| 10.0 - i as f32).collect();
+        let naive: f64 = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| ((x - y) * (x - y)) as f64)
+            .sum();
+        assert!((l2_sq(&a, &b) - naive).abs() < 1e-3);
+    }
+
+    #[test]
+    fn l2_zero_for_identical() {
+        let a = vec![1.5f32; 33];
+        assert_eq!(l2_sq(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn dot_and_norm() {
+        let a = vec![3f32, 4f32];
+        assert_eq!(norm_sq(&a), 25.0);
+        assert_eq!(dot(&a, &[1f32, 1f32]), 7.0);
+    }
+}

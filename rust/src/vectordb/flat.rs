@@ -1,0 +1,175 @@
+//! Exact brute-force L2 index (the paper's FlatL2 baseline, §3.2).
+
+use super::distance::l2_sq;
+use super::{Hit, StageSnapshot, VectorIndex};
+use crate::util::heap::TopK;
+
+/// Row-major dense storage; ids are row indices.
+#[derive(Debug, Clone)]
+pub struct FlatIndex {
+    dim: usize,
+    data: Vec<f32>,
+}
+
+impl FlatIndex {
+    pub fn build(dim: usize, vectors: &[Vec<f32>]) -> Self {
+        let mut data = Vec::with_capacity(vectors.len() * dim);
+        for v in vectors {
+            assert_eq!(v.len(), dim, "vector dim mismatch");
+            data.extend_from_slice(v);
+        }
+        FlatIndex { dim, data }
+    }
+
+    #[inline]
+    pub fn vector(&self, id: u32) -> &[f32] {
+        let s = id as usize * self.dim;
+        &self.data[s..s + self.dim]
+    }
+
+    fn scan_range(
+        &self,
+        query: &[f32],
+        range: std::ops::Range<usize>,
+        topk: &mut TopK<u32>,
+    ) {
+        for id in range {
+            let d = l2_sq(query, self.vector(id as u32));
+            // Prune: TopK::offer is cheap, but the threshold check avoids
+            // the heap touch for the common far-away case.
+            if topk.threshold().map_or(true, |t| d < t) {
+                topk.offer(d, id as u32);
+            }
+        }
+    }
+}
+
+impl VectorIndex for FlatIndex {
+    fn len(&self) -> usize {
+        self.data.len() / self.dim.max(1)
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
+        let mut topk = TopK::new(k);
+        self.scan_range(query, 0..self.len(), &mut topk);
+        topk.sorted()
+    }
+
+    fn staged_search(
+        &self,
+        query: &[f32],
+        k: usize,
+        stages: usize,
+    ) -> Vec<StageSnapshot> {
+        let stages = stages.max(1);
+        let n = self.len();
+        let mut topk = TopK::new(k);
+        let mut out = Vec::with_capacity(stages);
+        let mut start = 0;
+        for s in 0..stages {
+            let end = (n * (s + 1)) / stages;
+            self.scan_range(query, start..end, &mut topk);
+            start = end;
+            out.push(StageSnapshot {
+                frac_scanned: if n == 0 {
+                    1.0
+                } else {
+                    end as f64 / n as f64
+                },
+                topk: topk.sorted(),
+            });
+        }
+        out
+    }
+
+    fn scan_cost(&self) -> usize {
+        self.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testing::check;
+    use crate::util::Rng;
+
+    fn random_vectors(rng: &mut Rng, n: usize, dim: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|_| (0..dim).map(|_| rng.f32()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn finds_exact_nearest() {
+        let mut rng = Rng::new(1);
+        let vecs = random_vectors(&mut rng, 500, 8);
+        let idx = FlatIndex::build(8, &vecs);
+        // Query exactly equal to vector 123.
+        let hits = idx.search(&vecs[123], 3);
+        assert_eq!(hits[0].1, 123);
+        assert_eq!(hits[0].0, 0.0);
+        assert!(hits.windows(2).all(|w| w[0].0 <= w[1].0));
+    }
+
+    #[test]
+    fn search_matches_naive_property() {
+        check("flat_matches_naive", |rng| {
+            let n = 1 + rng.index(200);
+            let dim = 1 + rng.index(16);
+            let vecs = random_vectors(rng, n, dim);
+            let idx = FlatIndex::build(dim, &vecs);
+            let q: Vec<f32> = (0..dim).map(|_| rng.f32()).collect();
+            let k = 1 + rng.index(8);
+            let got = idx.search(&q, k);
+
+            let mut naive: Vec<Hit> = vecs
+                .iter()
+                .enumerate()
+                .map(|(i, v)| {
+                    (super::super::distance::l2_sq(&q, v), i as u32)
+                })
+                .collect();
+            naive.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            naive.truncate(k);
+            let got_ids: Vec<u32> = got.iter().map(|h| h.1).collect();
+            let want_ids: Vec<u32> = naive.iter().map(|h| h.1).collect();
+            prop_assert!(
+                got_ids == want_ids,
+                "got {got_ids:?} want {want_ids:?}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn k_larger_than_n() {
+        let mut rng = Rng::new(2);
+        let vecs = random_vectors(&mut rng, 3, 4);
+        let idx = FlatIndex::build(4, &vecs);
+        let hits = idx.search(&vecs[0], 10);
+        assert_eq!(hits.len(), 3);
+    }
+
+    #[test]
+    fn staged_progress_monotone_improvement() {
+        let mut rng = Rng::new(3);
+        let vecs = random_vectors(&mut rng, 300, 8);
+        let idx = FlatIndex::build(8, &vecs);
+        let q: Vec<f32> = (0..8).map(|_| rng.f32()).collect();
+        let stages = idx.staged_search(&q, 4, 5);
+        assert_eq!(stages.len(), 5);
+        // Best distance never gets worse as stages progress.
+        let mut best = f64::INFINITY;
+        for s in &stages {
+            if let Some(h) = s.topk.first() {
+                assert!(h.0 <= best + 1e-12);
+                best = h.0;
+            }
+        }
+    }
+}

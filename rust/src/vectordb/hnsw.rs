@@ -1,0 +1,327 @@
+//! HNSW graph index (Malkov & Yashunin), with staged search.
+//!
+//! The paper adapts HNSW for pipelined search by slicing the search time
+//! and reporting the current top-k after each slice (§6). Here stages
+//! slice the base-layer beam expansion by node-expansion budget, which is
+//! the deterministic equivalent.
+
+use super::distance::l2_sq;
+use super::{Hit, StageSnapshot, VectorIndex};
+use crate::util::heap::{MinHeap, TopK};
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+struct Node {
+    /// Neighbour lists per level, `0..=level`.
+    neighbors: Vec<Vec<u32>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct HnswIndex {
+    dim: usize,
+    data: Vec<f32>,
+    nodes: Vec<Node>,
+    entry: u32,
+    max_level: usize,
+    /// Max connections per node per level (2M at level 0).
+    m: usize,
+    ef_search: usize,
+}
+
+impl HnswIndex {
+    /// Build with connectivity `m` and construction/search beam `ef`.
+    pub fn build(
+        dim: usize,
+        vectors: &[Vec<f32>],
+        m: usize,
+        ef: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(!vectors.is_empty());
+        let mut data = Vec::with_capacity(vectors.len() * dim);
+        for v in vectors {
+            assert_eq!(v.len(), dim);
+            data.extend_from_slice(v);
+        }
+        let mut index = HnswIndex {
+            dim,
+            data,
+            nodes: Vec::with_capacity(vectors.len()),
+            entry: 0,
+            max_level: 0,
+            m: m.max(2),
+            ef_search: ef.max(8),
+        };
+        let mut rng = Rng::new(seed);
+        let ml = 1.0 / (index.m as f64).ln();
+        for id in 0..vectors.len() as u32 {
+            let level = level_for(&mut rng, ml);
+            index.insert(id, level, ef.max(index.m * 2));
+        }
+        index
+    }
+
+    #[inline]
+    fn vector(&self, id: u32) -> &[f32] {
+        let s = id as usize * self.dim;
+        &self.data[s..s + self.dim]
+    }
+
+    fn insert(&mut self, id: u32, level: usize, ef_construction: usize) {
+        let node = Node {
+            neighbors: vec![Vec::new(); level + 1],
+        };
+        if self.nodes.is_empty() {
+            self.nodes.push(node);
+            self.entry = id;
+            self.max_level = level;
+            return;
+        }
+        self.nodes.push(node);
+
+        let q = self.vector(id).to_vec();
+        let mut ep = self.entry;
+        // Greedy descent through levels above the new node's level.
+        for l in (level + 1..=self.max_level).rev() {
+            ep = self.greedy_at_level(&q, ep, l);
+        }
+        // Beam insert at each level from min(level, max_level) down to 0.
+        for l in (0..=level.min(self.max_level)).rev() {
+            let cands = self.beam_at_level(&q, ep, l, ef_construction, None);
+            let cap = if l == 0 { self.m * 2 } else { self.m };
+            let selected: Vec<u32> = cands
+                .iter()
+                .take(cap)
+                .map(|&(_, n)| n)
+                .collect();
+            if let Some(&(_, best)) = cands.first() {
+                ep = best;
+            }
+            for &n in &selected {
+                self.nodes[id as usize].neighbors[l].push(n);
+                self.nodes[n as usize].neighbors[l].push(id);
+                self.prune(n, l);
+            }
+        }
+        if level > self.max_level {
+            self.max_level = level;
+            self.entry = id;
+        }
+    }
+
+    /// Keep only the closest `cap` neighbours of `node` at `level`.
+    fn prune(&mut self, node: u32, level: usize) {
+        let cap = if level == 0 { self.m * 2 } else { self.m };
+        if self.nodes[node as usize].neighbors[level].len() <= cap {
+            return;
+        }
+        let v = self.vector(node).to_vec();
+        let mut scored: Vec<(f64, u32)> = self.nodes[node as usize].neighbors
+            [level]
+            .iter()
+            .map(|&n| (l2_sq(&v, self.vector(n)), n))
+            .collect();
+        scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        scored.truncate(cap);
+        self.nodes[node as usize].neighbors[level] =
+            scored.into_iter().map(|(_, n)| n).collect();
+    }
+
+    fn greedy_at_level(&self, q: &[f32], start: u32, level: usize) -> u32 {
+        let mut cur = start;
+        let mut cur_d = l2_sq(q, self.vector(cur));
+        loop {
+            let mut improved = false;
+            for &n in &self.nodes[cur as usize].neighbors[level] {
+                let d = l2_sq(q, self.vector(n));
+                if d < cur_d {
+                    cur = n;
+                    cur_d = d;
+                    improved = true;
+                }
+            }
+            if !improved {
+                return cur;
+            }
+        }
+    }
+
+    /// Beam (ef) search at one level; returns candidates best-first.
+    /// If `trace` is given, pushes the current best-k snapshot after each
+    /// node expansion (used by staged search).
+    fn beam_at_level(
+        &self,
+        q: &[f32],
+        start: u32,
+        level: usize,
+        ef: usize,
+        mut trace: Option<&mut Vec<Vec<Hit>>>,
+    ) -> Vec<Hit> {
+        let mut visited = vec![false; self.nodes.len()];
+        visited[start as usize] = true;
+        let d0 = l2_sq(q, self.vector(start));
+        let mut frontier = MinHeap::new(); // by distance: expand closest
+        frontier.push(d0, start);
+        let mut best = TopK::new(ef);
+        best.offer(d0, start);
+
+        while let Some((d, node)) = frontier.pop() {
+            if let Some(worst) = best.threshold() {
+                if d > worst {
+                    break;
+                }
+            }
+            for &n in &self.nodes[node as usize].neighbors[level] {
+                if visited[n as usize] {
+                    continue;
+                }
+                visited[n as usize] = true;
+                let dn = l2_sq(q, self.vector(n));
+                if best.threshold().map_or(true, |t| dn < t) || best.len() < ef
+                {
+                    best.offer(dn, n);
+                    frontier.push(dn, n);
+                }
+            }
+            if let Some(t) = trace.as_deref_mut() {
+                t.push(best.sorted());
+            }
+        }
+        best.sorted()
+    }
+}
+
+fn level_for(rng: &mut Rng, ml: f64) -> usize {
+    let u = loop {
+        let u = rng.f64();
+        if u > 0.0 {
+            break u;
+        }
+    };
+    ((-u.ln() * ml).floor() as usize).min(16)
+}
+
+impl VectorIndex for HnswIndex {
+    fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
+        let mut ep = self.entry;
+        for l in (1..=self.max_level).rev() {
+            ep = self.greedy_at_level(query, ep, l);
+        }
+        let ef = self.ef_search.max(k);
+        let mut hits =
+            self.beam_at_level(query, ep, 0, ef, None);
+        hits.truncate(k);
+        hits
+    }
+
+    fn staged_search(
+        &self,
+        query: &[f32],
+        k: usize,
+        stages: usize,
+    ) -> Vec<StageSnapshot> {
+        let stages = stages.max(1);
+        let mut ep = self.entry;
+        for l in (1..=self.max_level).rev() {
+            ep = self.greedy_at_level(query, ep, l);
+        }
+        let ef = self.ef_search.max(k);
+        let mut trace = Vec::new();
+        let final_hits =
+            self.beam_at_level(query, ep, 0, ef, Some(&mut trace));
+        let total = trace.len().max(1);
+        let mut out = Vec::with_capacity(stages);
+        for s in 0..stages {
+            let idx = ((total * (s + 1)) / stages).max(1) - 1;
+            let mut topk = if s == stages - 1 {
+                final_hits.clone()
+            } else {
+                trace
+                    .get(idx)
+                    .cloned()
+                    .unwrap_or_else(|| final_hits.clone())
+            };
+            topk.truncate(k);
+            out.push(StageSnapshot {
+                frac_scanned: (s + 1) as f64 / stages as f64,
+                topk,
+            });
+        }
+        out
+    }
+
+    fn scan_cost(&self) -> usize {
+        // Expected expansions: ef beam over log-degree graph.
+        self.ef_search * self.m * 2 + self.max_level * self.m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus(rng: &mut Rng, n: usize, dim: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|_| (0..dim).map(|_| rng.f32()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn exact_member_found() {
+        let mut rng = Rng::new(31);
+        let vecs = corpus(&mut rng, 500, 8);
+        let idx = HnswIndex::build(8, &vecs, 12, 64, 1);
+        let mut found = 0;
+        for id in (0..500).step_by(17) {
+            let hits = idx.search(&vecs[id], 1);
+            if hits[0].1 == id as u32 {
+                found += 1;
+            }
+        }
+        assert!(found >= 25, "found {found}/30 exact members");
+    }
+
+    #[test]
+    fn results_sorted_and_unique() {
+        let mut rng = Rng::new(32);
+        let vecs = corpus(&mut rng, 300, 6);
+        let idx = HnswIndex::build(6, &vecs, 8, 32, 2);
+        let q: Vec<f32> = (0..6).map(|_| rng.f32()).collect();
+        let hits = idx.search(&q, 10);
+        assert!(hits.windows(2).all(|w| w[0].0 <= w[1].0));
+        let mut ids: Vec<u32> = hits.iter().map(|h| h.1).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), hits.len());
+    }
+
+    #[test]
+    fn graph_degrees_bounded() {
+        let mut rng = Rng::new(33);
+        let vecs = corpus(&mut rng, 400, 6);
+        let m = 8;
+        let idx = HnswIndex::build(6, &vecs, m, 32, 3);
+        for node in &idx.nodes {
+            for (l, nbrs) in node.neighbors.iter().enumerate() {
+                let cap = if l == 0 { m * 2 } else { m };
+                assert!(nbrs.len() <= cap + 1, "level {l}: {}", nbrs.len());
+            }
+        }
+    }
+
+    #[test]
+    fn single_vector_index() {
+        let idx = HnswIndex::build(4, &[vec![1.0, 2.0, 3.0, 4.0]], 4, 16, 4);
+        let hits = idx.search(&[1.0, 2.0, 3.0, 4.0], 3);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].1, 0);
+    }
+}

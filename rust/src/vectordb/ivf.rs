@@ -1,0 +1,216 @@
+//! IVF (inverted file) index: k-means clusters + probed search.
+//!
+//! The paper's default retrieval index (§7: IVF with 1024 clusters).
+//! Staged search probes cluster batches in centroid-distance order and
+//! snapshots the candidate queue after each batch — exactly the hook the
+//! dynamic speculative pipeline consumes (§6 "Pipelined vector search").
+
+use super::distance::l2_sq;
+use super::kmeans::{kmeans, KMeans};
+use super::{Hit, StageSnapshot, VectorIndex};
+use crate::util::heap::TopK;
+
+#[derive(Debug, Clone)]
+pub struct IvfIndex {
+    dim: usize,
+    km: KMeans,
+    /// Per cluster: member ids.
+    clusters: Vec<Vec<u32>>,
+    /// Dense vector storage (row-major by id).
+    data: Vec<f32>,
+    /// Clusters probed per query.
+    nprobe: usize,
+}
+
+impl IvfIndex {
+    /// Build with `nlist` clusters, probing `nprobe` at query time.
+    pub fn build(
+        dim: usize,
+        vectors: &[Vec<f32>],
+        nlist: usize,
+        nprobe: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(!vectors.is_empty());
+        let km = kmeans(dim, vectors, nlist, 15, seed);
+        let mut clusters = vec![Vec::new(); km.k];
+        for (i, &c) in km.assignments.iter().enumerate() {
+            clusters[c as usize].push(i as u32);
+        }
+        let mut data = Vec::with_capacity(vectors.len() * dim);
+        for v in vectors {
+            data.extend_from_slice(v);
+        }
+        IvfIndex {
+            dim,
+            km,
+            clusters,
+            data,
+            nprobe: nprobe.max(1),
+        }
+    }
+
+    #[inline]
+    fn vector(&self, id: u32) -> &[f32] {
+        let s = id as usize * self.dim;
+        &self.data[s..s + self.dim]
+    }
+
+    pub fn nprobe(&self) -> usize {
+        self.nprobe
+    }
+
+    pub fn nlist(&self) -> usize {
+        self.km.k
+    }
+
+    fn probe_order(&self, query: &[f32]) -> Vec<usize> {
+        self.km
+            .ranked(query)
+            .into_iter()
+            .take(self.nprobe)
+            .map(|(_, c)| c)
+            .collect()
+    }
+
+    fn scan_cluster(&self, query: &[f32], c: usize, topk: &mut TopK<u32>) {
+        for &id in &self.clusters[c] {
+            let d = l2_sq(query, self.vector(id));
+            if topk.threshold().map_or(true, |t| d < t) {
+                topk.offer(d, id);
+            }
+        }
+    }
+}
+
+impl VectorIndex for IvfIndex {
+    fn len(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
+        let mut topk = TopK::new(k);
+        for c in self.probe_order(query) {
+            self.scan_cluster(query, c, &mut topk);
+        }
+        topk.sorted()
+    }
+
+    fn staged_search(
+        &self,
+        query: &[f32],
+        k: usize,
+        stages: usize,
+    ) -> Vec<StageSnapshot> {
+        let stages = stages.max(1);
+        let order = self.probe_order(query);
+        let total_vecs: usize = order
+            .iter()
+            .map(|&c| self.clusters[c].len())
+            .sum::<usize>()
+            .max(1);
+        let mut topk = TopK::new(k);
+        let mut out = Vec::with_capacity(stages);
+        let mut scanned = 0usize;
+        let mut next_cluster = 0usize;
+        for s in 0..stages {
+            let end = (order.len() * (s + 1)) / stages;
+            while next_cluster < end {
+                let c = order[next_cluster];
+                self.scan_cluster(query, c, &mut topk);
+                scanned += self.clusters[c].len();
+                next_cluster += 1;
+            }
+            out.push(StageSnapshot {
+                frac_scanned: if s == stages - 1 {
+                    1.0
+                } else {
+                    scanned as f64 / total_vecs as f64
+                },
+                topk: topk.sorted(),
+            });
+        }
+        out
+    }
+
+    fn scan_cost(&self) -> usize {
+        // Centroid ranking + expected probed fraction of the data.
+        self.km.k + (self.len() * self.nprobe) / self.km.k.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn corpus(rng: &mut Rng, n: usize, dim: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|_| (0..dim).map(|_| rng.f32()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn full_probe_equals_flat() {
+        // nprobe == nlist makes IVF exhaustive => identical to flat.
+        let mut rng = Rng::new(21);
+        let vecs = corpus(&mut rng, 400, 8);
+        let ivf = IvfIndex::build(8, &vecs, 16, 16, 5);
+        let flat = super::super::FlatIndex::build(8, &vecs);
+        for _ in 0..20 {
+            let q: Vec<f32> = (0..8).map(|_| rng.f32()).collect();
+            let a: Vec<u32> = ivf.search(&q, 5).iter().map(|h| h.1).collect();
+            let b: Vec<u32> =
+                flat.search(&q, 5).iter().map(|h| h.1).collect();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn probes_own_cluster_first() {
+        let mut rng = Rng::new(22);
+        let vecs = corpus(&mut rng, 300, 8);
+        let ivf = IvfIndex::build(8, &vecs, 10, 1, 6);
+        // An exact member query must find itself even with nprobe=1.
+        for id in [0u32, 50, 299] {
+            let hits = ivf.search(&vecs[id as usize], 1);
+            assert_eq!(hits[0].1, id);
+        }
+    }
+
+    #[test]
+    fn staged_candidates_stabilise_early() {
+        // The paper's DSP premise: final top-k usually emerges before the
+        // probe completes. With clusters ordered by centroid distance the
+        // first-stage winner should very often survive.
+        let mut rng = Rng::new(23);
+        let vecs = corpus(&mut rng, 1000, 8);
+        let ivf = IvfIndex::build(8, &vecs, 32, 16, 7);
+        let mut stable = 0;
+        let trials = 50;
+        for _ in 0..trials {
+            let q: Vec<f32> = (0..8).map(|_| rng.f32()).collect();
+            let st = ivf.staged_search(&q, 2, 4);
+            let first: Vec<u32> = st[0].topk.iter().map(|h| h.1).collect();
+            let last: Vec<u32> =
+                st.last().unwrap().topk.iter().map(|h| h.1).collect();
+            if first == last {
+                stable += 1;
+            }
+        }
+        assert!(stable > trials / 2, "only {stable}/{trials} stabilised early");
+    }
+
+    #[test]
+    fn scan_cost_scales_with_nprobe() {
+        let mut rng = Rng::new(24);
+        let vecs = corpus(&mut rng, 500, 8);
+        let a = IvfIndex::build(8, &vecs, 25, 2, 8);
+        let b = IvfIndex::build(8, &vecs, 25, 20, 8);
+        assert!(a.scan_cost() < b.scan_cost());
+    }
+}

@@ -1,0 +1,211 @@
+//! Lloyd's k-means — the clustering behind the IVF index.
+
+use super::distance::l2_sq;
+use crate::util::Rng;
+
+/// Result of a k-means run: row-major centroids plus assignments.
+#[derive(Debug, Clone)]
+pub struct KMeans {
+    pub dim: usize,
+    pub k: usize,
+    /// `k * dim` row-major centroid matrix.
+    pub centroids: Vec<f32>,
+    /// Cluster id per input vector.
+    pub assignments: Vec<u32>,
+}
+
+impl KMeans {
+    #[inline]
+    pub fn centroid(&self, c: usize) -> &[f32] {
+        &self.centroids[c * self.dim..(c + 1) * self.dim]
+    }
+
+    /// Index of the nearest centroid to `v`.
+    pub fn nearest(&self, v: &[f32]) -> usize {
+        let mut best = 0;
+        let mut best_d = f64::INFINITY;
+        for c in 0..self.k {
+            let d = l2_sq(v, self.centroid(c));
+            if d < best_d {
+                best_d = d;
+                best = c;
+            }
+        }
+        best
+    }
+
+    /// Centroid indices ordered by distance to `v`, nearest first.
+    pub fn ranked(&self, v: &[f32]) -> Vec<(f64, usize)> {
+        let mut ds: Vec<(f64, usize)> = (0..self.k)
+            .map(|c| (l2_sq(v, self.centroid(c)), c))
+            .collect();
+        ds.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        ds
+    }
+}
+
+/// Run Lloyd's algorithm with k-means++-style seeding.
+pub fn kmeans(
+    dim: usize,
+    vectors: &[Vec<f32>],
+    k: usize,
+    iters: usize,
+    seed: u64,
+) -> KMeans {
+    assert!(!vectors.is_empty(), "kmeans over empty set");
+    let k = k.min(vectors.len());
+    let mut rng = Rng::new(seed);
+
+    // Seeding: first uniform, then weighted by distance-squared.
+    let mut centroids: Vec<f32> = Vec::with_capacity(k * dim);
+    let first = rng.index(vectors.len());
+    centroids.extend_from_slice(&vectors[first]);
+    let mut min_d: Vec<f64> = vectors
+        .iter()
+        .map(|v| l2_sq(v, &vectors[first]))
+        .collect();
+    for _ in 1..k {
+        let total: f64 = min_d.iter().sum();
+        let pick = if total <= 0.0 {
+            rng.index(vectors.len())
+        } else {
+            let mut target = rng.f64() * total;
+            let mut chosen = vectors.len() - 1;
+            for (i, &d) in min_d.iter().enumerate() {
+                target -= d;
+                if target <= 0.0 {
+                    chosen = i;
+                    break;
+                }
+            }
+            chosen
+        };
+        centroids.extend_from_slice(&vectors[pick]);
+        let c = &centroids[centroids.len() - dim..];
+        for (i, v) in vectors.iter().enumerate() {
+            let d = l2_sq(v, c);
+            if d < min_d[i] {
+                min_d[i] = d;
+            }
+        }
+    }
+
+    let k_actual = centroids.len() / dim;
+    let mut assignments = vec![0u32; vectors.len()];
+    for _ in 0..iters {
+        // Assign.
+        let mut changed = false;
+        for (i, v) in vectors.iter().enumerate() {
+            let mut best = 0usize;
+            let mut best_d = f64::INFINITY;
+            for c in 0..k_actual {
+                let d = l2_sq(v, &centroids[c * dim..(c + 1) * dim]);
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            if assignments[i] != best as u32 {
+                assignments[i] = best as u32;
+                changed = true;
+            }
+        }
+        // Update.
+        let mut sums = vec![0f64; k_actual * dim];
+        let mut counts = vec![0usize; k_actual];
+        for (i, v) in vectors.iter().enumerate() {
+            let c = assignments[i] as usize;
+            counts[c] += 1;
+            for (j, &x) in v.iter().enumerate() {
+                sums[c * dim + j] += x as f64;
+            }
+        }
+        for c in 0..k_actual {
+            if counts[c] == 0 {
+                // Re-seed empty cluster at a random vector.
+                let pick = rng.index(vectors.len());
+                centroids[c * dim..(c + 1) * dim]
+                    .copy_from_slice(&vectors[pick]);
+                continue;
+            }
+            for j in 0..dim {
+                centroids[c * dim + j] =
+                    (sums[c * dim + j] / counts[c] as f64) as f32;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    KMeans {
+        dim,
+        k: k_actual,
+        centroids,
+        assignments,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs(rng: &mut Rng, centers: usize, per: usize, dim: usize) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        for c in 0..centers {
+            let center: Vec<f32> =
+                (0..dim).map(|_| c as f32 * 10.0 + rng.f32()).collect();
+            for _ in 0..per {
+                out.push(
+                    center
+                        .iter()
+                        .map(|&x| x + rng.f32() * 0.1)
+                        .collect::<Vec<f32>>(),
+                );
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn separates_well_separated_blobs() {
+        let mut rng = Rng::new(9);
+        let vecs = blobs(&mut rng, 4, 50, 6);
+        let km = kmeans(6, &vecs, 4, 20, 1);
+        assert_eq!(km.k, 4);
+        // All members of one blob share an assignment.
+        for b in 0..4 {
+            let first = km.assignments[b * 50];
+            for i in 0..50 {
+                assert_eq!(km.assignments[b * 50 + i], first, "blob {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn nearest_agrees_with_assignment() {
+        let mut rng = Rng::new(10);
+        let vecs = blobs(&mut rng, 3, 30, 4);
+        let km = kmeans(4, &vecs, 3, 20, 2);
+        for (i, v) in vecs.iter().enumerate() {
+            assert_eq!(km.nearest(v) as u32, km.assignments[i]);
+        }
+    }
+
+    #[test]
+    fn ranked_is_sorted_and_complete() {
+        let mut rng = Rng::new(11);
+        let vecs = blobs(&mut rng, 5, 10, 4);
+        let km = kmeans(4, &vecs, 5, 10, 3);
+        let r = km.ranked(&vecs[0]);
+        assert_eq!(r.len(), km.k);
+        assert!(r.windows(2).all(|w| w[0].0 <= w[1].0));
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let vecs = vec![vec![1f32, 2f32], vec![3f32, 4f32]];
+        let km = kmeans(2, &vecs, 10, 5, 4);
+        assert!(km.k <= 2);
+    }
+}

@@ -1,0 +1,139 @@
+//! Vector database substrate (Faiss replacement).
+//!
+//! The paper's retrieval step runs on Faiss with FlatL2, IVF and HNSW
+//! indexes (§3.2, §6). All three are implemented here, each supporting
+//! *staged* search — the property dynamic speculative pipelining (§5.3)
+//! exploits: intermediate top-k snapshots are exposed while the search is
+//! still refining, and the final snapshot equals the non-staged result.
+//!
+//! - [`flat`] — exact brute-force L2 (the paper's FlatL2 baseline).
+//! - [`ivf`] — inverted-file index over [`kmeans`] clusters; stages probe
+//!   cluster batches in centroid-distance order (paper §6: "split the IVF
+//!   search into multiple stages, each searching some clusters").
+//! - [`hnsw`] — hierarchical navigable small-world graph; stages slice the
+//!   base-layer beam expansion by hop budget (paper §6: time slices).
+
+pub mod distance;
+pub mod flat;
+pub mod hnsw;
+pub mod ivf;
+pub mod kmeans;
+
+pub use flat::FlatIndex;
+pub use hnsw::HnswIndex;
+pub use ivf::IvfIndex;
+
+/// A scored hit: (squared L2 distance, document id).
+pub type Hit = (f64, u32);
+
+/// One intermediate state of a staged search.
+#[derive(Debug, Clone)]
+pub struct StageSnapshot {
+    /// Fraction of the index's scan work completed after this stage.
+    pub frac_scanned: f64,
+    /// Current top-k candidates, best first.
+    pub topk: Vec<Hit>,
+}
+
+/// Common interface over the three index kinds.
+pub trait VectorIndex: Send + Sync {
+    fn len(&self) -> usize;
+    fn dim(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Exact or approximate top-k search, best first.
+    fn search(&self, query: &[f32], k: usize) -> Vec<Hit>;
+
+    /// Search in `stages` increments, returning an intermediate top-k
+    /// snapshot after each. The final snapshot's `topk` must equal
+    /// `search(query, k)`.
+    fn staged_search(
+        &self,
+        query: &[f32],
+        k: usize,
+        stages: usize,
+    ) -> Vec<StageSnapshot>;
+
+    /// Number of vector-distance evaluations a full search performs —
+    /// the work unit the simulation's retrieval-latency model scales.
+    fn scan_cost(&self) -> usize;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embed::EmbeddingModel;
+    use crate::util::Rng;
+
+    fn build_corpus(n: usize, dim: usize) -> (EmbeddingModel, Vec<Vec<f32>>) {
+        let em = EmbeddingModel::new(dim, 7);
+        let vecs = (0..n as u32).map(|i| em.document(i)).collect();
+        (em, vecs)
+    }
+
+    fn recall_at_1(
+        idx: &dyn VectorIndex,
+        em: &EmbeddingModel,
+        n: usize,
+        queries: usize,
+    ) -> f64 {
+        let mut rng = Rng::new(3);
+        let mut hits = 0;
+        for _ in 0..queries {
+            let target = rng.below(n as u64) as u32;
+            let q = em.query(target, 0.05, &mut rng);
+            let got = idx.search(&q, 1);
+            if got.first().map(|h| h.1) == Some(target) {
+                hits += 1;
+            }
+        }
+        hits as f64 / queries as f64
+    }
+
+    #[test]
+    fn ivf_recall_close_to_flat() {
+        let (em, vecs) = build_corpus(2000, 16);
+        let flat = FlatIndex::build(16, &vecs);
+        let ivf = IvfIndex::build(16, &vecs, 32, 8, 11);
+        let r_flat = recall_at_1(&flat, &em, 2000, 100);
+        let r_ivf = recall_at_1(&ivf, &em, 2000, 100);
+        assert!(r_flat > 0.95, "flat recall {r_flat}");
+        assert!(r_ivf > 0.80, "ivf recall {r_ivf}");
+    }
+
+    #[test]
+    fn hnsw_recall_close_to_flat() {
+        let (em, vecs) = build_corpus(2000, 16);
+        let hnsw = HnswIndex::build(16, &vecs, 12, 64, 13);
+        let r = recall_at_1(&hnsw, &em, 2000, 100);
+        assert!(r > 0.85, "hnsw recall {r}");
+    }
+
+    #[test]
+    fn staged_final_equals_search_all_indexes() {
+        let (_, vecs) = build_corpus(800, 12);
+        let mut rng = Rng::new(5);
+        let q: Vec<f32> = (0..12).map(|_| rng.f32()).collect();
+        let indexes: Vec<Box<dyn VectorIndex>> = vec![
+            Box::new(FlatIndex::build(12, &vecs)),
+            Box::new(IvfIndex::build(12, &vecs, 16, 16, 1)),
+            Box::new(HnswIndex::build(12, &vecs, 12, 48, 2)),
+        ];
+        for idx in &indexes {
+            let direct = idx.search(&q, 5);
+            let stages = idx.staged_search(&q, 5, 4);
+            assert!(!stages.is_empty());
+            let last = stages.last().unwrap();
+            assert!((last.frac_scanned - 1.0).abs() < 1e-9);
+            let ids: Vec<u32> = last.topk.iter().map(|h| h.1).collect();
+            let direct_ids: Vec<u32> = direct.iter().map(|h| h.1).collect();
+            assert_eq!(ids, direct_ids);
+            // Monotone progress.
+            for w in stages.windows(2) {
+                assert!(w[0].frac_scanned <= w[1].frac_scanned + 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Synthetic document corpus.
+//!
+//! Stands in for the paper's Wikipedia knowledge base (~0.3 M documents,
+//! mean length 3718 tokens, long-tailed — Fig. 3). Lengths are lognormal,
+//! clipped to a plausible range, deterministic per (seed, doc id).
+
+use crate::util::Rng;
+
+/// A corpus: token length per document (content is irrelevant to cache
+/// behaviour; the PJRT path generates token ids separately).
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    doc_tokens: Vec<usize>,
+}
+
+impl Corpus {
+    /// Wikipedia-like corpus (paper Fig. 3): lognormal with mean ≈ 3718
+    /// tokens, clipped to [64, 16384].
+    pub fn wikipedia_like(num_docs: usize, seed: u64) -> Self {
+        // mean = exp(mu + sigma^2/2) = 3718 with sigma = 0.9
+        // => mu = ln(3718) - 0.405 = 7.82.
+        Self::lognormal(num_docs, 7.82, 0.9, 64, 16384, seed)
+    }
+
+    /// Tiny corpus for the PJRT-backed path: short docs that fit the
+    /// compiled buckets (16–96 tokens).
+    pub fn tiny(num_docs: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let doc_tokens = (0..num_docs)
+            .map(|_| 16 + rng.index(6) * 16)
+            .collect();
+        Corpus { doc_tokens }
+    }
+
+    pub fn lognormal(
+        num_docs: usize,
+        mu: f64,
+        sigma: f64,
+        min: usize,
+        max: usize,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Rng::new(seed);
+        let doc_tokens = (0..num_docs)
+            .map(|_| {
+                (rng.lognormal(mu, sigma).round() as usize).clamp(min, max)
+            })
+            .collect();
+        Corpus { doc_tokens }
+    }
+
+    pub fn len(&self) -> usize {
+        self.doc_tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.doc_tokens.is_empty()
+    }
+
+    pub fn tokens(&self, doc: u32) -> usize {
+        self.doc_tokens[doc as usize]
+    }
+
+    pub fn mean_tokens(&self) -> f64 {
+        self.doc_tokens.iter().sum::<usize>() as f64
+            / self.doc_tokens.len().max(1) as f64
+    }
+
+    pub fn all_tokens(&self) -> &[usize] {
+        &self.doc_tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wikipedia_mean_matches_fig3() {
+        let c = Corpus::wikipedia_like(50_000, 1);
+        let mean = c.mean_tokens();
+        // Paper: average document length 3718 tokens.
+        assert!(
+            (3000.0..4500.0).contains(&mean),
+            "mean {mean} should be near 3718"
+        );
+    }
+
+    #[test]
+    fn wikipedia_is_long_tailed() {
+        let c = Corpus::wikipedia_like(50_000, 2);
+        let mut v = c.all_tokens().to_vec();
+        v.sort_unstable();
+        let median = v[v.len() / 2] as f64;
+        let mean = c.mean_tokens();
+        assert!(mean > median, "long tail: mean {mean} > median {median}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Corpus::wikipedia_like(100, 7);
+        let b = Corpus::wikipedia_like(100, 7);
+        assert_eq!(a.all_tokens(), b.all_tokens());
+        let c = Corpus::wikipedia_like(100, 8);
+        assert_ne!(a.all_tokens(), c.all_tokens());
+    }
+
+    #[test]
+    fn tiny_fits_buckets() {
+        let c = Corpus::tiny(100, 3);
+        assert!(c.all_tokens().iter().all(|&t| (16..=96).contains(&t)));
+    }
+}

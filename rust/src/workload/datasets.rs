@@ -1,0 +1,256 @@
+//! QA-dataset access profiles.
+//!
+//! The paper characterises four datasets (§3.2, Fig. 5): the retrieval
+//! pattern is skewed — for MMLU the top 3% of documents serve ~60% of
+//! requests (20× denser than uniform). Each profile here calibrates a
+//! Zipf exponent to the paper's reported skew and carries the §7 request
+//! and output length distributions (MMLU answers are a single token; NQ
+//! answers average 6 tokens with p99 ≤ 32).
+
+use crate::util::rng::Zipf;
+use crate::util::Rng;
+
+/// Access-pattern profile of one QA dataset.
+#[derive(Debug, Clone)]
+pub struct DatasetProfile {
+    pub name: &'static str,
+    /// Fraction of documents (`skew_frac`) that receive `skew_mass` of
+    /// the requests — the paper's skew statement.
+    pub skew_frac: f64,
+    pub skew_mass: f64,
+    /// Mean request (question) length in tokens.
+    pub request_tokens_mean: f64,
+    /// Output-length distribution: (mean, max).
+    pub output_mean: f64,
+    pub output_max: usize,
+}
+
+pub const MMLU: DatasetProfile = DatasetProfile {
+    name: "mmlu",
+    skew_frac: 0.03,
+    skew_mass: 0.60,
+    request_tokens_mean: 72.0,
+    output_mean: 1.0,
+    output_max: 1,
+};
+
+pub const NATURAL_QUESTIONS: DatasetProfile = DatasetProfile {
+    name: "nq",
+    skew_frac: 0.03,
+    skew_mass: 0.42,
+    request_tokens_mean: 16.0,
+    output_mean: 6.0,
+    output_max: 32,
+};
+
+pub const HOTPOTQA: DatasetProfile = DatasetProfile {
+    name: "hotpotqa",
+    skew_frac: 0.03,
+    skew_mass: 0.50,
+    request_tokens_mean: 28.0,
+    output_mean: 4.0,
+    output_max: 24,
+};
+
+pub const TRIVIAQA: DatasetProfile = DatasetProfile {
+    name: "triviaqa",
+    skew_frac: 0.03,
+    skew_mass: 0.55,
+    request_tokens_mean: 20.0,
+    output_mean: 3.0,
+    output_max: 16,
+};
+
+pub const ALL_DATASETS: &[&DatasetProfile] =
+    &[&MMLU, &NATURAL_QUESTIONS, &HOTPOTQA, &TRIVIAQA];
+
+impl DatasetProfile {
+    pub fn lookup(name: &str) -> anyhow::Result<&'static DatasetProfile> {
+        for &d in ALL_DATASETS {
+            if d.name == name {
+                return Ok(d);
+            }
+        }
+        anyhow::bail!("unknown dataset '{name}'")
+    }
+
+    /// Build the calibrated document-popularity sampler over `num_docs`.
+    /// Rank r is mapped to a pseudo-random document id so popular docs are
+    /// spread across the id space (as embedding-based retrieval would).
+    ///
+    /// Calibration is O(num_docs × bisection-steps) worth of `powf`, so
+    /// samplers are memoised per (dataset, num_docs) — benches build many
+    /// traces over the same corpus (§Perf).
+    pub fn popularity(&self, num_docs: usize) -> DocSampler {
+        use std::collections::HashMap;
+        use std::sync::{Arc, Mutex};
+        static CACHE: once_cell::sync::Lazy<
+            Mutex<HashMap<(&'static str, usize), Arc<Zipf>>>,
+        > = once_cell::sync::Lazy::new(|| Mutex::new(HashMap::new()));
+        let key = (self.name, num_docs);
+        let zipf = {
+            let mut cache = CACHE.lock().expect("zipf cache");
+            if let Some(z) = cache.get(&key) {
+                Arc::clone(z)
+            } else {
+                let s = Zipf::calibrate(
+                    num_docs,
+                    self.skew_frac,
+                    self.skew_mass,
+                );
+                let z = Arc::new(Zipf::new(num_docs, s));
+                cache.insert(key, Arc::clone(&z));
+                z
+            }
+        };
+        DocSampler { zipf, num_docs }
+    }
+
+    /// Sample a question length (tokens), >= 8.
+    pub fn sample_request_tokens(&self, rng: &mut Rng) -> usize {
+        let t = rng.normal(self.request_tokens_mean, self.request_tokens_mean * 0.3);
+        (t.round() as isize).max(8) as usize
+    }
+
+    /// Sample an output length per the §7 distribution.
+    pub fn sample_output_tokens(&self, rng: &mut Rng) -> usize {
+        if self.output_max <= 1 {
+            return 1;
+        }
+        // Lognormal with the profile mean, clipped to output_max.
+        let sigma = 0.8;
+        let mu = self.output_mean.ln() - sigma * sigma / 2.0;
+        (rng.lognormal(mu, sigma).round() as usize)
+            .clamp(1, self.output_max)
+    }
+}
+
+/// Popularity-ranked document sampler.
+#[derive(Debug, Clone)]
+pub struct DocSampler {
+    zipf: std::sync::Arc<Zipf>,
+    num_docs: usize,
+}
+
+impl DocSampler {
+    /// Sample a primary document id.
+    pub fn sample(&self, rng: &mut Rng) -> u32 {
+        let rank = self.zipf.sample(rng);
+        self.rank_to_doc(rank)
+    }
+
+    /// Deterministic rank→doc shuffling (splitmix-style hash).
+    pub fn rank_to_doc(&self, rank: usize) -> u32 {
+        let mut x = rank as u64 ^ 0x5851_F42D_4C95_7F2D;
+        x ^= x >> 30;
+        x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x ^= x >> 27;
+        x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+        x ^= x >> 31;
+        (x % self.num_docs as u64) as u32
+    }
+
+    /// The deterministic retrieved-document sequence for a request whose
+    /// top document is `primary`: the paper's top-k injection. Related
+    /// documents are a pure function of the primary, so requests hitting
+    /// the same topic share the whole ordered sequence (which is what
+    /// knowledge-tree paths cache).
+    pub fn doc_sequence(&self, primary: u32, k: usize) -> Vec<u32> {
+        let mut docs = Vec::with_capacity(k);
+        docs.push(primary);
+        let mut x = primary as u64;
+        while docs.len() < k {
+            x = x
+                .wrapping_mul(0xD129_0D3B_3E62_394B)
+                .wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let cand = ((x >> 16) % self.num_docs as u64) as u32;
+            if !docs.contains(&cand) {
+                docs.push(cand);
+            }
+        }
+        docs
+    }
+
+    pub fn num_docs(&self) -> usize {
+        self.num_docs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::{access_cdf, cdf_at};
+
+    #[test]
+    fn mmlu_skew_matches_paper() {
+        // Fig. 5: top 3% of docs referred to by ~60% of MMLU requests.
+        let sampler = MMLU.popularity(10_000);
+        let mut rng = Rng::new(1);
+        let mut counts = vec![0u64; 10_000];
+        for _ in 0..200_000 {
+            counts[sampler.sample(&mut rng) as usize] += 1;
+        }
+        let cdf = access_cdf(&counts);
+        let top3 = cdf_at(&cdf, 0.03);
+        assert!(
+            (0.55..0.65).contains(&top3),
+            "top-3% mass {top3}, paper says ~0.60"
+        );
+    }
+
+    #[test]
+    fn datasets_ordered_by_skew() {
+        // MMLU most skewed, NQ least (drives the Fig. 13 vs 14 gap).
+        let mut rng = Rng::new(2);
+        let masses: Vec<f64> = [&MMLU, &TRIVIAQA, &HOTPOTQA, &NATURAL_QUESTIONS]
+            .iter()
+            .map(|d| {
+                let s = d.popularity(5_000);
+                let mut counts = vec![0u64; 5_000];
+                for _ in 0..50_000 {
+                    counts[s.sample(&mut rng) as usize] += 1;
+                }
+                cdf_at(&access_cdf(&counts), 0.03)
+            })
+            .collect();
+        assert!(masses[0] > masses[1]);
+        assert!(masses[1] > masses[2]);
+        assert!(masses[2] > masses[3]);
+    }
+
+    #[test]
+    fn doc_sequence_deterministic_and_distinct() {
+        let s = MMLU.popularity(1000);
+        let a = s.doc_sequence(42, 5);
+        let b = s.doc_sequence(42, 5);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 5);
+        let mut uniq = a.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 5, "no duplicate docs in sequence");
+        assert_ne!(a, s.doc_sequence(43, 5));
+    }
+
+    #[test]
+    fn output_lengths_respect_caps() {
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            assert_eq!(MMLU.sample_output_tokens(&mut rng), 1);
+            let nq = NATURAL_QUESTIONS.sample_output_tokens(&mut rng);
+            assert!((1..=32).contains(&nq));
+        }
+        // NQ mean close to 6 (paper §7).
+        let mean: f64 = (0..20_000)
+            .map(|_| NATURAL_QUESTIONS.sample_output_tokens(&mut rng) as f64)
+            .sum::<f64>()
+            / 20_000.0;
+        assert!((4.0..8.0).contains(&mean), "NQ output mean {mean}");
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(DatasetProfile::lookup("mmlu").unwrap().name, "mmlu");
+        assert!(DatasetProfile::lookup("squad").is_err());
+    }
+}

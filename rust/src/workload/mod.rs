@@ -1,0 +1,10 @@
+//! Workload generation: synthetic corpus, QA-dataset access profiles and
+//! Poisson arrival traces (paper §3.2 characterization and §7 workloads).
+
+pub mod corpus;
+pub mod datasets;
+pub mod trace;
+
+pub use corpus::Corpus;
+pub use datasets::DatasetProfile;
+pub use trace::{Trace, TraceRequest};

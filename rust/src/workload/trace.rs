@@ -1,0 +1,282 @@
+//! Request traces: Poisson arrivals over a dataset profile + corpus.
+
+use super::corpus::Corpus;
+use super::datasets::DatasetProfile;
+use crate::util::json::Json;
+use crate::util::Rng;
+
+/// One request in a trace.
+#[derive(Debug, Clone)]
+pub struct TraceRequest {
+    pub id: u64,
+    /// Arrival time, seconds from trace start.
+    pub arrival: f64,
+    /// Retrieved document sequence (most relevant first) — what the
+    /// vector search *will* return for this request.
+    pub docs: Vec<u32>,
+    /// Token count of each document.
+    pub doc_tokens: Vec<usize>,
+    /// Question length in tokens.
+    pub request_tokens: usize,
+    /// Output tokens to generate (>= 1).
+    pub output_tokens: usize,
+}
+
+impl TraceRequest {
+    /// Total injected-prompt tokens (documents + question).
+    pub fn prompt_tokens(&self) -> usize {
+        self.doc_tokens.iter().sum::<usize>() + self.request_tokens
+    }
+}
+
+/// A generated workload trace.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub dataset: String,
+    pub rate: f64,
+    pub requests: Vec<TraceRequest>,
+}
+
+impl Trace {
+    /// Generate `num_requests` Poisson arrivals at `rate` req/s over the
+    /// dataset's popularity profile (§7 Workloads: questions sampled per
+    /// the §3.2 distribution, shuffled, Poisson arrival times).
+    ///
+    /// Uses the paper's default prompt budget (4096 tokens — the LLaMA2
+    /// context window, which also bounds batch-4 KV on a 24 GiB A10G).
+    pub fn generate(
+        profile: &DatasetProfile,
+        corpus: &Corpus,
+        rate: f64,
+        num_requests: usize,
+        top_k: usize,
+        seed: u64,
+    ) -> Trace {
+        Self::generate_with_budget(
+            profile,
+            corpus,
+            rate,
+            num_requests,
+            top_k,
+            4096,
+            seed,
+        )
+    }
+
+    /// As [`Trace::generate`] with an explicit prompt-token budget:
+    /// injected documents are truncated evenly so the prompt fits the
+    /// model context (the paper truncates documents "to fit within GPU
+    /// capacity limits", §7.2).
+    pub fn generate_with_budget(
+        profile: &DatasetProfile,
+        corpus: &Corpus,
+        rate: f64,
+        num_requests: usize,
+        top_k: usize,
+        max_prompt_tokens: usize,
+        seed: u64,
+    ) -> Trace {
+        let mut rng = Rng::new(seed);
+        let sampler = profile.popularity(corpus.len());
+        let mut t = 0.0;
+        let mut requests = Vec::with_capacity(num_requests);
+        for id in 0..num_requests as u64 {
+            t += rng.exponential(rate);
+            let primary = sampler.sample(&mut rng);
+            let docs = sampler.doc_sequence(primary, top_k);
+            let request_tokens = profile.sample_request_tokens(&mut rng);
+            // Even per-document truncation to fit the budget, with a
+            // fixed question reserve. The cap is a function of
+            // (budget, k) only — NOT of this request's question length —
+            // so a document's truncated length (and thus its KV) is
+            // identical across requests, preserving reusability.
+            const QUESTION_RESERVE: usize = 256;
+            let per_doc_cap = max_prompt_tokens
+                .saturating_sub(QUESTION_RESERVE)
+                .checked_div(top_k)
+                .unwrap_or(usize::MAX)
+                .max(32);
+            let doc_tokens = docs
+                .iter()
+                .map(|&d| corpus.tokens(d).min(per_doc_cap))
+                .collect();
+            requests.push(TraceRequest {
+                id,
+                arrival: t,
+                docs,
+                doc_tokens,
+                request_tokens,
+                output_tokens: profile.sample_output_tokens(&mut rng),
+            });
+        }
+        Trace {
+            dataset: profile.name.to_string(),
+            rate,
+            requests,
+        }
+    }
+
+    pub fn duration(&self) -> f64 {
+        self.requests.last().map_or(0.0, |r| r.arrival)
+    }
+
+    /// Serialise for the record/replay tooling and the server protocol.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::str(self.dataset.clone())),
+            ("rate", Json::num(self.rate)),
+            (
+                "requests",
+                Json::Arr(
+                    self.requests
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("id", Json::num(r.id as f64)),
+                                ("arrival", Json::num(r.arrival)),
+                                (
+                                    "docs",
+                                    Json::Arr(
+                                        r.docs
+                                            .iter()
+                                            .map(|&d| Json::num(d as f64))
+                                            .collect(),
+                                    ),
+                                ),
+                                (
+                                    "doc_tokens",
+                                    Json::Arr(
+                                        r.doc_tokens
+                                            .iter()
+                                            .map(|&t| Json::num(t as f64))
+                                            .collect(),
+                                    ),
+                                ),
+                                (
+                                    "request_tokens",
+                                    Json::num(r.request_tokens as f64),
+                                ),
+                                (
+                                    "output_tokens",
+                                    Json::num(r.output_tokens as f64),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Trace> {
+        use anyhow::anyhow;
+        let dataset = v
+            .get("dataset")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("trace: dataset"))?
+            .to_string();
+        let rate = v
+            .get("rate")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("trace: rate"))?;
+        let mut requests = Vec::new();
+        for r in v
+            .get("requests")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("trace: requests"))?
+        {
+            let nums = |key: &str| -> anyhow::Result<Vec<usize>> {
+                r.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("trace: {key}"))?
+                    .iter()
+                    .map(|x| {
+                        x.as_usize().ok_or_else(|| anyhow!("trace: {key}"))
+                    })
+                    .collect()
+            };
+            requests.push(TraceRequest {
+                id: r
+                    .get("id")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| anyhow!("trace: id"))?,
+                arrival: r
+                    .get("arrival")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("trace: arrival"))?,
+                docs: nums("docs")?.into_iter().map(|d| d as u32).collect(),
+                doc_tokens: nums("doc_tokens")?,
+                request_tokens: r
+                    .get("request_tokens")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("trace: request_tokens"))?,
+                output_tokens: r
+                    .get("output_tokens")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("trace: output_tokens"))?,
+            });
+        }
+        Ok(Trace {
+            dataset,
+            rate,
+            requests,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::datasets::MMLU;
+
+    fn small_trace() -> Trace {
+        let corpus = Corpus::tiny(64, 1);
+        Trace::generate(&MMLU, &corpus, 2.0, 100, 2, 7)
+    }
+
+    #[test]
+    fn arrivals_increasing_and_rate_plausible() {
+        let t = small_trace();
+        assert_eq!(t.requests.len(), 100);
+        for w in t.requests.windows(2) {
+            assert!(w[0].arrival < w[1].arrival);
+        }
+        // 100 requests at 2/s should span roughly 50s.
+        assert!((25.0..100.0).contains(&t.duration()), "{}", t.duration());
+    }
+
+    #[test]
+    fn docs_match_corpus_tokens() {
+        let corpus = Corpus::tiny(64, 1);
+        let t = Trace::generate(&MMLU, &corpus, 1.0, 50, 3, 8);
+        for r in &t.requests {
+            assert_eq!(r.docs.len(), 3);
+            for (i, &d) in r.docs.iter().enumerate() {
+                assert_eq!(r.doc_tokens[i], corpus.tokens(d));
+            }
+            assert!(r.output_tokens >= 1);
+            assert!(r.prompt_tokens() > r.request_tokens);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let corpus = Corpus::tiny(64, 1);
+        let a = Trace::generate(&MMLU, &corpus, 1.0, 20, 2, 9);
+        let b = Trace::generate(&MMLU, &corpus, 1.0, 20, 2, 9);
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.docs, y.docs);
+            assert_eq!(x.arrival, y.arrival);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = small_trace();
+        let j = t.to_json();
+        let back = Trace::from_json(&j).unwrap();
+        assert_eq!(back.requests.len(), t.requests.len());
+        assert_eq!(back.requests[5].docs, t.requests[5].docs);
+        assert_eq!(back.requests[5].arrival, t.requests[5].arrival);
+    }
+}

@@ -1,0 +1,231 @@
+//! Property-based integration tests over the caching stack: the
+//! knowledge tree + policies under adversarial random workloads, checking
+//! structural invariants and semantic guarantees after every operation.
+
+use ragcache::config::PolicyKind;
+use ragcache::kvcache::{KvPayload, PageSpec, Tier};
+use ragcache::policy::{make_policy, AccessCtx};
+use ragcache::prop_assert;
+use ragcache::testing::{check_with, PropConfig};
+use ragcache::tree::{DocId, KnowledgeTree};
+use ragcache::util::Rng;
+
+fn page() -> PageSpec {
+    PageSpec {
+        block_tokens: 8,
+        kv_bytes_per_token: 16,
+    }
+}
+
+fn build(gpu_tokens: usize, host_tokens: usize, policy: PolicyKind) -> KnowledgeTree {
+    let p = page();
+    KnowledgeTree::new(
+        p.bytes(gpu_tokens),
+        p.bytes(host_tokens),
+        p,
+        make_policy(policy),
+        true,
+        0,
+    )
+}
+
+fn ctx(tokens: usize, now: f64, cached: bool) -> AccessCtx {
+    AccessCtx {
+        alpha: 0,
+        beta: tokens.max(1),
+        estimated_time: tokens as f64 * 1e-4,
+        was_cached: cached,
+        now,
+        tokens,
+    }
+}
+
+/// Drive a random request mix through a tree, validating invariants
+/// after every step. Exercises lookup/promote/insert/evict and payload
+/// consistency under all four policies.
+#[test]
+fn invariants_under_random_traffic_all_policies() {
+    for policy in [
+        PolicyKind::Pgdsf,
+        PolicyKind::Gdsf,
+        PolicyKind::Lru,
+        PolicyKind::Lfu,
+    ] {
+        check_with(
+            PropConfig {
+                cases: 25,
+                seed: 0xCAFE + policy as u64,
+            },
+            "cache_invariants",
+            |rng: &mut Rng| {
+                let mut tree =
+                    build(64 + rng.index(4) * 32, 128 + rng.index(4) * 64, policy);
+                let n_docs = 3 + rng.below(10) as u32;
+                let kv_per_tok = 4usize; // floats per token for payloads
+                let mut now = 0.0;
+                for _ in 0..80 {
+                    now += 1.0;
+                    let len = 1 + rng.index(3);
+                    let docs: Vec<DocId> = (0..len)
+                        .map(|_| rng.below(n_docs as u64) as u32)
+                        .collect();
+                    let tokens = 8 * (1 + rng.index(2));
+
+                    let m = tree.lookup(&docs);
+                    prop_assert!(
+                        m.matched_docs <= docs.len(),
+                        "match bounded"
+                    );
+                    prop_assert!(
+                        m.gpu_tokens + m.host_tokens == m.cached_tokens,
+                        "tier split adds up"
+                    );
+                    tree.pin(&m.path);
+                    if tree.promote(&m.path).is_none() {
+                        tree.unpin(&m.path);
+                        continue;
+                    }
+                    // After promote, the whole matched path is GPU.
+                    for &n in &m.path {
+                        prop_assert!(
+                            tree.node_tier(n) == Some(Tier::Gpu),
+                            "promoted node in GPU"
+                        );
+                    }
+                    let mut parent =
+                        m.path.last().copied().unwrap_or(tree.root());
+                    let mut pinned = m.path.clone();
+                    for &d in &docs[m.matched_docs..] {
+                        let payload = KvPayload::new(
+                            vec![d as f32; tokens * kv_per_tok],
+                            tokens,
+                        );
+                        match tree.insert_child(
+                            parent,
+                            d,
+                            tokens,
+                            Some(payload),
+                        ) {
+                            Some((id, _)) => {
+                                tree.pin(&[id]);
+                                pinned.push(id);
+                                tree.on_access(
+                                    id,
+                                    &ctx(tokens, now, false),
+                                );
+                                parent = id;
+                            }
+                            None => break,
+                        }
+                    }
+                    for &n in &m.path {
+                        tree.on_access(
+                            n,
+                            &ctx(tree.node_tokens(n), now, true),
+                        );
+                    }
+                    tree.unpin(&pinned);
+                    tree.check_invariants();
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// Payload identity: whatever survives in the cache returns byte-for-byte
+/// the payload stored at insertion.
+#[test]
+fn payloads_survive_eviction_roundtrips() {
+    check_with(
+        PropConfig {
+            cases: 40,
+            seed: 0xD00D,
+        },
+        "payload_identity",
+        |rng: &mut Rng| {
+            let mut tree = build(32, 96, PolicyKind::Pgdsf);
+            let mut stored: Vec<(DocId, Vec<f32>)> = Vec::new();
+            for d in 0..8u32 {
+                let tokens = 8;
+                let data: Vec<f32> =
+                    (0..tokens * 2).map(|_| rng.f32()).collect();
+                if tree
+                    .insert_child(
+                        tree.root(),
+                        d,
+                        tokens,
+                        Some(KvPayload::new(data.clone(), tokens)),
+                    )
+                    .is_some()
+                {
+                    stored.push((d, data));
+                }
+                tree.check_invariants();
+            }
+            for (d, data) in &stored {
+                let m = tree.lookup(&[*d]);
+                if m.matched_docs == 1 {
+                    let p = tree
+                        .node_payload(m.path[0])
+                        .expect("cached node keeps payload");
+                    prop_assert!(
+                        p.floats() == data.as_slice(),
+                        "payload intact for doc {d}"
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The GPU segment stays a connected top region of the tree under every
+/// policy and any eviction pattern (the paper's hierarchical partition).
+#[test]
+fn gpu_segment_always_connected() {
+    check_with(
+        PropConfig {
+            cases: 40,
+            seed: 0xF00,
+        },
+        "gpu_connectivity",
+        |rng: &mut Rng| {
+            let mut tree = build(48, 200, PolicyKind::Lru);
+            let mut now = 0.0;
+            for _ in 0..60 {
+                now += 1.0;
+                let chain_len = 1 + rng.index(4);
+                let mut parent = tree.root();
+                for _ in 0..chain_len {
+                    let d = rng.below(6) as u32;
+                    match tree.insert_child(parent, d, 8, None) {
+                        Some((id, _)) => {
+                            tree.on_access(id, &ctx(8, now, false));
+                            parent = id;
+                        }
+                        None => break,
+                    }
+                }
+                tree.check_invariants(); // asserts GPU-parent rule
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Hit-rate definition (§7.3): prefix-order-sensitive partial hits.
+#[test]
+fn hit_rate_definition_matches_paper_example() {
+    let mut tree = build(1000, 1000, PolicyKind::Pgdsf);
+    // Store [D1, D2].
+    let (a, _) = tree.insert_child(tree.root(), 1, 8, None).unwrap();
+    tree.insert_child(a, 2, 8, None).unwrap();
+    // Request [D1, D3]: 1 of 2 docs hit => 50% (the paper's example).
+    let m = tree.lookup(&[1, 3]);
+    assert_eq!(m.matched_docs, 1);
+    assert_eq!(m.matched_docs as f64 / 2.0, 0.5);
+    // Request [D2, D1]: order matters => 0 hits.
+    let m2 = tree.lookup(&[2, 1]);
+    assert_eq!(m2.matched_docs, 0);
+}

@@ -1,0 +1,150 @@
+//! Integration: the REAL three-layer path — Rust retrieval + knowledge
+//! tree + PJRT-compiled JAX/Pallas prefill — with numeric checks that
+//! cached-KV serving produces identical logits to uncached serving.
+
+use ragcache::controller::real::{RealConfig, RealServer};
+use ragcache::embed::EmbeddingModel;
+use ragcache::runtime::{ArtifactManifest, PjrtModel};
+use ragcache::util::Rng;
+use ragcache::vectordb::{FlatIndex, VectorIndex};
+use std::path::Path;
+
+fn build_server(num_docs: usize) -> Option<(RealServer, RealConfig)> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let manifest = ArtifactManifest::load(&dir).unwrap();
+    let model = PjrtModel::load(manifest.model("tiny-gqa").unwrap()).unwrap();
+    let mut rng = Rng::new(4);
+    let doc_tokens: Vec<Vec<i32>> = (0..num_docs)
+        .map(|_| (0..32).map(|_| rng.index(256) as i32).collect())
+        .collect();
+    let dim = 16;
+    let em = EmbeddingModel::new(dim, 8);
+    let vecs: Vec<Vec<f32>> =
+        (0..num_docs as u32).map(|d| em.document(d)).collect();
+    let index: Box<dyn VectorIndex> = Box::new(FlatIndex::build(dim, &vecs));
+    let cfg = RealConfig {
+        query_noise: 0.0, // deterministic retrieval for the tests
+        ..RealConfig::default()
+    };
+    let server =
+        RealServer::new(model, index, em, doc_tokens, &cfg).unwrap();
+    Some((server, cfg))
+}
+
+#[test]
+fn warm_request_hits_and_matches_cold_output() {
+    let Some((mut server, cfg)) = build_server(32) else {
+        return;
+    };
+    let query: Vec<i32> = (10..30).collect();
+    let cold = server.serve(5, &query, 4, &cfg).unwrap();
+    assert_eq!(cold.docs_hit, 0, "first request misses");
+    assert_eq!(cold.docs[0], 5, "retrieval finds the target");
+
+    let warm = server.serve(5, &query, 4, &cfg).unwrap();
+    assert_eq!(
+        warm.docs_hit,
+        warm.docs.len(),
+        "second request fully hits"
+    );
+    assert!(warm.cached_tokens > 0);
+    assert!(
+        warm.computed_tokens < cold.computed_tokens,
+        "cache cut the prefill"
+    );
+    // The decisive numeric check: cached-prefix serving must generate
+    // exactly the same tokens as the cold pass.
+    assert_eq!(
+        cold.output_tokens, warm.output_tokens,
+        "KV reuse changes nothing about the output"
+    );
+}
+
+#[test]
+fn different_doc_order_is_different_cache_entry() {
+    let Some((mut server, cfg)) = build_server(32) else {
+        return;
+    };
+    let query: Vec<i32> = (40..60).collect();
+    // Request targeting doc 3 then doc 7 produce different top-k orders;
+    // each order caches its own path (§5.1 order sensitivity).
+    let a = server.serve(3, &query, 2, &cfg).unwrap();
+    let b = server.serve(7, &query, 2, &cfg).unwrap();
+    assert_ne!(a.docs, b.docs);
+    assert_eq!(b.docs_hit, 0, "different prefix: no (full) hit");
+    // Re-serving each target hits its own path.
+    assert!(server.serve(3, &query, 2, &cfg).unwrap().docs_hit > 0);
+    assert!(server.serve(7, &query, 2, &cfg).unwrap().docs_hit > 0);
+}
+
+#[test]
+fn eviction_under_tiny_cache_keeps_serving_correctly() {
+    let Some((mut server, mut cfg)) = build_server(24) else {
+        return;
+    };
+    // Shrink the cache hard so constant eviction happens.
+    cfg.gpu_cache_bytes = 64 * 1024;
+    cfg.host_cache_bytes = 128 * 1024;
+    let mut baseline = Vec::new();
+    let query: Vec<i32> = (0..16).collect();
+    for target in 0..12u32 {
+        let r = server.serve(target, &query, 2, &cfg).unwrap();
+        baseline.push(r.output_tokens);
+    }
+    // Second sweep: outputs identical regardless of hit/miss history.
+    for target in 0..12u32 {
+        let r = server.serve(target, &query, 2, &cfg).unwrap();
+        assert_eq!(
+            r.output_tokens, baseline[target as usize],
+            "doc {target}: eviction must never change results"
+        );
+    }
+    server.tree().check_invariants();
+}
+
+#[test]
+fn iterative_retrieval_reuses_round_kv() {
+    // Paper §9: intermediate iterations are separate requests whose doc
+    // KV is cached — a later session touching the same docs hits.
+    let Some((mut server, cfg)) = build_server(32) else {
+        return;
+    };
+    let query: Vec<i32> = (60..80).collect();
+    let first = server
+        .serve_iterative(&[4, 9, 4], &query, 3, &cfg)
+        .unwrap();
+    assert_eq!(first.rounds.len(), 3);
+    // Round 3 revisits target 4: its documents were cached by round 1.
+    assert!(
+        first.rounds[2].docs_hit > 0,
+        "revisited round hits: {:?}",
+        first.rounds[2]
+    );
+    // A whole second session is warm.
+    let second = server
+        .serve_iterative(&[4, 9], &query, 3, &cfg)
+        .unwrap();
+    assert_eq!(second.total_docs_hit(), second.total_docs());
+    server.tree().check_invariants();
+}
+
+#[test]
+fn recorder_tracks_real_metrics() {
+    let Some((mut server, cfg)) = build_server(16) else {
+        return;
+    };
+    let query: Vec<i32> = (5..25).collect();
+    for t in [1u32, 1, 2, 1] {
+        server.serve(t, &query, 2, &cfg).unwrap();
+    }
+    let r = server.recorder();
+    assert_eq!(r.len(), 4);
+    assert!(r.hit_rate() > 0.0);
+    let mut ttft = r.ttft();
+    assert!(ttft.mean() > 0.0);
+    assert!(ttft.percentile(100.0) < 60.0, "sane wall-clock bounds");
+}

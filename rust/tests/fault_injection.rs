@@ -1,0 +1,191 @@
+//! Failure injection (paper §6 Fault tolerance): GPU failures with and
+//! without hot-node replication, and request retry/timeout handling —
+//! including on the real PJRT-backed serving stack, where outputs must be
+//! byte-identical across a failure.
+
+use ragcache::config::PolicyKind;
+use ragcache::controller::fault::{replicate_hot_nodes, RetryAction, RetryState};
+use ragcache::kvcache::{PageSpec, Tier};
+use ragcache::policy::{make_policy, AccessCtx};
+use ragcache::tree::KnowledgeTree;
+
+fn page() -> PageSpec {
+    PageSpec {
+        block_tokens: 16,
+        kv_bytes_per_token: 64,
+    }
+}
+
+fn tree(gpu_tokens: usize, host_tokens: usize) -> KnowledgeTree {
+    let p = page();
+    KnowledgeTree::new(
+        p.bytes(gpu_tokens),
+        p.bytes(host_tokens),
+        p,
+        make_policy(PolicyKind::Pgdsf),
+        true,
+        0,
+    )
+}
+
+fn touch(t: &mut KnowledgeTree, id: ragcache::tree::NodeId, n: usize) {
+    for i in 0..n {
+        t.on_access(
+            id,
+            &AccessCtx {
+                alpha: 0,
+                beta: 16,
+                estimated_time: 0.01,
+                was_cached: false,
+                now: i as f64,
+                tokens: 16,
+            },
+        );
+    }
+}
+
+#[test]
+fn unreplicated_cache_is_wiped_by_gpu_failure() {
+    let mut t = tree(1000, 1000);
+    for d in 0..8u32 {
+        let (id, _) = t.insert_child(t.root(), d, 16, None).unwrap();
+        touch(&mut t, id, 1);
+    }
+    let (lost, recovered) = t.fail_gpu();
+    t.check_invariants();
+    assert_eq!(lost, 8);
+    assert_eq!(recovered, 0);
+    for d in 0..8u32 {
+        assert_eq!(t.lookup(&[d]).matched_docs, 0);
+    }
+    // The tree keeps serving: re-inserts work.
+    assert!(t.insert_child(t.root(), 1, 16, None).is_some());
+    t.check_invariants();
+}
+
+#[test]
+fn replication_bounds_the_loss() {
+    let mut t = tree(1000, 1000);
+    let mut nodes = Vec::new();
+    for d in 0..10u32 {
+        let (id, _) = t.insert_child(t.root(), d, 16, None).unwrap();
+        touch(&mut t, id, (10 - d) as usize); // doc 0 hottest
+        nodes.push(id);
+    }
+    let replicated = replicate_hot_nodes(&mut t, 4);
+    assert_eq!(replicated, 4);
+    let (lost, recovered) = t.fail_gpu();
+    t.check_invariants();
+    assert_eq!(recovered, 4, "the 4 hottest survived");
+    assert_eq!(lost, 6);
+    // Survivors are exactly the hottest by frequency.
+    for (i, &id) in nodes.iter().enumerate() {
+        let expect = if i < 4 { Some(Tier::Host) } else { None };
+        assert_eq!(t.node_tier(id), expect, "doc {i}");
+    }
+}
+
+#[test]
+fn repeated_failures_are_survivable() {
+    let mut t = tree(500, 500);
+    for round in 0..5 {
+        for d in 0..6u32 {
+            if let Some((id, _)) = t.insert_child(t.root(), d, 16, None) {
+                touch(&mut t, id, 2);
+            }
+        }
+        replicate_hot_nodes(&mut t, 3);
+        let _ = t.fail_gpu();
+        t.check_invariants();
+        // Recovery path: promote what survived back to GPU.
+        for d in 0..6u32 {
+            let m = t.lookup(&[d]);
+            if m.matched_docs == 1 {
+                assert!(t.promote(&m.path).is_some(), "round {round}");
+            }
+        }
+        t.check_invariants();
+    }
+}
+
+#[test]
+fn retry_policy_full_lifecycle() {
+    let mut r = RetryState::new(0.5, 3, 0.0);
+    r.begin_attempt(0.0);
+    assert_eq!(r.check(0.1), RetryAction::Wait);
+    // Times out before the first iteration: full recompute.
+    assert_eq!(r.check(0.9), RetryAction::Recompute);
+    r.begin_attempt(1.0);
+    r.first_iteration_done = true;
+    // Times out after the first iteration: resume from stored KV.
+    assert_eq!(r.check(1.8), RetryAction::Resume);
+    r.begin_attempt(2.0);
+    r.begin_attempt(3.0);
+    // attempts(4) > max_retries(3): give up.
+    assert_eq!(r.check(9.0), RetryAction::Fail);
+}
+
+mod real_stack {
+    //! GPU failure injected into the live PJRT serving stack.
+    use ragcache::controller::real::{RealConfig, RealServer};
+    use ragcache::embed::EmbeddingModel;
+    use ragcache::runtime::{ArtifactManifest, PjrtModel};
+    use ragcache::util::Rng;
+    use ragcache::vectordb::{FlatIndex, VectorIndex};
+    use std::path::Path;
+
+    fn build() -> Option<(RealServer, RealConfig)> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let manifest = ArtifactManifest::load(&dir).unwrap();
+        let model =
+            PjrtModel::load(manifest.model("tiny-mha").unwrap()).unwrap();
+        let num_docs = 16usize;
+        let mut rng = Rng::new(77);
+        let doc_tokens: Vec<Vec<i32>> = (0..num_docs)
+            .map(|_| (0..24).map(|_| rng.index(256) as i32).collect())
+            .collect();
+        let em = EmbeddingModel::new(16, 5);
+        let vecs: Vec<Vec<f32>> =
+            (0..num_docs as u32).map(|d| em.document(d)).collect();
+        let index: Box<dyn VectorIndex> =
+            Box::new(FlatIndex::build(16, &vecs));
+        let cfg = RealConfig {
+            query_noise: 0.0,
+            ..RealConfig::default()
+        };
+        let server =
+            RealServer::new(model, index, em, doc_tokens, &cfg).unwrap();
+        Some((server, cfg))
+    }
+
+    #[test]
+    fn outputs_identical_across_gpu_failure() {
+        let Some((mut server, cfg)) = build() else {
+            return;
+        };
+        let query: Vec<i32> = (30..50).collect();
+        // Warm the cache and capture baseline outputs.
+        let mut baseline = Vec::new();
+        for t in 0..6u32 {
+            baseline.push(server.serve(t, &query, 3, &cfg).unwrap());
+        }
+        // Inject a GPU failure.
+        let (lost, _recovered) = server.tree_mut().fail_gpu();
+        server.tree().check_invariants();
+        assert!(lost > 0, "failure actually destroyed cache state");
+        // Serve the same requests again: cold (recompute) but identical.
+        for t in 0..6u32 {
+            let again = server.serve(t, &query, 3, &cfg).unwrap();
+            assert_eq!(
+                again.output_tokens,
+                baseline[t as usize].output_tokens,
+                "doc {t}: recompute-after-failure must match"
+            );
+        }
+        server.tree().check_invariants();
+    }
+}

@@ -1,0 +1,151 @@
+//! Integration: the TCP JSON-lines server with a mock handler (protocol
+//! level) — PJRT-free so it runs everywhere.
+
+use ragcache::server::{proto, Client, QueryHandler, Server};
+
+struct MockHandler {
+    served: usize,
+}
+
+impl QueryHandler for MockHandler {
+    fn query(
+        &mut self,
+        target_doc: u32,
+        query: &str,
+        max_new: usize,
+    ) -> anyhow::Result<proto::QueryResult> {
+        if target_doc == 999 {
+            anyhow::bail!("document out of range");
+        }
+        self.served += 1;
+        Ok(proto::QueryResult {
+            id: self.served as u64,
+            docs: vec![target_doc, target_doc + 1],
+            docs_hit: 1,
+            cached_tokens: 64,
+            computed_tokens: query.len() + max_new,
+            ttft_ms: 12.0,
+            total_ms: 20.0,
+            text: format!("echo:{query}"),
+        })
+    }
+
+    fn stats(&self) -> proto::StatsResult {
+        proto::StatsResult {
+            requests: self.served,
+            mean_ttft_ms: 12.0,
+            hit_rate: 0.5,
+        }
+    }
+}
+
+fn spawn() -> Server {
+    Server::spawn(0, || Ok(MockHandler { served: 0 })).expect("spawn")
+}
+
+#[test]
+fn query_roundtrip_over_tcp() {
+    let server = spawn();
+    let mut client = Client::connect(server.addr).unwrap();
+    let resp = client
+        .call(&proto::Request::Query {
+            target_doc: 7,
+            query: "what is ragcache".into(),
+            max_new: 4,
+        })
+        .unwrap();
+    match resp {
+        proto::Response::Query(q) => {
+            assert_eq!(q.docs, vec![7, 8]);
+            assert_eq!(q.text, "echo:what is ragcache");
+            assert!(q.ttft_ms > 0.0);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    server.stop();
+}
+
+#[test]
+fn stats_reflect_served_requests() {
+    let server = spawn();
+    let mut client = Client::connect(server.addr).unwrap();
+    for i in 0..3 {
+        client
+            .call(&proto::Request::Query {
+                target_doc: i,
+                query: "q".into(),
+                max_new: 1,
+            })
+            .unwrap();
+    }
+    match client.call(&proto::Request::Stats).unwrap() {
+        proto::Response::Stats(s) => assert_eq!(s.requests, 3),
+        other => panic!("unexpected {other:?}"),
+    }
+    server.stop();
+}
+
+#[test]
+fn handler_errors_become_protocol_errors() {
+    let server = spawn();
+    let mut client = Client::connect(server.addr).unwrap();
+    let resp = client
+        .call(&proto::Request::Query {
+            target_doc: 999,
+            query: "boom".into(),
+            max_new: 1,
+        })
+        .unwrap();
+    match resp {
+        proto::Response::Error { message } => {
+            assert!(message.contains("out of range"), "{message}");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    server.stop();
+}
+
+#[test]
+fn malformed_requests_rejected_gracefully() {
+    use std::io::{BufRead, BufReader, Write};
+    let server = spawn();
+    let stream = std::net::TcpStream::connect(server.addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writeln!(writer, "this is not json").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    match proto::parse_response(&line).unwrap() {
+        proto::Response::Error { message } => {
+            assert!(message.contains("bad request"));
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    // Connection still usable afterwards.
+    writeln!(writer, "{}", proto::encode_request(&proto::Request::Stats))
+        .unwrap();
+    let mut line2 = String::new();
+    reader.read_line(&mut line2).unwrap();
+    assert!(matches!(
+        proto::parse_response(&line2).unwrap(),
+        proto::Response::Stats(_)
+    ));
+    server.stop();
+}
+
+#[test]
+fn shutdown_op_stops_server() {
+    let server = spawn();
+    let addr = server.addr;
+    let mut client = Client::connect(addr).unwrap();
+    let resp = client.call(&proto::Request::Shutdown).unwrap();
+    assert_eq!(resp, proto::Response::Ok);
+    server.join();
+    // Subsequent connections are refused (allow a scheduling beat).
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    // Either connect fails outright or the connection is dropped: assert
+    // that a round-trip cannot complete.
+    if let Ok(mut c) = Client::connect(addr) {
+        assert!(c.call(&proto::Request::Stats).is_err());
+    }
+}
