@@ -1,0 +1,41 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 verify + hygiene gates + the e2e example.
+#
+#   ./ci.sh          run everything available in the toolchain
+#
+# The build environment is fully offline; all dependencies are vendored
+# path crates (see vendor/README.md), so no network is required.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    cargo fmt --check
+else
+    echo "warn: rustfmt unavailable, skipping format gate"
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy -D warnings =="
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "warn: clippy unavailable, skipping lint gate"
+fi
+
+# The PJRT-backed e2e example needs AOT artifacts (make artifacts, which
+# requires the Python/JAX toolchain). It exits non-zero on any serving
+# regression, so run it whenever the artifacts exist.
+if [ -f artifacts/manifest.json ]; then
+    echo "== e2e serving example =="
+    cargo run --release --example e2e_serving
+else
+    echo "warn: artifacts/ not built, skipping e2e serving example"
+fi
+
+echo "CI OK"

@@ -122,7 +122,7 @@ fn main() -> anyhow::Result<()> {
     );
     println!("doc hit rate       : {:.1}%", hit_rate * 100.0);
     println!("token hit rate     : {:.1}%", token_hit * 100.0);
-    let c = server.tree().counters();
+    let c = server.cache().counters();
     println!(
         "tree               : {} inserts, {} gpu evictions, {} host \
          evictions",
@@ -134,5 +134,32 @@ fn main() -> anyhow::Result<()> {
             cold.mean() / warm.mean()
         );
     }
+
+    // CI gate: regressions must make the example exit non-zero, not just
+    // print odd numbers.
+    let mut failures = Vec::new();
+    if n != workload.len() {
+        failures.push(format!(
+            "served {n} of {} requests",
+            workload.len()
+        ));
+    }
+    if warm.len() == 0 {
+        failures.push("no request ever hit the cache".to_string());
+    }
+    if hit_rate <= 0.0 {
+        failures.push(format!("doc hit rate {hit_rate} not positive"));
+    }
+    if c.inserts == 0 {
+        failures.push("nothing was inserted into the tree".to_string());
+    }
+    server.cache().check_invariants();
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("FAIL: {f}");
+        }
+        std::process::exit(1);
+    }
+    println!("\nOK");
     Ok(())
 }

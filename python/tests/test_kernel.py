@@ -8,6 +8,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# Property-based cases need hypothesis; skip the module cleanly when the
+# offline environment does not ship it.
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels.prefix_attention import (

@@ -10,12 +10,19 @@ use crate::util::json::Json;
 use std::collections::BTreeMap;
 
 /// TOML parse error with line information.
-#[derive(Debug, thiserror::Error)]
-#[error("toml error on line {line}: {msg}")]
+#[derive(Debug)]
 pub struct TomlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 fn err(line: usize, msg: impl Into<String>) -> TomlError {
     TomlError {

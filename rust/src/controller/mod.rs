@@ -5,15 +5,40 @@
 //! policy updates, with dynamic speculative pipelining overlapping the
 //! first two against the last three.
 //!
-//! [`sim_server`] drives the whole pipeline against the virtual clock and
-//! the analytic cost model (paper-scale experiments); the same tree,
-//! policies, scheduler and DSP logic are driven in real time by the
-//! PJRT-backed [`real`] server used in `examples/e2e_serving.rs`.
+//! ```text
+//!              requests (trace / TCP connections)
+//!                           │
+//!            ┌──────────────┴───────────────┐
+//!            ▼                              ▼
+//!   sim_server (driver)             real (driver)
+//!   virtual clock, analytic         wall clock, PJRT prefill,
+//!   cost model, batching engine     real vector retrieval
+//!            │                              │
+//!            └──────────────┬───────────────┘
+//!                           ▼
+//!              pipeline (shared core)
+//!     DSP decisions · reorder-queue admission ·
+//!     CacheService: tree match → promote → pin → (α,β)
+//!     → commit/release · metrics hooks
+//!                           │
+//!                           ▼
+//!        tree / kvcache / policy / sched substrates
+//! ```
+//!
+//! [`pipeline`] owns the per-request state machine shared by both
+//! drivers; [`sim_server`] replays paper-scale traces against the
+//! virtual clock, and the PJRT-backed [`real`] server (used by
+//! `examples/e2e_serving.rs` and the concurrent TCP front-end in
+//! [`crate::server`]) drives the identical logic in real time.
 
+pub mod fault;
+pub mod pipeline;
+pub mod real;
 pub mod retrieval;
 pub mod sim_server;
-pub mod real;
-pub mod fault;
 
+pub use pipeline::{
+    Admission, CacheService, Pipeline, PipelineDriver, RequestState,
+};
 pub use retrieval::{RetrievalTiming, StagePlan, StagedRetrieval};
 pub use sim_server::{SimOutcome, SimServer};

@@ -1,0 +1,642 @@
+//! The shared RAG pipeline core (paper §4, Fig. 7).
+//!
+//! Every RAGCache controller runs the same per-request state machine:
+//!
+//! ```text
+//!   staged retrieval ──► DSP decision (spec::SpecState)
+//!        │                    │
+//!        ▼                    ▼
+//!   reorder-queue ──► admission: tree match → promote → pin → (α, β)
+//!        admission            │
+//!                             ▼  (engine computes the prefill)
+//!                  commit: unpin → policy refresh → insert new doc KV
+//! ```
+//!
+//! This module owns that state machine so concrete controllers stay thin
+//! *drivers* over it: the simulated controller ([`super::sim_server`])
+//! supplies the virtual clock and the analytic cost model, the real one
+//! ([`super::real`]) supplies wall-clock time and PJRT execution. The
+//! [`PipelineDriver`] trait is the seam between the two.
+//!
+//! [`CacheService`] wraps the [`KnowledgeTree`] (and with it the
+//! `TierAllocator` accounting) behind interior locking, so the admission
+//! state machine can be driven from many threads at once — the substrate
+//! the concurrent TCP runtime in [`crate::server`] builds on.
+
+use super::retrieval::StagedRetrieval;
+use crate::kvcache::KvPayload;
+use crate::metrics::Recorder;
+use crate::policy::AccessCtx;
+use crate::sched::ReorderQueue;
+use crate::spec::SpecState;
+use crate::tree::{
+    DocId, KnowledgeTree, MatchResult, NodeId, Transfers, TreeCounters,
+};
+use std::sync::{Arc, Mutex};
+
+/// Generation-tagged engine sequence id: `request_index * GEN_BASE + gen`.
+pub const GEN_BASE: u64 = 1024;
+
+/// The request index a generation-tagged sequence id belongs to.
+pub fn request_of(seq: u64) -> usize {
+    (seq / GEN_BASE) as usize
+}
+
+/// What a concrete controller supplies to the shared pipeline: a notion
+/// of time and the cost of byte movement. The simulation driver answers
+/// from the virtual clock and the PCIe [`crate::kvcache::TransferModel`];
+/// the real driver answers from the wall clock (its transfers are
+/// in-process copies already folded into measured latency).
+pub trait PipelineDriver {
+    /// Current time, seconds.
+    fn now(&self) -> f64;
+    /// Seconds charged for moving `bytes` over the GPU↔host link.
+    fn transfer_time(&self, bytes: u64) -> f64;
+}
+
+/// One request's admission into the engine: the pinned cache prefix plus
+/// everything needed to commit (or abandon) the prefill afterwards.
+#[derive(Debug, Clone, Default)]
+pub struct Admission {
+    /// Matched (and pinned) tree path, root-to-leaf order.
+    pub path: Vec<NodeId>,
+    /// How many of the requested docs the path covers.
+    pub matched_docs: usize,
+    /// Cached tokens along the path (the request's α).
+    pub alpha: usize,
+    /// Tokens the engine must compute (the request's β).
+    pub beta: usize,
+    /// Docs to insert after the prefill: `(doc, tokens)`.
+    pub unmatched: Vec<(DocId, usize)>,
+    /// Bytes moved by cache-hit loading (h2g + g2h swap-outs).
+    pub transfer_bytes: u64,
+    /// Estimated (sim) or measured (real) prefill seconds; set by the
+    /// driver once known, consumed by the policy updates.
+    pub estimated_time: f64,
+}
+
+/// Thread-safe knowledge-tree service: the [`KnowledgeTree`] plus its
+/// `TierAllocator` accounting behind one interior lock, shared between
+/// connection handlers, the engine driver and administrative tasks.
+///
+/// Pin/unpin refcounts on the nodes make the admit → compute → commit
+/// window safe under interleaving: a pinned prefix can never be evicted
+/// by a concurrent admission making room for its own documents.
+#[derive(Clone)]
+pub struct CacheService {
+    tree: Arc<Mutex<KnowledgeTree>>,
+}
+
+impl CacheService {
+    pub fn new(tree: KnowledgeTree) -> Self {
+        CacheService {
+            tree: Arc::new(Mutex::new(tree)),
+        }
+    }
+
+    /// Run `f` with exclusive access to the tree. Lock poisoning is
+    /// recovered from: tree invariants are re-checked by tests, and a
+    /// panicked accessor must not wedge the serving path.
+    pub fn with<R>(&self, f: impl FnOnce(&mut KnowledgeTree) -> R) -> R {
+        let mut guard = match self.tree.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        f(&mut guard)
+    }
+
+    /// O(h) prefix match (no pinning; a snapshot for priority estimates).
+    pub fn lookup(&self, docs: &[DocId]) -> MatchResult {
+        self.with(|t| t.lookup(docs))
+    }
+
+    pub fn counters(&self) -> TreeCounters {
+        self.with(|t| t.counters())
+    }
+
+    pub fn check_invariants(&self) {
+        self.with(|t| t.check_invariants())
+    }
+
+    /// Nodes currently pinned by in-flight requests (excludes the root's
+    /// permanent pin).
+    pub fn pinned_nodes(&self) -> usize {
+        self.with(|t| t.pinned_nodes())
+    }
+
+    /// Simulate a GPU failure (§6). Returns `(lost, recovered)`.
+    pub fn fail_gpu(&self) -> (usize, usize) {
+        self.with(|t| t.fail_gpu())
+    }
+
+    /// Admission stage A (Algorithm 1 `UPDATE_NODE_IN_GPU` entry): match
+    /// the doc sequence, bring the host-resident part of the match into
+    /// GPU node-by-node (stopping at the first node GPU space cannot be
+    /// made for — the promoted prefix stays usable), pin the usable path,
+    /// and compute the (α, β) split.
+    ///
+    /// `docs` pairs each requested doc with its token count; `request_
+    /// tokens` is everything after the documents (separator + question).
+    /// The returned [`Admission`] MUST be handed back via [`commit`] or
+    /// [`release`] exactly once — the path stays pinned until then.
+    ///
+    /// [`commit`]: CacheService::commit
+    /// [`release`]: CacheService::release
+    pub fn admit(
+        &self,
+        docs: &[(DocId, usize)],
+        request_tokens: usize,
+    ) -> Admission {
+        self.with(|tree| {
+            let ids: Vec<DocId> = docs.iter().map(|&(d, _)| d).collect();
+            let m = tree.lookup(&ids);
+            // Promote root-to-leaf, one node at a time, with the whole
+            // match pinned so making room for a later node can never
+            // evict an earlier one. Transfers are charged for exactly
+            // what moved, including a prefix promoted before a failure.
+            tree.pin(&m.path);
+            let mut transfers = Transfers::default();
+            let mut matched = m.path.len();
+            for (i, &n) in m.path.iter().enumerate() {
+                match tree.promote(&[n]) {
+                    Some(t) => transfers.merge(t),
+                    None => {
+                        matched = i;
+                        break;
+                    }
+                }
+            }
+            // Drop the pins on the unusable tail; the promoted prefix
+            // keeps its pin as the admission pin.
+            tree.unpin(&m.path[matched..]);
+            let use_path: Vec<NodeId> = m.path[..matched].to_vec();
+            let alpha: usize = use_path
+                .iter()
+                .map(|&n| tree.node_tokens(n))
+                .sum();
+            let beta: usize = docs[matched..]
+                .iter()
+                .map(|&(_, t)| t)
+                .sum::<usize>()
+                + request_tokens;
+            Admission {
+                path: use_path,
+                matched_docs: matched,
+                alpha,
+                beta,
+                unmatched: docs[matched..].to_vec(),
+                transfer_bytes: transfers.h2g_bytes + transfers.g2h_bytes,
+                estimated_time: 0.0,
+            }
+        })
+    }
+
+    /// Concatenate the KV payloads along an admission's path into one
+    /// prefix buffer (real mode; simulated nodes carry no payloads).
+    pub fn concat_payloads(&self, path: &[NodeId]) -> Vec<f32> {
+        self.with(|tree| {
+            let parts: Vec<&KvPayload> = path
+                .iter()
+                .filter_map(|&n| tree.node_payload(n))
+                .collect();
+            debug_assert_eq!(parts.len(), path.len());
+            KvPayload::concat(&parts)
+        })
+    }
+
+    /// Policy refresh for the cache-hit nodes of an admission (Algorithm
+    /// 1 lines 3–13 for `was_cached` nodes).
+    pub fn touch_hits(&self, adm: &Admission, estimated_time: f64, now: f64) {
+        self.with(|tree| {
+            for &n in &adm.path {
+                let tokens = tree.node_tokens(n);
+                tree.on_access(
+                    n,
+                    &AccessCtx {
+                        alpha: adm.alpha,
+                        beta: adm.beta,
+                        estimated_time,
+                        was_cached: true,
+                        now,
+                        tokens,
+                    },
+                );
+            }
+        })
+    }
+
+    /// Admission stage B: the prefill ran, its KV is valid. Unpin the
+    /// matched path and insert the newly computed documents as children
+    /// along it, refreshing policy stats (`was_cached = false`). In real
+    /// mode `payloads[i]` carries the KV rows of `unmatched[i]`.
+    ///
+    /// Returns the number of documents actually inserted (insertion stops
+    /// at the first doc that cannot fit — the transient oversized case).
+    pub fn commit(
+        &self,
+        adm: &Admission,
+        estimated_time: f64,
+        now: f64,
+        payloads: Option<Vec<KvPayload>>,
+    ) -> usize {
+        self.with(|tree| {
+            tree.unpin(&adm.path);
+            let mut parent =
+                adm.path.last().copied().unwrap_or(tree.root());
+            let mut inserted = 0usize;
+            for (i, &(doc, tokens)) in adm.unmatched.iter().enumerate() {
+                let payload =
+                    payloads.as_ref().and_then(|ps| ps.get(i).cloned());
+                match tree.insert_child(parent, doc, tokens, payload) {
+                    Some((id, _)) => {
+                        tree.on_access(
+                            id,
+                            &AccessCtx {
+                                alpha: adm.alpha,
+                                beta: adm.beta,
+                                estimated_time,
+                                was_cached: false,
+                                now,
+                                tokens,
+                            },
+                        );
+                        parent = id;
+                        inserted += 1;
+                    }
+                    None => break, // does not fit: stays transient
+                }
+            }
+            inserted
+        })
+    }
+
+    /// Abandon an admission without inserting anything (aborted
+    /// speculation whose prefill never ran): just drop the pins.
+    pub fn release(&self, adm: &Admission) {
+        self.with(|tree| tree.unpin(&adm.path));
+    }
+}
+
+/// Per-request lifecycle + DSP state (paper §5.3), shared between
+/// drivers. Milestones reached by a *speculative* generation are buffered
+/// and only delivered once retrieval confirms the docs (Algorithm 2).
+#[derive(Debug, Default)]
+pub struct RequestState {
+    /// DSP decision state machine (Algorithm 2).
+    pub spec: SpecState,
+    /// Planned candidate evolution of this request's staged retrieval.
+    pub plan: Option<StagedRetrieval>,
+    /// Engine/queue sequence of the live generation (if any).
+    pub active_seq: Option<u64>,
+    pub active_docs: Vec<DocId>,
+    pub next_gen: u64,
+    /// Retrieval finished; results may be surfaced to the client.
+    pub confirmed: bool,
+    pub retrieval_done_at: Option<f64>,
+    /// When the generation carrying the *final* docs entered the queue.
+    pub final_enqueue_at: Option<f64>,
+    pub spec_first_token_at: Option<f64>,
+    pub spec_finished_at: Option<f64>,
+    pub done: bool,
+}
+
+impl RequestState {
+    /// Allocate the next generation-tagged sequence id for request
+    /// `req`, marking it live.
+    pub fn begin_generation(&mut self, req: usize, docs: &[DocId]) -> u64 {
+        let gen = self.next_gen;
+        self.next_gen += 1;
+        let seq = req as u64 * GEN_BASE + gen;
+        self.active_seq = Some(seq);
+        self.active_docs = docs.to_vec();
+        seq
+    }
+
+    pub fn is_live(&self, seq: u64) -> bool {
+        self.active_seq == Some(seq)
+    }
+}
+
+/// The shared pipeline: cache service, reorder queue, request states and
+/// metrics — everything between "retrieval produced candidates" and "the
+/// engine ran an iteration" that is identical across drivers.
+pub struct Pipeline {
+    /// `None` for cache-less baselines (vLLM configuration).
+    pub cache: Option<CacheService>,
+    pub queue: ReorderQueue,
+    pub recorder: Recorder,
+    pub requests: Vec<RequestState>,
+}
+
+impl Pipeline {
+    pub fn new(
+        cache: Option<CacheService>,
+        reorder: bool,
+        window: usize,
+    ) -> Self {
+        Pipeline {
+            cache,
+            queue: ReorderQueue::new(reorder, window),
+            recorder: Recorder::new(),
+            requests: Vec::new(),
+        }
+    }
+
+    /// Pre-size the request table (simulation knows the trace length).
+    pub fn reserve_requests(&mut self, n: usize) {
+        self.requests.resize_with(n, RequestState::default);
+    }
+
+    /// Cached/compute token split used for the §5.2 reordering priority
+    /// of a not-yet-admitted generation.
+    pub fn queue_lengths(
+        &self,
+        docs: &[DocId],
+        doc_tokens_total: usize,
+        request_tokens: usize,
+    ) -> (usize, usize) {
+        match &self.cache {
+            None => (0, doc_tokens_total + request_tokens),
+            Some(c) => {
+                let m = c.lookup(docs);
+                (
+                    m.cached_tokens,
+                    doc_tokens_total.saturating_sub(m.cached_tokens)
+                        + request_tokens,
+                )
+            }
+        }
+    }
+
+    /// Admission stage A against the cache (identity admission for the
+    /// cache-less baseline). Returns the admission and the transfer time
+    /// its cache-hit loading costs, per the driver's link model.
+    pub fn admit(
+        &self,
+        driver: &dyn PipelineDriver,
+        docs: &[(DocId, usize)],
+        request_tokens: usize,
+    ) -> (Admission, f64) {
+        match &self.cache {
+            Some(c) => {
+                let adm = c.admit(docs, request_tokens);
+                let extra = driver.transfer_time(adm.transfer_bytes);
+                (adm, extra)
+            }
+            None => (
+                Admission {
+                    beta: docs.iter().map(|&(_, t)| t).sum::<usize>()
+                        + request_tokens,
+                    unmatched: docs.to_vec(),
+                    ..Admission::default()
+                },
+                0.0,
+            ),
+        }
+    }
+
+    /// Policy refresh for an admission's hit nodes (no-op without cache).
+    pub fn touch_hits(&self, adm: &Admission, estimated_time: f64, now: f64) {
+        if let Some(c) = &self.cache {
+            c.touch_hits(adm, estimated_time, now);
+        }
+    }
+
+    /// Admission stage B (no-op without cache). See
+    /// [`CacheService::commit`].
+    pub fn commit_prefill(
+        &self,
+        adm: &Admission,
+        estimated_time: f64,
+        now: f64,
+        payloads: Option<Vec<KvPayload>>,
+    ) -> usize {
+        match &self.cache {
+            Some(c) => c.commit(adm, estimated_time, now, payloads),
+            None => 0,
+        }
+    }
+
+    /// Abandon an admission (no-op without cache).
+    pub fn abort_admission(&self, adm: &Admission) {
+        if let Some(c) = &self.cache {
+            c.release(adm);
+        }
+    }
+
+    /// Record hit/token accounting for a generation carrying the final
+    /// docs (§7 metrics definitions).
+    pub fn record_admission(
+        &mut self,
+        req: u64,
+        docs_retrieved: usize,
+        adm: &Admission,
+    ) {
+        self.recorder.docs(req, docs_retrieved, adm.matched_docs);
+        self.recorder.tokens(req, adm.alpha, adm.beta);
+    }
+
+    /// Final retrieval results are in (paper §5.3 delivery rule): confirm
+    /// the request and deliver any milestones the speculation already
+    /// reached — they could not be surfaced before the search confirmed
+    /// its docs. Also records the Table 3 non-overlapped search time.
+    pub fn confirm_final(
+        &mut self,
+        req: usize,
+        now: f64,
+        output_tokens: usize,
+        full_search_s: f64,
+    ) {
+        let r = &mut self.requests[req];
+        r.retrieval_done_at = Some(now);
+        r.confirmed = true;
+        self.recorder.retrieval_done(req as u64, now);
+        if let Some(ft) = self.requests[req].spec_first_token_at {
+            self.recorder.first_token(req as u64, ft.max(now));
+        }
+        if let Some(fin) = self.requests[req].spec_finished_at {
+            self.recorder.finished(req as u64, fin.max(now));
+            self.recorder.output_tokens(req as u64, output_tokens);
+            self.requests[req].done = true;
+        }
+        // Table 3: the part of the retrieval not hidden behind LLM-side
+        // work on the final-docs generation.
+        let overlap = self.requests[req]
+            .final_enqueue_at
+            .map(|t| (now - t).clamp(0.0, full_search_s))
+            .unwrap_or(0.0);
+        self.recorder
+            .non_overlapped_search(req as u64, full_search_s - overlap);
+    }
+
+    /// Prefill milestone of `seq`: deliver or buffer the first token,
+    /// depending on whether retrieval already confirmed `final_docs`.
+    /// Stale sequences (terminated speculations) are ignored — their KV
+    /// was already committed by the caller.
+    pub fn deliver_first_token(
+        &mut self,
+        req: usize,
+        seq: u64,
+        final_docs: &[DocId],
+        now: f64,
+    ) {
+        if !self.requests[req].is_live(seq) {
+            return; // terminated speculation: cache filled, no delivery
+        }
+        let r = &mut self.requests[req];
+        if r.confirmed && r.active_docs == final_docs {
+            self.recorder.first_token(req as u64, now);
+        } else {
+            r.spec_first_token_at = Some(now);
+        }
+    }
+
+    /// Completion milestone of `seq`: deliver or buffer the finish.
+    pub fn deliver_finished(
+        &mut self,
+        req: usize,
+        seq: u64,
+        final_docs: &[DocId],
+        output_tokens: usize,
+        now: f64,
+    ) {
+        if !self.requests[req].is_live(seq) {
+            return;
+        }
+        let r = &mut self.requests[req];
+        if r.confirmed && r.active_docs == final_docs {
+            self.recorder.finished(req as u64, now);
+            self.recorder.output_tokens(req as u64, output_tokens);
+            r.done = true;
+        } else {
+            r.spec_finished_at = Some(now);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PolicyKind;
+    use crate::kvcache::PageSpec;
+    use crate::policy::make_policy;
+
+    fn service(gpu_tokens: usize, host_tokens: usize) -> CacheService {
+        let page = PageSpec {
+            block_tokens: 8,
+            kv_bytes_per_token: 16,
+        };
+        CacheService::new(KnowledgeTree::new(
+            page.bytes(gpu_tokens),
+            page.bytes(host_tokens),
+            page,
+            make_policy(PolicyKind::Pgdsf),
+            true,
+            0,
+        ))
+    }
+
+    struct TestDriver;
+
+    impl PipelineDriver for TestDriver {
+        fn now(&self) -> f64 {
+            1.0
+        }
+        fn transfer_time(&self, bytes: u64) -> f64 {
+            bytes as f64 * 1e-9
+        }
+    }
+
+    #[test]
+    fn admit_commit_roundtrip_inserts_and_unpins() {
+        let svc = service(1024, 1024);
+        let docs = [(1u32, 16usize), (2, 16)];
+        let adm = svc.admit(&docs, 8);
+        assert_eq!(adm.matched_docs, 0);
+        assert_eq!(adm.alpha, 0);
+        assert_eq!(adm.beta, 16 + 16 + 8);
+        assert_eq!(adm.unmatched, vec![(1, 16), (2, 16)]);
+        let inserted = svc.commit(&adm, 0.01, 1.0, None);
+        assert_eq!(inserted, 2);
+        svc.check_invariants();
+        assert_eq!(svc.pinned_nodes(), 0, "commit released all pins");
+
+        // Second admission fully hits and pins the path.
+        let adm2 = svc.admit(&docs, 8);
+        assert_eq!(adm2.matched_docs, 2);
+        assert_eq!(adm2.alpha, 32);
+        assert_eq!(adm2.beta, 8);
+        assert_eq!(svc.pinned_nodes(), 2);
+        svc.touch_hits(&adm2, 0.005, 2.0);
+        svc.commit(&adm2, 0.005, 2.0, None);
+        assert_eq!(svc.pinned_nodes(), 0);
+        svc.check_invariants();
+    }
+
+    #[test]
+    fn release_drops_pins_without_inserting() {
+        let svc = service(1024, 1024);
+        let adm = svc.admit(&[(7, 16)], 4);
+        svc.commit(&adm, 0.01, 1.0, None);
+        let adm2 = svc.admit(&[(7, 16), (8, 16)], 4);
+        assert_eq!(adm2.matched_docs, 1);
+        svc.release(&adm2);
+        assert_eq!(svc.pinned_nodes(), 0);
+        // Doc 8 was never inserted.
+        assert_eq!(svc.lookup(&[7, 8]).matched_docs, 1);
+        svc.check_invariants();
+    }
+
+    #[test]
+    fn pipeline_without_cache_is_identity() {
+        let p = Pipeline::new(None, false, 4);
+        let (adm, extra) =
+            p.admit(&TestDriver, &[(3, 100), (4, 50)], 10);
+        assert_eq!(adm.alpha, 0);
+        assert_eq!(adm.beta, 160);
+        assert_eq!(adm.matched_docs, 0);
+        assert_eq!(extra, 0.0);
+        assert_eq!(p.commit_prefill(&adm, 0.1, 0.0, None), 0);
+        assert_eq!(p.queue_lengths(&[3, 4], 150, 10), (0, 160));
+    }
+
+    #[test]
+    fn confirm_final_delivers_buffered_milestones() {
+        let mut p = Pipeline::new(None, false, 4);
+        p.reserve_requests(1);
+        let seq = p.requests[0].begin_generation(0, &[5, 6]);
+        p.recorder.arrival(0, 0.0);
+        // Speculative milestones arrive before retrieval confirms.
+        p.deliver_first_token(0, seq, &[5, 6], 0.4);
+        p.deliver_finished(0, seq, &[5, 6], 3, 0.6);
+        assert!(p.recorder.record(0).unwrap().first_token.is_none());
+        p.confirm_final(0, 0.5, 3, 0.5);
+        let rec = p.recorder.record(0).unwrap();
+        assert_eq!(rec.first_token, Some(0.5), "delivered at max(ft, now)");
+        assert_eq!(rec.finished, Some(0.6));
+        assert!(p.requests[0].done);
+    }
+
+    #[test]
+    fn stale_sequences_do_not_deliver() {
+        let mut p = Pipeline::new(None, false, 4);
+        p.reserve_requests(1);
+        let old = p.requests[0].begin_generation(0, &[1]);
+        let _new = p.requests[0].begin_generation(0, &[2]);
+        p.deliver_first_token(0, old, &[1], 0.3);
+        assert!(p.requests[0].spec_first_token_at.is_none());
+        assert!(p.recorder.record(0).is_none());
+    }
+
+    #[test]
+    fn gen_base_roundtrip() {
+        let mut r = RequestState::default();
+        let s0 = r.begin_generation(3, &[9]);
+        let s1 = r.begin_generation(3, &[9, 10]);
+        assert_eq!(request_of(s0), 3);
+        assert_eq!(request_of(s1), 3);
+        assert_ne!(s0, s1);
+        assert!(!r.is_live(s0));
+        assert!(r.is_live(s1));
+    }
+}

@@ -3,14 +3,20 @@
 //! Rust vector index, prefill/decode through the PJRT-compiled JAX+Pallas
 //! artifacts, and real KV payloads cached in the tree.
 //!
-//! This is the end-to-end proof that all three layers compose; the
-//! paper-scale experiments use the virtual-clock [`super::sim_server`].
+//! This is the *real driver* over the shared [`pipeline`](super::pipeline)
+//! core: admission (match → promote → pin → α/β), policy refresh and
+//! post-prefill insertion are the exact code the simulated controller
+//! runs; this file contributes wall-clock timing, real vector search and
+//! PJRT execution. It is the end-to-end proof that all three layers
+//! compose; the paper-scale experiments use the virtual-clock
+//! [`super::sim_server`].
 
+use super::pipeline::{CacheService, Pipeline, PipelineDriver};
 use crate::embed::EmbeddingModel;
 use crate::kvcache::{KvPayload, PageSpec};
 use crate::llm::tokenizer::SEP;
 use crate::metrics::Recorder;
-use crate::policy::{make_policy, AccessCtx};
+use crate::policy::make_policy;
 use crate::runtime::PjrtModel;
 use crate::sim::{Clock, RealClock};
 use crate::tree::KnowledgeTree;
@@ -47,6 +53,14 @@ impl Default for RealConfig {
     }
 }
 
+/// Aggregate serving metrics, cheap enough for per-poll computation.
+#[derive(Debug, Clone, Copy)]
+pub struct ServingStats {
+    pub requests: usize,
+    pub mean_ttft_s: f64,
+    pub hit_rate: f64,
+}
+
 /// Response of one served request.
 #[derive(Debug, Clone)]
 pub struct RealResponse {
@@ -61,21 +75,65 @@ pub struct RealResponse {
     pub output_tokens: Vec<i32>,
 }
 
+/// The real-mode [`PipelineDriver`]: wall clock; GPU↔host "transfers" are
+/// in-process copies whose cost is already part of measured latency.
+struct RealDriver {
+    clock: RealClock,
+}
+
+impl PipelineDriver for RealDriver {
+    fn now(&self) -> f64 {
+        self.clock.now()
+    }
+
+    fn transfer_time(&self, _bytes: u64) -> f64 {
+        0.0
+    }
+}
+
 /// The real-mode serving stack.
 pub struct RealServer {
     model: PjrtModel,
-    tree: KnowledgeTree,
+    pipeline: Pipeline,
+    driver: RealDriver,
     index: Box<dyn VectorIndex>,
     em: EmbeddingModel,
     /// Token ids of each knowledge document.
     doc_tokens: Vec<Vec<i32>>,
-    clock: RealClock,
-    recorder: Recorder,
     rng: Rng,
     next_id: u64,
 }
 
 impl RealServer {
+    /// The page spec this server would size its cache with — exposed so
+    /// callers can pre-build a shared [`CacheService`] (e.g. for the
+    /// concurrent runtime's priority estimator) before the non-`Send`
+    /// PJRT model exists.
+    pub fn page_spec(
+        kv_floats_per_token: usize,
+        cfg: &RealConfig,
+    ) -> PageSpec {
+        PageSpec {
+            block_tokens: cfg.block_tokens,
+            kv_bytes_per_token: kv_floats_per_token * 4,
+        }
+    }
+
+    /// Build the knowledge tree this server would construct itself.
+    pub fn build_tree(
+        kv_floats_per_token: usize,
+        cfg: &RealConfig,
+    ) -> KnowledgeTree {
+        KnowledgeTree::new(
+            cfg.gpu_cache_bytes,
+            cfg.host_cache_bytes,
+            Self::page_spec(kv_floats_per_token, cfg),
+            make_policy(cfg.policy),
+            true,
+            0,
+        )
+    }
+
     pub fn new(
         model: PjrtModel,
         index: Box<dyn VectorIndex>,
@@ -83,44 +141,63 @@ impl RealServer {
         doc_tokens: Vec<Vec<i32>>,
         cfg: &RealConfig,
     ) -> Result<Self> {
-        let kv_bytes =
-            model.manifest().arch.kv_floats_per_token() * 4;
-        let page = PageSpec {
-            block_tokens: cfg.block_tokens,
-            kv_bytes_per_token: kv_bytes,
-        };
-        let tree = KnowledgeTree::new(
-            cfg.gpu_cache_bytes,
-            cfg.host_cache_bytes,
-            page,
-            make_policy(cfg.policy),
-            true,
-            0,
-        );
+        let kv = model.manifest().arch.kv_floats_per_token();
+        let cache = CacheService::new(Self::build_tree(kv, cfg));
+        Self::with_cache(model, index, em, doc_tokens, cache)
+    }
+
+    /// Assemble the stack around a pre-built, possibly shared cache
+    /// service (its tree must have been sized with
+    /// [`RealServer::page_spec`] for this model).
+    pub fn with_cache(
+        model: PjrtModel,
+        index: Box<dyn VectorIndex>,
+        em: EmbeddingModel,
+        doc_tokens: Vec<Vec<i32>>,
+        cache: CacheService,
+    ) -> Result<Self> {
         Ok(RealServer {
             model,
-            tree,
+            // Real-mode request ordering happens in the concurrent TCP
+            // runtime's SharedReorderQueue (crate::server), not here:
+            // this pipeline's own queue is unused, so it stays FIFO.
+            pipeline: Pipeline::new(Some(cache), false, 1),
+            driver: RealDriver {
+                clock: RealClock::new(),
+            },
             index,
             em,
             doc_tokens,
-            clock: RealClock::new(),
-            recorder: Recorder::new(),
             rng: Rng::new(0xE2E),
             next_id: 0,
         })
     }
 
-    pub fn recorder(&self) -> &Recorder {
-        &self.recorder
+    /// Snapshot of the serving metrics. O(requests served) — intended
+    /// for offline analysis (tests, examples), not the polling path; use
+    /// [`RealServer::stats`] for that.
+    pub fn recorder(&self) -> Recorder {
+        self.pipeline.recorder.clone()
     }
 
-    pub fn tree(&self) -> &KnowledgeTree {
-        &self.tree
+    /// Cheap aggregates for observability polling (no record snapshot).
+    pub fn stats(&self) -> ServingStats {
+        let r = &self.pipeline.recorder;
+        ServingStats {
+            requests: r.len(),
+            mean_ttft_s: r.ttft().mean(),
+            hit_rate: r.hit_rate(),
+        }
     }
 
-    /// Mutable tree access for administration and failure injection.
-    pub fn tree_mut(&mut self) -> &mut KnowledgeTree {
-        &mut self.tree
+    /// The shared, thread-safe cache service backing this server — usable
+    /// from other threads (e.g. the concurrent TCP runtime's priority
+    /// estimator) and for administration / failure injection.
+    pub fn cache(&self) -> &CacheService {
+        self.pipeline
+            .cache
+            .as_ref()
+            .expect("real server always has a cache")
     }
 
     /// Chunked prefill through the compiled buckets: feeds `tokens` on
@@ -133,19 +210,15 @@ impl RealServer {
         chunk: usize,
     ) -> Result<Vec<f32>> {
         let mut last_logits = Vec::new();
-        let mut new_rows = Vec::new();
         for piece in tokens.chunks(chunk.max(1)) {
             let out = self
                 .model
                 .prefill(prefix_kv, piece)
                 .context("chunked prefill")?;
             prefix_kv.extend_from_slice(&out.new_kv);
-            new_rows.extend_from_slice(&out.new_kv);
             last_logits = out.last_logits;
         }
         debug_assert!(!last_logits.is_empty());
-        // new_rows are returned via prefix_kv growth; keep logits.
-        let _ = new_rows;
         Ok(last_logits)
     }
 
@@ -160,33 +233,33 @@ impl RealServer {
     ) -> Result<RealResponse> {
         let id = self.next_id;
         self.next_id += 1;
-        let t_arrive = self.clock.now();
-        self.recorder.arrival(id, t_arrive);
+        let t_arrive = self.driver.now();
+        self.pipeline.recorder.arrival(id, t_arrive);
 
         // Retrieval (Rust vector index — real search).
         let q = self.em.query(target_doc, cfg.query_noise, &mut self.rng);
         let hits = self.index.search(&q, cfg.top_k);
         let docs: Vec<u32> = hits.iter().map(|h| h.1).collect();
-        self.recorder.retrieval_done(id, self.clock.now());
+        self.pipeline
+            .recorder
+            .retrieval_done(id, self.driver.now());
 
-        // Cache lookup + prefix assembly.
-        let m = self.tree.lookup(&docs);
-        self.tree.pin(&m.path);
-        let payloads: Vec<&KvPayload> = m
-            .path
+        // Shared admission: match → promote (with GPU-prefix fallback) →
+        // pin → (α, β). The separator + question form the request tail.
+        let docs_tokens: Vec<(u32, usize)> = docs
             .iter()
-            .filter_map(|&n| self.tree.node_payload(n))
+            .map(|&d| (d, self.doc_tokens[d as usize].len()))
             .collect();
-        debug_assert_eq!(payloads.len(), m.path.len());
-        let mut kv = KvPayload::concat(&payloads);
-        let promote = self.tree.promote(&m.path);
-        debug_assert!(promote.is_some());
+        let request_tokens = 1 + query_tokens.len(); // SEP + question
+        let (adm, _transfer_secs) =
+            self.pipeline
+                .admit(&self.driver, &docs_tokens, request_tokens);
+        let mut kv = self.cache().concat_payloads(&adm.path);
 
         // Non-cached documents + separator + question.
-        let unmatched: Vec<u32> = docs[m.matched_docs..].to_vec();
         let mut new_tokens: Vec<i32> = Vec::new();
         let mut doc_lens = Vec::new();
-        for &d in &unmatched {
+        for &(d, _) in &adm.unmatched {
             let toks = &self.doc_tokens[d as usize];
             new_tokens.extend_from_slice(toks);
             doc_lens.push(toks.len());
@@ -194,65 +267,41 @@ impl RealServer {
         let doc_token_total: usize = doc_lens.iter().sum();
         new_tokens.push(SEP);
         new_tokens.extend_from_slice(query_tokens);
+        let beta = adm.beta;
+        debug_assert_eq!(beta, new_tokens.len());
 
         let kv_per_tok =
             self.model.manifest().arch.kv_floats_per_token();
         let kv_before = kv.len();
-        let t_prefill0 = self.clock.now();
+        let t_prefill0 = self.driver.now();
         let logits =
-            self.chunked_prefill(&mut kv, &new_tokens, cfg.chunk)?;
-        let t_first = self.clock.now();
-        self.recorder.first_token(id, t_first);
+            match self.chunked_prefill(&mut kv, &new_tokens, cfg.chunk) {
+                Ok(l) => l,
+                Err(e) => {
+                    // The admission contract: a failed prefill must still
+                    // return the pins, or the shared cache accumulates
+                    // unevictable nodes for the life of the server.
+                    self.pipeline.abort_admission(&adm);
+                    return Err(e);
+                }
+            };
+        let t_first = self.driver.now();
+        self.pipeline.recorder.first_token(id, t_first);
         let prefill_secs = t_first - t_prefill0;
 
-        // Cache the newly computed document KV (rows precede SEP+query).
+        // Cache the newly computed document KV (rows precede SEP+query):
+        // shared commit path — policy refresh for hits, then unpin +
+        // insert the new children with their payloads.
         let new_kv = &kv[kv_before..];
         let doc_rows = &new_kv[..doc_token_total * kv_per_tok];
-        let split = if doc_lens.is_empty() {
+        let payloads = if doc_lens.is_empty() {
             Vec::new()
         } else {
             KvPayload::split(doc_rows, &doc_lens)
         };
-        self.tree.unpin(&m.path);
-        let beta = new_tokens.len();
-        let ctx_tmpl = AccessCtx {
-            alpha: m.cached_tokens,
-            beta,
-            estimated_time: prefill_secs,
-            was_cached: false,
-            now: t_first,
-            tokens: 0,
-        };
-        for &n in &m.path {
-            let tokens = self.tree.node_tokens(n);
-            self.tree.on_access(
-                n,
-                &AccessCtx {
-                    was_cached: true,
-                    tokens,
-                    ..ctx_tmpl
-                },
-            );
-        }
-        let mut parent = m.path.last().copied().unwrap_or(self.tree.root());
-        for (i, payload) in split.into_iter().enumerate() {
-            let doc = unmatched[i];
-            let tokens = payload.tokens();
-            match self.tree.insert_child(parent, doc, tokens, Some(payload))
-            {
-                Some((node, _)) => {
-                    self.tree.on_access(
-                        node,
-                        &AccessCtx {
-                            tokens,
-                            ..ctx_tmpl
-                        },
-                    );
-                    parent = node;
-                }
-                None => break,
-            }
-        }
+        self.pipeline.touch_hits(&adm, prefill_secs, t_first);
+        self.pipeline
+            .commit_prefill(&adm, prefill_secs, t_first, Some(payloads));
 
         // Greedy decode.
         let mut out_tokens = vec![argmax(&logits) as i32];
@@ -262,17 +311,16 @@ impl RealServer {
             kv.extend_from_slice(&step.new_kv);
             out_tokens.push(argmax(&step.last_logits) as i32);
         }
-        let t_done = self.clock.now();
-        self.recorder.finished(id, t_done);
-        self.recorder.docs(id, docs.len(), m.matched_docs);
-        self.recorder.tokens(id, m.cached_tokens, beta);
+        let t_done = self.driver.now();
+        self.pipeline.recorder.finished(id, t_done);
+        self.pipeline.record_admission(id, docs.len(), &adm);
 
         Ok(RealResponse {
             id,
             docs,
-            cached_tokens: m.cached_tokens,
+            cached_tokens: adm.alpha,
             computed_tokens: beta,
-            docs_hit: m.matched_docs,
+            docs_hit: adm.matched_docs,
             ttft: t_first - t_arrive,
             total: t_done - t_arrive,
             output_tokens: out_tokens,

@@ -1,7 +1,16 @@
 //! Event-driven simulation server: the full RAGCache pipeline (and its
 //! vLLM/SGLang baseline configurations) against the virtual clock and the
 //! analytic GPU cost model. This is what every paper-scale bench drives.
+//!
+//! All cache/DSP/delivery semantics live in the shared
+//! [`pipeline`](super::pipeline) core; this file is the *simulation
+//! driver*: it owns the event loop, the iteration-level batching engine,
+//! and a [`PipelineDriver`] built from the virtual clock, the PCIe
+//! transfer model and the analytic `(α, β)` cost profile.
 
+use super::pipeline::{
+    request_of, Admission, CacheService, Pipeline, PipelineDriver,
+};
 use super::retrieval::{RetrievalTiming, StagedRetrieval};
 use crate::config::{SystemConfig, SystemKind};
 use crate::kvcache::{PageSpec, TransferModel};
@@ -9,17 +18,14 @@ use crate::llm::cost_model::{CostModel, CostProfile};
 use crate::llm::engine::{AbortOutcome, Engine, SeqEvent, SeqSpec};
 use crate::llm::models::{GpuSpec, ModelSpec};
 use crate::metrics::Recorder;
-use crate::policy::{make_policy, AccessCtx};
-use crate::sched::{PendingRequest, ReorderQueue};
+use crate::policy::make_policy;
+use crate::sched::PendingRequest;
 use crate::sim::{Clock, EventQueue, SimClock};
-use crate::spec::{SpecAction, SpecState};
-use crate::tree::{DocId, KnowledgeTree, NodeId};
+use crate::spec::SpecAction;
+use crate::tree::{DocId, KnowledgeTree};
 use crate::util::Rng;
 use crate::workload::Trace;
 use std::time::Instant;
-
-/// Generation-tagged engine sequence id: `request_index * GEN_BASE + gen`.
-const GEN_BASE: u64 = 1024;
 
 #[derive(Debug, Clone)]
 enum Event {
@@ -28,36 +34,6 @@ enum Event {
     /// Completion of the iteration with this epoch tag (stale tags are
     /// ignored — the iteration was cancelled).
     EngineDone(u64),
-}
-
-/// Info captured at admission, needed when the prefill completes.
-#[derive(Debug, Clone, Default)]
-struct AdmitInfo {
-    /// Matched (pinned) tree path.
-    path: Vec<NodeId>,
-    /// Docs to insert after compute: `(doc, tokens)`.
-    unmatched: Vec<(DocId, usize)>,
-    alpha: usize,
-    beta: usize,
-    estimated_time: f64,
-}
-
-#[derive(Debug, Default)]
-struct ReqSim {
-    spec: SpecState,
-    /// Planned candidate evolution of this request's staged retrieval.
-    spec_plan: Option<StagedRetrieval>,
-    /// Engine/queue sequence of the live generation (if any).
-    active_seq: Option<u64>,
-    active_docs: Vec<DocId>,
-    next_gen: u64,
-    confirmed: bool,
-    retrieval_done_at: Option<f64>,
-    /// When the generation carrying the *final* docs entered the queue.
-    final_enqueue_at: Option<f64>,
-    spec_first_token_at: Option<f64>,
-    spec_finished_at: Option<f64>,
-    done: bool,
 }
 
 /// Aggregated results of one simulation run.
@@ -73,28 +49,40 @@ pub struct SimOutcome {
     pub completed: usize,
 }
 
+/// The simulation's [`PipelineDriver`]: virtual clock + analytic models.
+struct SimDriver {
+    clock: SimClock,
+    transfer: TransferModel,
+    profile: CostProfile,
+}
+
+impl PipelineDriver for SimDriver {
+    fn now(&self) -> f64 {
+        self.clock.now()
+    }
+
+    fn transfer_time(&self, bytes: u64) -> f64 {
+        self.transfer.transfer_time(bytes)
+    }
+}
+
 /// The simulation server.
 pub struct SimServer {
     kind: SystemKind,
-    clock: SimClock,
+    driver: SimDriver,
     events: EventQueue<Event>,
     engine: Engine,
-    tree: Option<KnowledgeTree>,
-    queue: ReorderQueue,
-    profile: CostProfile,
-    transfer: TransferModel,
+    pipeline: Pipeline,
     timing: RetrievalTiming,
     spec_enabled: bool,
     max_batch: usize,
-    requests: Vec<ReqSim>,
     /// Admission context per engine sequence (pinned path + docs to
     /// insert after the prefill). Keyed by seq id so aborted-but-
     /// completing speculations still cache their KV.
-    admit_infos: std::collections::HashMap<u64, AdmitInfo>,
+    admit_infos: std::collections::HashMap<u64, Admission>,
     /// Docs of every generation ever started (for stale-seq insertion).
     gen_docs: std::collections::HashMap<u64, Vec<DocId>>,
     trace: Trace,
-    recorder: Recorder,
     rng: Rng,
     num_docs: usize,
     sched_secs: f64,
@@ -156,26 +144,28 @@ impl SimServer {
         } else {
             TransferModel::pcie4()
         };
-        let n = trace.requests.len();
-        let mut requests = Vec::with_capacity(n);
-        requests.resize_with(n, ReqSim::default);
+        let mut pipeline = Pipeline::new(
+            tree.map(CacheService::new),
+            reorder,
+            cfg.sched.window,
+        );
+        pipeline.reserve_requests(trace.requests.len());
         Ok(SimServer {
             kind,
-            clock: SimClock::new(),
+            driver: SimDriver {
+                clock: SimClock::new(),
+                transfer,
+                profile,
+            },
             events: EventQueue::new(),
             engine,
-            tree,
-            queue: ReorderQueue::new(reorder, cfg.sched.window),
-            profile,
-            transfer,
+            pipeline,
             timing,
             spec_enabled,
             max_batch: cfg.engine.max_batch,
-            requests,
             admit_infos: std::collections::HashMap::new(),
             gen_docs: std::collections::HashMap::new(),
             trace,
-            recorder: Recorder::new(),
             rng: Rng::new(seed ^ 0x51_C0_FF_EE),
             num_docs,
             sched_secs: 0.0,
@@ -196,7 +186,7 @@ impl SimServer {
             self.events.schedule(at, Event::Arrival(i));
         }
         while let Some((t, ev)) = self.events.next() {
-            self.clock.advance_to(t);
+            self.driver.clock.advance_to(t);
             match ev {
                 Event::Arrival(i) => self.on_arrival(i),
                 Event::Stage { req, stage } => self.on_stage(req, stage),
@@ -204,33 +194,47 @@ impl SimServer {
             }
             self.pump();
         }
-        let completed =
-            self.requests.iter().filter(|r| r.done).count();
+        let completed = self
+            .pipeline
+            .requests
+            .iter()
+            .filter(|r| r.done)
+            .count();
         SimOutcome {
-            recorder: self.recorder,
-            tree_counters: self.tree.as_ref().map(|t| t.counters()),
+            tree_counters: self
+                .pipeline
+                .cache
+                .as_ref()
+                .map(|c| c.counters()),
             spec_started: self
+                .pipeline
                 .requests
                 .iter()
                 .map(|r| r.spec.started)
                 .sum(),
-            spec_wasted: self.requests.iter().map(|r| r.spec.wasted).sum(),
+            spec_wasted: self
+                .pipeline
+                .requests
+                .iter()
+                .map(|r| r.spec.wasted)
+                .sum(),
             mean_sched_time: if self.sched_ops == 0 {
                 0.0
             } else {
                 self.sched_secs / self.sched_ops as f64
             },
             completed,
+            recorder: self.pipeline.recorder,
         }
     }
 
     fn now(&self) -> f64 {
-        self.clock.now()
+        self.driver.now()
     }
 
     fn on_arrival(&mut self, i: usize) {
         let now = self.now();
-        self.recorder.arrival(i as u64, now);
+        self.pipeline.recorder.arrival(i as u64, now);
         let docs = self.trace.requests[i].docs.clone();
         let plan = if self.spec_enabled {
             StagedRetrieval::plan(
@@ -247,20 +251,21 @@ impl SimServer {
                 .schedule(now + stage.offset, Event::Stage { req: i, stage: s });
         }
         // Stash the plan's candidate docs on the request.
-        self.requests[i].active_docs = Vec::new();
-        self.requests[i].spec_plan = Some(plan);
+        self.pipeline.requests[i].active_docs = Vec::new();
+        self.pipeline.requests[i].plan = Some(plan);
     }
 
     fn on_stage(&mut self, req: usize, stage: usize) {
         let t0 = Instant::now();
         let now = self.now();
-        let plan = self.requests[req]
-            .spec_plan
+        let sp = self.pipeline.requests[req]
+            .plan
             .as_ref()
-            .expect("stage plan exists");
-        let sp = plan.stages[stage].clone();
-        let pool_len = self.engine.waiting_len() + self.queue.len();
-        let action = self.requests[req].spec.on_stage(
+            .expect("stage plan exists")
+            .stages[stage]
+            .clone();
+        let pool_len = self.engine.waiting_len() + self.pipeline.queue.len();
+        let action = self.pipeline.requests[req].spec.on_stage(
             &sp.docs,
             pool_len,
             self.max_batch,
@@ -281,42 +286,16 @@ impl SimServer {
             }
         }
         if sp.is_final {
-            self.on_retrieval_final(req, now);
+            let output_tokens = self.trace.requests[req].output_tokens;
+            self.pipeline.confirm_final(
+                req,
+                now,
+                output_tokens,
+                self.timing.full_search_s,
+            );
         }
         self.sched_secs += t0.elapsed().as_secs_f64();
         self.sched_ops += 1;
-    }
-
-    /// Final retrieval results are in: confirm or nothing (re-generation
-    /// was already started by the Start action if docs changed).
-    fn on_retrieval_final(&mut self, req: usize, now: f64) {
-        let r = &mut self.requests[req];
-        r.retrieval_done_at = Some(now);
-        self.recorder.retrieval_done(req as u64, now);
-        r.confirmed = true;
-        // Deliver buffered speculative results.
-        if let Some(ft) = r.spec_first_token_at {
-            let deliver = ft.max(now);
-            self.recorder.first_token(req as u64, deliver);
-        }
-        if let Some(fin) = r.spec_finished_at {
-            let deliver = fin.max(now);
-            self.recorder.finished(req as u64, deliver);
-            self.recorder
-                .output_tokens(req as u64, self.trace.requests[req].output_tokens);
-            self.requests[req].done = true;
-        }
-        // Table 3 non-overlapping search time: the part of the retrieval
-        // not hidden behind LLM-side work on the final-docs generation.
-        let retrieval_time = self.timing.full_search_s;
-        let overlap = self.requests[req]
-            .final_enqueue_at
-            .map(|t| (now - t).clamp(0.0, retrieval_time))
-            .unwrap_or(0.0);
-        self.recorder.non_overlapped_search(
-            req as u64,
-            retrieval_time - overlap,
-        );
     }
 
     /// Abort the live generation of `req`, wherever it is. Sequences in
@@ -324,10 +303,10 @@ impl SimServer {
     /// the FirstToken that still fires); everything else is unpinned
     /// here.
     fn abort_generation(&mut self, req: usize) {
-        let Some(seq) = self.requests[req].active_seq.take() else {
+        let Some(seq) = self.pipeline.requests[req].active_seq.take() else {
             return;
         };
-        self.queue.remove(seq);
+        self.pipeline.queue.remove(seq);
         match self.engine.abort(seq) {
             AbortOutcome::Deferred => {
                 if self.engine.in_flight_fully_killed() {
@@ -335,10 +314,8 @@ impl SimServer {
                     // iteration, terminate immediately. Partial work is
                     // discarded (no KV cached).
                     for id in self.engine.cancel_in_flight() {
-                        if let Some(info) = self.admit_infos.remove(&id) {
-                            if let Some(tree) = self.tree.as_mut() {
-                                tree.unpin(&info.path);
-                            }
+                        if let Some(adm) = self.admit_infos.remove(&id) {
+                            self.pipeline.abort_admission(&adm);
                         }
                     }
                     self.inflight_epoch = None;
@@ -347,48 +324,38 @@ impl SimServer {
                 // insertion (the KV is computed and cached).
             }
             AbortOutcome::Removed | AbortOutcome::NotFound => {
-                if let Some(info) = self.admit_infos.remove(&seq) {
-                    if let Some(tree) = self.tree.as_mut() {
-                        tree.unpin(&info.path);
-                    }
+                if let Some(adm) = self.admit_infos.remove(&seq) {
+                    self.pipeline.abort_admission(&adm);
                 }
             }
         }
-        self.requests[req].spec_first_token_at = None;
-        self.requests[req].spec_finished_at = None;
+        self.pipeline.requests[req].spec_first_token_at = None;
+        self.pipeline.requests[req].spec_finished_at = None;
     }
 
     /// Create a generation for `docs` and enqueue it for admission.
     fn start_generation(&mut self, req: usize, docs: &[DocId]) {
         let now = self.now();
-        let gen = self.requests[req].next_gen;
-        self.requests[req].next_gen += 1;
-        let seq = req as u64 * GEN_BASE + gen;
         // Cached/compute lengths for the reordering priority.
-        let doc_tokens: usize =
+        let doc_tokens_total: usize =
             docs.iter().map(|&d| self.doc_tokens(req, d)).sum();
         let tr = &self.trace.requests[req];
-        let (cached, compute) = match self.tree.as_ref() {
-            None => (0, tr.prompt_tokens()),
-            Some(tree) => {
-                let m = tree.lookup(docs);
-                (
-                    m.cached_tokens,
-                    doc_tokens.saturating_sub(m.cached_tokens)
-                        + tr.request_tokens,
-                )
-            }
-        };
         let arrival = tr.arrival;
+        let request_tokens = tr.request_tokens;
         let is_final_docs = docs == tr.docs.as_slice();
-        let r = &mut self.requests[req];
-        r.active_seq = Some(seq);
-        r.active_docs = docs.to_vec();
-        if is_final_docs && r.final_enqueue_at.is_none() {
-            r.final_enqueue_at = Some(now);
+        let (cached, compute) = self.pipeline.queue_lengths(
+            docs,
+            doc_tokens_total,
+            request_tokens,
+        );
+        let seq = self.pipeline.requests[req].begin_generation(req, docs);
+        if is_final_docs
+            && self.pipeline.requests[req].final_enqueue_at.is_none()
+        {
+            self.pipeline.requests[req].final_enqueue_at = Some(now);
         }
         self.gen_docs.insert(seq, docs.to_vec());
-        self.queue.push(PendingRequest {
+        self.pipeline.queue.push(PendingRequest {
             id: seq,
             arrival,
             cached_tokens: cached,
@@ -418,11 +385,12 @@ impl SimServer {
         loop {
             let in_engine =
                 self.engine.waiting_len() + self.engine.decoding_len();
-            if in_engine >= self.max_batch || self.queue.is_empty() {
+            if in_engine >= self.max_batch || self.pipeline.queue.is_empty()
+            {
                 break;
             }
             let t0 = Instant::now();
-            let pending = self.queue.pop().unwrap();
+            let pending = self.pipeline.queue.pop().unwrap();
             self.admit(pending);
             self.sched_secs += t0.elapsed().as_secs_f64();
             self.sched_ops += 1;
@@ -441,98 +409,44 @@ impl SimServer {
     }
 
     fn admit(&mut self, pending: PendingRequest) {
-        let req = (pending.id / GEN_BASE) as usize;
+        let req = request_of(pending.id);
         let now = self.now();
-        if self.requests[req].active_seq != Some(pending.id) {
+        if !self.pipeline.requests[req].is_live(pending.id) {
             return; // stale generation
         }
-        let tr = &self.trace.requests[req];
         let docs = self.gen_docs[&pending.id].clone();
-        let doc_token_list: Vec<(DocId, usize)> = docs
+        let docs_tokens: Vec<(DocId, usize)> = docs
             .iter()
             .map(|&d| (d, self.doc_tokens(req, d)))
             .collect();
+        let tr = &self.trace.requests[req];
+        let request_tokens = tr.request_tokens;
+        let output_tokens = tr.output_tokens;
+        let is_final_docs = docs == tr.docs.as_slice();
 
-        let mut alpha = 0usize;
-        let mut extra_time = 0.0f64;
-        let mut path = Vec::new();
-        let mut matched = 0usize;
-        if let Some(tree) = self.tree.as_mut() {
-            let m = tree.lookup(&docs);
-            // Try to bring host-resident prefix into GPU; on failure fall
-            // back to the GPU-resident prefix only.
-            let (use_path, transfers) = match tree.promote(&m.path) {
-                Some(t) => (m.path.clone(), t),
-                None => {
-                    let gpu_prefix: Vec<NodeId> = m
-                        .path
-                        .iter()
-                        .take_while(|&&n| {
-                            tree.node_tier(n)
-                                == Some(crate::kvcache::Tier::Gpu)
-                        })
-                        .cloned()
-                        .collect();
-                    (gpu_prefix, crate::tree::Transfers::default())
-                }
-            };
-            matched = use_path.len();
-            alpha = use_path
-                .iter()
-                .map(|&n| tree.node_tokens(n))
-                .sum::<usize>();
-            extra_time += self
-                .transfer
-                .transfer_time(transfers.h2g_bytes + transfers.g2h_bytes);
-            tree.pin(&use_path);
-            path = use_path;
-        }
-        let beta: usize = doc_token_list[matched..]
-            .iter()
-            .map(|&(_, t)| t)
-            .sum::<usize>()
-            + tr.request_tokens;
-        let estimated_time = self.profile.estimate(alpha, beta);
-
+        // Shared admission stage A: match → promote → pin → (α, β).
+        let (mut adm, extra_time) =
+            self.pipeline
+                .admit(&self.driver, &docs_tokens, request_tokens);
+        let estimated_time =
+            self.driver.profile.estimate(adm.alpha, adm.beta);
+        adm.estimated_time = estimated_time;
         // Policy updates for the matched (hit) nodes.
-        if let Some(tree) = self.tree.as_mut() {
-            for &n in &path {
-                let tokens = tree.node_tokens(n);
-                tree.on_access(
-                    n,
-                    &AccessCtx {
-                        alpha,
-                        beta,
-                        estimated_time,
-                        was_cached: true,
-                        now,
-                        tokens,
-                    },
-                );
-            }
-        }
+        self.pipeline.touch_hits(&adm, estimated_time, now);
 
         // Metrics: hit accounting against the request's final docs.
-        if docs == tr.docs.as_slice() {
-            self.recorder.docs(req as u64, docs.len(), matched);
-            self.recorder.tokens(req as u64, alpha, beta);
+        if is_final_docs {
+            self.pipeline
+                .record_admission(req as u64, docs.len(), &adm);
         }
 
-        self.admit_infos.insert(
-            pending.id,
-            AdmitInfo {
-                path,
-                unmatched: doc_token_list[matched..].to_vec(),
-                alpha,
-                beta,
-                estimated_time,
-            },
-        );
+        let (alpha, beta) = (adm.alpha, adm.beta);
+        self.admit_infos.insert(pending.id, adm);
         self.engine.admit(SeqSpec {
             id: pending.id,
             alpha,
             beta,
-            output_tokens: tr.output_tokens,
+            output_tokens,
             extra_time,
         });
     }
@@ -553,62 +467,32 @@ impl SimServer {
     }
 
     fn on_first_token(&mut self, seq: u64, now: f64) {
-        let req = (seq / GEN_BASE) as usize;
+        let req = request_of(seq);
         // Insert newly computed doc KV into the tree and update stats —
         // even for terminated speculations: the prefill ran, the KV for
         // its document sequence is valid, and caching it is precisely
         // what makes restarted generations cheap (paper §4, Thm 5.1).
-        if let Some(info) = self.admit_infos.remove(&seq) {
-            if let Some(tree) = self.tree.as_mut() {
-                tree.unpin(&info.path);
-                let mut parent =
-                    info.path.last().copied().unwrap_or(tree.root());
-                for &(doc, tokens) in &info.unmatched {
-                    match tree.insert_child(parent, doc, tokens, None) {
-                        Some((id, _)) => {
-                            tree.on_access(
-                                id,
-                                &AccessCtx {
-                                    alpha: info.alpha,
-                                    beta: info.beta,
-                                    estimated_time: info.estimated_time,
-                                    was_cached: false,
-                                    now,
-                                    tokens,
-                                },
-                            );
-                            parent = id;
-                        }
-                        None => break, // does not fit: stays transient
-                    }
-                }
-            }
+        if let Some(adm) = self.admit_infos.remove(&seq) {
+            self.pipeline
+                .commit_prefill(&adm, adm.estimated_time, now, None);
         }
-        if self.requests[req].active_seq != Some(seq) {
-            return; // terminated speculation: cache filled, no delivery
-        }
-        let r = &mut self.requests[req];
-        if r.confirmed && r.active_docs == self.trace.requests[req].docs {
-            self.recorder.first_token(req as u64, now);
-        } else {
-            r.spec_first_token_at = Some(now);
-        }
+        self.pipeline.deliver_first_token(
+            req,
+            seq,
+            &self.trace.requests[req].docs,
+            now,
+        );
     }
 
     fn on_finished(&mut self, seq: u64, now: f64) {
-        let req = (seq / GEN_BASE) as usize;
-        if self.requests[req].active_seq != Some(seq) {
-            return;
-        }
-        let out_tokens = self.trace.requests[req].output_tokens;
-        let r = &mut self.requests[req];
-        if r.confirmed && r.active_docs == self.trace.requests[req].docs {
-            self.recorder.finished(req as u64, now);
-            self.recorder.output_tokens(req as u64, out_tokens);
-            self.requests[req].done = true;
-        } else {
-            r.spec_finished_at = Some(now);
-        }
+        let req = request_of(seq);
+        self.pipeline.deliver_finished(
+            req,
+            seq,
+            &self.trace.requests[req].docs,
+            self.trace.requests[req].output_tokens,
+            now,
+        );
     }
 }
 

@@ -39,7 +39,10 @@ impl TierAllocator {
     }
 
     pub fn free(&self) -> u64 {
-        self.capacity - self.used
+        // `used <= capacity` is an invariant, but a buggy caller that
+        // slipped past the release() debug-assert in a release build must
+        // degrade to "no free space", not wrap to ~u64::MAX.
+        self.capacity.saturating_sub(self.used)
     }
 
     /// Whether `bytes` could ever fit in this tier.
@@ -50,16 +53,24 @@ impl TierAllocator {
     /// Try to reserve; returns false (unchanged) if it does not fit.
     #[must_use]
     pub fn alloc(&mut self, bytes: u64) -> bool {
-        if self.used + bytes > self.capacity {
-            return false;
+        match self.used.checked_add(bytes) {
+            Some(total) if total <= self.capacity => {
+                self.used = total;
+                true
+            }
+            _ => false,
         }
-        self.used += bytes;
-        true
     }
 
-    /// Release a prior reservation.
+    /// Release a prior reservation. Releasing more than is in use is a
+    /// caller bug: loud in debug builds, saturating (never wrapping) in
+    /// release builds.
     pub fn release(&mut self, bytes: u64) {
-        debug_assert!(self.used >= bytes, "releasing more than used");
+        debug_assert!(
+            self.used >= bytes,
+            "releasing {bytes} B but only {} B in use",
+            self.used
+        );
         self.used = self.used.saturating_sub(bytes);
     }
 }
@@ -144,6 +155,44 @@ mod tests {
         assert_eq!(a.free(), 0);
         a.release(30);
         assert_eq!(a.used(), 70);
+    }
+
+    #[test]
+    fn alloc_overflow_is_rejected() {
+        let mut a = TierAllocator::new(u64::MAX);
+        assert!(a.alloc(u64::MAX - 1));
+        // used + bytes would overflow u64: must refuse, not wrap.
+        assert!(!a.alloc(2));
+        assert_eq!(a.used(), u64::MAX - 1);
+        assert_eq!(a.free(), 1);
+    }
+
+    #[test]
+    fn free_is_exact_at_capacity() {
+        let mut a = TierAllocator::new(64);
+        assert!(a.alloc(64));
+        assert_eq!(a.free(), 0);
+        a.release(64);
+        assert_eq!(a.free(), 64);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "releasing")]
+    fn over_release_asserts_in_debug() {
+        let mut a = TierAllocator::new(100);
+        assert!(a.alloc(10));
+        a.release(11);
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn over_release_saturates_in_release() {
+        let mut a = TierAllocator::new(100);
+        assert!(a.alloc(10));
+        a.release(11);
+        assert_eq!(a.used(), 0, "saturates instead of wrapping");
+        assert_eq!(a.free(), 100);
     }
 
     #[test]

@@ -14,7 +14,7 @@ use ragcache::embed::EmbeddingModel;
 use ragcache::llm::models::{ALL_GPUS, ALL_MODELS};
 use ragcache::llm::ByteTokenizer;
 use ragcache::runtime::{ArtifactManifest, PjrtModel};
-use ragcache::server::{proto, QueryHandler, Server};
+use ragcache::server::{proto, QueryHandler, Server, ServerOptions};
 use ragcache::util::Rng;
 use ragcache::vectordb::{FlatIndex, VectorIndex};
 use ragcache::workload::{datasets::DatasetProfile, Corpus, Trace};
@@ -25,6 +25,7 @@ ragcache <command> [options]
 
 commands:
   serve      --port 7771 --model tiny-gqa --docs 256 [--artifacts DIR]
+             [--workers N]  (N concurrent connection handlers, default 4)
   simulate   --system ragcache|vllm|sglang --dataset mmlu --rate 0.8
              --requests 500 [--config FILE] [--model NAME] [--seed N]
   info       show models, GPUs, datasets, artifact status
@@ -119,27 +120,42 @@ impl QueryHandler for RealHandler {
     }
 
     fn stats(&self) -> proto::StatsResult {
-        let r = self.server.recorder();
+        let s = self.server.stats();
         proto::StatsResult {
-            requests: r.len(),
-            mean_ttft_ms: r.ttft().mean() * 1e3,
-            hit_rate: r.hit_rate(),
+            requests: s.requests,
+            mean_ttft_ms: s.mean_ttft_s * 1e3,
+            hit_rate: s.hit_rate,
         }
     }
 }
 
-/// Build the real serving stack from artifacts + a synthetic tiny corpus.
-pub fn build_real_handler(
+/// The `Send`-safe parts of the real serving stack, built ahead of the
+/// engine thread so connection workers can share the cache service for
+/// §5.2 priority estimation. Only the PJRT model (not `Send`) is loaded
+/// later, inside the engine thread.
+pub struct ServingParts {
+    pub cache: ragcache::controller::CacheService,
+    pub index: Box<dyn VectorIndex>,
+    pub em: EmbeddingModel,
+    pub doc_tokens: Vec<Vec<i32>>,
+    pub cfg: RealConfig,
+}
+
+/// Build everything except the PJRT model from artifacts + a synthetic
+/// tiny corpus.
+pub fn build_serving_parts(
     artifacts: &Path,
     model_name: &str,
     num_docs: usize,
     seed: u64,
-) -> Result<RealHandler> {
+) -> Result<ServingParts> {
     let manifest = ArtifactManifest::load(artifacts)?;
     let mm = manifest.model(model_name)?;
-    let model = PjrtModel::load(mm)?;
+    let cfg = RealConfig::default();
+    let cache = ragcache::controller::CacheService::new(
+        RealServer::build_tree(mm.arch.kv_floats_per_token(), &cfg),
+    );
     let corpus = Corpus::tiny(num_docs, seed);
-    let tok = ByteTokenizer::new();
     let mut rng = Rng::new(seed);
     // Document token ids: random bytes of the corpus-assigned length.
     let doc_tokens: Vec<Vec<i32>> = (0..num_docs)
@@ -154,15 +170,21 @@ pub fn build_real_handler(
     let vecs: Vec<Vec<f32>> =
         (0..num_docs as u32).map(|d| em.document(d)).collect();
     let index: Box<dyn VectorIndex> = Box::new(FlatIndex::build(dim, &vecs));
-    let cfg = RealConfig::default();
-    let server = RealServer::new(model, index, em, doc_tokens, &cfg)?;
-    Ok(RealHandler { server, cfg, tok })
+    Ok(ServingParts {
+        cache,
+        index,
+        em,
+        doc_tokens,
+        cfg,
+    })
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let port: u16 = args.get_parse_or("port", 7771).map_err(|e| anyhow!(e))?;
     let model = args.get_or("model", "tiny-gqa").to_string();
     let docs: usize = args.get_parse_or("docs", 256).map_err(|e| anyhow!(e))?;
+    let workers: usize =
+        args.get_parse_or("workers", 4).map_err(|e| anyhow!(e))?;
     let artifacts = args.get_or("artifacts", "artifacts").to_string();
     let artifacts_path = std::path::PathBuf::from(&artifacts);
     if !artifacts_path.join("manifest.json").exists() {
@@ -170,11 +192,63 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "artifacts missing at {artifacts} (run `make artifacts`)"
         ));
     }
-    let server = Server::spawn(port, move || {
-        build_real_handler(&artifacts_path, &model, docs, 42)
-            .context("building real serving stack")
+    let parts = build_serving_parts(&artifacts_path, &model, docs, 42)
+        .context("building real serving stack")?;
+
+    // Cache-aware §5.2 priority estimator over the same shared cache
+    // service the engine admits against: α from the live tree, β
+    // approximated as top_k docs of this corpus minus the cached prefix
+    // (an estimate is all the reorder priority needs).
+    let est_cache = parts.cache.clone();
+    let doc_lens: Vec<usize> =
+        parts.doc_tokens.iter().map(|t| t.len()).collect();
+    let mean_len =
+        (doc_lens.iter().sum::<usize>() / doc_lens.len().max(1)).max(1);
+    let top_k = parts.cfg.top_k;
+    let estimator: ragcache::server::PriorityEstimator =
+        std::sync::Arc::new(move |req| match req {
+            proto::Request::Query { target_doc, .. } => {
+                let m = est_cache.lookup(&[*target_doc]);
+                let total = doc_lens
+                    .get(*target_doc as usize)
+                    .copied()
+                    .unwrap_or(mean_len)
+                    + mean_len * top_k.saturating_sub(1);
+                (
+                    m.cached_tokens,
+                    total.saturating_sub(m.cached_tokens).max(1),
+                )
+            }
+            _ => (0, 1),
+        });
+
+    let opts = ServerOptions {
+        workers,
+        estimator: Some(estimator),
+        ..ServerOptions::default()
+    };
+    let server = Server::spawn_with(port, opts, move || {
+        // Only the PJRT model loads here (its handles are not `Send`).
+        let manifest = ArtifactManifest::load(&artifacts_path)?;
+        let pjrt = PjrtModel::load(manifest.model(&model)?)
+            .context("loading PJRT model")?;
+        let server = RealServer::with_cache(
+            pjrt,
+            parts.index,
+            parts.em,
+            parts.doc_tokens,
+            parts.cache,
+        )?;
+        Ok(RealHandler {
+            server,
+            cfg: parts.cfg,
+            tok: ByteTokenizer::new(),
+        })
     })?;
-    println!("ragcache serving on {} ({docs} docs)", server.addr);
+    println!(
+        "ragcache serving on {} ({docs} docs, {workers} connection workers)",
+        server.addr
+    );
     println!("protocol: newline-delimited JSON; ops: query/stats/shutdown");
     // Block until the acceptor thread exits (shutdown op).
     server.join();

@@ -24,7 +24,9 @@ pub struct RequestRecord {
 }
 
 /// Collects per-request records and derives the paper's metrics.
-#[derive(Debug, Default)]
+/// `Clone` supports cheap snapshots out of a live (locked or owned)
+/// pipeline without freezing the serving path.
+#[derive(Debug, Clone, Default)]
 pub struct Recorder {
     records: BTreeMap<u64, RequestRecord>,
 }

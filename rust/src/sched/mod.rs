@@ -5,6 +5,16 @@
 //! relative to what they must recompute (the paper's two scenarios: big
 //! cached contexts first, short recomputations first). A starvation
 //! window bounds how many times any request can be bypassed.
+//!
+//! [`ReorderQueue`] is the single-owner queue the simulated controller
+//! drives; [`SharedReorderQueue`] wraps the identical ordering semantics
+//! behind a mutex + condvar so the concurrent TCP runtime's connection
+//! handlers can feed it from many threads while one engine-driver thread
+//! drains it.
+
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Duration;
 
 /// A request waiting for engine admission.
 #[derive(Debug, Clone)]
@@ -151,6 +161,117 @@ impl ReorderQueue {
     }
 }
 
+/// Thread-safe reorder queue carrying an opaque job payload per pending
+/// request (the concurrent server attaches the parsed request + its
+/// response channel). Many producers push; one (or more) consumers pop in
+/// §5.2 priority order with the same starvation bound as
+/// [`ReorderQueue`].
+///
+/// `close()` makes the queue refuse further pushes and drops every
+/// pending job — producers blocked on a job's response channel observe
+/// the disconnect instead of hanging, which is what makes engine-thread
+/// failure and shutdown deadlock-free.
+pub struct SharedReorderQueue<T> {
+    inner: Mutex<SharedState<T>>,
+    ready: Condvar,
+}
+
+struct SharedState<T> {
+    queue: ReorderQueue,
+    jobs: HashMap<u64, T>,
+    closed: bool,
+}
+
+impl<T> SharedReorderQueue<T> {
+    pub fn new(reorder: bool, window: usize) -> Self {
+        SharedReorderQueue {
+            inner: Mutex::new(SharedState {
+                queue: ReorderQueue::new(reorder, window),
+                jobs: HashMap::new(),
+                closed: false,
+            }),
+            ready: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, SharedState<T>> {
+        match self.inner.lock() {
+            Ok(g) => g,
+            // A producer/consumer panicking mid-push must not wedge the
+            // whole runtime; the state itself stays coherent (each
+            // operation completes its queue+jobs updates together).
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Enqueue a request with its job payload. Returns false (dropping
+    /// the job) if the queue is closed.
+    pub fn push(&self, req: PendingRequest, job: T) -> bool {
+        let mut s = self.lock();
+        if s.closed {
+            return false;
+        }
+        s.jobs.insert(req.id, job);
+        s.queue.push(req);
+        drop(s);
+        self.ready.notify_one();
+        true
+    }
+
+    /// Pop the highest-priority request, blocking up to `timeout` for one
+    /// to arrive. Returns None on timeout, spurious wakeup, or when the
+    /// queue is closed and empty — callers loop.
+    pub fn pop_timeout(
+        &self,
+        timeout: Duration,
+    ) -> Option<(PendingRequest, T)> {
+        let mut s = self.lock();
+        if s.queue.is_empty() && !s.closed {
+            s = match self.ready.wait_timeout(s, timeout) {
+                Ok((guard, _)) => guard,
+                Err(poisoned) => poisoned.into_inner().0,
+            };
+        }
+        let req = s.queue.pop()?;
+        let job = s.jobs.remove(&req.id).expect("job for queued request");
+        Some((req, job))
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lock().queue.is_empty()
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.lock().closed
+    }
+
+    /// Refuse further pushes but keep already-accepted jobs poppable —
+    /// the first phase of a graceful drain. Once sealed, a consumer can
+    /// finish everything that was accepted with no producer able to
+    /// slip a job in behind its final emptiness check.
+    pub fn seal(&self) {
+        let mut s = self.lock();
+        s.closed = true;
+        drop(s);
+        self.ready.notify_all();
+    }
+
+    /// Refuse further pushes and drop all pending jobs, waking every
+    /// waiter.
+    pub fn close(&self) {
+        let mut s = self.lock();
+        s.closed = true;
+        while s.queue.pop().is_some() {}
+        s.jobs.clear();
+        drop(s);
+        self.ready.notify_all();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -241,5 +362,100 @@ mod tests {
         assert_eq!(q.remove(1).unwrap().id, 1);
         assert!(q.remove(1).is_none());
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn shared_queue_push_pop_roundtrip() {
+        let q: SharedReorderQueue<&'static str> =
+            SharedReorderQueue::new(true, 8);
+        assert!(q.push(req(1, 0.0, 0, 100), "low"));
+        assert!(q.push(req(2, 1.0, 1000, 1), "high"));
+        let (r, job) = q.pop_timeout(Duration::from_millis(10)).unwrap();
+        assert_eq!((r.id, job), (2, "high"));
+        let (r, job) = q.pop_timeout(Duration::from_millis(10)).unwrap();
+        assert_eq!((r.id, job), (1, "low"));
+        assert!(q.pop_timeout(Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn shared_queue_close_refuses_and_drops() {
+        let q: SharedReorderQueue<u32> = SharedReorderQueue::new(true, 8);
+        assert!(q.push(req(1, 0.0, 0, 1), 10));
+        q.close();
+        assert!(!q.push(req(2, 1.0, 0, 1), 20), "closed queue refuses");
+        assert!(q.pop_timeout(Duration::from_millis(1)).is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn shared_queue_seal_refuses_but_drains() {
+        let q: SharedReorderQueue<u32> = SharedReorderQueue::new(true, 8);
+        assert!(q.push(req(1, 0.0, 0, 1), 10));
+        assert!(q.push(req(2, 1.0, 0, 1), 20));
+        q.seal();
+        assert!(!q.push(req(3, 2.0, 0, 1), 30), "sealed queue refuses");
+        // Accepted jobs remain drainable after sealing.
+        assert!(q.pop_timeout(Duration::from_millis(1)).is_some());
+        assert!(q.pop_timeout(Duration::from_millis(1)).is_some());
+        assert!(q.pop_timeout(Duration::from_millis(1)).is_none());
+    }
+
+    /// Satellite coverage: the §5.2 bypass window bounds starvation even
+    /// when the queue is fed and drained from different threads. The
+    /// victim is always the oldest entry, so every pop either serves it
+    /// or bumps its bypass counter — its position in the drain order can
+    /// never exceed `window + 1`, under any interleaving.
+    #[test]
+    fn shared_queue_starvation_bound_across_threads() {
+        use std::sync::Arc;
+        let window = 4usize;
+        let hot = 4 * window as u64;
+        let q: Arc<SharedReorderQueue<u64>> =
+            Arc::new(SharedReorderQueue::new(true, window));
+        // The victim: oldest arrival, worst possible priority.
+        assert!(q.push(req(1, 0.0, 0, 1_000_000), 1));
+
+        let feeder = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                for i in 0..hot {
+                    // Newer, very high priority requests.
+                    assert!(q.push(
+                        req(100 + i, 1.0 + i as f64, 10_000, 1),
+                        100 + i
+                    ));
+                    if i % 3 == 0 {
+                        std::thread::yield_now();
+                    }
+                }
+            })
+        };
+
+        let drainer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                let mut order = Vec::new();
+                while order.len() < (hot as usize) + 1 {
+                    if let Some((r, _)) =
+                        q.pop_timeout(Duration::from_millis(50))
+                    {
+                        order.push(r.id);
+                    }
+                }
+                order
+            })
+        };
+
+        feeder.join().unwrap();
+        let order = drainer.join().unwrap();
+        let victim_pos = order
+            .iter()
+            .position(|&id| id == 1)
+            .expect("victim eventually served");
+        assert!(
+            victim_pos <= window + 1,
+            "victim served at position {victim_pos}, window {window}"
+        );
+        assert_eq!(order.len(), hot as usize + 1, "nothing lost");
     }
 }

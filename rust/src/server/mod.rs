@@ -1,19 +1,44 @@
-//! TCP JSON-lines serving front-end.
+//! TCP JSON-lines serving front-end — concurrent runtime.
 //!
 //! The paper's prototype exposes retrieval + generation behind a RESTful
 //! API; here the transport is a newline-delimited JSON protocol over TCP
-//! (std-only — no HTTP stack offline). The handler is constructed *inside*
-//! the server thread (PJRT handles are not `Send`), and connections are
-//! served sequentially — the single-engine setup the paper also uses.
+//! (std-only — no HTTP stack offline). The runtime is multi-worker:
+//!
+//! ```text
+//!   acceptor thread ──► connection channel ──► N connection workers
+//!                                                   │ parse + estimate
+//!                                                   ▼
+//!                                  SharedReorderQueue (§5.2 ordering)
+//!                                                   │
+//!                                                   ▼
+//!                         engine-driver thread (owns the QueryHandler;
+//!                         PJRT handles are not `Send`, so the handler is
+//!                         constructed *inside* this thread)
+//! ```
+//!
+//! Connection workers block on their own sockets only, so up to
+//! `workers` clients progress fully independently (a connection holds
+//! its worker for its lifetime; an idle-timeout reclaims workers from
+//! silent keep-alive clients). The single engine thread drains the
+//! shared queue in cache-aware priority order. Shutdown is graceful: the
+//! queue is sealed against new work, queued requests are drained and
+//! answered, then every thread exits. An optional
+//! [`ServerOptions::estimator`] supplies
+//! cached/compute token estimates (e.g. from a shared
+//! [`crate::controller::CacheService`]) so the queue can reorder by the
+//! paper's `CachedLength / ComputationLength` priority.
 
 pub mod proto;
 
 use anyhow::Result;
+use crate::sched::{PendingRequest, SharedReorderQueue};
 use proto::{Request, Response};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Application hook: execute one query.
 pub trait QueryHandler {
@@ -28,18 +53,76 @@ pub trait QueryHandler {
     fn stats(&self) -> proto::StatsResult;
 }
 
+/// Cached/compute token estimate for a request, used as the reorder
+/// priority. Must be callable from any connection worker.
+pub type PriorityEstimator =
+    Arc<dyn Fn(&Request) -> (usize, usize) + Send + Sync>;
+
+/// Concurrency configuration of a server.
+#[derive(Clone)]
+pub struct ServerOptions {
+    /// Connection-handler threads (how many clients progress at once).
+    pub workers: usize,
+    /// Cache-aware reordering of queued requests (§5.2). Takes effect
+    /// only when an `estimator` is supplied; otherwise the queue is
+    /// strict FIFO (equal priorities would reorder arbitrarily).
+    pub reorder: bool,
+    /// Starvation window for the reorder queue.
+    pub window: usize,
+    /// Optional cached/compute estimator feeding the reorder priority.
+    pub estimator: Option<PriorityEstimator>,
+    /// Close a connection that completes no request for this long. Each
+    /// open connection occupies a worker thread, so without a bound,
+    /// `workers` idle keep-alive clients would starve everyone else.
+    pub idle_timeout: Duration,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        ServerOptions {
+            workers: 4,
+            reorder: true,
+            window: 16,
+            estimator: None,
+            idle_timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+/// One queued query: the parsed request plus the channel its connection
+/// worker is blocked on.
+struct Job {
+    req: Request,
+    resp: mpsc::Sender<Response>,
+}
+
 /// A running server bound to a local port.
 pub struct Server {
     pub addr: std::net::SocketAddr,
     shutdown: Arc<AtomicBool>,
-    handle: Option<std::thread::JoinHandle<()>>,
+    jobs: Arc<SharedReorderQueue<Job>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Bind to `127.0.0.1:port` (0 = ephemeral). `factory` builds the
-    /// handler on the server thread, so the handler type need not be
-    /// `Send` (PJRT state is thread-local).
+    /// Bind to `127.0.0.1:port` (0 = ephemeral) with default options.
+    /// `factory` builds the handler on the engine-driver thread, so the
+    /// handler type need not be `Send` (PJRT state is thread-local).
     pub fn spawn<H, F>(port: u16, factory: F) -> Result<Server>
+    where
+        H: QueryHandler,
+        F: FnOnce() -> Result<H> + Send + 'static,
+    {
+        Self::spawn_with(port, ServerOptions::default(), factory)
+    }
+
+    /// Bind and start the full runtime: acceptor + `opts.workers`
+    /// connection handlers + one engine-driver thread.
+    pub fn spawn_with<H, F>(
+        port: u16,
+        opts: ServerOptions,
+        factory: F,
+    ) -> Result<Server>
     where
         H: QueryHandler,
         F: FnOnce() -> Result<H> + Send + 'static,
@@ -47,58 +130,95 @@ impl Server {
         let listener = TcpListener::bind(("127.0.0.1", port))?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
+
         let shutdown = Arc::new(AtomicBool::new(false));
-        let flag = Arc::clone(&shutdown);
-        let handle = std::thread::spawn(move || {
-            let mut handler = match factory() {
-                Ok(h) => h,
-                Err(e) => {
-                    log::error!("handler construction failed: {e:#}");
-                    flag.store(true, Ordering::SeqCst);
+        // Without an estimator every request gets the same priority, and
+        // "reordering" equal priorities is just unfair scrambling — fall
+        // back to strict FIFO until a cache-aware signal exists.
+        let reorder = opts.reorder && opts.estimator.is_some();
+        let jobs: Arc<SharedReorderQueue<Job>> =
+            Arc::new(SharedReorderQueue::new(reorder, opts.window));
+        let started = Instant::now();
+        let next_job = Arc::new(AtomicU64::new(0));
+        let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut handles = Vec::new();
+
+        // Acceptor: hand accepted connections to the worker pool.
+        {
+            let shutdown = Arc::clone(&shutdown);
+            handles.push(std::thread::spawn(move || {
+                accept_loop(listener, conn_tx, &shutdown);
+            }));
+        }
+
+        // Connection workers.
+        for _ in 0..opts.workers.max(1) {
+            let conn_rx = Arc::clone(&conn_rx);
+            let jobs = Arc::clone(&jobs);
+            let shutdown = Arc::clone(&shutdown);
+            let estimator = opts.estimator.clone();
+            let next_job = Arc::clone(&next_job);
+            let idle_timeout = opts.idle_timeout;
+            handles.push(std::thread::spawn(move || loop {
+                if shutdown.load(Ordering::SeqCst) {
                     return;
                 }
-            };
-            while !flag.load(Ordering::SeqCst) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        if let Err(e) =
-                            serve_conn(stream, &mut handler, &flag)
-                        {
+                let stream = {
+                    let rx = match conn_rx.lock() {
+                        Ok(g) => g,
+                        Err(p) => p.into_inner(),
+                    };
+                    rx.recv_timeout(Duration::from_millis(10))
+                };
+                match stream {
+                    Ok(s) => {
+                        if let Err(e) = serve_conn(
+                            s,
+                            &jobs,
+                            &shutdown,
+                            estimator.as_ref(),
+                            &next_job,
+                            started,
+                            idle_timeout,
+                        ) {
                             log::warn!("connection error: {e}");
                         }
                     }
-                    Err(ref e)
-                        if e.kind() == std::io::ErrorKind::WouldBlock =>
-                    {
-                        std::thread::sleep(
-                            std::time::Duration::from_millis(5),
-                        );
-                    }
-                    Err(e) => {
-                        log::warn!("accept error: {e}");
-                        break;
-                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => return,
                 }
-            }
-        });
+            }));
+        }
+
+        // Engine driver: owns the handler, drains the shared queue.
+        {
+            let jobs = Arc::clone(&jobs);
+            let shutdown = Arc::clone(&shutdown);
+            handles.push(std::thread::spawn(move || {
+                engine_loop(factory, &jobs, &shutdown);
+            }));
+        }
+
         Ok(Server {
             addr,
             shutdown,
-            handle: Some(handle),
+            jobs,
+            handles,
         })
     }
 
-    /// Block until the server thread exits (shutdown op received).
+    /// Block until every runtime thread exits (after a shutdown op).
     pub fn join(mut self) {
-        if let Some(h) = self.handle.take() {
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
 
-    /// Request shutdown and wait.
+    /// Request shutdown (draining queued work) and wait.
     pub fn stop(mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        if let Some(h) = self.handle.take() {
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -107,25 +227,131 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        if let Some(h) = self.handle.take() {
+        // Wake anything blocked on the queue so joins cannot hang.
+        self.jobs.close();
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
 }
 
-fn serve_conn<H: QueryHandler>(
-    stream: TcpStream,
-    handler: &mut H,
+fn accept_loop(
+    listener: TcpListener,
+    conn_tx: mpsc::Sender<TcpStream>,
     shutdown: &AtomicBool,
+) {
+    while !shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if conn_tx.send(stream).is_err() {
+                    break; // workers gone
+                }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => {
+                log::warn!("accept error: {e}");
+                break;
+            }
+        }
+    }
+    // However this loop ends — shutdown op, fatal accept error, workers
+    // gone — the rest of the runtime must wind down too, or the engine
+    // thread would poll a forever-empty queue and join() would hang.
+    shutdown.store(true, Ordering::SeqCst);
+}
+
+fn engine_loop<H, F>(
+    factory: F,
+    jobs: &SharedReorderQueue<Job>,
+    shutdown: &AtomicBool,
+) where
+    H: QueryHandler,
+    F: FnOnce() -> Result<H>,
+{
+    // Close the queue however this thread exits — normal shutdown,
+    // factory failure, or a panicking handler. Dropping pending jobs
+    // disconnects their response channels; without this, connection
+    // workers blocked in `submit` would wait forever and
+    // `Server::stop`/`join` would deadlock on joining them.
+    struct CloseGuard<'a> {
+        jobs: &'a SharedReorderQueue<Job>,
+        shutdown: &'a AtomicBool,
+    }
+    impl Drop for CloseGuard<'_> {
+        fn drop(&mut self) {
+            self.shutdown.store(true, Ordering::SeqCst);
+            self.jobs.close();
+        }
+    }
+    let _guard = CloseGuard { jobs, shutdown };
+
+    let mut handler = match factory() {
+        Ok(h) => h,
+        Err(e) => {
+            log::error!("handler construction failed: {e:#}");
+            return;
+        }
+    };
+    loop {
+        match jobs.pop_timeout(Duration::from_millis(20)) {
+            Some((_pending, job)) => {
+                let response = match job.req {
+                    Request::Query {
+                        target_doc,
+                        query,
+                        max_new,
+                    } => match handler.query(target_doc, &query, max_new) {
+                        Ok(result) => Response::Query(result),
+                        Err(e) => Response::Error {
+                            message: format!("query failed: {e}"),
+                        },
+                    },
+                    Request::Stats => Response::Stats(handler.stats()),
+                    // Shutdown never reaches the queue; answered inline
+                    // by the connection worker.
+                    Request::Shutdown => Response::Ok,
+                };
+                // A worker that gave up (connection died) is fine.
+                let _ = job.resp.send(response);
+            }
+            None => {
+                if shutdown.load(Ordering::SeqCst) {
+                    // Two-phase graceful drain: seal first so no push
+                    // can slip in behind the emptiness check (a refused
+                    // push is answered "server shutting down" by its
+                    // worker), then finish everything already accepted.
+                    jobs.seal();
+                    if jobs.is_empty() {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn serve_conn(
+    stream: TcpStream,
+    jobs: &SharedReorderQueue<Job>,
+    shutdown: &AtomicBool,
+    estimator: Option<&PriorityEstimator>,
+    next_job: &AtomicU64,
+    started: Instant,
+    idle_timeout: Duration,
 ) -> Result<()> {
-    // Bounded reads so an idle connection cannot wedge the accept loop
-    // past a shutdown request.
-    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    // Bounded reads so an idle connection cannot wedge its worker past a
+    // shutdown request.
+    stream.set_read_timeout(Some(Duration::from_millis(100)))?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     // Persistent line buffer: a timeout mid-line must not drop the
-    // partial request (read_line appends).
+    // partial request (read_line appends). Bounded so a newline-free
+    // byte stream cannot grow it without limit.
+    const MAX_LINE_BYTES: usize = 1 << 20;
     let mut line = String::new();
+    let mut last_activity = Instant::now();
     loop {
         if shutdown.load(Ordering::SeqCst) {
             return Ok(());
@@ -133,34 +359,41 @@ fn serve_conn<H: QueryHandler>(
         match reader.read_line(&mut line) {
             Ok(0) => return Ok(()), // client closed
             Ok(_) if line.ends_with('\n') => {}
-            Ok(_) => continue, // partial line, keep accumulating
+            Ok(_) => {
+                // Partial line: keep accumulating. Deliberately NOT
+                // activity — only a completed request earns the worker;
+                // a byte-dripping client is reclaimed by the idle bound.
+                if line.len() > MAX_LINE_BYTES {
+                    anyhow::bail!("request line exceeds {MAX_LINE_BYTES} bytes");
+                }
+                continue;
+            }
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
+                // Idle keep-alive bound: this connection owns a worker
+                // thread, so a client that completes no requests must
+                // eventually yield it.
+                if last_activity.elapsed() >= idle_timeout {
+                    return Ok(());
+                }
                 continue;
             }
             Err(e) => return Err(e.into()),
+        }
+        if line.len() > MAX_LINE_BYTES {
+            anyhow::bail!("request line exceeds {MAX_LINE_BYTES} bytes");
         }
         if line.trim().is_empty() {
             line.clear();
             continue;
         }
+        last_activity = Instant::now();
         let response = match proto::parse_request(&line) {
             Err(e) => Response::Error {
                 message: format!("bad request: {e}"),
             },
-            Ok(Request::Query {
-                target_doc,
-                query,
-                max_new,
-            }) => match handler.query(target_doc, &query, max_new) {
-                Ok(result) => Response::Query(result),
-                Err(e) => Response::Error {
-                    message: format!("query failed: {e}"),
-                },
-            },
-            Ok(Request::Stats) => Response::Stats(handler.stats()),
             Ok(Request::Shutdown) => {
                 shutdown.store(true, Ordering::SeqCst);
                 writeln!(
@@ -170,9 +403,51 @@ fn serve_conn<H: QueryHandler>(
                 )?;
                 return Ok(());
             }
+            Ok(req) => submit(req, jobs, estimator, next_job, started),
         };
         writeln!(writer, "{}", proto::encode_response(&response))?;
+        // Re-stamp after answering: queue wait + engine service time must
+        // not count against the client's idle budget.
+        last_activity = Instant::now();
         line.clear();
+    }
+}
+
+/// Enqueue one request on the shared queue and wait for the engine's
+/// answer. Stats requests get infinite priority (zero compute) so
+/// observability is never starved by a deep prefill backlog.
+fn submit(
+    req: Request,
+    jobs: &SharedReorderQueue<Job>,
+    estimator: Option<&PriorityEstimator>,
+    next_job: &AtomicU64,
+    started: Instant,
+) -> Response {
+    let (cached, compute) = match (&req, estimator) {
+        (Request::Stats, _) => (0, 0),
+        (r, Some(f)) => f(r),
+        (_, None) => (0, 1),
+    };
+    let (tx, rx) = mpsc::channel();
+    let pending = PendingRequest {
+        id: next_job.fetch_add(1, Ordering::SeqCst),
+        arrival: started.elapsed().as_secs_f64(),
+        cached_tokens: cached,
+        compute_tokens: compute,
+        bypassed: 0,
+    };
+    if !jobs.push(pending, Job { req, resp: tx }) {
+        return Response::Error {
+            message: "server shutting down".to_string(),
+        };
+    }
+    match rx.recv() {
+        Ok(response) => response,
+        // Engine thread gone (construction failure or shutdown close):
+        // the job was dropped, not silently lost.
+        Err(_) => Response::Error {
+            message: "engine unavailable".to_string(),
+        },
     }
 }
 

@@ -528,6 +528,23 @@ impl KnowledgeTree {
         (self.clock_gpu, self.clock_host)
     }
 
+    /// Nodes currently pinned by in-flight requests, excluding the root's
+    /// permanent pin — must return to zero once every admission has been
+    /// committed or released (checked by the concurrency tests).
+    pub fn pinned_nodes(&self) -> usize {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|&(i, n)| {
+                if NodeId(i) == self.root {
+                    n.pinned > 1
+                } else {
+                    n.pinned > 0
+                }
+            })
+            .count()
+    }
+
     /// Validate every structural invariant; used by property tests.
     /// Panics with a description on violation.
     pub fn check_invariants(&self) {

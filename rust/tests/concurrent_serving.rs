@@ -1,0 +1,320 @@
+//! Integration: the concurrent serving substrate — the thread-safe
+//! [`CacheService`] hammered from many threads, and the multi-worker TCP
+//! runtime serving overlapping connections with cross-request cache hits.
+//! PJRT-free so it runs everywhere.
+
+use ragcache::config::PolicyKind;
+use ragcache::controller::CacheService;
+use ragcache::kvcache::PageSpec;
+use ragcache::policy::make_policy;
+use ragcache::sched::PendingRequest;
+use ragcache::server::{
+    proto, Client, PriorityEstimator, QueryHandler, Server, ServerOptions,
+};
+use ragcache::tree::KnowledgeTree;
+use ragcache::util::Rng;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+const DOC_TOKENS: usize = 32;
+
+fn page() -> PageSpec {
+    PageSpec {
+        block_tokens: 8,
+        kv_bytes_per_token: 16,
+    }
+}
+
+fn service(gpu_tokens: usize, host_tokens: usize) -> CacheService {
+    let p = page();
+    CacheService::new(KnowledgeTree::new(
+        p.bytes(gpu_tokens),
+        p.bytes(host_tokens),
+        p,
+        make_policy(PolicyKind::Pgdsf),
+        true,
+        0,
+    ))
+}
+
+/// Satellite: ≥4 threads interleaving match/pin/insert/evict through the
+/// shared service; afterwards the tree invariants hold (parent-tier
+/// ordering, allocator accounting) and every pin has been returned.
+#[test]
+fn cache_service_survives_multithreaded_hammering() {
+    // Small GPU tier so admissions constantly contend over eviction.
+    let svc = service(64, 256);
+    let threads = 6;
+    let ops = 300;
+    let mut handles = Vec::new();
+    for t in 0..threads {
+        let svc = svc.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0xBEEF + t as u64);
+            for i in 0..ops {
+                let a = rng.below(8) as u32;
+                let b = rng.below(8) as u32;
+                let docs = [(a, 16usize), (b, 16usize)];
+                let adm = svc.admit(&docs, 8);
+                assert!(adm.matched_docs <= 2);
+                assert_eq!(
+                    adm.path.len(),
+                    adm.matched_docs,
+                    "pinned path covers exactly the matched prefix"
+                );
+                if i % 5 == 0 {
+                    // Simulated aborted speculation: pins must drop
+                    // without inserting.
+                    svc.release(&adm);
+                } else {
+                    svc.touch_hits(&adm, 1e-3, i as f64);
+                    svc.commit(&adm, 1e-3, i as f64, None);
+                }
+                if i % 64 == 0 {
+                    // Invariants hold mid-flight too (pins excepted —
+                    // other threads legitimately hold some).
+                    svc.check_invariants();
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("no hammering thread panicked");
+    }
+    svc.check_invariants();
+    assert_eq!(
+        svc.pinned_nodes(),
+        0,
+        "all admissions were committed or released"
+    );
+    let c = svc.counters();
+    assert!(c.inserts > 0, "traffic actually exercised insertion: {c:?}");
+}
+
+/// The §5.2 queue is safe to feed and drain across threads *through the
+/// serving runtime types* (the sched unit tests cover the bound itself).
+#[test]
+fn pending_request_priorities_survive_concurrent_feed() {
+    use ragcache::sched::SharedReorderQueue;
+    let q: Arc<SharedReorderQueue<usize>> =
+        Arc::new(SharedReorderQueue::new(true, 8));
+    let feeders: Vec<_> = (0..4)
+        .map(|t| {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                for i in 0..50u64 {
+                    assert!(q.push(
+                        PendingRequest {
+                            id: t * 1000 + i,
+                            arrival: i as f64,
+                            cached_tokens: (t as usize) * 100,
+                            compute_tokens: 10,
+                            bypassed: 0,
+                        },
+                        t as usize,
+                    ));
+                }
+            })
+        })
+        .collect();
+    for f in feeders {
+        f.join().unwrap();
+    }
+    let mut popped = 0;
+    while q.pop_timeout(Duration::from_millis(5)).is_some() {
+        popped += 1;
+    }
+    assert_eq!(popped, 200, "every pushed request drains exactly once");
+}
+
+/// PJRT-free handler backed by the real CacheService admission path: a
+/// query for `target_doc` retrieves the ordered pair `[d, d+1]`, admits
+/// it against the shared tree, and reports the hit split.
+struct CacheHandler {
+    cache: CacheService,
+    served: u64,
+    /// Artificial per-query engine latency (models prefill time).
+    delay: Duration,
+}
+
+impl QueryHandler for CacheHandler {
+    fn query(
+        &mut self,
+        target_doc: u32,
+        query: &str,
+        _max_new: usize,
+    ) -> anyhow::Result<proto::QueryResult> {
+        let docs = [target_doc, target_doc + 1];
+        let docs_tokens: Vec<(u32, usize)> =
+            docs.iter().map(|&d| (d, DOC_TOKENS)).collect();
+        let adm = self.cache.admit(&docs_tokens, query.len().max(1));
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        let now = self.served as f64;
+        self.cache.touch_hits(&adm, 1e-3, now);
+        self.cache.commit(&adm, 1e-3, now, None);
+        self.served += 1;
+        Ok(proto::QueryResult {
+            id: self.served,
+            docs: docs.to_vec(),
+            docs_hit: adm.matched_docs,
+            cached_tokens: adm.alpha,
+            computed_tokens: adm.beta,
+            ttft_ms: 1.0,
+            total_ms: 2.0,
+            text: format!("echo:{query}"),
+        })
+    }
+
+    fn stats(&self) -> proto::StatsResult {
+        proto::StatsResult {
+            requests: self.served as usize,
+            mean_ttft_ms: 1.0,
+            hit_rate: 0.0,
+        }
+    }
+}
+
+fn spawn_cache_server(workers: usize, delay_ms: u64) -> (Server, CacheService) {
+    let svc = service(4096, 8192);
+    let handler_svc = svc.clone();
+    // Cache-aware priority estimator running on connection workers — the
+    // same shared service the engine thread admits against.
+    let est_svc = svc.clone();
+    let estimator: PriorityEstimator = Arc::new(move |req| match req {
+        proto::Request::Query { target_doc, .. } => {
+            let m = est_svc.lookup(&[*target_doc, *target_doc + 1]);
+            let total = 2 * DOC_TOKENS;
+            (m.cached_tokens, total.saturating_sub(m.cached_tokens).max(1))
+        }
+        _ => (0, 1),
+    });
+    let opts = ServerOptions {
+        workers,
+        estimator: Some(estimator),
+        ..ServerOptions::default()
+    };
+    let server = Server::spawn_with(0, opts, move || {
+        Ok(CacheHandler {
+            cache: handler_svc,
+            served: 0,
+            delay: Duration::from_millis(delay_ms),
+        })
+    })
+    .expect("spawn");
+    (server, svc)
+}
+
+fn query(target: u32) -> proto::Request {
+    proto::Request::Query {
+        target_doc: target,
+        query: "q".into(),
+        max_new: 1,
+    }
+}
+
+/// Acceptance: ≥2 concurrent connections. An idle open connection must
+/// not stall another client — the old runtime served connections
+/// strictly sequentially and would hang here.
+#[test]
+fn idle_connection_does_not_block_other_clients() {
+    let (server, _svc) = spawn_cache_server(2, 0);
+    let idle = TcpStream::connect(server.addr).expect("idle connect");
+    // Second connection with a hard read deadline: a response must
+    // arrive while the idle connection stays open.
+    let stream = TcpStream::connect(server.addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writeln!(writer, "{}", proto::encode_request(&query(7))).unwrap();
+    let mut line = String::new();
+    reader
+        .read_line(&mut line)
+        .expect("response while another connection is open");
+    match proto::parse_response(&line).expect("valid response") {
+        proto::Response::Query(q) => assert_eq!(q.docs, vec![7, 8]),
+        other => panic!("unexpected {other:?}"),
+    }
+    drop(idle);
+    server.stop();
+}
+
+/// Acceptance: cross-request cache hits across concurrent connections —
+/// one client warms the tree, four parallel clients hit it.
+#[test]
+fn concurrent_clients_share_cache_hits() {
+    let (server, svc) = spawn_cache_server(4, 0);
+    let addr = server.addr;
+
+    // Warm phase: insert the doc pairs for targets 10, 20, 30, 40.
+    let mut warm = Client::connect(addr).unwrap();
+    for t in [10u32, 20, 30, 40] {
+        match warm.call(&query(t)).unwrap() {
+            proto::Response::Query(q) => {
+                assert_eq!(q.docs_hit, 0, "cold request misses")
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    // Hit phase: four clients in parallel, one per warmed target.
+    let clients: Vec<_> = [10u32, 20, 30, 40]
+        .into_iter()
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                match c.call(&query(t)).unwrap() {
+                    proto::Response::Query(q) => q,
+                    other => panic!("unexpected {other:?}"),
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        let q = c.join().expect("client thread");
+        assert_eq!(q.docs_hit, 2, "warmed path fully hits: {q:?}");
+        assert_eq!(q.cached_tokens, 2 * DOC_TOKENS);
+    }
+    svc.check_invariants();
+    assert_eq!(svc.pinned_nodes(), 0, "serving returned every pin");
+    server.stop();
+}
+
+/// Graceful shutdown drains in-flight requests: queries already enqueued
+/// when the shutdown op lands still get real answers.
+#[test]
+fn shutdown_drains_inflight_requests() {
+    // Slow engine (150 ms/query) so requests are genuinely queued when
+    // the shutdown arrives.
+    let (server, _svc) = spawn_cache_server(4, 150);
+    let addr = server.addr;
+    let clients: Vec<_> = [1u32, 2, 3]
+        .into_iter()
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                c.call(&query(t)).expect("drained response")
+            })
+        })
+        .collect();
+    // Give the connection workers ample time to parse + enqueue all
+    // three queries, then shut down mid-drain.
+    std::thread::sleep(Duration::from_millis(75));
+    let mut admin = Client::connect(addr).unwrap();
+    assert_eq!(
+        admin.call(&proto::Request::Shutdown).unwrap(),
+        proto::Response::Ok
+    );
+    for c in clients {
+        match c.join().expect("client thread") {
+            proto::Response::Query(q) => assert!(q.id > 0),
+            other => panic!("in-flight request lost: {other:?}"),
+        }
+    }
+    server.join();
+}

@@ -103,7 +103,7 @@ fn eviction_under_tiny_cache_keeps_serving_correctly() {
             "doc {target}: eviction must never change results"
         );
     }
-    server.tree().check_invariants();
+    server.cache().check_invariants();
 }
 
 #[test]
@@ -129,7 +129,7 @@ fn iterative_retrieval_reuses_round_kv() {
         .serve_iterative(&[4, 9], &query, 3, &cfg)
         .unwrap();
     assert_eq!(second.total_docs_hit(), second.total_docs());
-    server.tree().check_invariants();
+    server.cache().check_invariants();
 }
 
 #[test]

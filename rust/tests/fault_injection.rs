@@ -173,9 +173,9 @@ mod real_stack {
         for t in 0..6u32 {
             baseline.push(server.serve(t, &query, 3, &cfg).unwrap());
         }
-        // Inject a GPU failure.
-        let (lost, _recovered) = server.tree_mut().fail_gpu();
-        server.tree().check_invariants();
+        // Inject a GPU failure through the shared cache service.
+        let (lost, _recovered) = server.cache().fail_gpu();
+        server.cache().check_invariants();
         assert!(lost > 0, "failure actually destroyed cache state");
         // Serve the same requests again: cold (recompute) but identical.
         for t in 0..6u32 {
@@ -186,6 +186,6 @@ mod real_stack {
                 "doc {t}: recompute-after-failure must match"
             );
         }
-        server.tree().check_invariants();
+        server.cache().check_invariants();
     }
 }
