@@ -28,12 +28,33 @@ else
     echo "warn: clippy unavailable, skipping lint gate"
 fi
 
+# Concurrent serving matrix (PJRT-free): the multi-worker/multi-engine
+# TCP runtime over the sharded cache with a synthetic engine. Runs
+# everywhere; exits non-zero on any regression, keeping the concurrent
+# paths exercised even without artifacts.
+echo "== concurrent serving matrix (PJRT-free) =="
+for w in 1 4; do
+    for e in 1 2; do
+        echo "-- serving_matrix --workers $w --engines $e --"
+        cargo run --release --example serving_matrix -- \
+            --workers "$w" --engines "$e"
+    done
+done
+
 # The PJRT-backed e2e example needs AOT artifacts (make artifacts, which
 # requires the Python/JAX toolchain). It exits non-zero on any serving
-# regression, so run it whenever the artifacts exist.
+# regression, so run it whenever the artifacts exist — first the direct
+# composition proof, then the real-compute TCP matrix.
 if [ -f artifacts/manifest.json ]; then
     echo "== e2e serving example =="
     cargo run --release --example e2e_serving
+    for w in 1 4; do
+        for e in 1 2; do
+            echo "-- e2e_serving --workers $w --engines $e --"
+            cargo run --release --example e2e_serving -- \
+                --workers "$w" --engines "$e"
+        done
+    done
 else
     echo "warn: artifacts/ not built, skipping e2e serving example"
 fi

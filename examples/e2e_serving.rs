@@ -9,22 +9,332 @@
 //! is the proof that all layers compose with Python nowhere on the
 //! request path.
 //!
+//! Two modes:
+//! - default: drive `RealServer::serve` directly (single engine, no
+//!   TCP), as the original composition proof.
+//! - `--workers N [--engines M]`: run the same workload through the
+//!   concurrent TCP runtime — N connection workers, M engine-driver
+//!   replicas sharing one M-shard knowledge-tree cache — exercising
+//!   shard-affinity routing and cross-engine stats fan-out with real
+//!   PJRT compute. This is the CI matrix entry point.
+//!
 //! Run: `make artifacts && cargo run --release --example e2e_serving`
+//!      `... --example e2e_serving -- --workers 4 --engines 2`
 
+use ragcache::cli::Args;
 use ragcache::controller::real::{RealConfig, RealServer};
 use ragcache::embed::EmbeddingModel;
+use ragcache::llm::ByteTokenizer;
 use ragcache::runtime::{ArtifactManifest, PjrtModel};
+use ragcache::server::{
+    proto, Client, PriorityEstimator, QueryHandler, Server,
+    ServerOptions, ShardFn,
+};
 use ragcache::util::{Rng, Summary};
 use ragcache::vectordb::{FlatIndex, VectorIndex};
 use ragcache::workload::Corpus;
 use std::path::Path;
+use std::sync::Arc;
+
+const NUM_DOCS: usize = 128;
+
+/// The deterministic knowledge base both modes (and every engine
+/// replica) build: token ids, embeddings, vector index.
+fn build_corpus(
+) -> (Vec<Vec<i32>>, EmbeddingModel, Box<dyn VectorIndex>) {
+    let corpus = Corpus::tiny(NUM_DOCS, 3);
+    let mut rng = Rng::new(9);
+    let doc_tokens: Vec<Vec<i32>> = (0..NUM_DOCS)
+        .map(|d| {
+            (0..corpus.tokens(d as u32))
+                .map(|_| rng.index(256) as i32)
+                .collect()
+        })
+        .collect();
+    let dim = 16;
+    let em = EmbeddingModel::new(dim, 17);
+    let vecs: Vec<Vec<f32>> =
+        (0..NUM_DOCS as u32).map(|d| em.document(d)).collect();
+    let index: Box<dyn VectorIndex> = Box::new(FlatIndex::build(dim, &vecs));
+    (doc_tokens, em, index)
+}
+
+/// Skewed query stream: a few hot topics, like the paper's Fig. 5.
+fn skewed_workload() -> Vec<u32> {
+    let hot_docs: Vec<u32> = (0..8).collect();
+    let mut workload = Vec::new();
+    for i in 0..48u32 {
+        let target = if i % 4 == 0 {
+            8 + (i / 4) % 24 // cold tail
+        } else {
+            hot_docs[(i as usize) % hot_docs.len()] // hot set
+        };
+        workload.push(target);
+    }
+    workload
+}
 
 fn main() -> anyhow::Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &[]).map_err(anyhow::Error::msg)?;
+    let workers: usize = args
+        .get_parse_or("workers", 0)
+        .map_err(anyhow::Error::msg)?;
+    let engines: usize = args
+        .get_parse_or("engines", 1)
+        .map_err(anyhow::Error::msg)?;
+
     let dir = Path::new("artifacts");
     if !dir.join("manifest.json").exists() {
         eprintln!("artifacts missing — run `make artifacts` first");
         std::process::exit(1);
     }
+    if workers > 0 {
+        return serve_tcp_matrix(dir, workers, engines.max(1));
+    }
+    serve_direct(dir)
+}
+
+/// PJRT-backed handler for the TCP mode (each engine replica owns one).
+struct TcpHandler {
+    server: RealServer,
+    cfg: RealConfig,
+    tok: ByteTokenizer,
+}
+
+impl QueryHandler for TcpHandler {
+    fn query(
+        &mut self,
+        target_doc: u32,
+        query: &str,
+        max_new: usize,
+    ) -> anyhow::Result<proto::QueryResult> {
+        let toks = self.tok.encode(query);
+        let resp = self.server.serve(
+            target_doc,
+            &toks,
+            max_new.clamp(1, 16),
+            &self.cfg,
+        )?;
+        Ok(proto::QueryResult {
+            id: resp.id,
+            docs: resp.docs,
+            docs_hit: resp.docs_hit,
+            cached_tokens: resp.cached_tokens,
+            computed_tokens: resp.computed_tokens,
+            ttft_ms: resp.ttft * 1e3,
+            total_ms: resp.total * 1e3,
+            text: self.tok.decode(&resp.output_tokens),
+        })
+    }
+
+    fn stats(&self) -> proto::StatsResult {
+        let s = self.server.stats();
+        let c = self.server.cache().counters();
+        proto::StatsResult {
+            requests: s.requests,
+            mean_ttft_ms: s.mean_ttft_s * 1e3,
+            hit_rate: s.hit_rate,
+            engines: 1,
+            tree_inserts: c.inserts,
+            tree_gpu_evictions: c.gpu_evictions,
+            tree_host_evictions: c.host_evictions,
+        }
+    }
+}
+
+/// CI matrix mode: the concurrent TCP runtime with real PJRT engines.
+fn serve_tcp_matrix(
+    dir: &Path,
+    workers: usize,
+    engines: usize,
+) -> anyhow::Result<()> {
+    let manifest = ArtifactManifest::load(dir)?;
+    let mm = manifest.model("tiny-gqa")?;
+    let kv_floats = mm.arch.kv_floats_per_token();
+    let cfg = RealConfig::default();
+    // One sharded tree (one shard per engine) shared by all replicas.
+    let cache = RealServer::build_sharded_cache(kv_floats, &cfg, engines);
+
+    let est = cache.clone();
+    let estimator: PriorityEstimator = Arc::new(move |req| match req {
+        proto::Request::Query { target_doc, .. } => {
+            let m = est.lookup(&[*target_doc]);
+            (m.cached_tokens, 64usize.saturating_sub(m.cached_tokens).max(1))
+        }
+        _ => (0, 1),
+    });
+    // Affinity hint: route by target doc (retrieval's top hit can
+    // differ under noise; per-shard locks keep that correct).
+    let route = cache.clone();
+    let router: ShardFn = Arc::new(move |req| match req {
+        proto::Request::Query { target_doc, .. } => {
+            route.shard_of_doc(*target_doc)
+        }
+        _ => 0,
+    });
+    let opts = ServerOptions {
+        workers,
+        engines,
+        estimator: Some(estimator),
+        router: Some(router),
+        ..ServerOptions::default()
+    };
+    let dir_buf = dir.to_path_buf();
+    let engine_cache = cache.clone();
+    let server = Server::spawn_sharded(0, opts, move |engine| {
+        let manifest = ArtifactManifest::load(&dir_buf)?;
+        let model = PjrtModel::load(manifest.model("tiny-gqa")?)?;
+        let (doc_tokens, em, index) = build_corpus();
+        let rs = RealServer::with_cache(
+            model,
+            index,
+            em,
+            doc_tokens,
+            engine_cache.clone(),
+        )?;
+        log::info!("engine {engine} ready");
+        Ok(TcpHandler {
+            server: rs,
+            cfg: RealConfig::default(),
+            tok: ByteTokenizer::new(),
+        })
+    })?;
+    let addr = server.addr;
+    println!(
+        "e2e TCP matrix on {addr}: {workers} workers, {engines} engines"
+    );
+
+    // The direct-mode workload, split across parallel clients.
+    let workload = skewed_workload();
+    let clients = workers.clamp(1, 4);
+    let chunk = workload.len().div_ceil(clients);
+    let mut joins = Vec::new();
+    for part in workload.chunks(chunk) {
+        let part = part.to_vec();
+        joins.push(std::thread::spawn(
+            move || -> anyhow::Result<(usize, usize)> {
+                let mut cl = Client::connect(addr)?;
+                let mut served = 0usize;
+                let mut hits = 0usize;
+                for &t in &part {
+                    let req = proto::Request::Query {
+                        target_doc: t,
+                        query: "what is this topic".into(),
+                        max_new: 4,
+                    };
+                    match cl.call(&req)? {
+                        proto::Response::Query(q) => {
+                            served += 1;
+                            if q.docs_hit > 0 {
+                                hits += 1;
+                            }
+                        }
+                        other => anyhow::bail!("unexpected {other:?}"),
+                    }
+                }
+                Ok((served, hits))
+            },
+        ));
+    }
+    let mut served = 0usize;
+    let mut hits = 0usize;
+    for j in joins {
+        let (s, h) = j.join().expect("client thread")?;
+        served += s;
+        hits += h;
+    }
+
+    // Warm sweep over the hot set, stats, shutdown — all on ONE
+    // connection: a connection owns its worker for its lifetime, so
+    // with --workers 1 a second admin client would wait out the idle
+    // timeout behind this one.
+    let mut cl = Client::connect(addr)?;
+    let mut warm_hits = 0usize;
+    for t in 0..8u32 {
+        let req = proto::Request::Query {
+            target_doc: t,
+            query: "again".into(),
+            max_new: 2,
+        };
+        match cl.call(&req)? {
+            proto::Response::Query(q) => {
+                if q.docs_hit > 0 {
+                    warm_hits += 1;
+                }
+            }
+            other => anyhow::bail!("unexpected {other:?}"),
+        }
+    }
+    let stats = match cl.call(&proto::Request::Stats)? {
+        proto::Response::Stats(s) => s,
+        other => anyhow::bail!("unexpected stats response {other:?}"),
+    };
+    let shutdown_ok = cl.call(&proto::Request::Shutdown)?;
+    server.join();
+
+    println!(
+        "served {served}/{} + {warm_hits}/8 warm hits; stats: {} reqs, \
+         {} engines, {} inserts",
+        workload.len(),
+        stats.requests,
+        stats.engines,
+        stats.tree_inserts
+    );
+
+    // CI gates: regressions exit non-zero, not just print odd numbers.
+    let mut failures = Vec::new();
+    if shutdown_ok != proto::Response::Ok {
+        failures.push(format!("shutdown answered {shutdown_ok:?}"));
+    }
+    if served != workload.len() {
+        failures.push(format!(
+            "served {served} of {} requests",
+            workload.len()
+        ));
+    }
+    if hits == 0 {
+        failures.push("no request ever hit the cache".to_string());
+    }
+    if warm_hits == 0 {
+        failures.push("warm sweep never hit the cache".to_string());
+    }
+    if stats.engines != engines {
+        failures.push(format!(
+            "stats merged {} engines, expected {engines}",
+            stats.engines
+        ));
+    }
+    if stats.requests != workload.len() + 8 {
+        failures.push(format!(
+            "stats saw {} requests, expected {}",
+            stats.requests,
+            workload.len() + 8
+        ));
+    }
+    let c = cache.counters();
+    if c.inserts == 0 {
+        failures.push("nothing was inserted into the tree".to_string());
+    }
+    cache.check_invariants();
+    if cache.pinned_nodes() != 0 {
+        failures.push(format!(
+            "{} pins leaked by serving",
+            cache.pinned_nodes()
+        ));
+    }
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("FAIL: {f}");
+        }
+        std::process::exit(1);
+    }
+    println!("\nOK");
+    Ok(())
+}
+
+/// Original composition proof: drive the stack directly, no TCP.
+fn serve_direct(dir: &Path) -> anyhow::Result<()> {
     let manifest = ArtifactManifest::load(dir)?;
     let mm = manifest.model("tiny-gqa")?;
     println!(
@@ -37,36 +347,13 @@ fn main() -> anyhow::Result<()> {
     println!("platform: {}", model.platform_name());
 
     // Knowledge base: 128 short documents with real embeddings + index.
-    let num_docs = 128usize;
-    let corpus = Corpus::tiny(num_docs, 3);
-    let mut rng = Rng::new(9);
-    let doc_tokens: Vec<Vec<i32>> = (0..num_docs)
-        .map(|d| {
-            (0..corpus.tokens(d as u32))
-                .map(|_| rng.index(256) as i32)
-                .collect()
-        })
-        .collect();
-    let dim = 16;
-    let em = EmbeddingModel::new(dim, 17);
-    let vecs: Vec<Vec<f32>> =
-        (0..num_docs as u32).map(|d| em.document(d)).collect();
-    let index: Box<dyn VectorIndex> = Box::new(FlatIndex::build(dim, &vecs));
+    let (doc_tokens, em, index) = build_corpus();
+    let mut rng = Rng::new(0xE2E0);
 
     let cfg = RealConfig::default();
     let mut server = RealServer::new(model, index, em, doc_tokens, &cfg)?;
 
-    // Skewed query stream: a few hot topics, like the paper's Fig. 5.
-    let hot_docs: Vec<u32> = (0..8).collect();
-    let mut workload = Vec::new();
-    for i in 0..48u32 {
-        let target = if i % 4 == 0 {
-            8 + (i / 4) % 24 // cold tail
-        } else {
-            hot_docs[(i as usize) % hot_docs.len()] // hot set
-        };
-        workload.push(target);
-    }
+    let workload = skewed_workload();
 
     println!("\nserving {} requests (cold + warm)...", workload.len());
     let mut cold = Summary::new();

@@ -1,0 +1,286 @@
+//! Concurrent serving matrix (PJRT-free): the multi-worker /
+//! multi-engine TCP runtime over the sharded knowledge-tree cache, with
+//! a synthetic engine standing in for PJRT. Exercises exactly the
+//! concurrency surface of `ragcache serve` — connection workers,
+//! shard-affinity routing, M engine drivers, cross-engine stats fan-out,
+//! graceful shutdown — without AOT artifacts, so CI can sweep a
+//! `{workers} × {engines}` matrix everywhere. Exits non-zero on any
+//! regression.
+//!
+//! Run: `cargo run --release --example serving_matrix -- \
+//!         --workers 4 --engines 2 [--shards K] [--clients 4]`
+
+use ragcache::cli::Args;
+use ragcache::config::PolicyKind;
+use ragcache::controller::ShardedCacheService;
+use ragcache::kvcache::PageSpec;
+use ragcache::policy::make_policy;
+use ragcache::server::{
+    proto, Client, PriorityEstimator, QueryHandler, Server,
+    ServerOptions, ShardFn,
+};
+use ragcache::tree::KnowledgeTree;
+use std::sync::Arc;
+
+const DOC_TOKENS: usize = 32;
+const TARGETS: u32 = 16;
+
+/// Engine replica: real sharded-cache admission, synthetic compute.
+struct MatrixHandler {
+    cache: ShardedCacheService,
+    engine: usize,
+    served: u64,
+}
+
+impl QueryHandler for MatrixHandler {
+    fn query(
+        &mut self,
+        target_doc: u32,
+        query: &str,
+        _max_new: usize,
+    ) -> anyhow::Result<proto::QueryResult> {
+        let docs = [target_doc, target_doc + 1];
+        let docs_tokens: Vec<(u32, usize)> =
+            docs.iter().map(|&d| (d, DOC_TOKENS)).collect();
+        let adm = self.cache.admit(&docs_tokens, query.len().max(1));
+        let now = self.served as f64;
+        self.cache.touch_hits(&adm, 1e-3, now);
+        self.cache.commit(&adm, 1e-3, now, None);
+        self.served += 1;
+        Ok(proto::QueryResult {
+            id: self.served,
+            docs: docs.to_vec(),
+            docs_hit: adm.matched_docs,
+            cached_tokens: adm.alpha,
+            computed_tokens: adm.beta,
+            ttft_ms: 1.0,
+            total_ms: 2.0,
+            text: format!("engine{}:{query}", self.engine),
+        })
+    }
+
+    fn stats(&self) -> proto::StatsResult {
+        let c = self.cache.counters();
+        proto::StatsResult {
+            requests: self.served as usize,
+            mean_ttft_ms: 1.0,
+            hit_rate: 0.0,
+            engines: 1,
+            tree_inserts: c.inserts,
+            tree_gpu_evictions: c.gpu_evictions,
+            tree_host_evictions: c.host_evictions,
+        }
+    }
+}
+
+fn query(target: u32) -> proto::Request {
+    proto::Request::Query {
+        target_doc: target,
+        query: "q".into(),
+        max_new: 1,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &[]).map_err(anyhow::Error::msg)?;
+    let workers: usize = args
+        .get_parse_or("workers", 4)
+        .map_err(anyhow::Error::msg)?;
+    let engines: usize = args
+        .get_parse_or("engines", 1)
+        .map_err(anyhow::Error::msg)?;
+    let shards: usize = args
+        .get_parse_or("shards", engines.max(1))
+        .map_err(anyhow::Error::msg)?;
+    let clients: usize = args
+        .get_parse_or("clients", 4)
+        .map_err(anyhow::Error::msg)?;
+    if shards < engines.max(1) {
+        // shard % engines routing would leave the surplus engines idle.
+        anyhow::bail!(
+            "--shards ({shards}) must be >= --engines ({engines})"
+        );
+    }
+
+    let p = PageSpec {
+        block_tokens: 8,
+        kv_bytes_per_token: 16,
+    };
+    let svc = ShardedCacheService::build(shards, |_| {
+        KnowledgeTree::new(
+            p.bytes(4096),
+            p.bytes(8192),
+            p,
+            make_policy(PolicyKind::Pgdsf),
+            true,
+            0,
+        )
+    });
+    let est = svc.clone();
+    let estimator: PriorityEstimator = Arc::new(move |req| match req {
+        proto::Request::Query { target_doc, .. } => {
+            let m = est.lookup(&[*target_doc, *target_doc + 1]);
+            let total = 2 * DOC_TOKENS;
+            (m.cached_tokens, total.saturating_sub(m.cached_tokens).max(1))
+        }
+        _ => (0, 1),
+    });
+    let route = svc.clone();
+    let router: ShardFn = Arc::new(move |req| match req {
+        proto::Request::Query { target_doc, .. } => {
+            route.shard_of_doc(*target_doc)
+        }
+        _ => 0,
+    });
+    let opts = ServerOptions {
+        workers,
+        engines,
+        estimator: Some(estimator),
+        router: Some(router),
+        ..ServerOptions::default()
+    };
+    let handler_svc = svc.clone();
+    let server = Server::spawn_sharded(0, opts, move |engine| {
+        Ok(MatrixHandler {
+            cache: handler_svc.clone(),
+            engine,
+            served: 0,
+        })
+    })?;
+    let addr = server.addr;
+    println!(
+        "serving matrix on {addr}: {workers} workers, {engines} engines, \
+         {shards} shards, {clients} clients"
+    );
+
+    // Warm phase: one client inserts every target's doc pair (cold).
+    let mut warm = Client::connect(addr)?;
+    let mut warm_misses = 0usize;
+    for t in 0..TARGETS {
+        match warm.call(&query(t))? {
+            proto::Response::Query(q) => {
+                if q.docs_hit == 0 {
+                    warm_misses += 1;
+                }
+            }
+            other => anyhow::bail!("unexpected warm response {other:?}"),
+        }
+    }
+    // A connection owns its worker for its lifetime: with --workers 1
+    // an idle warm client would block the hit phase until the idle
+    // timeout reclaims it. Yield the worker explicitly.
+    drop(warm);
+
+    // Hit phase: parallel clients sweep every target.
+    let mut joins = Vec::new();
+    for _ in 0..clients.max(1) {
+        joins.push(std::thread::spawn(
+            move || -> anyhow::Result<(usize, usize)> {
+                let mut cl = Client::connect(addr)?;
+                let mut served = 0usize;
+                let mut full_hits = 0usize;
+                for t in 0..TARGETS {
+                    match cl.call(&query(t))? {
+                        proto::Response::Query(q) => {
+                            served += 1;
+                            if q.docs_hit == 2 {
+                                full_hits += 1;
+                            }
+                        }
+                        other => {
+                            anyhow::bail!("unexpected {other:?}")
+                        }
+                    }
+                }
+                Ok((served, full_hits))
+            },
+        ));
+    }
+    let mut served = 0usize;
+    let mut full_hits = 0usize;
+    for j in joins {
+        let (s, h) = j.join().expect("client thread")?;
+        served += s;
+        full_hits += h;
+    }
+
+    // Cross-engine stats fan-out, then graceful shutdown — on ONE
+    // connection, so no second client waits behind it for a worker.
+    let mut tail = Client::connect(addr)?;
+    let stats = match tail.call(&proto::Request::Stats)? {
+        proto::Response::Stats(s) => s,
+        other => anyhow::bail!("unexpected stats response {other:?}"),
+    };
+    let ok = tail.call(&proto::Request::Shutdown)?;
+    server.join();
+
+    let expect_served = clients.max(1) * TARGETS as usize;
+    let expect_total = TARGETS as usize + expect_served;
+    println!(
+        "served {}/{} hit-phase requests, {} full hits, stats: {} reqs \
+         across {} engines, {} tree inserts",
+        served,
+        expect_served,
+        full_hits,
+        stats.requests,
+        stats.engines,
+        stats.tree_inserts
+    );
+
+    // Regression gates: exit non-zero instead of printing odd numbers.
+    let mut failures = Vec::new();
+    if ok != proto::Response::Ok {
+        failures.push(format!("shutdown answered {ok:?}"));
+    }
+    if warm_misses != TARGETS as usize {
+        failures.push(format!(
+            "warm phase: {warm_misses}/{TARGETS} cold misses"
+        ));
+    }
+    if served != expect_served {
+        failures.push(format!("served {served} of {expect_served}"));
+    }
+    if full_hits != served {
+        failures.push(format!(
+            "only {full_hits}/{served} hit-phase requests fully hit"
+        ));
+    }
+    if stats.engines != engines.max(1) {
+        failures.push(format!(
+            "stats merged {} engines, expected {}",
+            stats.engines,
+            engines.max(1)
+        ));
+    }
+    if stats.requests != expect_total {
+        failures.push(format!(
+            "stats saw {} requests, expected {expect_total}",
+            stats.requests
+        ));
+    }
+    let c = svc.counters();
+    if stats.tree_inserts != c.inserts || c.inserts != 2 * TARGETS as u64 {
+        failures.push(format!(
+            "tree inserts: stats {} vs cache {} vs expected {}",
+            stats.tree_inserts,
+            c.inserts,
+            2 * TARGETS
+        ));
+    }
+    svc.check_invariants();
+    if svc.pinned_nodes() != 0 {
+        failures.push(format!(
+            "{} pins leaked by serving",
+            svc.pinned_nodes()
+        ));
+    }
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("FAIL: {f}");
+        }
+        std::process::exit(1);
+    }
+    println!("OK");
+    Ok(())
+}

@@ -59,8 +59,9 @@ fn main() {
     );
     // Populate with 2000 two-doc paths.
     for d in 0..2000u32 {
-        let (a, _) = tree
+        let a = tree
             .insert_child(tree.root(), d, 1900, None)
+            .1
             .expect("fits");
         tree.insert_child(a, 100_000 + d, 1900, None);
     }

@@ -123,8 +123,8 @@ mod tests {
     #[test]
     fn replication_protects_hot_nodes_across_gpu_failure() {
         let mut t = make_tree();
-        let (hot, _) = t.insert_child(t.root(), 1, 16, None).unwrap();
-        let (cold, _) = t.insert_child(t.root(), 2, 16, None).unwrap();
+        let hot = t.insert_child(t.root(), 1, 16, None).1.unwrap();
+        let cold = t.insert_child(t.root(), 2, 16, None).1.unwrap();
         touch(&mut t, hot, 10);
         touch(&mut t, cold, 1);
 
@@ -141,8 +141,8 @@ mod tests {
     #[test]
     fn gpu_failure_invalidates_descendants_of_lost_nodes() {
         let mut t = make_tree();
-        let (a, _) = t.insert_child(t.root(), 1, 16, None).unwrap();
-        let (b, _) = t.insert_child(a, 2, 16, None).unwrap();
+        let a = t.insert_child(t.root(), 1, 16, None).1.unwrap();
+        let b = t.insert_child(a, 2, 16, None).1.unwrap();
         // Replicate only the CHILD: after failure the parent is lost, so
         // the child must be dropped too (prefix sensitivity).
         assert!(t.replicate_to_host(b));

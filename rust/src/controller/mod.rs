@@ -18,8 +18,9 @@
 //!                           ▼
 //!              pipeline (shared core)
 //!     DSP decisions · reorder-queue admission ·
-//!     CacheService: tree match → promote → pin → (α,β)
-//!     → commit/release · metrics hooks
+//!     ShardedCacheService ──► K × CacheService shards
+//!       (route by first doc)   tree match → promote → pin → (α,β)
+//!                              → commit/release · metrics hooks
 //!                           │
 //!                           ▼
 //!        tree / kvcache / policy / sched substrates
@@ -35,10 +36,12 @@ pub mod fault;
 pub mod pipeline;
 pub mod real;
 pub mod retrieval;
+pub mod shard;
 pub mod sim_server;
 
 pub use pipeline::{
     Admission, CacheService, Pipeline, PipelineDriver, RequestState,
 };
 pub use retrieval::{RetrievalTiming, StagePlan, StagedRetrieval};
+pub use shard::ShardedCacheService;
 pub use sim_server::{SimOutcome, SimServer};

@@ -18,19 +18,25 @@
 //! ([`super::real`]) supplies wall-clock time and PJRT execution. The
 //! [`PipelineDriver`] trait is the seam between the two.
 //!
-//! [`CacheService`] wraps the [`KnowledgeTree`] (and with it the
+//! [`CacheService`] wraps one [`KnowledgeTree`] (and with it the
 //! `TierAllocator` accounting) behind interior locking, so the admission
-//! state machine can be driven from many threads at once — the substrate
-//! the concurrent TCP runtime in [`crate::server`] builds on.
+//! state machine can be driven from many threads at once.
+//! [`ShardedCacheService`](super::ShardedCacheService) stacks K of them
+//! behind first-document routing — one lock, tier-budget slice and
+//! counter set per shard — which is what lets N connection workers and
+//! M engine drivers admit in parallel instead of convoying on a single
+//! tree mutex. The [`Pipeline`] speaks to the sharded front; an
+//! unsharded deployment is simply K = 1.
 
 use super::retrieval::StagedRetrieval;
+use super::shard::ShardedCacheService;
 use crate::kvcache::KvPayload;
 use crate::metrics::Recorder;
 use crate::policy::AccessCtx;
 use crate::sched::ReorderQueue;
 use crate::spec::SpecState;
 use crate::tree::{
-    DocId, KnowledgeTree, MatchResult, NodeId, Transfers, TreeCounters,
+    DocId, KnowledgeTree, MatchResult, NodeId, TreeCounters,
 };
 use std::sync::{Arc, Mutex};
 
@@ -73,6 +79,9 @@ pub struct Admission {
     /// Estimated (sim) or measured (real) prefill seconds; set by the
     /// driver once known, consumed by the policy updates.
     pub estimated_time: f64,
+    /// Which tree shard admitted this request (0 for an unsharded
+    /// service); commit/release/touch route back through it.
+    pub shard: usize,
 }
 
 /// Thread-safe knowledge-tree service: the [`KnowledgeTree`] plus its
@@ -150,25 +159,17 @@ impl CacheService {
         self.with(|tree| {
             let ids: Vec<DocId> = docs.iter().map(|&(d, _)| d).collect();
             let m = tree.lookup(&ids);
-            // Promote root-to-leaf, one node at a time, with the whole
-            // match pinned so making room for a later node can never
-            // evict an earlier one. Transfers are charged for exactly
-            // what moved, including a prefix promoted before a failure.
-            tree.pin(&m.path);
-            let mut transfers = Transfers::default();
-            let mut matched = m.path.len();
-            for (i, &n) in m.path.iter().enumerate() {
-                match tree.promote(&[n]) {
-                    Some(t) => transfers.merge(t),
-                    None => {
-                        matched = i;
-                        break;
-                    }
-                }
-            }
-            // Drop the pins on the unusable tail; the promoted prefix
-            // keeps its pin as the admission pin.
-            tree.unpin(&m.path[matched..]);
+            // Promote root-to-leaf. The promotion pins the whole match
+            // for its duration (making room for a later node can never
+            // evict an earlier one), stops at the first node GPU space
+            // cannot be made for, and reports the transfers of
+            // everything that actually moved — including the prefix
+            // promoted before a mid-path stop, so PCIe time is charged
+            // for real byte movement, never undercounted.
+            let promo = tree.promote(&m.path);
+            let matched = promo.promoted;
+            // The usable prefix takes the admission pin.
+            tree.pin(&m.path[..matched]);
             let use_path: Vec<NodeId> = m.path[..matched].to_vec();
             let alpha: usize = use_path
                 .iter()
@@ -185,8 +186,10 @@ impl CacheService {
                 alpha,
                 beta,
                 unmatched: docs[matched..].to_vec(),
-                transfer_bytes: transfers.h2g_bytes + transfers.g2h_bytes,
+                transfer_bytes: promo.transfers.h2g_bytes
+                    + promo.transfers.g2h_bytes,
                 estimated_time: 0.0,
+                shard: 0,
             }
         })
     }
@@ -247,8 +250,14 @@ impl CacheService {
             for (i, &(doc, tokens)) in adm.unmatched.iter().enumerate() {
                 let payload =
                     payloads.as_ref().and_then(|ps| ps.get(i).cloned());
+                // Commit-time byte movement (insert_child's Transfers)
+                // is deliberately not charged as per-request PCIe time
+                // yet: only the admit-path promote feeds
+                // `Admission::transfer_bytes`. Swap-out totals still
+                // land in the tree counters; charging commits per batch
+                // is the ROADMAP "batched H2D transfers" item.
                 match tree.insert_child(parent, doc, tokens, payload) {
-                    Some((id, _)) => {
+                    (_, Some(id)) => {
                         tree.on_access(
                             id,
                             &AccessCtx {
@@ -263,7 +272,7 @@ impl CacheService {
                         parent = id;
                         inserted += 1;
                     }
-                    None => break, // does not fit: stays transient
+                    (_, None) => break, // does not fit: stays transient
                 }
             }
             inserted
@@ -322,7 +331,7 @@ impl RequestState {
 /// engine ran an iteration" that is identical across drivers.
 pub struct Pipeline {
     /// `None` for cache-less baselines (vLLM configuration).
-    pub cache: Option<CacheService>,
+    pub cache: Option<ShardedCacheService>,
     pub queue: ReorderQueue,
     pub recorder: Recorder,
     pub requests: Vec<RequestState>,
@@ -330,7 +339,7 @@ pub struct Pipeline {
 
 impl Pipeline {
     pub fn new(
-        cache: Option<CacheService>,
+        cache: Option<ShardedCacheService>,
         reorder: bool,
         window: usize,
     ) -> Self {

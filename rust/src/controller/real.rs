@@ -11,7 +11,8 @@
 //! compose; the paper-scale experiments use the virtual-clock
 //! [`super::sim_server`].
 
-use super::pipeline::{CacheService, Pipeline, PipelineDriver};
+use super::pipeline::{Pipeline, PipelineDriver};
+use super::shard::ShardedCacheService;
 use crate::embed::EmbeddingModel;
 use crate::kvcache::{KvPayload, PageSpec};
 use crate::llm::tokenizer::SEP;
@@ -106,9 +107,9 @@ pub struct RealServer {
 
 impl RealServer {
     /// The page spec this server would size its cache with — exposed so
-    /// callers can pre-build a shared [`CacheService`] (e.g. for the
-    /// concurrent runtime's priority estimator) before the non-`Send`
-    /// PJRT model exists.
+    /// callers can pre-build a shared [`ShardedCacheService`] (e.g. for
+    /// the concurrent runtime's priority estimator) before the
+    /// non-`Send` PJRT model exists.
     pub fn page_spec(
         kv_floats_per_token: usize,
         cfg: &RealConfig,
@@ -134,6 +135,29 @@ impl RealServer {
         )
     }
 
+    /// Build a K-shard cache service for this model, splitting the
+    /// configured tier budgets evenly across shards. Shared between the
+    /// M engine replicas of a concurrent deployment (each shard has its
+    /// own lock, so replicas admit in parallel).
+    pub fn build_sharded_cache(
+        kv_floats_per_token: usize,
+        cfg: &RealConfig,
+        shards: usize,
+    ) -> ShardedCacheService {
+        let k = shards.max(1);
+        let page = Self::page_spec(kv_floats_per_token, cfg);
+        ShardedCacheService::build(k, |_| {
+            KnowledgeTree::new(
+                cfg.gpu_cache_bytes / k as u64,
+                cfg.host_cache_bytes / k as u64,
+                page,
+                make_policy(cfg.policy),
+                true,
+                0,
+            )
+        })
+    }
+
     pub fn new(
         model: PjrtModel,
         index: Box<dyn VectorIndex>,
@@ -142,19 +166,20 @@ impl RealServer {
         cfg: &RealConfig,
     ) -> Result<Self> {
         let kv = model.manifest().arch.kv_floats_per_token();
-        let cache = CacheService::new(Self::build_tree(kv, cfg));
+        let cache =
+            ShardedCacheService::single(Self::build_tree(kv, cfg));
         Self::with_cache(model, index, em, doc_tokens, cache)
     }
 
     /// Assemble the stack around a pre-built, possibly shared cache
-    /// service (its tree must have been sized with
+    /// service (its trees must have been sized with
     /// [`RealServer::page_spec`] for this model).
     pub fn with_cache(
         model: PjrtModel,
         index: Box<dyn VectorIndex>,
         em: EmbeddingModel,
         doc_tokens: Vec<Vec<i32>>,
-        cache: CacheService,
+        cache: ShardedCacheService,
     ) -> Result<Self> {
         Ok(RealServer {
             model,
@@ -190,10 +215,11 @@ impl RealServer {
         }
     }
 
-    /// The shared, thread-safe cache service backing this server — usable
-    /// from other threads (e.g. the concurrent TCP runtime's priority
-    /// estimator) and for administration / failure injection.
-    pub fn cache(&self) -> &CacheService {
+    /// The shared, thread-safe (sharded) cache service backing this
+    /// server — usable from other threads (e.g. the concurrent TCP
+    /// runtime's priority estimator and sibling engine replicas) and
+    /// for administration / failure injection.
+    pub fn cache(&self) -> &ShardedCacheService {
         self.pipeline
             .cache
             .as_ref()
@@ -254,7 +280,7 @@ impl RealServer {
         let (adm, _transfer_secs) =
             self.pipeline
                 .admit(&self.driver, &docs_tokens, request_tokens);
-        let mut kv = self.cache().concat_payloads(&adm.path);
+        let mut kv = self.cache().concat_payloads(&adm);
 
         // Non-cached documents + separator + question.
         let mut new_tokens: Vec<i32> = Vec::new();

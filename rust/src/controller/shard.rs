@@ -1,0 +1,286 @@
+//! Sharded knowledge-tree service (paper §5.1 scaled out).
+//!
+//! [`ShardedCacheService`] owns K independent [`CacheService`] shards —
+//! each with its own lock, tier-budget slice and counters — keyed by a
+//! request's FIRST document id. Admission from N connection workers then
+//! scales past one core: requests over different shards never touch the
+//! same lock, while the admit → compute → commit protocol is exactly
+//! [`CacheService`]'s, so [`Pipeline`](super::Pipeline), both drivers
+//! and the priority estimator are untouched at their call sites.
+//!
+//! Routing by the first (root-child) document is sound because the
+//! knowledge tree is a prefix tree: every path `[d0, d1, ...]` lives
+//! entirely under the root child for `d0`, so the shard owning `d0`
+//! owns the whole path and no path can span shards. Each shard carries
+//! its own permanently pinned root (the system prompt S of Fig. 8),
+//! mirroring a per-replica prompt prefix.
+
+use super::pipeline::{Admission, CacheService};
+use crate::kvcache::KvPayload;
+use crate::tree::{DocId, KnowledgeTree, MatchResult, TreeCounters};
+use std::sync::Arc;
+
+/// K independent [`CacheService`] shards behind the same protocol.
+/// Cloning shares the shards (each `CacheService` is itself a shared
+/// handle), so connection workers, engine drivers and estimators all
+/// see one cache.
+#[derive(Clone)]
+pub struct ShardedCacheService {
+    shards: Arc<[CacheService]>,
+}
+
+impl ShardedCacheService {
+    pub fn new(shards: Vec<CacheService>) -> Self {
+        assert!(!shards.is_empty(), "a cache needs at least one shard");
+        ShardedCacheService {
+            shards: shards.into(),
+        }
+    }
+
+    /// Single-shard service over one tree — the drop-in successor of
+    /// `CacheService::new` for the simulation and single-engine paths.
+    pub fn single(tree: KnowledgeTree) -> Self {
+        Self::new(vec![CacheService::new(tree)])
+    }
+
+    /// Build K shards from a per-shard tree builder. The builder should
+    /// size each tree with its slice of the tier budgets (a K-way split
+    /// of the GPU/host bytes).
+    pub fn build(
+        num_shards: usize,
+        mut builder: impl FnMut(usize) -> KnowledgeTree,
+    ) -> Self {
+        let k = num_shards.max(1);
+        Self::new(
+            (0..k).map(|i| CacheService::new(builder(i))).collect(),
+        )
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard owning a document sequence: keyed by the first
+    /// (root-child) document. Empty sequences go to shard 0.
+    pub fn shard_of(&self, docs: &[DocId]) -> usize {
+        docs.first().map_or(0, |&d| self.shard_of_doc(d))
+    }
+
+    /// The shard owning paths rooted at `doc`.
+    pub fn shard_of_doc(&self, doc: DocId) -> usize {
+        doc as usize % self.shards.len()
+    }
+
+    /// Direct access to one shard (administration, tests).
+    pub fn shard(&self, idx: usize) -> &CacheService {
+        &self.shards[idx]
+    }
+
+    /// O(h) prefix match against the owning shard (no pinning; a
+    /// snapshot for priority estimates).
+    pub fn lookup(&self, docs: &[DocId]) -> MatchResult {
+        self.shards[self.shard_of(docs)].lookup(docs)
+    }
+
+    /// Admission stage A against the owning shard. The returned
+    /// [`Admission`] records its shard, so [`commit`]/[`release`]/
+    /// [`touch_hits`] route back without the caller knowing about
+    /// sharding at all.
+    ///
+    /// [`commit`]: ShardedCacheService::commit
+    /// [`release`]: ShardedCacheService::release
+    /// [`touch_hits`]: ShardedCacheService::touch_hits
+    pub fn admit(
+        &self,
+        docs: &[(DocId, usize)],
+        request_tokens: usize,
+    ) -> Admission {
+        let shard =
+            docs.first().map_or(0, |&(d, _)| self.shard_of_doc(d));
+        let mut adm = self.shards[shard].admit(docs, request_tokens);
+        adm.shard = shard;
+        adm
+    }
+
+    /// Policy refresh for an admission's hit nodes, on its shard.
+    pub fn touch_hits(
+        &self,
+        adm: &Admission,
+        estimated_time: f64,
+        now: f64,
+    ) {
+        self.shards[adm.shard].touch_hits(adm, estimated_time, now);
+    }
+
+    /// Admission stage B on the admission's shard. See
+    /// [`CacheService::commit`].
+    pub fn commit(
+        &self,
+        adm: &Admission,
+        estimated_time: f64,
+        now: f64,
+        payloads: Option<Vec<KvPayload>>,
+    ) -> usize {
+        self.shards[adm.shard].commit(adm, estimated_time, now, payloads)
+    }
+
+    /// Abandon an admission without inserting anything.
+    pub fn release(&self, adm: &Admission) {
+        self.shards[adm.shard].release(adm);
+    }
+
+    /// Concatenate the KV payloads along an admission's pinned path
+    /// (real mode), from the shard that owns it.
+    pub fn concat_payloads(&self, adm: &Admission) -> Vec<f32> {
+        self.shards[adm.shard].concat_payloads(&adm.path)
+    }
+
+    /// Counters aggregated across every shard (the `Stats` endpoint and
+    /// metrics read this).
+    pub fn counters(&self) -> TreeCounters {
+        let mut total = TreeCounters::default();
+        for s in self.shards.iter() {
+            total.merge(s.counters());
+        }
+        total
+    }
+
+    /// Validate every shard's structural invariants.
+    pub fn check_invariants(&self) {
+        for s in self.shards.iter() {
+            s.check_invariants();
+        }
+    }
+
+    /// In-flight pins summed across shards (excludes the per-shard
+    /// roots' permanent pins).
+    pub fn pinned_nodes(&self) -> usize {
+        self.shards.iter().map(|s| s.pinned_nodes()).sum()
+    }
+
+    /// Simulate a GPU failure on every shard (§6). Returns the summed
+    /// `(lost, recovered)` node counts.
+    pub fn fail_gpu(&self) -> (usize, usize) {
+        let mut lost = 0;
+        let mut recovered = 0;
+        for s in self.shards.iter() {
+            let (l, r) = s.fail_gpu();
+            lost += l;
+            recovered += r;
+        }
+        (lost, recovered)
+    }
+}
+
+impl From<CacheService> for ShardedCacheService {
+    fn from(svc: CacheService) -> Self {
+        ShardedCacheService::new(vec![svc])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PolicyKind;
+    use crate::kvcache::PageSpec;
+    use crate::policy::make_policy;
+
+    fn sharded(
+        k: usize,
+        gpu_tokens: usize,
+        host_tokens: usize,
+    ) -> ShardedCacheService {
+        let page = PageSpec {
+            block_tokens: 8,
+            kv_bytes_per_token: 16,
+        };
+        ShardedCacheService::build(k, |_| {
+            KnowledgeTree::new(
+                page.bytes(gpu_tokens),
+                page.bytes(host_tokens),
+                page,
+                make_policy(PolicyKind::Pgdsf),
+                true,
+                0,
+            )
+        })
+    }
+
+    /// The existing `CacheService` admission test, unchanged semantics,
+    /// through the sharded front (acceptance: same admit/commit/release
+    /// protocol per shard).
+    #[test]
+    fn admit_commit_roundtrip_inserts_and_unpins() {
+        let svc = sharded(2, 1024, 1024);
+        let docs = [(1u32, 16usize), (2, 16)];
+        let adm = svc.admit(&docs, 8);
+        assert_eq!(adm.shard, 1, "first doc 1 routes to shard 1 of 2");
+        assert_eq!(adm.matched_docs, 0);
+        assert_eq!(adm.alpha, 0);
+        assert_eq!(adm.beta, 16 + 16 + 8);
+        assert_eq!(adm.unmatched, vec![(1, 16), (2, 16)]);
+        let inserted = svc.commit(&adm, 0.01, 1.0, None);
+        assert_eq!(inserted, 2);
+        svc.check_invariants();
+        assert_eq!(svc.pinned_nodes(), 0, "commit released all pins");
+
+        // Second admission fully hits and pins the path on its shard.
+        let adm2 = svc.admit(&docs, 8);
+        assert_eq!(adm2.matched_docs, 2);
+        assert_eq!(adm2.alpha, 32);
+        assert_eq!(adm2.beta, 8);
+        assert_eq!(svc.pinned_nodes(), 2);
+        svc.touch_hits(&adm2, 0.005, 2.0);
+        svc.commit(&adm2, 0.005, 2.0, None);
+        assert_eq!(svc.pinned_nodes(), 0);
+        svc.check_invariants();
+    }
+
+    #[test]
+    fn release_drops_pins_without_inserting() {
+        let svc = sharded(2, 1024, 1024);
+        let adm = svc.admit(&[(7, 16)], 4);
+        svc.commit(&adm, 0.01, 1.0, None);
+        let adm2 = svc.admit(&[(7, 16), (8, 16)], 4);
+        assert_eq!(adm2.matched_docs, 1);
+        svc.release(&adm2);
+        assert_eq!(svc.pinned_nodes(), 0);
+        // Doc 8 was never inserted.
+        assert_eq!(svc.lookup(&[7, 8]).matched_docs, 1);
+        svc.check_invariants();
+    }
+
+    #[test]
+    fn requests_route_by_first_document() {
+        let svc = sharded(2, 1024, 1024);
+        let a = svc.admit(&[(2, 16), (3, 16)], 4); // 2 % 2 = shard 0
+        let b = svc.admit(&[(3, 16), (2, 16)], 4); // 3 % 2 = shard 1
+        assert_eq!(a.shard, 0);
+        assert_eq!(b.shard, 1);
+        svc.commit(&a, 0.01, 1.0, None);
+        svc.commit(&b, 0.01, 1.0, None);
+        // Order sensitivity survives sharding: each first doc owns its
+        // whole path on its own shard.
+        assert_eq!(svc.shard(0).lookup(&[2, 3]).matched_docs, 2);
+        assert_eq!(svc.shard(1).lookup(&[3, 2]).matched_docs, 2);
+        assert_eq!(svc.shard(0).lookup(&[3, 2]).matched_docs, 0);
+        assert_eq!(svc.lookup(&[2, 3]).matched_docs, 2);
+        assert_eq!(svc.lookup(&[3, 2]).matched_docs, 2);
+        // Aggregated counters see both shards' inserts.
+        assert_eq!(svc.counters().inserts, 4);
+        assert_eq!(svc.pinned_nodes(), 0);
+        svc.check_invariants();
+    }
+
+    #[test]
+    fn fail_gpu_sums_across_shards() {
+        let svc = sharded(3, 1024, 1024);
+        for d in 0..6u32 {
+            let adm = svc.admit(&[(d, 16)], 4);
+            svc.commit(&adm, 0.01, 1.0, None);
+        }
+        let (lost, recovered) = svc.fail_gpu();
+        assert_eq!(lost + recovered, 6, "every shard's nodes accounted");
+        svc.check_invariants();
+    }
+}

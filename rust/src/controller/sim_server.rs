@@ -9,9 +9,10 @@
 //! transfer model and the analytic `(α, β)` cost profile.
 
 use super::pipeline::{
-    request_of, Admission, CacheService, Pipeline, PipelineDriver,
+    request_of, Admission, Pipeline, PipelineDriver,
 };
 use super::retrieval::{RetrievalTiming, StagedRetrieval};
+use super::shard::ShardedCacheService;
 use crate::config::{SystemConfig, SystemKind};
 use crate::kvcache::{PageSpec, TransferModel};
 use crate::llm::cost_model::{CostModel, CostProfile};
@@ -145,7 +146,7 @@ impl SimServer {
             TransferModel::pcie4()
         };
         let mut pipeline = Pipeline::new(
-            tree.map(CacheService::new),
+            tree.map(ShardedCacheService::single),
             reorder,
             cfg.sched.window,
         );

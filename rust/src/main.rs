@@ -26,6 +26,8 @@ ragcache <command> [options]
 commands:
   serve      --port 7771 --model tiny-gqa --docs 256 [--artifacts DIR]
              [--workers N]  (N concurrent connection handlers, default 4)
+             [--engines M]  (M engine-driver replicas, default 1)
+             [--shards K]   (K knowledge-tree shards, default = engines)
   simulate   --system ragcache|vllm|sglang --dataset mmlu --rate 0.8
              --requests 500 [--config FILE] [--model NAME] [--seed N]
   info       show models, GPUs, datasets, artifact status
@@ -121,40 +123,31 @@ impl QueryHandler for RealHandler {
 
     fn stats(&self) -> proto::StatsResult {
         let s = self.server.stats();
+        let c = self.server.cache().counters();
         proto::StatsResult {
             requests: s.requests,
             mean_ttft_ms: s.mean_ttft_s * 1e3,
             hit_rate: s.hit_rate,
+            engines: 1,
+            tree_inserts: c.inserts,
+            tree_gpu_evictions: c.gpu_evictions,
+            tree_host_evictions: c.host_evictions,
         }
     }
 }
 
-/// The `Send`-safe parts of the real serving stack, built ahead of the
-/// engine thread so connection workers can share the cache service for
-/// §5.2 priority estimation. Only the PJRT model (not `Send`) is loaded
-/// later, inside the engine thread.
-pub struct ServingParts {
-    pub cache: ragcache::controller::CacheService,
+/// Per-engine corpus assets (vector index, embeddings, document token
+/// ids). Deterministic from `(num_docs, seed)`, so every engine replica
+/// rebuilds the identical knowledge base while the knowledge-tree cache
+/// itself is shared through the [`ragcache::controller::ShardedCacheService`].
+pub struct CorpusParts {
     pub index: Box<dyn VectorIndex>,
     pub em: EmbeddingModel,
     pub doc_tokens: Vec<Vec<i32>>,
-    pub cfg: RealConfig,
 }
 
-/// Build everything except the PJRT model from artifacts + a synthetic
-/// tiny corpus.
-pub fn build_serving_parts(
-    artifacts: &Path,
-    model_name: &str,
-    num_docs: usize,
-    seed: u64,
-) -> Result<ServingParts> {
-    let manifest = ArtifactManifest::load(artifacts)?;
-    let mm = manifest.model(model_name)?;
-    let cfg = RealConfig::default();
-    let cache = ragcache::controller::CacheService::new(
-        RealServer::build_tree(mm.arch.kv_floats_per_token(), &cfg),
-    );
+/// Build the synthetic tiny corpus + embedding index.
+pub fn build_corpus_parts(num_docs: usize, seed: u64) -> CorpusParts {
     let corpus = Corpus::tiny(num_docs, seed);
     let mut rng = Rng::new(seed);
     // Document token ids: random bytes of the corpus-assigned length.
@@ -170,13 +163,11 @@ pub fn build_serving_parts(
     let vecs: Vec<Vec<f32>> =
         (0..num_docs as u32).map(|d| em.document(d)).collect();
     let index: Box<dyn VectorIndex> = Box::new(FlatIndex::build(dim, &vecs));
-    Ok(ServingParts {
-        cache,
+    CorpusParts {
         index,
         em,
         doc_tokens,
-        cfg,
-    })
+    }
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -185,6 +176,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let docs: usize = args.get_parse_or("docs", 256).map_err(|e| anyhow!(e))?;
     let workers: usize =
         args.get_parse_or("workers", 4).map_err(|e| anyhow!(e))?;
+    let engines: usize =
+        args.get_parse_or("engines", 1).map_err(|e| anyhow!(e))?;
+    let shards: usize = args
+        .get_parse_or("shards", engines.max(1))
+        .map_err(|e| anyhow!(e))?;
+    if shards < engines.max(1) {
+        // Engines drain shards routed shard % engines: with fewer
+        // shards than engines the surplus engines would each load a
+        // full PJRT model and then never receive a job.
+        return Err(anyhow!(
+            "--shards ({shards}) must be >= --engines ({engines}); \
+             extra engines would sit idle"
+        ));
+    }
     let artifacts = args.get_or("artifacts", "artifacts").to_string();
     let artifacts_path = std::path::PathBuf::from(&artifacts);
     if !artifacts_path.join("manifest.json").exists() {
@@ -192,19 +197,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "artifacts missing at {artifacts} (run `make artifacts`)"
         ));
     }
-    let parts = build_serving_parts(&artifacts_path, &model, docs, 42)
-        .context("building real serving stack")?;
+    let corpus_seed = 42u64;
+    let cfg = RealConfig::default();
+    // One sharded cache service shared by every engine replica, the
+    // priority estimator and the affinity router: each shard has its own
+    // lock and tier-budget slice, so M engines admit in parallel.
+    let manifest = ArtifactManifest::load(&artifacts_path)
+        .context("loading artifact manifest")?;
+    let kv_floats = manifest.model(&model)?.arch.kv_floats_per_token();
+    let cache = RealServer::build_sharded_cache(kv_floats, &cfg, shards);
 
     // Cache-aware §5.2 priority estimator over the same shared cache
-    // service the engine admits against: α from the live tree, β
+    // service the engines admit against: α from the live tree, β
     // approximated as top_k docs of this corpus minus the cached prefix
     // (an estimate is all the reorder priority needs).
-    let est_cache = parts.cache.clone();
+    let est_cache = cache.clone();
+    let corpus = Corpus::tiny(docs, corpus_seed);
     let doc_lens: Vec<usize> =
-        parts.doc_tokens.iter().map(|t| t.len()).collect();
+        (0..docs).map(|d| corpus.tokens(d as u32)).collect();
     let mean_len =
         (doc_lens.iter().sum::<usize>() / doc_lens.len().max(1)).max(1);
-    let top_k = parts.cfg.top_k;
+    let top_k = cfg.top_k;
     let estimator: ragcache::server::PriorityEstimator =
         std::sync::Arc::new(move |req| match req {
             proto::Request::Query { target_doc, .. } => {
@@ -221,32 +234,54 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
             _ => (0, 1),
         });
+    // Engine affinity = tree shard of the query's TARGET document. The
+    // tree itself shards by the first *retrieved* doc, which under
+    // query noise can differ — routing is an affinity hint (per-shard
+    // locks keep cross-engine admissions correct either way), and the
+    // target is the best signal available before retrieval runs on the
+    // engine.
+    let route_cache = cache.clone();
+    let router: ragcache::server::ShardFn =
+        std::sync::Arc::new(move |req| match req {
+            proto::Request::Query { target_doc, .. } => {
+                route_cache.shard_of_doc(*target_doc)
+            }
+            _ => 0,
+        });
 
     let opts = ServerOptions {
         workers,
+        engines,
         estimator: Some(estimator),
+        router: Some(router),
         ..ServerOptions::default()
     };
-    let server = Server::spawn_with(port, opts, move || {
-        // Only the PJRT model loads here (its handles are not `Send`).
+    let engine_cache = cache.clone();
+    let server = Server::spawn_sharded(port, opts, move |engine| {
+        // Only the PJRT model loads here (its handles are not `Send`);
+        // each engine replica carries its own model + corpus assets and
+        // shares the sharded knowledge-tree cache.
         let manifest = ArtifactManifest::load(&artifacts_path)?;
         let pjrt = PjrtModel::load(manifest.model(&model)?)
             .context("loading PJRT model")?;
+        let parts = build_corpus_parts(docs, corpus_seed);
         let server = RealServer::with_cache(
             pjrt,
             parts.index,
             parts.em,
             parts.doc_tokens,
-            parts.cache,
-        )?;
+            engine_cache.clone(),
+        )
+        .context(format!("assembling engine {engine}"))?;
         Ok(RealHandler {
             server,
-            cfg: parts.cfg,
+            cfg: RealConfig::default(),
             tok: ByteTokenizer::new(),
         })
     })?;
     println!(
-        "ragcache serving on {} ({docs} docs, {workers} connection workers)",
+        "ragcache serving on {} ({docs} docs, {workers} connection \
+         workers, {engines} engines, {shards} tree shards)",
         server.addr
     );
     println!("protocol: newline-delimited JSON; ops: query/stats/shutdown");

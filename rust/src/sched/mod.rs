@@ -46,9 +46,6 @@ impl PendingRequest {
 #[derive(Debug)]
 pub struct ReorderQueue {
     items: Vec<PendingRequest>,
-    /// Global pop counter; `bypassed` of an item is derived from the
-    /// counter value at its enqueue.
-    pops: usize,
     reorder: bool,
     window: usize,
 }
@@ -57,7 +54,6 @@ impl ReorderQueue {
     pub fn new(reorder: bool, window: usize) -> Self {
         ReorderQueue {
             items: Vec::new(),
-            pops: 0,
             reorder,
             window: window.max(1),
         }
@@ -98,29 +94,45 @@ impl ReorderQueue {
         }
     }
 
+    /// Whether `a` is older than `b` under the total `(arrival, id)`
+    /// order. Two connection workers can stamp the same arrival instant,
+    /// so raw arrival comparison is only a partial order — ties would
+    /// never bump each other's starvation counters and would tie-break
+    /// nondeterministically. Ids are handed out monotonically, so the
+    /// id completes the order in submission sequence.
+    fn arrives_before(a: &PendingRequest, b: &PendingRequest) -> bool {
+        (a.arrival, a.id) < (b.arrival, b.id)
+    }
+
+    /// Index of the oldest item under the total order. Item order in
+    /// `items` is not significant (`swap_remove` in `pop`), so scan.
+    fn oldest_index(&self) -> usize {
+        let mut oldest = 0usize;
+        for (i, r) in self.items.iter().enumerate().skip(1) {
+            if Self::arrives_before(r, &self.items[oldest]) {
+                oldest = i;
+            }
+        }
+        oldest
+    }
+
     /// Pop the next request to admit.
     ///
     /// FIFO when reordering is off. Otherwise: if the oldest request has
     /// been bypassed `window` times it goes first (starvation guard);
     /// else the max-OrderPriority request goes (FIFO tie-break), and all
-    /// older requests it bypassed get their counters bumped.
+    /// older requests it bypassed get their counters bumped. "Oldest"
+    /// and "older" are the total `(arrival, id)` order throughout, and
+    /// every pop — FIFO, starvation guard, or priority — returns the
+    /// request with its bypass counter reset, so a re-enqueued id
+    /// starts a fresh starvation window.
     pub fn pop(&mut self) -> Option<PendingRequest> {
         if self.items.is_empty() {
             return None;
         }
         if !self.reorder {
-            // FIFO = strictly oldest first. Item order in `items` is not
-            // significant (swap_remove below), so scan for the minimum.
-            let oldest = self
-                .items
-                .iter()
-                .enumerate()
-                .min_by(|a, b| {
-                    a.1.arrival.partial_cmp(&b.1.arrival).unwrap()
-                })
-                .map(|(i, _)| i)
-                .unwrap();
-            self.pops += 1;
+            // FIFO = strictly oldest first.
+            let oldest = self.oldest_index();
             let mut r = self.items.swap_remove(oldest);
             r.bypassed = 0;
             return Some(r);
@@ -132,7 +144,7 @@ impl ReorderQueue {
         let mut best = 0usize;
         let mut best_pri = self.items[0].order_priority();
         for (i, r) in self.items.iter().enumerate().skip(1) {
-            if r.arrival < self.items[oldest].arrival {
+            if Self::arrives_before(r, &self.items[oldest]) {
                 oldest = i;
             }
             let p = r.order_priority();
@@ -141,23 +153,53 @@ impl ReorderQueue {
                 best = i;
             }
         }
-        self.pops += 1;
         if self.items[oldest].bypassed >= self.window {
             // Starvation guard: the oldest request has been overtaken
             // `window` times — serve it now (§5.2).
-            return Some(self.items.swap_remove(oldest));
+            let mut r = self.items.swap_remove(oldest);
+            r.bypassed = 0;
+            return Some(r);
         }
         // Overtake accounting: every request older than the chosen one
         // was bypassed once. (§Perf: single pass, swap_remove — exact
         // semantics kept; the O(n) sweep only costs under deep backlog,
         // where the system is past SLO anyway.)
-        let chosen_arrival = self.items[best].arrival;
+        let chosen = (self.items[best].arrival, self.items[best].id);
         for r in self.items.iter_mut() {
-            if r.arrival < chosen_arrival {
+            if (r.arrival, r.id) < chosen {
                 r.bypassed += 1;
             }
         }
-        Some(self.items.swap_remove(best))
+        let mut r = self.items.swap_remove(best);
+        r.bypassed = 0;
+        Some(r)
+    }
+}
+
+/// Stable shard → engine assignment for multi-engine dispatch: requests
+/// that hit the same knowledge-tree shard always drain through the same
+/// engine queue, so a shard's working set stays coherent with one
+/// engine's admissions (cache affinity) and the §5.2 ordering plus
+/// starvation bound hold per engine.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardRouter {
+    engines: usize,
+}
+
+impl ShardRouter {
+    pub fn new(engines: usize) -> Self {
+        ShardRouter {
+            engines: engines.max(1),
+        }
+    }
+
+    pub fn engines(&self) -> usize {
+        self.engines
+    }
+
+    /// Engine index that owns `shard`.
+    pub fn route(&self, shard: usize) -> usize {
+        shard % self.engines
     }
 }
 
@@ -342,6 +384,73 @@ mod tests {
             at as usize <= window,
             "served after {at} bypasses (window {window})"
         );
+    }
+
+    /// Regression: the starvation-guard path used to return the oldest
+    /// request with its stale `bypassed` counter — a re-enqueued id
+    /// inherited a spent starvation window (the FIFO path did reset).
+    #[test]
+    fn starvation_pop_resets_bypass_counter() {
+        let mut q = ReorderQueue::new(true, 1);
+        q.push(req(1, 0.0, 0, 1_000_000)); // oldest, worst priority
+        q.push(req(2, 1.0, 10_000, 1));
+        assert_eq!(q.pop().unwrap().id, 2, "priority wins round one");
+        q.push(req(3, 2.0, 10_000, 1));
+        let starved = q.pop().unwrap();
+        assert_eq!(starved.id, 1, "starvation guard fires");
+        assert_eq!(starved.bypassed, 0, "counter reset on pop");
+    }
+
+    /// Regression: bypass bumping used `arrival < chosen_arrival`, so
+    /// equal-arrival requests — possible when two connection workers
+    /// stamp the same instant — never bumped each other and the oldest
+    /// pick tie-broke nondeterministically. Under the total
+    /// `(arrival, id)` order the starvation bound holds regardless.
+    #[test]
+    fn equal_arrivals_keep_the_starvation_bound() {
+        let window = 2;
+        let mut q = ReorderQueue::new(true, window);
+        // The victim: same arrival stamp as everything else, lowest id.
+        q.push(req(0, 0.0, 0, 1_000_000));
+        let mut served_at = None;
+        for round in 0..10u64 {
+            q.push(req(1 + round, 0.0, 10_000, 1));
+            let got = q.pop().unwrap();
+            if got.id == 0 {
+                served_at = Some(round as usize);
+                break;
+            }
+        }
+        let at = served_at.expect("equal-arrival victim served");
+        assert!(
+            at <= window,
+            "served after {at} bypasses (window {window})"
+        );
+    }
+
+    /// Equal arrivals pop in id (submission) order under FIFO.
+    #[test]
+    fn fifo_ties_break_by_id() {
+        let mut q = ReorderQueue::new(false, 4);
+        q.push(req(7, 0.0, 0, 10));
+        q.push(req(3, 0.0, 0, 10));
+        q.push(req(5, 0.0, 0, 10));
+        assert_eq!(q.pop().unwrap().id, 3);
+        assert_eq!(q.pop().unwrap().id, 5);
+        assert_eq!(q.pop().unwrap().id, 7);
+    }
+
+    #[test]
+    fn shard_router_is_stable_and_total() {
+        let r = ShardRouter::new(3);
+        assert_eq!(r.engines(), 3);
+        for shard in 0..32usize {
+            let e = r.route(shard);
+            assert!(e < 3);
+            assert_eq!(e, r.route(shard), "routing is deterministic");
+        }
+        // Zero engines degrades to one, never a division by zero.
+        assert_eq!(ShardRouter::new(0).route(5), 0);
     }
 
     #[test]

@@ -2,36 +2,46 @@
 //!
 //! The paper's prototype exposes retrieval + generation behind a RESTful
 //! API; here the transport is a newline-delimited JSON protocol over TCP
-//! (std-only — no HTTP stack offline). The runtime is multi-worker:
+//! (std-only — no HTTP stack offline). The runtime is multi-worker and
+//! multi-engine:
 //!
 //! ```text
 //!   acceptor thread ──► connection channel ──► N connection workers
-//!                                                   │ parse + estimate
-//!                                                   ▼
-//!                                  SharedReorderQueue (§5.2 ordering)
-//!                                                   │
-//!                                                   ▼
-//!                         engine-driver thread (owns the QueryHandler;
-//!                         PJRT handles are not `Send`, so the handler is
-//!                         constructed *inside* this thread)
+//!                                                │ parse + estimate
+//!                                                │ shard-affinity route
+//!                                 ┌──────────────┼──────────────┐
+//!                                 ▼              ▼              ▼
+//!                             queue 0        queue 1  …     queue M-1
+//!                        (SharedReorderQueue each: §5.2 ordering and
+//!                         starvation bound hold per engine)
+//!                                 │              │              │
+//!                                 ▼              ▼              ▼
+//!                             engine 0       engine 1  …    engine M-1
+//!                        (each engine-driver thread owns its own
+//!                         QueryHandler; PJRT handles are not `Send`,
+//!                         so each handler is constructed *inside* its
+//!                         engine thread)
 //! ```
 //!
 //! Connection workers block on their own sockets only, so up to
 //! `workers` clients progress fully independently (a connection holds
 //! its worker for its lifetime; an idle-timeout reclaims workers from
-//! silent keep-alive clients). The single engine thread drains the
-//! shared queue in cache-aware priority order. Shutdown is graceful: the
-//! queue is sealed against new work, queued requests are drained and
-//! answered, then every thread exits. An optional
-//! [`ServerOptions::estimator`] supplies
+//! silent keep-alive clients). Each engine thread drains its own queue
+//! in cache-aware priority order; requests are routed to engines by
+//! knowledge-tree shard ([`ServerOptions::router`], folded through
+//! [`crate::sched::ShardRouter`]), so a shard's working set stays with
+//! one engine. `stats` requests fan out to every engine and the replies
+//! are merged. Shutdown is graceful: every queue is sealed against new
+//! work, queued requests are drained and answered, then every thread
+//! exits. An optional [`ServerOptions::estimator`] supplies
 //! cached/compute token estimates (e.g. from a shared
-//! [`crate::controller::CacheService`]) so the queue can reorder by the
-//! paper's `CachedLength / ComputationLength` priority.
+//! [`crate::controller::ShardedCacheService`]) so each queue can
+//! reorder by the paper's `CachedLength / ComputationLength` priority.
 
 pub mod proto;
 
 use anyhow::Result;
-use crate::sched::{PendingRequest, SharedReorderQueue};
+use crate::sched::{PendingRequest, ShardRouter, SharedReorderQueue};
 use proto::{Request, Response};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -49,7 +59,12 @@ pub trait QueryHandler {
         max_new: usize,
     ) -> Result<proto::QueryResult>;
 
-    /// Aggregate stats line.
+    /// Aggregate stats line. Contract for multi-engine deployments
+    /// ([`Server::spawn_sharded`]): `requests`/`mean_ttft_ms`/`hit_rate`
+    /// must cover only THIS handler's work (they are summed /
+    /// request-weighted across engines), while the `tree_*` counters
+    /// must snapshot the SHARED sharded cache (they merge by maximum —
+    /// per-engine private caches would be under-reported).
     fn stats(&self) -> proto::StatsResult;
 }
 
@@ -58,19 +73,31 @@ pub trait QueryHandler {
 pub type PriorityEstimator =
     Arc<dyn Fn(&Request) -> (usize, usize) + Send + Sync>;
 
+/// Maps a request to its knowledge-tree shard (cache affinity); the
+/// runtime folds the shard onto an engine with [`ShardRouter`]. Must be
+/// callable from any connection worker.
+pub type ShardFn = Arc<dyn Fn(&Request) -> usize + Send + Sync>;
+
 /// Concurrency configuration of a server.
 #[derive(Clone)]
 pub struct ServerOptions {
     /// Connection-handler threads (how many clients progress at once).
     pub workers: usize,
+    /// Engine-driver threads (one per GPU/replica), each draining its
+    /// own reorder queue. Requests route to engines by shard affinity.
+    pub engines: usize,
     /// Cache-aware reordering of queued requests (§5.2). Takes effect
-    /// only when an `estimator` is supplied; otherwise the queue is
+    /// only when an `estimator` is supplied; otherwise each queue is
     /// strict FIFO (equal priorities would reorder arbitrarily).
     pub reorder: bool,
-    /// Starvation window for the reorder queue.
+    /// Starvation window for each reorder queue.
     pub window: usize,
     /// Optional cached/compute estimator feeding the reorder priority.
     pub estimator: Option<PriorityEstimator>,
+    /// Optional request → shard mapping for engine affinity. Without
+    /// one, queries route by `target_doc` and everything else goes to
+    /// engine 0.
+    pub router: Option<ShardFn>,
     /// Close a connection that completes no request for this long. Each
     /// open connection occupies a worker thread, so without a bound,
     /// `workers` idle keep-alive clients would starve everyone else.
@@ -81,9 +108,11 @@ impl Default for ServerOptions {
     fn default() -> Self {
         ServerOptions {
             workers: 4,
+            engines: 1,
             reorder: true,
             window: 16,
             estimator: None,
+            router: None,
             idle_timeout: Duration::from_secs(60),
         }
     }
@@ -100,7 +129,7 @@ struct Job {
 pub struct Server {
     pub addr: std::net::SocketAddr,
     shutdown: Arc<AtomicBool>,
-    jobs: Arc<SharedReorderQueue<Job>>,
+    queues: Arc<Vec<Arc<SharedReorderQueue<Job>>>>,
     handles: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -116,16 +145,46 @@ impl Server {
         Self::spawn_with(port, ServerOptions::default(), factory)
     }
 
-    /// Bind and start the full runtime: acceptor + `opts.workers`
-    /// connection handlers + one engine-driver thread.
+    /// Single-engine runtime over a one-shot handler factory. For
+    /// `opts.engines > 1` use [`Server::spawn_sharded`], whose factory
+    /// can build one handler per engine.
     pub fn spawn_with<H, F>(
+        port: u16,
+        mut opts: ServerOptions,
+        factory: F,
+    ) -> Result<Server>
+    where
+        H: QueryHandler,
+        F: FnOnce() -> Result<H> + Send + 'static,
+    {
+        opts.engines = 1;
+        let cell = Mutex::new(Some(factory));
+        Self::spawn_sharded(port, opts, move |_engine| {
+            let taken = match cell.lock() {
+                Ok(mut g) => g.take(),
+                Err(p) => p.into_inner().take(),
+            };
+            match taken {
+                Some(build) => build(),
+                None => Err(anyhow::anyhow!(
+                    "single-engine factory already consumed"
+                )),
+            }
+        })
+    }
+
+    /// Bind and start the full runtime: acceptor + `opts.workers`
+    /// connection handlers + `opts.engines` engine-driver threads, each
+    /// draining its own shard-affine reorder queue. `factory(i)` runs
+    /// inside engine thread `i`, so handlers need not be `Send`.
+    pub fn spawn_sharded<H, F>(
         port: u16,
         opts: ServerOptions,
         factory: F,
     ) -> Result<Server>
     where
         H: QueryHandler,
-        F: FnOnce() -> Result<H> + Send + 'static,
+        F: Fn(usize) -> Result<H> + Send + Sync + 'static,
     {
         let listener = TcpListener::bind(("127.0.0.1", port))?;
         let addr = listener.local_addr()?;
@@ -136,8 +195,14 @@ impl Server {
         // "reordering" equal priorities is just unfair scrambling — fall
         // back to strict FIFO until a cache-aware signal exists.
         let reorder = opts.reorder && opts.estimator.is_some();
-        let jobs: Arc<SharedReorderQueue<Job>> =
-            Arc::new(SharedReorderQueue::new(reorder, opts.window));
+        let engines = opts.engines.max(1);
+        let queues: Arc<Vec<Arc<SharedReorderQueue<Job>>>> = Arc::new(
+            (0..engines)
+                .map(|_| {
+                    Arc::new(SharedReorderQueue::new(reorder, opts.window))
+                })
+                .collect(),
+        );
         let started = Instant::now();
         let next_job = Arc::new(AtomicU64::new(0));
         let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
@@ -155,9 +220,10 @@ impl Server {
         // Connection workers.
         for _ in 0..opts.workers.max(1) {
             let conn_rx = Arc::clone(&conn_rx);
-            let jobs = Arc::clone(&jobs);
+            let queues = Arc::clone(&queues);
             let shutdown = Arc::clone(&shutdown);
             let estimator = opts.estimator.clone();
+            let router = opts.router.clone();
             let next_job = Arc::clone(&next_job);
             let idle_timeout = opts.idle_timeout;
             handles.push(std::thread::spawn(move || loop {
@@ -175,9 +241,10 @@ impl Server {
                     Ok(s) => {
                         if let Err(e) = serve_conn(
                             s,
-                            &jobs,
+                            &queues,
                             &shutdown,
                             estimator.as_ref(),
+                            router.as_ref(),
                             &next_job,
                             started,
                             idle_timeout,
@@ -191,19 +258,21 @@ impl Server {
             }));
         }
 
-        // Engine driver: owns the handler, drains the shared queue.
-        {
-            let jobs = Arc::clone(&jobs);
+        // Engine drivers: each owns its handler and drains its queue.
+        let factory = Arc::new(factory);
+        for engine in 0..engines {
+            let queue = Arc::clone(&queues[engine]);
             let shutdown = Arc::clone(&shutdown);
+            let factory = Arc::clone(&factory);
             handles.push(std::thread::spawn(move || {
-                engine_loop(factory, &jobs, &shutdown);
+                engine_loop(engine, factory.as_ref(), &queue, &shutdown);
             }));
         }
 
         Ok(Server {
             addr,
             shutdown,
-            jobs,
+            queues,
             handles,
         })
     }
@@ -227,8 +296,10 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        // Wake anything blocked on the queue so joins cannot hang.
-        self.jobs.close();
+        // Wake anything blocked on any queue so joins cannot hang.
+        for q in self.queues.iter() {
+            q.close();
+        }
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -263,18 +334,22 @@ fn accept_loop(
 }
 
 fn engine_loop<H, F>(
-    factory: F,
+    engine: usize,
+    factory: &F,
     jobs: &SharedReorderQueue<Job>,
     shutdown: &AtomicBool,
 ) where
     H: QueryHandler,
-    F: FnOnce() -> Result<H>,
+    F: Fn(usize) -> Result<H>,
 {
-    // Close the queue however this thread exits — normal shutdown,
-    // factory failure, or a panicking handler. Dropping pending jobs
-    // disconnects their response channels; without this, connection
-    // workers blocked in `submit` would wait forever and
-    // `Server::stop`/`join` would deadlock on joining them.
+    // Close THIS engine's queue however its thread exits — normal
+    // shutdown, factory failure, or a panicking handler. Dropping its
+    // pending jobs disconnects their response channels; without this,
+    // connection workers blocked in `submit` would wait forever and
+    // `Server::stop`/`join` would deadlock on joining them. Setting the
+    // shutdown op tells the sibling engines to seal + drain their own
+    // queues gracefully (a guard must never close a sibling's queue —
+    // that would drop jobs the sibling is still draining).
     struct CloseGuard<'a> {
         jobs: &'a SharedReorderQueue<Job>,
         shutdown: &'a AtomicBool,
@@ -287,10 +362,10 @@ fn engine_loop<H, F>(
     }
     let _guard = CloseGuard { jobs, shutdown };
 
-    let mut handler = match factory() {
+    let mut handler = match factory(engine) {
         Ok(h) => h,
         Err(e) => {
-            log::error!("handler construction failed: {e:#}");
+            log::error!("engine {engine}: handler construction failed: {e:#}");
             return;
         }
     };
@@ -332,11 +407,13 @@ fn engine_loop<H, F>(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn serve_conn(
     stream: TcpStream,
-    jobs: &SharedReorderQueue<Job>,
+    queues: &[Arc<SharedReorderQueue<Job>>],
     shutdown: &AtomicBool,
     estimator: Option<&PriorityEstimator>,
+    router: Option<&ShardFn>,
     next_job: &AtomicU64,
     started: Instant,
     idle_timeout: Duration,
@@ -403,7 +480,9 @@ fn serve_conn(
                 )?;
                 return Ok(());
             }
-            Ok(req) => submit(req, jobs, estimator, next_job, started),
+            Ok(req) => {
+                submit(req, queues, estimator, router, next_job, started)
+            }
         };
         writeln!(writer, "{}", proto::encode_response(&response))?;
         // Re-stamp after answering: queue wait + engine service time must
@@ -413,21 +492,132 @@ fn serve_conn(
     }
 }
 
-/// Enqueue one request on the shared queue and wait for the engine's
-/// answer. Stats requests get infinite priority (zero compute) so
-/// observability is never starved by a deep prefill backlog.
-fn submit(
-    req: Request,
-    jobs: &SharedReorderQueue<Job>,
-    estimator: Option<&PriorityEstimator>,
+/// The engine queue that owns a request: the app-supplied shard mapping
+/// (or `target_doc` when absent), folded onto the engine count by the
+/// stable [`ShardRouter`] assignment.
+fn route_engine(
+    req: &Request,
+    router: Option<&ShardFn>,
+    engines: usize,
+) -> usize {
+    let shard = match router {
+        Some(f) => f(req),
+        None => match req {
+            Request::Query { target_doc, .. } => *target_doc as usize,
+            _ => 0,
+        },
+    };
+    ShardRouter::new(engines).route(shard)
+}
+
+/// Merge the per-engine answers to one `stats` request. Request counts
+/// and request-weighted means sum across engines (each engine owns its
+/// recorder); the tree counters inside every part already aggregate the
+/// one shared sharded cache, so they merge by maximum — summing would
+/// count the shared tree once per engine.
+fn merge_stats(parts: &[proto::StatsResult]) -> proto::StatsResult {
+    let requests: usize = parts.iter().map(|p| p.requests).sum();
+    let weighted = |f: fn(&proto::StatsResult) -> f64| -> f64 {
+        if requests == 0 {
+            0.0
+        } else {
+            parts
+                .iter()
+                .map(|p| f(p) * p.requests as f64)
+                .sum::<f64>()
+                / requests as f64
+        }
+    };
+    proto::StatsResult {
+        requests,
+        mean_ttft_ms: weighted(|p| p.mean_ttft_ms),
+        hit_rate: weighted(|p| p.hit_rate),
+        engines: parts.len(),
+        tree_inserts: parts.iter().map(|p| p.tree_inserts).max().unwrap_or(0),
+        tree_gpu_evictions: parts
+            .iter()
+            .map(|p| p.tree_gpu_evictions)
+            .max()
+            .unwrap_or(0),
+        tree_host_evictions: parts
+            .iter()
+            .map(|p| p.tree_host_evictions)
+            .max()
+            .unwrap_or(0),
+    }
+}
+
+/// Fan one `stats` request out to every engine and merge the answers,
+/// so observability covers all replicas in one round trip. Stats jobs
+/// carry infinite priority (zero compute) so a deep prefill backlog
+/// never starves them.
+fn submit_stats(
+    queues: &[Arc<SharedReorderQueue<Job>>],
     next_job: &AtomicU64,
     started: Instant,
 ) -> Response {
-    let (cached, compute) = match (&req, estimator) {
-        (Request::Stats, _) => (0, 0),
-        (r, Some(f)) => f(r),
-        (_, None) => (0, 1),
+    let (tx, rx) = mpsc::channel();
+    let mut accepted = 0usize;
+    for q in queues {
+        let pending = PendingRequest {
+            id: next_job.fetch_add(1, Ordering::SeqCst),
+            arrival: started.elapsed().as_secs_f64(),
+            cached_tokens: 0,
+            compute_tokens: 0,
+            bypassed: 0,
+        };
+        let job = Job {
+            req: Request::Stats,
+            resp: tx.clone(),
+        };
+        if q.push(pending, job) {
+            accepted += 1;
+        }
+    }
+    // Only the queued jobs may keep the channel open: if an engine dies,
+    // its job's sender drops and `recv` below observes the disconnect
+    // instead of blocking on this (never-used) original sender forever.
+    drop(tx);
+    if accepted == 0 {
+        return Response::Error {
+            message: "server shutting down".to_string(),
+        };
+    }
+    let mut parts = Vec::with_capacity(accepted);
+    for _ in 0..accepted {
+        match rx.recv() {
+            Ok(Response::Stats(s)) => parts.push(s),
+            Ok(other) => return other,
+            // An engine died mid-request; merge what did answer.
+            Err(_) => break,
+        }
+    }
+    if parts.is_empty() {
+        return Response::Error {
+            message: "engine unavailable".to_string(),
+        };
+    }
+    Response::Stats(merge_stats(&parts))
+}
+
+/// Enqueue one request on its affinity engine's queue and wait for the
+/// answer; `stats` fans out to every engine instead.
+fn submit(
+    req: Request,
+    queues: &[Arc<SharedReorderQueue<Job>>],
+    estimator: Option<&PriorityEstimator>,
+    router: Option<&ShardFn>,
+    next_job: &AtomicU64,
+    started: Instant,
+) -> Response {
+    if matches!(req, Request::Stats) {
+        return submit_stats(queues, next_job, started);
+    }
+    let (cached, compute) = match estimator {
+        Some(f) => f(&req),
+        None => (0, 1),
     };
+    let engine = route_engine(&req, router, queues.len());
     let (tx, rx) = mpsc::channel();
     let pending = PendingRequest {
         id: next_job.fetch_add(1, Ordering::SeqCst),
@@ -436,7 +626,7 @@ fn submit(
         compute_tokens: compute,
         bypassed: 0,
     };
-    if !jobs.push(pending, Job { req, resp: tx }) {
+    if !queues[engine].push(pending, Job { req, resp: tx }) {
         return Response::Error {
             message: "server shutting down".to_string(),
         };

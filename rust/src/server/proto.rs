@@ -28,12 +28,22 @@ pub struct QueryResult {
     pub text: String,
 }
 
-/// Aggregate stats.
-#[derive(Debug, Clone, PartialEq)]
+/// Aggregate stats. Tree counters aggregate every shard of the (shared)
+/// sharded cache; `engines` reports how many engine replicas answered
+/// the merged `stats` request.
+#[derive(Debug, Clone, PartialEq, Default)]
 pub struct StatsResult {
     pub requests: usize,
     pub mean_ttft_ms: f64,
     pub hit_rate: f64,
+    /// Engine replicas merged into this answer (1 for a single engine).
+    pub engines: usize,
+    /// Knowledge-tree insertions, aggregated across shards.
+    pub tree_inserts: u64,
+    /// GPU-tier evictions, aggregated across shards.
+    pub tree_gpu_evictions: u64,
+    /// Host-tier evictions, aggregated across shards.
+    pub tree_host_evictions: u64,
 }
 
 /// Server → client.
@@ -115,6 +125,16 @@ pub fn encode_response(resp: &Response) -> String {
             ("requests", Json::num(s.requests as f64)),
             ("mean_ttft_ms", Json::num(s.mean_ttft_ms)),
             ("hit_rate", Json::num(s.hit_rate)),
+            ("engines", Json::num(s.engines as f64)),
+            ("tree_inserts", Json::num(s.tree_inserts as f64)),
+            (
+                "tree_gpu_evictions",
+                Json::num(s.tree_gpu_evictions as f64),
+            ),
+            (
+                "tree_host_evictions",
+                Json::num(s.tree_host_evictions as f64),
+            ),
         ]),
         Response::Ok => Json::obj(vec![("type", Json::str("ok"))]),
         Response::Error { message } => Json::obj(vec![
@@ -179,6 +199,22 @@ pub fn parse_response(line: &str) -> Result<Response> {
                 .get("hit_rate")
                 .and_then(Json::as_f64)
                 .unwrap_or(0.0),
+            engines: v
+                .get("engines")
+                .and_then(Json::as_usize)
+                .unwrap_or(1),
+            tree_inserts: v
+                .get("tree_inserts")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            tree_gpu_evictions: v
+                .get("tree_gpu_evictions")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            tree_host_evictions: v
+                .get("tree_host_evictions")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
         })),
         "ok" => Ok(Response::Ok),
         "error" => Ok(Response::Error {
@@ -230,6 +266,10 @@ mod tests {
                 requests: 10,
                 mean_ttft_ms: 5.5,
                 hit_rate: 0.75,
+                engines: 2,
+                tree_inserts: 40,
+                tree_gpu_evictions: 7,
+                tree_host_evictions: 3,
             }),
             Response::Ok,
             Response::Error {

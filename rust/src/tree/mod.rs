@@ -71,6 +71,26 @@ impl Transfers {
     }
 }
 
+/// Outcome of [`KnowledgeTree::promote`]: how much of the path made it
+/// into GPU, and the byte movement performed getting there — including
+/// the bytes of a prefix promoted before a mid-path failure, so callers
+/// always charge PCIe time for what actually moved.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Promotion {
+    /// Bytes moved: cache-hit loading (h2g) plus eviction swap-outs
+    /// (g2h), whether or not the whole path was promoted.
+    pub transfers: Transfers,
+    /// Length of the `path` prefix that is now GPU-resident.
+    pub promoted: usize,
+}
+
+impl Promotion {
+    /// Whether every node of the requested path was promoted.
+    pub fn complete(&self, path_len: usize) -> bool {
+        self.promoted == path_len
+    }
+}
+
 /// Aggregate counters for observability and the ablation benches.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct TreeCounters {
@@ -80,6 +100,19 @@ pub struct TreeCounters {
     pub zero_copy_evictions: u64,
     pub inserts: u64,
     pub rejected_inserts: u64,
+}
+
+impl TreeCounters {
+    /// Field-wise sum — aggregates per-shard counters for the `Stats`
+    /// endpoint and metrics.
+    pub fn merge(&mut self, other: TreeCounters) {
+        self.gpu_evictions += other.gpu_evictions;
+        self.host_evictions += other.host_evictions;
+        self.swap_out_bytes += other.swap_out_bytes;
+        self.zero_copy_evictions += other.zero_copy_evictions;
+        self.inserts += other.inserts;
+        self.rejected_inserts += other.rejected_inserts;
+    }
 }
 
 /// The multilevel knowledge tree.
@@ -263,39 +296,47 @@ impl KnowledgeTree {
     }
 
     /// Bring every host-resident node of `path` into GPU (cache-hit
-    /// loading, §3.2). Nodes must be promoted root-to-leaf to preserve the
-    /// hierarchy; `path` is already in that order. Returns transfers, or
-    /// None if GPU space could not be made (caller treats as miss).
-    pub fn promote(&mut self, path: &[NodeId]) -> Option<Transfers> {
+    /// loading, §3.2). Nodes are promoted root-to-leaf to preserve the
+    /// hierarchy; `path` is already in that order. Promotion stops at the
+    /// first node GPU space cannot be made for; the returned
+    /// [`Promotion`] carries the usable prefix length AND the transfers
+    /// of everything that moved before the stop — a mid-path failure
+    /// must never lose the h2g/g2h bytes already spent.
+    pub fn promote(&mut self, path: &[NodeId]) -> Promotion {
         let mut transfers = Transfers::default();
         // Pin the whole path first: making room for one node must not
         // evict another node of the same path (or the path itself).
         self.pin(path);
-        let result = (|| {
-            for &id in path {
-                if self.nodes[id.0].tier == Some(Tier::Gpu) {
-                    continue;
-                }
-                debug_assert_eq!(self.nodes[id.0].tier, Some(Tier::Host));
-                let bytes = self.page.bytes(self.nodes[id.0].tokens);
-                let t = self.ensure_gpu_space(bytes)?;
-                transfers.merge(t);
-                let ok = self.gpu.alloc(bytes);
-                debug_assert!(ok);
-                // Swap-out-only-once: host copy is retained.
-                self.set_tier(id, Some(Tier::Gpu));
-                transfers.h2g_bytes +=
-                    self.page.payload_bytes(self.nodes[id.0].tokens);
+        let mut promoted = path.len();
+        for (i, &id) in path.iter().enumerate() {
+            if self.nodes[id.0].tier == Some(Tier::Gpu) {
+                continue;
             }
-            Some(())
-        })();
+            debug_assert_eq!(self.nodes[id.0].tier, Some(Tier::Host));
+            let bytes = self.page.bytes(self.nodes[id.0].tokens);
+            if !self.ensure_gpu_space(bytes, &mut transfers) {
+                promoted = i;
+                break;
+            }
+            let ok = self.gpu.alloc(bytes);
+            debug_assert!(ok);
+            // Swap-out-only-once: host copy is retained.
+            self.set_tier(id, Some(Tier::Gpu));
+            transfers.h2g_bytes +=
+                self.page.payload_bytes(self.nodes[id.0].tokens);
+        }
         self.unpin(path);
-        result.map(|()| transfers)
+        Promotion {
+            transfers,
+            promoted,
+        }
     }
 
     /// Insert (or find) the child of `parent` for `doc`, cached in GPU
-    /// with the given token count. Returns the node and transfers, or
-    /// None if the document cannot fit (left uncached — the paper's
+    /// with the given token count. Returns the transfers performed —
+    /// charged even when insertion fails partway, since ancestor
+    /// promotion and eviction work is real byte movement — and the node,
+    /// or None if the document cannot fit (left uncached — the paper's
     /// transient oversized request case).
     pub fn insert_child(
         &mut self,
@@ -303,20 +344,25 @@ impl KnowledgeTree {
         doc: DocId,
         tokens: usize,
         payload: Option<KvPayload>,
-    ) -> Option<(NodeId, Transfers)> {
+    ) -> (Transfers, Option<NodeId>) {
         // A GPU-resident child requires a GPU-resident ancestor chain
         // (hierarchical partition): promote the parent path first.
         let mut up = Vec::new();
         let mut cur = Some(parent);
         while let Some(id) = cur {
             if self.nodes[id.0].tier.is_none() {
-                return None; // ancestor fully evicted: path invalid
+                // Ancestor fully evicted: path invalid.
+                return (Transfers::default(), None);
             }
             up.push(id);
             cur = self.nodes[id.0].parent;
         }
         up.reverse();
-        let mut transfers = self.promote(&up)?;
+        let promo = self.promote(&up);
+        let mut transfers = promo.transfers;
+        if !promo.complete(up.len()) {
+            return (transfers, None);
+        }
         // Pin the ancestor chain so making room for the child cannot
         // evict its own parents.
         self.pin(&up);
@@ -328,7 +374,7 @@ impl KnowledgeTree {
             &mut transfers,
         );
         self.unpin(&up);
-        result.map(|id| (id, transfers))
+        (transfers, result)
     }
 
     fn insert_child_pinned(
@@ -345,11 +391,20 @@ impl KnowledgeTree {
             }
             // Re-cache a skeleton node (token count may have changed,
             // e.g. a different truncation policy — the new value wins).
-            self.nodes[existing.0].tokens = tokens;
+            // The node is mutated only once GPU space is secured: a
+            // failed insert must leave the skeleton exactly as it was,
+            // not carrying a token count from an insert that never
+            // happened.
             let bytes = self.page.bytes(tokens);
-            transfers.merge(self.ensure_gpu_space(bytes)?);
+            if !self.gpu.fits_at_all(bytes)
+                || !self.ensure_gpu_space(bytes, transfers)
+            {
+                self.counters.rejected_inserts += 1;
+                return None;
+            }
             let ok = self.gpu.alloc(bytes);
             debug_assert!(ok);
+            self.nodes[existing.0].tokens = tokens;
             self.set_tier(existing, Some(Tier::Gpu));
             self.nodes[existing.0].payload = payload;
             self.counters.inserts += 1;
@@ -361,11 +416,10 @@ impl KnowledgeTree {
             self.counters.rejected_inserts += 1;
             return None;
         }
-        let Some(t) = self.ensure_gpu_space(bytes) else {
+        if !self.ensure_gpu_space(bytes, transfers) {
             self.counters.rejected_inserts += 1;
             return None;
-        };
-        transfers.merge(t);
+        }
         let ok = self.gpu.alloc(bytes);
         debug_assert!(ok);
         let id = NodeId(self.nodes.len());
@@ -387,17 +441,22 @@ impl KnowledgeTree {
     }
 
     /// Make at least `bytes` available in the GPU tier by evicting
-    /// leaf-frontier nodes (Algorithm 1 `EVICT_IN_GPU`). Returns the
-    /// transfers performed, or None if impossible (everything pinned).
-    pub fn ensure_gpu_space(&mut self, bytes: u64) -> Option<Transfers> {
-        let mut transfers = Transfers::default();
+    /// leaf-frontier nodes (Algorithm 1 `EVICT_IN_GPU`), merging every
+    /// transfer performed into `transfers` — evictions that precede an
+    /// eventual failure still moved real bytes and must stay charged.
+    /// Returns false if the space cannot be made (everything pinned).
+    pub fn ensure_gpu_space(
+        &mut self,
+        bytes: u64,
+        transfers: &mut Transfers,
+    ) -> bool {
         while self.gpu.free() < bytes {
             let Some(victim) = self.pick_gpu_victim() else {
-                return None;
+                return false;
             };
-            transfers.merge(self.evict_gpu_node(victim)?);
+            transfers.merge(self.evict_gpu_node(victim));
         }
-        Some(transfers)
+        true
     }
 
     /// GPU leaf frontier: GPU-resident, unpinned, no GPU-resident child
@@ -427,7 +486,7 @@ impl KnowledgeTree {
     /// Evict one GPU node: swap to host on first eviction, zero-copy free
     /// afterwards (§5.1 swap-out-only-once). Advances the GPU clock
     /// (Eq. 2).
-    fn evict_gpu_node(&mut self, id: NodeId) -> Option<Transfers> {
+    fn evict_gpu_node(&mut self, id: NodeId) -> Transfers {
         let mut transfers = Transfers::default();
         let bytes = self.page.bytes(self.nodes[id.0].tokens);
         let payload_bytes = self.page.payload_bytes(self.nodes[id.0].tokens);
@@ -439,13 +498,13 @@ impl KnowledgeTree {
             if !self.host.fits_at_all(bytes) {
                 // Too big for host entirely: drop from cache.
                 self.drop_from_gpu(id);
-                return Some(transfers);
+                return transfers;
             }
             while self.host.free() < bytes {
                 let Some(victim) = self.pick_host_victim(Some(id)) else {
                     // Host cannot make room: drop instead of swapping.
                     self.drop_from_gpu(id);
-                    return Some(transfers);
+                    return transfers;
                 };
                 self.evict_host_node(victim);
             }
@@ -464,7 +523,7 @@ impl KnowledgeTree {
         self.set_tier(id, Some(Tier::Host));
         self.gpu.release(bytes);
         self.counters.gpu_evictions += 1;
-        Some(transfers)
+        transfers
     }
 
     /// Evict a GPU node without keeping any copy (host has no room).

@@ -42,9 +42,8 @@ fn insert_path(t: &mut KnowledgeTree, docs: &[DocId], tokens: usize, now: f64) -
     let mut parent = t.root();
     let mut ids = Vec::new();
     for &d in docs {
-        let (id, _) = t
-            .insert_child(parent, d, tokens, None)
-            .expect("fits");
+        let (_, id) = t.insert_child(parent, d, tokens, None);
+        let id = id.expect("fits");
         t.on_access(id, &access(tokens, now));
         ids.push(id);
         parent = id;
@@ -120,8 +119,9 @@ fn swap_out_only_once_is_zero_copy_after_first() {
     assert_eq!(t.counters().swap_out_bytes, 16 * 64);
     assert_eq!(t.node_tier(ids[0]), Some(Tier::Host));
     // Promote 1 back to GPU (evicts 2), then evict 1 again (zero copy).
-    let tr = t.promote(&ids).expect("promote");
-    assert_eq!(tr.h2g_bytes, 16 * 64);
+    let promo = t.promote(&ids);
+    assert!(promo.complete(ids.len()), "promote succeeds");
+    assert_eq!(promo.transfers.h2g_bytes, 16 * 64);
     assert_eq!(t.node_tier(ids[0]), Some(Tier::Gpu));
     insert_path(&mut t, &[3], 16, 2.0);
     // 1 went back to host without a second copy.
@@ -149,9 +149,9 @@ fn everything_pinned_fails_cleanly() {
     let mut t = tree(16, 64);
     let ids = insert_path(&mut t, &[1], 16, 0.0);
     t.pin(&ids);
-    assert!(t.insert_child(t.root(), 2, 16, None).is_none());
+    assert!(t.insert_child(t.root(), 2, 16, None).1.is_none());
     t.unpin(&ids);
-    assert!(t.insert_child(t.root(), 2, 16, None).is_some());
+    assert!(t.insert_child(t.root(), 2, 16, None).1.is_some());
     t.check_invariants();
 }
 
@@ -172,7 +172,7 @@ fn host_overflow_drops_lowest_priority() {
 #[test]
 fn oversized_doc_rejected_without_corruption() {
     let mut t = tree(32, 32);
-    assert!(t.insert_child(t.root(), 1, 1000, None).is_none());
+    assert!(t.insert_child(t.root(), 1, 1000, None).1.is_none());
     assert_eq!(t.counters().rejected_inserts, 1);
     t.check_invariants();
 }
@@ -220,6 +220,87 @@ fn skeleton_recache_after_full_eviction() {
     t.check_invariants();
 }
 
+/// Regression (transfer accounting): a promote that fails mid-path must
+/// still report the h2g/g2h bytes of the prefix it DID move — the old
+/// API returned `None` and dropped them, undercounting simulated PCIe
+/// time and swap-out accounting.
+#[test]
+fn partial_promote_reports_prefix_transfers() {
+    let mut t = tree(48, 1000); // GPU: 3 × 16-token slots
+    let chain = insert_path(&mut t, &[1, 2], 16, 0.0); // a → b in GPU
+    let f1 = insert_path(&mut t, &[10], 16, 0.1)[0]; // GPU full
+    // Heat the fillers so the chain is always the eviction victim.
+    for i in 0..10 {
+        t.on_access(f1, &access(16, 1.0 + i as f64));
+    }
+    insert_path(&mut t, &[11], 16, 2.0); // evicts b -> host
+    let f2 = t.lookup(&[11]).path[0];
+    for i in 0..10 {
+        t.on_access(f2, &access(16, 3.0 + i as f64));
+    }
+    insert_path(&mut t, &[12], 16, 20.0); // evicts a -> host
+    let f3 = t.lookup(&[12]).path[0];
+    assert_eq!(t.node_tier(chain[0]), Some(Tier::Host));
+    assert_eq!(t.node_tier(chain[1]), Some(Tier::Host));
+
+    // Pin two of the three GPU slots: promoting `a` can make room (by
+    // evicting f3), promoting `b` cannot.
+    t.pin(&[f1, f2]);
+    let promo = t.promote(&chain);
+    assert_eq!(promo.promoted, 1, "only the path prefix fit");
+    assert_eq!(
+        promo.transfers.h2g_bytes,
+        16 * 64,
+        "the promoted prefix's cache-hit load is charged"
+    );
+    assert_eq!(
+        promo.transfers.g2h_bytes,
+        16 * 64,
+        "the eviction that made room for it is charged"
+    );
+    assert_eq!(t.node_tier(chain[0]), Some(Tier::Gpu));
+    assert_eq!(t.node_tier(chain[1]), Some(Tier::Host));
+    assert_eq!(t.node_tier(f3), Some(Tier::Host));
+    t.unpin(&[f1, f2]);
+    t.check_invariants();
+}
+
+/// Regression (skeleton re-cache): a failed re-insert of a fully evicted
+/// node must leave the skeleton untouched. The old code mutated
+/// `tokens` before securing GPU space, so an insert that never happened
+/// left its token count behind.
+#[test]
+fn failed_skeleton_recache_leaves_tokens_untouched() {
+    let mut t = tree(16, 16);
+    insert_path(&mut t, &[1], 16, 0.0);
+    let skel = t.lookup(&[1]).path[0];
+    insert_path(&mut t, &[2], 16, 1.0); // 1 -> host
+    insert_path(&mut t, &[3], 16, 2.0); // 2 -> host, 1 dropped to skeleton
+    assert_eq!(t.node_tier(skel), None, "doc 1 is a skeleton");
+    assert_eq!(t.node_tokens(skel), 16);
+
+    // Pin the sole GPU resident so no space can be made, then try to
+    // re-cache the skeleton with a DIFFERENT token count.
+    let gpu_node = t.lookup(&[3]).path[0];
+    t.pin(&[gpu_node]);
+    let rejected_before = t.counters().rejected_inserts;
+    assert!(t.insert_child(t.root(), 1, 8, None).1.is_none());
+    assert_eq!(
+        t.node_tokens(skel),
+        16,
+        "failed insert must not leave its token count behind"
+    );
+    assert_eq!(t.counters().rejected_inserts, rejected_before + 1);
+    t.check_invariants();
+
+    // Once space exists the re-cache succeeds and the new count wins.
+    t.unpin(&[gpu_node]);
+    let (_, id) = t.insert_child(t.root(), 1, 8, None);
+    assert_eq!(id, Some(skel), "skeleton reused");
+    assert_eq!(t.node_tokens(skel), 8);
+    t.check_invariants();
+}
+
 #[test]
 fn property_invariants_under_random_workload() {
     check_with(
@@ -239,8 +320,7 @@ fn property_invariants_under_random_workload() {
                 let tokens = (1 + rng.index(3)) * 8;
                 let m = t.lookup(&docs);
                 t.pin(&m.path);
-                let promoted = t.promote(&m.path);
-                if promoted.is_none() {
+                if !t.promote(&m.path).complete(m.path.len()) {
                     t.unpin(&m.path);
                     continue;
                 }
@@ -250,12 +330,12 @@ fn property_invariants_under_random_workload() {
                 let mut inserted = m.path.clone();
                 for &d in &docs[m.matched_docs..] {
                     match t.insert_child(parent, d, tokens, None) {
-                        Some((id, _)) => {
+                        (_, Some(id)) => {
                             t.pin(&[id]);
                             inserted.push(id);
                             parent = id;
                         }
-                        None => break,
+                        (_, None) => break,
                     }
                 }
                 for &id in &inserted {

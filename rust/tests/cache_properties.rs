@@ -81,7 +81,7 @@ fn invariants_under_random_traffic_all_policies() {
                         "tier split adds up"
                     );
                     tree.pin(&m.path);
-                    if tree.promote(&m.path).is_none() {
+                    if !tree.promote(&m.path).complete(m.path.len()) {
                         tree.unpin(&m.path);
                         continue;
                     }
@@ -106,7 +106,7 @@ fn invariants_under_random_traffic_all_policies() {
                             tokens,
                             Some(payload),
                         ) {
-                            Some((id, _)) => {
+                            (_, Some(id)) => {
                                 tree.pin(&[id]);
                                 pinned.push(id);
                                 tree.on_access(
@@ -115,7 +115,7 @@ fn invariants_under_random_traffic_all_policies() {
                                 );
                                 parent = id;
                             }
-                            None => break,
+                            (_, None) => break,
                         }
                     }
                     for &n in &m.path {
@@ -157,6 +157,7 @@ fn payloads_survive_eviction_roundtrips() {
                         tokens,
                         Some(KvPayload::new(data.clone(), tokens)),
                     )
+                    .1
                     .is_some()
                 {
                     stored.push((d, data));
@@ -200,11 +201,11 @@ fn gpu_segment_always_connected() {
                 for _ in 0..chain_len {
                     let d = rng.below(6) as u32;
                     match tree.insert_child(parent, d, 8, None) {
-                        Some((id, _)) => {
+                        (_, Some(id)) => {
                             tree.on_access(id, &ctx(8, now, false));
                             parent = id;
                         }
-                        None => break,
+                        (_, None) => break,
                     }
                 }
                 tree.check_invariants(); // asserts GPU-parent rule
@@ -219,8 +220,8 @@ fn gpu_segment_always_connected() {
 fn hit_rate_definition_matches_paper_example() {
     let mut tree = build(1000, 1000, PolicyKind::Pgdsf);
     // Store [D1, D2].
-    let (a, _) = tree.insert_child(tree.root(), 1, 8, None).unwrap();
-    tree.insert_child(a, 2, 8, None).unwrap();
+    let a = tree.insert_child(tree.root(), 1, 8, None).1.unwrap();
+    tree.insert_child(a, 2, 8, None).1.unwrap();
     // Request [D1, D3]: 1 of 2 docs hit => 50% (the paper's example).
     let m = tree.lookup(&[1, 3]);
     assert_eq!(m.matched_docs, 1);

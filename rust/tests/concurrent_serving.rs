@@ -4,12 +4,13 @@
 //! PJRT-free so it runs everywhere.
 
 use ragcache::config::PolicyKind;
-use ragcache::controller::CacheService;
+use ragcache::controller::{CacheService, ShardedCacheService};
 use ragcache::kvcache::PageSpec;
 use ragcache::policy::make_policy;
 use ragcache::sched::PendingRequest;
 use ragcache::server::{
-    proto, Client, PriorityEstimator, QueryHandler, Server, ServerOptions,
+    proto, Client, PriorityEstimator, QueryHandler, Server,
+    ServerOptions, ShardFn,
 };
 use ragcache::tree::KnowledgeTree;
 use ragcache::util::Rng;
@@ -170,10 +171,15 @@ impl QueryHandler for CacheHandler {
     }
 
     fn stats(&self) -> proto::StatsResult {
+        let c = self.cache.counters();
         proto::StatsResult {
             requests: self.served as usize,
             mean_ttft_ms: 1.0,
             hit_rate: 0.0,
+            engines: 1,
+            tree_inserts: c.inserts,
+            tree_gpu_evictions: c.gpu_evictions,
+            tree_host_evictions: c.host_evictions,
         }
     }
 }
@@ -279,6 +285,158 @@ fn concurrent_clients_share_cache_hits() {
         let q = c.join().expect("client thread");
         assert_eq!(q.docs_hit, 2, "warmed path fully hits: {q:?}");
         assert_eq!(q.cached_tokens, 2 * DOC_TOKENS);
+    }
+    svc.check_invariants();
+    assert_eq!(svc.pinned_nodes(), 0, "serving returned every pin");
+    server.stop();
+}
+
+/// PJRT-free engine-replica handler over the shared sharded cache:
+/// every engine admits against the same `ShardedCacheService`, just as
+/// the real multi-engine deployment does.
+struct ShardedHandler {
+    cache: ShardedCacheService,
+    engine: usize,
+    served: u64,
+}
+
+impl QueryHandler for ShardedHandler {
+    fn query(
+        &mut self,
+        target_doc: u32,
+        query: &str,
+        _max_new: usize,
+    ) -> anyhow::Result<proto::QueryResult> {
+        let docs = [target_doc, target_doc + 1];
+        let docs_tokens: Vec<(u32, usize)> =
+            docs.iter().map(|&d| (d, DOC_TOKENS)).collect();
+        let adm = self.cache.admit(&docs_tokens, query.len().max(1));
+        let now = self.served as f64;
+        self.cache.touch_hits(&adm, 1e-3, now);
+        self.cache.commit(&adm, 1e-3, now, None);
+        self.served += 1;
+        Ok(proto::QueryResult {
+            id: self.served,
+            docs: docs.to_vec(),
+            docs_hit: adm.matched_docs,
+            cached_tokens: adm.alpha,
+            computed_tokens: adm.beta,
+            ttft_ms: 1.0,
+            total_ms: 2.0,
+            text: format!("engine{}:{query}", self.engine),
+        })
+    }
+
+    fn stats(&self) -> proto::StatsResult {
+        let c = self.cache.counters();
+        proto::StatsResult {
+            requests: self.served as usize,
+            mean_ttft_ms: 1.0,
+            hit_rate: 0.0,
+            engines: 1,
+            tree_inserts: c.inserts,
+            tree_gpu_evictions: c.gpu_evictions,
+            tree_host_evictions: c.host_evictions,
+        }
+    }
+}
+
+/// Acceptance: M = 2 engine replicas over a shared 2-shard cache. Warm
+/// requests from one client land on their affinity engines; parallel
+/// clients then hit the warmed shards regardless of which engine warmed
+/// them (the cache is shared), and one `stats` round trip merges both
+/// engines' counts while counting the shared tree exactly once.
+#[test]
+fn multi_engine_dispatch_shares_cache_and_aggregates_stats() {
+    let p = page();
+    let svc = ShardedCacheService::build(2, |_| {
+        KnowledgeTree::new(
+            p.bytes(4096),
+            p.bytes(8192),
+            p,
+            make_policy(PolicyKind::Pgdsf),
+            true,
+            0,
+        )
+    });
+    let est = svc.clone();
+    let estimator: PriorityEstimator = Arc::new(move |req| match req {
+        proto::Request::Query { target_doc, .. } => {
+            let m = est.lookup(&[*target_doc, *target_doc + 1]);
+            let total = 2 * DOC_TOKENS;
+            (m.cached_tokens, total.saturating_sub(m.cached_tokens).max(1))
+        }
+        _ => (0, 1),
+    });
+    let route = svc.clone();
+    let router: ShardFn = Arc::new(move |req| match req {
+        proto::Request::Query { target_doc, .. } => {
+            route.shard_of_doc(*target_doc)
+        }
+        _ => 0,
+    });
+    let opts = ServerOptions {
+        workers: 4,
+        engines: 2,
+        estimator: Some(estimator),
+        router: Some(router),
+        ..ServerOptions::default()
+    };
+    let handler_svc = svc.clone();
+    let server = Server::spawn_sharded(0, opts, move |engine| {
+        Ok(ShardedHandler {
+            cache: handler_svc.clone(),
+            engine,
+            served: 0,
+        })
+    })
+    .expect("spawn");
+    let addr = server.addr;
+
+    // Warm both shards: even first docs (shard 0 → engine 0) and odd
+    // ones (shard 1 → engine 1).
+    let targets = [10u32, 11, 20, 21];
+    let mut warm = Client::connect(addr).unwrap();
+    for t in targets {
+        match warm.call(&query(t)).unwrap() {
+            proto::Response::Query(q) => {
+                assert_eq!(q.docs_hit, 0, "cold request misses")
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    // Hit phase: parallel clients across both engines.
+    let clients: Vec<_> = targets
+        .into_iter()
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                match c.call(&query(t)).unwrap() {
+                    proto::Response::Query(q) => q,
+                    other => panic!("unexpected {other:?}"),
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        let q = c.join().expect("client thread");
+        assert_eq!(q.docs_hit, 2, "warmed shard fully hits: {q:?}");
+        assert_eq!(q.cached_tokens, 2 * DOC_TOKENS);
+    }
+
+    // One stats round trip covers both replicas.
+    match warm.call(&proto::Request::Stats).unwrap() {
+        proto::Response::Stats(s) => {
+            assert_eq!(s.engines, 2, "both engines answered");
+            assert_eq!(s.requests, 8, "requests merged across engines");
+            assert_eq!(
+                s.tree_inserts,
+                svc.counters().inserts,
+                "shared sharded tree counted once, not per engine"
+            );
+        }
+        other => panic!("unexpected {other:?}"),
     }
     svc.check_invariants();
     assert_eq!(svc.pinned_nodes(), 0, "serving returned every pin");

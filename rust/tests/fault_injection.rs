@@ -48,7 +48,7 @@ fn touch(t: &mut KnowledgeTree, id: ragcache::tree::NodeId, n: usize) {
 fn unreplicated_cache_is_wiped_by_gpu_failure() {
     let mut t = tree(1000, 1000);
     for d in 0..8u32 {
-        let (id, _) = t.insert_child(t.root(), d, 16, None).unwrap();
+        let id = t.insert_child(t.root(), d, 16, None).1.unwrap();
         touch(&mut t, id, 1);
     }
     let (lost, recovered) = t.fail_gpu();
@@ -59,7 +59,7 @@ fn unreplicated_cache_is_wiped_by_gpu_failure() {
         assert_eq!(t.lookup(&[d]).matched_docs, 0);
     }
     // The tree keeps serving: re-inserts work.
-    assert!(t.insert_child(t.root(), 1, 16, None).is_some());
+    assert!(t.insert_child(t.root(), 1, 16, None).1.is_some());
     t.check_invariants();
 }
 
@@ -68,7 +68,7 @@ fn replication_bounds_the_loss() {
     let mut t = tree(1000, 1000);
     let mut nodes = Vec::new();
     for d in 0..10u32 {
-        let (id, _) = t.insert_child(t.root(), d, 16, None).unwrap();
+        let id = t.insert_child(t.root(), d, 16, None).1.unwrap();
         touch(&mut t, id, (10 - d) as usize); // doc 0 hottest
         nodes.push(id);
     }
@@ -90,7 +90,7 @@ fn repeated_failures_are_survivable() {
     let mut t = tree(500, 500);
     for round in 0..5 {
         for d in 0..6u32 {
-            if let Some((id, _)) = t.insert_child(t.root(), d, 16, None) {
+            if let (_, Some(id)) = t.insert_child(t.root(), d, 16, None) {
                 touch(&mut t, id, 2);
             }
         }
@@ -101,7 +101,10 @@ fn repeated_failures_are_survivable() {
         for d in 0..6u32 {
             let m = t.lookup(&[d]);
             if m.matched_docs == 1 {
-                assert!(t.promote(&m.path).is_some(), "round {round}");
+                assert!(
+                    t.promote(&m.path).complete(m.path.len()),
+                    "round {round}"
+                );
             }
         }
         t.check_invariants();

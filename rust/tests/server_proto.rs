@@ -35,6 +35,8 @@ impl QueryHandler for MockHandler {
             requests: self.served,
             mean_ttft_ms: 12.0,
             hit_rate: 0.5,
+            engines: 1,
+            ..Default::default()
         }
     }
 }
@@ -79,7 +81,10 @@ fn stats_reflect_served_requests() {
             .unwrap();
     }
     match client.call(&proto::Request::Stats).unwrap() {
-        proto::Response::Stats(s) => assert_eq!(s.requests, 3),
+        proto::Response::Stats(s) => {
+            assert_eq!(s.requests, 3);
+            assert_eq!(s.engines, 1, "single-engine merge");
+        }
         other => panic!("unexpected {other:?}"),
     }
     server.stop();

@@ -1,0 +1,179 @@
+//! Integration: the sharded knowledge-tree service under concurrency —
+//! randomized interleavings across shards from many threads, and a
+//! deterministic proof that shards do not convoy on one another's
+//! locks. PJRT-free so it runs everywhere.
+
+use ragcache::config::PolicyKind;
+use ragcache::controller::ShardedCacheService;
+use ragcache::kvcache::PageSpec;
+use ragcache::policy::make_policy;
+use ragcache::tree::KnowledgeTree;
+use ragcache::util::Rng;
+use std::sync::mpsc;
+
+fn page() -> PageSpec {
+    PageSpec {
+        block_tokens: 8,
+        kv_bytes_per_token: 16,
+    }
+}
+
+fn sharded(
+    k: usize,
+    gpu_tokens: usize,
+    host_tokens: usize,
+) -> ShardedCacheService {
+    let p = page();
+    ShardedCacheService::build(k, |_| {
+        KnowledgeTree::new(
+            p.bytes(gpu_tokens),
+            p.bytes(host_tokens),
+            p,
+            make_policy(PolicyKind::Pgdsf),
+            true,
+            0,
+        )
+    })
+}
+
+/// Randomized interleaving: ≥6 threads hammer admit/commit/release and
+/// mid-flight GPU failures across 4 shards with tiny tier budgets
+/// (constant eviction pressure). Afterwards every shard's structural
+/// invariants hold and every pin has been returned.
+#[test]
+fn randomized_interleaving_across_shards_respects_invariants() {
+    let svc = sharded(4, 64, 256);
+    let threads = 8;
+    let ops = 250;
+    let mut handles = Vec::new();
+    for t in 0..threads {
+        let svc = svc.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0x5AD + t as u64);
+            for i in 0..ops {
+                let a = rng.below(16) as u32;
+                let b = rng.below(16) as u32;
+                let docs = [(a, 16usize), (b, 16usize)];
+                let adm = svc.admit(&docs, 8);
+                assert_eq!(adm.shard, a as usize % 4, "first-doc routing");
+                assert_eq!(
+                    adm.path.len(),
+                    adm.matched_docs,
+                    "pinned path covers exactly the matched prefix"
+                );
+                match i % 7 {
+                    0 => svc.release(&adm), // aborted speculation
+                    1 => {
+                        // GPU failure on the owning shard while this
+                        // admission is in flight; commit must still
+                        // return the pins and degrade gracefully.
+                        svc.shard(adm.shard).fail_gpu();
+                        svc.commit(&adm, 1e-3, i as f64, None);
+                    }
+                    _ => {
+                        svc.touch_hits(&adm, 1e-3, i as f64);
+                        svc.commit(&adm, 1e-3, i as f64, None);
+                    }
+                }
+                if i % 50 == 0 {
+                    // Per-shard invariants hold mid-flight too (pins
+                    // excepted — other threads legitimately hold some).
+                    svc.check_invariants();
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("no hammering thread panicked");
+    }
+    svc.check_invariants();
+    assert_eq!(
+        svc.pinned_nodes(),
+        0,
+        "quiescent: every admission was committed or released"
+    );
+    let total = svc.counters();
+    assert!(total.inserts > 0, "traffic exercised insertion: {total:?}");
+    for s in 0..svc.num_shards() {
+        assert!(
+            svc.shard(s).counters().inserts > 0,
+            "shard {s} saw no traffic"
+        );
+    }
+}
+
+/// Acceptance (no lock convoying): while one shard's tree lock is HELD,
+/// admissions against another shard run to completion. Under a single
+/// global tree lock this test would deadlock — admission on shard 1
+/// could never start until the blocked "shard 0" accessor returned.
+#[test]
+fn shards_admit_concurrently_while_another_shard_is_locked() {
+    let svc = sharded(2, 1024, 2048);
+    let (locked_tx, locked_rx) = mpsc::channel();
+    let (release_tx, release_rx) = mpsc::channel::<()>();
+    let holder = {
+        let svc = svc.clone();
+        std::thread::spawn(move || {
+            // Occupy shard 0's tree lock until told to let go.
+            svc.shard(0).with(|_tree| {
+                locked_tx.send(()).unwrap();
+                release_rx.recv().unwrap();
+            });
+        })
+    };
+    locked_rx.recv().unwrap();
+
+    // Shard 1 admits, commits, hits and releases — all while shard 0's
+    // lock is held by the other thread.
+    let adm = svc.admit(&[(1, 16), (3, 16)], 8);
+    assert_eq!(adm.shard, 1);
+    assert_eq!(adm.matched_docs, 0);
+    svc.commit(&adm, 1e-3, 0.0, None);
+    let hit = svc.admit(&[(1, 16), (3, 16)], 8);
+    assert_eq!(hit.matched_docs, 2, "warmed path hits on shard 1");
+    svc.release(&hit);
+
+    release_tx.send(()).unwrap();
+    holder.join().unwrap();
+    svc.check_invariants();
+    assert_eq!(svc.pinned_nodes(), 0);
+}
+
+/// Benchmark-style: threads pinned to distinct shards admit in parallel;
+/// per-shard counters sum to the aggregate, and no shard starves.
+#[test]
+fn distinct_shards_admit_in_parallel_and_counters_aggregate() {
+    let k = 4;
+    let svc = sharded(k, 4096, 8192);
+    let per_thread = 100u32;
+    let mut handles = Vec::new();
+    for s in 0..k as u32 {
+        let svc = svc.clone();
+        handles.push(std::thread::spawn(move || {
+            // Thread `s` only ever touches docs congruent to its shard.
+            for i in 0..per_thread {
+                let d = s + (i % 8) * k as u32;
+                let adm = svc.admit(&[(d, 16)], 8);
+                assert_eq!(adm.shard, s as usize);
+                svc.commit(&adm, 1e-3, i as f64, None);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("no admitting thread panicked");
+    }
+    let total = svc.counters();
+    let summed: u64 = (0..k)
+        .map(|s| svc.shard(s).counters().inserts)
+        .sum();
+    assert_eq!(total.inserts, summed, "aggregate = per-shard sum");
+    for s in 0..k {
+        assert_eq!(
+            svc.shard(s).counters().inserts,
+            8,
+            "shard {s}: 8 distinct docs inserted once each"
+        );
+    }
+    svc.check_invariants();
+    assert_eq!(svc.pinned_nodes(), 0);
+}
