@@ -1,0 +1,33 @@
+# Build entry points. The one everything references is `make artifacts`:
+# AOT-compile the tiny PJRT models (L1 Pallas kernel → L2 JAX
+# transformer → HLO text + flat params + manifest.json under artifacts/)
+# via python/compile/aot.py. Python runs only here, at build time — the
+# Rust binary is self-contained afterwards. `ragcache serve`, the
+# e2e_serving example and rust/tests/runtime_pjrt.rs all skip or error
+# with "run `make artifacts`" until this target has been run; it needs a
+# Python environment with jax + numpy (the AOT toolchain), which the
+# offline Rust build deliberately does not.
+
+PYTHON ?= python3
+OUT    ?= artifacts
+
+.PHONY: artifacts test pytest ci clean-artifacts
+
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../$(OUT)
+
+# Tier-1 verify (same gate as ci.sh's first two steps).
+test:
+	cargo build --release
+	cargo test -q
+
+# The Python-side contract tests (skip cleanly without artifacts/jax).
+pytest:
+	cd python && $(PYTHON) -m pytest tests -q
+
+# Full gate: build, tests, lints, serving matrices.
+ci:
+	./ci.sh
+
+clean-artifacts:
+	rm -rf $(OUT)

@@ -28,16 +28,25 @@ else
     echo "warn: clippy unavailable, skipping lint gate"
 fi
 
+# The batched-admission property suite is timing-sensitive (randomized
+# multi-thread interleavings at two engines): run it under --release too
+# so the fast schedules are exercised, not only the debug ones.
+echo "== batched admission suite (--release) =="
+cargo test --release --test batched_admission -q
+
 # Concurrent serving matrix (PJRT-free): the multi-worker/multi-engine
-# TCP runtime over the sharded cache with a synthetic engine. Runs
-# everywhere; exits non-zero on any regression, keeping the concurrent
-# paths exercised even without artifacts.
+# TCP runtime over the sharded cache with a synthetic engine, swept
+# across batched (--max-batch 8) and unbatched (--max-batch 1)
+# admission. Runs everywhere; exits non-zero on any regression, keeping
+# the concurrent paths exercised even without artifacts.
 echo "== concurrent serving matrix (PJRT-free) =="
 for w in 1 4; do
     for e in 1 2; do
-        echo "-- serving_matrix --workers $w --engines $e --"
-        cargo run --release --example serving_matrix -- \
-            --workers "$w" --engines "$e"
+        for b in 1 8; do
+            echo "-- serving_matrix --workers $w --engines $e --max-batch $b --"
+            cargo run --release --example serving_matrix -- \
+                --workers "$w" --engines "$e" --max-batch "$b"
+        done
     done
 done
 
@@ -50,9 +59,11 @@ if [ -f artifacts/manifest.json ]; then
     cargo run --release --example e2e_serving
     for w in 1 4; do
         for e in 1 2; do
-            echo "-- e2e_serving --workers $w --engines $e --"
-            cargo run --release --example e2e_serving -- \
-                --workers "$w" --engines "$e"
+            for b in 1 8; do
+                echo "-- e2e_serving --workers $w --engines $e --max-batch $b --"
+                cargo run --release --example e2e_serving -- \
+                    --workers "$w" --engines "$e" --max-batch "$b"
+            done
         done
     done
 else

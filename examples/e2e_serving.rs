@@ -12,11 +12,13 @@
 //! Two modes:
 //! - default: drive `RealServer::serve` directly (single engine, no
 //!   TCP), as the original composition proof.
-//! - `--workers N [--engines M]`: run the same workload through the
-//!   concurrent TCP runtime — N connection workers, M engine-driver
-//!   replicas sharing one M-shard knowledge-tree cache — exercising
-//!   shard-affinity routing and cross-engine stats fan-out with real
-//!   PJRT compute. This is the CI matrix entry point.
+//! - `--workers N [--engines M] [--max-batch B]`: run the same workload
+//!   through the concurrent TCP runtime — N connection workers, M
+//!   engine-driver replicas sharing one M-shard knowledge-tree cache,
+//!   each admitting up to B requests per iteration with their cache-hit
+//!   transfers coalesced into one burst — exercising shard-affinity
+//!   routing, batched admission and cross-engine stats fan-out with
+//!   real PJRT compute. This is the CI matrix entry point.
 //!
 //! Run: `make artifacts && cargo run --release --example e2e_serving`
 //!      `... --example e2e_serving -- --workers 4 --engines 2`
@@ -83,6 +85,12 @@ fn main() -> anyhow::Result<()> {
     let engines: usize = args
         .get_parse_or("engines", 1)
         .map_err(anyhow::Error::msg)?;
+    let max_batch: usize = args
+        .get_parse_or("max-batch", ServerOptions::default().max_batch)
+        .map_err(anyhow::Error::msg)?;
+    if max_batch == 0 {
+        anyhow::bail!("--max-batch must be >= 1");
+    }
 
     let dir = Path::new("artifacts");
     if !dir.join("manifest.json").exists() {
@@ -90,7 +98,7 @@ fn main() -> anyhow::Result<()> {
         std::process::exit(1);
     }
     if workers > 0 {
-        return serve_tcp_matrix(dir, workers, engines.max(1));
+        return serve_tcp_matrix(dir, workers, engines.max(1), max_batch);
     }
     serve_direct(dir)
 }
@@ -109,23 +117,20 @@ impl QueryHandler for TcpHandler {
         query: &str,
         max_new: usize,
     ) -> anyhow::Result<proto::QueryResult> {
-        let toks = self.tok.encode(query);
-        let resp = self.server.serve(
-            target_doc,
-            &toks,
-            max_new.clamp(1, 16),
-            &self.cfg,
-        )?;
-        Ok(proto::QueryResult {
-            id: resp.id,
-            docs: resp.docs,
-            docs_hit: resp.docs_hit,
-            cached_tokens: resp.cached_tokens,
-            computed_tokens: resp.computed_tokens,
-            ttft_ms: resp.ttft * 1e3,
-            total_ms: resp.total * 1e3,
-            text: self.tok.decode(&resp.output_tokens),
-        })
+        self.query_batch(&[(target_doc, query.to_string(), max_new)])
+            .pop()
+            .expect("one result per query")
+    }
+
+    /// Batched entry point with real PJRT compute: members admit
+    /// together (one coalesced H2D accounting burst), then prefill and
+    /// decode in turn — the identical `serve_proto_batch` path the
+    /// `ragcache serve` binary runs.
+    fn query_batch(
+        &mut self,
+        batch: &[(u32, String, usize)],
+    ) -> Vec<anyhow::Result<proto::QueryResult>> {
+        self.server.serve_proto_batch(batch, &self.tok, &self.cfg)
     }
 
     fn stats(&self) -> proto::StatsResult {
@@ -148,6 +153,7 @@ fn serve_tcp_matrix(
     dir: &Path,
     workers: usize,
     engines: usize,
+    max_batch: usize,
 ) -> anyhow::Result<()> {
     let manifest = ArtifactManifest::load(dir)?;
     let mm = manifest.model("tiny-gqa")?;
@@ -176,6 +182,7 @@ fn serve_tcp_matrix(
     let opts = ServerOptions {
         workers,
         engines,
+        max_batch,
         estimator: Some(estimator),
         router: Some(router),
         ..ServerOptions::default()
@@ -202,7 +209,8 @@ fn serve_tcp_matrix(
     })?;
     let addr = server.addr;
     println!(
-        "e2e TCP matrix on {addr}: {workers} workers, {engines} engines"
+        "e2e TCP matrix on {addr}: {workers} workers, {engines} engines, \
+         {max_batch}-request batches"
     );
 
     // The direct-mode workload, split across parallel clients.

@@ -8,11 +8,14 @@
 //! regression.
 //!
 //! Run: `cargo run --release --example serving_matrix -- \
-//!         --workers 4 --engines 2 [--shards K] [--clients 4]`
+//!         --workers 4 --engines 2 [--shards K] [--clients 4]
+//!         [--max-batch B]`
 
 use ragcache::cli::Args;
 use ragcache::config::PolicyKind;
-use ragcache::controller::ShardedCacheService;
+use ragcache::controller::{
+    BatchAdmission, PipelineDriver, ShardedCacheService,
+};
 use ragcache::kvcache::PageSpec;
 use ragcache::policy::make_policy;
 use ragcache::server::{
@@ -24,6 +27,19 @@ use std::sync::Arc;
 
 const DOC_TOKENS: usize = 32;
 const TARGETS: u32 = 16;
+
+/// Synthetic-engine driver: no PJRT, no modelled link — the point here
+/// is exercising the coalesced-burst *accounting* path, not timing.
+struct NullDriver;
+
+impl PipelineDriver for NullDriver {
+    fn now(&self) -> f64 {
+        0.0
+    }
+    fn transfer_time(&self, _bytes: u64) -> f64 {
+        0.0
+    }
+}
 
 /// Engine replica: real sharded-cache admission, synthetic compute.
 struct MatrixHandler {
@@ -37,26 +53,63 @@ impl QueryHandler for MatrixHandler {
         &mut self,
         target_doc: u32,
         query: &str,
-        _max_new: usize,
+        max_new: usize,
     ) -> anyhow::Result<proto::QueryResult> {
-        let docs = [target_doc, target_doc + 1];
-        let docs_tokens: Vec<(u32, usize)> =
-            docs.iter().map(|&d| (d, DOC_TOKENS)).collect();
-        let adm = self.cache.admit(&docs_tokens, query.len().max(1));
-        let now = self.served as f64;
-        self.cache.touch_hits(&adm, 1e-3, now);
-        self.cache.commit(&adm, 1e-3, now, None);
-        self.served += 1;
-        Ok(proto::QueryResult {
-            id: self.served,
-            docs: docs.to_vec(),
-            docs_hit: adm.matched_docs,
-            cached_tokens: adm.alpha,
-            computed_tokens: adm.beta,
-            ttft_ms: 1.0,
-            total_ms: 2.0,
-            text: format!("engine{}:{query}", self.engine),
-        })
+        self.query_batch(&[(target_doc, query.to_string(), max_new)])
+            .pop()
+            .expect("one result per query")
+    }
+
+    /// Batched admission through the real `BatchAdmission` path: every
+    /// member admits (pins) first, the members' promotion transfers
+    /// coalesce into one burst, then each member commits. A gate checks
+    /// the coalesced totals equal the member sum on every batch.
+    fn query_batch(
+        &mut self,
+        batch: &[(u32, String, usize)],
+    ) -> Vec<anyhow::Result<proto::QueryResult>> {
+        let cache = &self.cache;
+        let mut member_bytes = 0u64;
+        let admissions = BatchAdmission::admit_with(
+            &NullDriver,
+            0..batch.len() as u64,
+            |i| {
+                let (target_doc, query, _) = &batch[i as usize];
+                let docs = [*target_doc, *target_doc + 1];
+                let docs_tokens: Vec<(u32, usize)> =
+                    docs.iter().map(|&d| (d, DOC_TOKENS)).collect();
+                let adm = cache.admit(&docs_tokens, query.len().max(1));
+                member_bytes += adm.transfer_bytes();
+                Ok(adm)
+            },
+        );
+        assert_eq!(
+            admissions.total_bytes(),
+            member_bytes,
+            "coalesced burst equals the member byte sum"
+        );
+        admissions
+            .into_members()
+            .into_iter()
+            .map(|(i, adm)| {
+                let (target_doc, query, _) = &batch[i as usize];
+                let docs = [*target_doc, *target_doc + 1];
+                let now = self.served as f64;
+                self.cache.touch_hits(&adm, 1e-3, now);
+                self.cache.commit(&adm, 1e-3, now, None);
+                self.served += 1;
+                Ok(proto::QueryResult {
+                    id: self.served,
+                    docs: docs.to_vec(),
+                    docs_hit: adm.matched_docs,
+                    cached_tokens: adm.alpha,
+                    computed_tokens: adm.beta,
+                    ttft_ms: 1.0,
+                    total_ms: 2.0,
+                    text: format!("engine{}:{query}", self.engine),
+                })
+            })
+            .collect()
     }
 
     fn stats(&self) -> proto::StatsResult {
@@ -96,6 +149,12 @@ fn main() -> anyhow::Result<()> {
     let clients: usize = args
         .get_parse_or("clients", 4)
         .map_err(anyhow::Error::msg)?;
+    let max_batch: usize = args
+        .get_parse_or("max-batch", ServerOptions::default().max_batch)
+        .map_err(anyhow::Error::msg)?;
+    if max_batch == 0 {
+        anyhow::bail!("--max-batch must be >= 1");
+    }
     if shards < engines.max(1) {
         // shard % engines routing would leave the surplus engines idle.
         anyhow::bail!(
@@ -136,6 +195,7 @@ fn main() -> anyhow::Result<()> {
     let opts = ServerOptions {
         workers,
         engines,
+        max_batch,
         estimator: Some(estimator),
         router: Some(router),
         ..ServerOptions::default()
@@ -151,7 +211,7 @@ fn main() -> anyhow::Result<()> {
     let addr = server.addr;
     println!(
         "serving matrix on {addr}: {workers} workers, {engines} engines, \
-         {shards} shards, {clients} clients"
+         {shards} shards, {clients} clients, {max_batch}-request batches"
     );
 
     // Warm phase: one client inserts every target's doc pair (cold).

@@ -1,0 +1,258 @@
+//! Batched admission with coalesced H2D bursts (ROADMAP "Batched H2D
+//! transfers" + "Per-engine decode batching").
+//!
+//! One engine-driver iteration admits a whole batch popped from its
+//! reorder queue ([`crate::sched::ReorderQueue::pop_batch`]) instead of
+//! one request at a time. Each member's `promote()` still moves its own
+//! bytes — PR 2's partial-[`Promotion`](crate::tree::Promotion)
+//! accounting per member is untouched — but the PCIe *time* is charged
+//! once for the whole batch: one DMA setup plus one burst at link
+//! bandwidth, via a single [`PipelineDriver::transfer_time`] call over
+//! the coalesced byte total, instead of one fixed setup latency per
+//! member. This is the transfer-side analogue of the engine sharing its
+//! weight read across a prefill batch
+//! ([`crate::llm::cost_model::CostModel::prefill_batch_time`]), and the
+//! reason M engines no longer serialize M bursts that the hardware
+//! would issue as one.
+//!
+//! A batch of one degrades exactly to the per-request charge
+//! (`transfer_time(bytes)`), which is what keeps `--max-batch 1`
+//! bit-identical to the unbatched pipeline.
+//!
+//! Failure semantics (all-or-per-request fallback): a member whose GPU
+//! admission fails mid-batch releases its own pins and is reported in
+//! [`BatchAdmission::failed`] for re-queueing; the members admitted
+//! before and after it stay admitted, and the failed member's
+//! already-moved bytes stay in the coalesced total — PCIe time is
+//! charged for real byte movement, never uncharged (the same rule
+//! PR 2's partial `Promotion` established for a mid-path stop).
+
+use super::pipeline::{Admission, PipelineDriver};
+use crate::tree::Transfers;
+
+/// One engine-iteration's worth of admissions with their promotion
+/// transfers coalesced into a single PCIe burst, charged once.
+#[derive(Debug, Default)]
+pub struct BatchAdmission {
+    /// Successfully admitted members in admission (§5.2 pop) order,
+    /// tagged with the caller's sequence/job id.
+    members: Vec<(u64, Admission)>,
+    /// Ids whose admission failed mid-batch (pins already released by
+    /// the failing admit); the caller re-queues them.
+    failed: Vec<u64>,
+    /// Coalesced byte movement: every member's promotion plus the
+    /// partial promotions of failed members.
+    transfers: Transfers,
+    /// The one-per-batch link charge, set by [`BatchAdmission::seal`].
+    sealed_time: Option<f64>,
+}
+
+impl BatchAdmission {
+    pub fn new() -> Self {
+        BatchAdmission::default()
+    }
+
+    /// Admit a batch through `admit_one` and seal it: every id is
+    /// admitted in order, members' bytes coalesce, and the burst is
+    /// charged once through the driver. `admit_one` returns
+    /// `Err(partial)` when GPU admission fails mid-member — by then the
+    /// callee must have released that member's pins; its already-moved
+    /// bytes fold into the burst and the id lands in
+    /// [`failed`](BatchAdmission::failed) for re-queueing, while every
+    /// other member proceeds (per-request fallback).
+    pub fn admit_with(
+        driver: &dyn PipelineDriver,
+        ids: impl IntoIterator<Item = u64>,
+        mut admit_one: impl FnMut(u64) -> Result<Admission, Transfers>,
+    ) -> BatchAdmission {
+        let mut batch = BatchAdmission::new();
+        for id in ids {
+            match admit_one(id) {
+                Ok(adm) => batch.push(id, adm),
+                Err(partial) => batch.push_failed(id, partial),
+            }
+        }
+        batch.seal(driver);
+        batch
+    }
+
+    /// Fold one successful member admission into the batch.
+    pub fn push(&mut self, id: u64, adm: Admission) {
+        debug_assert!(self.sealed_time.is_none(), "batch already sealed");
+        self.transfers.merge(adm.transfers);
+        self.members.push((id, adm));
+    }
+
+    /// Fold a failed member: its partial-promotion bytes stay accounted
+    /// in the burst, the id is reported for re-queueing.
+    pub fn push_failed(&mut self, id: u64, partial: Transfers) {
+        debug_assert!(self.sealed_time.is_none(), "batch already sealed");
+        self.transfers.merge(partial);
+        self.failed.push(id);
+    }
+
+    /// Close the batch and charge the coalesced burst ONCE through the
+    /// driver's link model, returning the burst seconds. Idempotent —
+    /// re-sealing never double-charges.
+    pub fn seal(&mut self, driver: &dyn PipelineDriver) -> f64 {
+        if self.sealed_time.is_none() {
+            self.sealed_time =
+                Some(driver.transfer_time(self.total_bytes()));
+        }
+        self.sealed_time.expect("just sealed")
+    }
+
+    /// The one-per-batch burst charge (0.0 before [`seal`]).
+    ///
+    /// [`seal`]: BatchAdmission::seal
+    pub fn transfer_time(&self) -> f64 {
+        self.sealed_time.unwrap_or(0.0)
+    }
+
+    /// Coalesced byte movement of the whole batch, h2g/g2h split.
+    pub fn transfers(&self) -> Transfers {
+        self.transfers
+    }
+
+    /// Coalesced bytes of the whole batch (both directions).
+    pub fn total_bytes(&self) -> u64 {
+        self.transfers.h2g_bytes + self.transfers.g2h_bytes
+    }
+
+    /// Successfully admitted members in admission order.
+    pub fn members(&self) -> &[(u64, Admission)] {
+        &self.members
+    }
+
+    /// Ids whose admission failed; the caller re-queues them.
+    pub fn failed(&self) -> &[u64] {
+        &self.failed
+    }
+
+    /// Consume the batch, yielding the admitted members for the
+    /// caller's in-flight bookkeeping (the burst charge was already
+    /// taken via [`seal`](BatchAdmission::seal)).
+    pub fn into_members(self) -> Vec<(u64, Admission)> {
+        self.members
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A PCIe-like driver with a per-burst setup latency, so the tests
+    /// can observe the one-charge-per-batch property.
+    struct LinkDriver;
+
+    impl PipelineDriver for LinkDriver {
+        fn now(&self) -> f64 {
+            0.0
+        }
+        fn transfer_time(&self, bytes: u64) -> f64 {
+            if bytes == 0 {
+                0.0
+            } else {
+                20e-6 + bytes as f64 / 12.0e9
+            }
+        }
+    }
+
+    fn adm(h2g: u64, g2h: u64) -> Admission {
+        Admission {
+            transfers: Transfers {
+                h2g_bytes: h2g,
+                g2h_bytes: g2h,
+            },
+            ..Admission::default()
+        }
+    }
+
+    #[test]
+    fn coalesced_total_is_member_sum() {
+        let b = BatchAdmission::admit_with(
+            &LinkDriver,
+            [1u64, 2, 3],
+            |id| Ok(adm(id * 1000, id * 10)),
+        );
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.transfers().h2g_bytes, 6000);
+        assert_eq!(b.transfers().g2h_bytes, 60);
+        assert_eq!(b.total_bytes(), 6060);
+        assert!(b.failed().is_empty());
+    }
+
+    /// Acceptance: a single-member batch charges exactly the PR 2
+    /// per-request time — `--max-batch 1` is bit-identical.
+    #[test]
+    fn single_member_batch_charges_per_request_time() {
+        let d = LinkDriver;
+        let b =
+            BatchAdmission::admit_with(&d, [7u64], |_| Ok(adm(4096, 0)));
+        assert_eq!(b.transfer_time(), d.transfer_time(4096));
+    }
+
+    /// The tentpole win: B members pay one setup latency, not B.
+    #[test]
+    fn batch_charge_is_one_burst_not_b() {
+        let d = LinkDriver;
+        let (x, y) = (1 << 20, 3 << 20);
+        let b = BatchAdmission::admit_with(&d, [1u64, 2], |id| {
+            Ok(if id == 1 { adm(x, 0) } else { adm(y, 0) })
+        });
+        let coalesced = b.transfer_time();
+        assert_eq!(coalesced, d.transfer_time(x + y));
+        let serial = d.transfer_time(x) + d.transfer_time(y);
+        assert!(coalesced < serial, "{coalesced} vs serial {serial}");
+    }
+
+    /// Mid-batch failure: the member re-queues, its partial bytes stay
+    /// accounted, and the rest of the batch is unaffected.
+    #[test]
+    fn failed_member_keeps_partial_bytes_and_requeues() {
+        let b = BatchAdmission::admit_with(
+            &LinkDriver,
+            [1u64, 2, 3],
+            |id| {
+                if id == 2 {
+                    Err(Transfers {
+                        h2g_bytes: 0,
+                        g2h_bytes: 512, // swap-outs before the failure
+                    })
+                } else {
+                    Ok(adm(1024, 0))
+                }
+            },
+        );
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.failed(), &[2]);
+        assert_eq!(b.total_bytes(), 2048 + 512, "no loss, no double-charge");
+    }
+
+    #[test]
+    fn seal_is_idempotent_and_empty_batch_is_free() {
+        let d = LinkDriver;
+        let mut b = BatchAdmission::new();
+        assert_eq!(b.transfer_time(), 0.0, "unsealed charge is zero");
+        b.push(1, adm(100, 0));
+        let t1 = b.seal(&d);
+        let t2 = b.seal(&d);
+        assert_eq!(t1, t2, "re-sealing never double-charges");
+
+        let empty = BatchAdmission::admit_with(
+            &d,
+            std::iter::empty::<u64>(),
+            |_| Ok(adm(0, 0)),
+        );
+        assert!(empty.is_empty());
+        assert_eq!(empty.transfer_time(), 0.0);
+    }
+}

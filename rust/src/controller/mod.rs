@@ -17,7 +17,9 @@
 //!            └──────────────┬───────────────┘
 //!                           ▼
 //!              pipeline (shared core)
-//!     DSP decisions · reorder-queue admission ·
+//!     DSP decisions · reorder-queue admission (batched pops:
+//!     batch::BatchAdmission coalesces the members' promotions
+//!     into ONE H2D burst charged once per engine iteration) ·
 //!     ShardedCacheService ──► K × CacheService shards
 //!       (route by first doc)   tree match → promote → pin → (α,β)
 //!                              → commit/release · metrics hooks
@@ -32,6 +34,7 @@
 //! `examples/e2e_serving.rs` and the concurrent TCP front-end in
 //! [`crate::server`]) drives the identical logic in real time.
 
+pub mod batch;
 pub mod fault;
 pub mod pipeline;
 pub mod real;
@@ -39,6 +42,7 @@ pub mod retrieval;
 pub mod shard;
 pub mod sim_server;
 
+pub use batch::BatchAdmission;
 pub use pipeline::{
     Admission, CacheService, Pipeline, PipelineDriver, RequestState,
 };

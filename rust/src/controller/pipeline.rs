@@ -36,7 +36,7 @@ use crate::policy::AccessCtx;
 use crate::sched::ReorderQueue;
 use crate::spec::SpecState;
 use crate::tree::{
-    DocId, KnowledgeTree, MatchResult, NodeId, TreeCounters,
+    DocId, KnowledgeTree, MatchResult, NodeId, Transfers, TreeCounters,
 };
 use std::sync::{Arc, Mutex};
 
@@ -74,14 +74,27 @@ pub struct Admission {
     pub beta: usize,
     /// Docs to insert after the prefill: `(doc, tokens)`.
     pub unmatched: Vec<(DocId, usize)>,
-    /// Bytes moved by cache-hit loading (h2g + g2h swap-outs).
-    pub transfer_bytes: u64,
+    /// Byte movement of this admission's promotion, h2g/g2h split —
+    /// what [`super::batch::BatchAdmission`] coalesces across a batch
+    /// into one PCIe burst. The combined total is
+    /// [`Admission::transfer_bytes`].
+    pub transfers: Transfers,
     /// Estimated (sim) or measured (real) prefill seconds; set by the
     /// driver once known, consumed by the policy updates.
     pub estimated_time: f64,
     /// Which tree shard admitted this request (0 for an unsharded
     /// service); commit/release/touch route back through it.
     pub shard: usize,
+}
+
+impl Admission {
+    /// Bytes moved by this admission's cache-hit loading (h2g + g2h
+    /// swap-outs) — by construction the sum of the `transfers`
+    /// components, so the per-request charge and the coalesced batch
+    /// charge can never disagree on the byte total.
+    pub fn transfer_bytes(&self) -> u64 {
+        self.transfers.h2g_bytes + self.transfers.g2h_bytes
+    }
 }
 
 /// Thread-safe knowledge-tree service: the [`KnowledgeTree`] plus its
@@ -186,8 +199,7 @@ impl CacheService {
                 alpha,
                 beta,
                 unmatched: docs[matched..].to_vec(),
-                transfer_bytes: promo.transfers.h2g_bytes
-                    + promo.transfers.g2h_bytes,
+                transfers: promo.transfers,
                 estimated_time: 0.0,
                 shard: 0,
             }
@@ -378,30 +390,39 @@ impl Pipeline {
     }
 
     /// Admission stage A against the cache (identity admission for the
-    /// cache-less baseline). Returns the admission and the transfer time
-    /// its cache-hit loading costs, per the driver's link model.
+    /// cache-less baseline), WITHOUT charging link time: batched
+    /// callers coalesce the members' promotion bytes into one burst via
+    /// [`super::batch::BatchAdmission`] and charge that once.
+    /// [`Pipeline::admit`] is the single-request form.
+    pub fn admit_one(
+        &self,
+        docs: &[(DocId, usize)],
+        request_tokens: usize,
+    ) -> Admission {
+        match &self.cache {
+            Some(c) => c.admit(docs, request_tokens),
+            None => Admission {
+                beta: docs.iter().map(|&(_, t)| t).sum::<usize>()
+                    + request_tokens,
+                unmatched: docs.to_vec(),
+                ..Admission::default()
+            },
+        }
+    }
+
+    /// Admission stage A for a singleton: [`Pipeline::admit_one`] plus
+    /// the transfer time its cache-hit loading costs, per the driver's
+    /// link model — exactly what a [`super::batch::BatchAdmission`] of
+    /// one member charges.
     pub fn admit(
         &self,
         driver: &dyn PipelineDriver,
         docs: &[(DocId, usize)],
         request_tokens: usize,
     ) -> (Admission, f64) {
-        match &self.cache {
-            Some(c) => {
-                let adm = c.admit(docs, request_tokens);
-                let extra = driver.transfer_time(adm.transfer_bytes);
-                (adm, extra)
-            }
-            None => (
-                Admission {
-                    beta: docs.iter().map(|&(_, t)| t).sum::<usize>()
-                        + request_tokens,
-                    unmatched: docs.to_vec(),
-                    ..Admission::default()
-                },
-                0.0,
-            ),
-        }
+        let adm = self.admit_one(docs, request_tokens);
+        let extra = driver.transfer_time(adm.transfer_bytes());
+        (adm, extra)
     }
 
     /// Policy refresh for an admission's hit nodes (no-op without cache).

@@ -11,11 +11,12 @@
 //! compose; the paper-scale experiments use the virtual-clock
 //! [`super::sim_server`].
 
-use super::pipeline::{Pipeline, PipelineDriver};
+use super::batch::BatchAdmission;
+use super::pipeline::{Admission, Pipeline, PipelineDriver};
 use super::shard::ShardedCacheService;
 use crate::embed::EmbeddingModel;
 use crate::kvcache::{KvPayload, PageSpec};
-use crate::llm::tokenizer::SEP;
+use crate::llm::tokenizer::{ByteTokenizer, SEP};
 use crate::metrics::Recorder;
 use crate::policy::make_policy;
 use crate::runtime::PjrtModel;
@@ -62,6 +63,14 @@ pub struct ServingStats {
     pub hit_rate: f64,
 }
 
+/// One member of a batched serve call ([`RealServer::serve_batch`]).
+#[derive(Debug, Clone)]
+pub struct BatchRequest {
+    pub target_doc: u32,
+    pub query_tokens: Vec<i32>,
+    pub max_new: usize,
+}
+
 /// Response of one served request.
 #[derive(Debug, Clone)]
 pub struct RealResponse {
@@ -74,6 +83,27 @@ pub struct RealResponse {
     pub ttft: f64,
     pub total: f64,
     pub output_tokens: Vec<i32>,
+}
+
+impl RealResponse {
+    /// Wire-protocol form of this response (`tok` decodes the output
+    /// tokens into the reply text) — the one conversion every TCP
+    /// handler shares, so the field mapping cannot drift between them.
+    pub fn into_query_result(
+        self,
+        tok: &ByteTokenizer,
+    ) -> crate::server::proto::QueryResult {
+        crate::server::proto::QueryResult {
+            id: self.id,
+            docs_hit: self.docs_hit,
+            cached_tokens: self.cached_tokens,
+            computed_tokens: self.computed_tokens,
+            ttft_ms: self.ttft * 1e3,
+            total_ms: self.total * 1e3,
+            text: tok.decode(&self.output_tokens),
+            docs: self.docs,
+        }
+    }
 }
 
 /// The real-mode [`PipelineDriver`]: wall clock; GPU↔host "transfers" are
@@ -249,7 +279,10 @@ impl RealServer {
     }
 
     /// Serve one request: retrieve, reuse cached document KV, prefill the
-    /// rest, decode `max_new` tokens greedily.
+    /// rest, decode `max_new` tokens greedily. A batch of one through
+    /// [`RealServer::serve_batch`] — sharing the code path is what keeps
+    /// `--max-batch 1` bit-identical to batched deployments serving
+    /// singleton batches.
     pub fn serve(
         &mut self,
         target_doc: u32,
@@ -257,29 +290,156 @@ impl RealServer {
         max_new: usize,
         cfg: &RealConfig,
     ) -> Result<RealResponse> {
-        let id = self.next_id;
-        self.next_id += 1;
-        let t_arrive = self.driver.now();
-        self.pipeline.recorder.arrival(id, t_arrive);
+        self.serve_batch(
+            &[BatchRequest {
+                target_doc,
+                query_tokens: query_tokens.to_vec(),
+                max_new,
+            }],
+            cfg,
+        )
+        .pop()
+        .expect("one response per request")
+    }
 
-        // Retrieval (Rust vector index — real search).
-        let q = self.em.query(target_doc, cfg.query_noise, &mut self.rng);
-        let hits = self.index.search(&q, cfg.top_k);
-        let docs: Vec<u32> = hits.iter().map(|h| h.1).collect();
-        self.pipeline
-            .recorder
-            .retrieval_done(id, self.driver.now());
-
-        // Shared admission: match → promote (with GPU-prefix fallback) →
-        // pin → (α, β). The separator + question form the request tail.
-        let docs_tokens: Vec<(u32, usize)> = docs
-            .iter()
-            .map(|&d| (d, self.doc_tokens[d as usize].len()))
-            .collect();
-        let request_tokens = 1 + query_tokens.len(); // SEP + question
-        let (adm, _transfer_secs) =
+    /// Serve a batch admitted together — the engine-driver loop pops up
+    /// to `--max-batch` compatible requests per iteration and hands them
+    /// here. Every member retrieves and runs admission stage A FIRST, so
+    /// the members' cache-hit promotions coalesce into one H2D burst via
+    /// [`BatchAdmission`] (charged once; the real driver's transfers are
+    /// in-process copies already folded into measured latency, so the
+    /// charge is 0 s — but the accounting path is the simulation's,
+    /// which is what the conformance tests pin). Then each member
+    /// prefills, commits and decodes. A member whose prefill fails
+    /// releases its own pins and reports its own error; the rest of the
+    /// batch proceeds (per-request fallback).
+    pub fn serve_batch(
+        &mut self,
+        reqs: &[BatchRequest],
+        cfg: &RealConfig,
+    ) -> Vec<Result<RealResponse>> {
+        // Phase 1: per-member retrieval (Rust vector index — real
+        // search) + the admission inputs.
+        struct Prep {
+            id: u64,
+            t_arrive: f64,
+            docs: Vec<u32>,
+            docs_tokens: Vec<(u32, usize)>,
+            request_tokens: usize,
+        }
+        let mut preps = Vec::with_capacity(reqs.len());
+        for r in reqs {
+            let id = self.next_id;
+            self.next_id += 1;
+            let t_arrive = self.driver.now();
+            self.pipeline.recorder.arrival(id, t_arrive);
+            let q =
+                self.em
+                    .query(r.target_doc, cfg.query_noise, &mut self.rng);
+            let hits = self.index.search(&q, cfg.top_k);
+            let docs: Vec<u32> = hits.iter().map(|h| h.1).collect();
             self.pipeline
-                .admit(&self.driver, &docs_tokens, request_tokens);
+                .recorder
+                .retrieval_done(id, self.driver.now());
+            let docs_tokens: Vec<(u32, usize)> = docs
+                .iter()
+                .map(|&d| (d, self.doc_tokens[d as usize].len()))
+                .collect();
+            // The separator + question form the request tail.
+            let request_tokens = 1 + r.query_tokens.len(); // SEP + question
+            preps.push(Prep {
+                id,
+                t_arrive,
+                docs,
+                docs_tokens,
+                request_tokens,
+            });
+        }
+
+        // Phase 2: shared batched admission — match → promote (with
+        // GPU-prefix fallback) → pin → (α, β) per member, transfers
+        // coalesced into one burst charged once through the driver.
+        let base = preps.first().map(|p| p.id).unwrap_or(0);
+        let batch = {
+            let pipeline = &self.pipeline;
+            BatchAdmission::admit_with(
+                &self.driver,
+                preps.iter().map(|p| p.id),
+                |id| {
+                    let p = &preps[(id - base) as usize];
+                    Ok(pipeline.admit_one(&p.docs_tokens, p.request_tokens))
+                },
+            )
+        };
+        debug_assert!(batch.failed().is_empty(), "real admission is total");
+
+        // Phase 3: per-member prefill → commit → decode. Members align
+        // by id, never positionally: should an admission ever fail
+        // mid-batch (the `admit_with` Err path), every other member
+        // keeps its own admission and the failed one reports its own
+        // error instead of shifting the pairing.
+        let mut admissions: std::collections::HashMap<u64, Admission> =
+            batch.into_members().into_iter().collect();
+        preps
+            .into_iter()
+            .zip(reqs)
+            .map(|(prep, r)| match admissions.remove(&prep.id) {
+                Some(adm) => self.finish_one(
+                    prep.id,
+                    prep.t_arrive,
+                    prep.docs,
+                    adm,
+                    &r.query_tokens,
+                    r.max_new,
+                    cfg,
+                ),
+                None => Err(anyhow::anyhow!(
+                    "request {}: GPU admission failed mid-batch; \
+                     pins released, re-submit",
+                    prep.id
+                )),
+            })
+            .collect()
+    }
+
+    /// The TCP handlers' shared wire entry point (`ragcache serve` and
+    /// the e2e example drive the identical code): build the
+    /// [`BatchRequest`]s from the protocol tuples — `max_new` clamped
+    /// to the compiled decode budget — serve the batch, and convert
+    /// each response to its wire form.
+    pub fn serve_proto_batch(
+        &mut self,
+        batch: &[(u32, String, usize)],
+        tok: &ByteTokenizer,
+        cfg: &RealConfig,
+    ) -> Vec<Result<crate::server::proto::QueryResult>> {
+        let reqs: Vec<BatchRequest> = batch
+            .iter()
+            .map(|(doc, query, max_new)| BatchRequest {
+                target_doc: *doc,
+                query_tokens: tok.encode(query),
+                max_new: (*max_new).clamp(1, 16),
+            })
+            .collect();
+        self.serve_batch(&reqs, cfg)
+            .into_iter()
+            .map(|r| r.map(|resp| resp.into_query_result(tok)))
+            .collect()
+    }
+
+    /// Post-admission tail of one request: prefill the non-cached
+    /// tokens, commit the new document KV, decode greedily.
+    #[allow(clippy::too_many_arguments)]
+    fn finish_one(
+        &mut self,
+        id: u64,
+        t_arrive: f64,
+        docs: Vec<u32>,
+        adm: Admission,
+        query_tokens: &[i32],
+        max_new: usize,
+        cfg: &RealConfig,
+    ) -> Result<RealResponse> {
         let mut kv = self.cache().concat_payloads(&adm);
 
         // Non-cached documents + separator + question.

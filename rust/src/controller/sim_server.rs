@@ -8,6 +8,7 @@
 //! and a [`PipelineDriver`] built from the virtual clock, the PCIe
 //! transfer model and the analytic `(α, β)` cost profile.
 
+use super::batch::BatchAdmission;
 use super::pipeline::{
     request_of, Admission, Pipeline, PipelineDriver,
 };
@@ -77,6 +78,9 @@ pub struct SimServer {
     timing: RetrievalTiming,
     spec_enabled: bool,
     max_batch: usize,
+    /// Compute-token budget of one popped admission batch (mirrors the
+    /// engine's per-iteration prefill token cap).
+    batch_token_budget: usize,
     /// Admission context per engine sequence (pinned path + docs to
     /// insert after the prefill). Keyed by seq id so aborted-but-
     /// completing speculations still cache their KV.
@@ -164,6 +168,7 @@ impl SimServer {
             timing,
             spec_enabled,
             max_batch: cfg.engine.max_batch,
+            batch_token_budget: cfg.engine.max_prefill_tokens,
             admit_infos: std::collections::HashMap::new(),
             gen_docs: std::collections::HashMap::new(),
             trace,
@@ -380,8 +385,9 @@ impl SimServer {
         (sum / tr.doc_tokens.len().max(1)).max(1)
     }
 
-    /// Admit queued requests into free engine slots, then keep the engine
-    /// running.
+    /// Admit queued requests into free engine slots — a whole batch per
+    /// queue pop, with the members' H2D transfers coalesced into one
+    /// burst — then keep the engine running.
     fn pump(&mut self) {
         loop {
             let in_engine =
@@ -390,11 +396,16 @@ impl SimServer {
             {
                 break;
             }
+            let slots = self.max_batch - in_engine;
             let t0 = Instant::now();
-            let pending = self.pipeline.queue.pop().unwrap();
-            self.admit(pending);
+            let pending = self
+                .pipeline
+                .queue
+                .pop_batch(slots, self.batch_token_budget);
+            let popped = pending.len();
+            self.admit_batch(pending);
             self.sched_secs += t0.elapsed().as_secs_f64();
-            self.sched_ops += 1;
+            self.sched_ops += popped.max(1) as u64;
         }
         if self.inflight_epoch.is_none() {
             if let Some(plan) = self.engine.plan() {
@@ -409,47 +420,71 @@ impl SimServer {
         }
     }
 
-    fn admit(&mut self, pending: PendingRequest) {
-        let req = request_of(pending.id);
+    /// Admit one popped batch: every member runs admission stage A
+    /// (match → promote → pin → (α, β)) first, then the members'
+    /// promotion transfers coalesce into ONE PCIe burst
+    /// ([`BatchAdmission::seal`] — a single `transfer_time` call) that
+    /// rides on the batch's FIRST member as its `extra_time`, so the
+    /// charge lands exactly once, on the iteration that prefills the
+    /// batch head — never piling several batches' bursts onto one
+    /// iteration when the pump pops more than one budget-limited batch
+    /// back to back. With `max_batch = 1` this is exactly the
+    /// historical one-pop admission: a single member carrying its own
+    /// `transfer_time(bytes)`.
+    fn admit_batch(&mut self, pending: Vec<PendingRequest>) {
         let now = self.now();
-        if !self.pipeline.requests[req].is_live(pending.id) {
-            return; // stale generation
+        let mut batch = BatchAdmission::new();
+        let mut specs: Vec<SeqSpec> = Vec::new();
+        for p in pending {
+            let req = request_of(p.id);
+            if !self.pipeline.requests[req].is_live(p.id) {
+                continue; // stale generation: never admitted
+            }
+            let docs = self.gen_docs[&p.id].clone();
+            let docs_tokens: Vec<(DocId, usize)> = docs
+                .iter()
+                .map(|&d| (d, self.doc_tokens(req, d)))
+                .collect();
+            let tr = &self.trace.requests[req];
+            let request_tokens = tr.request_tokens;
+            let output_tokens = tr.output_tokens;
+            let is_final_docs = docs == tr.docs.as_slice();
+
+            let mut adm =
+                self.pipeline.admit_one(&docs_tokens, request_tokens);
+            let estimated_time =
+                self.driver.profile.estimate(adm.alpha, adm.beta);
+            adm.estimated_time = estimated_time;
+            // Policy updates for the matched (hit) nodes.
+            self.pipeline.touch_hits(&adm, estimated_time, now);
+
+            // Metrics: hit accounting against the request's final docs.
+            if is_final_docs {
+                self.pipeline
+                    .record_admission(req as u64, docs.len(), &adm);
+            }
+
+            specs.push(SeqSpec {
+                id: p.id,
+                alpha: adm.alpha,
+                beta: adm.beta,
+                output_tokens,
+                extra_time: 0.0,
+            });
+            batch.push(p.id, adm);
         }
-        let docs = self.gen_docs[&pending.id].clone();
-        let docs_tokens: Vec<(DocId, usize)> = docs
-            .iter()
-            .map(|&d| (d, self.doc_tokens(req, d)))
-            .collect();
-        let tr = &self.trace.requests[req];
-        let request_tokens = tr.request_tokens;
-        let output_tokens = tr.output_tokens;
-        let is_final_docs = docs == tr.docs.as_slice();
-
-        // Shared admission stage A: match → promote → pin → (α, β).
-        let (mut adm, extra_time) =
-            self.pipeline
-                .admit(&self.driver, &docs_tokens, request_tokens);
-        let estimated_time =
-            self.driver.profile.estimate(adm.alpha, adm.beta);
-        adm.estimated_time = estimated_time;
-        // Policy updates for the matched (hit) nodes.
-        self.pipeline.touch_hits(&adm, estimated_time, now);
-
-        // Metrics: hit accounting against the request's final docs.
-        if is_final_docs {
-            self.pipeline
-                .record_admission(req as u64, docs.len(), &adm);
+        // One coalesced H2D burst for the whole batch (§3.2 cache-hit
+        // loading), attached to the member prefilled first.
+        let burst = batch.seal(&self.driver);
+        if let Some(first) = specs.first_mut() {
+            first.extra_time = burst;
         }
-
-        let (alpha, beta) = (adm.alpha, adm.beta);
-        self.admit_infos.insert(pending.id, adm);
-        self.engine.admit(SeqSpec {
-            id: pending.id,
-            alpha,
-            beta,
-            output_tokens,
-            extra_time,
-        });
+        for spec in specs {
+            self.engine.admit(spec);
+        }
+        for (id, adm) in batch.into_members() {
+            self.admit_infos.insert(id, adm);
+        }
     }
 
     fn on_engine_done(&mut self, epoch: u64) {

@@ -130,7 +130,11 @@ impl TransferModel {
         }
     }
 
-    /// Seconds to move `bytes` one way.
+    /// Seconds to move `bytes` one way. One call = one DMA burst = one
+    /// setup latency: batched admission coalesces a whole batch's bytes
+    /// into a single call ([`crate::controller::BatchAdmission`]), so a
+    /// B-member batch saves `(B - 1) · latency_s` over per-request
+    /// transfers.
     pub fn transfer_time(&self, bytes: u64) -> f64 {
         if bytes == 0 {
             0.0
@@ -219,6 +223,26 @@ mod tests {
         // 1 GiB at 12 GB/s effective ≈ 89 ms.
         let one_gib = t.transfer_time(1 << 30);
         assert!((one_gib - 0.0895).abs() < 0.005, "{one_gib}");
+    }
+
+    /// The batched-admission win (ROADMAP "Batched H2D transfers"): a
+    /// coalesced burst pays the DMA setup once, and the saving is
+    /// exactly the (B − 1) setup latencies — bandwidth time is linear
+    /// in bytes either way.
+    #[test]
+    fn coalesced_burst_beats_serial_bursts() {
+        for t in [TransferModel::pcie4(), TransferModel::pcie5()] {
+            let (a, b, c) = (1u64 << 20, 3 << 20, 7 << 20);
+            let coalesced = t.transfer_time(a + b + c);
+            let serial = t.transfer_time(a)
+                + t.transfer_time(b)
+                + t.transfer_time(c);
+            assert!(coalesced < serial);
+            assert!(
+                (serial - coalesced - 2.0 * t.latency_s).abs() < 1e-12,
+                "saving is exactly two setup latencies"
+            );
+        }
     }
 
     #[test]

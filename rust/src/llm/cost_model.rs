@@ -260,6 +260,26 @@ mod tests {
         assert!(batch4 > single);
     }
 
+    /// Conformance-suite anchor: for every batch size ≥ 2, one batched
+    /// iteration over B cache-miss jobs is strictly cheaper than B
+    /// serialized singleton iterations (shared weight read + one
+    /// iteration overhead) — the engine-side half of the batched
+    /// admission win; the link-side half is
+    /// `kvcache::TransferModel`'s coalesced burst.
+    #[test]
+    fn batch_prefill_strictly_beats_serial_singletons() {
+        let cm = llama_a10g();
+        for b in [2usize, 4, 8] {
+            let jobs = vec![(0usize, 256usize); b];
+            let batched = cm.prefill_batch_time(&jobs);
+            let serial = b as f64 * cm.prefill_time(0, 256);
+            assert!(
+                batched < serial,
+                "batch {b}: {batched} !< serial {serial}"
+            );
+        }
+    }
+
     #[test]
     fn mistral_prefill_cheaper_kv_equal_compute() {
         // Same dense size => similar big-prefill time; Mistral's GQA KV

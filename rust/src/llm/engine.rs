@@ -109,7 +109,11 @@ impl Engine {
     }
 
     /// Admit a sequence for prefill (the controller's scheduler decides
-    /// admission order — see `sched::ReorderQueue`).
+    /// admission order — see `sched::ReorderQueue`). A batched
+    /// admission ([`crate::controller::batch::BatchAdmission`]) puts
+    /// its one coalesced H2D burst on its first member's `extra_time`
+    /// and zero on the rest, so the per-iteration sum below charges
+    /// each burst exactly once.
     pub fn admit(&mut self, seq: SeqSpec) {
         self.waiting.push_back(seq);
     }
@@ -450,6 +454,39 @@ mod tests {
         assert!(e.plan().is_none(), "no overlapping iterations");
         e.complete();
         assert!(e.plan().is_some());
+    }
+
+    /// A batched admission's coalesced burst rides on the first
+    /// member's `extra_time`: the iteration containing that member is
+    /// billed the burst exactly once, and zero-extra members add
+    /// nothing — so one charge per burst, never one per member.
+    #[test]
+    fn first_member_extra_charges_burst_once_per_iteration() {
+        let burst = 0.0371;
+        let mut plain = engine(4);
+        plain.admit(seq(1, 100, 1));
+        plain.admit(seq(2, 100, 1));
+        let base = plain.plan().unwrap().duration;
+
+        let mut charged = engine(4);
+        charged.admit(SeqSpec {
+            extra_time: burst,
+            ..seq(1, 100, 1)
+        });
+        charged.admit(seq(2, 100, 1));
+        let with_burst = charged.plan().unwrap().duration;
+        assert_eq!(
+            with_burst,
+            base + burst,
+            "burst billed exactly once for the whole batch"
+        );
+
+        // Later iterations carry no residue of the burst.
+        charged.complete();
+        charged.admit(seq(3, 100, 1));
+        charged.admit(seq(4, 100, 1));
+        let later = charged.plan().unwrap().duration;
+        assert_eq!(later, base, "burst not re-billed: {later} vs {base}");
     }
 
     #[test]

@@ -25,9 +25,14 @@ ragcache <command> [options]
 
 commands:
   serve      --port 7771 --model tiny-gqa --docs 256 [--artifacts DIR]
-             [--workers N]  (N concurrent connection handlers, default 4)
-             [--engines M]  (M engine-driver replicas, default 1)
-             [--shards K]   (K knowledge-tree shards, default = engines)
+             [--workers N]     (N concurrent connection handlers, default 4)
+             [--engines M]     (M engine-driver replicas, default 1)
+             [--shards K]      (K knowledge-tree shards, default = engines)
+             [--max-batch B]   (requests admitted per engine iteration,
+                                one coalesced H2D burst each; default 8,
+                                1 = unbatched)
+             [--batch-tokens T] (compute-token budget per admitted batch,
+                                default 16384)
   simulate   --system ragcache|vllm|sglang --dataset mmlu --rate 0.8
              --requests 500 [--config FILE] [--model NAME] [--seed N]
   info       show models, GPUs, datasets, artifact status
@@ -102,23 +107,19 @@ impl QueryHandler for RealHandler {
         query: &str,
         max_new: usize,
     ) -> Result<proto::QueryResult> {
-        let toks = self.tok.encode(query);
-        let resp = self.server.serve(
-            target_doc,
-            &toks,
-            max_new.clamp(1, 16),
-            &self.cfg,
-        )?;
-        Ok(proto::QueryResult {
-            id: resp.id,
-            docs: resp.docs,
-            docs_hit: resp.docs_hit,
-            cached_tokens: resp.cached_tokens,
-            computed_tokens: resp.computed_tokens,
-            ttft_ms: resp.ttft * 1e3,
-            total_ms: resp.total * 1e3,
-            text: self.tok.decode(&resp.output_tokens),
-        })
+        self.query_batch(&[(target_doc, query.to_string(), max_new)])
+            .pop()
+            .expect("one result per query")
+    }
+
+    /// Batched entry point: all members admit first, coalescing their
+    /// cache-hit transfers into one H2D burst
+    /// (`RealServer::serve_batch`), then prefill/decode in turn.
+    fn query_batch(
+        &mut self,
+        batch: &[(u32, String, usize)],
+    ) -> Vec<Result<proto::QueryResult>> {
+        self.server.serve_proto_batch(batch, &self.tok, &self.cfg)
     }
 
     fn stats(&self) -> proto::StatsResult {
@@ -181,6 +182,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let shards: usize = args
         .get_parse_or("shards", engines.max(1))
         .map_err(|e| anyhow!(e))?;
+    let default_opts = ServerOptions::default();
+    let max_batch: usize = args
+        .get_parse_or("max-batch", default_opts.max_batch)
+        .map_err(|e| anyhow!(e))?;
+    let batch_tokens: usize = args
+        .get_parse_or("batch-tokens", default_opts.batch_tokens)
+        .map_err(|e| anyhow!(e))?;
+    if max_batch == 0 {
+        return Err(anyhow!("--max-batch must be >= 1"));
+    }
+    if batch_tokens == 0 {
+        return Err(anyhow!("--batch-tokens must be >= 1"));
+    }
     if shards < engines.max(1) {
         // Engines drain shards routed shard % engines: with fewer
         // shards than engines the surplus engines would each load a
@@ -252,6 +266,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let opts = ServerOptions {
         workers,
         engines,
+        max_batch,
+        batch_tokens,
         estimator: Some(estimator),
         router: Some(router),
         ..ServerOptions::default()
@@ -281,7 +297,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     })?;
     println!(
         "ragcache serving on {} ({docs} docs, {workers} connection \
-         workers, {engines} engines, {shards} tree shards)",
+         workers, {engines} engines, {shards} tree shards, \
+         {max_batch}-request admission batches)",
         server.addr
     );
     println!("protocol: newline-delimited JSON; ops: query/stats/shutdown");

@@ -15,20 +15,28 @@
 //!                        (SharedReorderQueue each: §5.2 ordering and
 //!                         starvation bound hold per engine)
 //!                                 │              │              │
-//!                                 ▼              ▼              ▼
+//!                                 ▼ pop_batch    ▼ pop_batch    ▼
 //!                             engine 0       engine 1  …    engine M-1
 //!                        (each engine-driver thread owns its own
-//!                         QueryHandler; PJRT handles are not `Send`,
-//!                         so each handler is constructed *inside* its
-//!                         engine thread)
+//!                         QueryHandler and admits a BATCH per
+//!                         iteration: up to `max_batch` compatible
+//!                         requests popped together in §5.2 order —
+//!                         one bypass event, ≤ `batch_tokens` summed
+//!                         compute — and answered through
+//!                         QueryHandler::query_batch, whose admissions
+//!                         coalesce into one H2D burst
+//!                         (controller::batch::BatchAdmission). PJRT
+//!                         handles are not `Send`, so each handler is
+//!                         constructed *inside* its engine thread)
 //! ```
 //!
 //! Connection workers block on their own sockets only, so up to
 //! `workers` clients progress fully independently (a connection holds
 //! its worker for its lifetime; an idle-timeout reclaims workers from
 //! silent keep-alive clients). Each engine thread drains its own queue
-//! in cache-aware priority order; requests are routed to engines by
-//! knowledge-tree shard ([`ServerOptions::router`], folded through
+//! in cache-aware priority order, a batch per iteration; requests are
+//! routed to engines by knowledge-tree shard
+//! ([`ServerOptions::router`], folded through
 //! [`crate::sched::ShardRouter`]), so a shard's working set stays with
 //! one engine. `stats` requests fan out to every engine and the replies
 //! are merged. Shutdown is graceful: every queue is sealed against new
@@ -59,6 +67,26 @@ pub trait QueryHandler {
         max_new: usize,
     ) -> Result<proto::QueryResult>;
 
+    /// Execute the queries of one admission batch (popped together by
+    /// the engine driver, `(target_doc, query, max_new)` each),
+    /// returning exactly one result per member in order. The default
+    /// runs members sequentially through [`QueryHandler::query`];
+    /// batched handlers override it to admit every member first and
+    /// coalesce their cache-hit transfers into one H2D burst
+    /// ([`crate::controller::BatchAdmission`], e.g. via
+    /// [`crate::controller::real::RealServer::serve_batch`]).
+    fn query_batch(
+        &mut self,
+        batch: &[(u32, String, usize)],
+    ) -> Vec<Result<proto::QueryResult>> {
+        batch
+            .iter()
+            .map(|(doc, query, max_new)| {
+                self.query(*doc, query, *max_new)
+            })
+            .collect()
+    }
+
     /// Aggregate stats line. Contract for multi-engine deployments
     /// ([`Server::spawn_sharded`]): `requests`/`mean_ttft_ms`/`hit_rate`
     /// must cover only THIS handler's work (they are summed /
@@ -86,6 +114,14 @@ pub struct ServerOptions {
     /// Engine-driver threads (one per GPU/replica), each draining its
     /// own reorder queue. Requests route to engines by shard affinity.
     pub engines: usize,
+    /// Requests admitted per engine iteration (one batched queue pop,
+    /// counted as ONE §5.2 bypass event): the batch whose cache-hit
+    /// transfers coalesce into a single H2D burst. 1 reproduces the
+    /// one-request-per-iteration behavior bit-for-bit.
+    pub max_batch: usize,
+    /// Summed compute-token budget (the members' β estimates) of one
+    /// admitted batch; the first pick is always taken.
+    pub batch_tokens: usize,
     /// Cache-aware reordering of queued requests (§5.2). Takes effect
     /// only when an `estimator` is supplied; otherwise each queue is
     /// strict FIFO (equal priorities would reorder arbitrarily).
@@ -109,6 +145,8 @@ impl Default for ServerOptions {
         ServerOptions {
             workers: 4,
             engines: 1,
+            max_batch: 8,
+            batch_tokens: 16384,
             reorder: true,
             window: 16,
             estimator: None,
@@ -258,14 +296,24 @@ impl Server {
             }));
         }
 
-        // Engine drivers: each owns its handler and drains its queue.
+        // Engine drivers: each owns its handler and drains its queue a
+        // batch per iteration.
         let factory = Arc::new(factory);
+        let max_batch = opts.max_batch.max(1);
+        let batch_tokens = opts.batch_tokens.max(1);
         for engine in 0..engines {
             let queue = Arc::clone(&queues[engine]);
             let shutdown = Arc::clone(&shutdown);
             let factory = Arc::clone(&factory);
             handles.push(std::thread::spawn(move || {
-                engine_loop(engine, factory.as_ref(), &queue, &shutdown);
+                engine_loop(
+                    engine,
+                    factory.as_ref(),
+                    &queue,
+                    &shutdown,
+                    max_batch,
+                    batch_tokens,
+                );
             }));
         }
 
@@ -338,6 +386,8 @@ fn engine_loop<H, F>(
     factory: &F,
     jobs: &SharedReorderQueue<Job>,
     shutdown: &AtomicBool,
+    max_batch: usize,
+    batch_tokens: usize,
 ) where
     H: QueryHandler,
     F: Fn(usize) -> Result<H>,
@@ -369,41 +419,88 @@ fn engine_loop<H, F>(
             return;
         }
     };
+    // Answer a contiguous run of queries through the handler's batched
+    // entry point, pairing each response channel by position.
+    fn flush_queries<H: QueryHandler>(
+        handler: &mut H,
+        queries: &mut Vec<(u32, String, usize)>,
+        resps: &mut Vec<mpsc::Sender<Response>>,
+    ) {
+        if queries.is_empty() {
+            return;
+        }
+        let results = handler.query_batch(queries);
+        debug_assert_eq!(
+            results.len(),
+            queries.len(),
+            "query_batch answers every member"
+        );
+        for (resp, result) in resps.drain(..).zip(results) {
+            let response = match result {
+                Ok(r) => Response::Query(r),
+                Err(e) => Response::Error {
+                    message: format!("query failed: {e}"),
+                },
+            };
+            // A worker that gave up (connection died) is fine.
+            let _ = resp.send(response);
+        }
+        queries.clear();
+    }
     loop {
-        match jobs.pop_timeout(Duration::from_millis(20)) {
-            Some((_pending, job)) => {
-                let response = match job.req {
-                    Request::Query {
-                        target_doc,
-                        query,
-                        max_new,
-                    } => match handler.query(target_doc, &query, max_new) {
-                        Ok(result) => Response::Query(result),
-                        Err(e) => Response::Error {
-                            message: format!("query failed: {e}"),
-                        },
-                    },
-                    Request::Stats => Response::Stats(handler.stats()),
-                    // Shutdown never reaches the queue; answered inline
-                    // by the connection worker.
-                    Request::Shutdown => Response::Ok,
-                };
-                // A worker that gave up (connection died) is fine.
-                let _ = job.resp.send(response);
+        let popped = jobs.pop_batch_timeout(
+            Duration::from_millis(20),
+            max_batch,
+            batch_tokens,
+        );
+        if popped.is_empty() {
+            if shutdown.load(Ordering::SeqCst) {
+                // Two-phase graceful drain: seal first so no push
+                // can slip in behind the emptiness check (a refused
+                // push is answered "server shutting down" by its
+                // worker), then finish everything already accepted.
+                jobs.seal();
+                if jobs.is_empty() {
+                    break;
+                }
             }
-            None => {
-                if shutdown.load(Ordering::SeqCst) {
-                    // Two-phase graceful drain: seal first so no push
-                    // can slip in behind the emptiness check (a refused
-                    // push is answered "server shutting down" by its
-                    // worker), then finish everything already accepted.
-                    jobs.seal();
-                    if jobs.is_empty() {
-                        break;
-                    }
+            continue;
+        }
+        // One engine iteration: contiguous runs of queries batch
+        // through the handler's batched entry point (whose admissions
+        // coalesce into one H2D burst); stats snapshots and shutdown
+        // acks answer in their popped position, so within a batch the
+        // §5.2 pop order stays the observable answer order (under
+        // reordering, a stats job's infinite priority pops it at the
+        // batch front anyway).
+        let mut queries: Vec<(u32, String, usize)> = Vec::new();
+        let mut query_resp: Vec<mpsc::Sender<Response>> = Vec::new();
+        for (_pending, job) in popped {
+            match job.req {
+                Request::Query {
+                    target_doc,
+                    query,
+                    max_new,
+                } => {
+                    queries.push((target_doc, query, max_new));
+                    query_resp.push(job.resp);
+                }
+                Request::Stats => {
+                    flush_queries(
+                        &mut handler,
+                        &mut queries,
+                        &mut query_resp,
+                    );
+                    let _ = job.resp.send(Response::Stats(handler.stats()));
+                }
+                // Shutdown never reaches the queue; answered inline
+                // by the connection worker.
+                Request::Shutdown => {
+                    let _ = job.resp.send(Response::Ok);
                 }
             }
         }
+        flush_queries(&mut handler, &mut queries, &mut query_resp);
     }
 }
 
