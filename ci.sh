@@ -34,21 +34,38 @@ fi
 echo "== batched admission suite (--release) =="
 cargo test --release --test batched_admission -q
 
+# The session-lifecycle suite drives the event-driven serving API
+# (staged retrieval + speculative prefill) with real wall-clock
+# overlap, so it too wants --release schedules. staged_search pins the
+# retrieval invariants speculation relies on.
+echo "== session lifecycle + staged search suites (--release) =="
+cargo test --release --test session_lifecycle -q
+cargo test --release --test staged_search -q
+
 # Concurrent serving matrix (PJRT-free): the multi-worker/multi-engine
 # TCP runtime over the sharded cache with a synthetic engine, swept
-# across batched (--max-batch 8) and unbatched (--max-batch 1)
-# admission. Runs everywhere; exits non-zero on any regression, keeping
-# the concurrent paths exercised even without artifacts.
+# across batched/unbatched admission AND blocking/event-driven serving
+# (--speculate off|on). Runs everywhere; exits non-zero on any
+# regression, keeping the concurrent paths exercised even without
+# artifacts.
 echo "== concurrent serving matrix (PJRT-free) =="
 for w in 1 4; do
     for e in 1 2; do
         for b in 1 8; do
-            echo "-- serving_matrix --workers $w --engines $e --max-batch $b --"
-            cargo run --release --example serving_matrix -- \
-                --workers "$w" --engines "$e" --max-batch "$b"
+            for s in off on; do
+                echo "-- serving_matrix --workers $w --engines $e --max-batch $b --speculate $s --"
+                cargo run --release --example serving_matrix -- \
+                    --workers "$w" --engines "$e" --max-batch "$b" \
+                    --speculate "$s"
+            done
         done
     done
 done
+
+# Acceptance comparison (retrieval-heavy, cold cache): speculation must
+# strictly lower the summed TTFT vs the blocking path.
+echo "== speculation TTFT comparison =="
+cargo run --release --example serving_matrix -- --compare-speculation
 
 # The PJRT-backed e2e example needs AOT artifacts (make artifacts, which
 # requires the Python/JAX toolchain). It exits non-zero on any serving
@@ -66,6 +83,10 @@ if [ -f artifacts/manifest.json ]; then
             done
         done
     done
+    # Real-PJRT event-driven serving: sessions + speculative prefills.
+    echo "-- e2e_serving --workers 4 --engines 2 --speculate on --"
+    cargo run --release --example e2e_serving -- \
+        --workers 4 --engines 2 --speculate on
 else
     echo "warn: artifacts/ not built, skipping e2e serving example"
 fi

@@ -24,7 +24,9 @@
 //!      `... --example e2e_serving -- --workers 4 --engines 2`
 
 use ragcache::cli::Args;
-use ragcache::controller::real::{RealConfig, RealServer};
+use ragcache::controller::real::{
+    RealConfig, RealServer, SessionProtoBridge,
+};
 use ragcache::embed::EmbeddingModel;
 use ragcache::llm::ByteTokenizer;
 use ragcache::runtime::{ArtifactManifest, PjrtModel};
@@ -91,6 +93,11 @@ fn main() -> anyhow::Result<()> {
     if max_batch == 0 {
         anyhow::bail!("--max-batch must be >= 1");
     }
+    let speculate = match args.get_or("speculate", "off") {
+        "on" => true,
+        "off" => false,
+        other => anyhow::bail!("--speculate expects on|off, got {other}"),
+    };
 
     let dir = Path::new("artifacts");
     if !dir.join("manifest.json").exists() {
@@ -98,16 +105,26 @@ fn main() -> anyhow::Result<()> {
         std::process::exit(1);
     }
     if workers > 0 {
-        return serve_tcp_matrix(dir, workers, engines.max(1), max_batch);
+        return serve_tcp_matrix(
+            dir,
+            workers,
+            engines.max(1),
+            max_batch,
+            speculate,
+        );
     }
     serve_direct(dir)
 }
 
 /// PJRT-backed handler for the TCP mode (each engine replica owns one).
+/// Session plumbing and stats delegate to the library's
+/// [`SessionProtoBridge`] / `RealServer::proto_stats` — the same code
+/// the `ragcache serve` binary's handler runs.
 struct TcpHandler {
     server: RealServer,
     cfg: RealConfig,
     tok: ByteTokenizer,
+    bridge: SessionProtoBridge,
 }
 
 impl QueryHandler for TcpHandler {
@@ -133,18 +150,46 @@ impl QueryHandler for TcpHandler {
         self.server.serve_proto_batch(batch, &self.tok, &self.cfg)
     }
 
+    /// Non-blocking entry for the `--speculate` event loop: real PJRT
+    /// speculative prefills overlapped with the staged search.
+    fn submit_session(
+        &mut self,
+        ticket: u64,
+        target_doc: u32,
+        query: &str,
+        max_new: usize,
+    ) -> Option<anyhow::Result<proto::QueryResult>> {
+        self.bridge.submit(
+            &mut self.server,
+            ticket,
+            target_doc,
+            query,
+            max_new,
+            &self.tok,
+            &self.cfg,
+        )
+    }
+
+    fn poll_sessions(
+        &mut self,
+        timeout: std::time::Duration,
+    ) -> Vec<ragcache::server::SessionDone> {
+        self.bridge
+            .poll(&mut self.server, timeout, &self.tok, &self.cfg)
+            .into_iter()
+            .map(|(ticket, result)| ragcache::server::SessionDone {
+                ticket,
+                result,
+            })
+            .collect()
+    }
+
+    fn sessions_in_flight(&self) -> usize {
+        self.server.in_flight_sessions()
+    }
+
     fn stats(&self) -> proto::StatsResult {
-        let s = self.server.stats();
-        let c = self.server.cache().counters();
-        proto::StatsResult {
-            requests: s.requests,
-            mean_ttft_ms: s.mean_ttft_s * 1e3,
-            hit_rate: s.hit_rate,
-            engines: 1,
-            tree_inserts: c.inserts,
-            tree_gpu_evictions: c.gpu_evictions,
-            tree_host_evictions: c.host_evictions,
-        }
+        self.server.proto_stats()
     }
 }
 
@@ -154,11 +199,16 @@ fn serve_tcp_matrix(
     workers: usize,
     engines: usize,
     max_batch: usize,
+    speculate: bool,
 ) -> anyhow::Result<()> {
     let manifest = ArtifactManifest::load(dir)?;
     let mm = manifest.model("tiny-gqa")?;
     let kv_floats = mm.arch.kv_floats_per_token();
-    let cfg = RealConfig::default();
+    let cfg = RealConfig {
+        speculate,
+        spec_pool: max_batch,
+        ..RealConfig::default()
+    };
     // One sharded tree (one shard per engine) shared by all replicas.
     let cache = RealServer::build_sharded_cache(kv_floats, &cfg, engines);
 
@@ -183,12 +233,14 @@ fn serve_tcp_matrix(
         workers,
         engines,
         max_batch,
+        speculate,
         estimator: Some(estimator),
         router: Some(router),
         ..ServerOptions::default()
     };
     let dir_buf = dir.to_path_buf();
     let engine_cache = cache.clone();
+    let handler_cfg = cfg.clone();
     let server = Server::spawn_sharded(0, opts, move |engine| {
         let manifest = ArtifactManifest::load(&dir_buf)?;
         let model = PjrtModel::load(manifest.model("tiny-gqa")?)?;
@@ -203,14 +255,16 @@ fn serve_tcp_matrix(
         log::info!("engine {engine} ready");
         Ok(TcpHandler {
             server: rs,
-            cfg: RealConfig::default(),
+            cfg: handler_cfg.clone(),
             tok: ByteTokenizer::new(),
+            bridge: SessionProtoBridge::new(),
         })
     })?;
     let addr = server.addr;
     println!(
         "e2e TCP matrix on {addr}: {workers} workers, {engines} engines, \
-         {max_batch}-request batches"
+         {max_batch}-request batches, speculation {}",
+        if speculate { "on" } else { "off" }
     );
 
     // The direct-mode workload, split across parallel clients.

@@ -19,6 +19,16 @@
 //! (`transfer_time(bytes)`), which is what keeps `--max-batch 1`
 //! bit-identical to the unbatched pipeline.
 //!
+//! The batch covers BOTH link phases of an engine iteration: the
+//! admit-side loading burst ([`push`](BatchAdmission::push) +
+//! [`seal`](BatchAdmission::seal)) and, once the members' prefills have
+//! run, the commit-side write-back burst — the swap-outs their
+//! `insert_child` calls perform while caching the newly computed doc KV
+//! ([`push_commit`](BatchAdmission::push_commit) +
+//! [`seal_commit`](BatchAdmission::seal_commit)). Each phase is one DMA
+//! setup plus one burst at link bandwidth, charged exactly once per
+//! batch.
+//!
 //! Failure semantics (all-or-per-request fallback): a member whose GPU
 //! admission fails mid-batch releases its own pins and is reported in
 //! [`BatchAdmission::failed`] for re-queueing; the members admitted
@@ -45,6 +55,13 @@ pub struct BatchAdmission {
     transfers: Transfers,
     /// The one-per-batch link charge, set by [`BatchAdmission::seal`].
     sealed_time: Option<f64>,
+    /// Commit-phase byte movement (the members' `insert_child`
+    /// swap-outs), folded in after the prefills run and charged as its
+    /// own one-per-batch burst (ROADMAP "commit-side burst batching").
+    commit_transfers: Transfers,
+    /// The one-per-batch commit-burst charge, set by
+    /// [`BatchAdmission::seal_commit`].
+    commit_sealed: Option<f64>,
 }
 
 impl BatchAdmission {
@@ -107,6 +124,47 @@ impl BatchAdmission {
     /// [`seal`]: BatchAdmission::seal
     pub fn transfer_time(&self) -> f64 {
         self.sealed_time.unwrap_or(0.0)
+    }
+
+    /// Fold one member's commit-phase byte movement (the `Transfers` its
+    /// [`commit`](super::pipeline::CacheService::commit) reported —
+    /// swap-outs made while inserting the newly computed doc KV) into
+    /// the batch's commit burst.
+    pub fn push_commit(&mut self, transfers: Transfers) {
+        debug_assert!(
+            self.commit_sealed.is_none(),
+            "commit burst already sealed"
+        );
+        self.commit_transfers.merge(transfers);
+    }
+
+    /// Close the commit phase and charge its coalesced burst ONCE
+    /// through the driver's link model, returning the burst seconds.
+    /// Independent of [`seal`](BatchAdmission::seal): admit-side
+    /// loading and commit-side write-back are two link bursts per
+    /// batch, each charged exactly once. Idempotent.
+    pub fn seal_commit(&mut self, driver: &dyn PipelineDriver) -> f64 {
+        if self.commit_sealed.is_none() {
+            self.commit_sealed =
+                Some(driver.transfer_time(self.commit_bytes()));
+        }
+        self.commit_sealed.expect("just sealed")
+    }
+
+    /// The one-per-batch commit-burst charge (0.0 before
+    /// [`seal_commit`](BatchAdmission::seal_commit)).
+    pub fn commit_transfer_time(&self) -> f64 {
+        self.commit_sealed.unwrap_or(0.0)
+    }
+
+    /// Coalesced commit-phase byte movement, h2g/g2h split.
+    pub fn commit_transfers(&self) -> Transfers {
+        self.commit_transfers
+    }
+
+    /// Coalesced commit-phase bytes (both directions).
+    pub fn commit_bytes(&self) -> u64 {
+        self.commit_transfers.h2g_bytes + self.commit_transfers.g2h_bytes
     }
 
     /// Coalesced byte movement of the whole batch, h2g/g2h split.
@@ -235,6 +293,48 @@ mod tests {
         assert_eq!(b.len(), 2);
         assert_eq!(b.failed(), &[2]);
         assert_eq!(b.total_bytes(), 2048 + 512, "no loss, no double-charge");
+    }
+
+    /// Satellite (commit-side burst batching): the members' commit-time
+    /// swap-outs coalesce into ONE write-back burst per batch, charged
+    /// once and independently of the admit-side burst.
+    #[test]
+    fn commit_burst_coalesces_and_charges_once() {
+        let d = LinkDriver;
+        let mut b = BatchAdmission::new();
+        b.push(1, adm(4096, 0));
+        b.push(2, adm(8192, 0));
+        b.seal(&d);
+        // Prefills ran; each member's commit reports its swap-outs.
+        b.push_commit(Transfers {
+            h2g_bytes: 0,
+            g2h_bytes: 1 << 20,
+        });
+        b.push_commit(Transfers {
+            h2g_bytes: 0,
+            g2h_bytes: 3 << 20,
+        });
+        assert_eq!(b.commit_transfer_time(), 0.0, "unsealed is zero");
+        let t1 = b.seal_commit(&d);
+        let t2 = b.seal_commit(&d);
+        assert_eq!(t1, t2, "re-sealing never double-charges");
+        assert_eq!(b.commit_bytes(), 4 << 20);
+        assert_eq!(t1, d.transfer_time(4 << 20));
+        // One burst, not one per member.
+        let serial = d.transfer_time(1 << 20) + d.transfer_time(3 << 20);
+        assert!(t1 < serial, "{t1} vs serial {serial}");
+        // The admit burst is untouched by the commit phase.
+        assert_eq!(b.transfer_time(), d.transfer_time(4096 + 8192));
+        assert_eq!(b.total_bytes(), 4096 + 8192);
+    }
+
+    #[test]
+    fn empty_commit_phase_is_free() {
+        let d = LinkDriver;
+        let mut b = BatchAdmission::new();
+        b.push(1, adm(100, 0));
+        b.seal(&d);
+        assert_eq!(b.seal_commit(&d), 0.0, "no commit bytes, no charge");
     }
 
     #[test]

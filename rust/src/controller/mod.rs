@@ -3,7 +3,8 @@
 //! Orchestrates: staged vector retrieval → knowledge-tree lookup →
 //! cache-aware admission → LLM engine iterations → tree insertion and
 //! policy updates, with dynamic speculative pipelining overlapping the
-//! first two against the last three.
+//! first two against the last three — in the simulator AND in the real
+//! serving path, where requests run as event-driven sessions.
 //!
 //! ```text
 //!              requests (trace / TCP connections)
@@ -11,41 +12,66 @@
 //!            ┌──────────────┴───────────────┐
 //!            ▼                              ▼
 //!   sim_server (driver)             real (driver)
-//!   virtual clock, analytic         wall clock, PJRT prefill,
-//!   cost model, batching engine     real vector retrieval
+//!   virtual clock, analytic         wall clock, PJRT prefill;
+//!   cost model, batching engine     sessions: submit → poll_sessions
 //!            │                              │
-//!            └──────────────┬───────────────┘
-//!                           ▼
-//!              pipeline (shared core)
-//!     DSP decisions · reorder-queue admission (batched pops:
-//!     batch::BatchAdmission coalesces the members' promotions
-//!     into ONE H2D burst charged once per engine iteration) ·
-//!     ShardedCacheService ──► K × CacheService shards
-//!       (route by first doc)   tree match → promote → pin → (α,β)
-//!                              → commit/release · metrics hooks
+//!            │              retrieval_service (thread pool)
+//!            │              ticks VectorIndex::staged_search,
+//!            │              pushes StageReady per stage ──┐
+//!            │                              │             │
+//!            └──────────────┬───────────────┘             │
+//!                           ▼                             ▼
+//!              pipeline (shared core)          session (lifecycle)
+//!     DSP decisions · reorder-queue            Submitted → Retrieving
+//!     admission (batched pops:                 → SpeculativePrefill →
+//!     batch::BatchAdmission coalesces          Admitted → Prefilled →
+//!     admit-side promotions into ONE           Decoding → Done/Failed;
+//!     H2D burst AND commit-side                SessionTable runs Alg. 2
+//!     insert swap-outs into ONE                per StageReady: start /
+//!     write-back burst, each charged           cancel speculations
+//!     once per engine iteration) ·             (pin-only admissions),
+//!     ShardedCacheService ──► K ×              promote on final match
+//!       CacheService shards                    or fall back to the
+//!       (route by first doc)                   blocking batched path
+//!       match → promote → pin → (α,β)
+//!       → commit/release · metrics hooks
 //!                           │
 //!                           ▼
 //!        tree / kvcache / policy / sched substrates
 //! ```
 //!
-//! [`pipeline`] owns the per-request state machine shared by both
-//! drivers; [`sim_server`] replays paper-scale traces against the
-//! virtual clock, and the PJRT-backed [`real`] server (used by
-//! `examples/e2e_serving.rs` and the concurrent TCP front-end in
-//! [`crate::server`]) drives the identical logic in real time.
+//! [`pipeline`] owns the per-request admission state machine shared by
+//! both drivers; [`session`] owns the request *lifecycle* state machine
+//! of the event-driven API and [`retrieval_service`] feeds it staged
+//! search results from a dedicated thread pool. [`sim_server`] replays
+//! paper-scale traces against the virtual clock, and the PJRT-backed
+//! [`real`] server (used by `examples/e2e_serving.rs` and the
+//! concurrent TCP front-end in [`crate::server`]) drives the identical
+//! logic in real time — blocking (`--speculate off`, bit-identical to
+//! the pre-session batched path) or event-driven (`--speculate on`).
 
 pub mod batch;
 pub mod fault;
 pub mod pipeline;
 pub mod real;
 pub mod retrieval;
+pub mod retrieval_service;
+pub mod session;
 pub mod shard;
 pub mod sim_server;
 
 pub use batch::BatchAdmission;
 pub use pipeline::{
-    Admission, CacheService, Pipeline, PipelineDriver, RequestState,
+    Admission, CacheService, CommitOutcome, Pipeline, PipelineDriver,
+    RequestState,
 };
 pub use retrieval::{RetrievalTiming, StagePlan, StagedRetrieval};
+pub use retrieval_service::{
+    RetrievalConfig, RetrievalService, RetrievalTask, StageReady,
+};
+pub use session::{
+    FinishPath, RequestSession, SessionEvent, SessionId, SessionPhase,
+    SessionTable, SpecTotals, SpecWork, StageStep,
+};
 pub use shard::ShardedCacheService;
 pub use sim_server::{SimOutcome, SimServer};

@@ -97,6 +97,22 @@ impl Admission {
     }
 }
 
+/// Result of admission stage B ([`CacheService::commit`]): how many of
+/// the newly computed documents were inserted, and the byte movement the
+/// insertions performed (eviction swap-outs making room). Batched
+/// callers coalesce the `transfers` of a whole batch into one
+/// write-back burst via
+/// [`BatchAdmission::push_commit`](super::batch::BatchAdmission::push_commit)
+/// and charge it once.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CommitOutcome {
+    /// Documents actually inserted (insertion stops at the first doc
+    /// that cannot fit — the transient oversized case).
+    pub inserted: usize,
+    /// Byte movement of the insertions, h2g/g2h split.
+    pub transfers: Transfers,
+}
+
 /// Thread-safe knowledge-tree service: the [`KnowledgeTree`] plus its
 /// `TierAllocator` accounting behind one interior lock, shared between
 /// connection handlers, the engine driver and administrative tasks.
@@ -245,31 +261,34 @@ impl CacheService {
     /// along it, refreshing policy stats (`was_cached = false`). In real
     /// mode `payloads[i]` carries the KV rows of `unmatched[i]`.
     ///
-    /// Returns the number of documents actually inserted (insertion stops
-    /// at the first doc that cannot fit — the transient oversized case).
+    /// The returned [`CommitOutcome`] reports the insertion count AND
+    /// the byte movement the insertions performed (eviction swap-outs
+    /// making room — real link traffic, including the work done before
+    /// a mid-sequence stop). Batched callers coalesce a whole batch's
+    /// commit transfers into one write-back burst and charge it once
+    /// ([`BatchAdmission::seal_commit`](super::batch::BatchAdmission)).
     pub fn commit(
         &self,
         adm: &Admission,
         estimated_time: f64,
         now: f64,
         payloads: Option<Vec<KvPayload>>,
-    ) -> usize {
+    ) -> CommitOutcome {
         self.with(|tree| {
             tree.unpin(&adm.path);
             let mut parent =
                 adm.path.last().copied().unwrap_or(tree.root());
-            let mut inserted = 0usize;
+            let mut out = CommitOutcome::default();
             for (i, &(doc, tokens)) in adm.unmatched.iter().enumerate() {
                 let payload =
                     payloads.as_ref().and_then(|ps| ps.get(i).cloned());
-                // Commit-time byte movement (insert_child's Transfers)
-                // is deliberately not charged as per-request PCIe time
-                // yet: only the admit-path promote feeds
-                // `Admission::transfer_bytes`. Swap-out totals still
-                // land in the tree counters; charging commits per batch
-                // is the ROADMAP "batched H2D transfers" item.
-                match tree.insert_child(parent, doc, tokens, payload) {
-                    (_, Some(id)) => {
+                let (transfers, node) =
+                    tree.insert_child(parent, doc, tokens, payload);
+                // A failed insert's partial work is still real byte
+                // movement — merge before deciding to stop.
+                out.transfers.merge(transfers);
+                match node {
+                    Some(id) => {
                         tree.on_access(
                             id,
                             &AccessCtx {
@@ -282,12 +301,12 @@ impl CacheService {
                             },
                         );
                         parent = id;
-                        inserted += 1;
+                        out.inserted += 1;
                     }
-                    (_, None) => break, // does not fit: stays transient
+                    None => break, // does not fit: stays transient
                 }
             }
-            inserted
+            out
         })
     }
 
@@ -440,10 +459,10 @@ impl Pipeline {
         estimated_time: f64,
         now: f64,
         payloads: Option<Vec<KvPayload>>,
-    ) -> usize {
+    ) -> CommitOutcome {
         match &self.cache {
             Some(c) => c.commit(adm, estimated_time, now, payloads),
-            None => 0,
+            None => CommitOutcome::default(),
         }
     }
 
@@ -586,8 +605,8 @@ mod tests {
         assert_eq!(adm.alpha, 0);
         assert_eq!(adm.beta, 16 + 16 + 8);
         assert_eq!(adm.unmatched, vec![(1, 16), (2, 16)]);
-        let inserted = svc.commit(&adm, 0.01, 1.0, None);
-        assert_eq!(inserted, 2);
+        let out = svc.commit(&adm, 0.01, 1.0, None);
+        assert_eq!(out.inserted, 2);
         svc.check_invariants();
         assert_eq!(svc.pinned_nodes(), 0, "commit released all pins");
 
@@ -600,6 +619,31 @@ mod tests {
         svc.touch_hits(&adm2, 0.005, 2.0);
         svc.commit(&adm2, 0.005, 2.0, None);
         assert_eq!(svc.pinned_nodes(), 0);
+        svc.check_invariants();
+    }
+
+    /// Satellite (commit-side burst batching): commit now REPORTS the
+    /// byte movement its insertions perform, so batched callers can
+    /// charge it as one write-back burst instead of losing it.
+    #[test]
+    fn commit_reports_eviction_transfers() {
+        let svc = service(16, 1024); // GPU holds exactly one 16-token doc
+        let a = svc.admit(&[(1, 16)], 4);
+        let out = svc.commit(&a, 0.01, 1.0, None);
+        assert_eq!(out.inserted, 1);
+        assert_eq!(
+            out.transfers,
+            Transfers::default(),
+            "empty tier: insertion moved nothing"
+        );
+        let b = svc.admit(&[(2, 16)], 4);
+        let out = svc.commit(&b, 0.01, 2.0, None);
+        assert_eq!(out.inserted, 1);
+        assert!(
+            out.transfers.g2h_bytes > 0,
+            "inserting doc 2 swapped doc 1 to host: {:?}",
+            out.transfers
+        );
         svc.check_invariants();
     }
 
@@ -626,7 +670,7 @@ mod tests {
         assert_eq!(adm.beta, 160);
         assert_eq!(adm.matched_docs, 0);
         assert_eq!(extra, 0.0);
-        assert_eq!(p.commit_prefill(&adm, 0.1, 0.0, None), 0);
+        assert_eq!(p.commit_prefill(&adm, 0.1, 0.0, None).inserted, 0);
         assert_eq!(p.queue_lengths(&[3, 4], 150, 10), (0, 160));
     }
 

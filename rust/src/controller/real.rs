@@ -13,6 +13,10 @@
 
 use super::batch::BatchAdmission;
 use super::pipeline::{Admission, Pipeline, PipelineDriver};
+use super::retrieval_service::{
+    RetrievalConfig, RetrievalService, RetrievalTask, StageReady,
+};
+use super::session::{FinishPath, SessionTable, SpecTotals, SpecWork};
 use super::shard::ShardedCacheService;
 use crate::embed::EmbeddingModel;
 use crate::kvcache::{KvPayload, PageSpec};
@@ -21,10 +25,14 @@ use crate::metrics::Recorder;
 use crate::policy::make_policy;
 use crate::runtime::PjrtModel;
 use crate::sim::{Clock, RealClock};
-use crate::tree::KnowledgeTree;
+use crate::tree::{KnowledgeTree, Transfers};
 use crate::util::Rng;
 use crate::vectordb::VectorIndex;
 use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
 
 /// Real-mode server configuration.
 #[derive(Debug, Clone)]
@@ -39,6 +47,22 @@ pub struct RealConfig {
     pub chunk: usize,
     /// Query-embedding noise (0 = queries hit their target exactly).
     pub query_noise: f64,
+    /// Dynamic speculative pipelining (§5.3) on the real path: retrieve
+    /// on the staged thread pool and overlap speculative prefills with
+    /// the search. `false` serves through the blocking PR 3 batched
+    /// path, bit for bit.
+    pub speculate: bool,
+    /// Stages per staged search (`--stages`).
+    pub stages: usize,
+    /// Retrieval thread-pool size (`--retrieval-threads`).
+    pub retrieval_threads: usize,
+    /// Wall-clock pacing per retrieval stage, seconds — stands in for
+    /// the per-stage latency of a billion-scale index (see
+    /// [`RetrievalService`]'s module docs).
+    pub stage_latency_s: f64,
+    /// Algorithm 2's `max_prefill_bs`: concurrent speculative prefills
+    /// the engine tolerates.
+    pub spec_pool: usize,
 }
 
 impl Default for RealConfig {
@@ -51,6 +75,11 @@ impl Default for RealConfig {
             policy: crate::config::PolicyKind::Pgdsf,
             chunk: 64,
             query_noise: 0.02,
+            speculate: false,
+            stages: 4,
+            retrieval_threads: 2,
+            stage_latency_s: 0.002,
+            spec_pool: 4,
         }
     }
 }
@@ -61,6 +90,8 @@ pub struct ServingStats {
     pub requests: usize,
     pub mean_ttft_s: f64,
     pub hit_rate: f64,
+    /// Speculation counters (zero when `speculate` is off).
+    pub spec: SpecTotals,
 }
 
 /// One member of a batched serve call ([`RealServer::serve_batch`]).
@@ -122,17 +153,56 @@ impl PipelineDriver for RealDriver {
     }
 }
 
+/// Output of one chunked prefill: the grown KV buffer, where the new
+/// rows start, the final logits and the measured seconds.
+struct PrefillOut {
+    kv: Vec<f32>,
+    kv_before: usize,
+    logits: Vec<f32>,
+    prefill_secs: f64,
+}
+
+/// The speculative prefill artifact carried by a live session: the
+/// pinned (uncommitted) admission plus everything the promotion needs
+/// to deliver without recomputing.
+struct SpecArtifact {
+    adm: Admission,
+    out: PrefillOut,
+}
+
+/// Per-session request context while retrieval is in flight.
+struct SpecPending {
+    query_tokens: Vec<i32>,
+    max_new: usize,
+    t_arrive: f64,
+}
+
+/// The session-serving runtime: retrieval pool, stage-event channel and
+/// the lifecycle table. Created lazily on the first speculative call.
+struct SpecRuntime {
+    service: RetrievalService,
+    events: mpsc::Receiver<StageReady>,
+    table: SessionTable<SpecArtifact>,
+    pending: HashMap<u64, SpecPending>,
+    /// Sessions that died at submit time (retrieval pool refused the
+    /// task); drained into the next `poll_sessions` answer so no waiter
+    /// ever hangs on a session that cannot produce stage events.
+    dead_on_submit: Vec<u64>,
+}
+
 /// The real-mode serving stack.
 pub struct RealServer {
     model: PjrtModel,
     pipeline: Pipeline,
     driver: RealDriver,
-    index: Box<dyn VectorIndex>,
+    index: Arc<dyn VectorIndex>,
     em: EmbeddingModel,
     /// Token ids of each knowledge document.
     doc_tokens: Vec<Vec<i32>>,
     rng: Rng,
     next_id: u64,
+    /// Session runtime for the speculative (event-driven) path.
+    spec: Option<SpecRuntime>,
 }
 
 impl RealServer {
@@ -220,11 +290,12 @@ impl RealServer {
             driver: RealDriver {
                 clock: RealClock::new(),
             },
-            index,
+            index: Arc::from(index),
             em,
             doc_tokens,
             rng: Rng::new(0xE2E),
             next_id: 0,
+            spec: None,
         })
     }
 
@@ -242,6 +313,11 @@ impl RealServer {
             requests: r.len(),
             mean_ttft_s: r.ttft().mean(),
             hit_rate: r.hit_rate(),
+            spec: self
+                .spec
+                .as_ref()
+                .map(|rt| rt.table.totals())
+                .unwrap_or_default(),
         }
     }
 
@@ -304,20 +380,25 @@ impl RealServer {
 
     /// Serve a batch admitted together — the engine-driver loop pops up
     /// to `--max-batch` compatible requests per iteration and hands them
-    /// here. Every member retrieves and runs admission stage A FIRST, so
-    /// the members' cache-hit promotions coalesce into one H2D burst via
-    /// [`BatchAdmission`] (charged once; the real driver's transfers are
-    /// in-process copies already folded into measured latency, so the
-    /// charge is 0 s — but the accounting path is the simulation's,
-    /// which is what the conformance tests pin). Then each member
-    /// prefills, commits and decodes. A member whose prefill fails
-    /// releases its own pins and reports its own error; the rest of the
-    /// batch proceeds (per-request fallback).
+    /// here. With `cfg.speculate` the batch runs through the
+    /// event-driven session lifecycle (staged retrieval overlapped with
+    /// speculative prefill, §5.3); otherwise every member retrieves and
+    /// runs admission stage A FIRST, so the members' cache-hit
+    /// promotions coalesce into one H2D burst via [`BatchAdmission`]
+    /// (charged once; the real driver's transfers are in-process copies
+    /// already folded into measured latency, so the charge is 0 s — but
+    /// the accounting path is the simulation's, which is what the
+    /// conformance tests pin). Then each member prefills, commits and
+    /// decodes — the members' commit swap-outs sealing into one
+    /// write-back burst — with per-request fallback on prefill error.
     pub fn serve_batch(
         &mut self,
         reqs: &[BatchRequest],
         cfg: &RealConfig,
     ) -> Vec<Result<RealResponse>> {
+        if cfg.speculate {
+            return self.serve_batch_speculative(reqs, cfg);
+        }
         // Phase 1: per-member retrieval (Rust vector index — real
         // search) + the admission inputs.
         struct Prep {
@@ -377,10 +458,14 @@ impl RealServer {
         // by id, never positionally: should an admission ever fail
         // mid-batch (the `admit_with` Err path), every other member
         // keeps its own admission and the failed one reports its own
-        // error instead of shifting the pairing.
-        let mut admissions: std::collections::HashMap<u64, Admission> =
+        // error instead of shifting the pairing. The members' commit
+        // swap-outs accumulate and seal into ONE write-back burst per
+        // batch (0 s on the real link model; the accounting mirrors the
+        // sim driver's per-iteration commit burst).
+        let mut admissions: HashMap<u64, Admission> =
             batch.into_members().into_iter().collect();
-        preps
+        let mut commit_moved = Transfers::default();
+        let results: Vec<Result<RealResponse>> = preps
             .into_iter()
             .zip(reqs)
             .map(|(prep, r)| match admissions.remove(&prep.id) {
@@ -392,6 +477,7 @@ impl RealServer {
                     &r.query_tokens,
                     r.max_new,
                     cfg,
+                    &mut commit_moved,
                 ),
                 None => Err(anyhow::anyhow!(
                     "request {}: GPU admission failed mid-batch; \
@@ -399,7 +485,11 @@ impl RealServer {
                     prep.id
                 )),
             })
-            .collect()
+            .collect();
+        let mut commits = BatchAdmission::new();
+        commits.push_commit(commit_moved);
+        commits.seal_commit(&self.driver);
+        results
     }
 
     /// The TCP handlers' shared wire entry point (`ragcache serve` and
@@ -427,70 +517,91 @@ impl RealServer {
             .collect()
     }
 
-    /// Post-admission tail of one request: prefill the non-cached
-    /// tokens, commit the new document KV, decode greedily.
+    /// Prefill the non-cached tokens of an admitted request, producing
+    /// the artifact [`commit_decode`](RealServer::commit_decode)
+    /// finishes from. Shared by the blocking path (prefill and finish
+    /// back to back) and the speculative path (prefill now, finish when
+    /// the final stage confirms). A failed prefill returns the
+    /// admission's pins — the contract that keeps the shared cache free
+    /// of unevictable nodes.
+    fn prefill_admitted(
+        &self,
+        adm: &Admission,
+        query_tokens: &[i32],
+        chunk: usize,
+    ) -> Result<PrefillOut> {
+        let mut kv = self.cache().concat_payloads(adm);
+
+        // Non-cached documents + separator + question.
+        let mut new_tokens: Vec<i32> = Vec::new();
+        for &(d, _) in &adm.unmatched {
+            new_tokens.extend_from_slice(&self.doc_tokens[d as usize]);
+        }
+        new_tokens.push(SEP);
+        new_tokens.extend_from_slice(query_tokens);
+        debug_assert_eq!(adm.beta, new_tokens.len());
+
+        let kv_before = kv.len();
+        let t_prefill0 = self.driver.now();
+        let logits =
+            match self.chunked_prefill(&mut kv, &new_tokens, chunk) {
+                Ok(l) => l,
+                Err(e) => {
+                    self.pipeline.abort_admission(adm);
+                    return Err(e);
+                }
+            };
+        Ok(PrefillOut {
+            kv,
+            kv_before,
+            logits,
+            prefill_secs: self.driver.now() - t_prefill0,
+        })
+    }
+
+    /// Post-confirmation tail of one request: deliver the first token,
+    /// commit the newly computed document KV (rows precede SEP+query;
+    /// byte movement merges into `commit_moved` for the caller's
+    /// per-batch write-back burst), decode greedily and record the
+    /// request.
     #[allow(clippy::too_many_arguments)]
-    fn finish_one(
+    fn commit_decode(
         &mut self,
         id: u64,
         t_arrive: f64,
         docs: Vec<u32>,
         adm: Admission,
-        query_tokens: &[i32],
+        art: PrefillOut,
         max_new: usize,
-        cfg: &RealConfig,
+        commit_moved: &mut Transfers,
     ) -> Result<RealResponse> {
-        let mut kv = self.cache().concat_payloads(&adm);
-
-        // Non-cached documents + separator + question.
-        let mut new_tokens: Vec<i32> = Vec::new();
-        let mut doc_lens = Vec::new();
-        for &(d, _) in &adm.unmatched {
-            let toks = &self.doc_tokens[d as usize];
-            new_tokens.extend_from_slice(toks);
-            doc_lens.push(toks.len());
-        }
-        let doc_token_total: usize = doc_lens.iter().sum();
-        new_tokens.push(SEP);
-        new_tokens.extend_from_slice(query_tokens);
-        let beta = adm.beta;
-        debug_assert_eq!(beta, new_tokens.len());
+        let t_first = self.driver.now();
+        self.pipeline.recorder.first_token(id, t_first);
 
         let kv_per_tok =
             self.model.manifest().arch.kv_floats_per_token();
-        let kv_before = kv.len();
-        let t_prefill0 = self.driver.now();
-        let logits =
-            match self.chunked_prefill(&mut kv, &new_tokens, cfg.chunk) {
-                Ok(l) => l,
-                Err(e) => {
-                    // The admission contract: a failed prefill must still
-                    // return the pins, or the shared cache accumulates
-                    // unevictable nodes for the life of the server.
-                    self.pipeline.abort_admission(&adm);
-                    return Err(e);
-                }
-            };
-        let t_first = self.driver.now();
-        self.pipeline.recorder.first_token(id, t_first);
-        let prefill_secs = t_first - t_prefill0;
-
-        // Cache the newly computed document KV (rows precede SEP+query):
-        // shared commit path — policy refresh for hits, then unpin +
-        // insert the new children with their payloads.
-        let new_kv = &kv[kv_before..];
+        let doc_lens: Vec<usize> =
+            adm.unmatched.iter().map(|&(_, t)| t).collect();
+        let doc_token_total: usize = doc_lens.iter().sum();
+        let mut kv = art.kv;
+        let new_kv = &kv[art.kv_before..];
         let doc_rows = &new_kv[..doc_token_total * kv_per_tok];
         let payloads = if doc_lens.is_empty() {
             Vec::new()
         } else {
             KvPayload::split(doc_rows, &doc_lens)
         };
-        self.pipeline.touch_hits(&adm, prefill_secs, t_first);
-        self.pipeline
-            .commit_prefill(&adm, prefill_secs, t_first, Some(payloads));
+        self.pipeline.touch_hits(&adm, art.prefill_secs, t_first);
+        let out = self.pipeline.commit_prefill(
+            &adm,
+            art.prefill_secs,
+            t_first,
+            Some(payloads),
+        );
+        commit_moved.merge(out.transfers);
 
         // Greedy decode.
-        let mut out_tokens = vec![argmax(&logits) as i32];
+        let mut out_tokens = vec![argmax(&art.logits) as i32];
         for _ in 1..max_new {
             let last = *out_tokens.last().unwrap();
             let step = self.model.prefill(&kv, &[last])?;
@@ -505,12 +616,485 @@ impl RealServer {
             id,
             docs,
             cached_tokens: adm.alpha,
-            computed_tokens: beta,
+            computed_tokens: adm.beta,
             docs_hit: adm.matched_docs,
             ttft: t_first - t_arrive,
             total: t_done - t_arrive,
             output_tokens: out_tokens,
         })
+    }
+
+    /// Post-admission tail of one request on the blocking path: prefill
+    /// the non-cached tokens, commit the new document KV, decode.
+    #[allow(clippy::too_many_arguments)]
+    fn finish_one(
+        &mut self,
+        id: u64,
+        t_arrive: f64,
+        docs: Vec<u32>,
+        adm: Admission,
+        query_tokens: &[i32],
+        max_new: usize,
+        cfg: &RealConfig,
+        commit_moved: &mut Transfers,
+    ) -> Result<RealResponse> {
+        let art = self.prefill_admitted(&adm, query_tokens, cfg.chunk)?;
+        self.commit_decode(
+            id,
+            t_arrive,
+            docs,
+            adm,
+            art,
+            max_new,
+            commit_moved,
+        )
+    }
+}
+
+/// The event-driven (speculative) serving API: `submit` starts a
+/// non-blocking [`RequestSession`](super::session::RequestSession) whose
+/// staged retrieval runs on the [`RetrievalService`] pool;
+/// `poll_sessions` multiplexes the stage events — running Algorithm 2,
+/// starting/cancelling speculative prefills, promoting or falling back
+/// on the final stage — and returns completed responses. The blocking
+/// `serve`/`serve_batch` calls become convenience wrappers that drive
+/// sessions to completion when `cfg.speculate` is set.
+impl RealServer {
+    fn ensure_spec(&mut self, cfg: &RealConfig) {
+        if self.spec.is_some() {
+            return;
+        }
+        let (tx, rx) = mpsc::channel();
+        let service = RetrievalService::spawn(
+            Arc::clone(&self.index),
+            RetrievalConfig {
+                threads: cfg.retrieval_threads.max(1),
+                stages: cfg.stages.max(1),
+                stage_latency: Duration::from_secs_f64(
+                    cfg.stage_latency_s.max(0.0),
+                ),
+            },
+            tx,
+        );
+        self.spec = Some(SpecRuntime {
+            service,
+            events: rx,
+            table: SessionTable::new(cfg.spec_pool.max(1)),
+            pending: HashMap::new(),
+            dead_on_submit: Vec::new(),
+        });
+    }
+
+    /// Submit one request into the session lifecycle: embed the query,
+    /// dispatch its staged search to the retrieval pool and return the
+    /// session id. The response arrives through
+    /// [`poll_sessions`](RealServer::poll_sessions).
+    pub fn submit(&mut self, req: &BatchRequest, cfg: &RealConfig) -> u64 {
+        self.ensure_spec(cfg);
+        let id = self.next_id;
+        self.next_id += 1;
+        let t_arrive = self.driver.now();
+        self.pipeline.recorder.arrival(id, t_arrive);
+        let query =
+            self.em.query(req.target_doc, cfg.query_noise, &mut self.rng);
+        let rt = self.spec.as_mut().expect("just ensured");
+        rt.table.submit(id, t_arrive);
+        rt.pending.insert(
+            id,
+            SpecPending {
+                query_tokens: req.query_tokens.clone(),
+                max_new: req.max_new,
+                t_arrive,
+            },
+        );
+        let accepted = rt.service.submit(RetrievalTask {
+            session: id,
+            query,
+            top_k: cfg.top_k,
+        });
+        if !accepted {
+            // The pool is gone (worker panic / teardown): no stage event
+            // will ever arrive, so the session must die NOW — otherwise
+            // it occupies an admission slot forever and its waiter hangs.
+            rt.pending.remove(&id);
+            rt.table
+                .fail(id, "retrieval pool unavailable".to_string());
+            rt.dead_on_submit.push(id);
+        }
+        id
+    }
+
+    /// Sessions submitted and not yet completed.
+    pub fn in_flight_sessions(&self) -> usize {
+        self.spec.as_ref().map(|rt| rt.table.in_flight()).unwrap_or(0)
+    }
+
+    /// Multiplex retrieval stage events for up to `timeout` (then drain
+    /// whatever else already arrived), advancing every touched session:
+    /// Algorithm 2 per stage against the real prefill-pool occupancy,
+    /// speculative prefills started/cancelled through the shared
+    /// pipeline (pins only — commits wait for confirmation), promotion
+    /// or PR 3 fallback on final stages. Returns the sessions that
+    /// completed, with their responses.
+    pub fn poll_sessions(
+        &mut self,
+        timeout: Duration,
+        cfg: &RealConfig,
+    ) -> Vec<(u64, Result<RealResponse>)> {
+        let mut done = Vec::new();
+        let Some(mut rt) = self.spec.take() else {
+            return done;
+        };
+        // Sessions that died at submit time answer first — they have no
+        // stage events to wait for.
+        for id in rt.dead_on_submit.drain(..) {
+            done.push((
+                id,
+                Err(anyhow::anyhow!(
+                    "session {id}: retrieval pool unavailable"
+                )),
+            ));
+        }
+        let mut batch = Vec::new();
+        if done.is_empty() {
+            // Nothing to report yet: wait for progress.
+            if let Ok(ev) = rt.events.recv_timeout(timeout) {
+                batch.push(ev);
+            }
+        }
+        while let Ok(ev) = rt.events.try_recv() {
+            batch.push(ev);
+        }
+        for ev in batch {
+            self.on_stage_event(&mut rt, ev, cfg, &mut done);
+        }
+        // Lifecycle notifications are surfaced through the returned
+        // completions; drain the buffer so it cannot grow unbounded.
+        for ev in rt.table.take_events() {
+            log::trace!("session event: {ev:?}");
+        }
+        self.spec = Some(rt);
+        done
+    }
+
+    /// Speculation counters of this engine's sessions.
+    pub fn spec_totals(&self) -> SpecTotals {
+        self.spec
+            .as_ref()
+            .map(|rt| rt.table.totals())
+            .unwrap_or_default()
+    }
+
+    /// Blocking wrapper over the session lifecycle: submit every member
+    /// and poll until all complete, preserving request order.
+    pub fn serve_batch_speculative(
+        &mut self,
+        reqs: &[BatchRequest],
+        cfg: &RealConfig,
+    ) -> Vec<Result<RealResponse>> {
+        let ids: Vec<u64> =
+            reqs.iter().map(|r| self.submit(r, cfg)).collect();
+        let want: std::collections::HashSet<u64> =
+            ids.iter().copied().collect();
+        let mut results: HashMap<u64, Result<RealResponse>> =
+            HashMap::new();
+        let deadline =
+            std::time::Instant::now() + Duration::from_secs(120);
+        while results.len() < ids.len()
+            && std::time::Instant::now() < deadline
+        {
+            for (id, res) in
+                self.poll_sessions(Duration::from_millis(20), cfg)
+            {
+                // Only THIS call's members count toward completion; a
+                // late completion left over from a previous timed-out
+                // call must neither satisfy the wait nor shadow a live
+                // member's slot.
+                if want.contains(&id) {
+                    results.insert(id, res);
+                } else {
+                    log::warn!(
+                        "dropping stale session {id} completion from an \
+                         earlier timed-out serve_batch_speculative call"
+                    );
+                }
+            }
+        }
+        ids.into_iter()
+            .map(|id| {
+                results.remove(&id).unwrap_or_else(|| {
+                    Err(anyhow::anyhow!(
+                        "session {id}: retrieval never completed"
+                    ))
+                })
+            })
+            .collect()
+    }
+
+    /// Process one retrieval stage event through the session table and
+    /// perform whatever it directs: release a cancelled speculation's
+    /// pins, run a speculative prefill, or finish the session.
+    fn on_stage_event(
+        &mut self,
+        rt: &mut SpecRuntime,
+        ev: StageReady,
+        cfg: &RealConfig,
+        done: &mut Vec<(u64, Result<RealResponse>)>,
+    ) {
+        let id = ev.session;
+        if rt.table.session(id).is_none() {
+            return; // stale event for a finished session
+        }
+        if ev.is_final {
+            self.pipeline
+                .recorder
+                .retrieval_done(id, self.driver.now());
+        }
+        let step = rt.table.on_stage(id, ev.stage, &ev.docs, ev.is_final);
+        if let Some(work) = step.cancelled {
+            // Terminated speculation: release the pins and discard the
+            // computed KV (counted `wasted` by the table). Restarted
+            // generations stay cheap through whatever the tree already
+            // caches, not through committing stale candidates.
+            self.pipeline.abort_admission(&work.payload.adm);
+        }
+        if let Some(docs) = step.start {
+            let query_tokens = match rt.pending.get(&id) {
+                Some(p) => p.query_tokens.clone(),
+                None => return,
+            };
+            match self.spec_prefill(&docs, &query_tokens, cfg) {
+                Ok(artifact) => rt.table.spec_started(id, docs, artifact),
+                Err(e) => {
+                    log::warn!(
+                        "session {id}: speculative prefill failed: {e:#}"
+                    );
+                    rt.table.spec_aborted(id);
+                }
+            }
+        }
+        if let Some(finish) = step.finish {
+            let Some(p) = rt.pending.remove(&id) else {
+                return;
+            };
+            let docs = ev.docs.clone();
+            let result = match finish {
+                FinishPath::Promote(work) => {
+                    let SpecWork { payload, .. } = work;
+                    self.finish_session(
+                        rt,
+                        id,
+                        p,
+                        docs,
+                        payload.adm,
+                        payload.out,
+                    )
+                }
+                FinishPath::Fallback => {
+                    self.fallback_session(rt, id, p, docs, cfg)
+                }
+            };
+            done.push((id, result));
+        }
+    }
+
+    /// Singleton admission (pin, no commit) for a session's candidate
+    /// docs, through the shared [`BatchAdmission`] accounting path — the
+    /// one implementation the speculative and fallback paths both use.
+    fn admit_docs(&self, docs: &[u32], query_len: usize) -> Admission {
+        let docs_tokens: Vec<(u32, usize)> = docs
+            .iter()
+            .map(|&d| (d, self.doc_tokens[d as usize].len()))
+            .collect();
+        let request_tokens = 1 + query_len; // SEP + question
+        let batch = BatchAdmission::admit_with(
+            &self.driver,
+            std::iter::once(0u64),
+            |_| Ok(self.pipeline.admit_one(&docs_tokens, request_tokens)),
+        );
+        batch
+            .into_members()
+            .pop()
+            .map(|(_, a)| a)
+            .expect("real admission is total")
+    }
+
+    /// Admission stage A + speculative prefill for a candidate set: the
+    /// admission pins its path but commits nothing — the artifact waits
+    /// for the final stage to confirm (promote) or cancel it.
+    fn spec_prefill(
+        &self,
+        docs: &[u32],
+        query_tokens: &[i32],
+        cfg: &RealConfig,
+    ) -> Result<SpecArtifact> {
+        let adm = self.admit_docs(docs, query_tokens.len());
+        let out = self.prefill_admitted(&adm, query_tokens, cfg.chunk)?;
+        Ok(SpecArtifact { adm, out })
+    }
+
+    /// Finish a confirmed session from its prefill artifact: first
+    /// token, commit (its own write-back burst), decode, terminal event.
+    fn finish_session(
+        &mut self,
+        rt: &mut SpecRuntime,
+        id: u64,
+        p: SpecPending,
+        docs: Vec<u32>,
+        adm: Admission,
+        out: PrefillOut,
+    ) -> Result<RealResponse> {
+        rt.table.prefilled(id, self.driver.now());
+        rt.table.decoding(id);
+        let mut moved = Transfers::default();
+        let result = self.commit_decode(
+            id,
+            p.t_arrive,
+            docs,
+            adm,
+            out,
+            p.max_new,
+            &mut moved,
+        );
+        let mut commits = BatchAdmission::new();
+        commits.push_commit(moved);
+        commits.seal_commit(&self.driver);
+        match &result {
+            Ok(_) => {
+                rt.table.complete(id);
+            }
+            Err(e) => {
+                rt.table.fail(id, format!("{e:#}"));
+            }
+        }
+        result
+    }
+
+    /// Final stage without a usable speculation: the blocking PR 3 path
+    /// (admit → prefill → commit → decode) on the confirmed docs.
+    fn fallback_session(
+        &mut self,
+        rt: &mut SpecRuntime,
+        id: u64,
+        p: SpecPending,
+        docs: Vec<u32>,
+        cfg: &RealConfig,
+    ) -> Result<RealResponse> {
+        let adm = self.admit_docs(&docs, p.query_tokens.len());
+        match self.prefill_admitted(&adm, &p.query_tokens, cfg.chunk) {
+            Ok(out) => self.finish_session(rt, id, p, docs, adm, out),
+            Err(e) => {
+                rt.table.fail(id, format!("{e:#}"));
+                Err(e)
+            }
+        }
+    }
+}
+
+impl RealServer {
+    /// The wire-protocol stats line every TCP handler reports — one
+    /// shared builder so the field mapping (and the spec counters)
+    /// cannot drift between the binary's handler and the examples'.
+    pub fn proto_stats(&self) -> crate::server::proto::StatsResult {
+        let s = self.stats();
+        let c = self.cache().counters();
+        crate::server::proto::StatsResult {
+            requests: s.requests,
+            mean_ttft_ms: s.mean_ttft_s * 1e3,
+            hit_rate: s.hit_rate,
+            engines: 1,
+            tree_inserts: c.inserts,
+            tree_gpu_evictions: c.gpu_evictions,
+            tree_host_evictions: c.host_evictions,
+            spec_started: s.spec.started,
+            spec_wasted: s.spec.wasted,
+            spec_promoted: s.spec.promoted,
+        }
+    }
+}
+
+/// The TCP handlers' shared session plumbing: engine-ticket bookkeeping
+/// plus the wire conversions around [`RealServer::submit`] /
+/// [`RealServer::poll_sessions`] — the session-mode analogue of
+/// [`RealServer::serve_proto_batch`], extracted so the `ragcache serve`
+/// handler and the e2e example cannot drift apart.
+#[derive(Default)]
+pub struct SessionProtoBridge {
+    /// session id → engine ticket.
+    tickets: HashMap<u64, u64>,
+}
+
+impl SessionProtoBridge {
+    pub fn new() -> Self {
+        SessionProtoBridge::default()
+    }
+
+    /// Non-blocking submit for `QueryHandler::submit_session`: with
+    /// speculation off, serve synchronously (a batch of one through the
+    /// blocking path) and answer immediately; otherwise start a session
+    /// and remember its ticket.
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit(
+        &mut self,
+        server: &mut RealServer,
+        ticket: u64,
+        target_doc: u32,
+        query: &str,
+        max_new: usize,
+        tok: &ByteTokenizer,
+        cfg: &RealConfig,
+    ) -> Option<Result<crate::server::proto::QueryResult>> {
+        if !cfg.speculate {
+            return server
+                .serve_proto_batch(
+                    &[(target_doc, query.to_string(), max_new)],
+                    tok,
+                    cfg,
+                )
+                .pop();
+        }
+        let req = BatchRequest {
+            target_doc,
+            query_tokens: tok.encode(query),
+            max_new: max_new.clamp(1, 16),
+        };
+        let session = server.submit(&req, cfg);
+        self.tickets.insert(session, ticket);
+        None
+    }
+
+    /// Drain completed sessions as `(ticket, wire result)` pairs for
+    /// `QueryHandler::poll_sessions`.
+    pub fn poll(
+        &mut self,
+        server: &mut RealServer,
+        timeout: Duration,
+        tok: &ByteTokenizer,
+        cfg: &RealConfig,
+    ) -> Vec<(u64, Result<crate::server::proto::QueryResult>)> {
+        server
+            .poll_sessions(timeout, cfg)
+            .into_iter()
+            .map(|(session, result)| {
+                (
+                    self.tickets.remove(&session).unwrap_or(session),
+                    result.map(|r| r.into_query_result(tok)),
+                )
+            })
+            .collect()
+    }
+}
+
+impl Drop for RealServer {
+    /// The cache outlives this engine replica (it is shared with
+    /// siblings): any speculation still pinning it at teardown must
+    /// release, or the shard accumulates unevictable nodes.
+    fn drop(&mut self) {
+        if let Some(mut rt) = self.spec.take() {
+            for work in rt.table.abort_all() {
+                self.pipeline.abort_admission(&work.payload.adm);
+            }
+        }
     }
 }
 

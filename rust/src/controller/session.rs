@@ -1,0 +1,705 @@
+//! Event-driven request-session lifecycle — the non-blocking serving API
+//! (paper §5.3 brought to the real path).
+//!
+//! A request no longer runs as one blocking call: it is a
+//! [`RequestSession`] walking an explicit state machine,
+//!
+//! ```text
+//!   Submitted ─► Retrieving(stage k) ─► SpeculativePrefill(gen g) ─┐
+//!       │              │   ▲                    │                  │
+//!       │              │   └── SpecCancelled ◄──┘ (stage changed   │
+//!       │              │        pins released,    the candidates)  │
+//!       │              ▼                                           ▼
+//!       │          [final stage] ──────────► Admitted ─► Prefilled ─►
+//!       │           fallback: PR 3 admit      promote:   (FirstToken)
+//!       │           → prefill → commit        commit the spec work
+//!       ▼                                                          │
+//!    Failed ◄── (prefill/decode error) ◄──────────── Decoding ◄────┘
+//!                                                        │
+//!                                                      Done
+//! ```
+//!
+//! driven by [`SessionEvent`]s. The [`SessionTable`] owns the per-session
+//! phase, the Algorithm 2 decision state ([`SpecState`]) and the event
+//! buffer; the *engine* (the real server's drive loop, the concurrent TCP
+//! runtime, a test harness) owns retrieval, admission and compute, and
+//! asks the table what to do after every retrieval stage tick
+//! ([`SessionTable::on_stage`] → [`StageStep`]).
+//!
+//! The contract the table enforces (and the lifecycle tests pin):
+//!
+//! - **Exactly one terminal event** (`Completed` xor `Failed`) per
+//!   session — terminal sessions are reaped, so a second completion is
+//!   impossible by construction.
+//! - **Speculative admissions pin but never commit.** A speculation's
+//!   pinned admission travels inside its [`SpecWork`]; the table hands
+//!   it back to the engine on cancellation (release the pins, count
+//!   `wasted`) or on promotion (commit it) — it can never be dropped on
+//!   the floor while live.
+//! - **Every started speculation is cancelled or promoted**: on the
+//!   final stage the table returns [`FinishPath::Promote`] when the live
+//!   speculation covers the confirmed docs, and [`FinishPath::Fallback`]
+//!   (the PR 3 blocking admit → prefill → commit path) otherwise.
+
+use crate::spec::{SpecAction, SpecState};
+use crate::tree::DocId;
+use std::collections::{HashMap, VecDeque};
+
+/// Identifies one request session (the real server reuses its request
+/// ids).
+pub type SessionId = u64;
+
+/// Lifecycle phase of a session.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SessionPhase {
+    /// Accepted, retrieval not yet started.
+    Submitted,
+    /// Staged retrieval in flight; `stage` is the last stage observed.
+    Retrieving { stage: usize },
+    /// A speculative prefill (generation `generation`) is live: its
+    /// admission is pinned, its KV computed, awaiting confirmation.
+    SpeculativePrefill { generation: u64 },
+    /// Final docs confirmed and admission secured (promoted speculation
+    /// or fallback admit).
+    Admitted,
+    /// Prefill output exists; the first token can be delivered.
+    Prefilled,
+    /// Decoding the remaining output tokens.
+    Decoding,
+    Done,
+    Failed,
+}
+
+impl SessionPhase {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, SessionPhase::Done | SessionPhase::Failed)
+    }
+}
+
+/// Notifications emitted as sessions advance; drained with
+/// [`SessionTable::take_events`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum SessionEvent {
+    /// Retrieval stage `stage` delivered a candidate snapshot.
+    StageReady {
+        session: SessionId,
+        stage: usize,
+        is_final: bool,
+    },
+    /// A speculative prefill started on the current candidates.
+    SpecStarted {
+        session: SessionId,
+        generation: u64,
+    },
+    /// A live speculation was terminated (candidates changed); its pins
+    /// were handed back for release and its work counted `wasted`.
+    SpecCancelled {
+        session: SessionId,
+        generation: u64,
+    },
+    /// The final docs are confirmed and the session holds a committed
+    /// admission path (promoted speculation or fallback).
+    AdmissionReady { session: SessionId },
+    /// First output token delivered at time `at` (the TTFT milestone).
+    FirstToken { session: SessionId, at: f64 },
+    /// Terminal: the response is complete.
+    Completed { session: SessionId },
+    /// Terminal: the session errored.
+    Failed {
+        session: SessionId,
+        error: String,
+    },
+}
+
+impl SessionEvent {
+    pub fn session(&self) -> SessionId {
+        match *self {
+            SessionEvent::StageReady { session, .. }
+            | SessionEvent::SpecStarted { session, .. }
+            | SessionEvent::SpecCancelled { session, .. }
+            | SessionEvent::AdmissionReady { session }
+            | SessionEvent::FirstToken { session, .. }
+            | SessionEvent::Completed { session }
+            | SessionEvent::Failed { session, .. } => session,
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            SessionEvent::Completed { .. } | SessionEvent::Failed { .. }
+        )
+    }
+}
+
+/// A live speculative prefill: the generation tag, the candidate docs it
+/// covers, and the engine's compute artifact `W` (in real mode: the
+/// pinned [`Admission`](super::Admission) plus the computed KV rows and
+/// logits).
+#[derive(Debug)]
+pub struct SpecWork<W> {
+    pub generation: u64,
+    pub docs: Vec<DocId>,
+    pub payload: W,
+}
+
+/// One request's lifecycle state.
+#[derive(Debug)]
+pub struct RequestSession<W> {
+    pub id: SessionId,
+    pub phase: SessionPhase,
+    /// Algorithm 2 decision state.
+    pub spec: SpecState,
+    pub submitted_at: f64,
+    /// Candidates of the last observed stage.
+    pub docs: Vec<DocId>,
+    /// The live speculative prefill, if any.
+    pub spec_work: Option<SpecWork<W>>,
+}
+
+/// How the engine must finish a session whose final stage arrived.
+#[derive(Debug)]
+pub enum FinishPath<W> {
+    /// The live speculation covers the confirmed docs: commit its
+    /// artifact and decode — retrieval latency was hidden behind the
+    /// prefill (Theorem 5.1's win).
+    Promote(SpecWork<W>),
+    /// No usable speculation: run the blocking admit → prefill → commit
+    /// path on the final docs (exactly the PR 3 batched path).
+    Fallback,
+}
+
+/// What the engine must do after one retrieval stage tick.
+#[derive(Debug)]
+pub struct StageStep<W> {
+    /// A terminated speculation whose pinned admission the engine must
+    /// release (already counted `wasted`).
+    pub cancelled: Option<SpecWork<W>>,
+    /// Start a speculative prefill on these candidates; report the
+    /// artifact via [`SessionTable::spec_started`] (or
+    /// [`SessionTable::spec_aborted`] if the compute fails).
+    pub start: Option<Vec<DocId>>,
+    /// Set on the final stage: how this session finishes.
+    pub finish: Option<FinishPath<W>>,
+}
+
+impl<W> Default for StageStep<W> {
+    fn default() -> Self {
+        StageStep {
+            cancelled: None,
+            start: None,
+            finish: None,
+        }
+    }
+}
+
+/// Aggregated speculation counters (Fig. 19 / Table 3 ablation),
+/// including sessions already reaped. Summed across engines by the
+/// `stats` fan-out merge.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpecTotals {
+    pub started: u64,
+    pub wasted: u64,
+    pub promoted: u64,
+}
+
+impl SpecTotals {
+    pub fn merge(&mut self, other: SpecTotals) {
+        self.started += other.started;
+        self.wasted += other.wasted;
+        self.promoted += other.promoted;
+    }
+
+    fn absorb(&mut self, s: &SpecState) {
+        self.started += s.started;
+        self.wasted += s.wasted;
+        self.promoted += s.promoted;
+    }
+}
+
+/// The session registry: phases, Algorithm 2 state and the event buffer
+/// for every in-flight request of one engine.
+pub struct SessionTable<W> {
+    sessions: HashMap<SessionId, RequestSession<W>>,
+    events: VecDeque<SessionEvent>,
+    /// Algorithm 2's `max_prefill_bs`: the engine's prefill-pool bound.
+    max_prefill: usize,
+    /// Sessions currently holding a live speculative prefill.
+    active_specs: usize,
+    /// Counters of sessions already reaped (terminal).
+    reaped: SpecTotals,
+    /// Terminal events emitted — one per session ever finished.
+    terminals: u64,
+}
+
+impl<W> SessionTable<W> {
+    pub fn new(max_prefill: usize) -> Self {
+        SessionTable {
+            sessions: HashMap::new(),
+            events: VecDeque::new(),
+            max_prefill: max_prefill.max(1),
+            active_specs: 0,
+            reaped: SpecTotals::default(),
+            terminals: 0,
+        }
+    }
+
+    /// Live (non-terminal) sessions.
+    pub fn in_flight(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    /// Sessions holding a live speculative prefill (the engine's
+    /// Algorithm 2 pool occupancy).
+    pub fn active_specs(&self) -> usize {
+        self.active_specs
+    }
+
+    /// Terminal events ever emitted (exactly one per finished session).
+    pub fn terminals(&self) -> u64 {
+        self.terminals
+    }
+
+    pub fn phase(&self, id: SessionId) -> Option<&SessionPhase> {
+        self.sessions.get(&id).map(|s| &s.phase)
+    }
+
+    pub fn session(&self, id: SessionId) -> Option<&RequestSession<W>> {
+        self.sessions.get(&id)
+    }
+
+    /// Speculation counters over reaped and live sessions.
+    pub fn totals(&self) -> SpecTotals {
+        let mut t = self.reaped;
+        for s in self.sessions.values() {
+            t.absorb(&s.spec);
+        }
+        t
+    }
+
+    /// Drain the buffered lifecycle events.
+    pub fn take_events(&mut self) -> Vec<SessionEvent> {
+        self.events.drain(..).collect()
+    }
+
+    /// Register a new session (retrieval dispatched by the caller).
+    pub fn submit(&mut self, id: SessionId, now: f64) {
+        let prev = self.sessions.insert(
+            id,
+            RequestSession {
+                id,
+                phase: SessionPhase::Retrieving { stage: 0 },
+                spec: SpecState::new(),
+                submitted_at: now,
+                docs: Vec::new(),
+                spec_work: None,
+            },
+        );
+        debug_assert!(prev.is_none(), "session id {id} reused while live");
+    }
+
+    /// One retrieval stage tick: run Algorithm 2 against the engine's
+    /// current pool occupancy and tell the engine what to do. Stages for
+    /// unknown (already finished) sessions are ignored — late events
+    /// from a retrieval thread race nothing.
+    pub fn on_stage(
+        &mut self,
+        id: SessionId,
+        stage: usize,
+        docs: &[DocId],
+        is_final: bool,
+    ) -> StageStep<W> {
+        let mut step = StageStep::default();
+        // Pool occupancy excludes this session's own speculation: its
+        // slot is reusable by its own restart (terminate-then-start
+        // swaps, never grows, the pool).
+        let (pool, max_prefill) = {
+            let Some(s) = self.sessions.get(&id) else {
+                return step;
+            };
+            let own = usize::from(s.spec_work.is_some());
+            (self.active_specs - own, self.max_prefill)
+        };
+        self.events.push_back(SessionEvent::StageReady {
+            session: id,
+            stage,
+            is_final,
+        });
+        let s = self.sessions.get_mut(&id).expect("checked above");
+        debug_assert!(
+            !s.phase.is_terminal(),
+            "terminal sessions are reaped"
+        );
+        s.docs = docs.to_vec();
+        let action = s.spec.on_stage(docs, pool, max_prefill, is_final);
+
+        // Terminating the previous speculation is common to Start and
+        // Defer: hand the pinned work back for release.
+        fn cancel_spec<W>(
+            s: &mut RequestSession<W>,
+            active_specs: &mut usize,
+            events: &mut VecDeque<SessionEvent>,
+        ) -> Option<SpecWork<W>> {
+            let work = s.spec_work.take()?;
+            *active_specs -= 1;
+            events.push_back(SessionEvent::SpecCancelled {
+                session: s.id,
+                generation: work.generation,
+            });
+            Some(work)
+        }
+
+        match action {
+            SpecAction::Keep => {
+                if is_final {
+                    s.phase = SessionPhase::Admitted;
+                    self.events.push_back(
+                        SessionEvent::AdmissionReady { session: id },
+                    );
+                    match s.spec_work.take() {
+                        Some(work) => {
+                            self.active_specs -= 1;
+                            step.finish = Some(FinishPath::Promote(work));
+                        }
+                        // Defensive: Keep-on-final without a live
+                        // artifact cannot happen when the engine reports
+                        // failed prefills via `spec_aborted` — but a
+                        // fallback always produces a correct answer.
+                        None => {
+                            debug_assert!(
+                                false,
+                                "Keep on final without live spec work"
+                            );
+                            step.finish = Some(FinishPath::Fallback);
+                        }
+                    }
+                } else {
+                    s.phase = SessionPhase::Retrieving { stage };
+                }
+            }
+            SpecAction::Start { terminate_prev } => {
+                if terminate_prev {
+                    step.cancelled = cancel_spec(
+                        s,
+                        &mut self.active_specs,
+                        &mut self.events,
+                    );
+                }
+                if is_final {
+                    // Final results always enter the engine — as a real
+                    // generation, via the blocking PR 3 path.
+                    s.phase = SessionPhase::Admitted;
+                    self.events.push_back(
+                        SessionEvent::AdmissionReady { session: id },
+                    );
+                    step.finish = Some(FinishPath::Fallback);
+                } else {
+                    s.phase = SessionPhase::Retrieving { stage };
+                    step.start = Some(docs.to_vec());
+                }
+            }
+            SpecAction::Defer { terminate_prev } => {
+                if terminate_prev {
+                    step.cancelled = cancel_spec(
+                        s,
+                        &mut self.active_specs,
+                        &mut self.events,
+                    );
+                }
+                debug_assert!(!is_final, "finals are always admitted");
+                s.phase = SessionPhase::Retrieving { stage };
+            }
+        }
+        step
+    }
+
+    /// The engine computed the speculative prefill requested by
+    /// [`on_stage`](SessionTable::on_stage): store its artifact and mark
+    /// the speculation live.
+    pub fn spec_started(
+        &mut self,
+        id: SessionId,
+        docs: Vec<DocId>,
+        payload: W,
+    ) {
+        let Some(s) = self.sessions.get_mut(&id) else {
+            debug_assert!(false, "spec_started for unknown session {id}");
+            return;
+        };
+        debug_assert!(s.spec_work.is_none(), "speculation already live");
+        let generation = s.spec.generation;
+        s.spec_work = Some(SpecWork {
+            generation,
+            docs,
+            payload,
+        });
+        s.phase = SessionPhase::SpeculativePrefill { generation };
+        self.active_specs += 1;
+        self.events
+            .push_back(SessionEvent::SpecStarted {
+                session: id,
+                generation,
+            });
+    }
+
+    /// The requested speculative prefill could not run (compute error):
+    /// the speculation dies without an artifact (counted `wasted`), and
+    /// Algorithm 2 may restart on a later stage.
+    pub fn spec_aborted(&mut self, id: SessionId) {
+        if let Some(s) = self.sessions.get_mut(&id) {
+            debug_assert!(s.spec_work.is_none());
+            s.spec.cancel_active();
+        }
+    }
+
+    /// First-token milestone: the prefill output of the *confirmed*
+    /// generation is ready at `at`.
+    pub fn prefilled(&mut self, id: SessionId, at: f64) {
+        if let Some(s) = self.sessions.get_mut(&id) {
+            debug_assert_eq!(s.phase, SessionPhase::Admitted);
+            s.phase = SessionPhase::Prefilled;
+            self.events
+                .push_back(SessionEvent::FirstToken { session: id, at });
+        }
+    }
+
+    /// The engine is decoding the remaining output tokens.
+    pub fn decoding(&mut self, id: SessionId) {
+        if let Some(s) = self.sessions.get_mut(&id) {
+            debug_assert_eq!(s.phase, SessionPhase::Prefilled);
+            s.phase = SessionPhase::Decoding;
+        }
+    }
+
+    /// Terminal success. Emits `Completed` exactly once and reaps the
+    /// session; returns false if the session is unknown (already
+    /// finished).
+    pub fn complete(&mut self, id: SessionId) -> bool {
+        self.finish(id, None)
+    }
+
+    /// Terminal failure. Emits `Failed` exactly once and reaps the
+    /// session.
+    pub fn fail(&mut self, id: SessionId, error: String) -> bool {
+        self.finish(id, Some(error))
+    }
+
+    fn finish(&mut self, id: SessionId, error: Option<String>) -> bool {
+        let Some(mut s) = self.sessions.remove(&id) else {
+            return false;
+        };
+        debug_assert!(
+            s.spec_work.is_none(),
+            "finishing a session that still holds pinned spec work"
+        );
+        if s.spec_work.take().is_some() {
+            // Release-path safety net (debug builds assert instead).
+            self.active_specs -= 1;
+        }
+        s.phase = match error {
+            None => SessionPhase::Done,
+            Some(_) => SessionPhase::Failed,
+        };
+        self.reaped.absorb(&s.spec);
+        self.terminals += 1;
+        self.events.push_back(match error {
+            None => SessionEvent::Completed { session: id },
+            Some(e) => SessionEvent::Failed {
+                session: id,
+                error: e,
+            },
+        });
+        true
+    }
+
+    /// Tear down every live session (engine shutdown): hands back all
+    /// live speculative work so the caller can release its pins, and
+    /// emits a `Failed` terminal for each.
+    pub fn abort_all(&mut self) -> Vec<SpecWork<W>> {
+        let ids: Vec<SessionId> = self.sessions.keys().copied().collect();
+        let mut works = Vec::new();
+        for id in ids {
+            if let Some(s) = self.sessions.get_mut(&id) {
+                if let Some(work) = s.spec_work.take() {
+                    self.active_specs -= 1;
+                    s.spec.cancel_active();
+                    self.events.push_back(SessionEvent::SpecCancelled {
+                        session: id,
+                        generation: work.generation,
+                    });
+                    works.push(work);
+                }
+            }
+            self.fail(id, "session aborted at engine shutdown".into());
+        }
+        works
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(t: &mut SessionTable<u32>) -> Vec<SessionEvent> {
+        t.take_events()
+    }
+
+    #[test]
+    fn speculation_promoted_on_matching_final() {
+        let mut t: SessionTable<u32> = SessionTable::new(4);
+        t.submit(7, 0.0);
+        let step = t.on_stage(7, 0, &[1, 2], false);
+        assert!(step.cancelled.is_none());
+        assert_eq!(step.start.as_deref(), Some(&[1, 2][..]));
+        t.spec_started(7, vec![1, 2], 99);
+        assert_eq!(t.active_specs(), 1);
+        assert_eq!(
+            t.phase(7),
+            Some(&SessionPhase::SpeculativePrefill { generation: 1 })
+        );
+        // Unchanged mid-stage: keep running.
+        let step = t.on_stage(7, 1, &[1, 2], false);
+        assert!(step.start.is_none() && step.finish.is_none());
+        // Final stage confirms: promote the artifact.
+        let step = t.on_stage(7, 2, &[1, 2], true);
+        let work = match step.finish {
+            Some(FinishPath::Promote(w)) => w,
+            other => panic!("expected promote, got {other:?}"),
+        };
+        assert_eq!(work.payload, 99);
+        assert_eq!(t.active_specs(), 0);
+        t.prefilled(7, 1.5);
+        t.decoding(7);
+        assert!(t.complete(7));
+        assert!(!t.complete(7), "terminal is exactly-once");
+        let events = drain(&mut t);
+        let terminals =
+            events.iter().filter(|e| e.is_terminal()).count();
+        assert_eq!(terminals, 1);
+        assert!(events.contains(&SessionEvent::SpecStarted {
+            session: 7,
+            generation: 1
+        }));
+        assert!(events
+            .contains(&SessionEvent::FirstToken { session: 7, at: 1.5 }));
+        let totals = t.totals();
+        assert_eq!(
+            totals,
+            SpecTotals {
+                started: 1,
+                wasted: 0,
+                promoted: 1
+            }
+        );
+    }
+
+    #[test]
+    fn changed_candidates_cancel_and_restart() {
+        let mut t: SessionTable<u32> = SessionTable::new(4);
+        t.submit(3, 0.0);
+        let step = t.on_stage(3, 0, &[1, 3], false);
+        t.spec_started(3, step.start.unwrap(), 10);
+        let step = t.on_stage(3, 1, &[1, 2], false);
+        let cancelled = step.cancelled.expect("stale spec cancelled");
+        assert_eq!(cancelled.payload, 10);
+        assert_eq!(t.active_specs(), 0, "cancel released the pool slot");
+        t.spec_started(3, step.start.unwrap(), 11);
+        // Final mismatch: cancel again, fall back.
+        let step = t.on_stage(3, 2, &[1, 9], true);
+        assert_eq!(step.cancelled.expect("stale").payload, 11);
+        assert!(matches!(step.finish, Some(FinishPath::Fallback)));
+        t.prefilled(3, 2.0);
+        t.decoding(3);
+        t.complete(3);
+        let totals = t.totals();
+        assert_eq!(totals.wasted, 2);
+        assert_eq!(totals.promoted, 0);
+        // started: two speculations + the final re-generation.
+        assert_eq!(totals.started, 3);
+    }
+
+    #[test]
+    fn pool_full_defers_and_admits_final() {
+        let mut t: SessionTable<u32> = SessionTable::new(1);
+        t.submit(1, 0.0);
+        t.submit(2, 0.0);
+        // Session 1 takes the only pool slot.
+        let step = t.on_stage(1, 0, &[5], false);
+        t.spec_started(1, step.start.unwrap(), 1);
+        // Session 2 must defer (pool full)…
+        let step = t.on_stage(2, 0, &[6], false);
+        assert!(step.start.is_none() && step.finish.is_none());
+        // …but its final stage is always admitted (fallback).
+        let step = t.on_stage(2, 1, &[6], true);
+        assert!(matches!(step.finish, Some(FinishPath::Fallback)));
+        t.prefilled(2, 1.0);
+        t.decoding(2);
+        t.complete(2);
+        // Session 1's own restart reuses its own slot.
+        let step = t.on_stage(1, 1, &[7], false);
+        assert!(step.cancelled.is_some());
+        assert!(step.start.is_some(), "own slot is reusable");
+    }
+
+    #[test]
+    fn failed_spec_prefill_restarts_later() {
+        let mut t: SessionTable<u32> = SessionTable::new(4);
+        t.submit(4, 0.0);
+        let step = t.on_stage(4, 0, &[8], false);
+        assert!(step.start.is_some());
+        t.spec_aborted(4); // compute failed; no artifact stored
+        assert_eq!(t.active_specs(), 0);
+        // Unchanged candidates restart instead of assuming coverage.
+        let step = t.on_stage(4, 1, &[8], false);
+        assert!(step.start.is_some());
+        t.spec_started(4, vec![8], 2);
+        let step = t.on_stage(4, 2, &[8], true);
+        assert!(matches!(step.finish, Some(FinishPath::Promote(_))));
+        t.prefilled(4, 0.5);
+        t.decoding(4);
+        t.complete(4);
+        let totals = t.totals();
+        assert_eq!(totals.started, 2);
+        assert_eq!(totals.wasted, 1, "the aborted attempt counts wasted");
+        assert_eq!(totals.promoted, 1);
+    }
+
+    #[test]
+    fn stale_stage_events_are_ignored() {
+        let mut t: SessionTable<u32> = SessionTable::new(4);
+        t.submit(9, 0.0);
+        let step = t.on_stage(9, 0, &[1], true);
+        assert!(matches!(step.finish, Some(FinishPath::Fallback)));
+        t.prefilled(9, 0.1);
+        t.decoding(9);
+        t.complete(9);
+        let step = t.on_stage(9, 1, &[1], true);
+        assert!(step.finish.is_none(), "finished session ignores stages");
+        assert_eq!(t.terminals(), 1);
+    }
+
+    #[test]
+    fn abort_all_returns_live_work_and_fails_sessions() {
+        let mut t: SessionTable<u32> = SessionTable::new(4);
+        t.submit(1, 0.0);
+        t.submit(2, 0.0);
+        let step = t.on_stage(1, 0, &[3], false);
+        t.spec_started(1, step.start.unwrap(), 33);
+        let works = t.abort_all();
+        assert_eq!(works.len(), 1);
+        assert_eq!(works[0].payload, 33);
+        assert!(t.is_empty());
+        assert_eq!(t.terminals(), 2);
+        let events = t.take_events();
+        assert_eq!(
+            events.iter().filter(|e| e.is_terminal()).count(),
+            2,
+            "every live session got exactly one terminal event"
+        );
+        assert_eq!(t.totals().wasted, 1);
+    }
+}

@@ -15,7 +15,7 @@
 //! its own permanently pinned root (the system prompt S of Fig. 8),
 //! mirroring a per-replica prompt prefix.
 
-use super::pipeline::{Admission, CacheService};
+use super::pipeline::{Admission, CacheService, CommitOutcome};
 use crate::kvcache::KvPayload;
 use crate::tree::{DocId, KnowledgeTree, MatchResult, TreeCounters};
 use std::sync::Arc;
@@ -120,7 +120,7 @@ impl ShardedCacheService {
         estimated_time: f64,
         now: f64,
         payloads: Option<Vec<KvPayload>>,
-    ) -> usize {
+    ) -> CommitOutcome {
         self.shards[adm.shard].commit(adm, estimated_time, now, payloads)
     }
 
@@ -219,8 +219,8 @@ mod tests {
         assert_eq!(adm.alpha, 0);
         assert_eq!(adm.beta, 16 + 16 + 8);
         assert_eq!(adm.unmatched, vec![(1, 16), (2, 16)]);
-        let inserted = svc.commit(&adm, 0.01, 1.0, None);
-        assert_eq!(inserted, 2);
+        let out = svc.commit(&adm, 0.01, 1.0, None);
+        assert_eq!(out.inserted, 2);
         svc.check_invariants();
         assert_eq!(svc.pinned_nodes(), 0, "commit released all pins");
 

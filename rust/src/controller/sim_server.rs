@@ -45,6 +45,9 @@ pub struct SimOutcome {
     pub tree_counters: Option<crate::tree::TreeCounters>,
     pub spec_started: u64,
     pub spec_wasted: u64,
+    /// Speculations the final stage confirmed (their prefill was
+    /// delivered instead of recomputed).
+    pub spec_promoted: u64,
     /// Mean controller decision time (tree lookup/update + reordering +
     /// DSP decisions), seconds — Table 4.
     pub mean_sched_time: f64,
@@ -92,6 +95,11 @@ pub struct SimServer {
     num_docs: usize,
     sched_secs: f64,
     sched_ops: u64,
+    /// Commit-side write-back burst of the last completed iteration
+    /// (seconds): the coalesced `insert_child` swap-outs of its
+    /// members, charged once per batch by delaying the NEXT planned
+    /// iteration (the link is busy writing back before it can load).
+    deferred_commit_s: f64,
     /// Epoch of the currently in-flight engine iteration.
     inflight_epoch: Option<u64>,
     next_epoch: u64,
@@ -176,6 +184,7 @@ impl SimServer {
             num_docs,
             sched_secs: 0.0,
             sched_ops: 0,
+            deferred_commit_s: 0.0,
             inflight_epoch: None,
             next_epoch: 0,
         })
@@ -223,6 +232,12 @@ impl SimServer {
                 .requests
                 .iter()
                 .map(|r| r.spec.wasted)
+                .sum(),
+            spec_promoted: self
+                .pipeline
+                .requests
+                .iter()
+                .map(|r| r.spec.promoted)
                 .sum(),
             mean_sched_time: if self.sched_ops == 0 {
                 0.0
@@ -412,8 +427,13 @@ impl SimServer {
                 let epoch = self.next_epoch;
                 self.next_epoch += 1;
                 self.inflight_epoch = Some(epoch);
+                // The previous iteration's commit write-back burst
+                // serializes with this iteration on the link: charge it
+                // once, here.
+                let commit_burst =
+                    std::mem::replace(&mut self.deferred_commit_s, 0.0);
                 self.events.schedule(
-                    self.now() + plan.duration,
+                    self.now() + plan.duration + commit_burst,
                     Event::EngineDone(epoch),
                 );
             }
@@ -494,23 +514,41 @@ impl SimServer {
         self.inflight_epoch = None;
         let now = self.now();
         let events = self.engine.complete();
+        // The iteration's commits (one per FirstToken) coalesce into
+        // ONE write-back burst — the commit-phase mirror of the admit
+        // burst — charged once onto the next planned iteration.
+        let mut commits = BatchAdmission::new();
         for ev in events {
             match ev {
-                SeqEvent::FirstToken { id } => self.on_first_token(id, now),
+                SeqEvent::FirstToken { id } => {
+                    let moved = self.on_first_token(id, now);
+                    commits.push_commit(moved);
+                }
                 SeqEvent::Finished { id } => self.on_finished(id, now),
             }
         }
+        self.deferred_commit_s += commits.seal_commit(&self.driver);
     }
 
-    fn on_first_token(&mut self, seq: u64, now: f64) {
+    /// Returns the byte movement the commit performed (eviction
+    /// swap-outs while inserting the new doc KV), for the per-iteration
+    /// commit burst.
+    fn on_first_token(
+        &mut self,
+        seq: u64,
+        now: f64,
+    ) -> crate::tree::Transfers {
         let req = request_of(seq);
         // Insert newly computed doc KV into the tree and update stats —
         // even for terminated speculations: the prefill ran, the KV for
         // its document sequence is valid, and caching it is precisely
         // what makes restarted generations cheap (paper §4, Thm 5.1).
+        let mut moved = crate::tree::Transfers::default();
         if let Some(adm) = self.admit_infos.remove(&seq) {
-            self.pipeline
+            let out = self
+                .pipeline
                 .commit_prefill(&adm, adm.estimated_time, now, None);
+            moved = out.transfers;
         }
         self.pipeline.deliver_first_token(
             req,
@@ -518,6 +556,7 @@ impl SimServer {
             &self.trace.requests[req].docs,
             now,
         );
+        moved
     }
 
     fn on_finished(&mut self, seq: u64, now: f64) {
@@ -609,9 +648,14 @@ mod tests {
     fn speculation_counters_populate() {
         let out = run_kind("ragcache", 0.2, 50);
         assert!(out.spec_started >= 50);
+        // Satellite: promotions (final-stage confirmations) are now
+        // surfaced too, and every promotion is a started speculation.
+        assert!(out.spec_promoted > 0, "some speculation confirmed");
+        assert!(out.spec_promoted <= out.spec_started);
         // Baselines never speculate.
         let v = run_kind("vllm", 0.2, 20);
         assert_eq!(v.spec_wasted, 0);
+        assert_eq!(v.spec_promoted, 0);
     }
 
     #[test]

@@ -8,7 +8,9 @@
 use anyhow::{anyhow, Context, Result};
 use ragcache::cli::Args;
 use ragcache::config::SystemConfig;
-use ragcache::controller::real::{RealConfig, RealServer};
+use ragcache::controller::real::{
+    RealConfig, RealServer, SessionProtoBridge,
+};
 use ragcache::controller::{RetrievalTiming, SimServer};
 use ragcache::embed::EmbeddingModel;
 use ragcache::llm::models::{ALL_GPUS, ALL_MODELS};
@@ -33,6 +35,12 @@ commands:
                                 1 = unbatched)
              [--batch-tokens T] (compute-token budget per admitted batch,
                                 default 16384)
+             [--speculate on|off] (event-driven sessions: staged retrieval
+                                on a thread pool overlapped with
+                                speculative prefill, paper 5.3; default
+                                off = blocking batched serving)
+             [--retrieval-threads R] (staged-search pool size, default 2)
+             [--stages S]      (stages per staged search, default 4)
   simulate   --system ragcache|vllm|sglang --dataset mmlu --rate 0.8
              --requests 500 [--config FILE] [--model NAME] [--seed N]
   info       show models, GPUs, datasets, artifact status
@@ -93,11 +101,26 @@ fn logger_init() {
     });
 }
 
-/// The PJRT-backed handler for `ragcache serve`.
+/// The PJRT-backed handler for `ragcache serve`. All session plumbing
+/// (ticket bookkeeping, wire conversion, stats) lives in the library's
+/// [`SessionProtoBridge`] / [`RealServer::proto_stats`], shared with the
+/// e2e example's handler.
 pub struct RealHandler {
     server: RealServer,
     cfg: RealConfig,
     tok: ByteTokenizer,
+    bridge: SessionProtoBridge,
+}
+
+impl RealHandler {
+    pub fn new(server: RealServer, cfg: RealConfig) -> Self {
+        RealHandler {
+            server,
+            cfg,
+            tok: ByteTokenizer::new(),
+            bridge: SessionProtoBridge::new(),
+        }
+    }
 }
 
 impl QueryHandler for RealHandler {
@@ -114,7 +137,9 @@ impl QueryHandler for RealHandler {
 
     /// Batched entry point: all members admit first, coalescing their
     /// cache-hit transfers into one H2D burst
-    /// (`RealServer::serve_batch`), then prefill/decode in turn.
+    /// (`RealServer::serve_batch`), then prefill/decode in turn. With
+    /// `--speculate on` this is the blocking wrapper that drives the
+    /// members through the session lifecycle instead.
     fn query_batch(
         &mut self,
         batch: &[(u32, String, usize)],
@@ -122,18 +147,47 @@ impl QueryHandler for RealHandler {
         self.server.serve_proto_batch(batch, &self.tok, &self.cfg)
     }
 
+    /// Non-blocking entry (the `--speculate on` engine loop): start a
+    /// session whose staged retrieval runs on the server's thread pool;
+    /// the result streams back through `poll_sessions`.
+    fn submit_session(
+        &mut self,
+        ticket: u64,
+        target_doc: u32,
+        query: &str,
+        max_new: usize,
+    ) -> Option<Result<proto::QueryResult>> {
+        self.bridge.submit(
+            &mut self.server,
+            ticket,
+            target_doc,
+            query,
+            max_new,
+            &self.tok,
+            &self.cfg,
+        )
+    }
+
+    fn poll_sessions(
+        &mut self,
+        timeout: std::time::Duration,
+    ) -> Vec<ragcache::server::SessionDone> {
+        self.bridge
+            .poll(&mut self.server, timeout, &self.tok, &self.cfg)
+            .into_iter()
+            .map(|(ticket, result)| ragcache::server::SessionDone {
+                ticket,
+                result,
+            })
+            .collect()
+    }
+
+    fn sessions_in_flight(&self) -> usize {
+        self.server.in_flight_sessions()
+    }
+
     fn stats(&self) -> proto::StatsResult {
-        let s = self.server.stats();
-        let c = self.server.cache().counters();
-        proto::StatsResult {
-            requests: s.requests,
-            mean_ttft_ms: s.mean_ttft_s * 1e3,
-            hit_rate: s.hit_rate,
-            engines: 1,
-            tree_inserts: c.inserts,
-            tree_gpu_evictions: c.gpu_evictions,
-            tree_host_evictions: c.host_evictions,
-        }
+        self.server.proto_stats()
     }
 }
 
@@ -195,6 +249,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if batch_tokens == 0 {
         return Err(anyhow!("--batch-tokens must be >= 1"));
     }
+    let speculate = match args.get_or("speculate", "off") {
+        "on" => true,
+        "off" => false,
+        other => {
+            return Err(anyhow!(
+                "--speculate expects on|off, got '{other}'"
+            ))
+        }
+    };
+    let retrieval_threads: usize = args
+        .get_parse_or("retrieval-threads", 2)
+        .map_err(|e| anyhow!(e))?;
+    let stages: usize =
+        args.get_parse_or("stages", 4).map_err(|e| anyhow!(e))?;
+    if retrieval_threads == 0 {
+        return Err(anyhow!("--retrieval-threads must be >= 1"));
+    }
+    if stages == 0 {
+        return Err(anyhow!("--stages must be >= 1"));
+    }
     if shards < engines.max(1) {
         // Engines drain shards routed shard % engines: with fewer
         // shards than engines the surplus engines would each load a
@@ -212,7 +286,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ));
     }
     let corpus_seed = 42u64;
-    let cfg = RealConfig::default();
+    let cfg = RealConfig {
+        speculate,
+        stages,
+        retrieval_threads,
+        spec_pool: max_batch,
+        ..RealConfig::default()
+    };
     // One sharded cache service shared by every engine replica, the
     // priority estimator and the affinity router: each shard has its own
     // lock and tier-budget slice, so M engines admit in parallel.
@@ -268,11 +348,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         engines,
         max_batch,
         batch_tokens,
+        speculate,
         estimator: Some(estimator),
         router: Some(router),
         ..ServerOptions::default()
     };
     let engine_cache = cache.clone();
+    let handler_cfg = cfg.clone();
     let server = Server::spawn_sharded(port, opts, move |engine| {
         // Only the PJRT model loads here (its handles are not `Send`);
         // each engine replica carries its own model + corpus assets and
@@ -289,17 +371,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             engine_cache.clone(),
         )
         .context(format!("assembling engine {engine}"))?;
-        Ok(RealHandler {
-            server,
-            cfg: RealConfig::default(),
-            tok: ByteTokenizer::new(),
-        })
+        Ok(RealHandler::new(server, handler_cfg.clone()))
     })?;
     println!(
         "ragcache serving on {} ({docs} docs, {workers} connection \
          workers, {engines} engines, {shards} tree shards, \
-         {max_batch}-request admission batches)",
-        server.addr
+         {max_batch}-request admission batches, speculation {})",
+        server.addr,
+        if speculate { "on" } else { "off" }
     );
     println!("protocol: newline-delimited JSON; ops: query/stats/shutdown");
     // Block until the acceptor thread exits (shutdown op).
@@ -386,8 +465,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         );
     }
     println!(
-        "speculation: {} started, {} wasted",
-        out.spec_started, out.spec_wasted
+        "speculation: {} started, {} wasted, {} promoted",
+        out.spec_started, out.spec_wasted, out.spec_promoted
     );
     Ok(())
 }

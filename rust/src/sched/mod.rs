@@ -333,6 +333,35 @@ impl<T> SharedReorderQueue<T> {
         self.pop_batch_timeout(timeout, 1, usize::MAX).pop()
     }
 
+    /// Non-blocking batch pop: [`SharedReorderQueue::pop_batch_timeout`]
+    /// that never waits. The event-multiplexing engine loop uses it to
+    /// drain admissible work between session events while requests are
+    /// parked in `Retrieving`: the drain must not block behind an empty
+    /// queue when stage events may already be pending, and sessions
+    /// outside the queue must not starve those inside it — an empty (or
+    /// skipped, `max_batch == 0`) drain pops nothing and therefore
+    /// bumps no bypass counter, so the §5.2 bound keeps counting only
+    /// real admission events.
+    pub fn try_pop_batch(
+        &self,
+        max_batch: usize,
+        token_budget: usize,
+    ) -> Vec<(PendingRequest, T)> {
+        if max_batch == 0 {
+            return Vec::new();
+        }
+        let mut s = self.lock();
+        let batch = s.queue.pop_batch(max_batch, token_budget);
+        batch
+            .into_iter()
+            .map(|req| {
+                let job =
+                    s.jobs.remove(&req.id).expect("job for queued request");
+                (req, job)
+            })
+            .collect()
+    }
+
     /// Pop up to `max_batch` requests (bounded by `token_budget` summed
     /// compute tokens) as one admission batch, blocking up to `timeout`
     /// for the first to arrive. Returns an empty vec on timeout,
@@ -753,6 +782,42 @@ mod tests {
         assert!(q
             .pop_batch_timeout(Duration::from_millis(1), 4, usize::MAX)
             .is_empty());
+    }
+
+    /// The non-blocking drain behaves exactly like the blocking one on
+    /// content, never waits, and an empty/skipped drain leaves bypass
+    /// state untouched — sessions parked in Retrieving (outside the
+    /// queue) cost queued requests nothing.
+    #[test]
+    fn shared_queue_try_pop_matches_and_never_bumps_on_empty() {
+        let q: SharedReorderQueue<u32> = SharedReorderQueue::new(true, 2);
+        // Never waits: an empty queue answers immediately.
+        let t0 = std::time::Instant::now();
+        assert!(q.try_pop_batch(4, usize::MAX).is_empty());
+        assert!(t0.elapsed() < Duration::from_millis(50));
+
+        // Victim with terrible priority, then hot requests.
+        assert!(q.push(req(1, 0.0, 0, 1_000_000), 1));
+        assert!(q.push(req(2, 1.0, 10_000, 1), 2));
+        // A zero-slot drain (engine full of parked sessions) is a no-op
+        // admission event: nothing popped, nobody bumped.
+        assert!(q.try_pop_batch(0, usize::MAX).is_empty());
+        assert_eq!(q.len(), 2);
+        // First real drain: priority order, victim bumped once.
+        let got = q.try_pop_batch(1, usize::MAX);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].0.id, 2);
+        // Window 2: one more bypass event before the guard fires.
+        assert!(q.push(req(3, 2.0, 10_000, 1), 3));
+        let got = q.try_pop_batch(1, usize::MAX);
+        assert_eq!(got[0].0.id, 3);
+        assert!(q.push(req(4, 3.0, 10_000, 1), 4));
+        let got = q.try_pop_batch(1, usize::MAX);
+        assert_eq!(
+            got[0].0.id, 1,
+            "starvation guard fires after `window` real drains — \
+             empty/zero-slot drains did not count against the victim"
+        );
     }
 
     #[test]

@@ -18,15 +18,25 @@
 //!                                 ▼ pop_batch    ▼ pop_batch    ▼
 //!                             engine 0       engine 1  …    engine M-1
 //!                        (each engine-driver thread owns its own
-//!                         QueryHandler and admits a BATCH per
-//!                         iteration: up to `max_batch` compatible
-//!                         requests popped together in §5.2 order —
-//!                         one bypass event, ≤ `batch_tokens` summed
-//!                         compute — and answered through
-//!                         QueryHandler::query_batch, whose admissions
-//!                         coalesce into one H2D burst
-//!                         (controller::batch::BatchAdmission). PJRT
-//!                         handles are not `Send`, so each handler is
+//!                         QueryHandler. Blocking mode — `--speculate
+//!                         off` — admits a BATCH per iteration: up to
+//!                         `max_batch` compatible requests popped
+//!                         together in §5.2 order — one bypass event,
+//!                         ≤ `batch_tokens` summed compute — answered
+//!                         through QueryHandler::query_batch, whose
+//!                         admissions coalesce into one H2D burst and
+//!                         whose commits into one write-back burst
+//!                         (controller::batch::BatchAdmission).
+//!                         Event-driven mode — `--speculate on` — is a
+//!                         MULTIPLEXER instead: queries enter the
+//!                         handler's session lifecycle (submit_session)
+//!                         so staged retrieval on the handler's thread
+//!                         pool overlaps speculative prefill (§5.3);
+//!                         the loop drains the queue non-blockingly
+//!                         (try_pop_batch) while ≤ `max_batch` sessions
+//!                         are parked in Retrieving, and completions
+//!                         stream back via poll_sessions. PJRT handles
+//!                         are not `Send`, so each handler is
 //!                         constructed *inside* its engine thread)
 //! ```
 //!
@@ -51,6 +61,7 @@ pub mod proto;
 use anyhow::Result;
 use crate::sched::{PendingRequest, ShardRouter, SharedReorderQueue};
 use proto::{Request, Response};
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -58,7 +69,17 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-/// Application hook: execute one query.
+/// A completed (or failed) non-blocking session, surfaced by
+/// [`QueryHandler::poll_sessions`]. `ticket` echoes the id the engine
+/// passed to [`QueryHandler::submit_session`].
+pub struct SessionDone {
+    pub ticket: u64,
+    pub result: Result<proto::QueryResult>,
+}
+
+/// Application hook: execute queries — blocking (`query`/`query_batch`)
+/// or as non-blocking sessions (`submit_session`/`poll_sessions`, used
+/// by the `--speculate on` event-multiplexing engine loop).
 pub trait QueryHandler {
     fn query(
         &mut self,
@@ -66,6 +87,35 @@ pub trait QueryHandler {
         query: &str,
         max_new: usize,
     ) -> Result<proto::QueryResult>;
+
+    /// Submit one query into the handler's non-blocking session
+    /// lifecycle; the result arrives later through
+    /// [`QueryHandler::poll_sessions`] tagged with `ticket`. The
+    /// default — for handlers without a staged retrieval path — serves
+    /// synchronously and returns the result immediately (`Some`).
+    fn submit_session(
+        &mut self,
+        ticket: u64,
+        target_doc: u32,
+        query: &str,
+        max_new: usize,
+    ) -> Option<Result<proto::QueryResult>> {
+        let _ = ticket;
+        Some(self.query(target_doc, query, max_new))
+    }
+
+    /// Drain completed sessions, blocking at most `timeout` for
+    /// progress. Default: no session lifecycle, nothing to drain.
+    fn poll_sessions(&mut self, timeout: Duration) -> Vec<SessionDone> {
+        let _ = timeout;
+        Vec::new()
+    }
+
+    /// Sessions submitted and not yet completed; the engine loop bounds
+    /// admission by `max_batch - sessions_in_flight()`.
+    fn sessions_in_flight(&self) -> usize {
+        0
+    }
 
     /// Execute the queries of one admission batch (popped together by
     /// the engine driver, `(target_doc, query, max_new)` each),
@@ -122,6 +172,13 @@ pub struct ServerOptions {
     /// Summed compute-token budget (the members' β estimates) of one
     /// admitted batch; the first pick is always taken.
     pub batch_tokens: usize,
+    /// Event-driven serving (`--speculate on`): the engine loop becomes
+    /// a multiplexer over queue pops and session events, driving
+    /// requests through [`QueryHandler::submit_session`] /
+    /// [`QueryHandler::poll_sessions`] so staged retrieval overlaps
+    /// speculative prefill (§5.3). `false` keeps the blocking batched
+    /// loop, bit for bit.
+    pub speculate: bool,
     /// Cache-aware reordering of queued requests (§5.2). Takes effect
     /// only when an `estimator` is supplied; otherwise each queue is
     /// strict FIFO (equal priorities would reorder arbitrarily).
@@ -147,6 +204,7 @@ impl Default for ServerOptions {
             engines: 1,
             max_batch: 8,
             batch_tokens: 16384,
+            speculate: false,
             reorder: true,
             window: 16,
             estimator: None,
@@ -301,6 +359,7 @@ impl Server {
         let factory = Arc::new(factory);
         let max_batch = opts.max_batch.max(1);
         let batch_tokens = opts.batch_tokens.max(1);
+        let speculate = opts.speculate;
         for engine in 0..engines {
             let queue = Arc::clone(&queues[engine]);
             let shutdown = Arc::clone(&shutdown);
@@ -313,6 +372,7 @@ impl Server {
                     &shutdown,
                     max_batch,
                     batch_tokens,
+                    speculate,
                 );
             }));
         }
@@ -388,6 +448,7 @@ fn engine_loop<H, F>(
     shutdown: &AtomicBool,
     max_batch: usize,
     batch_tokens: usize,
+    speculate: bool,
 ) where
     H: QueryHandler,
     F: Fn(usize) -> Result<H>,
@@ -419,6 +480,18 @@ fn engine_loop<H, F>(
             return;
         }
     };
+    if speculate {
+        // Event-driven serving: the loop multiplexes queue pops with
+        // the handler's session events instead of blocking per batch.
+        engine_loop_sessions(
+            &mut handler,
+            jobs,
+            shutdown,
+            max_batch,
+            batch_tokens,
+        );
+        return;
+    }
     // Answer a contiguous run of queries through the handler's batched
     // entry point, pairing each response channel by position.
     fn flush_queries<H: QueryHandler>(
@@ -501,6 +574,123 @@ fn engine_loop<H, F>(
             }
         }
         flush_queries(&mut handler, &mut queries, &mut query_resp);
+    }
+}
+
+/// Wire form of one query result (shared by both engine loops).
+fn query_response(result: Result<proto::QueryResult>) -> Response {
+    match result {
+        Ok(r) => Response::Query(r),
+        Err(e) => Response::Error {
+            message: format!("query failed: {e}"),
+        },
+    }
+}
+
+/// The `--speculate on` engine loop: an event multiplexer. Queries
+/// enter the handler's non-blocking session lifecycle
+/// ([`QueryHandler::submit_session`]) — their staged retrievals run on
+/// the handler's thread pool while this loop keeps draining the queue —
+/// and completions stream back through [`QueryHandler::poll_sessions`].
+/// Admission stays bounded by `max_batch` in-flight sessions, and the
+/// queue is drained NON-blockingly while sessions are parked in
+/// Retrieving ([`SharedReorderQueue::try_pop_batch`]), so neither side
+/// can starve the other. Responses may complete out of §5.2 pop order —
+/// that reordering is the point of overlapping retrieval.
+fn engine_loop_sessions<H: QueryHandler>(
+    handler: &mut H,
+    jobs: &SharedReorderQueue<Job>,
+    shutdown: &AtomicBool,
+    max_batch: usize,
+    batch_tokens: usize,
+) {
+    let mut waiters: HashMap<u64, mpsc::Sender<Response>> = HashMap::new();
+    let mut next_ticket = 0u64;
+    let mut sealed_at: Option<Instant> = None;
+    loop {
+        let in_flight = handler.sessions_in_flight();
+        let slots = max_batch.saturating_sub(in_flight);
+        let popped = if in_flight > 0 {
+            // Sessions in flight: never block on the queue — their
+            // stage events are the thing to wait on below.
+            jobs.try_pop_batch(slots, batch_tokens)
+        } else {
+            jobs.pop_batch_timeout(
+                Duration::from_millis(20),
+                slots.max(1),
+                batch_tokens,
+            )
+        };
+        let drained_empty = popped.is_empty();
+        for (_pending, job) in popped {
+            match job.req {
+                Request::Query {
+                    target_doc,
+                    query,
+                    max_new,
+                } => {
+                    let ticket = next_ticket;
+                    next_ticket += 1;
+                    match handler.submit_session(
+                        ticket,
+                        target_doc,
+                        &query,
+                        max_new,
+                    ) {
+                        Some(result) => {
+                            let _ =
+                                job.resp.send(query_response(result));
+                        }
+                        None => {
+                            waiters.insert(ticket, job.resp);
+                        }
+                    }
+                }
+                // Stats answer in pop position; with speculation on,
+                // responses are not globally ordered anyway.
+                Request::Stats => {
+                    let _ = job.resp.send(Response::Stats(handler.stats()));
+                }
+                Request::Shutdown => {
+                    let _ = job.resp.send(Response::Ok);
+                }
+            }
+        }
+        // Poll while ANY waiter is outstanding, not only while sessions
+        // are live: a session that died at submit time (refused
+        // retrieval task) is reaped immediately — in_flight drops to 0
+        // — yet its error still has to reach the stored waiter.
+        if handler.sessions_in_flight() > 0 || !waiters.is_empty() {
+            for done in handler.poll_sessions(Duration::from_millis(5)) {
+                if let Some(resp) = waiters.remove(&done.ticket) {
+                    let _ = resp.send(query_response(done.result));
+                }
+            }
+        }
+        if shutdown.load(Ordering::SeqCst) && drained_empty {
+            // Two-phase drain, session flavor: seal first, then finish
+            // accepted work — queued jobs AND in-flight sessions.
+            jobs.seal();
+            let sealed = *sealed_at.get_or_insert_with(Instant::now);
+            if jobs.is_empty()
+                && handler.sessions_in_flight() == 0
+                && waiters.is_empty()
+            {
+                break;
+            }
+            // A wedged session (dead retrieval pool) must not hang
+            // shutdown forever: after a generous drain window the
+            // remaining waiters' channels drop, which their connection
+            // workers observe as "engine unavailable".
+            if sealed.elapsed() > Duration::from_secs(10) {
+                log::warn!(
+                    "engine: abandoning {} unfinished session(s) at \
+                     shutdown",
+                    waiters.len().max(handler.sessions_in_flight())
+                );
+                break;
+            }
+        }
     }
 }
 
@@ -607,11 +797,12 @@ fn route_engine(
     ShardRouter::new(engines).route(shard)
 }
 
-/// Merge the per-engine answers to one `stats` request. Request counts
-/// and request-weighted means sum across engines (each engine owns its
-/// recorder); the tree counters inside every part already aggregate the
-/// one shared sharded cache, so they merge by maximum — summing would
-/// count the shared tree once per engine.
+/// Merge the per-engine answers to one `stats` request. Request counts,
+/// request-weighted means and the speculation counters sum across
+/// engines (each engine owns its recorder and its sessions); the tree
+/// counters inside every part already aggregate the one shared sharded
+/// cache, so they merge by maximum — summing would count the shared
+/// tree once per engine.
 fn merge_stats(parts: &[proto::StatsResult]) -> proto::StatsResult {
     let requests: usize = parts.iter().map(|p| p.requests).sum();
     let weighted = |f: fn(&proto::StatsResult) -> f64| -> f64 {
@@ -641,6 +832,9 @@ fn merge_stats(parts: &[proto::StatsResult]) -> proto::StatsResult {
             .map(|p| p.tree_host_evictions)
             .max()
             .unwrap_or(0),
+        spec_started: parts.iter().map(|p| p.spec_started).sum(),
+        spec_wasted: parts.iter().map(|p| p.spec_wasted).sum(),
+        spec_promoted: parts.iter().map(|p| p.spec_promoted).sum(),
     }
 }
 

@@ -44,6 +44,13 @@ pub struct StatsResult {
     pub tree_gpu_evictions: u64,
     /// Host-tier evictions, aggregated across shards.
     pub tree_host_evictions: u64,
+    /// Speculative generations started (§5.3); per-engine, summed by
+    /// the fan-out merge.
+    pub spec_started: u64,
+    /// Speculations terminated with their work discarded.
+    pub spec_wasted: u64,
+    /// Speculations confirmed by the final retrieval stage.
+    pub spec_promoted: u64,
 }
 
 /// Server → client.
@@ -135,6 +142,9 @@ pub fn encode_response(resp: &Response) -> String {
                 "tree_host_evictions",
                 Json::num(s.tree_host_evictions as f64),
             ),
+            ("spec_started", Json::num(s.spec_started as f64)),
+            ("spec_wasted", Json::num(s.spec_wasted as f64)),
+            ("spec_promoted", Json::num(s.spec_promoted as f64)),
         ]),
         Response::Ok => Json::obj(vec![("type", Json::str("ok"))]),
         Response::Error { message } => Json::obj(vec![
@@ -215,6 +225,18 @@ pub fn parse_response(line: &str) -> Result<Response> {
                 .get("tree_host_evictions")
                 .and_then(Json::as_u64)
                 .unwrap_or(0),
+            spec_started: v
+                .get("spec_started")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            spec_wasted: v
+                .get("spec_wasted")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            spec_promoted: v
+                .get("spec_promoted")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
         })),
         "ok" => Ok(Response::Ok),
         "error" => Ok(Response::Error {
@@ -270,6 +292,9 @@ mod tests {
                 tree_inserts: 40,
                 tree_gpu_evictions: 7,
                 tree_host_evictions: 3,
+                spec_started: 9,
+                spec_wasted: 2,
+                spec_promoted: 5,
             }),
             Response::Ok,
             Response::Error {

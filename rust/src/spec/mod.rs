@@ -33,9 +33,12 @@ pub struct SpecState {
     active: bool,
     /// Monotone generation counter (distinguishes speculation attempts).
     pub generation: u64,
-    /// Counters for the ablation (Table 3 / Fig. 19).
+    /// Counters for the ablation (Table 3 / Fig. 19): generations
+    /// started, speculations terminated (their work discarded), and
+    /// speculations confirmed by the final stage (their work delivered).
     pub started: u64,
     pub wasted: u64,
+    pub promoted: u64,
 }
 
 impl SpecState {
@@ -72,7 +75,12 @@ impl SpecState {
         if unchanged {
             if self.active {
                 // Same docs: the running speculation (or admitted final)
-                // already covers this request.
+                // already covers this request. On the completion stage
+                // this is the paper's promotion — the speculative work
+                // graduates to the delivered generation.
+                if is_final {
+                    self.promoted += 1;
+                }
                 return SpecAction::Keep;
             }
             // Previously deferred; admit if final or room appeared.
@@ -106,10 +114,15 @@ impl SpecState {
         }
     }
 
-    /// The speculation completed (first token produced) and the search
-    /// has confirmed its docs: it graduates to a real generation.
-    pub fn confirm(&mut self) {
-        debug_assert!(self.active);
+    /// The live speculation died outside Algorithm 2 — its prefill
+    /// failed before producing a usable artifact. Count it wasted and
+    /// clear `active`, so a later stage restarts instead of believing a
+    /// speculation still covers this request.
+    pub fn cancel_active(&mut self) {
+        if self.active {
+            self.active = false;
+            self.wasted += 1;
+        }
     }
 }
 
@@ -197,6 +210,46 @@ mod tests {
         assert_eq!(a, SpecAction::Keep);
         assert_eq!(s.started, 1);
         assert_eq!(s.wasted, 0);
+        assert_eq!(s.promoted, 1, "the confirmed speculation is promoted");
+    }
+
+    #[test]
+    fn promoted_counts_only_final_confirmations() {
+        let mut s = SpecState::new();
+        s.on_stage(&[1, 2], 0, 4, false);
+        s.on_stage(&[1, 2], 0, 4, false); // Keep, non-final: no promotion
+        assert_eq!(s.promoted, 0);
+        s.on_stage(&[1, 2], 0, 4, true);
+        assert_eq!(s.promoted, 1);
+        // A final restart (mismatched docs) is a re-generation, not a
+        // promotion.
+        let mut r = SpecState::new();
+        r.on_stage(&[1, 3], 0, 4, false);
+        r.on_stage(&[1, 2], 0, 4, true);
+        assert_eq!(r.promoted, 0);
+        assert_eq!(r.wasted, 1);
+    }
+
+    #[test]
+    fn cancel_active_counts_wasted_and_allows_restart() {
+        let mut s = SpecState::new();
+        s.on_stage(&[4, 5], 0, 4, false);
+        assert!(s.is_active());
+        s.cancel_active();
+        assert!(!s.is_active());
+        assert_eq!(s.wasted, 1);
+        s.cancel_active(); // idempotent on an inactive state
+        assert_eq!(s.wasted, 1);
+        // Unchanged docs on a later stage restart the speculation
+        // instead of believing one is still running.
+        let a = s.on_stage(&[4, 5], 0, 4, false);
+        assert_eq!(
+            a,
+            SpecAction::Start {
+                terminate_prev: false
+            }
+        );
+        assert_eq!(s.started, 2);
     }
 
     #[test]

@@ -180,6 +180,7 @@ impl QueryHandler for CacheHandler {
             tree_inserts: c.inserts,
             tree_gpu_evictions: c.gpu_evictions,
             tree_host_evictions: c.host_evictions,
+            ..Default::default()
         }
     }
 }
@@ -337,6 +338,7 @@ impl QueryHandler for ShardedHandler {
             tree_inserts: c.inserts,
             tree_gpu_evictions: c.gpu_evictions,
             tree_host_evictions: c.host_evictions,
+            ..Default::default()
         }
     }
 }
