@@ -62,6 +62,24 @@ for w in 1 4; do
     done
 done
 
+# Cross-shard tier rebalancing sweep: the functional matrix under
+# --rebalance {off,on} (off must stay bit-identical to the static
+# split; on must conserve the configured budget exactly), plus the
+# randomized rebalancer suite under --release.
+echo "== cross-shard rebalancing sweep =="
+for r in off on; do
+    echo "-- serving_matrix --workers 4 --engines 2 --shards 4 --rebalance $r --"
+    cargo run --release --example serving_matrix -- \
+        --workers 4 --engines 2 --shards 4 --rebalance "$r"
+done
+cargo test --release --test shard_rebalance -q
+
+# Skewed-workload gate: on a Zipfian workload routed to one hot shard,
+# rebalance-on must strictly win aggregate GPU cache-hit bytes vs the
+# static 1/K split, and must not lose on the uniform workload.
+echo "== rebalancing hit-bytes comparison =="
+cargo run --release --example serving_matrix -- --compare-rebalance
+
 # Acceptance comparison (retrieval-heavy, cold cache): speculation must
 # strictly lower the summed TTFT vs the blocking path.
 echo "== speculation TTFT comparison =="

@@ -17,17 +17,26 @@
 //! speculation-on server, with retrieval latency ≥ prefill latency, and
 //! requires the summed TTFT with speculation to be strictly lower.
 //!
+//! `--compare-rebalance` runs the cross-shard rebalancing gate: the
+//! same request sequence against a static-split server and a
+//! rebalance-on server over a K=4 sharded cache whose GPU budget is too
+//! small for the hot shard's working set. Rebalance-on must win
+//! aggregate GPU cache-hit bytes strictly on the Zipfian workload and
+//! must not lose on the uniform one, with the capacity-conservation
+//! invariant checked after serving.
+//!
 //! Run: `cargo run --release --example serving_matrix -- \
 //!         --workers 4 --engines 2 [--shards K] [--clients 4]
-//!         [--max-batch B] [--speculate on|off]
-//!         [--compare-speculation]`
+//!         [--max-batch B] [--speculate on|off] [--rebalance on|off]
+//!         [--rebalance-interval N]
+//!         [--compare-speculation] [--compare-rebalance]`
 
 use ragcache::cli::Args;
 use ragcache::config::PolicyKind;
 use ragcache::controller::{
-    Admission, BatchAdmission, FinishPath, PipelineDriver,
-    RetrievalConfig, RetrievalService, RetrievalTask, SessionTable,
-    ShardedCacheService, StageReady,
+    split_budget, Admission, BatchAdmission, FinishPath, PipelineDriver,
+    RebalanceConfig, RetrievalConfig, RetrievalService, RetrievalTask,
+    SessionTable, ShardedCacheService, StageReady,
 };
 use ragcache::embed::EmbeddingModel;
 use ragcache::kvcache::PageSpec;
@@ -273,6 +282,9 @@ impl QueryHandler for MatrixHandler {
         // Satellite gate: the batch's commit swap-outs charge as ONE
         // write-back burst through the shared accounting path.
         commit_batch.seal_commit(&NullDriver);
+        // Cross-shard rebalance tick, one per engine iteration (a no-op
+        // unless the shared cache has a rebalancer installed).
+        self.cache.maintenance_tick();
         results
     }
 
@@ -322,6 +334,9 @@ impl QueryHandler for MatrixHandler {
     /// speculative admissions with a synthetic prefill, promote or fall
     /// back on the final stage.
     fn poll_sessions(&mut self, timeout: Duration) -> Vec<SessionDone> {
+        // Session-mode rebalance tick (mirrors the real server's
+        // per-poll tick).
+        self.cache.maintenance_tick();
         let mut out = Vec::new();
         let Some(mut rt) = self.sessions.take() else {
             return out;
@@ -396,6 +411,8 @@ impl QueryHandler for MatrixHandler {
 
     fn stats(&self) -> proto::StatsResult {
         let c = self.cache.counters();
+        let occ = self.cache.shard_occupancies();
+        let rb = self.cache.rebalance_stats();
         let spec = self
             .sessions
             .as_ref()
@@ -412,6 +429,15 @@ impl QueryHandler for MatrixHandler {
             spec_started: spec.started,
             spec_wasted: spec.wasted,
             spec_promoted: spec.promoted,
+            tree_gpu_hit_bytes: c.gpu_hit_bytes,
+            rebalance_recomputes: rb.recomputes,
+            rebalance_moved_bytes: rb.gpu_bytes_moved
+                + rb.host_bytes_moved,
+            shard_gpu_used: occ.iter().map(|o| o.gpu_used).collect(),
+            shard_gpu_capacity: occ
+                .iter()
+                .map(|o| o.gpu_capacity)
+                .collect(),
         }
     }
 }
@@ -514,6 +540,156 @@ fn spawn_matrix(
     Ok(server)
 }
 
+/// One `--compare-rebalance` run: serve `targets` serially against a
+/// fresh K=4 cache whose GPU budget is deliberately tight, with or
+/// without the rebalancer, and report the aggregate GPU cache-hit
+/// bytes. Conservation (Σ shard GPU capacity == configured budget) and
+/// zero leaked pins are asserted on every run.
+fn rebalance_run(
+    targets: &[u32],
+    rebalance: bool,
+) -> anyhow::Result<u64> {
+    let p = PageSpec {
+        block_tokens: 8,
+        kv_bytes_per_token: 16,
+    };
+    // 1024 GPU tokens over 4 shards: a 256-token static slice holds 8
+    // of the 32-token docs, while the Zipfian hot shard's working set
+    // is 16 docs — it thrashes unless capacity moves toward it.
+    let gpu_total = p.bytes(1024);
+    let host_total = p.bytes(16384);
+    let gpu_slices = split_budget(gpu_total, 4);
+    let host_slices = split_budget(host_total, 4);
+    let mut svc = ShardedCacheService::build(4, |i| {
+        KnowledgeTree::new(
+            gpu_slices[i],
+            host_slices[i],
+            p,
+            ragcache::policy::make_policy(PolicyKind::Pgdsf),
+            true,
+            0,
+        )
+    });
+    if rebalance {
+        svc.enable_rebalancing(RebalanceConfig {
+            interval: 10,
+            ..RebalanceConfig::default()
+        });
+    }
+    let server = spawn_matrix(
+        &svc,
+        2,
+        1,
+        8,
+        MatrixTiming::fast(),
+        false,
+        false,
+    )?;
+    let mut cl = Client::connect(server.addr)?;
+    for &t in targets {
+        match cl.call(&query(t))? {
+            proto::Response::Query(_) => {}
+            other => anyhow::bail!("unexpected {other:?}"),
+        }
+    }
+    let stats = match cl.call(&proto::Request::Stats)? {
+        proto::Response::Stats(s) => s,
+        other => anyhow::bail!("unexpected stats response {other:?}"),
+    };
+    let _ = cl.call(&proto::Request::Shutdown)?;
+    server.join();
+
+    let hits = svc.counters().gpu_hit_bytes;
+    if stats.tree_gpu_hit_bytes != hits {
+        anyhow::bail!(
+            "stats hit bytes {} != cache {}",
+            stats.tree_gpu_hit_bytes,
+            hits
+        );
+    }
+    let caps: u64 = svc
+        .shard_occupancies()
+        .iter()
+        .map(|o| o.gpu_capacity)
+        .sum();
+    if caps != gpu_total {
+        anyhow::bail!(
+            "GPU capacity not conserved: {caps} != {gpu_total}"
+        );
+    }
+    if rebalance && stats.rebalance_recomputes == 0 {
+        anyhow::bail!("rebalance on but never recomputed");
+    }
+    if !rebalance && stats.rebalance_moved_bytes != 0 {
+        anyhow::bail!("rebalance off but capacity moved");
+    }
+    svc.check_invariants();
+    if svc.pinned_nodes() != 0 {
+        anyhow::bail!("{} pins leaked", svc.pinned_nodes());
+    }
+    Ok(hits)
+}
+
+/// Acceptance gate for demand-driven cross-shard rebalancing: on a
+/// Zipfian workload whose hot mass routes to one shard, `--rebalance
+/// on` must yield strictly more aggregate GPU cache-hit bytes than the
+/// static 1/K split; on a uniform workload it must not lose.
+fn compare_rebalance() -> anyhow::Result<()> {
+    // Zipfian-weighted hot targets, all routing to shard 0 (targets
+    // ≡ 0 mod 4; the doc pair [t, t+1] lives under root child t), with
+    // a sprinkle of cold traffic on the other shards.
+    let mut rng = ragcache::util::Rng::new(0x5EBA1A4C);
+    let hot: Vec<u32> = (0..8).map(|i| i * 4).collect();
+    let weights: Vec<f64> = (0..hot.len())
+        .map(|i| 1.0 / ((i + 1) as f64).powf(1.5))
+        .collect();
+    let mut zipf = Vec::with_capacity(300);
+    for j in 0..300u32 {
+        if j % 10 == 9 {
+            zipf.push(1 + (j / 10) % 3); // cold: shards 1..3
+        } else {
+            zipf.push(hot[rng.weighted_index(&weights)]);
+        }
+    }
+    // Uniform: one target per shard, each shard's 2-doc working set
+    // within the min-share floor — rebalancing has nothing to win here
+    // and, crucially, no slack to lose.
+    let uniform: Vec<u32> = (0..300u32).map(|j| j % 4).collect();
+
+    let zipf_off = rebalance_run(&zipf, false)?;
+    let zipf_on = rebalance_run(&zipf, true)?;
+    let uni_off = rebalance_run(&uniform, false)?;
+    let uni_on = rebalance_run(&uniform, true)?;
+    println!(
+        "  zipfian GPU hit bytes: static {zipf_off}, rebalanced \
+         {zipf_on} ({:.2}x)",
+        zipf_on as f64 / zipf_off.max(1) as f64
+    );
+    println!(
+        "  uniform GPU hit bytes: static {uni_off}, rebalanced {uni_on}"
+    );
+    let mut failed = false;
+    if zipf_on <= zipf_off {
+        eprintln!(
+            "FAIL: rebalancing must strictly win GPU hit bytes on the \
+             Zipfian workload ({zipf_on} !> {zipf_off})"
+        );
+        failed = true;
+    }
+    if uni_on < uni_off {
+        eprintln!(
+            "FAIL: rebalancing must not lose GPU hit bytes on the \
+             uniform workload ({uni_on} < {uni_off})"
+        );
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    println!("OK: rebalancing wins on skew and holds on uniform");
+    Ok(())
+}
+
 /// Acceptance comparison: cold cache, retrieval-heavy timing (staged
 /// search latency ≥ prefill latency), identical serial workload.
 /// Speculation must strictly lower the summed TTFT: the speculative
@@ -567,8 +743,11 @@ fn compare_speculation(workers: usize) -> anyhow::Result<()> {
 
 fn main() -> anyhow::Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&raw, &["compare-speculation"])
-        .map_err(anyhow::Error::msg)?;
+    let args = Args::parse(
+        &raw,
+        &["compare-speculation", "compare-rebalance"],
+    )
+    .map_err(anyhow::Error::msg)?;
     let workers: usize = args
         .get_parse_or("workers", 4)
         .map_err(anyhow::Error::msg)?;
@@ -589,8 +768,19 @@ fn main() -> anyhow::Result<()> {
         "off" => false,
         other => anyhow::bail!("--speculate expects on|off, got {other}"),
     };
+    let rebalance = match args.get_or("rebalance", "off") {
+        "on" => true,
+        "off" => false,
+        other => anyhow::bail!("--rebalance expects on|off, got {other}"),
+    };
+    let rebalance_interval: u64 = args
+        .get_parse_or("rebalance-interval", 8)
+        .map_err(anyhow::Error::msg)?;
     if args.flag("compare-speculation") {
         return compare_speculation(workers.max(1));
+    }
+    if args.flag("compare-rebalance") {
+        return compare_rebalance();
     }
     if max_batch == 0 {
         anyhow::bail!("--max-batch must be >= 1");
@@ -602,7 +792,18 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    let svc = build_cache(shards);
+    let mut svc = build_cache(shards);
+    let gpu_budget: u64 = svc
+        .shard_occupancies()
+        .iter()
+        .map(|o| o.gpu_capacity)
+        .sum();
+    if rebalance {
+        svc.enable_rebalancing(RebalanceConfig {
+            interval: rebalance_interval.max(1),
+            ..RebalanceConfig::default()
+        });
+    }
     let server = spawn_matrix(
         &svc,
         workers,
@@ -616,8 +817,9 @@ fn main() -> anyhow::Result<()> {
     println!(
         "serving matrix on {addr}: {workers} workers, {engines} engines, \
          {shards} shards, {clients} clients, {max_batch}-request \
-         batches, speculation {}",
-        if speculate { "on" } else { "off" }
+         batches, speculation {}, rebalancing {}",
+        if speculate { "on" } else { "off" },
+        if rebalance { "on" } else { "off" }
     );
 
     // Warm phase: one client inserts every target's docs (cold).
@@ -753,6 +955,30 @@ fn main() -> anyhow::Result<()> {
             stats.tree_inserts,
             c.inserts,
             2 * TARGETS
+        ));
+    }
+    // Tentpole gate: whatever the rebalancer did (or didn't — static
+    // split), the shard GPU capacities must still sum to the configured
+    // budget, bit-exact, and the stats fan-out must expose the same
+    // per-shard occupancy the cache reports.
+    let occ = svc.shard_occupancies();
+    let caps: u64 = occ.iter().map(|o| o.gpu_capacity).sum();
+    if caps != gpu_budget {
+        failures.push(format!(
+            "GPU budget not conserved: {caps} != {gpu_budget}"
+        ));
+    }
+    if stats.shard_gpu_capacity.len() != shards.max(1) {
+        failures.push(format!(
+            "stats reported {} shard capacity gauges, expected {}",
+            stats.shard_gpu_capacity.len(),
+            shards.max(1)
+        ));
+    }
+    if !rebalance && stats.rebalance_moved_bytes != 0 {
+        failures.push(format!(
+            "static split moved {} capacity bytes",
+            stats.rebalance_moved_bytes
         ));
     }
     svc.check_invariants();

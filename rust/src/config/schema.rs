@@ -80,6 +80,15 @@ pub struct CacheConfig {
     pub swap_out_only_once: bool,
     /// §6 fault tolerance: replicate hot upper-level nodes in host memory.
     pub replicate_hot_nodes: bool,
+    /// Knowledge-tree shards the tier budgets are split across (the
+    /// RAGCache system only; baselines stay single-tree).
+    pub shards: usize,
+    /// Demand-driven cross-shard tier rebalancing: periodically move
+    /// budget slices from cold shards to hot ones. `false` keeps the
+    /// static 1/K split, bit-identical to the pre-rebalancing path.
+    pub rebalance: bool,
+    /// Engine iterations between rebalance recomputations.
+    pub rebalance_interval: usize,
 }
 
 impl Default for CacheConfig {
@@ -94,6 +103,9 @@ impl Default for CacheConfig {
             policy: PolicyKind::Pgdsf,
             swap_out_only_once: true,
             replicate_hot_nodes: true,
+            shards: 1,
+            rebalance: false,
+            rebalance_interval: 32,
         }
     }
 }
@@ -314,6 +326,12 @@ impl SystemConfig {
         if self.cache.block_tokens == 0 {
             bail!("cache.block_tokens must be > 0");
         }
+        if self.cache.shards == 0 {
+            bail!("cache.shards must be > 0");
+        }
+        if self.cache.rebalance_interval == 0 {
+            bail!("cache.rebalance_interval must be > 0");
+        }
         if self.workload.rate <= 0.0 {
             bail!("workload.rate must be > 0");
         }
@@ -385,6 +403,11 @@ fn apply_cache(c: &mut CacheConfig, v: &Json) -> Result<()> {
             "policy" => c.policy = PolicyKind::parse(&get_str(val, k)?)?,
             "swap_out_only_once" => c.swap_out_only_once = get_bool(val, k)?,
             "replicate_hot_nodes" => c.replicate_hot_nodes = get_bool(val, k)?,
+            "shards" => c.shards = get_usize(val, k)?,
+            "rebalance" => c.rebalance = get_bool(val, k)?,
+            "rebalance_interval" => {
+                c.rebalance_interval = get_usize(val, k)?
+            }
             other => bail!("unknown cache key '{other}'"),
         }
     }
@@ -506,6 +529,21 @@ rate = 1.4
         assert_eq!(c.retrieval.top_k, 5);
         assert!(!c.sched.reorder);
         assert_eq!(c.workload.dataset, "nq");
+    }
+
+    #[test]
+    fn sharding_and_rebalance_keys_parse() {
+        let doc = "[cache]\nshards = 4\nrebalance = true\n\
+                   rebalance_interval = 16";
+        let c = SystemConfig::from_toml_str(doc).unwrap();
+        assert_eq!(c.cache.shards, 4);
+        assert!(c.cache.rebalance);
+        assert_eq!(c.cache.rebalance_interval, 16);
+        assert!(SystemConfig::from_toml_str("[cache]\nshards = 0").is_err());
+        assert!(SystemConfig::from_toml_str(
+            "[cache]\nrebalance_interval = 0"
+        )
+        .is_err());
     }
 
     #[test]

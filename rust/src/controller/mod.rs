@@ -35,6 +35,21 @@
 //!       (route by first doc)                   blocking batched path
 //!       match → promote → pin → (α,β)
 //!       → commit/release · metrics hooks
+//!       + cross-shard tier rebalancer
+//!         (shard.rs): every engine
+//!         iteration / session poll is a
+//!         maintenance_tick; on interval
+//!         boundaries, per-shard demand
+//!         (Δhit bytes + Δswap-out thrash
+//!         + occupancy) recomputes the
+//!         tier-budget slices and moves
+//!         capacity cold → hot — donors
+//!         evict-to-fit and shrink FIRST,
+//!         receivers grow only from bytes
+//!         actually freed, so Σ slices ==
+//!         configured budget, bit-exact;
+//!         --rebalance off = static 1/K
+//!         slices, bit-identical
 //!                           │
 //!                           ▼
 //!        tree / kvcache / policy / sched substrates
@@ -73,5 +88,7 @@ pub use session::{
     FinishPath, RequestSession, SessionEvent, SessionId, SessionPhase,
     SessionTable, SpecTotals, SpecWork, StageStep,
 };
-pub use shard::ShardedCacheService;
+pub use shard::{
+    split_budget, RebalanceConfig, RebalanceStats, ShardedCacheService,
+};
 pub use sim_server::{SimOutcome, SimServer};

@@ -30,13 +30,14 @@
 
 use super::retrieval::StagedRetrieval;
 use super::shard::ShardedCacheService;
-use crate::kvcache::KvPayload;
+use crate::kvcache::{KvPayload, Tier};
 use crate::metrics::Recorder;
 use crate::policy::AccessCtx;
 use crate::sched::ReorderQueue;
 use crate::spec::SpecState;
 use crate::tree::{
-    DocId, KnowledgeTree, MatchResult, NodeId, Transfers, TreeCounters,
+    DocId, KnowledgeTree, MatchResult, NodeId, TierOccupancy, Transfers,
+    TreeCounters,
 };
 use std::sync::{Arc, Mutex};
 
@@ -167,6 +168,33 @@ impl CacheService {
         self.with(|t| t.fail_gpu())
     }
 
+    /// Tier occupancy gauge (used/capacity both tiers) — the
+    /// cross-shard rebalancer's observability signal.
+    pub fn occupancy(&self) -> TierOccupancy {
+        self.with(|t| t.occupancy())
+    }
+
+    /// Retarget ONE tier's budget under this shard's lock, reading the
+    /// other tier's current capacity atomically with the change (two
+    /// independent single-tier resizes can therefore never undo each
+    /// other). Shrinks evict-to-fit via the replacement policy first —
+    /// see [`KnowledgeTree::resize_budgets`] — and `Err` means the
+    /// shrink was refused with no capacity change, carrying the
+    /// transfers of any evictions performed before the refusal.
+    pub fn resize_tier(
+        &self,
+        tier: Tier,
+        capacity: u64,
+    ) -> Result<Transfers, Transfers> {
+        self.with(|t| {
+            let (gpu, host) = match tier {
+                Tier::Gpu => (capacity, t.host_capacity()),
+                Tier::Host => (t.gpu_capacity(), capacity),
+            };
+            t.resize_budgets(gpu, host)
+        })
+    }
+
     /// Admission stage A (Algorithm 1 `UPDATE_NODE_IN_GPU` entry): match
     /// the doc sequence, bring the host-resident part of the match into
     /// GPU node-by-node (stopping at the first node GPU space cannot be
@@ -200,6 +228,9 @@ impl CacheService {
             // The usable prefix takes the admission pin.
             tree.pin(&m.path[..matched]);
             let use_path: Vec<NodeId> = m.path[..matched].to_vec();
+            // Demand signal for cross-shard rebalancing: the KV bytes
+            // this admission serves from GPU instead of recomputing.
+            tree.record_gpu_hit_bytes(&use_path);
             let alpha: usize = use_path
                 .iter()
                 .map(|&n| tree.node_tokens(n))

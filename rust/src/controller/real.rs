@@ -17,7 +17,7 @@ use super::retrieval_service::{
     RetrievalConfig, RetrievalService, RetrievalTask, StageReady,
 };
 use super::session::{FinishPath, SessionTable, SpecTotals, SpecWork};
-use super::shard::ShardedCacheService;
+use super::shard::{split_budget, ShardedCacheService};
 use crate::embed::EmbeddingModel;
 use crate::kvcache::{KvPayload, PageSpec};
 use crate::llm::tokenizer::{ByteTokenizer, SEP};
@@ -236,9 +236,12 @@ impl RealServer {
     }
 
     /// Build a K-shard cache service for this model, splitting the
-    /// configured tier budgets evenly across shards. Shared between the
-    /// M engine replicas of a concurrent deployment (each shard has its
-    /// own lock, so replicas admit in parallel).
+    /// configured tier budgets across shards so the slices sum to the
+    /// configured bytes EXACTLY (a truncating `budget / K` silently
+    /// dropped up to K−1 bytes — up to a whole page of cache — per
+    /// tier). Shared between the M engine replicas of a concurrent
+    /// deployment (each shard has its own lock, so replicas admit in
+    /// parallel).
     pub fn build_sharded_cache(
         kv_floats_per_token: usize,
         cfg: &RealConfig,
@@ -246,10 +249,12 @@ impl RealServer {
     ) -> ShardedCacheService {
         let k = shards.max(1);
         let page = Self::page_spec(kv_floats_per_token, cfg);
-        ShardedCacheService::build(k, |_| {
+        let gpu_slices = split_budget(cfg.gpu_cache_bytes, k);
+        let host_slices = split_budget(cfg.host_cache_bytes, k);
+        ShardedCacheService::build(k, |i| {
             KnowledgeTree::new(
-                cfg.gpu_cache_bytes / k as u64,
-                cfg.host_cache_bytes / k as u64,
+                gpu_slices[i],
+                host_slices[i],
                 page,
                 make_policy(cfg.policy),
                 true,
@@ -489,6 +494,11 @@ impl RealServer {
         let mut commits = BatchAdmission::new();
         commits.push_commit(commit_moved);
         commits.seal_commit(&self.driver);
+        // Cross-shard rebalance tick, once per blocking engine
+        // iteration (no-op unless `--rebalance on`). The donor
+        // swap-outs it may perform are in-process copies already inside
+        // measured wall-clock latency, mirroring admission transfers.
+        self.cache().maintenance_tick();
         results
     }
 
@@ -741,6 +751,10 @@ impl RealServer {
         timeout: Duration,
         cfg: &RealConfig,
     ) -> Vec<(u64, Result<RealResponse>)> {
+        // Cross-shard rebalance tick, once per multiplexer poll (the
+        // session-mode analogue of the blocking loop's per-iteration
+        // tick); no-op unless `--rebalance on`.
+        self.cache().maintenance_tick();
         let mut done = Vec::new();
         let Some(mut rt) = self.spec.take() else {
             return done;
@@ -998,6 +1012,8 @@ impl RealServer {
     pub fn proto_stats(&self) -> crate::server::proto::StatsResult {
         let s = self.stats();
         let c = self.cache().counters();
+        let occ = self.cache().shard_occupancies();
+        let rb = self.cache().rebalance_stats();
         crate::server::proto::StatsResult {
             requests: s.requests,
             mean_ttft_ms: s.mean_ttft_s * 1e3,
@@ -1009,6 +1025,15 @@ impl RealServer {
             spec_started: s.spec.started,
             spec_wasted: s.spec.wasted,
             spec_promoted: s.spec.promoted,
+            tree_gpu_hit_bytes: c.gpu_hit_bytes,
+            rebalance_recomputes: rb.recomputes,
+            rebalance_moved_bytes: rb.gpu_bytes_moved
+                + rb.host_bytes_moved,
+            shard_gpu_used: occ.iter().map(|o| o.gpu_used).collect(),
+            shard_gpu_capacity: occ
+                .iter()
+                .map(|o| o.gpu_capacity)
+                .collect(),
         }
     }
 }

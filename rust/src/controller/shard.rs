@@ -1,4 +1,5 @@
-//! Sharded knowledge-tree service (paper §5.1 scaled out).
+//! Sharded knowledge-tree service (paper §5.1 scaled out) with
+//! demand-driven cross-shard tier rebalancing.
 //!
 //! [`ShardedCacheService`] owns K independent [`CacheService`] shards —
 //! each with its own lock, tier-budget slice and counters — keyed by a
@@ -14,19 +15,179 @@
 //! owns the whole path and no path can span shards. Each shard carries
 //! its own permanently pinned root (the system prompt S of Fig. 8),
 //! mirroring a per-replica prompt prefix.
+//!
+//! ## Cross-shard tier rebalancing
+//!
+//! The paper's workloads are heavily skewed (Fig. 5/6: a few percent of
+//! documents absorb most accesses), so frozen 1/K budget slices leave a
+//! hot shard thrashing while cold shards strand idle GPU bytes. With
+//! rebalancing enabled ([`ShardedCacheService::enable_rebalancing`]),
+//! every engine loop calls [`maintenance_tick`] once per iteration;
+//! every [`RebalanceConfig::interval`] ticks the rebalancer recomputes
+//! demand-proportional slices and moves capacity cold → hot:
+//!
+//! ```text
+//!   tick ──► demand_i = Δgpu_hit_bytes + Δswap_out_bytes + gpu_used
+//!              │            (per-shard TreeCounters deltas + gauge)
+//!              ▼
+//!            targets = proportional_slices(total, demand, min_share)
+//!              │   Σ targets == configured budget, bit-exact
+//!              ▼
+//!            donors SHRINK first (evict-to-fit under the shard lock,
+//!            via the replacement policy; pinned nodes refuse — a
+//!            refused donor simply is not harvested), THEN receivers
+//!            GROW, hottest first, from what was actually freed
+//! ```
+//!
+//! The conservation invariant — the sum of shard capacities equals the
+//! configured budget, bit-exact, after every tick — holds by
+//! construction: receivers are only granted bytes a donor verifiably
+//! freed. Donor swap-outs are returned as [`Transfers`] so the sim
+//! driver keeps PCIe time charged; `--rebalance off` (no rebalancer
+//! installed) makes [`maintenance_tick`] a no-op and the static split
+//! bit-identical to the pre-rebalancing behavior.
+//!
+//! [`maintenance_tick`]: ShardedCacheService::maintenance_tick
 
 use super::pipeline::{Admission, CacheService, CommitOutcome};
-use crate::kvcache::KvPayload;
-use crate::tree::{DocId, KnowledgeTree, MatchResult, TreeCounters};
-use std::sync::Arc;
+use crate::kvcache::{KvPayload, Tier};
+use crate::tree::{
+    DocId, KnowledgeTree, MatchResult, TierOccupancy, Transfers,
+    TreeCounters,
+};
+use std::sync::{Arc, Mutex, TryLockError};
+
+/// Split `total` bytes into `k` slices that sum to `total` EXACTLY:
+/// `total / k` each, with the division remainder spread one byte per
+/// shard from the front. (A bare `total / k` per shard silently drops
+/// up to `k - 1` bytes of configured budget — the
+/// `build_sharded_cache` truncation bug.)
+pub fn split_budget(total: u64, k: usize) -> Vec<u64> {
+    let k = k.max(1) as u64;
+    let base = total / k;
+    let rem = total % k;
+    (0..k).map(|i| base + u64::from(i < rem)).collect()
+}
+
+/// Rebalancer tuning.
+#[derive(Debug, Clone)]
+pub struct RebalanceConfig {
+    /// Maintenance ticks (engine iterations / session polls) between
+    /// slice recomputations.
+    pub interval: u64,
+    /// Fraction of the fair 1/K share every shard always keeps, so a
+    /// cold shard can warm back up without first waiting a full
+    /// interval at zero capacity.
+    pub min_share: f64,
+    /// Dead band as a fraction of the fair share: a shard whose target
+    /// differs from its current slice by less than this is left alone,
+    /// so steady-state demand noise cannot churn capacity (and
+    /// evictions) back and forth.
+    pub hysteresis: f64,
+}
+
+impl Default for RebalanceConfig {
+    fn default() -> Self {
+        RebalanceConfig {
+            interval: 32,
+            min_share: 0.25,
+            hysteresis: 1.0 / 16.0,
+        }
+    }
+}
+
+/// Aggregate rebalancer activity counters (observability; threaded into
+/// the stats endpoint).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RebalanceStats {
+    /// Slice recomputations performed (interval boundaries reached).
+    pub recomputes: u64,
+    /// Shard capacity adjustments applied (donor shrinks + receiver
+    /// grows, both tiers).
+    pub moves: u64,
+    /// GPU-tier capacity bytes moved between shards, total.
+    pub gpu_bytes_moved: u64,
+    /// Host-tier capacity bytes moved between shards, total.
+    pub host_bytes_moved: u64,
+    /// Donor shrinks refused because pinned nodes kept the shard over
+    /// its shrink target.
+    pub refused_shrinks: u64,
+}
+
+/// Shared rebalancer state, guarded by one mutex: whichever engine's
+/// tick crosses the interval runs the recompute; concurrent tickers
+/// skip past a held lock instead of convoying behind an eviction sweep.
+struct RebalanceState {
+    cfg: RebalanceConfig,
+    /// Conserved totals — the configured budgets at enable time.
+    gpu_total: u64,
+    host_total: u64,
+    ticks: u64,
+    /// Per-shard counter snapshot at the last recompute, for deltas.
+    last: Vec<TreeCounters>,
+    stats: RebalanceStats,
+}
+
+/// The shared rebalancer handle. `state` is held across a whole
+/// recompute (including donor eviction sweeps); `published` holds a
+/// copy of the counters refreshed after each recompute, so the
+/// read-only stats path copies it in O(1) instead of queueing behind
+/// an in-flight sweep. Lock order is state → published (the publisher
+/// holds both momentarily); readers take `published` alone.
+struct Rebalancer {
+    state: Mutex<RebalanceState>,
+    published: Mutex<RebalanceStats>,
+}
+
+/// Split `total` proportionally to `demand`, with a per-slice floor of
+/// `min_share` of the fair share, summing to `total` EXACTLY (the
+/// truncation remainder goes to the highest-demand slices first, ties
+/// to the lower index — fully deterministic).
+fn proportional_slices(
+    total: u64,
+    demand: &[u128],
+    min_share: f64,
+) -> Vec<u64> {
+    let k = demand.len().max(1);
+    let fair = total / k as u64;
+    let floor = (fair as f64 * min_share.clamp(0.0, 1.0)) as u64;
+    // floor <= fair, so k * floor <= total.
+    let spread = total - floor * k as u64;
+    let sum: u128 = demand.iter().sum();
+    let mut out: Vec<u64> = if sum == 0 {
+        split_budget(spread, k)
+    } else {
+        demand
+            .iter()
+            .map(|&d| (spread as u128 * d / sum) as u64)
+            .collect()
+    };
+    let assigned: u64 = out.iter().sum();
+    let rem = spread - assigned; // < k: each term truncates < 1 away
+    if rem > 0 {
+        let mut order: Vec<usize> = (0..k).collect();
+        order.sort_by(|&a, &b| demand[b].cmp(&demand[a]).then(a.cmp(&b)));
+        for &i in order.iter().cycle().take(rem as usize) {
+            out[i] += 1;
+        }
+    }
+    for o in out.iter_mut() {
+        *o += floor;
+    }
+    debug_assert_eq!(out.iter().sum::<u64>(), total);
+    out
+}
 
 /// K independent [`CacheService`] shards behind the same protocol.
-/// Cloning shares the shards (each `CacheService` is itself a shared
-/// handle), so connection workers, engine drivers and estimators all
-/// see one cache.
+/// Cloning shares the shards AND the rebalancer state (each
+/// `CacheService` is itself a shared handle), so connection workers,
+/// engine drivers and estimators all see one cache.
 #[derive(Clone)]
 pub struct ShardedCacheService {
     shards: Arc<[CacheService]>,
+    /// Demand-driven tier rebalancer; `None` = static slices
+    /// (`--rebalance off`), bit-identical to the pre-rebalancing path.
+    rebalancer: Option<Arc<Rebalancer>>,
 }
 
 impl ShardedCacheService {
@@ -34,6 +195,7 @@ impl ShardedCacheService {
         assert!(!shards.is_empty(), "a cache needs at least one shard");
         ShardedCacheService {
             shards: shards.into(),
+            rebalancer: None,
         }
     }
 
@@ -170,6 +332,221 @@ impl ShardedCacheService {
         }
         (lost, recovered)
     }
+
+    /// Per-shard tier occupancy gauges (used/capacity, both tiers) —
+    /// the rebalancer's input and the stats endpoint's per-shard view.
+    pub fn shard_occupancies(&self) -> Vec<TierOccupancy> {
+        self.shards.iter().map(|s| s.occupancy()).collect()
+    }
+
+    /// Install the demand-driven tier rebalancer (`--rebalance on`).
+    /// The conserved totals are the shard capacities at this moment, so
+    /// enable BEFORE serving mutates anything — and BEFORE taking
+    /// clones: clones taken after this call share the rebalancer
+    /// state, but clones taken earlier keep `None` and tick as the
+    /// static path (the field lives in the handle, not behind the
+    /// shared `Arc`).
+    pub fn enable_rebalancing(&mut self, cfg: RebalanceConfig) {
+        let occ = self.shard_occupancies();
+        self.rebalancer = Some(Arc::new(Rebalancer {
+            state: Mutex::new(RebalanceState {
+                gpu_total: occ.iter().map(|o| o.gpu_capacity).sum(),
+                host_total: occ.iter().map(|o| o.host_capacity).sum(),
+                ticks: 0,
+                last: self
+                    .shards
+                    .iter()
+                    .map(|s| s.counters())
+                    .collect(),
+                cfg,
+                stats: RebalanceStats::default(),
+            }),
+            published: Mutex::new(RebalanceStats::default()),
+        }));
+    }
+
+    pub fn rebalancing_enabled(&self) -> bool {
+        self.rebalancer.is_some()
+    }
+
+    /// Rebalancer activity counters (zeros when rebalancing is off).
+    /// Reads the published copy — an O(1) lock never held across a
+    /// recompute — so a stats request cannot convoy behind a sibling
+    /// engine's in-flight eviction sweep.
+    pub fn rebalance_stats(&self) -> RebalanceStats {
+        match &self.rebalancer {
+            None => RebalanceStats::default(),
+            Some(rb) => match rb.published.lock() {
+                Ok(g) => *g,
+                Err(p) => *p.into_inner(),
+            },
+        }
+    }
+
+    /// One maintenance tick from an engine loop. Counts toward the
+    /// recompute interval; on an interval boundary, recomputes
+    /// demand-proportional slices and moves capacity cold → hot,
+    /// returning the donor evictions' swap-out transfers so the caller
+    /// charges link time (the sim driver delays its next iteration; the
+    /// real driver's copies are already in measured latency). No-op —
+    /// and lock-free — when rebalancing is off; a tick that finds the
+    /// state locked skips (a sibling engine is already rebalancing)
+    /// rather than convoying behind its eviction sweep.
+    pub fn maintenance_tick(&self) -> Option<Transfers> {
+        let rb = self.rebalancer.as_ref()?;
+        let mut st = match rb.state.try_lock() {
+            Ok(g) => g,
+            Err(TryLockError::Poisoned(p)) => p.into_inner(),
+            Err(TryLockError::WouldBlock) => return None,
+        };
+        st.ticks += 1;
+        if st.ticks % st.cfg.interval.max(1) != 0 {
+            return None;
+        }
+        let moved = self.rebalance_now(&mut st);
+        // Refresh the stats copy the read-only path serves from.
+        match rb.published.lock() {
+            Ok(mut g) => *g = st.stats,
+            Err(p) => *p.into_inner() = st.stats,
+        }
+        Some(moved)
+    }
+
+    /// Recompute slices from the per-shard demand signals and apply the
+    /// moves, one tier at a time.
+    fn rebalance_now(&self, st: &mut RebalanceState) -> Transfers {
+        let k = self.shards.len();
+        let counters: Vec<TreeCounters> =
+            self.shards.iter().map(|s| s.counters()).collect();
+        let occ = self.shard_occupancies();
+        // Demand: bytes served from GPU since the last recompute (hot
+        // traffic) + swap-out thrash (capacity shortage shows up as
+        // eviction bytes) + current GPU occupancy (an idle-but-warm
+        // working set is still demand; a cold empty shard is not).
+        let demand: Vec<u128> = (0..k)
+            .map(|i| {
+                let hit = counters[i]
+                    .gpu_hit_bytes
+                    .saturating_sub(st.last[i].gpu_hit_bytes);
+                let thrash = counters[i]
+                    .swap_out_bytes
+                    .saturating_sub(st.last[i].swap_out_bytes);
+                hit as u128 + thrash as u128 + occ[i].gpu_used as u128
+            })
+            .collect();
+        st.last = counters;
+        st.stats.recomputes += 1;
+        let mut moved = Transfers::default();
+        if demand.iter().sum::<u128>() == 0 {
+            return moved; // nothing observed yet: keep current slices
+        }
+        let gpu_targets =
+            proportional_slices(st.gpu_total, &demand, st.cfg.min_share);
+        let host_targets =
+            proportional_slices(st.host_total, &demand, st.cfg.min_share);
+        let gpu_current: Vec<u64> =
+            occ.iter().map(|o| o.gpu_capacity).collect();
+        let host_current: Vec<u64> =
+            occ.iter().map(|o| o.host_capacity).collect();
+        // Host tier first: a shard shrinking both tiers then swaps its
+        // GPU evictions into the already-trimmed host slice (what does
+        // not fit is dropped outright instead of paying a g2h burst
+        // only to be dropped by a host pass moments later), and a
+        // gpu-donor/host-receiver shard has its bigger host slice
+        // ready before the swap-outs arrive.
+        moved.merge(self.apply_tier(
+            Tier::Host,
+            &host_current,
+            &host_targets,
+            &demand,
+            st,
+        ));
+        moved.merge(self.apply_tier(
+            Tier::Gpu,
+            &gpu_current,
+            &gpu_targets,
+            &demand,
+            st,
+        ));
+        moved
+    }
+
+    /// Move one tier's capacity toward `targets`: donors shrink first
+    /// (evict-to-fit under their shard lock; a refusal — pinned nodes —
+    /// keeps their old slice), then receivers grow, hottest first, from
+    /// the bytes actually freed. Conservation holds at every step: a
+    /// byte is granted only after a donor verifiably released it.
+    fn apply_tier(
+        &self,
+        tier: Tier,
+        current: &[u64],
+        targets: &[u64],
+        demand: &[u128],
+        st: &mut RebalanceState,
+    ) -> Transfers {
+        let k = self.shards.len();
+        let fair = match tier {
+            Tier::Gpu => st.gpu_total,
+            Tier::Host => st.host_total,
+        } / k as u64;
+        let dead_band =
+            (fair as f64 * st.cfg.hysteresis.clamp(0.0, 1.0)) as u64;
+        let mut transfers = Transfers::default();
+        let mut freed: u64 = 0;
+        for i in 0..k {
+            if current[i].saturating_sub(targets[i]) <= dead_band {
+                continue; // not a donor (or within the dead band)
+            }
+            match self.shards[i].resize_tier(tier, targets[i]) {
+                Ok(t) => {
+                    transfers.merge(t);
+                    freed += current[i] - targets[i];
+                    st.stats.moves += 1;
+                }
+                // Refused (pinned nodes): the slice keeps its old size,
+                // but any evictions performed before the refusal still
+                // moved real bytes — keep them charged.
+                Err(t) => {
+                    transfers.merge(t);
+                    st.stats.refused_shrinks += 1;
+                }
+            }
+        }
+        if freed == 0 {
+            return transfers;
+        }
+        // Receivers take every freed byte, hottest first, each capped
+        // at its own target. No dead band on the grant side: grows
+        // never evict (hysteresis only matters for donors), and
+        // capping at the target means no receiver overshoots into
+        // being next tick's donor. Full distribution is guaranteed —
+        // targets and current slices both sum to the conserved total,
+        // so Σ receiver wants ≥ Σ donor excess ≥ freed.
+        let mut order: Vec<usize> = (0..k).collect();
+        order.sort_by(|&a, &b| demand[b].cmp(&demand[a]).then(a.cmp(&b)));
+        for &i in &order {
+            if freed == 0 {
+                break;
+            }
+            let want = targets[i].saturating_sub(current[i]);
+            if want == 0 {
+                continue;
+            }
+            let grant = want.min(freed);
+            let grown = self.shards[i]
+                .resize_tier(tier, current[i] + grant)
+                .is_ok();
+            debug_assert!(grown, "growing a tier never fails");
+            freed -= grant;
+            st.stats.moves += 1;
+            match tier {
+                Tier::Gpu => st.stats.gpu_bytes_moved += grant,
+                Tier::Host => st.stats.host_bytes_moved += grant,
+            }
+        }
+        debug_assert_eq!(freed, 0, "every freed byte was granted");
+        transfers
+    }
 }
 
 impl From<CacheService> for ShardedCacheService {
@@ -270,6 +647,100 @@ mod tests {
         assert_eq!(svc.counters().inserts, 4);
         assert_eq!(svc.pinned_nodes(), 0);
         svc.check_invariants();
+    }
+
+    /// Satellite bugfix: a K-way budget split must not drop the
+    /// `total % K` remainder bytes.
+    #[test]
+    fn split_budget_is_exact_for_awkward_k() {
+        for (total, k) in
+            [(103u64, 4usize), (7, 3), (1, 5), (0, 4), (1 << 33, 7)]
+        {
+            let slices = split_budget(total, k);
+            assert_eq!(slices.len(), k.max(1));
+            assert_eq!(
+                slices.iter().sum::<u64>(),
+                total,
+                "split of {total} over {k} drops bytes: {slices:?}"
+            );
+            // Slices differ by at most one byte.
+            let min = *slices.iter().min().unwrap();
+            let max = *slices.iter().max().unwrap();
+            assert!(max - min <= 1);
+        }
+    }
+
+    #[test]
+    fn proportional_slices_conserve_and_floor() {
+        // Skewed demand: slice 0 dominates but nobody drops below the
+        // min-share floor, and the sum is bit-exact.
+        let total = 1_000_003u64;
+        let demand = [1_000_000u128, 10, 10, 0];
+        let slices = proportional_slices(total, &demand, 0.25);
+        assert_eq!(slices.iter().sum::<u64>(), total);
+        let floor = (total / 4) / 4; // 25% of fair
+        for (i, &s) in slices.iter().enumerate() {
+            assert!(s >= floor, "slice {i} = {s} under floor {floor}");
+        }
+        assert!(slices[0] > slices[1]);
+        // Zero demand everywhere: fair split, still exact.
+        let flat = proportional_slices(total, &[0, 0, 0, 0], 0.25);
+        assert_eq!(flat.iter().sum::<u64>(), total);
+    }
+
+    /// Tentpole: skewed demand moves GPU capacity to the hot shard
+    /// under the conservation invariant; `--rebalance off` (no
+    /// rebalancer) leaves the static slices untouched.
+    #[test]
+    fn rebalance_moves_capacity_to_hot_shard() {
+        let mut svc = sharded(2, 64, 256); // 2 shards × 64-token GPU
+        let occ0 = svc.shard_occupancies();
+        let gpu_total: u64 =
+            occ0.iter().map(|o| o.gpu_capacity).sum();
+        svc.enable_rebalancing(RebalanceConfig {
+            interval: 1,
+            min_share: 0.25,
+            hysteresis: 0.0,
+        });
+        // All traffic on shard 0 (even docs), thrashing its 64-token
+        // slice: 3 docs of 32 tokens cycle through it.
+        for round in 0..6 {
+            for d in [0u32, 2, 4] {
+                let adm = svc.admit(&[(d, 32)], 4);
+                assert_eq!(adm.shard, 0);
+                svc.commit(&adm, 0.01, round as f64, None);
+            }
+            svc.maintenance_tick();
+            let occ = svc.shard_occupancies();
+            assert_eq!(
+                occ.iter().map(|o| o.gpu_capacity).sum::<u64>(),
+                gpu_total,
+                "conservation after every tick"
+            );
+            for (i, o) in occ.iter().enumerate() {
+                assert!(
+                    o.gpu_used <= o.gpu_capacity,
+                    "shard {i} over capacity: {o:?}"
+                );
+            }
+        }
+        let occ = svc.shard_occupancies();
+        assert!(
+            occ[0].gpu_capacity > occ[1].gpu_capacity,
+            "hot shard grew: {occ:?}"
+        );
+        assert!(svc.rebalance_stats().gpu_bytes_moved > 0);
+        svc.check_invariants();
+
+        // Static service (no rebalancer): ticks are no-ops.
+        let static_svc = sharded(2, 64, 256);
+        let before = static_svc.shard_occupancies();
+        assert!(static_svc.maintenance_tick().is_none());
+        assert_eq!(static_svc.shard_occupancies(), before);
+        assert_eq!(
+            static_svc.rebalance_stats(),
+            RebalanceStats::default()
+        );
     }
 
     #[test]

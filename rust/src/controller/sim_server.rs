@@ -13,7 +13,9 @@ use super::pipeline::{
     request_of, Admission, Pipeline, PipelineDriver,
 };
 use super::retrieval::{RetrievalTiming, StagedRetrieval};
-use super::shard::ShardedCacheService;
+use super::shard::{
+    split_budget, RebalanceConfig, RebalanceStats, ShardedCacheService,
+};
 use crate::config::{SystemConfig, SystemKind};
 use crate::kvcache::{PageSpec, TransferModel};
 use crate::llm::cost_model::{CostModel, CostProfile};
@@ -52,6 +54,9 @@ pub struct SimOutcome {
     /// DSP decisions), seconds — Table 4.
     pub mean_sched_time: f64,
     pub completed: usize,
+    /// Cross-shard rebalancer activity (zeros when `cache.rebalance`
+    /// is off or the cache is single-shard).
+    pub rebalance: RebalanceStats,
 }
 
 /// The simulation's [`PipelineDriver`]: virtual clock + analytic models.
@@ -131,24 +136,44 @@ impl SimServer {
             kv_bytes_per_token: model.kv_bytes_per_token,
         };
         let kind = *cfg.kind;
-        let tree = match kind {
+        let cache = match kind {
             SystemKind::VllmLike => None,
-            SystemKind::SglangLike => Some(KnowledgeTree::new(
-                cfg.cache.gpu_bytes,
-                0,
-                page,
-                make_policy(crate::config::PolicyKind::Lru),
-                false,
-                0,
-            )),
-            SystemKind::RagCache => Some(KnowledgeTree::new(
-                cfg.cache.gpu_bytes,
-                cfg.cache.host_bytes,
-                page,
-                make_policy(cfg.cache.policy),
-                cfg.cache.swap_out_only_once,
-                0,
-            )),
+            SystemKind::SglangLike => {
+                Some(ShardedCacheService::single(KnowledgeTree::new(
+                    cfg.cache.gpu_bytes,
+                    0,
+                    page,
+                    make_policy(crate::config::PolicyKind::Lru),
+                    false,
+                    0,
+                )))
+            }
+            SystemKind::RagCache => {
+                // K shards over exact (remainder-preserving) slices of
+                // the configured budgets; the optional rebalancer then
+                // moves those slices with demand.
+                let k = cfg.cache.shards.max(1);
+                let gpu_slices = split_budget(cfg.cache.gpu_bytes, k);
+                let host_slices = split_budget(cfg.cache.host_bytes, k);
+                let mut svc = ShardedCacheService::build(k, |i| {
+                    KnowledgeTree::new(
+                        gpu_slices[i],
+                        host_slices[i],
+                        page,
+                        make_policy(cfg.cache.policy),
+                        cfg.cache.swap_out_only_once,
+                        0,
+                    )
+                });
+                if cfg.cache.rebalance {
+                    svc.enable_rebalancing(RebalanceConfig {
+                        interval: cfg.cache.rebalance_interval.max(1)
+                            as u64,
+                        ..RebalanceConfig::default()
+                    });
+                }
+                Some(svc)
+            }
         };
         let reorder = kind == SystemKind::RagCache && cfg.sched.reorder;
         let spec_enabled = kind == SystemKind::RagCache && cfg.spec.enabled;
@@ -157,11 +182,8 @@ impl SimServer {
         } else {
             TransferModel::pcie4()
         };
-        let mut pipeline = Pipeline::new(
-            tree.map(ShardedCacheService::single),
-            reorder,
-            cfg.sched.window,
-        );
+        let mut pipeline =
+            Pipeline::new(cache, reorder, cfg.sched.window);
         pipeline.reserve_requests(trace.requests.len());
         Ok(SimServer {
             kind,
@@ -216,6 +238,12 @@ impl SimServer {
             .filter(|r| r.done)
             .count();
         SimOutcome {
+            rebalance: self
+                .pipeline
+                .cache
+                .as_ref()
+                .map(|c| c.rebalance_stats())
+                .unwrap_or_default(),
             tree_counters: self
                 .pipeline
                 .cache
@@ -404,6 +432,17 @@ impl SimServer {
     /// queue pop, with the members' H2D transfers coalesced into one
     /// burst — then keep the engine running.
     fn pump(&mut self) {
+        // Cross-shard rebalance tick (no-op unless `cache.rebalance`):
+        // donor evictions' swap-outs occupy the link exactly like a
+        // commit write-back burst, so they delay the next planned
+        // iteration through the same deferred charge.
+        if let Some(cache) = &self.pipeline.cache {
+            if let Some(moved) = cache.maintenance_tick() {
+                self.deferred_commit_s += self
+                    .driver
+                    .transfer_time(moved.h2g_bytes + moved.g2h_bytes);
+            }
+        }
         loop {
             let in_engine =
                 self.engine.waiting_len() + self.engine.decoding_len();
@@ -656,6 +695,48 @@ mod tests {
         let v = run_kind("vllm", 0.2, 20);
         assert_eq!(v.spec_wasted, 0);
         assert_eq!(v.spec_promoted, 0);
+    }
+
+    /// Tentpole: a sharded sim with rebalancing on completes the trace
+    /// and actually recomputes slices; with rebalancing off the
+    /// rebalancer never runs (static-split conformance stays with the
+    /// dedicated shard/rebalance suites).
+    #[test]
+    fn sharded_sim_with_rebalancing_completes() {
+        let corpus = Corpus::wikipedia_like(2_000, 1);
+        let mut cfg = cfg_for("ragcache");
+        cfg.cache.shards = 4;
+        cfg.cache.rebalance = true;
+        cfg.cache.rebalance_interval = 8;
+        let trace = Trace::generate(&MMLU, &corpus, 0.5, 60, 2, 17);
+        let server = SimServer::build(
+            &cfg,
+            trace,
+            2_000,
+            RetrievalTiming::default(),
+            9,
+        )
+        .unwrap();
+        let out = server.run();
+        assert_eq!(out.completed, 60);
+        assert!(out.rebalance.recomputes > 0, "{:?}", out.rebalance);
+
+        cfg.cache.rebalance = false;
+        let trace = Trace::generate(&MMLU, &corpus, 0.5, 60, 2, 17);
+        let server = SimServer::build(
+            &cfg,
+            trace,
+            2_000,
+            RetrievalTiming::default(),
+            9,
+        )
+        .unwrap();
+        let out = server.run();
+        assert_eq!(out.completed, 60);
+        assert_eq!(
+            out.rebalance,
+            crate::controller::RebalanceStats::default()
+        );
     }
 
     #[test]

@@ -62,6 +62,22 @@ impl TierAllocator {
         }
     }
 
+    /// Checked capacity update — the primitive behind demand-driven
+    /// cross-shard tier rebalancing. Growing always succeeds; shrinking
+    /// succeeds only when current usage already fits the new capacity
+    /// (the caller must evict to fit FIRST — see
+    /// [`crate::tree::KnowledgeTree::resize_budgets`]). Returns whether
+    /// the capacity changed; a refused shrink leaves the allocator
+    /// untouched, so `used <= capacity` holds unconditionally.
+    #[must_use]
+    pub fn set_capacity(&mut self, capacity: u64) -> bool {
+        if self.used > capacity {
+            return false;
+        }
+        self.capacity = capacity;
+        true
+    }
+
     /// Release a prior reservation. Releasing more than is in use is a
     /// caller bug: loud in debug builds, saturating (never wrapping) in
     /// release builds.
@@ -159,6 +175,28 @@ mod tests {
         assert_eq!(a.free(), 0);
         a.release(30);
         assert_eq!(a.used(), 70);
+    }
+
+    #[test]
+    fn set_capacity_grows_freely_and_shrinks_checked() {
+        let mut a = TierAllocator::new(100);
+        assert!(a.alloc(60));
+        // Growing always succeeds.
+        assert!(a.set_capacity(200));
+        assert_eq!(a.capacity(), 200);
+        assert_eq!(a.free(), 140);
+        // Shrinking to >= used succeeds, even exactly to used.
+        assert!(a.set_capacity(60));
+        assert_eq!(a.capacity(), 60);
+        assert_eq!(a.free(), 0);
+        // Shrinking below used is refused and leaves state untouched.
+        assert!(!a.set_capacity(59));
+        assert_eq!(a.capacity(), 60);
+        assert_eq!(a.used(), 60);
+        // After releasing, the same shrink fits.
+        a.release(10);
+        assert!(a.set_capacity(59));
+        assert_eq!(a.free(), 9);
     }
 
     #[test]

@@ -41,8 +41,15 @@ commands:
                                 off = blocking batched serving)
              [--retrieval-threads R] (staged-search pool size, default 2)
              [--stages S]      (stages per staged search, default 4)
+             [--rebalance on|off] (demand-driven cross-shard tier
+                                rebalancing: move GPU/host budget slices
+                                from cold shards to hot ones; default
+                                off = static 1/K split, bit-identical)
+             [--rebalance-interval N] (engine iterations between slice
+                                recomputes, default 32)
   simulate   --system ragcache|vllm|sglang --dataset mmlu --rate 0.8
              --requests 500 [--config FILE] [--model NAME] [--seed N]
+             [--shards K] [--rebalance on|off] [--rebalance-interval N]
   info       show models, GPUs, datasets, artifact status
 ";
 
@@ -269,6 +276,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if stages == 0 {
         return Err(anyhow!("--stages must be >= 1"));
     }
+    let rebalance = match args.get_or("rebalance", "off") {
+        "on" => true,
+        "off" => false,
+        other => {
+            return Err(anyhow!(
+                "--rebalance expects on|off, got '{other}'"
+            ))
+        }
+    };
+    let rebalance_interval: u64 = args
+        .get_parse_or("rebalance-interval", 32)
+        .map_err(|e| anyhow!(e))?;
+    if rebalance_interval == 0 {
+        return Err(anyhow!("--rebalance-interval must be >= 1"));
+    }
     if shards < engines.max(1) {
         // Engines drain shards routed shard % engines: with fewer
         // shards than engines the surplus engines would each load a
@@ -299,7 +321,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let manifest = ArtifactManifest::load(&artifacts_path)
         .context("loading artifact manifest")?;
     let kv_floats = manifest.model(&model)?.arch.kv_floats_per_token();
-    let cache = RealServer::build_sharded_cache(kv_floats, &cfg, shards);
+    let mut cache =
+        RealServer::build_sharded_cache(kv_floats, &cfg, shards);
+    if rebalance {
+        // Installed before any clone is taken, so every engine replica,
+        // the estimator and the router share ONE rebalancer state; each
+        // engine iteration / session poll ticks it.
+        cache.enable_rebalancing(
+            ragcache::controller::RebalanceConfig {
+                interval: rebalance_interval,
+                ..ragcache::controller::RebalanceConfig::default()
+            },
+        );
+    }
 
     // Cache-aware §5.2 priority estimator over the same shared cache
     // service the engines admit against: α from the live tree, β
@@ -376,9 +410,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!(
         "ragcache serving on {} ({docs} docs, {workers} connection \
          workers, {engines} engines, {shards} tree shards, \
-         {max_batch}-request admission batches, speculation {})",
+         {max_batch}-request admission batches, speculation {}, \
+         rebalancing {})",
         server.addr,
-        if speculate { "on" } else { "off" }
+        if speculate { "on" } else { "off" },
+        if rebalance { "on" } else { "off" }
     );
     println!("protocol: newline-delimited JSON; ops: query/stats/shutdown");
     // Block until the acceptor thread exits (shutdown op).
@@ -415,6 +451,24 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     if args.flag("no-spec") {
         cfg.spec.enabled = false;
     }
+    cfg.cache.shards = args
+        .get_parse_or("shards", cfg.cache.shards)
+        .map_err(|e| anyhow!(e))?;
+    if let Some(r) = args.get("rebalance") {
+        cfg.cache.rebalance = match r {
+            "on" => true,
+            "off" => false,
+            other => {
+                return Err(anyhow!(
+                    "--rebalance expects on|off, got '{other}'"
+                ))
+            }
+        };
+    }
+    cfg.cache.rebalance_interval = args
+        .get_parse_or("rebalance-interval", cfg.cache.rebalance_interval)
+        .map_err(|e| anyhow!(e))?;
+    cfg.validate()?;
 
     let profile = DatasetProfile::lookup(&cfg.workload.dataset)?;
     let corpus = Corpus::wikipedia_like(cfg.workload.num_docs, seed);
@@ -468,6 +522,18 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         "speculation: {} started, {} wasted, {} promoted",
         out.spec_started, out.spec_wasted, out.spec_promoted
     );
+    if cfg.cache.rebalance {
+        let rb = out.rebalance;
+        println!(
+            "rebalancing: {} recomputes, {} moves, {} gpu + {} host \
+             capacity moved, {} refused shrinks",
+            rb.recomputes,
+            rb.moves,
+            ragcache::util::fmt_bytes(rb.gpu_bytes_moved),
+            ragcache::util::fmt_bytes(rb.host_bytes_moved),
+            rb.refused_shrinks,
+        );
+    }
     Ok(())
 }
 

@@ -816,6 +816,14 @@ fn merge_stats(parts: &[proto::StatsResult]) -> proto::StatsResult {
                 / requests as f64
         }
     };
+    // Per-shard gauges come from ONE self-consistent engine snapshot —
+    // the freshest by rebalance progress. Element-wise max across
+    // snapshots taken at different times could combine a pre-move
+    // slice with a post-move one and report phantom capacity exceeding
+    // the conserved budget.
+    let freshest = parts.iter().max_by_key(|p| {
+        (p.shard_gpu_capacity.len(), p.rebalance_recomputes)
+    });
     proto::StatsResult {
         requests,
         mean_ttft_ms: weighted(|p| p.mean_ttft_ms),
@@ -835,6 +843,27 @@ fn merge_stats(parts: &[proto::StatsResult]) -> proto::StatsResult {
         spec_started: parts.iter().map(|p| p.spec_started).sum(),
         spec_wasted: parts.iter().map(|p| p.spec_wasted).sum(),
         spec_promoted: parts.iter().map(|p| p.spec_promoted).sum(),
+        tree_gpu_hit_bytes: parts
+            .iter()
+            .map(|p| p.tree_gpu_hit_bytes)
+            .max()
+            .unwrap_or(0),
+        rebalance_recomputes: parts
+            .iter()
+            .map(|p| p.rebalance_recomputes)
+            .max()
+            .unwrap_or(0),
+        rebalance_moved_bytes: parts
+            .iter()
+            .map(|p| p.rebalance_moved_bytes)
+            .max()
+            .unwrap_or(0),
+        shard_gpu_used: freshest
+            .map(|p| p.shard_gpu_used.clone())
+            .unwrap_or_default(),
+        shard_gpu_capacity: freshest
+            .map(|p| p.shard_gpu_capacity.clone())
+            .unwrap_or_default(),
     }
 }
 

@@ -51,6 +51,27 @@ pub struct StatsResult {
     pub spec_wasted: u64,
     /// Speculations confirmed by the final retrieval stage.
     pub spec_promoted: u64,
+    /// KV bytes admissions served from GPU-resident prefixes,
+    /// aggregated across shards (shared cache: max-merged across
+    /// engines, like the tree counters).
+    pub tree_gpu_hit_bytes: u64,
+    /// Cross-shard rebalancer slice recomputations (shared rebalancer
+    /// state: max-merged).
+    pub rebalance_recomputes: u64,
+    /// Tier-capacity bytes the rebalancer moved between shards, GPU +
+    /// host (max-merged).
+    pub rebalance_moved_bytes: u64,
+    /// Per-shard GPU bytes in use — the occupancy gauge that makes
+    /// skew (and rebalancing) observable. The fan-out merge takes both
+    /// shard arrays from ONE engine's snapshot (the freshest by
+    /// rebalance progress) so they stay self-consistent — mixing
+    /// snapshots taken across a capacity move could report more total
+    /// capacity than the conserved budget.
+    pub shard_gpu_used: Vec<u64>,
+    /// Per-shard GPU capacity slice (static 1/K split, or wherever the
+    /// rebalancer moved it); Σ == the configured budget. Merged from
+    /// the same snapshot as `shard_gpu_used`.
+    pub shard_gpu_capacity: Vec<u64>,
 }
 
 /// Server → client.
@@ -145,6 +166,36 @@ pub fn encode_response(resp: &Response) -> String {
             ("spec_started", Json::num(s.spec_started as f64)),
             ("spec_wasted", Json::num(s.spec_wasted as f64)),
             ("spec_promoted", Json::num(s.spec_promoted as f64)),
+            (
+                "tree_gpu_hit_bytes",
+                Json::num(s.tree_gpu_hit_bytes as f64),
+            ),
+            (
+                "rebalance_recomputes",
+                Json::num(s.rebalance_recomputes as f64),
+            ),
+            (
+                "rebalance_moved_bytes",
+                Json::num(s.rebalance_moved_bytes as f64),
+            ),
+            (
+                "shard_gpu_used",
+                Json::Arr(
+                    s.shard_gpu_used
+                        .iter()
+                        .map(|&b| Json::num(b as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "shard_gpu_capacity",
+                Json::Arr(
+                    s.shard_gpu_capacity
+                        .iter()
+                        .map(|&b| Json::num(b as f64))
+                        .collect(),
+                ),
+            ),
         ]),
         Response::Ok => Json::obj(vec![("type", Json::str("ok"))]),
         Response::Error { message } => Json::obj(vec![
@@ -153,6 +204,13 @@ pub fn encode_response(resp: &Response) -> String {
         ]),
     };
     v.to_string()
+}
+
+fn parse_u64_arr(v: &Json, key: &str) -> Vec<u64> {
+    v.get(key)
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_u64).collect())
+        .unwrap_or_default()
 }
 
 pub fn parse_response(line: &str) -> Result<Response> {
@@ -237,6 +295,20 @@ pub fn parse_response(line: &str) -> Result<Response> {
                 .get("spec_promoted")
                 .and_then(Json::as_u64)
                 .unwrap_or(0),
+            tree_gpu_hit_bytes: v
+                .get("tree_gpu_hit_bytes")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            rebalance_recomputes: v
+                .get("rebalance_recomputes")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            rebalance_moved_bytes: v
+                .get("rebalance_moved_bytes")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            shard_gpu_used: parse_u64_arr(v, "shard_gpu_used"),
+            shard_gpu_capacity: parse_u64_arr(v, "shard_gpu_capacity"),
         })),
         "ok" => Ok(Response::Ok),
         "error" => Ok(Response::Error {
@@ -295,6 +367,11 @@ mod tests {
                 spec_started: 9,
                 spec_wasted: 2,
                 spec_promoted: 5,
+                tree_gpu_hit_bytes: 4096,
+                rebalance_recomputes: 3,
+                rebalance_moved_bytes: 1024,
+                shard_gpu_used: vec![512, 0, 256, 128],
+                shard_gpu_capacity: vec![2048, 512, 768, 768],
             }),
             Response::Ok,
             Response::Error {

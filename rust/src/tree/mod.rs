@@ -92,7 +92,7 @@ impl Promotion {
 }
 
 /// Aggregate counters for observability and the ablation benches.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct TreeCounters {
     pub gpu_evictions: u64,
     pub host_evictions: u64,
@@ -100,6 +100,11 @@ pub struct TreeCounters {
     pub zero_copy_evictions: u64,
     pub inserts: u64,
     pub rejected_inserts: u64,
+    /// KV bytes served from the GPU-resident (promoted + pinned) prefix
+    /// at admission time — the per-shard demand signal the cross-shard
+    /// rebalancer feeds on, and the aggregate the skewed-workload CI
+    /// gate compares.
+    pub gpu_hit_bytes: u64,
 }
 
 impl TreeCounters {
@@ -112,7 +117,18 @@ impl TreeCounters {
         self.zero_copy_evictions += other.zero_copy_evictions;
         self.inserts += other.inserts;
         self.rejected_inserts += other.rejected_inserts;
+        self.gpu_hit_bytes += other.gpu_hit_bytes;
     }
+}
+
+/// Tier occupancy gauge of one tree (one shard): the used-vs-capacity
+/// signal the cross-shard rebalancer and the stats endpoint read.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TierOccupancy {
+    pub gpu_used: u64,
+    pub gpu_capacity: u64,
+    pub host_used: u64,
+    pub host_capacity: u64,
 }
 
 /// The multilevel knowledge tree.
@@ -218,6 +234,111 @@ impl KnowledgeTree {
 
     pub fn host_used(&self) -> u64 {
         self.host.used()
+    }
+
+    pub fn gpu_capacity(&self) -> u64 {
+        self.gpu.capacity()
+    }
+
+    pub fn host_capacity(&self) -> u64 {
+        self.host.capacity()
+    }
+
+    /// Snapshot of both tiers' used/capacity gauges.
+    pub fn occupancy(&self) -> TierOccupancy {
+        TierOccupancy {
+            gpu_used: self.gpu.used(),
+            gpu_capacity: self.gpu.capacity(),
+            host_used: self.host.used(),
+            host_capacity: self.host.capacity(),
+        }
+    }
+
+    /// Count the KV bytes an admission serves from its GPU-resident
+    /// (promoted + pinned) prefix — the rebalancer's demand signal.
+    pub fn record_gpu_hit_bytes(&mut self, path: &[NodeId]) {
+        self.counters.gpu_hit_bytes += path
+            .iter()
+            .map(|&n| self.page.payload_bytes(self.nodes[n.0].tokens))
+            .sum::<u64>();
+    }
+
+    /// Dynamically retarget the tier budgets (cross-shard rebalancing).
+    /// Growth always applies; a shrink first evicts-to-fit through the
+    /// normal replacement policy — GPU leaf-frontier order with
+    /// swap-out-to-host, host leaf-frontier drops — with pinned nodes
+    /// immovable, exactly as under admission pressure. `Ok` carries the
+    /// swap-out transfers performed so the caller keeps PCIe time
+    /// charged; `Err` means eviction could not make the residents fit
+    /// (everything left is pinned) and NO capacity changed on either
+    /// tier — but its payload still carries the transfers of the
+    /// evictions performed before the refusal, which stay in effect
+    /// and in the counters: like every other mid-path failure here,
+    /// bytes that actually moved are never uncounted.
+    pub fn resize_budgets(
+        &mut self,
+        gpu_bytes: u64,
+        host_bytes: u64,
+    ) -> Result<Transfers, Transfers> {
+        let mut transfers = Transfers::default();
+        // Feasibility first: if the pinned residents (plus their
+        // ancestor chains, which leaf-frontier eviction can never get
+        // past) already exceed the GPU target, refuse BEFORE evicting
+        // anything — otherwise a doomed shrink would swap out the
+        // whole unpinned working set for nothing, and a rebalancer
+        // retrying each interval would repeat that damage forever.
+        if gpu_bytes < self.gpu.used()
+            && self.gpu_unevictable_bytes() > gpu_bytes
+        {
+            return Err(transfers);
+        }
+        // Evict-to-fit BEFORE touching either capacity, so a refusal
+        // changes no budget. GPU first: its swap-outs land in host
+        // (within the host tier's CURRENT capacity — a simultaneous
+        // host grow applies only at the end, which is why the
+        // rebalancer resizes one tier at a time), and the host pass
+        // then trims against the new host target.
+        while self.gpu.used() > gpu_bytes {
+            let Some(victim) = self.pick_gpu_victim() else {
+                return Err(transfers);
+            };
+            transfers.merge(self.evict_gpu_node(victim));
+        }
+        while self.host.used() > host_bytes {
+            let Some(victim) = self.pick_host_victim(None) else {
+                return Err(transfers);
+            };
+            self.evict_host_node(victim);
+        }
+        let gpu_ok = self.gpu.set_capacity(gpu_bytes);
+        let host_ok = self.host.set_capacity(host_bytes);
+        debug_assert!(gpu_ok && host_ok, "evicted to fit above");
+        Ok(transfers)
+    }
+
+    /// Lower bound of GPU bytes leaf-frontier eviction can never free:
+    /// pinned GPU residents plus their ancestor chains (an ancestor
+    /// cannot be evicted while a pinned descendant is GPU-resident —
+    /// the hierarchy invariant keeps it below the frontier). This is
+    /// exact: every node outside this set heads a pin-free subtree,
+    /// peelable bottom-up.
+    fn gpu_unevictable_bytes(&self) -> u64 {
+        let mut keep = std::collections::BTreeSet::new();
+        for &i in &self.gpu_resident {
+            if self.nodes[i].pinned == 0 {
+                continue;
+            }
+            let mut cur = Some(NodeId(i));
+            while let Some(id) = cur {
+                if !keep.insert(id.0) {
+                    break; // shared ancestor chain already walked
+                }
+                cur = self.nodes[id.0].parent;
+            }
+        }
+        keep.iter()
+            .map(|&i| self.page.bytes(self.nodes[i].tokens))
+            .sum()
     }
 
     pub fn node_count(&self) -> usize {

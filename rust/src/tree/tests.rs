@@ -301,6 +301,100 @@ fn failed_skeleton_recache_leaves_tokens_untouched() {
     t.check_invariants();
 }
 
+/// Tentpole (dynamic tier budgets): growing is free, shrinking evicts
+/// to fit through the normal replacement policy and reports its
+/// swap-out transfers, and the accounting invariants hold throughout.
+#[test]
+fn resize_budgets_grow_and_shrink_with_eviction() {
+    let p = page();
+    let mut t = tree(48, 1000); // GPU: 3 × 16-token slots
+    insert_path(&mut t, &[1], 16, 0.0);
+    insert_path(&mut t, &[2], 16, 1.0);
+    insert_path(&mut t, &[3], 16, 2.0);
+    assert_eq!(t.gpu_used(), p.bytes(48));
+
+    // Grow: no movement, capacity up.
+    let moved = t.resize_budgets(p.bytes(64), p.bytes(1000)).unwrap();
+    assert_eq!(moved, Transfers::default());
+    assert_eq!(t.gpu_capacity(), p.bytes(64));
+
+    // Shrink to one slot: two leaf evictions swap to host and are
+    // reported as g2h transfers.
+    let moved = t.resize_budgets(p.bytes(16), p.bytes(1000)).unwrap();
+    assert_eq!(moved.g2h_bytes, 2 * 16 * 64);
+    assert_eq!(t.gpu_capacity(), p.bytes(16));
+    assert!(t.gpu_used() <= t.gpu_capacity());
+    let occ = t.occupancy();
+    assert_eq!(occ.gpu_capacity, p.bytes(16));
+    assert_eq!(occ.gpu_used, t.gpu_used());
+    t.check_invariants();
+}
+
+/// A shrink below what the pinned residents occupy is refused with NO
+/// capacity change on either tier.
+#[test]
+fn resize_budgets_refused_when_pinned() {
+    let p = page();
+    let mut t = tree(32, 64);
+    let a = insert_path(&mut t, &[1], 16, 0.0);
+    let b = insert_path(&mut t, &[2], 16, 1.0);
+    t.pin(&a);
+    t.pin(&b);
+    assert_eq!(
+        t.resize_budgets(p.bytes(16), p.bytes(64)),
+        Err(Transfers::default()),
+        "both residents pinned: refused before anything moved"
+    );
+    assert_eq!(t.gpu_capacity(), p.bytes(32), "capacity untouched");
+    assert_eq!(t.host_capacity(), p.bytes(64));
+    t.unpin(&a);
+    // With one unpinned leaf the same shrink now fits.
+    let moved = t.resize_budgets(p.bytes(16), p.bytes(64)).unwrap();
+    assert_eq!(moved.g2h_bytes, 16 * 64);
+    assert_eq!(t.node_tier(b[0]), Some(Tier::Gpu), "pinned survived");
+    assert_eq!(t.node_tier(a[0]), Some(Tier::Host));
+
+    // A shrink below the pinned bytes is refused by the feasibility
+    // pre-check BEFORE evicting anything — a doomed shrink must not
+    // swap out the unpinned working set for nothing (a rebalancer
+    // retrying each interval would repeat that damage).
+    let evictions_before = t.counters().gpu_evictions;
+    assert_eq!(
+        t.resize_budgets(p.bytes(16) / 2, p.bytes(64)),
+        Err(Transfers::default()),
+        "target below pinned residents: infeasible"
+    );
+    assert_eq!(
+        t.counters().gpu_evictions,
+        evictions_before,
+        "doomed shrink evicted nothing"
+    );
+    assert_eq!(t.gpu_capacity(), p.bytes(16), "capacity untouched");
+    t.unpin(&b);
+    t.check_invariants();
+}
+
+/// Host-tier shrinks drop host residents through the host frontier;
+/// hit-bytes counting feeds the rebalancer's demand signal.
+#[test]
+fn resize_host_and_hit_bytes_counter() {
+    let p = page();
+    let mut t = tree(16, 32);
+    insert_path(&mut t, &[1], 16, 0.0);
+    insert_path(&mut t, &[2], 16, 1.0); // 1 -> host
+    assert_eq!(t.host_used(), p.bytes(16));
+    let moved = t.resize_budgets(p.bytes(16), 0).unwrap();
+    assert_eq!(moved, Transfers::default(), "host drops move no bytes");
+    assert_eq!(t.host_capacity(), 0);
+    assert_eq!(t.host_used(), 0);
+    assert_eq!(t.counters().host_evictions, 1);
+
+    let m = t.lookup(&[2]);
+    t.record_gpu_hit_bytes(&m.path);
+    assert_eq!(t.counters().gpu_hit_bytes, 16 * 64);
+    t.check_invariants();
+}
+
 #[test]
 fn property_invariants_under_random_workload() {
     check_with(

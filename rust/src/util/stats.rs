@@ -92,11 +92,21 @@ impl Summary {
         self.percentile(99.0)
     }
 
+    /// Smallest sample; NaN when empty, like `mean`/`percentile` — a
+    /// bare fold would report `+inf`, which then leaks into JSON bench
+    /// reports as a spurious finite-looking extreme.
     pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
         self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest sample; NaN when empty (see [`Summary::min`]).
     pub fn max(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
         self.samples
             .iter()
             .cloned()
@@ -168,6 +178,14 @@ impl Histogram {
     }
 
     pub fn record(&mut self, x: f64) {
+        // A NaN sample (e.g. an aggregate over zero requests) lands in
+        // the unbounded overflow bucket instead of poisoning the
+        // binary search's `partial_cmp(..).unwrap()` — a histogram
+        // shared by serving threads must never panic mid-run.
+        if x.is_nan() {
+            *self.counts.last_mut().expect("counts never empty") += 1;
+            return;
+        }
         let idx = match self
             .bounds
             .binary_search_by(|b| b.partial_cmp(&x).unwrap())
@@ -276,6 +294,37 @@ mod tests {
         assert_eq!(s.percentile(50.0), 5.0);
         assert_eq!(s.percentile(0.0), 0.0);
         assert_eq!(s.percentile(100.0), 10.0);
+    }
+
+    /// Satellite bugfix: an empty sample set must report NaN from every
+    /// aggregate — `min`/`max` used to return ±INFINITY, inconsistent
+    /// with `percentile` and liable to leak `inf` into JSON reports.
+    #[test]
+    fn empty_summary_aggregates_are_nan() {
+        let mut s = Summary::new();
+        assert!(s.mean().is_nan());
+        assert!(s.percentile(50.0).is_nan());
+        assert!(s.min().is_nan(), "empty min must be NaN, not +inf");
+        assert!(s.max().is_nan(), "empty max must be NaN, not -inf");
+        // One sample restores normal behaviour.
+        s.add(2.0);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 2.0);
+    }
+
+    /// Satellite bugfix: recording NaN must count into the overflow
+    /// bucket, not panic a serving thread via `partial_cmp().unwrap()`.
+    #[test]
+    fn histogram_accepts_nan_into_overflow() {
+        let mut h = Histogram::exponential(1.0, 8.0);
+        h.record(f64::NAN);
+        h.record(2.0);
+        h.record(f64::NAN);
+        assert_eq!(h.total(), 3);
+        let buckets = h.buckets();
+        let (ub, count) = *buckets.last().unwrap();
+        assert_eq!(ub, f64::INFINITY);
+        assert_eq!(count, 2, "both NaNs in the overflow bucket");
     }
 
     #[test]

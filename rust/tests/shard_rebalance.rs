@@ -1,0 +1,356 @@
+//! Cross-shard tier rebalancing: skewed-routing divergence, the
+//! demand-driven rebalancer's invariants, static-split conformance and
+//! the acceptance comparison (rebalance-on must win aggregate GPU
+//! cache-hit bytes on a Zipfian workload without raising the summed
+//! transfer-time TTFT proxy), plus the `build_sharded_cache`
+//! remainder-bytes regression.
+
+use ragcache::config::PolicyKind;
+use ragcache::controller::real::{RealConfig, RealServer};
+use ragcache::controller::{
+    split_budget, Admission, RebalanceConfig, ShardedCacheService,
+};
+use ragcache::kvcache::{PageSpec, Tier, TransferModel};
+use ragcache::policy::make_policy;
+use ragcache::tree::KnowledgeTree;
+use ragcache::util::Rng;
+
+const DOC_TOKENS: usize = 32;
+
+fn page() -> PageSpec {
+    PageSpec {
+        block_tokens: 8,
+        kv_bytes_per_token: 16,
+    }
+}
+
+/// K=4 cache over EXACT slices of awkward (non-multiple-of-K) totals.
+fn build_cache(
+    gpu_total: u64,
+    host_total: u64,
+    k: usize,
+) -> ShardedCacheService {
+    let p = page();
+    let gpu = split_budget(gpu_total, k);
+    let host = split_budget(host_total, k);
+    ShardedCacheService::build(k, |i| {
+        KnowledgeTree::new(
+            gpu[i],
+            host[i],
+            p,
+            make_policy(PolicyKind::Pgdsf),
+            true,
+            0,
+        )
+    })
+}
+
+fn gpu_caps(svc: &ShardedCacheService) -> u64 {
+    svc.shard_occupancies()
+        .iter()
+        .map(|o| o.gpu_capacity)
+        .sum()
+}
+
+fn host_caps(svc: &ShardedCacheService) -> u64 {
+    svc.shard_occupancies()
+        .iter()
+        .map(|o| o.host_capacity)
+        .sum()
+}
+
+/// Deterministic Zipfian request stream over K=4 shards: hot doc of
+/// rank r (all routing to shard 0 — ids ≡ 0 mod 4) appears once every
+/// `r + 1` rounds (harmonic = Zipf s≈1 frequencies), and each cold
+/// shard's single doc appears once every 8 rounds. Every hot doc is
+/// requested at least once, so the hot working set is fully exercised.
+fn zipfian_requests(hot_docs: usize, rounds: usize) -> Vec<u32> {
+    let mut out = Vec::new();
+    for round in 0..rounds {
+        for r in 0..hot_docs {
+            if round % (r + 1) == 0 {
+                out.push(4 * r as u32);
+            }
+        }
+        if round % 8 == 7 {
+            out.push(1 + (round as u32 / 8) % 3); // shards 1..3
+        }
+    }
+    out
+}
+
+/// Serve one single-doc request through the admit → commit protocol,
+/// returning the TTFT transfer-time proxy its byte movement costs on a
+/// PCIe-4 link (admission H2D burst + commit write-back burst — what
+/// the sim driver would charge).
+fn serve_one(svc: &ShardedCacheService, doc: u32, now: f64) -> f64 {
+    let link = TransferModel::pcie4();
+    let adm = svc.admit(&[(doc, DOC_TOKENS)], 4);
+    let mut secs = link.transfer_time(adm.transfer_bytes());
+    svc.touch_hits(&adm, 1e-3, now);
+    let out = svc.commit(&adm, 1e-3, now, None);
+    secs += link
+        .transfer_time(out.transfers.h2g_bytes + out.transfers.g2h_bytes);
+    secs
+}
+
+/// Satellite regression: `build_sharded_cache` used to truncate
+/// `budget / K`, silently dropping up to K−1 bytes of configured cache
+/// per tier. The slices must sum to the configured budgets exactly,
+/// for awkward K.
+#[test]
+fn build_sharded_cache_preserves_configured_budget() {
+    for k in [1usize, 2, 3, 4, 5, 7] {
+        let cfg = RealConfig {
+            gpu_cache_bytes: 1_000_003,
+            host_cache_bytes: 777_778,
+            ..RealConfig::default()
+        };
+        let svc = RealServer::build_sharded_cache(4, &cfg, k);
+        assert_eq!(svc.num_shards(), k);
+        assert_eq!(
+            gpu_caps(&svc),
+            cfg.gpu_cache_bytes,
+            "K={k}: GPU remainder bytes dropped"
+        );
+        assert_eq!(
+            host_caps(&svc),
+            cfg.host_cache_bytes,
+            "K={k}: host remainder bytes dropped"
+        );
+    }
+}
+
+/// Skewed routing under the STATIC split: the Zipfian hot shard
+/// saturates its 1/K GPU slice and thrashes (evictions), while the
+/// cold shards strand idle GPU bytes — the divergence that motivates
+/// rebalancing.
+#[test]
+fn zipfian_routing_diverges_per_shard_occupancy() {
+    let p = page();
+    // 8 GPU doc-slots per shard; the hot shard's working set is 12.
+    let svc = build_cache(p.bytes(32 * DOC_TOKENS), p.bytes(4096), 4);
+    for (i, &doc) in zipfian_requests(12, 40).iter().enumerate() {
+        serve_one(&svc, doc, i as f64);
+    }
+    let occ = svc.shard_occupancies();
+    assert_eq!(
+        occ[0].gpu_used, occ[0].gpu_capacity,
+        "hot shard saturated: {occ:?}"
+    );
+    for i in 1..4 {
+        assert!(
+            occ[i].gpu_used <= occ[0].gpu_capacity / 4,
+            "cold shard {i} should strand idle bytes: {occ:?}"
+        );
+        assert_eq!(
+            svc.shard(i).counters().gpu_evictions,
+            0,
+            "cold shard {i} never under pressure"
+        );
+    }
+    assert!(
+        svc.shard(0).counters().gpu_evictions > 0,
+        "hot shard thrashes its static slice"
+    );
+    svc.check_invariants();
+}
+
+/// Acceptance: on the Zipfian workload, rebalance-on yields strictly
+/// more aggregate GPU cache-hit bytes than the static 1/K split, with
+/// no higher summed transfer-time (TTFT proxy) — including the
+/// rebalancer's own donor swap-out bursts — and exact budget
+/// conservation after every tick.
+#[test]
+fn zipfian_rebalance_beats_static_split() {
+    let p = page();
+    let link = TransferModel::pcie4();
+    let gpu_total = p.bytes(32 * DOC_TOKENS);
+    let host_total = p.bytes(4096);
+    let requests = zipfian_requests(12, 40);
+
+    let mut results = Vec::new();
+    for rebalance in [false, true] {
+        let mut svc = build_cache(gpu_total, host_total, 4);
+        if rebalance {
+            svc.enable_rebalancing(RebalanceConfig {
+                interval: 8,
+                ..RebalanceConfig::default()
+            });
+        }
+        let mut ttft_proxy = 0.0;
+        for (i, &doc) in requests.iter().enumerate() {
+            ttft_proxy += serve_one(&svc, doc, i as f64);
+            if let Some(moved) = svc.maintenance_tick() {
+                // The rebalancer's own burst counts against it.
+                ttft_proxy += link
+                    .transfer_time(moved.h2g_bytes + moved.g2h_bytes);
+            }
+            assert_eq!(gpu_caps(&svc), gpu_total, "conservation");
+            assert_eq!(host_caps(&svc), host_total, "conservation");
+        }
+        svc.check_invariants();
+        assert_eq!(svc.pinned_nodes(), 0);
+        results.push((svc.counters().gpu_hit_bytes, ttft_proxy));
+    }
+    let (hits_static, ttft_static) = results[0];
+    let (hits_dyn, ttft_dyn) = results[1];
+    assert!(
+        hits_dyn > hits_static,
+        "rebalancing must strictly win GPU hit bytes on skew: \
+         {hits_dyn} !> {hits_static}"
+    );
+    assert!(
+        ttft_dyn <= ttft_static,
+        "rebalancing must not raise the summed transfer-time proxy: \
+         {ttft_dyn} > {ttft_static}"
+    );
+}
+
+/// Randomized property test: across random admit/commit/hold/release
+/// interleavings with per-request rebalance ticks, every tick conserves
+/// both tier budgets bit-exactly, keeps `used <= capacity` on every
+/// shard, and never evicts a pinned node out of GPU.
+#[test]
+fn randomized_rebalancer_preserves_invariants() {
+    let p = page();
+    let mut rng = Rng::new(0xC0FFEE);
+    for case in 0..6u64 {
+        let k = 2 + (case as usize % 3); // 2..=4 shards
+        // Awkward budgets: not multiples of K or the page size.
+        let gpu_total = p.bytes(24 * DOC_TOKENS) + 3 * case + 1;
+        let host_total = p.bytes(2048) + 7 * case;
+        let mut svc = build_cache(gpu_total, host_total, k);
+        svc.enable_rebalancing(RebalanceConfig {
+            interval: 1 + case % 4,
+            min_share: 0.2,
+            hysteresis: if case % 2 == 0 { 0.0 } else { 1.0 / 16.0 },
+        });
+        let mut held: Vec<Admission> = Vec::new();
+        for step in 0..160 {
+            let now = step as f64;
+            let doc = rng.below(24) as u32;
+            match rng.index(8) {
+                0..=4 => {
+                    let adm = svc.admit(&[(doc, DOC_TOKENS)], 4);
+                    svc.commit(&adm, 1e-3, now, None);
+                }
+                5 => {
+                    // Hold an admission pinned across future ticks.
+                    let adm = svc.admit(&[(doc, DOC_TOKENS)], 4);
+                    held.push(adm);
+                }
+                6 if !held.is_empty() => {
+                    let adm = held.swap_remove(rng.index(held.len()));
+                    svc.release(&adm);
+                }
+                _ => {
+                    let adm = svc.admit(
+                        &[(doc, DOC_TOKENS), (doc + 1, DOC_TOKENS)],
+                        8,
+                    );
+                    svc.commit(&adm, 1e-3, now, None);
+                }
+            }
+            svc.maintenance_tick();
+            assert_eq!(gpu_caps(&svc), gpu_total, "case {case}");
+            assert_eq!(host_caps(&svc), host_total, "case {case}");
+            for (i, o) in svc.shard_occupancies().iter().enumerate() {
+                assert!(
+                    o.gpu_used <= o.gpu_capacity
+                        && o.host_used <= o.host_capacity,
+                    "case {case} shard {i} over budget: {o:?}"
+                );
+            }
+            // Pinned (held) paths must still be GPU-resident: the
+            // rebalancer's evict-to-fit may never touch a pinned node.
+            for adm in &held {
+                svc.shard(adm.shard).with(|t| {
+                    for &n in &adm.path {
+                        assert_eq!(
+                            t.node_tier(n),
+                            Some(Tier::Gpu),
+                            "case {case}: pinned node evicted"
+                        );
+                    }
+                });
+            }
+        }
+        for adm in held.drain(..) {
+            svc.commit(&adm, 1e-3, 1e6, None);
+        }
+        assert_eq!(svc.pinned_nodes(), 0, "case {case}: pins leaked");
+        svc.check_invariants();
+    }
+}
+
+/// Concurrency: engines admit while maintenance ticks run; after the
+/// dust settles the budgets are conserved and nothing leaked.
+#[test]
+fn concurrent_ticks_with_admissions_stay_sound() {
+    let p = page();
+    let gpu_total = p.bytes(32 * DOC_TOKENS) + 5;
+    let host_total = p.bytes(4096) + 11;
+    let mut svc = build_cache(gpu_total, host_total, 4);
+    svc.enable_rebalancing(RebalanceConfig {
+        interval: 4,
+        ..RebalanceConfig::default()
+    });
+    let mut joins = Vec::new();
+    for worker in 0..4u64 {
+        let svc = svc.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0xAB1E ^ worker);
+            for step in 0..200 {
+                let doc = rng.below(48) as u32;
+                let adm = svc.admit(&[(doc, DOC_TOKENS)], 4);
+                svc.commit(&adm, 1e-3, step as f64, None);
+                svc.maintenance_tick();
+            }
+        }));
+    }
+    for j in joins {
+        j.join().expect("worker");
+    }
+    assert_eq!(gpu_caps(&svc), gpu_total);
+    assert_eq!(host_caps(&svc), host_total);
+    assert_eq!(svc.pinned_nodes(), 0);
+    assert!(svc.rebalance_stats().recomputes > 0);
+    svc.check_invariants();
+}
+
+/// Conformance: with rebalancing OFF, `maintenance_tick` is a no-op —
+/// a served workload leaves counters, occupancies and lookups
+/// bit-identical to a cache that never heard of the rebalancer.
+#[test]
+fn rebalance_off_is_bit_identical_to_static() {
+    let p = page();
+    let requests = zipfian_requests(12, 24);
+    let plain = build_cache(p.bytes(32 * DOC_TOKENS), p.bytes(4096), 4);
+    let ticked = build_cache(p.bytes(32 * DOC_TOKENS), p.bytes(4096), 4);
+    for (i, &doc) in requests.iter().enumerate() {
+        serve_one(&plain, doc, i as f64);
+        serve_one(&ticked, doc, i as f64);
+        assert!(ticked.maintenance_tick().is_none(), "off = no-op");
+    }
+    assert_eq!(plain.counters(), ticked.counters());
+    assert_eq!(
+        plain.shard_occupancies(),
+        ticked.shard_occupancies(),
+        "occupancy gauges identical"
+    );
+    for i in 0..4 {
+        assert_eq!(
+            plain.shard(i).counters(),
+            ticked.shard(i).counters(),
+            "shard {i} counters identical"
+        );
+    }
+    for doc in 0..48u32 {
+        let a = plain.lookup(&[doc]);
+        let b = ticked.lookup(&[doc]);
+        assert_eq!(a.matched_docs, b.matched_docs);
+        assert_eq!(a.gpu_tokens, b.gpu_tokens);
+        assert_eq!(a.host_tokens, b.host_tokens);
+    }
+}
