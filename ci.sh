@@ -62,6 +62,39 @@ for w in 1 4; do
     done
 done
 
+# Chunk-level position-independent KV reuse: the randomized property /
+# conformance / interleaving suite under --release, then the serving
+# matrix swept across --chunk-cache {off,on} on both the batched and
+# event-driven paths (off must stay bit-identical to the chunk-free
+# path; on must pass the same structural gates with hits accounted).
+echo "== chunk reuse suite (--release) =="
+cargo test --release --test chunk_reuse -q
+echo "== chunk-cache serving sweep =="
+for c in off on; do
+    for s in off on; do
+        echo "-- serving_matrix --workers 4 --engines 2 --speculate $s --chunk-cache $c --"
+        cargo run --release --example serving_matrix -- \
+            --workers 4 --engines 2 --speculate "$s" --chunk-cache "$c"
+    done
+done
+
+# Chunk-reuse gate: on a reordered Zipfian doc-pair stream the chunk
+# cache must strictly reduce both the summed prefill tokens and the
+# TTFT proxy (PCIe + recompute time) vs chunk-off, and must not lose
+# on the in-order stream.
+echo "== chunk-cache reuse comparison =="
+cargo run --release --example serving_matrix -- --compare-chunk-cache
+
+# Regression benches: emit BENCH_serving (wall-clock serving bench) and
+# BENCH_reordering (virtual-clock fig18 matrix + chunk ablation), then
+# diff both against the committed bench_baselines/ within per-column
+# tolerance bands (provisional baselines pass on schema only).
+echo "== regression benches vs baselines =="
+cargo run --release --example serving_matrix -- --bench-serving
+cargo run --release --example bench_diff -- --name BENCH_serving
+cargo bench --bench fig18_reordering
+cargo run --release --example bench_diff -- --name BENCH_reordering
+
 # Cross-shard tier rebalancing sweep: the functional matrix under
 # --rebalance {off,on} (off must stay bit-identical to the static
 # split; on must conserve the configured budget exactly), plus the
@@ -105,6 +138,15 @@ if [ -f artifacts/manifest.json ]; then
     echo "-- e2e_serving --workers 4 --engines 2 --speculate on --"
     cargo run --release --example e2e_serving -- \
         --workers 4 --engines 2 --speculate on
+    # Chunk-cache sweep on the real-compute matrix: position-independent
+    # KV reuse must serve the same workload correctly with real PJRT
+    # prefills (off is covered by the sweep above).
+    echo "-- e2e_serving --workers 4 --engines 2 --chunk-cache on --"
+    cargo run --release --example e2e_serving -- \
+        --workers 4 --engines 2 --chunk-cache on
+    echo "-- e2e_serving --workers 4 --engines 2 --speculate on --chunk-cache on --"
+    cargo run --release --example e2e_serving -- \
+        --workers 4 --engines 2 --speculate on --chunk-cache on
 else
     echo "warn: artifacts/ not built, skipping e2e serving example"
 fi

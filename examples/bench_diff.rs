@@ -1,0 +1,163 @@
+//! Regression-bench differ: compare a freshly emitted
+//! `bench_out/<name>.json` report against the committed baseline in
+//! `bench_baselines/<name>.json`, with per-column tolerance bands.
+//!
+//! Column classes:
+//! - string columns (row labels) must match exactly, row by row;
+//! - wall-clock columns (names ending `_ms` or `_rps`) get the loose
+//!   band (`--loose-tol`, default 0.75 relative) — they measure the
+//!   host, not the code;
+//! - every other numeric column gets the tight band (`--tol`, default
+//!   0.15 relative) — virtual-clock latencies, token sums and byte
+//!   counters are deterministic at fixed seed, so drift there is a
+//!   real behaviour change.
+//!
+//! A baseline whose top level carries `"provisional": true` has not
+//! been pinned on real hardware yet: the differ validates that the
+//! fresh report parses and has the baseline's columns, prints how to
+//! pin it, and passes. Exits non-zero on any band violation.
+//!
+//! Run: `cargo run --release --example bench_diff -- --name BENCH_serving`
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+use ragcache::cli::Args;
+use ragcache::util::json::Json;
+
+/// One loaded report: rows as column→value maps, plus the baseline's
+/// provisional marker.
+struct Bench {
+    rows: Vec<BTreeMap<String, Json>>,
+    provisional: bool,
+}
+
+fn load(path: &str) -> Result<Bench> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {path}"))?;
+    let v = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+    let rows = v
+        .get("rows")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("{path}: missing rows"))?
+        .iter()
+        .map(|r| match r {
+            Json::Obj(kvs) => Ok(kvs.clone()),
+            _ => bail!("{path}: row is not an object"),
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let provisional = v
+        .get("provisional")
+        .and_then(Json::as_bool)
+        .unwrap_or(false);
+    Ok(Bench { rows, provisional })
+}
+
+/// Wall-clock columns: measured on the host, not simulated.
+fn is_loose(col: &str) -> bool {
+    col.ends_with("_ms") || col.ends_with("_rps")
+}
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &[]).map_err(anyhow::Error::msg)?;
+    let name = args
+        .get("name")
+        .ok_or_else(|| anyhow!("--name <report> is required"))?;
+    let tol: f64 =
+        args.get_parse_or("tol", 0.15).map_err(anyhow::Error::msg)?;
+    let loose_tol: f64 = args
+        .get_parse_or("loose-tol", 0.75)
+        .map_err(anyhow::Error::msg)?;
+    let out_path = format!(
+        "{}/{name}.json",
+        args.get_or("out-dir", "bench_out")
+    );
+    let base_path = format!(
+        "{}/{name}.json",
+        args.get_or("baseline-dir", "bench_baselines")
+    );
+
+    let fresh = load(&out_path)?;
+    let base = load(&base_path)?;
+    if fresh.rows.is_empty() {
+        bail!("{out_path}: no rows emitted");
+    }
+
+    if base.provisional {
+        // Schema check only: every baseline column must appear in the
+        // fresh rows, so the emitters and the baseline cannot drift
+        // silently while the numbers are still unpinned.
+        for brow in &base.rows {
+            for col in brow.keys() {
+                if !fresh.rows[0].contains_key(col) {
+                    bail!(
+                        "{out_path}: fresh report lacks baseline \
+                         column '{col}'"
+                    );
+                }
+            }
+        }
+        println!(
+            "bench_diff {name}: baseline is provisional — schema OK, \
+             numeric diff skipped.\nPin it with: cp {out_path} \
+             {base_path}  (and drop the \"provisional\" flag)"
+        );
+        return Ok(());
+    }
+
+    if fresh.rows.len() != base.rows.len() {
+        bail!(
+            "{name}: {} rows emitted vs {} in baseline",
+            fresh.rows.len(),
+            base.rows.len()
+        );
+    }
+    let mut failures = Vec::new();
+    for (i, (frow, brow)) in
+        fresh.rows.iter().zip(&base.rows).enumerate()
+    {
+        for (col, bval) in brow {
+            let Some(fval) = frow.get(col) else {
+                failures.push(format!("row {i}: missing column {col}"));
+                continue;
+            };
+            match (bval, fval) {
+                (Json::Str(b), Json::Str(f)) => {
+                    if b != f {
+                        failures.push(format!(
+                            "row {i} {col}: '{f}' != baseline '{b}'"
+                        ));
+                    }
+                }
+                (Json::Num(b), Json::Num(f)) => {
+                    let t = if is_loose(col) { loose_tol } else { tol };
+                    let band = t * b.abs().max(1e-9);
+                    if (f - b).abs() > band {
+                        failures.push(format!(
+                            "row {i} {col}: {f} outside {b} ± {band:.4} \
+                             ({:.0}% band)",
+                            t * 100.0
+                        ));
+                    }
+                }
+                _ => failures.push(format!(
+                    "row {i} {col}: type mismatch vs baseline"
+                )),
+            }
+        }
+    }
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("BENCH REGRESSION [{name}]: {f}");
+        }
+        std::process::exit(1);
+    }
+    println!(
+        "bench_diff {name}: {} rows within tolerance ({}%/{}% bands)",
+        base.rows.len(),
+        tol * 100.0,
+        loose_tol * 100.0
+    );
+    Ok(())
+}

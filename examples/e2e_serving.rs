@@ -12,7 +12,8 @@
 //! Two modes:
 //! - default: drive `RealServer::serve` directly (single engine, no
 //!   TCP), as the original composition proof.
-//! - `--workers N [--engines M] [--max-batch B]`: run the same workload
+//! - `--workers N [--engines M] [--max-batch B] [--chunk-cache on]
+//!   [--boundary-tokens R]`: run the same workload
 //!   through the concurrent TCP runtime — N connection workers, M
 //!   engine-driver replicas sharing one M-shard knowledge-tree cache,
 //!   each admitting up to B requests per iteration with their cache-hit
@@ -98,6 +99,21 @@ fn main() -> anyhow::Result<()> {
         "off" => false,
         other => anyhow::bail!("--speculate expects on|off, got {other}"),
     };
+    let chunk_cache = match args.get_or("chunk-cache", "off") {
+        "on" => true,
+        "off" => false,
+        other => {
+            anyhow::bail!("--chunk-cache expects on|off, got {other}")
+        }
+    };
+    let boundary_tokens: usize = args
+        .get_parse_or("boundary-tokens", 8)
+        .map_err(anyhow::Error::msg)?;
+    if chunk_cache && boundary_tokens == 0 {
+        anyhow::bail!(
+            "--boundary-tokens must be >= 1 with --chunk-cache on"
+        );
+    }
 
     let dir = Path::new("artifacts");
     if !dir.join("manifest.json").exists() {
@@ -111,6 +127,8 @@ fn main() -> anyhow::Result<()> {
             engines.max(1),
             max_batch,
             speculate,
+            chunk_cache,
+            boundary_tokens,
         );
     }
     serve_direct(dir)
@@ -200,6 +218,8 @@ fn serve_tcp_matrix(
     engines: usize,
     max_batch: usize,
     speculate: bool,
+    chunk_cache: bool,
+    boundary_tokens: usize,
 ) -> anyhow::Result<()> {
     let manifest = ArtifactManifest::load(dir)?;
     let mm = manifest.model("tiny-gqa")?;
@@ -207,6 +227,8 @@ fn serve_tcp_matrix(
     let cfg = RealConfig {
         speculate,
         spec_pool: max_batch,
+        chunk_cache,
+        boundary_tokens,
         ..RealConfig::default()
     };
     // One sharded tree (one shard per engine) shared by all replicas.

@@ -25,11 +25,26 @@
 //! must not lose on the uniform one, with the capacity-conservation
 //! invariant checked after serving.
 //!
+//! `--compare-chunk-cache` runs the chunk-reuse acceptance gate: the
+//! same Zipfian document-pair stream, served with `--chunk-cache off`
+//! and `on`. On the REORDERED stream (each request flips its pair's
+//! doc order at random, so the prefix tree keeps missing) chunk-cache
+//! on must strictly reduce both the summed prefill tokens (Σβ) and the
+//! transfer+prefill TTFT proxy; on the in-order stream it must not
+//! lose either.
+//!
+//! `--bench-serving` emits `bench_out/BENCH_serving.json`: one row per
+//! chunk mode with client-measured TTFT p50/p99, throughput and the
+//! cache counters, for `ci.sh`'s regression diff against
+//! `bench_baselines/`.
+//!
 //! Run: `cargo run --release --example serving_matrix -- \
 //!         --workers 4 --engines 2 [--shards K] [--clients 4]
 //!         [--max-batch B] [--speculate on|off] [--rebalance on|off]
 //!         [--rebalance-interval N]
-//!         [--compare-speculation] [--compare-rebalance]`
+//!         [--chunk-cache on|off] [--boundary-tokens R]
+//!         [--compare-speculation] [--compare-rebalance]
+//!         [--compare-chunk-cache] [--bench-serving]`
 
 use ragcache::cli::Args;
 use ragcache::config::PolicyKind;
@@ -186,7 +201,9 @@ impl MatrixHandler {
         self.served += 1;
         proto::QueryResult {
             id: self.served,
-            docs_hit: adm.matched_docs,
+            // A chunk hit serves its doc's KV just like a prefix match
+            // (modulo the boundary re-prefill), so it counts as hit.
+            docs_hit: adm.matched_docs + adm.chunk_hits.len(),
             cached_tokens: adm.alpha,
             computed_tokens: adm.beta,
             ttft_ms,
@@ -270,7 +287,7 @@ impl QueryHandler for MatrixHandler {
                 Ok(proto::QueryResult {
                     id: self.served,
                     docs: docs.clone(),
-                    docs_hit: adm.matched_docs,
+                    docs_hit: adm.matched_docs + adm.chunk_hits.len(),
                     cached_tokens: adm.alpha,
                     computed_tokens: adm.beta,
                     ttft_ms,
@@ -430,6 +447,9 @@ impl QueryHandler for MatrixHandler {
             spec_wasted: spec.wasted,
             spec_promoted: spec.promoted,
             tree_gpu_hit_bytes: c.gpu_hit_bytes,
+            chunk_hits: c.chunk_hits,
+            chunk_hit_bytes: c.chunk_hit_bytes,
+            boundary_recompute_tokens: c.boundary_recompute_tokens,
             rebalance_recomputes: rb.recomputes,
             rebalance_moved_bytes: rb.gpu_bytes_moved
                 + rb.host_bytes_moved,
@@ -450,20 +470,28 @@ fn query(target: u32) -> proto::Request {
     }
 }
 
-fn build_cache(shards: usize) -> ShardedCacheService {
+fn build_cache(
+    shards: usize,
+    chunk_cache: bool,
+    boundary_tokens: usize,
+) -> ShardedCacheService {
     let p = PageSpec {
         block_tokens: 8,
         kv_bytes_per_token: 16,
     };
     ShardedCacheService::build(shards, |_| {
-        KnowledgeTree::new(
+        let mut tree = KnowledgeTree::new(
             p.bytes(4096),
             p.bytes(8192),
             p,
             make_policy(PolicyKind::Pgdsf),
             true,
             0,
-        )
+        );
+        if chunk_cache {
+            tree.enable_chunk_cache(boundary_tokens);
+        }
+        tree
     })
 }
 
@@ -480,9 +508,14 @@ fn spawn_matrix(
     let est = svc.clone();
     let estimator: PriorityEstimator = Arc::new(move |req| match req {
         proto::Request::Query { target_doc, .. } => {
-            let m = est.lookup(&[*target_doc, *target_doc + 1]);
+            // Chunk-aware α: a doc reusable at any position counts as
+            // cached minus its boundary recompute; with the chunk
+            // cache off the reused term is 0 (PR 5 estimator exactly).
+            let (m, reused) =
+                est.lookup_with_chunks(&[*target_doc, *target_doc + 1]);
+            let cached = m.cached_tokens + reused;
             let total = 2 * DOC_TOKENS;
-            (m.cached_tokens, total.saturating_sub(m.cached_tokens).max(1))
+            (cached, total.saturating_sub(cached).max(1))
         }
         _ => (0, 1),
     });
@@ -690,6 +723,210 @@ fn compare_rebalance() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// One `--compare-chunk-cache` / `--bench-serving` measurement: drive
+/// the sharded cache service directly (no TCP, no synthetic sleeps)
+/// through the shared admission/commit accounting path over a fixed
+/// request stream, and report the summed prefill tokens Σβ, a
+/// transfer+prefill TTFT proxy (PCIe-4-ish 16 GB/s link + 50 µs/token
+/// prefill), and the chunk-hit count. Conservation and zero leaked
+/// pins are asserted after the stream.
+fn chunk_stream_run(
+    seqs: &[Vec<u32>],
+    chunk_cache: bool,
+    boundary_tokens: usize,
+) -> anyhow::Result<(u64, f64, u64)> {
+    let svc = build_cache(1, chunk_cache, boundary_tokens);
+    let mut sum_beta = 0u64;
+    let mut proxy_s = 0.0f64;
+    for (i, docs) in seqs.iter().enumerate() {
+        let docs_tokens: Vec<(u32, usize)> =
+            docs.iter().map(|&d| (d, DOC_TOKENS)).collect();
+        let adm = svc.admit(&docs_tokens, 4);
+        let now = i as f64;
+        svc.touch_hits(&adm, 1e-3, now);
+        let out = svc.commit(&adm, 1e-3, now, None);
+        sum_beta += adm.beta as u64;
+        let moved = adm.transfer_bytes()
+            + out.transfers.h2g_bytes
+            + out.transfers.g2h_bytes;
+        proxy_s += moved as f64 / 16e9 + adm.beta as f64 * 50e-6;
+    }
+    svc.check_invariants();
+    if svc.pinned_nodes() != 0 {
+        anyhow::bail!("{} pins leaked", svc.pinned_nodes());
+    }
+    Ok((sum_beta, proxy_s, svc.counters().chunk_hits))
+}
+
+/// The Zipfian document-pair streams of the chunk-cache gate: 8 pairs
+/// of 32-token docs, 200 requests drawn Zipfian(1.5). `reordered`
+/// flips each request's pair order on a deterministic RNG bit, which
+/// defeats prefix matching while leaving the doc set identical.
+fn chunk_streams(reordered: bool) -> Vec<Vec<u32>> {
+    let mut rng = ragcache::util::Rng::new(0xC0C_AC4E);
+    let weights: Vec<f64> = (0..8)
+        .map(|i| 1.0 / ((i + 1) as f64).powf(1.5))
+        .collect();
+    (0..200)
+        .map(|_| {
+            let pair = rng.weighted_index(&weights) as u32;
+            let (a, b) = (2 * pair, 2 * pair + 1);
+            // Draw the flip bit in BOTH modes so the pair sequence is
+            // identical between the in-order and reordered streams.
+            let flip = rng.index(2) == 1;
+            if reordered && flip {
+                vec![b, a]
+            } else {
+                vec![a, b]
+            }
+        })
+        .collect()
+}
+
+/// Acceptance gate for chunk-level position-independent reuse: on the
+/// reordered Zipfian pair stream, `--chunk-cache on` must strictly
+/// reduce both Σβ (summed prefill tokens) and the transfer+prefill
+/// TTFT proxy vs off; on the in-order stream it must not lose either.
+fn compare_chunk_cache() -> anyhow::Result<()> {
+    let mut failed = false;
+    for reordered in [true, false] {
+        let seqs = chunk_streams(reordered);
+        let (beta_off, proxy_off, _) = chunk_stream_run(&seqs, false, 8)?;
+        let (beta_on, proxy_on, hits_on) =
+            chunk_stream_run(&seqs, true, 8)?;
+        let label = if reordered { "reordered" } else { "in-order " };
+        println!(
+            "  {label}: prefill tokens off {beta_off} on {beta_on} \
+             ({:.2}x), ttft proxy off {proxy_off:.4}s on {proxy_on:.4}s, \
+             {hits_on} chunk hits",
+            beta_off as f64 / beta_on.max(1) as f64
+        );
+        if reordered {
+            if beta_on >= beta_off {
+                eprintln!(
+                    "FAIL: chunk cache must strictly reduce prefill \
+                     tokens on the reordered stream ({beta_on} !< \
+                     {beta_off})"
+                );
+                failed = true;
+            }
+            if proxy_on >= proxy_off {
+                eprintln!(
+                    "FAIL: chunk cache must strictly reduce the TTFT \
+                     proxy on the reordered stream ({proxy_on:.4} !< \
+                     {proxy_off:.4})"
+                );
+                failed = true;
+            }
+            if hits_on == 0 {
+                eprintln!(
+                    "FAIL: reordered stream produced no chunk hits"
+                );
+                failed = true;
+            }
+        } else {
+            if beta_on > beta_off {
+                eprintln!(
+                    "FAIL: chunk cache must not lose prefill tokens \
+                     in order ({beta_on} > {beta_off})"
+                );
+                failed = true;
+            }
+            if proxy_on > proxy_off + 1e-9 {
+                eprintln!(
+                    "FAIL: chunk cache must not lose the TTFT proxy \
+                     in order ({proxy_on:.4} > {proxy_off:.4})"
+                );
+                failed = true;
+            }
+        }
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    println!("OK: chunk reuse wins on reorder and holds in order");
+    Ok(())
+}
+
+/// `--bench-serving`: emit `bench_out/BENCH_serving.json` — one row per
+/// chunk mode over the reordered Zipfian pair stream (the workload the
+/// chunk cache exists for), with wall-clock p50/p99 per-request latency
+/// and throughput plus the deterministic cache counters. `ci.sh` diffs
+/// it against `bench_baselines/BENCH_serving.json`.
+fn bench_serving() -> anyhow::Result<()> {
+    use ragcache::util::json::Json;
+    let mut r = ragcache::bench::Report::new(
+        "BENCH_serving",
+        "serving regression bench: reordered Zipfian doc pairs through \
+         the shared admission path, chunk cache off vs on",
+        &[
+            "chunk_cache",
+            "requests",
+            "ttft_p50_ms",
+            "ttft_p99_ms",
+            "throughput_rps",
+            "sum_prefill_tokens",
+            "ttft_proxy_s",
+            "gpu_hit_bytes",
+            "chunk_hits",
+            "chunk_hit_bytes",
+            "boundary_recompute_tokens",
+            "tree_inserts",
+            "swap_out_bytes",
+        ],
+    );
+    let seqs = chunk_streams(true);
+    for chunk in [false, true] {
+        let svc = build_cache(1, chunk, 8);
+        let mut lat = ragcache::util::Summary::new();
+        let t0 = Instant::now();
+        let mut sum_beta = 0u64;
+        let mut proxy_s = 0.0f64;
+        for (i, docs) in seqs.iter().enumerate() {
+            let tq = Instant::now();
+            let docs_tokens: Vec<(u32, usize)> =
+                docs.iter().map(|&d| (d, DOC_TOKENS)).collect();
+            let adm = svc.admit(&docs_tokens, 4);
+            let now = i as f64;
+            svc.touch_hits(&adm, 1e-3, now);
+            let out = svc.commit(&adm, 1e-3, now, None);
+            sum_beta += adm.beta as u64;
+            let moved = adm.transfer_bytes()
+                + out.transfers.h2g_bytes
+                + out.transfers.g2h_bytes;
+            proxy_s += moved as f64 / 16e9 + adm.beta as f64 * 50e-6;
+            lat.add(tq.elapsed().as_secs_f64() * 1e3);
+        }
+        let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+        svc.check_invariants();
+        if svc.pinned_nodes() != 0 {
+            anyhow::bail!("{} pins leaked", svc.pinned_nodes());
+        }
+        let c = svc.counters();
+        r.row(vec![
+            Json::str(if chunk { "on" } else { "off" }),
+            Json::num(seqs.len() as f64),
+            Json::num(lat.median()),
+            Json::num(lat.p99()),
+            Json::num(seqs.len() as f64 / elapsed),
+            Json::num(sum_beta as f64),
+            Json::num(proxy_s),
+            Json::num(c.gpu_hit_bytes as f64),
+            Json::num(c.chunk_hits as f64),
+            Json::num(c.chunk_hit_bytes as f64),
+            Json::num(c.boundary_recompute_tokens as f64),
+            Json::num(c.inserts as f64),
+            Json::num(c.swap_out_bytes as f64),
+        ]);
+    }
+    r.note(
+        "ttft_p50/p99/throughput are wall-clock (loose tolerance); \
+         token and byte counters are deterministic",
+    );
+    r.finish();
+    Ok(())
+}
+
 /// Acceptance comparison: cold cache, retrieval-heavy timing (staged
 /// search latency ≥ prefill latency), identical serial workload.
 /// Speculation must strictly lower the summed TTFT: the speculative
@@ -699,7 +936,7 @@ fn compare_speculation(workers: usize) -> anyhow::Result<()> {
     let requests: Vec<u32> = (0..12).collect(); // ids < NUM_DOCS/stages
     let mut sums = Vec::new();
     for speculate in [false, true] {
-        let svc = build_cache(1); // fresh cold cache per mode
+        let svc = build_cache(1, false, 8); // fresh cold cache per mode
         let server = spawn_matrix(
             &svc, workers, 1, 8, timing, speculate, !speculate,
         )?;
@@ -745,7 +982,12 @@ fn main() -> anyhow::Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(
         &raw,
-        &["compare-speculation", "compare-rebalance"],
+        &[
+            "compare-speculation",
+            "compare-rebalance",
+            "compare-chunk-cache",
+            "bench-serving",
+        ],
     )
     .map_err(anyhow::Error::msg)?;
     let workers: usize = args
@@ -776,11 +1018,32 @@ fn main() -> anyhow::Result<()> {
     let rebalance_interval: u64 = args
         .get_parse_or("rebalance-interval", 8)
         .map_err(anyhow::Error::msg)?;
+    let chunk_cache = match args.get_or("chunk-cache", "off") {
+        "on" => true,
+        "off" => false,
+        other => {
+            anyhow::bail!("--chunk-cache expects on|off, got {other}")
+        }
+    };
+    let boundary_tokens: usize = args
+        .get_parse_or("boundary-tokens", 8)
+        .map_err(anyhow::Error::msg)?;
+    if chunk_cache && boundary_tokens == 0 {
+        anyhow::bail!(
+            "--boundary-tokens must be >= 1 with --chunk-cache on"
+        );
+    }
     if args.flag("compare-speculation") {
         return compare_speculation(workers.max(1));
     }
     if args.flag("compare-rebalance") {
         return compare_rebalance();
+    }
+    if args.flag("compare-chunk-cache") {
+        return compare_chunk_cache();
+    }
+    if args.flag("bench-serving") {
+        return bench_serving();
     }
     if max_batch == 0 {
         anyhow::bail!("--max-batch must be >= 1");
@@ -792,7 +1055,7 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    let mut svc = build_cache(shards);
+    let mut svc = build_cache(shards, chunk_cache, boundary_tokens);
     let gpu_budget: u64 = svc
         .shard_occupancies()
         .iter()
@@ -817,9 +1080,10 @@ fn main() -> anyhow::Result<()> {
     println!(
         "serving matrix on {addr}: {workers} workers, {engines} engines, \
          {shards} shards, {clients} clients, {max_batch}-request \
-         batches, speculation {}, rebalancing {}",
+         batches, speculation {}, rebalancing {}, chunk cache {}",
         if speculate { "on" } else { "off" },
-        if rebalance { "on" } else { "off" }
+        if rebalance { "on" } else { "off" },
+        if chunk_cache { "on" } else { "off" }
     );
 
     // Warm phase: one client inserts every target's docs (cold).
@@ -905,10 +1169,13 @@ fn main() -> anyhow::Result<()> {
     if ok != proto::Response::Ok {
         failures.push(format!("shutdown answered {ok:?}"));
     }
-    if !speculate && warm_misses != TARGETS as usize {
+    if !speculate && !chunk_cache && warm_misses != TARGETS as usize {
         // Session mode retrieves real neighbors, whose pairs overlap
         // across targets — cold misses are only exact with the fixed
-        // disjoint pairs of the blocking mode.
+        // disjoint pairs of the blocking mode. The chunk cache also
+        // breaks exactness: warm pairs [t, t+1] overlap on their
+        // shared doc, which chunk probing serves position-
+        // independently already during the warm sweep.
         failures.push(format!(
             "warm phase: {warm_misses}/{TARGETS} cold misses"
         ));
@@ -947,6 +1214,35 @@ fn main() -> anyhow::Result<()> {
                 stats.tree_inserts, c.inserts
             ));
         }
+    } else if chunk_cache {
+        // Chunk hits serve their doc in place instead of re-inserting
+        // it into a fresh prefix chain, so the exact 2×TARGETS insert
+        // count of the prefix-only path no longer applies; pin
+        // stats/cache consistency and that chunk reuse happened.
+        if stats.tree_inserts != c.inserts || c.inserts == 0 {
+            failures.push(format!(
+                "tree inserts: stats {} vs cache {}",
+                stats.tree_inserts, c.inserts
+            ));
+        }
+        if c.chunk_hits == 0 {
+            failures.push("chunk cache on but never hit".to_string());
+        }
+        if stats.chunk_hits != c.chunk_hits
+            || stats.chunk_hit_bytes != c.chunk_hit_bytes
+            || stats.boundary_recompute_tokens
+                != c.boundary_recompute_tokens
+        {
+            failures.push(format!(
+                "chunk counters: stats {}/{}/{} vs cache {}/{}/{}",
+                stats.chunk_hits,
+                stats.chunk_hit_bytes,
+                stats.boundary_recompute_tokens,
+                c.chunk_hits,
+                c.chunk_hit_bytes,
+                c.boundary_recompute_tokens
+            ));
+        }
     } else if stats.tree_inserts != c.inserts
         || c.inserts != 2 * TARGETS as u64
     {
@@ -955,6 +1251,12 @@ fn main() -> anyhow::Result<()> {
             stats.tree_inserts,
             c.inserts,
             2 * TARGETS
+        ));
+    }
+    if !chunk_cache && stats.chunk_hits != 0 {
+        failures.push(format!(
+            "chunk cache off but {} hits reported",
+            stats.chunk_hits
         ));
     }
     // Tentpole gate: whatever the rebalancer did (or didn't — static

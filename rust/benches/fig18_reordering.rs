@@ -18,26 +18,73 @@ fn main() {
         "cache-aware reordering: mean TTFT (s) slightly above the\n         saturation knee (MMLU 1.35 req/s, NQ 1.1 req/s)",
         &["dataset", "host_gib", "reorder_ttft", "fifo_ttft", "gain"],
     );
-    for (profile, ds, rate) in
-        [(&MMLU, "mmlu", 1.35), (&NATURAL_QUESTIONS, "nq", 1.1)]
-    {
+    // Regression-bench rows (BENCH_reordering.json): every fig18 run
+    // plus chunk-cache-on counterparts at one host size per dataset,
+    // with the full metric set ci.sh diffs against bench_baselines/.
+    let mut bench = Report::new(
+        "BENCH_reordering",
+        "reordering bench matrix with chunk-cache ablation rows",
+        &[
+            "dataset",
+            "host_gib",
+            "reorder",
+            "chunk_cache",
+            "ttft_p50",
+            "ttft_p99",
+            "throughput_rps",
+            "gpu_hit_bytes",
+            "chunk_hits",
+            "chunk_hit_bytes",
+            "boundary_recompute_tokens",
+            "pcie_h2g_bytes",
+            "pcie_g2h_bytes",
+        ],
+    );
+    let mut bench_row =
+        |ds: &str, host_gib: u64, reorder: bool, chunk: bool| {
+            let mut cfg = SystemConfig::default();
+            cfg.cache.host_bytes = host_gib * GIB;
+            cfg.sched.reorder = reorder;
+            cfg.spec.enabled = false; // isolate reordering
+            cfg.cache.chunk_cache = chunk;
+            let profile = if ds == "mmlu" { &MMLU } else { &NATURAL_QUESTIONS };
+            let rate = if ds == "mmlu" { 1.35 } else { 1.1 };
+            let out = run_sim(
+                &cfg,
+                profile,
+                NUM_DOCS,
+                rate,
+                REQUESTS,
+                RetrievalTiming::default(),
+                47,
+            );
+            let mut ttft = out.recorder.ttft();
+            bench.row(vec![
+                Json::str(ds),
+                Json::num(host_gib as f64),
+                Json::str(if reorder { "on" } else { "off" }),
+                Json::str(if chunk { "on" } else { "off" }),
+                Json::num(ttft.median()),
+                Json::num(ttft.p99()),
+                Json::num(out.recorder.throughput()),
+                Json::num(
+                    out.tree_counters
+                        .map(|c| c.gpu_hit_bytes)
+                        .unwrap_or(0) as f64,
+                ),
+                Json::num(out.chunk_hits as f64),
+                Json::num(out.chunk_hit_bytes as f64),
+                Json::num(out.boundary_recompute_tokens as f64),
+                Json::num(out.pcie_h2g_bytes as f64),
+                Json::num(out.pcie_g2h_bytes as f64),
+            ]);
+            out.recorder.ttft().mean()
+        };
+    for (ds, _rate) in [("mmlu", 1.35), ("nq", 1.1)] {
         for host_gib in [16u64, 32, 64, 128] {
             let mut ttfts = Vec::new();
             for reorder in [true, false] {
-                let mut cfg = SystemConfig::default();
-                cfg.cache.host_bytes = host_gib * GIB;
-                cfg.sched.reorder = reorder;
-                cfg.spec.enabled = false; // isolate reordering
-                let out = run_sim(
-                    &cfg,
-                    profile,
-                    NUM_DOCS,
-                    rate,
-                    REQUESTS,
-                    RetrievalTiming::default(),
-                    47,
-                );
-                ttfts.push(out.recorder.ttft().mean());
+                ttfts.push(bench_row(ds, host_gib, reorder, false));
             }
             r.row(vec![
                 Json::str(ds),
@@ -47,7 +94,16 @@ fn main() {
                 Json::num(ttfts[1] / ttfts[0]),
             ]);
         }
+        // Chunk-cache ablation rows at one host size, both orders.
+        for reorder in [true, false] {
+            bench_row(ds, 32, reorder, true);
+        }
     }
     r.note("paper: reordering reduces TTFT by 1.2-2.1x at saturating rates (window 32)");
     r.finish();
+    bench.note(
+        "ttft/throughput rows are virtual-clock deterministic \
+         (seed 47); chunk rows at host_gib=32 only",
+    );
+    bench.finish();
 }

@@ -89,6 +89,14 @@ pub struct CacheConfig {
     pub rebalance: bool,
     /// Engine iterations between rebalance recomputations.
     pub rebalance_interval: usize,
+    /// Chunk-level position-independent KV reuse beside the prefix tree
+    /// (`--chunk-cache on`): docs that miss the prefix walk can reuse a
+    /// cached chunk at any position, re-prefilling only the first
+    /// `boundary_tokens` tokens. `false` is bit-identical to the
+    /// tree-only path.
+    pub chunk_cache: bool,
+    /// `r`: boundary tokens re-prefilled per cross-position chunk hit.
+    pub boundary_tokens: usize,
 }
 
 impl Default for CacheConfig {
@@ -106,6 +114,8 @@ impl Default for CacheConfig {
             shards: 1,
             rebalance: false,
             rebalance_interval: 32,
+            chunk_cache: false,
+            boundary_tokens: 8,
         }
     }
 }
@@ -332,6 +342,12 @@ impl SystemConfig {
         if self.cache.rebalance_interval == 0 {
             bail!("cache.rebalance_interval must be > 0");
         }
+        if self.cache.chunk_cache && self.cache.boundary_tokens == 0 {
+            bail!(
+                "cache.boundary_tokens must be > 0 with chunk_cache on \
+                 (cross-position reuse always re-prefills a boundary)"
+            );
+        }
         if self.workload.rate <= 0.0 {
             bail!("workload.rate must be > 0");
         }
@@ -408,6 +424,8 @@ fn apply_cache(c: &mut CacheConfig, v: &Json) -> Result<()> {
             "rebalance_interval" => {
                 c.rebalance_interval = get_usize(val, k)?
             }
+            "chunk_cache" => c.chunk_cache = get_bool(val, k)?,
+            "boundary_tokens" => c.boundary_tokens = get_usize(val, k)?,
             other => bail!("unknown cache key '{other}'"),
         }
     }
@@ -529,6 +547,19 @@ rate = 1.4
         assert_eq!(c.retrieval.top_k, 5);
         assert!(!c.sched.reorder);
         assert_eq!(c.workload.dataset, "nq");
+    }
+
+    #[test]
+    fn chunk_cache_keys_parse() {
+        let doc = "[cache]\nchunk_cache = true\nboundary_tokens = 4";
+        let c = SystemConfig::from_toml_str(doc).unwrap();
+        assert!(c.cache.chunk_cache);
+        assert_eq!(c.cache.boundary_tokens, 4);
+        assert!(!SystemConfig::default().cache.chunk_cache, "off by default");
+        assert!(SystemConfig::from_toml_str(
+            "[cache]\nchunk_cache = true\nboundary_tokens = 0"
+        )
+        .is_err());
     }
 
     #[test]

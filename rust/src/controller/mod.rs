@@ -33,7 +33,15 @@
 //!     ShardedCacheService ──► K ×              promote on final match
 //!       CacheService shards                    or fall back to the
 //!       (route by first doc)                   blocking batched path
-//!       match → promote → pin → (α,β)
+//!       match → promote → pin →
+//!       chunk probe (--chunk-cache
+//!       on: off-prefix docs reuse
+//!       cached KV at ANY position,
+//!       r boundary tokens join β,
+//!       h2g bytes join the batch
+//!       burst; tree-rejected KV is
+//!       salvaged as owned chunk
+//!       entries) → (α,β)
 //!       → commit/release · metrics hooks
 //!       + cross-shard tier rebalancer
 //!         (shard.rs): every engine

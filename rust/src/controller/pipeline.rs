@@ -36,8 +36,8 @@ use crate::policy::AccessCtx;
 use crate::sched::ReorderQueue;
 use crate::spec::SpecState;
 use crate::tree::{
-    DocId, KnowledgeTree, MatchResult, NodeId, TierOccupancy, Transfers,
-    TreeCounters,
+    ChunkHit, DocId, KnowledgeTree, MatchResult, NodeId, TierOccupancy,
+    Transfers, TreeCounters,
 };
 use std::sync::{Arc, Mutex};
 
@@ -75,6 +75,14 @@ pub struct Admission {
     pub beta: usize,
     /// Docs to insert after the prefill: `(doc, tokens)`.
     pub unmatched: Vec<(DocId, usize)>,
+    /// Position-independent chunk-cache hits for docs past the prefix
+    /// match (`--chunk-cache on`; always empty when off). Each hit's
+    /// reused rows are already counted in `alpha`, its boundary tokens
+    /// in `beta`, and its h2g bytes in `transfers` — so the existing
+    /// batch-burst and cost-model machinery charges them with no
+    /// special cases. The pinned backing entries are released by
+    /// commit/release through the recorded [`ChunkHit::source`].
+    pub chunk_hits: Vec<ChunkHit>,
     /// Byte movement of this admission's promotion, h2g/g2h split —
     /// what [`super::batch::BatchAdmission`] coalesces across a batch
     /// into one PCIe burst. The combined total is
@@ -231,22 +239,45 @@ impl CacheService {
             // Demand signal for cross-shard rebalancing: the KV bytes
             // this admission serves from GPU instead of recomputing.
             tree.record_gpu_hit_bytes(&use_path);
-            let alpha: usize = use_path
+            let mut alpha: usize = use_path
                 .iter()
                 .map(|&n| tree.node_tokens(n))
                 .sum();
-            let beta: usize = docs[matched..]
-                .iter()
-                .map(|&(_, t)| t)
-                .sum::<usize>()
-                + request_tokens;
+            // Lookup order: prefix walk (above) → chunk probe → miss.
+            // Docs past the prefix match may still hit the chunk cache
+            // at a DIFFERENT position: their reused rows join α, their
+            // first `r` boundary tokens join β (the cross-attention
+            // repair recompute), and host-resident entries add h2g
+            // bytes to the same transfers the batch burst coalesces.
+            // With the chunk cache off every probe is `None` and this
+            // loop reduces bit-identically to the chunk-free path.
+            let mut transfers = promo.transfers;
+            let mut chunk_hits: Vec<ChunkHit> = Vec::new();
+            let mut unmatched: Vec<(DocId, usize)> = Vec::new();
+            let mut beta: usize = 0;
+            for &(doc, tokens) in &docs[matched..] {
+                match tree.chunk_probe(doc, tokens) {
+                    Some(hit) => {
+                        alpha += hit.reused_tokens;
+                        beta += hit.boundary;
+                        transfers.h2g_bytes += hit.h2g_bytes;
+                        chunk_hits.push(hit);
+                    }
+                    None => {
+                        beta += tokens;
+                        unmatched.push((doc, tokens));
+                    }
+                }
+            }
+            beta += request_tokens;
             Admission {
                 path: use_path,
                 matched_docs: matched,
                 alpha,
                 beta,
-                unmatched: docs[matched..].to_vec(),
-                transfers: promo.transfers,
+                unmatched,
+                chunk_hits,
+                transfers,
                 estimated_time: 0.0,
                 shard: 0,
             }
@@ -307,6 +338,22 @@ impl CacheService {
     ) -> CommitOutcome {
         self.with(|tree| {
             tree.unpin(&adm.path);
+            // Chunk hits: policy refresh (a doc hot through the chunk
+            // path stays hot) and drop the probe-time pin.
+            for hit in &adm.chunk_hits {
+                tree.chunk_on_access(
+                    hit,
+                    &AccessCtx {
+                        alpha: adm.alpha,
+                        beta: adm.beta,
+                        estimated_time,
+                        was_cached: true,
+                        now,
+                        tokens: hit.tokens,
+                    },
+                );
+                tree.chunk_unpin(hit.doc, hit.source);
+            }
             let mut parent =
                 adm.path.last().copied().unwrap_or(tree.root());
             let mut out = CommitOutcome::default();
@@ -334,7 +381,31 @@ impl CacheService {
                         parent = id;
                         out.inserted += 1;
                     }
-                    None => break, // does not fit: stays transient
+                    None => {
+                        // Does not fit on the prefix path: transient
+                        // for the tree — but the KV was still computed.
+                        // Salvage it (and the rest of the chain, which
+                        // the break below would discard) as position-
+                        // independent OWNED chunk entries so a later
+                        // reordered request can reuse it anywhere.
+                        if tree.chunk_cache_enabled() {
+                            let mut off: usize = adm.alpha;
+                            for (j, &(d, t)) in
+                                adm.unmatched[i..].iter().enumerate()
+                            {
+                                let p = payloads.as_ref().and_then(
+                                    |ps| ps.get(i + j).cloned(),
+                                );
+                                let mut tr = Transfers::default();
+                                tree.chunk_insert_owned(
+                                    d, t, off, p, &mut tr,
+                                );
+                                out.transfers.merge(tr);
+                                off += t;
+                            }
+                        }
+                        break;
+                    }
                 }
             }
             out
@@ -342,9 +413,57 @@ impl CacheService {
     }
 
     /// Abandon an admission without inserting anything (aborted
-    /// speculation whose prefill never ran): just drop the pins.
+    /// speculation whose prefill never ran): just drop the pins — the
+    /// path's and the chunk hits'.
     pub fn release(&self, adm: &Admission) {
-        self.with(|tree| tree.unpin(&adm.path));
+        self.with(|tree| {
+            tree.unpin(&adm.path);
+            for hit in &adm.chunk_hits {
+                tree.chunk_unpin(hit.doc, hit.source);
+            }
+        });
+    }
+
+    /// Non-pinning chunk-aware snapshot for priority estimates: the
+    /// prefix match plus the summed reused tokens the chunk cache would
+    /// add for the docs past it. Zero when the chunk cache is off, so
+    /// estimate arithmetic stays bit-identical to the chunk-free path.
+    pub fn lookup_with_chunks(
+        &self,
+        docs: &[DocId],
+    ) -> (MatchResult, usize) {
+        self.with(|tree| {
+            let m = tree.lookup(docs);
+            let reused = docs[m.matched_docs..]
+                .iter()
+                .filter_map(|&d| tree.chunk_estimate(d))
+                .map(|(r, _)| r)
+                .sum();
+            (m, reused)
+        })
+    }
+
+    /// Concatenate an admission's full reused prefix KV (real mode):
+    /// the path nodes' payloads in path order, then each chunk hit's
+    /// reused rows — rows `[boundary..]` of the cached chunk, in hit
+    /// order. Total rows equal the admission's α.
+    pub fn concat_admission_payloads(&self, adm: &Admission) -> Vec<f32> {
+        self.with(|tree| {
+            let mut out = Vec::new();
+            for &n in &adm.path {
+                let p = tree.node_payload(n).expect("real path payload");
+                out.extend_from_slice(p.floats());
+            }
+            for hit in &adm.chunk_hits {
+                let p =
+                    tree.chunk_payload(hit.doc).expect("chunk payload");
+                let per_tok = p.floats().len() / p.tokens();
+                out.extend_from_slice(
+                    &p.floats()[hit.boundary * per_tok..],
+                );
+            }
+            out
+        })
     }
 }
 
@@ -429,10 +548,17 @@ impl Pipeline {
         match &self.cache {
             None => (0, doc_tokens_total + request_tokens),
             Some(c) => {
-                let m = c.lookup(docs);
+                // Chunk-aware refinement: reused chunk rows count as
+                // cached and leave the compute side (their boundary
+                // recompute stays in it — we only subtract the reused
+                // part). `reused` is 0 with the chunk cache off, which
+                // keeps the arithmetic bit-identical to the old path.
+                let (m, reused) = c.lookup_with_chunks(docs);
                 (
-                    m.cached_tokens,
-                    doc_tokens_total.saturating_sub(m.cached_tokens)
+                    m.cached_tokens + reused,
+                    doc_tokens_total
+                        .saturating_sub(m.cached_tokens)
+                        .saturating_sub(reused)
                         + request_tokens,
                 )
             }

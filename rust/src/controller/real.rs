@@ -63,6 +63,12 @@ pub struct RealConfig {
     /// Algorithm 2's `max_prefill_bs`: concurrent speculative prefills
     /// the engine tolerates.
     pub spec_pool: usize,
+    /// Chunk-level position-independent KV reuse beside the prefix
+    /// tree (`--chunk-cache on`). Off serves the PR 5 path bit for bit.
+    pub chunk_cache: bool,
+    /// Boundary tokens `r` re-prefilled per chunk hit (the first `r`
+    /// tokens of the hit document; `--boundary-tokens`).
+    pub boundary_tokens: usize,
 }
 
 impl Default for RealConfig {
@@ -80,6 +86,8 @@ impl Default for RealConfig {
             retrieval_threads: 2,
             stage_latency_s: 0.002,
             spec_pool: 4,
+            chunk_cache: false,
+            boundary_tokens: 8,
         }
     }
 }
@@ -225,14 +233,18 @@ impl RealServer {
         kv_floats_per_token: usize,
         cfg: &RealConfig,
     ) -> KnowledgeTree {
-        KnowledgeTree::new(
+        let mut tree = KnowledgeTree::new(
             cfg.gpu_cache_bytes,
             cfg.host_cache_bytes,
             Self::page_spec(kv_floats_per_token, cfg),
             make_policy(cfg.policy),
             true,
             0,
-        )
+        );
+        if cfg.chunk_cache {
+            tree.enable_chunk_cache(cfg.boundary_tokens);
+        }
+        tree
     }
 
     /// Build a K-shard cache service for this model, splitting the
@@ -252,14 +264,18 @@ impl RealServer {
         let gpu_slices = split_budget(cfg.gpu_cache_bytes, k);
         let host_slices = split_budget(cfg.host_cache_bytes, k);
         ShardedCacheService::build(k, |i| {
-            KnowledgeTree::new(
+            let mut tree = KnowledgeTree::new(
                 gpu_slices[i],
                 host_slices[i],
                 page,
                 make_policy(cfg.policy),
                 true,
                 0,
-            )
+            );
+            if cfg.chunk_cache {
+                tree.enable_chunk_cache(cfg.boundary_tokens);
+            }
+            tree
         })
     }
 
@@ -542,8 +558,16 @@ impl RealServer {
     ) -> Result<PrefillOut> {
         let mut kv = self.cache().concat_payloads(adm);
 
-        // Non-cached documents + separator + question.
+        // Boundary re-prefill of the chunk hits (the first `r` tokens
+        // of each hit document — their reused rows are already in `kv`
+        // via `concat_payloads`), then the non-cached documents +
+        // separator + question. Empty with `--chunk-cache off`.
         let mut new_tokens: Vec<i32> = Vec::new();
+        for hit in &adm.chunk_hits {
+            new_tokens.extend_from_slice(
+                &self.doc_tokens[hit.doc as usize][..hit.boundary],
+            );
+        }
         for &(d, _) in &adm.unmatched {
             new_tokens.extend_from_slice(&self.doc_tokens[d as usize]);
         }
@@ -595,7 +619,17 @@ impl RealServer {
         let doc_token_total: usize = doc_lens.iter().sum();
         let mut kv = art.kv;
         let new_kv = &kv[art.kv_before..];
-        let doc_rows = &new_kv[..doc_token_total * kv_per_tok];
+        // The first new rows are the chunk hits' boundary re-prefill
+        // (see `prefill_admitted`); the freshly computed document rows
+        // to cache start after them.
+        let boundary_rows: usize = adm
+            .chunk_hits
+            .iter()
+            .map(|h| h.boundary)
+            .sum::<usize>()
+            * kv_per_tok;
+        let doc_rows = &new_kv
+            [boundary_rows..boundary_rows + doc_token_total * kv_per_tok];
         let payloads = if doc_lens.is_empty() {
             Vec::new()
         } else {
@@ -1026,6 +1060,9 @@ impl RealServer {
             spec_wasted: s.spec.wasted,
             spec_promoted: s.spec.promoted,
             tree_gpu_hit_bytes: c.gpu_hit_bytes,
+            chunk_hits: c.chunk_hits,
+            chunk_hit_bytes: c.chunk_hit_bytes,
+            boundary_recompute_tokens: c.boundary_recompute_tokens,
             rebalance_recomputes: rb.recomputes,
             rebalance_moved_bytes: rb.gpu_bytes_moved
                 + rb.host_bytes_moved,

@@ -27,7 +27,8 @@
 //! demand-proportional slices and moves capacity cold → hot:
 //!
 //! ```text
-//!   tick ──► demand_i = Δgpu_hit_bytes + Δswap_out_bytes + gpu_used
+//!   tick ──► demand_i = Δgpu_hit_bytes + Δchunk_hit_bytes
+//!              │          + Δswap_out_bytes + gpu_used
 //!              │            (per-shard TreeCounters deltas + gauge)
 //!              ▼
 //!            targets = proportional_slices(total, demand, min_share)
@@ -244,6 +245,17 @@ impl ShardedCacheService {
         self.shards[self.shard_of(docs)].lookup(docs)
     }
 
+    /// Chunk-aware non-pinning estimate on the owning shard: the prefix
+    /// match plus the reused tokens the chunk cache would add for the
+    /// docs past it (0 with the chunk cache off). See
+    /// [`CacheService::lookup_with_chunks`].
+    pub fn lookup_with_chunks(
+        &self,
+        docs: &[DocId],
+    ) -> (MatchResult, usize) {
+        self.shards[self.shard_of(docs)].lookup_with_chunks(docs)
+    }
+
     /// Admission stage A against the owning shard. The returned
     /// [`Admission`] records its shard, so [`commit`]/[`release`]/
     /// [`touch_hits`] route back without the caller knowing about
@@ -291,10 +303,11 @@ impl ShardedCacheService {
         self.shards[adm.shard].release(adm);
     }
 
-    /// Concatenate the KV payloads along an admission's pinned path
-    /// (real mode), from the shard that owns it.
+    /// Concatenate an admission's full reused prefix KV (real mode) —
+    /// pinned path payloads plus each chunk hit's reused rows — from
+    /// the shard that owns it.
     pub fn concat_payloads(&self, adm: &Admission) -> Vec<f32> {
-        self.shards[adm.shard].concat_payloads(&adm.path)
+        self.shards[adm.shard].concat_admission_payloads(adm)
     }
 
     /// Counters aggregated across every shard (the `Stats` endpoint and
@@ -420,18 +433,25 @@ impl ShardedCacheService {
             self.shards.iter().map(|s| s.counters()).collect();
         let occ = self.shard_occupancies();
         // Demand: bytes served from GPU since the last recompute (hot
-        // traffic) + swap-out thrash (capacity shortage shows up as
-        // eviction bytes) + current GPU occupancy (an idle-but-warm
-        // working set is still demand; a cold empty shard is not).
+        // traffic, prefix hits AND position-independent chunk hits) +
+        // swap-out thrash (capacity shortage shows up as eviction
+        // bytes) + current GPU occupancy (an idle-but-warm working set
+        // is still demand; a cold empty shard is not).
         let demand: Vec<u128> = (0..k)
             .map(|i| {
                 let hit = counters[i]
                     .gpu_hit_bytes
                     .saturating_sub(st.last[i].gpu_hit_bytes);
+                let chunk = counters[i]
+                    .chunk_hit_bytes
+                    .saturating_sub(st.last[i].chunk_hit_bytes);
                 let thrash = counters[i]
                     .swap_out_bytes
                     .saturating_sub(st.last[i].swap_out_bytes);
-                hit as u128 + thrash as u128 + occ[i].gpu_used as u128
+                hit as u128
+                    + chunk as u128
+                    + thrash as u128
+                    + occ[i].gpu_used as u128
             })
             .collect();
         st.last = counters;

@@ -57,6 +57,21 @@ pub struct SimOutcome {
     /// Cross-shard rebalancer activity (zeros when `cache.rebalance`
     /// is off or the cache is single-shard).
     pub rebalance: RebalanceStats,
+    /// Position-independent chunk-cache hits (`--chunk-cache on`;
+    /// always 0 when off). Mirrors `tree_counters` for the bench
+    /// emitters and the stats endpoint.
+    pub chunk_hits: u64,
+    /// KV bytes served from chunk entries (the reused `tokens − r`
+    /// rows per hit).
+    pub chunk_hit_bytes: u64,
+    /// Boundary tokens re-prefilled across all chunk hits.
+    pub boundary_recompute_tokens: u64,
+    /// Total host→GPU PCIe bytes the run charged (admission promotion
+    /// bursts + chunk streaming + rebalancer moves).
+    pub pcie_h2g_bytes: u64,
+    /// Total GPU→host PCIe bytes (eviction swap-outs, write-back
+    /// bursts, rebalancer donor evictions).
+    pub pcie_g2h_bytes: u64,
 }
 
 /// The simulation's [`PipelineDriver`]: virtual clock + analytic models.
@@ -108,6 +123,12 @@ pub struct SimServer {
     /// Epoch of the currently in-flight engine iteration.
     inflight_epoch: Option<u64>,
     next_epoch: u64,
+    /// Cumulative host→GPU PCIe bytes: admission promotion bursts
+    /// (including chunk-hit streaming) plus rebalancer moves.
+    pcie_h2g_bytes: u64,
+    /// Cumulative GPU→host PCIe bytes: commit write-back swap-outs
+    /// plus rebalancer donor evictions.
+    pcie_g2h_bytes: u64,
 }
 
 impl SimServer {
@@ -156,14 +177,20 @@ impl SimServer {
                 let gpu_slices = split_budget(cfg.cache.gpu_bytes, k);
                 let host_slices = split_budget(cfg.cache.host_bytes, k);
                 let mut svc = ShardedCacheService::build(k, |i| {
-                    KnowledgeTree::new(
+                    let mut tree = KnowledgeTree::new(
                         gpu_slices[i],
                         host_slices[i],
                         page,
                         make_policy(cfg.cache.policy),
                         cfg.cache.swap_out_only_once,
                         0,
-                    )
+                    );
+                    if cfg.cache.chunk_cache {
+                        tree.enable_chunk_cache(
+                            cfg.cache.boundary_tokens,
+                        );
+                    }
+                    tree
                 });
                 if cfg.cache.rebalance {
                     svc.enable_rebalancing(RebalanceConfig {
@@ -209,6 +236,8 @@ impl SimServer {
             deferred_commit_s: 0.0,
             inflight_epoch: None,
             next_epoch: 0,
+            pcie_h2g_bytes: 0,
+            pcie_g2h_bytes: 0,
         })
     }
 
@@ -237,6 +266,9 @@ impl SimServer {
             .iter()
             .filter(|r| r.done)
             .count();
+        let tree_counters =
+            self.pipeline.cache.as_ref().map(|c| c.counters());
+        let tc = tree_counters.clone().unwrap_or_default();
         SimOutcome {
             rebalance: self
                 .pipeline
@@ -244,11 +276,12 @@ impl SimServer {
                 .as_ref()
                 .map(|c| c.rebalance_stats())
                 .unwrap_or_default(),
-            tree_counters: self
-                .pipeline
-                .cache
-                .as_ref()
-                .map(|c| c.counters()),
+            tree_counters,
+            chunk_hits: tc.chunk_hits,
+            chunk_hit_bytes: tc.chunk_hit_bytes,
+            boundary_recompute_tokens: tc.boundary_recompute_tokens,
+            pcie_h2g_bytes: self.pcie_h2g_bytes,
+            pcie_g2h_bytes: self.pcie_g2h_bytes,
             spec_started: self
                 .pipeline
                 .requests
@@ -438,6 +471,8 @@ impl SimServer {
         // iteration through the same deferred charge.
         if let Some(cache) = &self.pipeline.cache {
             if let Some(moved) = cache.maintenance_tick() {
+                self.pcie_h2g_bytes += moved.h2g_bytes;
+                self.pcie_g2h_bytes += moved.g2h_bytes;
                 self.deferred_commit_s += self
                     .driver
                     .transfer_time(moved.h2g_bytes + moved.g2h_bytes);
@@ -530,6 +565,8 @@ impl SimServer {
                 output_tokens,
                 extra_time: 0.0,
             });
+            self.pcie_h2g_bytes += adm.transfers.h2g_bytes;
+            self.pcie_g2h_bytes += adm.transfers.g2h_bytes;
             batch.push(p.id, adm);
         }
         // One coalesced H2D burst for the whole batch (§3.2 cache-hit
@@ -588,6 +625,8 @@ impl SimServer {
                 .pipeline
                 .commit_prefill(&adm, adm.estimated_time, now, None);
             moved = out.transfers;
+            self.pcie_h2g_bytes += moved.h2g_bytes;
+            self.pcie_g2h_bytes += moved.g2h_bytes;
         }
         self.pipeline.deliver_first_token(
             req,

@@ -6,6 +6,12 @@
 //! token pages; a document's footprint is its token count rounded up to
 //! whole pages. Two tiers form the hierarchy: GPU (fast, small) and host
 //! (slow, large), connected by a PCIe-like [`TransferModel`].
+//!
+//! The same two [`TierAllocator`]s back both residency forms the tree
+//! layer supports: prefix-tree nodes AND owned chunk-cache entries
+//! (`--chunk-cache on`, position-independent reuse) draw from one
+//! shared budget per tier, so enabling the chunk cache never grows the
+//! configured KV memory — see `crate::tree::chunk_cache`.
 
 pub mod payload;
 

@@ -47,9 +47,15 @@ commands:
                                 off = static 1/K split, bit-identical)
              [--rebalance-interval N] (engine iterations between slice
                                 recomputes, default 32)
+             [--chunk-cache on|off] (position-independent per-document
+                                KV reuse beside the prefix tree;
+                                default off = PR 5 path, bit-identical)
+             [--boundary-tokens R] (tokens re-prefilled per chunk hit,
+                                default 8)
   simulate   --system ragcache|vllm|sglang --dataset mmlu --rate 0.8
              --requests 500 [--config FILE] [--model NAME] [--seed N]
              [--shards K] [--rebalance on|off] [--rebalance-interval N]
+             [--chunk-cache on|off] [--boundary-tokens R]
   info       show models, GPUs, datasets, artifact status
 ";
 
@@ -291,6 +297,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if rebalance_interval == 0 {
         return Err(anyhow!("--rebalance-interval must be >= 1"));
     }
+    let chunk_cache = match args.get_or("chunk-cache", "off") {
+        "on" => true,
+        "off" => false,
+        other => {
+            return Err(anyhow!(
+                "--chunk-cache expects on|off, got '{other}'"
+            ))
+        }
+    };
+    let boundary_tokens: usize = args
+        .get_parse_or("boundary-tokens", 8)
+        .map_err(|e| anyhow!(e))?;
+    if chunk_cache && boundary_tokens == 0 {
+        return Err(anyhow!(
+            "--boundary-tokens must be >= 1 with --chunk-cache on"
+        ));
+    }
     if shards < engines.max(1) {
         // Engines drain shards routed shard % engines: with fewer
         // shards than engines the surplus engines would each load a
@@ -313,6 +336,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stages,
         retrieval_threads,
         spec_pool: max_batch,
+        chunk_cache,
+        boundary_tokens,
         ..RealConfig::default()
     };
     // One sharded cache service shared by every engine replica, the
@@ -349,16 +374,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let estimator: ragcache::server::PriorityEstimator =
         std::sync::Arc::new(move |req| match req {
             proto::Request::Query { target_doc, .. } => {
-                let m = est_cache.lookup(&[*target_doc]);
+                // α counts both the prefix match and any chunk-cache
+                // entry for the target doc (reused = span − boundary);
+                // with `--chunk-cache off` the reused term is 0 and
+                // this is exactly the PR 5 estimator.
+                let (m, reused) =
+                    est_cache.lookup_with_chunks(&[*target_doc]);
+                let cached = m.cached_tokens + reused;
                 let total = doc_lens
                     .get(*target_doc as usize)
                     .copied()
                     .unwrap_or(mean_len)
                     + mean_len * top_k.saturating_sub(1);
-                (
-                    m.cached_tokens,
-                    total.saturating_sub(m.cached_tokens).max(1),
-                )
+                (cached, total.saturating_sub(cached).max(1))
             }
             _ => (0, 1),
         });
@@ -411,10 +439,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "ragcache serving on {} ({docs} docs, {workers} connection \
          workers, {engines} engines, {shards} tree shards, \
          {max_batch}-request admission batches, speculation {}, \
-         rebalancing {})",
+         rebalancing {}, chunk cache {})",
         server.addr,
         if speculate { "on" } else { "off" },
-        if rebalance { "on" } else { "off" }
+        if rebalance { "on" } else { "off" },
+        if chunk_cache { "on" } else { "off" }
     );
     println!("protocol: newline-delimited JSON; ops: query/stats/shutdown");
     // Block until the acceptor thread exits (shutdown op).
@@ -467,6 +496,20 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     }
     cfg.cache.rebalance_interval = args
         .get_parse_or("rebalance-interval", cfg.cache.rebalance_interval)
+        .map_err(|e| anyhow!(e))?;
+    if let Some(c) = args.get("chunk-cache") {
+        cfg.cache.chunk_cache = match c {
+            "on" => true,
+            "off" => false,
+            other => {
+                return Err(anyhow!(
+                    "--chunk-cache expects on|off, got '{other}'"
+                ))
+            }
+        };
+    }
+    cfg.cache.boundary_tokens = args
+        .get_parse_or("boundary-tokens", cfg.cache.boundary_tokens)
         .map_err(|e| anyhow!(e))?;
     cfg.validate()?;
 
@@ -522,6 +565,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         "speculation: {} started, {} wasted, {} promoted",
         out.spec_started, out.spec_wasted, out.spec_promoted
     );
+    if cfg.cache.chunk_cache {
+        println!(
+            "chunk cache: {} hits, {} reused, {} boundary tokens \
+             recomputed",
+            out.chunk_hits,
+            ragcache::util::fmt_bytes(out.chunk_hit_bytes),
+            out.boundary_recompute_tokens,
+        );
+    }
     if cfg.cache.rebalance {
         let rb = out.rebalance;
         println!(

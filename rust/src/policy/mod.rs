@@ -5,6 +5,12 @@
 //! A policy owns per-node statistics updates and the priority function;
 //! the knowledge tree owns the per-tier logical clocks and the leaf-only
 //! eviction mechanics.
+//!
+//! The same [`NodeStats`] + priority machinery also scores owned
+//! chunk-cache entries (`--chunk-cache on`): chunk entries compete with
+//! leaf-frontier tree nodes for tier residency under one policy, anchored
+//! at the clock of the tier each candidate resides in — an eviction takes
+//! the chunk victim only when it scores STRICTLY below the node victim.
 
 use crate::config::PolicyKind;
 

@@ -848,6 +848,21 @@ fn merge_stats(parts: &[proto::StatsResult]) -> proto::StatsResult {
             .map(|p| p.tree_gpu_hit_bytes)
             .max()
             .unwrap_or(0),
+        // Chunk-cache counters live in the same shared tree counters:
+        // every engine snapshots the one sharded cache (summing across
+        // shards happens inside `TreeCounters::merge`), so across
+        // engines they max-merge exactly like `tree_gpu_hit_bytes`.
+        chunk_hits: parts.iter().map(|p| p.chunk_hits).max().unwrap_or(0),
+        chunk_hit_bytes: parts
+            .iter()
+            .map(|p| p.chunk_hit_bytes)
+            .max()
+            .unwrap_or(0),
+        boundary_recompute_tokens: parts
+            .iter()
+            .map(|p| p.boundary_recompute_tokens)
+            .max()
+            .unwrap_or(0),
         rebalance_recomputes: parts
             .iter()
             .map(|p| p.rebalance_recomputes)

@@ -55,6 +55,14 @@ pub struct StatsResult {
     /// aggregated across shards (shared cache: max-merged across
     /// engines, like the tree counters).
     pub tree_gpu_hit_bytes: u64,
+    /// Position-independent chunk-cache hits (`--chunk-cache on`;
+    /// 0 when off), aggregated across shards and max-merged across
+    /// engines like the tree counters.
+    pub chunk_hits: u64,
+    /// KV bytes chunk hits reused (the hit span minus the boundary).
+    pub chunk_hit_bytes: u64,
+    /// Boundary tokens re-prefilled across all chunk hits.
+    pub boundary_recompute_tokens: u64,
     /// Cross-shard rebalancer slice recomputations (shared rebalancer
     /// state: max-merged).
     pub rebalance_recomputes: u64,
@@ -169,6 +177,12 @@ pub fn encode_response(resp: &Response) -> String {
             (
                 "tree_gpu_hit_bytes",
                 Json::num(s.tree_gpu_hit_bytes as f64),
+            ),
+            ("chunk_hits", Json::num(s.chunk_hits as f64)),
+            ("chunk_hit_bytes", Json::num(s.chunk_hit_bytes as f64)),
+            (
+                "boundary_recompute_tokens",
+                Json::num(s.boundary_recompute_tokens as f64),
             ),
             (
                 "rebalance_recomputes",
@@ -299,6 +313,18 @@ pub fn parse_response(line: &str) -> Result<Response> {
                 .get("tree_gpu_hit_bytes")
                 .and_then(Json::as_u64)
                 .unwrap_or(0),
+            chunk_hits: v
+                .get("chunk_hits")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            chunk_hit_bytes: v
+                .get("chunk_hit_bytes")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            boundary_recompute_tokens: v
+                .get("boundary_recompute_tokens")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
             rebalance_recomputes: v
                 .get("rebalance_recomputes")
                 .and_then(Json::as_u64)
@@ -368,6 +394,9 @@ mod tests {
                 spec_wasted: 2,
                 spec_promoted: 5,
                 tree_gpu_hit_bytes: 4096,
+                chunk_hits: 6,
+                chunk_hit_bytes: 768,
+                boundary_recompute_tokens: 48,
                 rebalance_recomputes: 3,
                 rebalance_moved_bytes: 1024,
                 shard_gpu_used: vec![512, 0, 256, 128],

@@ -1,0 +1,112 @@
+//! Chunk-level, position-independent KV reuse beside the knowledge tree
+//! (Cache-Craft, arxiv 2502.15734).
+//!
+//! The prefix tree reuses a document's KV only when the document recurs
+//! as the *same prefix*; any reordering of the retrieved top-k is a full
+//! miss. The chunk cache is a per-document registry layered beside the
+//! tree: a retrieved document that misses the prefix walk can reuse a
+//! cached chunk entry at *any* position, re-prefilling only the first
+//! `r` boundary tokens whose cross-attention the new context invalidates
+//! (`r` = `boundary_tokens`, the `--boundary-tokens` CLI knob).
+//!
+//! Residency and budgets are shared with the tree: an [`ChunkEntry`]
+//! that OWNS its KV charges the same GPU/host `TierAllocator`s and
+//! competes with tree leaf-frontier nodes for tier bytes under the same
+//! replacement policy ([`crate::policy::NodeStats`] + per-tier clocks).
+//! A document already cached as a tree node is registered as a
+//! [`ChunkSlot::Ref`] instead — the chunk layer shares the node's
+//! payload allocation and charges ZERO additional bytes, which is what
+//! keeps a doc cached in both structures from being double-charged
+//! (the chunk/tree dedupe rule). When a tree insert supersedes an owned
+//! entry that is pinned by an in-flight admission, the entry is marked
+//! `doomed` and released on its last unpin.
+//!
+//! Lookup order in the pipeline: prefix walk → chunk probe → miss
+//! (see [`crate::tree::KnowledgeTree::chunk_probe`]).
+
+use crate::kvcache::{KvPayload, Tier};
+use crate::policy::NodeStats;
+use crate::tree::{DocId, NodeId};
+use std::collections::BTreeMap;
+
+/// One position-independent chunk-cache hit, recorded in the
+/// `Admission` so commit/release can unpin the exact backing entry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChunkHit {
+    pub doc: DocId,
+    /// Full token span of the cached chunk.
+    pub tokens: usize,
+    /// First `r` tokens re-prefilled at the new position (charged into
+    /// the request's β exactly like uncached tokens).
+    pub boundary: usize,
+    /// Cached rows reused as-is (`tokens - boundary`), charged into α.
+    pub reused_tokens: usize,
+    /// Host→GPU bytes this hit streams into the per-batch H2D burst
+    /// (zero when the entry is GPU-resident).
+    pub h2g_bytes: u64,
+    /// The entry backing the hit — pinned at probe time, unpinned at
+    /// commit/release through [`ChunkSource`], so a concurrent rebind
+    /// of the registry slot can never unbalance the pin ledger.
+    pub source: ChunkSource,
+}
+
+/// What a chunk hit pinned: a tree node (shared payload) or the owned
+/// entry registered under the doc id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChunkSource {
+    /// The doc is cached as this tree node; its request-pin counter was
+    /// incremented.
+    Node(NodeId),
+    /// The doc's owned chunk entry was pinned.
+    Owned,
+}
+
+/// An owned chunk entry: KV bytes charged against the shared tier
+/// allocators, competing with tree leaf-frontier nodes for eviction.
+#[derive(Debug)]
+pub(crate) struct ChunkEntry {
+    pub tokens: usize,
+    /// RoPE base offset the KV rows were computed at — the positional
+    /// metadata a real engine needs to re-base rotary embeddings when
+    /// splicing the chunk at a different position.
+    pub rope_offset: usize,
+    pub tier: Tier,
+    /// In-flight admissions referencing this entry; pinned entries are
+    /// never evicted.
+    pub pinned: u32,
+    /// A tree insert superseded this entry while it was pinned; it is
+    /// released on the last unpin instead of double-charging the tiers.
+    pub doomed: bool,
+    pub stats: NodeStats,
+    pub payload: Option<KvPayload>,
+}
+
+/// Registry slot for one document.
+#[derive(Debug)]
+pub(crate) enum ChunkSlot {
+    /// Cached as a tree node: reuse its payload, zero extra bytes. May
+    /// go stale when the node is dropped from the cache — probes
+    /// validate residency before hitting.
+    Ref(NodeId),
+    /// Owned entry charged against the tier allocators.
+    Owned(ChunkEntry),
+}
+
+/// The chunk-cache state carried by a [`crate::tree::KnowledgeTree`]
+/// when `--chunk-cache on`. Absent entirely when off, so the off path
+/// is structurally identical to the tree-only pipeline.
+#[derive(Debug)]
+pub(crate) struct ChunkState {
+    /// `r`: boundary tokens re-prefilled per cross-position reuse.
+    pub boundary_tokens: usize,
+    pub slots: BTreeMap<DocId, ChunkSlot>,
+}
+
+impl ChunkState {
+    pub fn new(boundary_tokens: usize) -> Self {
+        ChunkState {
+            boundary_tokens,
+            slots: BTreeMap::new(),
+        }
+    }
+}

@@ -10,9 +10,34 @@
 //! parent is cached in the same or faster tier. Swap-out-only-once (§5.1)
 //! keeps a host copy after the first GPU eviction so later GPU evictions
 //! are zero-copy.
+//!
+//! Beside the tree sits the optional **chunk cache** ([`chunk_cache`],
+//! `--chunk-cache on`): a per-document registry enabling
+//! position-independent KV reuse with boundary-token recompute. Lookup
+//! order is prefix walk → chunk probe → miss:
+//!
+//! ```text
+//!   request docs ──► prefix walk (tree) ──► matched prefix → α
+//!                        │ docs that miss the prefix path
+//!                        ▼
+//!                    chunk probe ──► hit: reuse at ANY position
+//!                        │           (tokens − r into α, r boundary
+//!                        │            tokens into β; h2g bytes ride
+//!                        ▼            the per-batch H2D burst)
+//!                      miss ──► full prefill (β), insert into tree
+//!
+//!   tier bytes:  tree nodes and OWNED chunk entries share the same
+//!   GPU/host TierAllocators and compete for eviction under the same
+//!   policy + per-tier clocks; a doc cached as a tree node is only a
+//!   zero-byte Ref in the chunk registry (no double residency).
+//! ```
+
+pub mod chunk_cache;
 
 use crate::kvcache::{KvPayload, PageSpec, Tier, TierAllocator};
 use crate::policy::{AccessCtx, NodeStats, ReplacementPolicy};
+use chunk_cache::{ChunkEntry, ChunkSlot, ChunkState};
+pub use chunk_cache::{ChunkHit, ChunkSource};
 use std::collections::BTreeMap;
 
 /// Document identifier (knowledge-base key).
@@ -105,6 +130,15 @@ pub struct TreeCounters {
     /// rebalancer feeds on, and the aggregate the skewed-workload CI
     /// gate compares.
     pub gpu_hit_bytes: u64,
+    /// Position-independent chunk-cache hits (probe successes).
+    pub chunk_hits: u64,
+    /// KV bytes served from chunk entries (the reused `tokens − r`
+    /// rows) — counted into the rebalancer's demand alongside
+    /// `gpu_hit_bytes`.
+    pub chunk_hit_bytes: u64,
+    /// Boundary tokens re-prefilled across all chunk hits (the `r`-token
+    /// cross-attention repair cost).
+    pub boundary_recompute_tokens: u64,
 }
 
 impl TreeCounters {
@@ -118,6 +152,9 @@ impl TreeCounters {
         self.inserts += other.inserts;
         self.rejected_inserts += other.rejected_inserts;
         self.gpu_hit_bytes += other.gpu_hit_bytes;
+        self.chunk_hits += other.chunk_hits;
+        self.chunk_hit_bytes += other.chunk_hit_bytes;
+        self.boundary_recompute_tokens += other.boundary_recompute_tokens;
     }
 }
 
@@ -149,6 +186,9 @@ pub struct KnowledgeTree {
     /// took eviction from O(total nodes) to O(resident nodes)).
     gpu_resident: std::collections::BTreeSet<usize>,
     host_resident: std::collections::BTreeSet<usize>,
+    /// Chunk-cache registry (`--chunk-cache on`); None = disabled, and
+    /// the tree behaves bit-identically to the chunk-free path.
+    chunk: Option<ChunkState>,
 }
 
 impl KnowledgeTree {
@@ -194,7 +234,35 @@ impl KnowledgeTree {
             counters: TreeCounters::default(),
             gpu_resident,
             host_resident: std::collections::BTreeSet::new(),
+            chunk: None,
         }
+    }
+
+    /// Enable chunk-level position-independent reuse with `r =
+    /// boundary_tokens` re-prefilled per cross-position hit. Called at
+    /// build time; a tree never enabled carries no chunk state at all.
+    pub fn enable_chunk_cache(&mut self, boundary_tokens: usize) {
+        self.chunk = Some(ChunkState::new(boundary_tokens));
+    }
+
+    pub fn chunk_cache_enabled(&self) -> bool {
+        self.chunk.is_some()
+    }
+
+    /// Live chunk registry entries (owned + valid tree refs) — test
+    /// and observability helper.
+    pub fn chunk_entry_count(&self) -> usize {
+        let Some(state) = self.chunk.as_ref() else {
+            return 0;
+        };
+        state
+            .slots
+            .values()
+            .filter(|slot| match slot {
+                ChunkSlot::Ref(id) => self.nodes[id.0].tier.is_some(),
+                ChunkSlot::Owned(e) => !e.doomed,
+            })
+            .count()
     }
 
     /// Set a node's tier, keeping the residency indexes consistent.
@@ -299,16 +367,14 @@ impl KnowledgeTree {
         // rebalancer resizes one tier at a time), and the host pass
         // then trims against the new host target.
         while self.gpu.used() > gpu_bytes {
-            let Some(victim) = self.pick_gpu_victim() else {
+            if !self.evict_one_gpu(&mut transfers) {
                 return Err(transfers);
-            };
-            transfers.merge(self.evict_gpu_node(victim));
+            }
         }
         while self.host.used() > host_bytes {
-            let Some(victim) = self.pick_host_victim(None) else {
+            if !self.evict_one_host(None) {
                 return Err(transfers);
-            };
-            self.evict_host_node(victim);
+            }
         }
         let gpu_ok = self.gpu.set_capacity(gpu_bytes);
         let host_ok = self.host.set_capacity(host_bytes);
@@ -336,9 +402,21 @@ impl KnowledgeTree {
                 cur = self.nodes[id.0].parent;
             }
         }
-        keep.iter()
+        let mut total: u64 = keep
+            .iter()
             .map(|&i| self.page.bytes(self.nodes[i].tokens))
-            .sum()
+            .sum();
+        // Pinned GPU-resident owned chunk entries are just as immovable.
+        if let Some(state) = &self.chunk {
+            for slot in state.slots.values() {
+                if let ChunkSlot::Owned(e) = slot {
+                    if e.tier == Tier::Gpu && e.pinned > 0 {
+                        total += self.page.bytes(e.tokens);
+                    }
+                }
+            }
+        }
+        total
     }
 
     pub fn node_count(&self) -> usize {
@@ -414,6 +492,275 @@ impl KnowledgeTree {
             _ => self.clock_gpu,
         };
         self.policy.on_access(&mut self.nodes[id.0].stats, ctx, clock);
+    }
+
+    /// Probe the chunk cache for a doc that missed the prefix walk
+    /// (lookup order: prefix walk → chunk probe → miss). A hit pins the
+    /// backing entry for the admission's lifetime and reports what to
+    /// charge: `tokens − r` reused rows into α, `r` boundary tokens
+    /// into β, and the h2g bytes (host-resident entries) that ride the
+    /// per-batch H2D burst. `tokens` must match the cached span — a
+    /// truncation-policy mismatch is a miss, not a partial hit.
+    pub fn chunk_probe(
+        &mut self,
+        doc: DocId,
+        tokens: usize,
+    ) -> Option<ChunkHit> {
+        let state = self.chunk.as_ref()?;
+        let boundary = state.boundary_tokens;
+        if tokens <= boundary {
+            return None; // nothing reusable beyond the repair cost
+        }
+        // Validate the slot, then pin through the resolved source.
+        let source = match state.slots.get(&doc)? {
+            ChunkSlot::Ref(id) => {
+                let node = &self.nodes[id.0];
+                if node.tier.is_none() || node.tokens != tokens {
+                    return None; // stale ref or span mismatch
+                }
+                ChunkSource::Node(*id)
+            }
+            ChunkSlot::Owned(e) => {
+                if e.doomed || e.tokens != tokens {
+                    return None;
+                }
+                ChunkSource::Owned
+            }
+        };
+        let reused = tokens - boundary;
+        let reused_bytes = self.page.payload_bytes(reused);
+        let h2g_bytes = match source {
+            ChunkSource::Node(id) => match self.nodes[id.0].tier {
+                Some(Tier::Gpu) => 0,
+                _ => reused_bytes,
+            },
+            ChunkSource::Owned => {
+                match self.chunk.as_ref().and_then(|s| s.slots.get(&doc)) {
+                    Some(ChunkSlot::Owned(e)) if e.tier == Tier::Gpu => 0,
+                    _ => reused_bytes,
+                }
+            }
+        };
+        match source {
+            ChunkSource::Node(id) => self.nodes[id.0].pinned += 1,
+            ChunkSource::Owned => {
+                if let Some(ChunkSlot::Owned(e)) = self
+                    .chunk
+                    .as_mut()
+                    .and_then(|s| s.slots.get_mut(&doc))
+                {
+                    e.pinned += 1;
+                }
+            }
+        }
+        self.counters.chunk_hits += 1;
+        self.counters.chunk_hit_bytes += reused_bytes;
+        self.counters.boundary_recompute_tokens += boundary as u64;
+        Some(ChunkHit {
+            doc,
+            tokens,
+            boundary,
+            reused_tokens: reused,
+            h2g_bytes,
+            source,
+        })
+    }
+
+    /// Release the pin a [`KnowledgeTree::chunk_probe`] hit took, by the
+    /// exact source recorded in the hit — so a registry slot rebound by
+    /// a concurrent insert can never unbalance the pin ledger. An owned
+    /// entry superseded (`doomed`) while pinned is released here, on its
+    /// last unpin.
+    pub fn chunk_unpin(&mut self, doc: DocId, source: ChunkSource) {
+        match source {
+            ChunkSource::Node(id) => {
+                debug_assert!(self.nodes[id.0].pinned > 0);
+                self.nodes[id.0].pinned -= 1;
+            }
+            ChunkSource::Owned => {
+                let Some(state) = self.chunk.as_mut() else {
+                    return;
+                };
+                let Some(ChunkSlot::Owned(e)) = state.slots.get_mut(&doc)
+                else {
+                    // Slot force-dropped (GPU failure): pin died with it.
+                    return;
+                };
+                debug_assert!(e.pinned > 0);
+                e.pinned -= 1;
+                if e.pinned == 0 && e.doomed {
+                    let bytes = self.page.bytes(e.tokens);
+                    let tier = e.tier;
+                    state.slots.remove(&doc);
+                    match tier {
+                        Tier::Gpu => self.gpu.release(bytes),
+                        Tier::Host => self.host.release(bytes),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Policy access update for a chunk hit (the chunk-aware
+    /// replacement score: same [`NodeStats`] machinery, anchored at the
+    /// clock of the tier the entry resides in). For tree-backed hits
+    /// this refreshes the node's own stats — a doc hot through the
+    /// chunk path stays hot in the tree's eviction order too.
+    pub fn chunk_on_access(&mut self, hit: &ChunkHit, ctx: &AccessCtx) {
+        match hit.source {
+            ChunkSource::Node(id) => self.on_access(id, ctx),
+            ChunkSource::Owned => {
+                let clock_gpu = self.clock_gpu;
+                let clock_host = self.clock_host;
+                let Some(state) = self.chunk.as_mut() else {
+                    return;
+                };
+                if let Some(ChunkSlot::Owned(e)) =
+                    state.slots.get_mut(&hit.doc)
+                {
+                    let clock = match e.tier {
+                        Tier::Gpu => clock_gpu,
+                        Tier::Host => clock_host,
+                    };
+                    self.policy.on_access(&mut e.stats, ctx, clock);
+                }
+            }
+        }
+    }
+
+    /// Non-mutating chunk estimate for scheduling priority: would `doc`
+    /// hit the chunk cache, and with how many reused/boundary tokens?
+    /// Uses the entry's own recorded span (a probe re-validates against
+    /// the request's actual token count). Returns
+    /// `(reused_tokens, boundary_tokens)`.
+    pub fn chunk_estimate(&self, doc: DocId) -> Option<(usize, usize)> {
+        let state = self.chunk.as_ref()?;
+        let (tokens, live) = match state.slots.get(&doc)? {
+            ChunkSlot::Ref(id) => {
+                let n = &self.nodes[id.0];
+                (n.tokens, n.tier.is_some())
+            }
+            ChunkSlot::Owned(e) => (e.tokens, !e.doomed),
+        };
+        if live && tokens > state.boundary_tokens {
+            Some((
+                tokens - state.boundary_tokens,
+                state.boundary_tokens,
+            ))
+        } else {
+            None
+        }
+    }
+
+    /// KV rows backing a chunk entry (None in accounting-only mode, or
+    /// when the doc has no live entry). Real-path prefill splices rows
+    /// `[boundary..]` of this payload behind the prefix KV.
+    pub fn chunk_payload(&self, doc: DocId) -> Option<&KvPayload> {
+        match self.chunk.as_ref()?.slots.get(&doc)? {
+            ChunkSlot::Ref(id) => self.nodes[id.0].payload.as_ref(),
+            ChunkSlot::Owned(e) => e.payload.as_ref(),
+        }
+    }
+
+    /// Cache a document as an OWNED chunk entry — the commit path for a
+    /// prefilled doc the tree rejected (no GPU room on its prefix
+    /// path). Charged against the shared tiers: GPU first, host as
+    /// fallback, evicting lower-priority residents (tree nodes AND
+    /// chunk entries) exactly like a leaf insert; eviction transfers
+    /// merge into `transfers`. `rope_offset` records the position the
+    /// KV was computed at. Returns whether the entry was cached.
+    pub fn chunk_insert_owned(
+        &mut self,
+        doc: DocId,
+        tokens: usize,
+        rope_offset: usize,
+        payload: Option<KvPayload>,
+        transfers: &mut Transfers,
+    ) -> bool {
+        let Some(state) = self.chunk.as_ref() else {
+            return false;
+        };
+        if tokens <= state.boundary_tokens {
+            return false; // reuse would save nothing
+        }
+        match state.slots.get(&doc) {
+            // Live entry already serves this doc (dedupe), or a doomed
+            // one still holds bytes until its last unpin — never stack
+            // a second allocation on the same slot.
+            Some(ChunkSlot::Owned(_)) => return false,
+            Some(ChunkSlot::Ref(id))
+                if self.nodes[id.0].tier.is_some() =>
+            {
+                return false;
+            }
+            _ => {}
+        }
+        let bytes = self.page.bytes(tokens);
+        let tier = if self.gpu.fits_at_all(bytes)
+            && self.ensure_gpu_space(bytes, transfers)
+        {
+            let ok = self.gpu.alloc(bytes);
+            debug_assert!(ok);
+            Tier::Gpu
+        } else if self.host.fits_at_all(bytes)
+            && self.ensure_host_space(bytes, None)
+        {
+            let ok = self.host.alloc(bytes);
+            debug_assert!(ok);
+            Tier::Host
+        } else {
+            return false;
+        };
+        self.chunk.as_mut().expect("checked above").slots.insert(
+            doc,
+            ChunkSlot::Owned(ChunkEntry {
+                tokens,
+                rope_offset,
+                tier,
+                pinned: 0,
+                doomed: false,
+                stats: NodeStats::default(),
+                payload,
+            }),
+        );
+        true
+    }
+
+    /// Dedupe hook on every successful tree insert of `doc`: the chunk
+    /// registry now shares the node's payload (zero-byte `Ref`). An
+    /// owned entry for the same doc is released immediately, or marked
+    /// doomed until its in-flight pins drain — a doc is charged against
+    /// the tiers either as a tree node or as an owned chunk entry,
+    /// never both.
+    fn chunk_note_insert(&mut self, doc: DocId, id: NodeId) {
+        let page = self.page;
+        let Some(state) = self.chunk.as_mut() else {
+            return;
+        };
+        // Inspect first, act second (get_mut + insert in one match is
+        // the borrow pattern NLL rejects).
+        if matches!(
+            state.slots.get(&doc),
+            Some(ChunkSlot::Owned(e)) if e.pinned > 0
+        ) {
+            if let Some(ChunkSlot::Owned(e)) = state.slots.get_mut(&doc) {
+                e.doomed = true; // released on last unpin
+            }
+            return;
+        }
+        let released = match state.slots.get(&doc) {
+            Some(ChunkSlot::Owned(e)) => {
+                Some((page.bytes(e.tokens), e.tier))
+            }
+            _ => None,
+        };
+        state.slots.insert(doc, ChunkSlot::Ref(id));
+        if let Some((bytes, tier)) = released {
+            match tier {
+                Tier::Gpu => self.gpu.release(bytes),
+                Tier::Host => self.host.release(bytes),
+            }
+        }
     }
 
     /// Bring every host-resident node of `path` into GPU (cache-hit
@@ -529,6 +876,7 @@ impl KnowledgeTree {
             self.set_tier(existing, Some(Tier::Gpu));
             self.nodes[existing.0].payload = payload;
             self.counters.inserts += 1;
+            self.chunk_note_insert(doc, existing);
             return Some(existing);
         }
 
@@ -558,6 +906,7 @@ impl KnowledgeTree {
         self.nodes[parent.0].children.insert(doc, id);
         self.gpu_resident.insert(id.0);
         self.counters.inserts += 1;
+        self.chunk_note_insert(doc, id);
         Some(id)
     }
 
@@ -572,12 +921,175 @@ impl KnowledgeTree {
         transfers: &mut Transfers,
     ) -> bool {
         while self.gpu.free() < bytes {
-            let Some(victim) = self.pick_gpu_victim() else {
+            if !self.evict_one_gpu(transfers) {
                 return false;
-            };
-            transfers.merge(self.evict_gpu_node(victim));
+            }
         }
         true
+    }
+
+    /// Evict exactly one GPU resident, letting tree leaf-frontier nodes
+    /// and owned chunk entries COMPETE on replacement priority (the
+    /// chunk-aware policy): whichever candidate scores lower goes. With
+    /// the chunk cache off this reduces to exactly the node-only path.
+    fn evict_one_gpu(&mut self, transfers: &mut Transfers) -> bool {
+        let node = self.pick_gpu_victim();
+        let chunk = self.pick_gpu_chunk_victim();
+        match (node, chunk) {
+            (Some(id), Some((cp, doc))) => {
+                let np = self.policy.priority(&self.nodes[id.0].stats);
+                // Strictly-lower only: ties keep the tree node (prefix
+                // reuse is positionally stronger than chunk reuse).
+                if cp < np {
+                    self.evict_gpu_chunk(doc, transfers);
+                } else {
+                    transfers.merge(self.evict_gpu_node(id));
+                }
+                true
+            }
+            (Some(id), None) => {
+                transfers.merge(self.evict_gpu_node(id));
+                true
+            }
+            (None, Some((_, doc))) => {
+                self.evict_gpu_chunk(doc, transfers);
+                true
+            }
+            (None, None) => false,
+        }
+    }
+
+    /// Host-tier counterpart of [`KnowledgeTree::evict_one_gpu`].
+    /// `exclude` protects the node currently being swapped out.
+    fn evict_one_host(&mut self, exclude: Option<NodeId>) -> bool {
+        let node = self.pick_host_victim(exclude);
+        let chunk = self.pick_host_chunk_victim();
+        match (node, chunk) {
+            (Some(id), Some((cp, doc))) => {
+                let np = self.policy.priority(&self.nodes[id.0].stats);
+                if cp < np {
+                    self.evict_host_chunk(doc);
+                } else {
+                    self.evict_host_node(id);
+                }
+                true
+            }
+            (Some(id), None) => {
+                self.evict_host_node(id);
+                true
+            }
+            (None, Some((_, doc))) => {
+                self.evict_host_chunk(doc);
+                true
+            }
+            (None, None) => false,
+        }
+    }
+
+    /// Make at least `bytes` free in the host tier (host-side analogue
+    /// of [`KnowledgeTree::ensure_gpu_space`]).
+    fn ensure_host_space(
+        &mut self,
+        bytes: u64,
+        exclude: Option<NodeId>,
+    ) -> bool {
+        while self.host.free() < bytes {
+            if !self.evict_one_host(exclude) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Lowest-priority unpinned GPU-resident OWNED chunk entry.
+    fn pick_gpu_chunk_victim(&self) -> Option<(f64, DocId)> {
+        let state = self.chunk.as_ref()?;
+        let mut best: Option<(f64, DocId)> = None;
+        for (&doc, slot) in &state.slots {
+            let ChunkSlot::Owned(e) = slot else { continue };
+            if e.tier != Tier::Gpu || e.pinned > 0 {
+                continue;
+            }
+            let p = self.policy.priority(&e.stats);
+            if best.map_or(true, |(bp, _)| p < bp) {
+                best = Some((p, doc));
+            }
+        }
+        best
+    }
+
+    /// Lowest-priority unpinned host-resident OWNED chunk entry.
+    fn pick_host_chunk_victim(&self) -> Option<(f64, DocId)> {
+        let state = self.chunk.as_ref()?;
+        let mut best: Option<(f64, DocId)> = None;
+        for (&doc, slot) in &state.slots {
+            let ChunkSlot::Owned(e) = slot else { continue };
+            if e.tier != Tier::Host || e.pinned > 0 {
+                continue;
+            }
+            let p = self.policy.priority(&e.stats);
+            if best.map_or(true, |(bp, _)| p < bp) {
+                best = Some((p, doc));
+            }
+        }
+        best
+    }
+
+    /// Evict one GPU-resident owned chunk entry: swap to host when room
+    /// can be made (the g2h bytes merge into `transfers` like a node
+    /// swap-out), drop entirely otherwise. Advances the GPU clock.
+    fn evict_gpu_chunk(&mut self, doc: DocId, transfers: &mut Transfers) {
+        let (tokens, priority) =
+            match self.chunk.as_ref().and_then(|s| s.slots.get(&doc)) {
+                Some(ChunkSlot::Owned(e)) if e.tier == Tier::Gpu => {
+                    (e.tokens, self.policy.priority(&e.stats))
+                }
+                _ => return,
+            };
+        let bytes = self.page.bytes(tokens);
+        let payload_bytes = self.page.payload_bytes(tokens);
+        self.clock_gpu = self.clock_gpu.max(priority);
+        if self.host.fits_at_all(bytes)
+            && self.ensure_host_space(bytes, None)
+        {
+            let ok = self.host.alloc(bytes);
+            debug_assert!(ok);
+            self.gpu.release(bytes);
+            if let Some(ChunkSlot::Owned(e)) = self
+                .chunk
+                .as_mut()
+                .and_then(|s| s.slots.get_mut(&doc))
+            {
+                e.tier = Tier::Host;
+            }
+            transfers.g2h_bytes += payload_bytes;
+            self.counters.swap_out_bytes += payload_bytes;
+        } else {
+            self.gpu.release(bytes);
+            if let Some(state) = self.chunk.as_mut() {
+                state.slots.remove(&doc);
+            }
+        }
+        self.counters.gpu_evictions += 1;
+    }
+
+    /// Drop one host-resident owned chunk entry. Advances the host
+    /// clock.
+    fn evict_host_chunk(&mut self, doc: DocId) {
+        let (tokens, priority) =
+            match self.chunk.as_ref().and_then(|s| s.slots.get(&doc)) {
+                Some(ChunkSlot::Owned(e)) if e.tier == Tier::Host => {
+                    (e.tokens, self.policy.priority(&e.stats))
+                }
+                _ => return,
+            };
+        let bytes = self.page.bytes(tokens);
+        self.clock_host = self.clock_host.max(priority);
+        self.host.release(bytes);
+        if let Some(state) = self.chunk.as_mut() {
+            state.slots.remove(&doc);
+        }
+        self.counters.host_evictions += 1;
     }
 
     /// GPU leaf frontier: GPU-resident, unpinned, no GPU-resident child
@@ -615,19 +1127,14 @@ impl KnowledgeTree {
         let needs_copy =
             !(self.swap_out_only_once && self.nodes[id.0].host_copy);
         if needs_copy {
-            // Find host space (may cascade host evictions).
-            if !self.host.fits_at_all(bytes) {
-                // Too big for host entirely: drop from cache.
+            // Find host space (may cascade host evictions of nodes and
+            // chunk entries alike); too big for host entirely, or host
+            // cannot make room → drop from cache instead of swapping.
+            if !self.host.fits_at_all(bytes)
+                || !self.ensure_host_space(bytes, Some(id))
+            {
                 self.drop_from_gpu(id);
                 return transfers;
-            }
-            while self.host.free() < bytes {
-                let Some(victim) = self.pick_host_victim(Some(id)) else {
-                    // Host cannot make room: drop instead of swapping.
-                    self.drop_from_gpu(id);
-                    return transfers;
-                };
-                self.evict_host_node(victim);
             }
             let ok = self.host.alloc(bytes);
             debug_assert!(ok);
@@ -712,6 +1219,14 @@ impl KnowledgeTree {
     /// permanent pin — must return to zero once every admission has been
     /// committed or released (checked by the concurrency tests).
     pub fn pinned_nodes(&self) -> usize {
+        let chunk_pins = self.chunk.as_ref().map_or(0, |s| {
+            s.slots
+                .values()
+                .filter(|slot| {
+                    matches!(slot, ChunkSlot::Owned(e) if e.pinned > 0)
+                })
+                .count()
+        });
         self.nodes
             .iter()
             .enumerate()
@@ -723,6 +1238,7 @@ impl KnowledgeTree {
                 }
             })
             .count()
+            + chunk_pins
     }
 
     /// Validate every structural invariant; used by property tests.
@@ -772,6 +1288,32 @@ impl KnowledgeTree {
                 );
             }
         }
+        // Owned chunk entries hold tier bytes of their own (including
+        // doomed-but-pinned ones, whose bytes drain on last unpin);
+        // Refs are zero-byte by construction — this is the per-tier
+        // `used ≤ Σ distinct payloads` dedupe guarantee.
+        if let Some(state) = &self.chunk {
+            for (doc, slot) in &state.slots {
+                if let ChunkSlot::Owned(e) = slot {
+                    assert!(
+                        !(e.doomed && e.pinned == 0),
+                        "chunk {doc}: doomed entry must be pin-held"
+                    );
+                    let bytes = self.page.bytes(e.tokens);
+                    match e.tier {
+                        Tier::Gpu => gpu_bytes += bytes,
+                        Tier::Host => host_bytes += bytes,
+                    }
+                    if let Some(p) = &e.payload {
+                        assert_eq!(
+                            p.tokens(),
+                            e.tokens,
+                            "chunk {doc}: payload token mismatch"
+                        );
+                    }
+                }
+            }
+        }
         assert_eq!(gpu_bytes, self.gpu.used(), "gpu accounting");
         assert_eq!(host_bytes, self.host.used(), "host accounting");
         // Residency indexes agree with node state.
@@ -799,14 +1341,10 @@ impl KnowledgeTree {
             return self.nodes[id.0].host_copy;
         }
         let bytes = self.page.bytes(self.nodes[id.0].tokens);
-        if !self.host.fits_at_all(bytes) {
+        if !self.host.fits_at_all(bytes)
+            || !self.ensure_host_space(bytes, None)
+        {
             return false;
-        }
-        while self.host.free() < bytes {
-            let Some(victim) = self.pick_host_victim(None) else {
-                return false;
-            };
-            self.evict_host_node(victim);
         }
         let ok = self.host.alloc(bytes);
         debug_assert!(ok);
@@ -842,6 +1380,27 @@ impl KnowledgeTree {
     pub fn fail_gpu(&mut self) -> (usize, usize) {
         let mut lost = 0;
         let mut recovered = 0;
+        // GPU-resident owned chunk entries die with the device (they
+        // have no swap-out-only-once host copy); in-flight pins die
+        // with them — chunk_unpin tolerates the missing slot.
+        let page = self.page;
+        if let Some(state) = self.chunk.as_mut() {
+            let gone: Vec<(DocId, usize)> = state
+                .slots
+                .iter()
+                .filter_map(|(&d, s)| match s {
+                    ChunkSlot::Owned(e) if e.tier == Tier::Gpu => {
+                        Some((d, e.tokens))
+                    }
+                    _ => None,
+                })
+                .collect();
+            for (d, tokens) in gone {
+                state.slots.remove(&d);
+                self.gpu.release(page.bytes(tokens));
+                lost += 1;
+            }
+        }
         // Process bottom-up so hierarchy checks hold: repeatedly take GPU
         // leaves.
         loop {
@@ -913,6 +1472,13 @@ impl KnowledgeTree {
     pub fn reset_frequencies(&mut self) {
         for node in &mut self.nodes {
             node.stats.frequency = 0;
+        }
+        if let Some(state) = self.chunk.as_mut() {
+            for slot in state.slots.values_mut() {
+                if let ChunkSlot::Owned(e) = slot {
+                    e.stats.frequency = 0;
+                }
+            }
         }
     }
 

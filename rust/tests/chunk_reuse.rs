@@ -1,0 +1,365 @@
+//! Integration: chunk-level, position-independent KV reuse beside the
+//! knowledge tree — reordered top-k property (chunk hits, strictly
+//! fewer prefill tokens), `--chunk-cache off` conformance with the
+//! chunk-free path, tier dedupe between tree nodes and owned chunk
+//! entries (no double residency), and randomized multi-engine
+//! interleaving with zero leaked pins or bytes. PJRT-free.
+
+use ragcache::config::PolicyKind;
+use ragcache::controller::{CacheService, ShardedCacheService};
+use ragcache::kvcache::PageSpec;
+use ragcache::policy::make_policy;
+use ragcache::tree::{KnowledgeTree, Transfers};
+use ragcache::util::Rng;
+
+const DOC_TOKENS: usize = 16;
+const BOUNDARY: usize = 4;
+const REQ_TOKENS: usize = 8;
+
+fn page() -> PageSpec {
+    PageSpec {
+        block_tokens: 8,
+        kv_bytes_per_token: 16,
+    }
+}
+
+fn tree(gpu_tokens: usize, host_tokens: usize, chunk: bool) -> KnowledgeTree {
+    let p = page();
+    let mut t = KnowledgeTree::new(
+        p.bytes(gpu_tokens),
+        p.bytes(host_tokens),
+        p,
+        make_policy(PolicyKind::Pgdsf),
+        true,
+        0,
+    );
+    if chunk {
+        t.enable_chunk_cache(BOUNDARY);
+    }
+    t
+}
+
+fn service(chunk: bool) -> CacheService {
+    CacheService::new(tree(4096, 8192, chunk))
+}
+
+fn warm(svc: &CacheService, docs: &[u32]) {
+    let dt: Vec<(u32, usize)> =
+        docs.iter().map(|&d| (d, DOC_TOKENS)).collect();
+    let adm = svc.admit(&dt, REQ_TOKENS);
+    svc.commit(&adm, 1e-3, 0.0, None);
+}
+
+/// Admit one doc sequence, commit it, and return (beta, chunk_hits).
+fn serve(svc: &CacheService, docs: &[u32], now: f64) -> (usize, usize) {
+    let dt: Vec<(u32, usize)> =
+        docs.iter().map(|&d| (d, DOC_TOKENS)).collect();
+    let adm = svc.admit(&dt, REQ_TOKENS);
+    let hits = adm.chunk_hits.len();
+    svc.touch_hits(&adm, 1e-3, now);
+    svc.commit(&adm, 1e-3, now, None);
+    (adm.beta, hits)
+}
+
+/// Reordered top-k property: after warming `[a, b]`, serving `[b, a]`
+/// with the chunk cache ON reuses both documents' KV as chunk hits at
+/// their new positions and pays only the boundary repair, while the
+/// chunk-free path re-prefills both documents from scratch.
+#[test]
+fn reordered_pair_hits_chunks_and_prefills_strictly_less() {
+    let on = service(true);
+    let off = service(false);
+    warm(&on, &[10, 11]);
+    warm(&off, &[10, 11]);
+
+    let (beta_on, hits_on) = serve(&on, &[11, 10], 1.0);
+    let (beta_off, hits_off) = serve(&off, &[11, 10], 1.0);
+
+    assert_eq!(hits_off, 0, "chunk cache off never reports hits");
+    assert_eq!(hits_on, 2, "both reordered docs hit the chunk cache");
+    assert_eq!(
+        beta_on,
+        2 * BOUNDARY + REQ_TOKENS,
+        "chunk path recomputes only the boundary tokens"
+    );
+    assert_eq!(
+        beta_off,
+        2 * DOC_TOKENS + REQ_TOKENS,
+        "chunk-free path re-prefills both docs"
+    );
+    assert!(beta_on < beta_off);
+
+    let c = on.counters();
+    assert_eq!(c.chunk_hits, 2);
+    assert_eq!(
+        c.boundary_recompute_tokens,
+        2 * BOUNDARY as u64,
+        "boundary recompute accounted per hit"
+    );
+    assert_eq!(
+        c.chunk_hit_bytes,
+        2 * page().payload_bytes(DOC_TOKENS - BOUNDARY),
+        "hit bytes are the reused rows, not the whole chunk"
+    );
+    on.check_invariants();
+    assert_eq!(on.pinned_nodes(), 0);
+}
+
+/// Randomized reordered top-k: warm random doc sets in retrieval
+/// order, then replay each set under a random permutation. The chunk
+/// cache must serve strictly fewer prefill tokens in aggregate, and
+/// never more on any individual request.
+#[test]
+fn randomized_reordering_never_prefills_more_with_chunks_on() {
+    let on = service(true);
+    let off = service(false);
+    let mut rng = Rng::new(0xC4C8E);
+    let mut sum_on = 0usize;
+    let mut sum_off = 0usize;
+    let mut total_hits = 0usize;
+    for round in 0..50u64 {
+        // Distinct docs, ascending: a canonical "retrieval order".
+        let base = (round as u32) * 8;
+        let mut docs =
+            vec![base, base + 1 + rng.below(3) as u32, base + 5];
+        warm(&on, &docs);
+        warm(&off, &docs);
+        // Random permutation (Fisher–Yates).
+        for i in (1..docs.len()).rev() {
+            let j = rng.below(i as u64 + 1) as usize;
+            docs.swap(i, j);
+        }
+        let now = round as f64;
+        let (beta_on, hits) = serve(&on, &docs, now);
+        let (beta_off, _) = serve(&off, &docs, now);
+        assert!(
+            beta_on <= beta_off,
+            "round {round}: chunk cache prefilled more ({beta_on} > \
+             {beta_off}) for permutation {docs:?}"
+        );
+        sum_on += beta_on;
+        sum_off += beta_off;
+        total_hits += hits;
+    }
+    assert!(
+        sum_on < sum_off,
+        "aggregate prefill must strictly shrink: {sum_on} vs {sum_off}"
+    );
+    assert!(total_hits > 0, "the permutations exercised chunk hits");
+    on.check_invariants();
+    off.check_invariants();
+    assert_eq!(on.pinned_nodes() + off.pinned_nodes(), 0);
+}
+
+/// `--chunk-cache off` conformance: the off path must be bit-identical
+/// to the chunk-free tree — same admissions, same counters, zero chunk
+/// state — and an IN-ORDER stream must behave identically even with
+/// the cache on (the chunk machinery only engages on reordering).
+#[test]
+fn chunk_cache_off_is_bit_identical_to_plain_path() {
+    let off = service(false);
+    let replica = service(false);
+    let on_inorder = service(true);
+    let mut rng = Rng::new(0x0FF);
+    for i in 0..200u64 {
+        let a = rng.below(12) as u32 * 2;
+        let docs = [a, a + 1];
+        let dt: Vec<(u32, usize)> =
+            docs.iter().map(|&d| (d, DOC_TOKENS)).collect();
+        let x = off.admit(&dt, REQ_TOKENS);
+        let y = replica.admit(&dt, REQ_TOKENS);
+        let z = on_inorder.admit(&dt, REQ_TOKENS);
+        for adm in [&x, &y, &z] {
+            assert!(
+                adm.chunk_hits.is_empty(),
+                "req {i}: in-order stream must not take the chunk path"
+            );
+        }
+        assert_eq!(x.matched_docs, y.matched_docs);
+        assert_eq!(x.alpha, y.alpha);
+        assert_eq!(x.beta, y.beta);
+        assert_eq!(x.transfers, y.transfers);
+        assert_eq!((x.alpha, x.beta), (z.alpha, z.beta));
+        let now = i as f64;
+        off.commit(&x, 1e-3, now, None);
+        replica.commit(&y, 1e-3, now, None);
+        on_inorder.commit(&z, 1e-3, now, None);
+    }
+    let (co, cr, cz) =
+        (off.counters(), replica.counters(), on_inorder.counters());
+    assert_eq!(co, cr, "off path is deterministic");
+    assert_eq!(co.chunk_hits, 0);
+    assert_eq!(co.chunk_hit_bytes, 0);
+    assert_eq!(co.boundary_recompute_tokens, 0);
+    assert_eq!(
+        (cz.chunk_hits, cz.chunk_hit_bytes),
+        (0, 0),
+        "in-order stream leaves chunk counters untouched even when on"
+    );
+    assert_eq!(
+        (co.inserts, co.gpu_evictions, co.swap_out_bytes),
+        (cz.inserts, cz.gpu_evictions, cz.swap_out_bytes),
+        "tree behaviour identical with the cache on but unused"
+    );
+    assert_eq!(off.occupancy().gpu_used, on_inorder.occupancy().gpu_used);
+    assert_eq!(
+        off.occupancy().host_used,
+        on_inorder.occupancy().host_used
+    );
+    off.with(|t| assert_eq!(t.chunk_entry_count(), 0));
+}
+
+/// Double-residency regression: a doc is charged against the tiers as
+/// a tree node OR an owned chunk entry, never both. Covers the pinned
+/// (doomed, drains on last unpin) and unpinned (released immediately,
+/// slot rebound to a zero-byte Ref) supersede paths; check_invariants
+/// itself enforces per-tier `used == Σ distinct payload bytes` at
+/// every step.
+#[test]
+fn tree_insert_dedupes_owned_chunk_entry() {
+    let svc = service(true);
+    let p = page();
+    let base = svc.occupancy().gpu_used; // root
+    let small = p.bytes(DOC_TOKENS);
+    let big = p.bytes(2 * DOC_TOKENS);
+
+    // Unpinned supersede: owned entry → tree insert of the same doc at
+    // a different span → owned bytes released, slot rebound to a Ref.
+    svc.with(|t| {
+        let mut tr = Transfers::default();
+        assert!(t.chunk_insert_owned(8, DOC_TOKENS, 0, None, &mut tr));
+    });
+    svc.check_invariants();
+    assert_eq!(svc.occupancy().gpu_used, base + small);
+    let adm = svc.admit(&[(8, 2 * DOC_TOKENS)], REQ_TOKENS);
+    assert!(
+        adm.chunk_hits.is_empty(),
+        "span mismatch is a miss, not a partial hit"
+    );
+    svc.commit(&adm, 1e-3, 0.0, None);
+    svc.check_invariants();
+    assert_eq!(
+        svc.occupancy().gpu_used,
+        base + big,
+        "owned bytes released on supersede; Ref is zero-byte"
+    );
+    svc.with(|t| {
+        assert_eq!(
+            t.chunk_estimate(8),
+            Some((2 * DOC_TOKENS - BOUNDARY, BOUNDARY)),
+            "Ref shares the node payload"
+        );
+    });
+    // The Ref serves position-independent hits with no extra bytes.
+    let hit = svc.admit(&[(99, DOC_TOKENS), (8, 2 * DOC_TOKENS)], REQ_TOKENS);
+    assert_eq!(hit.chunk_hits.len(), 1);
+    assert_eq!(svc.occupancy().gpu_used, base + big);
+    svc.release(&hit);
+
+    // Pinned supersede: a hit holds the owned entry while a wider span
+    // is inserted — the entry is doomed, its bytes drain on last unpin.
+    svc.with(|t| {
+        let mut tr = Transfers::default();
+        assert!(t.chunk_insert_owned(7, DOC_TOKENS, 0, None, &mut tr));
+    });
+    let pin = svc.admit(&[(7, DOC_TOKENS)], REQ_TOKENS);
+    assert_eq!(pin.chunk_hits.len(), 1, "owned entry serves the hit");
+    let wide = svc.admit(&[(7, 2 * DOC_TOKENS)], REQ_TOKENS);
+    assert!(wide.chunk_hits.is_empty());
+    svc.commit(&wide, 1e-3, 1.0, None);
+    svc.check_invariants(); // doomed entry still holds its bytes
+    assert_eq!(
+        svc.occupancy().gpu_used,
+        base + 2 * big + small,
+        "doomed-but-pinned entry stays charged until its pin drains"
+    );
+    svc.release(&pin); // last unpin → doomed entry drained
+    svc.check_invariants();
+    assert_eq!(
+        svc.occupancy().gpu_used,
+        base + 2 * big,
+        "after the drain only distinct tree payloads remain charged"
+    );
+    assert_eq!(svc.pinned_nodes(), 0);
+}
+
+/// Randomized multi-engine interleaving: threads hammer a sharded,
+/// chunk-enabled cache with reordered pairs, aborted speculation and
+/// mid-flight GPU failures under constant eviction pressure. The tiers
+/// must balance (check_invariants covers node AND owned chunk bytes)
+/// and every pin — path and chunk — must be returned.
+#[test]
+fn randomized_interleaving_with_chunks_leaks_nothing() {
+    let p = page();
+    let svc = ShardedCacheService::build(4, |_| {
+        let mut t = KnowledgeTree::new(
+            p.bytes(64),
+            p.bytes(256),
+            p,
+            make_policy(PolicyKind::Pgdsf),
+            true,
+            0,
+        );
+        t.enable_chunk_cache(BOUNDARY);
+        t
+    });
+    let threads = 8;
+    let ops = 250;
+    let mut handles = Vec::new();
+    for t in 0..threads {
+        let svc = svc.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0xC44A + t as u64);
+            for i in 0..ops {
+                let a = rng.below(16) as u32;
+                let b = rng.below(16) as u32;
+                // Half the traffic reversed: same docs, new positions —
+                // the case the chunk cache exists for.
+                let docs = if i % 2 == 0 {
+                    [(a, DOC_TOKENS), (b, DOC_TOKENS)]
+                } else {
+                    [(b, DOC_TOKENS), (a, DOC_TOKENS)]
+                };
+                let adm = svc.admit(&docs, REQ_TOKENS);
+                match i % 7 {
+                    0 => svc.release(&adm), // aborted speculation
+                    1 => {
+                        // Device failure with hits in flight: GPU-owned
+                        // chunk entries die with their pins; commit
+                        // must still balance the ledger.
+                        svc.shard(adm.shard).fail_gpu();
+                        svc.commit(&adm, 1e-3, i as f64, None);
+                    }
+                    _ => {
+                        svc.touch_hits(&adm, 1e-3, i as f64);
+                        svc.commit(&adm, 1e-3, i as f64, None);
+                    }
+                }
+                if i % 50 == 0 {
+                    svc.check_invariants();
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("no hammering thread panicked");
+    }
+    svc.check_invariants();
+    assert_eq!(
+        svc.pinned_nodes(),
+        0,
+        "quiescent: every path and chunk pin was returned"
+    );
+    let total = svc.counters();
+    assert!(total.inserts > 0, "traffic exercised insertion");
+    assert!(
+        total.chunk_hits > 0,
+        "reversed pairs exercised the chunk path: {total:?}"
+    );
+    // Byte ledger: nothing leaked past the budgets.
+    for s in 0..svc.num_shards() {
+        let o = svc.shard(s).occupancy();
+        assert!(o.gpu_used <= o.gpu_capacity, "shard {s} gpu over budget");
+        assert!(o.host_used <= o.host_capacity, "shard {s} host over budget");
+    }
+}
