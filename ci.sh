@@ -107,6 +107,36 @@ for r in off on; do
 done
 cargo test --release --test shard_rebalance -q
 
+# Discrete-event simulator core: the conformance suite (shed off must
+# stay bit-identical to the iteration-driven predecessor, replicated
+# in-test from public APIs) plus the overload acceptance tests.
+echo "== event-driven simulator suite (--release) =="
+cargo test --release --test event_sim -q
+
+# Open-loop CLI sweep: every arrival process x tenancy x shedding mode
+# through the real `simulate` entry point, on a small corpus so the
+# sweep stays fast. Exercises flag parsing, trace generation, the SLO
+# report and the per-tenant breakdown end to end.
+echo "== open-loop simulate sweep =="
+for a in poisson bursty diurnal; do
+    for t in 1 4; do
+        for s in off on; do
+            echo "-- simulate --arrivals $a --tenants $t --shed $s --"
+            cargo run --release --bin ragcache -- simulate \
+                --system ragcache --dataset mmlu --rate 2.0 \
+                --requests 60 --docs 2000 --ttft-slo 2.0 \
+                --arrivals "$a" --tenants "$t" --shed "$s"
+        done
+    done
+done
+
+# Overload admission-control gate: at ~2x+ the sustainable rate,
+# shed-on must strictly win goodput-under-SLO over shed-off, improve
+# the served-request p50 TTFT, and account for every request exactly
+# once, with per-tenant stats summing to the aggregate.
+echo "== overload shedding gate =="
+cargo run --release --example overload_gate
+
 # Skewed-workload gate: on a Zipfian workload routed to one hot shard,
 # rebalance-on must strictly win aggregate GPU cache-hit bytes vs the
 # static 1/K split, and must not lose on the uniform workload.

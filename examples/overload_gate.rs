@@ -1,0 +1,152 @@
+//! Overload admission-control gate.
+//!
+//! Drives the open-loop discrete-event simulator at roughly 2x+ the
+//! sustainable rate, with and without the shed/downgrade ladder, and
+//! enforces the acceptance bar of the open-loop refactor:
+//!
+//! - `--shed off` under overload: queues build, nothing deadlocks,
+//!   every request eventually completes — but the TTFT tail blows far
+//!   past the SLO (the run really was overloaded);
+//! - `--shed on`: strictly higher goodput-under-SLO than off, every
+//!   request accounted for exactly once (completed or shed), the p50
+//!   TTFT of the requests actually served strictly better than the
+//!   unshedded run's, and per-tenant stats summing exactly to the
+//!   aggregate.
+//!
+//! Exits non-zero on any violation. Knobs:
+//!   --rate R       overload arrival rate, req/s   (default 50)
+//!   --requests N   trace length                   (default 120)
+//!   --tenants T    tenant count                   (default 4)
+//!   --docs D       corpus size                    (default 2000)
+
+use ragcache::config::{SystemConfig, SystemKind, SystemKindField};
+use ragcache::controller::{RetrievalTiming, SimOutcome, SimServer};
+use ragcache::workload::{
+    datasets::MMLU, Corpus, Trace, TraceOptions,
+};
+
+fn fail(msg: &str) -> ! {
+    eprintln!("FAIL: {msg}");
+    std::process::exit(1);
+}
+
+fn run(cfg: &SystemConfig, trace: Trace, docs: usize) -> SimOutcome {
+    SimServer::build(cfg, trace, docs, RetrievalTiming::default(), 5)
+        .expect("sim build")
+        .run()
+}
+
+fn main() -> anyhow::Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args =
+        ragcache::cli::Args::parse(&raw, &[]).map_err(anyhow::Error::msg)?;
+    let rate: f64 = args.get_parse_or("rate", 50.0).map_err(anyhow::Error::msg)?;
+    let n: usize =
+        args.get_parse_or("requests", 120).map_err(anyhow::Error::msg)?;
+    let tenants: usize =
+        args.get_parse_or("tenants", 4).map_err(anyhow::Error::msg)?;
+    let docs: usize =
+        args.get_parse_or("docs", 2_000).map_err(anyhow::Error::msg)?;
+
+    let mut cfg = SystemConfig::default();
+    cfg.kind = SystemKindField(SystemKind::parse("ragcache")?);
+    cfg.cache.gpu_bytes = 8 * (1 << 30);
+    cfg.cache.host_bytes = 192 * (1 << 30);
+
+    let corpus = Corpus::wikipedia_like(docs, 1);
+
+    // Calibrate the SLO from an uncongested closed-feasible trickle:
+    // 3x its mean TTFT (with a floor so the gate stays meaningful on
+    // very fast hosts — the virtual clock makes this deterministic).
+    let base = run(
+        &cfg,
+        Trace::generate(&MMLU, &corpus, 0.3, 40, 2, 11),
+        docs,
+    );
+    let slo = (3.0 * base.recorder.ttft().mean()).max(0.2);
+    cfg.shed.ttft_slo_s = slo;
+
+    let mk = || {
+        Trace::generate_open_loop(
+            &MMLU,
+            &corpus,
+            rate,
+            n,
+            &TraceOptions {
+                tenants,
+                ..TraceOptions::default()
+            },
+            11,
+        )
+    };
+    let off = run(&cfg, mk(), docs);
+    cfg.shed.enabled = true;
+    let on = run(&cfg, mk(), docs);
+
+    // Shed off: open loop terminates with everything served, late.
+    if off.completed != n || off.shed_requests != 0 {
+        fail(&format!(
+            "shed off must complete all {n} requests (got {} completed, \
+             {} shed)",
+            off.completed, off.shed_requests
+        ));
+    }
+    let mut off_ttft = off.recorder.ttft();
+    if off_ttft.p999() <= slo {
+        fail(&format!(
+            "offered rate {rate} req/s did not overload: p99.9 TTFT \
+             {:.3}s <= SLO {slo:.3}s — raise --rate",
+            off_ttft.p999()
+        ));
+    }
+
+    // Shed on: exact accounting, strict goodput win.
+    if on.shed_requests == 0 {
+        fail("shed on under overload must shed at least one request");
+    }
+    if on.completed + on.shed_requests != n {
+        fail(&format!(
+            "accounting: {} completed + {} shed != {n}",
+            on.completed, on.shed_requests
+        ));
+    }
+    let (g_on, g_off) =
+        (on.recorder.goodput(slo), off.recorder.goodput(slo));
+    if g_on <= g_off {
+        fail(&format!(
+            "shed on goodput {g_on:.3} req/s !> off {g_off:.3} req/s"
+        ));
+    }
+    let mut on_ttft = on.recorder.ttft();
+    let (p50_on, p50_off) = (on_ttft.median(), off_ttft.median());
+    if p50_on >= p50_off {
+        fail(&format!(
+            "served-request p50 TTFT must improve under shedding: \
+             {p50_on:.3}s !< {p50_off:.3}s"
+        ));
+    }
+
+    let per = on.recorder.per_tenant(slo);
+    if per.len() != tenants {
+        fail(&format!("{} tenants reported, expected {tenants}", per.len()));
+    }
+    let sums = (
+        per.iter().map(|t| t.requests).sum::<usize>(),
+        per.iter().map(|t| t.completed).sum::<usize>(),
+        per.iter().map(|t| t.shed).sum::<usize>(),
+    );
+    if sums != (n, on.completed, on.shed_requests) {
+        fail(&format!(
+            "per-tenant sums {sums:?} != aggregate ({n}, {}, {})",
+            on.completed, on.shed_requests
+        ));
+    }
+
+    println!(
+        "overload gate OK: rate {rate} req/s, SLO {slo:.3}s | off: \
+         goodput {g_off:.3} req/s, p50 TTFT {p50_off:.3}s | on: goodput \
+         {g_on:.3} req/s, p50 TTFT {p50_on:.3}s, {} shed, {} downgraded",
+        on.shed_requests, on.downgraded_requests
+    );
+    Ok(())
+}

@@ -458,6 +458,9 @@ impl QueryHandler for MatrixHandler {
                 .iter()
                 .map(|o| o.gpu_capacity)
                 .collect(),
+            // SLO accounting (goodput / p99.9 / shed) is driven by the
+            // open-loop simulator; the TCP matrix has no TTFT SLO.
+            ..Default::default()
         }
     }
 }
@@ -873,8 +876,16 @@ fn bench_serving() -> anyhow::Result<()> {
             "boundary_recompute_tokens",
             "tree_inserts",
             "swap_out_bytes",
+            "goodput_rps",
+            "ttft_p999_ms",
+            "shed_requests",
         ],
     );
+    // SLO cut on the *virtual* transfer+prefill proxy, so the in-SLO
+    // count is deterministic: cold pairs (β ≈ 2·DOC_TOKENS → ~3.4 ms)
+    // miss it, warm cache hits meet it. Only the /elapsed goodput
+    // denominator is wall-clock (loose band via the _rps suffix).
+    const SLO_PROXY_S: f64 = 2e-3;
     let seqs = chunk_streams(true);
     for chunk in [false, true] {
         let svc = build_cache(1, chunk, 8);
@@ -882,6 +893,7 @@ fn bench_serving() -> anyhow::Result<()> {
         let t0 = Instant::now();
         let mut sum_beta = 0u64;
         let mut proxy_s = 0.0f64;
+        let mut slo_ok = 0usize;
         for (i, docs) in seqs.iter().enumerate() {
             let tq = Instant::now();
             let docs_tokens: Vec<(u32, usize)> =
@@ -894,7 +906,12 @@ fn bench_serving() -> anyhow::Result<()> {
             let moved = adm.transfer_bytes()
                 + out.transfers.h2g_bytes
                 + out.transfers.g2h_bytes;
-            proxy_s += moved as f64 / 16e9 + adm.beta as f64 * 50e-6;
+            let req_proxy =
+                moved as f64 / 16e9 + adm.beta as f64 * 50e-6;
+            proxy_s += req_proxy;
+            if req_proxy <= SLO_PROXY_S {
+                slo_ok += 1;
+            }
             lat.add(tq.elapsed().as_secs_f64() * 1e3);
         }
         let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
@@ -917,11 +934,15 @@ fn bench_serving() -> anyhow::Result<()> {
             Json::num(c.boundary_recompute_tokens as f64),
             Json::num(c.inserts as f64),
             Json::num(c.swap_out_bytes as f64),
+            Json::num(slo_ok as f64 / elapsed),
+            Json::num(lat.p999()),
+            Json::num(0.0), // closed-loop bench never sheds
         ]);
     }
     r.note(
-        "ttft_p50/p99/throughput are wall-clock (loose tolerance); \
-         token and byte counters are deterministic",
+        "ttft_p50/p99/p999/throughput/goodput are wall-clock (loose \
+         tolerance); token and byte counters (and the in-SLO request \
+         count behind goodput) are deterministic",
     );
     r.finish();
     Ok(())

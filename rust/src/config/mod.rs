@@ -12,6 +12,6 @@ pub mod schema;
 
 pub use schema::{
     CacheConfig, EngineConfig, IndexKind, PolicyKind, RetrievalConfig,
-    SchedConfig, SpecConfig, SystemConfig, SystemKind, SystemKindField,
-    WorkloadConfig,
+    SchedConfig, ShedConfig, SpecConfig, SystemConfig, SystemKind,
+    SystemKindField, WorkloadConfig,
 };

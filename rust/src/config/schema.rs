@@ -232,18 +232,48 @@ impl Default for SpecConfig {
     }
 }
 
+/// Admission-control (overload shedding) parameters for open-loop
+/// serving. Off by default: the `--shed off` path is conformance-tested
+/// bit-identical to the pre-admission-control simulator.
+#[derive(Debug, Clone)]
+pub struct ShedConfig {
+    pub enabled: bool,
+    /// TTFT service-level objective, seconds. Requests that cannot
+    /// produce a first token within this deadline are shed.
+    pub ttft_slo_s: f64,
+    /// Downgrade threshold as a fraction of the SLO: when the EWMA of
+    /// admission queueing delay exceeds `downgrade_frac × ttft_slo_s`,
+    /// new arrivals are downgraded (speculation disabled, single-stage
+    /// retrieval) before any request is shed outright.
+    pub downgrade_frac: f64,
+}
+
+impl Default for ShedConfig {
+    fn default() -> Self {
+        ShedConfig {
+            enabled: false,
+            ttft_slo_s: 5.0,
+            downgrade_frac: 0.5,
+        }
+    }
+}
+
 /// Workload generation parameters (§7 Workloads).
 #[derive(Debug, Clone)]
 pub struct WorkloadConfig {
     /// Dataset profile: "mmlu", "nq", "hotpotqa", "triviaqa".
     pub dataset: String,
-    /// Poisson arrival rate, requests/second.
+    /// Average arrival rate, requests/second.
     pub rate: f64,
     /// Number of requests to generate.
     pub num_requests: usize,
     /// Corpus size in documents (paper: ~0.3 M Wikipedia pages).
     pub num_docs: usize,
     pub seed: u64,
+    /// Arrival process: "poisson" (default), "bursty", "diurnal".
+    pub arrivals: String,
+    /// Tenants sharing the trace (1 = legacy single-tenant stream).
+    pub tenants: usize,
 }
 
 impl Default for WorkloadConfig {
@@ -254,6 +284,8 @@ impl Default for WorkloadConfig {
             num_requests: 2000,
             num_docs: 300_000,
             seed: 42,
+            arrivals: "poisson".to_string(),
+            tenants: 1,
         }
     }
 }
@@ -267,6 +299,7 @@ pub struct SystemConfig {
     pub retrieval: RetrievalConfig,
     pub sched: SchedConfig,
     pub spec: SpecConfig,
+    pub shed: ShedConfig,
     pub workload: WorkloadConfig,
 }
 
@@ -318,6 +351,7 @@ impl SystemConfig {
                 "retrieval" => apply_retrieval(&mut cfg.retrieval, val)?,
                 "sched" => apply_sched(&mut cfg.sched, val)?,
                 "spec" => apply_spec(&mut cfg.spec, val)?,
+                "shed" => apply_shed(&mut cfg.shed, val)?,
                 "workload" => apply_workload(&mut cfg.workload, val)?,
                 other => bail!("unknown config section '{other}'"),
             }
@@ -350,6 +384,19 @@ impl SystemConfig {
         }
         if self.workload.rate <= 0.0 {
             bail!("workload.rate must be > 0");
+        }
+        if self.workload.tenants == 0 {
+            bail!("workload.tenants must be > 0");
+        }
+        crate::workload::ArrivalProcess::parse(&self.workload.arrivals)
+            .map_err(|e| anyhow!("workload.arrivals: {e}"))?;
+        if self.shed.ttft_slo_s <= 0.0 {
+            bail!("shed.ttft_slo_s must be > 0");
+        }
+        if !(self.shed.downgrade_frac > 0.0
+            && self.shed.downgrade_frac <= 1.0)
+        {
+            bail!("shed.downgrade_frac must be in (0, 1]");
         }
         Ok(())
     }
@@ -481,6 +528,18 @@ fn apply_spec(c: &mut SpecConfig, v: &Json) -> Result<()> {
     Ok(())
 }
 
+fn apply_shed(c: &mut ShedConfig, v: &Json) -> Result<()> {
+    for (k, val) in v.as_obj().ok_or_else(|| anyhow!("shed: table"))? {
+        match k.as_str() {
+            "enabled" => c.enabled = get_bool(val, k)?,
+            "ttft_slo_s" => c.ttft_slo_s = get_f64(val, k)?,
+            "downgrade_frac" => c.downgrade_frac = get_f64(val, k)?,
+            other => bail!("unknown shed key '{other}'"),
+        }
+    }
+    Ok(())
+}
+
 fn apply_workload(c: &mut WorkloadConfig, v: &Json) -> Result<()> {
     for (k, val) in v.as_obj().ok_or_else(|| anyhow!("workload: table"))? {
         match k.as_str() {
@@ -491,6 +550,8 @@ fn apply_workload(c: &mut WorkloadConfig, v: &Json) -> Result<()> {
             "seed" => {
                 c.seed = val.as_u64().ok_or_else(|| anyhow!("seed: u64"))?
             }
+            "arrivals" => c.arrivals = get_str(val, k)?,
+            "tenants" => c.tenants = get_usize(val, k)?,
             other => bail!("unknown workload key '{other}'"),
         }
     }
@@ -575,6 +636,36 @@ rate = 1.4
             "[cache]\nrebalance_interval = 0"
         )
         .is_err());
+    }
+
+    #[test]
+    fn shed_and_open_loop_keys_parse() {
+        let doc = "[shed]\nenabled = true\nttft_slo_s = 2.5\n\
+                   downgrade_frac = 0.4\n\n\
+                   [workload]\narrivals = \"bursty\"\ntenants = 4";
+        let c = SystemConfig::from_toml_str(doc).unwrap();
+        assert!(c.shed.enabled);
+        assert_eq!(c.shed.ttft_slo_s, 2.5);
+        assert_eq!(c.shed.downgrade_frac, 0.4);
+        assert_eq!(c.workload.arrivals, "bursty");
+        assert_eq!(c.workload.tenants, 4);
+        let d = SystemConfig::default();
+        assert!(!d.shed.enabled, "shedding off by default");
+        assert_eq!(d.workload.arrivals, "poisson");
+        assert_eq!(d.workload.tenants, 1);
+        assert!(SystemConfig::from_toml_str(
+            "[workload]\narrivals = \"weibull\""
+        )
+        .is_err());
+        assert!(
+            SystemConfig::from_toml_str("[workload]\ntenants = 0").is_err()
+        );
+        assert!(SystemConfig::from_toml_str("[shed]\nttft_slo_s = 0.0")
+            .is_err());
+        assert!(
+            SystemConfig::from_toml_str("[shed]\ndowngrade_frac = 1.5")
+                .is_err()
+        );
     }
 
     #[test]

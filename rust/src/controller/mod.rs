@@ -12,8 +12,21 @@
 //!            ┌──────────────┴───────────────┐
 //!            ▼                              ▼
 //!   sim_server (driver)             real (driver)
-//!   virtual clock, analytic         wall clock, PJRT prefill;
-//!   cost model, batching engine     sessions: submit → poll_sessions
+//!   discrete-event core over        wall clock, PJRT prefill;
+//!   EventScheduler (cancellable     sessions: submit → poll_sessions
+//!   handles): open-loop Arrival /
+//!   RetrievalDone / EngineDone /
+//!   DeadlineExpired / RebalanceTick
+//!   handlers + service_queues();
+//!   admission-control ladder
+//!   Normal → Downgrade (EWMA of
+//!   queue delay > frac × SLO:
+//!   speculation off for new
+//!   arrivals) → Shed (deadline at
+//!   arrival + TTFT SLO; admitted
+//!   prefills always graced);
+//!   --shed off is bit-identical
+//!   to the iteration-driven path
 //!            │                              │
 //!            │              retrieval_service (thread pool)
 //!            │              ticks VectorIndex::staged_search,

@@ -1071,6 +1071,10 @@ impl RealServer {
                 .iter()
                 .map(|o| o.gpu_capacity)
                 .collect(),
+            // SLO fields (goodput, p99.9, shed/downgrade counters) stay
+            // zero on the real path: admission control with a TTFT SLO
+            // runs in the open-loop simulator only.
+            ..Default::default()
         }
     }
 }

@@ -4,9 +4,51 @@
 //!
 //! All cache/DSP/delivery semantics live in the shared
 //! [`pipeline`](super::pipeline) core; this file is the *simulation
-//! driver*: it owns the event loop, the iteration-level batching engine,
-//! and a [`PipelineDriver`] built from the virtual clock, the PCIe
-//! transfer model and the analytic `(α, β)` cost profile.
+//! driver*: a discrete-event controller over the generation-stamped
+//! [`EventScheduler`], the iteration-level batching engine, and a
+//! [`PipelineDriver`] built from the virtual clock, the PCIe transfer
+//! model and the analytic `(α, β)` cost profile.
+//!
+//! ```text
+//!            trace (open loop: arrivals fire at their timestamps,
+//!                   regardless of engine occupancy)
+//!              │
+//!              ▼
+//!   ┌────────────────────── EventScheduler ─────────────────────┐
+//!   │ Arrival ─► RetrievalDone{stage} ─► EngineDone{epoch}      │
+//!   │    │            (DSP stages)            ▲                 │
+//!   │    └─► DeadlineExpired (shed on)        │   RebalanceTick │
+//!   └───────┬────────────────────────────────────────┬──────────┘
+//!           ▼              after every event         ▼
+//!      admission control ──► service_queues() ──► engine.plan()
+//!      (Normal → Downgrade → Shed)
+//! ```
+//!
+//! **Open loop + overload.** Arrivals are scheduled from the trace up
+//! front, so offered load is independent of service capacity: when the
+//! engine saturates, the reorder queue grows and queueing delay shows up
+//! in TTFT — the regime the paper's closed feasible traces never enter.
+//!
+//! **Shed/downgrade ladder** (`[shed]` config; off by default, and the
+//! off path is conformance-tested bit-identical to the iteration-driven
+//! predecessor):
+//!
+//! 1. *Normal* — every arrival gets the full staged-speculation plan.
+//! 2. *Downgrade* — when the EWMA of admission queueing delay exceeds
+//!    `downgrade_frac × ttft_slo_s`, new arrivals run single-stage
+//!    retrieval with speculation disabled: less wasted prefill work
+//!    under pressure, at the cost of the DSP overlap win.
+//! 3. *Shed* — a `DeadlineExpired` event fires `ttft_slo_s` after each
+//!    arrival; if the request has not produced its first token and is
+//!    not already admitted to the engine (admitted prefills are always
+//!    allowed to finish — aborting them refunds nothing), it is shed:
+//!    pending retrieval stages are cancelled via their event handles,
+//!    any queued generation is aborted, and the request is recorded as
+//!    shed for the goodput/attainment metrics.
+//!
+//! `RebalanceTick` (shed-on only) halves the delay EWMA every quarter
+//! SLO so downgrade mode exits once a burst drains, and re-arms only
+//! while unserved, unshed requests remain — guaranteeing termination.
 
 use super::batch::BatchAdmission;
 use super::pipeline::{
@@ -24,20 +66,51 @@ use crate::llm::models::{GpuSpec, ModelSpec};
 use crate::metrics::Recorder;
 use crate::policy::make_policy;
 use crate::sched::PendingRequest;
-use crate::sim::{Clock, EventQueue, SimClock};
+use crate::sim::{Clock, EventHandle, EventScheduler, SimClock};
 use crate::spec::SpecAction;
 use crate::tree::{DocId, KnowledgeTree};
 use crate::util::Rng;
 use crate::workload::Trace;
+use std::collections::HashMap;
 use std::time::Instant;
 
 #[derive(Debug, Clone)]
 enum Event {
     Arrival(usize),
-    Stage { req: usize, stage: usize },
+    /// One DSP retrieval stage of `req` delivered its (speculative or
+    /// final) document candidates.
+    RetrievalDone { req: usize, stage: usize },
     /// Completion of the iteration with this epoch tag (stale tags are
     /// ignored — the iteration was cancelled).
     EngineDone(u64),
+    /// TTFT-SLO deadline of request `req` (scheduled only with shedding
+    /// enabled; cancelled through its handle at first-token delivery).
+    DeadlineExpired(usize),
+    /// Periodic admission-controller maintenance (shed-on only).
+    RebalanceTick,
+}
+
+/// Admission-controller state for the shed/downgrade ladder.
+#[derive(Debug, Clone)]
+struct ShedState {
+    enabled: bool,
+    /// TTFT SLO, seconds: both the shed deadline and the goodput bar.
+    ttft_slo: f64,
+    /// Downgrade threshold as a fraction of the SLO.
+    downgrade_frac: f64,
+    /// EWMA of queueing delay observed at batch-admission pops
+    /// (deterministic: pure f64 folds over simulated times).
+    wait_ewma: f64,
+}
+
+impl ShedState {
+    fn downgrading(&self) -> bool {
+        self.enabled && self.wait_ewma > self.downgrade_frac * self.ttft_slo
+    }
+
+    fn observe_wait(&mut self, wait: f64) {
+        self.wait_ewma = 0.8 * self.wait_ewma + 0.2 * wait.max(0.0);
+    }
 }
 
 /// Aggregated results of one simulation run.
@@ -72,6 +145,11 @@ pub struct SimOutcome {
     /// Total GPU→host PCIe bytes (eviction swap-outs, write-back
     /// bursts, rebalancer donor evictions).
     pub pcie_g2h_bytes: u64,
+    /// Requests the admission controller shed (always 0 with shedding
+    /// off). Shed requests are excluded from `completed`.
+    pub shed_requests: usize,
+    /// Arrivals downgraded to single-stage, speculation-free service.
+    pub downgraded_requests: usize,
 }
 
 /// The simulation's [`PipelineDriver`]: virtual clock + analytic models.
@@ -95,11 +173,19 @@ impl PipelineDriver for SimDriver {
 pub struct SimServer {
     kind: SystemKind,
     driver: SimDriver,
-    events: EventQueue<Event>,
+    events: EventScheduler<Event>,
     engine: Engine,
     pipeline: Pipeline,
     timing: RetrievalTiming,
     spec_enabled: bool,
+    shed: ShedState,
+    /// Handles of each request's pending retrieval-stage events, so a
+    /// shed can cancel them in O(log n) each (cancelling already-fired
+    /// handles is a harmless no-op).
+    stage_handles: Vec<Vec<EventHandle>>,
+    /// Handle of each request's pending `DeadlineExpired` (shed-on
+    /// only), cancelled at first-token delivery.
+    deadline_handles: Vec<Option<EventHandle>>,
     max_batch: usize,
     /// Compute-token budget of one popped admission batch (mirrors the
     /// engine's per-iteration prefill token cap).
@@ -110,6 +196,12 @@ pub struct SimServer {
     admit_infos: std::collections::HashMap<u64, Admission>,
     /// Docs of every generation ever started (for stale-seq insertion).
     gen_docs: std::collections::HashMap<u64, Vec<DocId>>,
+    /// Per-request doc→token-count maps plus the mean-length fallback
+    /// for speculative candidates outside the final set, built once at
+    /// construction: `doc_tokens` is hit per candidate per admission,
+    /// and the old per-call linear scan was quadratic in top-k.
+    doc_token_maps: Vec<HashMap<DocId, usize>>,
+    mean_doc_tokens: Vec<usize>,
     trace: Trace,
     rng: Rng,
     num_docs: usize,
@@ -212,6 +304,26 @@ impl SimServer {
         let mut pipeline =
             Pipeline::new(cache, reorder, cfg.sched.window);
         pipeline.reserve_requests(trace.requests.len());
+        let n = trace.requests.len();
+        let doc_token_maps: Vec<HashMap<DocId, usize>> = trace
+            .requests
+            .iter()
+            .map(|r| {
+                r.docs
+                    .iter()
+                    .copied()
+                    .zip(r.doc_tokens.iter().copied())
+                    .collect()
+            })
+            .collect();
+        let mean_doc_tokens: Vec<usize> = trace
+            .requests
+            .iter()
+            .map(|r| {
+                let sum: usize = r.doc_tokens.iter().sum();
+                (sum / r.doc_tokens.len().max(1)).max(1)
+            })
+            .collect();
         Ok(SimServer {
             kind,
             driver: SimDriver {
@@ -219,15 +331,25 @@ impl SimServer {
                 transfer,
                 profile,
             },
-            events: EventQueue::new(),
+            events: EventScheduler::new(),
             engine,
             pipeline,
             timing,
             spec_enabled,
+            shed: ShedState {
+                enabled: cfg.shed.enabled,
+                ttft_slo: cfg.shed.ttft_slo_s,
+                downgrade_frac: cfg.shed.downgrade_frac,
+                wait_ewma: 0.0,
+            },
+            stage_handles: vec![Vec::new(); n],
+            deadline_handles: vec![None; n],
             max_batch: cfg.engine.max_batch,
             batch_token_budget: cfg.engine.max_prefill_tokens,
             admit_infos: std::collections::HashMap::new(),
             gen_docs: std::collections::HashMap::new(),
+            doc_token_maps,
+            mean_doc_tokens,
             trace,
             rng: Rng::new(seed ^ 0x51_C0_FF_EE),
             num_docs,
@@ -251,14 +373,26 @@ impl SimServer {
             let at = self.trace.requests[i].arrival;
             self.events.schedule(at, Event::Arrival(i));
         }
-        while let Some((t, ev)) = self.events.next() {
+        if self.shed.enabled {
+            self.events.schedule(
+                self.shed.ttft_slo / 4.0,
+                Event::RebalanceTick,
+            );
+        }
+        while let Some((t, ev)) = self.events.pop() {
             self.driver.clock.advance_to(t);
             match ev {
                 Event::Arrival(i) => self.on_arrival(i),
-                Event::Stage { req, stage } => self.on_stage(req, stage),
+                Event::RetrievalDone { req, stage } => {
+                    self.on_retrieval_done(req, stage)
+                }
                 Event::EngineDone(epoch) => self.on_engine_done(epoch),
+                Event::DeadlineExpired(req) => {
+                    self.on_deadline_expired(req)
+                }
+                Event::RebalanceTick => self.on_rebalance_tick(),
             }
-            self.pump();
+            self.service_queues();
         }
         let completed = self
             .pipeline
@@ -306,6 +440,8 @@ impl SimServer {
                 self.sched_secs / self.sched_ops as f64
             },
             completed,
+            shed_requests: self.pipeline.recorder.shed_count(),
+            downgraded_requests: self.pipeline.recorder.downgrade_count(),
             recorder: self.pipeline.recorder,
         }
     }
@@ -317,8 +453,16 @@ impl SimServer {
     fn on_arrival(&mut self, i: usize) {
         let now = self.now();
         self.pipeline.recorder.arrival(i as u64, now);
+        self.pipeline
+            .recorder
+            .tenant(i as u64, self.trace.requests[i].tenant);
         let docs = self.trace.requests[i].docs.clone();
-        let plan = if self.spec_enabled {
+        // Downgrade rung of the ladder: under sustained queueing delay,
+        // new arrivals skip speculation (single-stage retrieval) so the
+        // engine stops burning iterations on prefills that overload
+        // would terminate anyway.
+        let downgrade = self.spec_enabled && self.shed.downgrading();
+        let plan = if self.spec_enabled && !downgrade {
             StagedRetrieval::plan(
                 &docs,
                 self.num_docs,
@@ -328,16 +472,29 @@ impl SimServer {
         } else {
             StagedRetrieval::single(&docs, &self.timing)
         };
+        if downgrade {
+            self.pipeline.recorder.downgraded(i as u64);
+        }
+        let mut handles = Vec::with_capacity(plan.stages.len());
         for (s, stage) in plan.stages.iter().enumerate() {
-            self.events
-                .schedule(now + stage.offset, Event::Stage { req: i, stage: s });
+            handles.push(self.events.schedule(
+                now + stage.offset,
+                Event::RetrievalDone { req: i, stage: s },
+            ));
+        }
+        self.stage_handles[i] = handles;
+        if self.shed.enabled {
+            self.deadline_handles[i] = Some(self.events.schedule(
+                now + self.shed.ttft_slo,
+                Event::DeadlineExpired(i),
+            ));
         }
         // Stash the plan's candidate docs on the request.
         self.pipeline.requests[i].active_docs = Vec::new();
         self.pipeline.requests[i].plan = Some(plan);
     }
 
-    fn on_stage(&mut self, req: usize, stage: usize) {
+    fn on_retrieval_done(&mut self, req: usize, stage: usize) {
         let t0 = Instant::now();
         let now = self.now();
         let sp = self.pipeline.requests[req]
@@ -378,6 +535,57 @@ impl SimServer {
         }
         self.sched_secs += t0.elapsed().as_secs_f64();
         self.sched_ops += 1;
+    }
+
+    /// Shed rung of the ladder: the request's TTFT SLO deadline passed.
+    fn on_deadline_expired(&mut self, req: usize) {
+        self.deadline_handles[req] = None;
+        let served = self
+            .pipeline
+            .recorder
+            .record(req as u64)
+            .and_then(|r| r.first_token)
+            .is_some();
+        if served || self.pipeline.requests[req].done {
+            return;
+        }
+        // Grace for admitted prefills: the work is already scheduled on
+        // the engine and aborting it refunds nothing — let it finish
+        // (its TTFT misses the SLO; goodput already accounts for that).
+        if let Some(seq) = self.pipeline.requests[req].active_seq {
+            if self.admit_infos.contains_key(&seq) {
+                return;
+            }
+        }
+        for h in std::mem::take(&mut self.stage_handles[req]) {
+            self.events.cancel(h);
+        }
+        self.abort_generation(req);
+        let now = self.now();
+        self.pipeline.recorder.shed(req as u64, now);
+    }
+
+    /// Shed-on maintenance: decay the queueing-delay EWMA so downgrade
+    /// mode exits once a burst drains (pops stop happening exactly when
+    /// the queue is empty, so without decay the EWMA would freeze at
+    /// its burst-peak value). Re-arms only while unserved, unshed
+    /// requests remain, so the event loop always terminates.
+    fn on_rebalance_tick(&mut self) {
+        self.shed.wait_ewma *= 0.5;
+        let live = (0..self.trace.requests.len()).any(|i| {
+            self.pipeline
+                .recorder
+                .record(i as u64)
+                .map_or(true, |r| {
+                    r.finished.is_none() && r.shed.is_none()
+                })
+        });
+        if live {
+            self.events.schedule(
+                self.now() + self.shed.ttft_slo / 4.0,
+                Event::RebalanceTick,
+            );
+        }
     }
 
     /// Abort the live generation of `req`, wherever it is. Sequences in
@@ -448,23 +656,20 @@ impl SimServer {
 
     /// Token count of `doc` for this request: trace value when the doc is
     /// one of the final docs, corpus-independent fallback otherwise
-    /// (perturbed speculative candidates use the mean doc length).
+    /// (perturbed speculative candidates use the mean doc length). O(1)
+    /// against the maps built at construction.
     fn doc_tokens(&self, req: usize, doc: DocId) -> usize {
-        let tr = &self.trace.requests[req];
-        for (i, &d) in tr.docs.iter().enumerate() {
-            if d == doc {
-                return tr.doc_tokens[i];
-            }
-        }
-        // Speculative candidate outside the final set.
-        let sum: usize = tr.doc_tokens.iter().sum();
-        (sum / tr.doc_tokens.len().max(1)).max(1)
+        self.doc_token_maps[req]
+            .get(&doc)
+            .copied()
+            .unwrap_or(self.mean_doc_tokens[req])
     }
 
     /// Admit queued requests into free engine slots — a whole batch per
     /// queue pop, with the members' H2D transfers coalesced into one
-    /// burst — then keep the engine running.
-    fn pump(&mut self) {
+    /// burst — then keep the engine running. Invoked after every event,
+    /// so the engine restarts the moment capacity or work appears.
+    fn service_queues(&mut self) {
         // Cross-shard rebalance tick (no-op unless `cache.rebalance`):
         // donor evictions' swap-outs occupy the link exactly like a
         // commit write-back burst, so they delay the next planned
@@ -521,12 +726,19 @@ impl SimServer {
     /// rides on the batch's FIRST member as its `extra_time`, so the
     /// charge lands exactly once, on the iteration that prefills the
     /// batch head — never piling several batches' bursts onto one
-    /// iteration when the pump pops more than one budget-limited batch
+    /// iteration when `service_queues` pops more than one budget-limited batch
     /// back to back. With `max_batch = 1` this is exactly the
     /// historical one-pop admission: a single member carrying its own
     /// `transfer_time(bytes)`.
     fn admit_batch(&mut self, pending: Vec<PendingRequest>) {
         let now = self.now();
+        if self.shed.enabled {
+            // Queueing-delay signal for the downgrade rung: how long
+            // each admitted member waited from arrival to this pop.
+            for p in &pending {
+                self.shed.observe_wait(now - p.arrival);
+            }
+        }
         let mut batch = BatchAdmission::new();
         let mut specs: Vec<SeqSpec> = Vec::new();
         for p in pending {
@@ -634,6 +846,18 @@ impl SimServer {
             &self.trace.requests[req].docs,
             now,
         );
+        // A recorded first token satisfies the SLO deadline: disarm it.
+        let served = self
+            .pipeline
+            .recorder
+            .record(req as u64)
+            .and_then(|r| r.first_token)
+            .is_some();
+        if served {
+            if let Some(h) = self.deadline_handles[req].take() {
+                self.events.cancel(h);
+            }
+        }
         moved
     }
 
@@ -776,6 +1000,159 @@ mod tests {
             out.rebalance,
             crate::controller::RebalanceStats::default()
         );
+    }
+
+    /// Tentpole acceptance (unit tier): under heavy open-loop overload
+    /// queues build without deadlock; with shedding on, overload is cut
+    /// and every request is accounted for exactly once — completed or
+    /// shed — with per-tenant stats summing exactly to the aggregate.
+    /// (The strict goodput-win margin is asserted by the overload gate
+    /// and the event_sim integration suite.)
+    #[test]
+    fn overload_sheds_and_accounts_every_request() {
+        use crate::workload::TraceOptions;
+        let corpus = Corpus::wikipedia_like(2_000, 1);
+        // All 120 requests arrive inside ~2.4 s — far beyond what a
+        // batch-4 engine prefills in that window.
+        let mk = || {
+            Trace::generate_open_loop(
+                &MMLU,
+                &corpus,
+                50.0,
+                120,
+                &TraceOptions {
+                    tenants: 4,
+                    ..TraceOptions::default()
+                },
+                11,
+            )
+        };
+        // Calibrate the SLO from an uncongested run: 3× its mean TTFT.
+        let base = run_kind("ragcache", 0.3, 40);
+        let slo = (3.0 * base.recorder.ttft().mean()).max(0.2);
+        let mut cfg = cfg_for("ragcache");
+        cfg.shed.ttft_slo_s = slo;
+        let off = SimServer::build(
+            &cfg,
+            mk(),
+            2_000,
+            RetrievalTiming::default(),
+            5,
+        )
+        .unwrap()
+        .run();
+        cfg.shed.enabled = true;
+        let on = SimServer::build(
+            &cfg,
+            mk(),
+            2_000,
+            RetrievalTiming::default(),
+            5,
+        )
+        .unwrap()
+        .run();
+        // Open loop without shedding: queues grow, no deadlock,
+        // everything completes eventually — but far past the SLO.
+        assert_eq!(off.completed, 120);
+        assert_eq!(off.shed_requests, 0);
+        let mut off_ttft = off.recorder.ttft();
+        assert!(off_ttft.percentile(99.0) > slo);
+        assert!(on.shed_requests > 0, "overload must shed");
+        assert_eq!(on.completed + on.shed_requests, 120);
+        assert_eq!(on.recorder.shed_count(), on.shed_requests);
+        assert!(on.recorder.goodput(slo) >= off.recorder.goodput(slo));
+        let per = on.recorder.per_tenant(slo);
+        assert_eq!(per.len(), 4);
+        assert_eq!(per.iter().map(|t| t.requests).sum::<usize>(), 120);
+        assert_eq!(
+            per.iter().map(|t| t.shed).sum::<usize>(),
+            on.shed_requests
+        );
+        assert_eq!(
+            per.iter().map(|t| t.completed).sum::<usize>(),
+            on.completed
+        );
+    }
+
+    /// The downgrade rung: pre-load the queueing-delay EWMA so the
+    /// controller starts in downgrade mode — early arrivals must be
+    /// served speculation-free, and the tick decay must eventually
+    /// release the mode (the run still completes everything under a
+    /// loose SLO).
+    #[test]
+    fn downgrade_ladder_disables_speculation_under_pressure() {
+        let corpus = Corpus::wikipedia_like(2_000, 1);
+        let trace = Trace::generate(&MMLU, &corpus, 0.5, 40, 2, 11);
+        let mut cfg = cfg_for("ragcache");
+        cfg.shed.enabled = true;
+        cfg.shed.ttft_slo_s = 30.0; // loose: nothing sheds
+        let mut server = SimServer::build(
+            &cfg,
+            trace,
+            2_000,
+            RetrievalTiming::default(),
+            5,
+        )
+        .unwrap();
+        server.shed.wait_ewma = 100.0; // synthetic pressure
+        let out = server.run();
+        assert!(out.downgraded_requests > 0, "pressure must downgrade");
+        assert!(
+            out.downgraded_requests < 40,
+            "tick decay must release downgrade mode"
+        );
+        assert_eq!(out.shed_requests, 0);
+        assert_eq!(out.completed, 40);
+        assert_eq!(
+            out.recorder.downgrade_count(),
+            out.downgraded_requests
+        );
+    }
+
+    /// The event core replays deterministically with shedding enabled:
+    /// same config + trace + seed → bit-identical outcome.
+    #[test]
+    fn shed_runs_are_deterministic() {
+        use crate::workload::TraceOptions;
+        let corpus = Corpus::wikipedia_like(1_000, 3);
+        let mk = || {
+            Trace::generate_open_loop(
+                &MMLU,
+                &corpus,
+                20.0,
+                60,
+                &TraceOptions {
+                    tenants: 2,
+                    ..TraceOptions::default()
+                },
+                13,
+            )
+        };
+        let mut cfg = cfg_for("ragcache");
+        cfg.shed.enabled = true;
+        cfg.shed.ttft_slo_s = 1.0;
+        let run = |cfg: &SystemConfig| {
+            SimServer::build(
+                cfg,
+                mk(),
+                1_000,
+                RetrievalTiming::default(),
+                5,
+            )
+            .unwrap()
+            .run()
+        };
+        let a = run(&cfg);
+        let b = run(&cfg);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.shed_requests, b.shed_requests);
+        assert_eq!(a.downgraded_requests, b.downgraded_requests);
+        assert_eq!(
+            a.recorder.ttft().mean().to_bits(),
+            b.recorder.ttft().mean().to_bits()
+        );
+        assert_eq!(a.pcie_h2g_bytes, b.pcie_h2g_bytes);
+        assert_eq!(a.completed + a.shed_requests, 60);
     }
 
     #[test]

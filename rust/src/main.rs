@@ -56,6 +56,17 @@ commands:
              --requests 500 [--config FILE] [--model NAME] [--seed N]
              [--shards K] [--rebalance on|off] [--rebalance-interval N]
              [--chunk-cache on|off] [--boundary-tokens R]
+             [--arrivals poisson|bursty|diurnal] (open-loop arrival
+                                process; default poisson)
+             [--tenants T]     (tenants with disjoint corpus slices and
+                                per-tenant Zipf skew, default 1)
+             [--shed on|off]   (admission control: downgrade speculation
+                                under queueing pressure, shed requests
+                                past the TTFT SLO; default off =
+                                bit-identical to the pre-shedding path)
+             [--ttft-slo S]    (TTFT SLO seconds for shedding and the
+                                goodput/attainment report, default 5.0)
+             [--docs N]        (corpus size in documents, default 300000)
   info       show models, GPUs, datasets, artifact status
 ";
 
@@ -511,16 +522,44 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     cfg.cache.boundary_tokens = args
         .get_parse_or("boundary-tokens", cfg.cache.boundary_tokens)
         .map_err(|e| anyhow!(e))?;
+    if let Some(a) = args.get("arrivals") {
+        cfg.workload.arrivals = a.to_string();
+    }
+    cfg.workload.tenants = args
+        .get_parse_or("tenants", cfg.workload.tenants)
+        .map_err(|e| anyhow!(e))?;
+    if let Some(s) = args.get("shed") {
+        cfg.shed.enabled = match s {
+            "on" => true,
+            "off" => false,
+            other => {
+                return Err(anyhow!("--shed expects on|off, got '{other}'"))
+            }
+        };
+    }
+    cfg.shed.ttft_slo_s = args
+        .get_parse_or("ttft-slo", cfg.shed.ttft_slo_s)
+        .map_err(|e| anyhow!(e))?;
+    cfg.workload.num_docs = args
+        .get_parse_or("docs", cfg.workload.num_docs)
+        .map_err(|e| anyhow!(e))?;
     cfg.validate()?;
 
     let profile = DatasetProfile::lookup(&cfg.workload.dataset)?;
     let corpus = Corpus::wikipedia_like(cfg.workload.num_docs, seed);
-    let trace = Trace::generate(
+    let trace = Trace::generate_open_loop(
         profile,
         &corpus,
         cfg.workload.rate,
         cfg.workload.num_requests,
-        cfg.retrieval.top_k,
+        &ragcache::workload::TraceOptions {
+            top_k: cfg.retrieval.top_k,
+            arrivals: ragcache::workload::ArrivalProcess::parse(
+                &cfg.workload.arrivals,
+            )?,
+            tenants: cfg.workload.tenants,
+            ..ragcache::workload::TraceOptions::default()
+        },
         seed,
     );
     let server = SimServer::build(
@@ -533,23 +572,52 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let out = server.run();
     let mut ttft = out.recorder.ttft();
     println!(
-        "system={} model={} dataset={} rate={} requests={}",
+        "system={} model={} dataset={} rate={} requests={} arrivals={} \
+         tenants={} shed={}",
         cfg.kind.name(),
         cfg.engine.model,
         cfg.workload.dataset,
         cfg.workload.rate,
-        cfg.workload.num_requests
+        cfg.workload.num_requests,
+        cfg.workload.arrivals,
+        cfg.workload.tenants,
+        if cfg.shed.enabled { "on" } else { "off" },
     );
     println!(
-        "TTFT mean {:.3}s p50 {:.3}s p99 {:.3}s | hit-rate {:.1}% | \
-         throughput {:.2} req/s | sched {:.3}ms",
+        "TTFT mean {:.3}s p50 {:.3}s p99 {:.3}s p99.9 {:.3}s | \
+         hit-rate {:.1}% | throughput {:.2} req/s | sched {:.3}ms",
         ttft.mean(),
         ttft.median(),
         ttft.p99(),
+        ttft.p999(),
         out.recorder.hit_rate() * 100.0,
         out.recorder.throughput(),
         out.mean_sched_time * 1e3,
     );
+    let slo = cfg.shed.ttft_slo_s;
+    println!(
+        "SLO ({slo:.2}s TTFT): goodput {:.2} req/s, attainment {:.1}%, \
+         {} shed, {} downgraded",
+        out.recorder.goodput(slo),
+        out.recorder.slo_attainment(slo) * 100.0,
+        out.shed_requests,
+        out.downgraded_requests,
+    );
+    if cfg.workload.tenants > 1 {
+        for t in out.recorder.per_tenant(slo) {
+            println!(
+                "tenant {}: {} requests, {} completed, {} shed, \
+                 {} downgraded, {} in-SLO, mean TTFT {:.3}s",
+                t.tenant,
+                t.requests,
+                t.completed,
+                t.shed,
+                t.downgraded,
+                t.slo_ok,
+                t.mean_ttft(),
+            );
+        }
+    }
     if let Some(c) = out.tree_counters {
         println!(
             "tree: {} inserts, {} gpu evictions ({} zero-copy), {} host \

@@ -1,4 +1,7 @@
-//! Serving metrics: TTFT, throughput, hit rate (§7 Metrics).
+//! Serving metrics: TTFT, throughput, hit rate (§7 Metrics), plus the
+//! SLO-attainment family for open-loop overload studies: goodput under a
+//! TTFT SLO, p99.9 tails, shed/downgrade counters and per-tenant
+//! breakdowns whose counts sum exactly to the aggregate.
 
 use crate::util::Summary;
 use std::collections::BTreeMap;
@@ -10,6 +13,15 @@ pub struct RequestRecord {
     pub retrieval_done: Option<f64>,
     pub first_token: Option<f64>,
     pub finished: Option<f64>,
+    /// Owning tenant (0 in single-tenant runs).
+    pub tenant: u32,
+    /// Set (to the shed time) when admission control rejected the
+    /// request instead of serving it. Mutually exclusive with
+    /// `first_token` — a shed request never produced a token.
+    pub shed: Option<f64>,
+    /// Admission control downgraded this request (speculation disabled,
+    /// single-stage retrieval) to relieve queueing pressure.
+    pub downgraded: bool,
     /// Retrieved / hit document counts for the §7.3 hit-rate definition.
     pub docs_retrieved: usize,
     pub docs_hit: usize,
@@ -73,6 +85,27 @@ impl Recorder {
 
     pub fn non_overlapped_search(&mut self, id: u64, secs: f64) {
         self.records.entry(id).or_default().non_overlapped_search = secs;
+    }
+
+    pub fn tenant(&mut self, id: u64, tenant: u32) {
+        self.records.entry(id).or_default().tenant = tenant;
+    }
+
+    /// Mark a request shed by admission control at time `t`.
+    pub fn shed(&mut self, id: u64, t: f64) {
+        self.records.entry(id).or_default().shed = Some(t);
+    }
+
+    pub fn downgraded(&mut self, id: u64) {
+        self.records.entry(id).or_default().downgraded = true;
+    }
+
+    pub fn shed_count(&self) -> usize {
+        self.records.values().filter(|r| r.shed.is_some()).count()
+    }
+
+    pub fn downgrade_count(&self) -> usize {
+        self.records.values().filter(|r| r.downgraded).count()
     }
 
     pub fn record(&self, id: u64) -> Option<&RequestRecord> {
@@ -149,27 +182,135 @@ impl Recorder {
         s.mean()
     }
 
-    /// Completed-request throughput over the observed span, req/s.
+    /// Observed span of the whole trace: first arrival to the last event
+    /// of any kind (finish, shed, or — for still-queued requests under
+    /// overload — the arrival itself). Rates divide by this horizon, not
+    /// by the completed-only span: an overloaded run that completes 10
+    /// of 100 requests must not report the throughput of the lucky 10.
+    pub fn horizon(&self) -> f64 {
+        let mut first = f64::INFINITY;
+        let mut last = f64::NEG_INFINITY;
+        for r in self.records.values() {
+            first = first.min(r.arrival);
+            last = last
+                .max(r.arrival)
+                .max(r.finished.unwrap_or(f64::NEG_INFINITY))
+                .max(r.shed.unwrap_or(f64::NEG_INFINITY));
+        }
+        if last > first {
+            last - first
+        } else {
+            0.0
+        }
+    }
+
+    /// Completed-request throughput over the full trace horizon, req/s.
     pub fn throughput(&self) -> f64 {
-        let mut finishes: Vec<f64> = self
-            .records
-            .values()
-            .filter_map(|r| r.finished)
-            .collect();
-        if finishes.len() < 2 {
+        let completed =
+            self.records.values().filter(|r| r.finished.is_some()).count();
+        if completed < 2 {
             return 0.0;
         }
-        finishes.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let first_arrival = self
-            .records
-            .values()
-            .map(|r| r.arrival)
-            .fold(f64::INFINITY, f64::min);
-        let span = finishes.last().unwrap() - first_arrival;
+        let span = self.horizon();
         if span <= 0.0 {
             0.0
         } else {
-            finishes.len() as f64 / span
+            completed as f64 / span
+        }
+    }
+
+    /// Goodput under a TTFT SLO: requests whose first token arrived
+    /// within `ttft_slo` seconds of arrival, per second of trace
+    /// horizon. Shed and still-queued requests count in the denominator
+    /// time but contribute nothing — the metric admission control is
+    /// judged by (serve fewer requests well > serve all of them late).
+    pub fn goodput(&self, ttft_slo: f64) -> f64 {
+        let good = self.slo_ok_count(ttft_slo);
+        if good == 0 {
+            return 0.0;
+        }
+        let span = self.horizon();
+        if span <= 0.0 {
+            0.0
+        } else {
+            good as f64 / span
+        }
+    }
+
+    /// Fraction of ALL requests (including shed / never-served) meeting
+    /// the TTFT SLO.
+    pub fn slo_attainment(&self, ttft_slo: f64) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.slo_ok_count(ttft_slo) as f64 / self.records.len() as f64
+    }
+
+    fn slo_ok_count(&self, ttft_slo: f64) -> usize {
+        self.records
+            .values()
+            .filter(|r| {
+                r.first_token
+                    .map_or(false, |ft| ft - r.arrival <= ttft_slo)
+            })
+            .count()
+    }
+
+    /// Per-tenant breakdown under a TTFT SLO. Tenants are listed in
+    /// ascending id order and every request belongs to exactly one
+    /// tenant, so the columns sum exactly to the aggregate counters.
+    pub fn per_tenant(&self, ttft_slo: f64) -> Vec<TenantStats> {
+        let mut by: BTreeMap<u32, TenantStats> = BTreeMap::new();
+        for r in self.records.values() {
+            let s = by.entry(r.tenant).or_insert_with(|| TenantStats {
+                tenant: r.tenant,
+                ..TenantStats::default()
+            });
+            s.requests += 1;
+            if r.finished.is_some() {
+                s.completed += 1;
+            }
+            if r.shed.is_some() {
+                s.shed += 1;
+            }
+            if r.downgraded {
+                s.downgraded += 1;
+            }
+            if let Some(ft) = r.first_token {
+                let ttft = ft - r.arrival;
+                if ttft <= ttft_slo {
+                    s.slo_ok += 1;
+                }
+                s.ttft_sum += ttft;
+                s.ttft_n += 1;
+            }
+        }
+        by.into_values().collect()
+    }
+}
+
+/// One tenant's share of the aggregate metrics (see
+/// [`Recorder::per_tenant`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TenantStats {
+    pub tenant: u32,
+    pub requests: usize,
+    pub completed: usize,
+    pub shed: usize,
+    pub downgraded: usize,
+    /// Requests whose TTFT met the SLO.
+    pub slo_ok: usize,
+    ttft_sum: f64,
+    ttft_n: usize,
+}
+
+impl TenantStats {
+    /// Mean TTFT over this tenant's served requests (NaN if none).
+    pub fn mean_ttft(&self) -> f64 {
+        if self.ttft_n == 0 {
+            f64::NAN
+        } else {
+            self.ttft_sum / self.ttft_n as f64
         }
     }
 }
@@ -256,6 +397,91 @@ mod tests {
         }
         // 10 requests finishing between t=1 and t=10, first arrival 0.
         assert!((r.throughput() - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn horizon_counts_shed_and_queued_requests() {
+        let mut r = Recorder::new();
+        r.arrival(0, 0.0);
+        r.first_token(0, 1.0);
+        r.finished(0, 2.0);
+        r.arrival(1, 5.0);
+        r.shed(1, 9.0); // shed extends the horizon past the last finish
+        r.arrival(2, 12.0); // still queued at end of run
+        assert!((r.horizon() - 12.0).abs() < 1e-9);
+        assert_eq!(r.shed_count(), 1);
+        // Throughput needs >= 2 completions; with one it reports 0.
+        assert_eq!(r.throughput(), 0.0);
+    }
+
+    #[test]
+    fn goodput_and_attainment_under_slo() {
+        let mut r = Recorder::new();
+        // 4 requests over a 10 s horizon: one fast, one slow (misses the
+        // 1 s SLO), one shed, one never served.
+        r.arrival(0, 0.0);
+        r.first_token(0, 0.5);
+        r.finished(0, 1.0);
+        r.arrival(1, 1.0);
+        r.first_token(1, 4.0);
+        r.finished(1, 5.0);
+        r.arrival(2, 2.0);
+        r.shed(2, 3.5);
+        r.arrival(3, 10.0);
+        assert!((r.horizon() - 10.0).abs() < 1e-9);
+        assert!((r.goodput(1.0) - 0.1).abs() < 1e-9); // 1 good / 10 s
+        assert!((r.slo_attainment(1.0) - 0.25).abs() < 1e-9);
+        // Loose SLO admits the slow one too.
+        assert!((r.slo_attainment(5.0) - 0.5).abs() < 1e-9);
+        assert!((r.goodput(5.0) - 0.2).abs() < 1e-9);
+        assert_eq!(r.goodput(0.0), 0.0);
+    }
+
+    #[test]
+    fn per_tenant_sums_to_aggregate() {
+        let mut r = Recorder::new();
+        for i in 0..12u64 {
+            r.arrival(i, i as f64);
+            r.tenant(i, (i % 3) as u32);
+            match i % 4 {
+                0 => r.shed(i, i as f64 + 2.0),
+                1 => {
+                    r.first_token(i, i as f64 + 0.2);
+                    r.finished(i, i as f64 + 0.4);
+                    r.downgraded(i);
+                }
+                _ => {
+                    r.first_token(i, i as f64 + 3.0);
+                    r.finished(i, i as f64 + 4.0);
+                }
+            }
+        }
+        let slo = 1.0;
+        let per = r.per_tenant(slo);
+        assert_eq!(per.len(), 3);
+        assert_eq!(per.iter().map(|t| t.requests).sum::<usize>(), r.len());
+        assert_eq!(
+            per.iter().map(|t| t.shed).sum::<usize>(),
+            r.shed_count()
+        );
+        assert_eq!(
+            per.iter().map(|t| t.downgraded).sum::<usize>(),
+            r.downgrade_count()
+        );
+        assert_eq!(
+            per.iter().map(|t| t.completed).sum::<usize>(),
+            r.records.values().filter(|x| x.finished.is_some()).count()
+        );
+        let agg_ok = (r.slo_attainment(slo) * r.len() as f64).round();
+        assert_eq!(
+            per.iter().map(|t| t.slo_ok).sum::<usize>(),
+            agg_ok as usize
+        );
+        for t in &per {
+            assert_eq!(t.requests, 4);
+            assert!(t.mean_ttft().is_finite());
+        }
+        assert!(TenantStats::default().mean_ttft().is_nan());
     }
 
     #[test]

@@ -879,6 +879,21 @@ fn merge_stats(parts: &[proto::StatsResult]) -> proto::StatsResult {
         shard_gpu_capacity: freshest
             .map(|p| p.shard_gpu_capacity.clone())
             .unwrap_or_default(),
+        // Each engine serves its own request stream, so goodput and the
+        // shed/downgrade counters sum; tail latency across engines is
+        // the worst engine's tail; SLO attainment is a per-request
+        // fraction, so it merges request-weighted like `hit_rate`.
+        goodput_rps: parts.iter().map(|p| p.goodput_rps).sum(),
+        ttft_p999_ms: parts
+            .iter()
+            .map(|p| p.ttft_p999_ms)
+            .fold(0.0, f64::max),
+        shed_requests: parts.iter().map(|p| p.shed_requests).sum(),
+        downgraded_requests: parts
+            .iter()
+            .map(|p| p.downgraded_requests)
+            .sum(),
+        slo_attainment: weighted(|p| p.slo_attainment),
     }
 }
 

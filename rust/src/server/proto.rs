@@ -80,6 +80,19 @@ pub struct StatsResult {
     /// rebalancer moved it); Σ == the configured budget. Merged from
     /// the same snapshot as `shard_gpu_used`.
     pub shard_gpu_capacity: Vec<u64>,
+    /// Goodput under the configured TTFT SLO, requests/second over the
+    /// full trace horizon (0 when no SLO accounting is active; summed
+    /// across engines — each serves its own request stream).
+    pub goodput_rps: f64,
+    /// p99.9 TTFT, milliseconds, nearest-rank (max of the merge).
+    pub ttft_p999_ms: f64,
+    /// Requests shed by admission control; summed across engines.
+    pub shed_requests: u64,
+    /// Arrivals downgraded (speculation disabled); summed.
+    pub downgraded_requests: u64,
+    /// Fraction of all requests meeting the TTFT SLO
+    /// (request-weighted in the merge).
+    pub slo_attainment: f64,
 }
 
 /// Server → client.
@@ -210,6 +223,14 @@ pub fn encode_response(resp: &Response) -> String {
                         .collect(),
                 ),
             ),
+            ("goodput_rps", Json::num(s.goodput_rps)),
+            ("ttft_p999_ms", Json::num(s.ttft_p999_ms)),
+            ("shed_requests", Json::num(s.shed_requests as f64)),
+            (
+                "downgraded_requests",
+                Json::num(s.downgraded_requests as f64),
+            ),
+            ("slo_attainment", Json::num(s.slo_attainment)),
         ]),
         Response::Ok => Json::obj(vec![("type", Json::str("ok"))]),
         Response::Error { message } => Json::obj(vec![
@@ -335,6 +356,26 @@ pub fn parse_response(line: &str) -> Result<Response> {
                 .unwrap_or(0),
             shard_gpu_used: parse_u64_arr(v, "shard_gpu_used"),
             shard_gpu_capacity: parse_u64_arr(v, "shard_gpu_capacity"),
+            goodput_rps: v
+                .get("goodput_rps")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+            ttft_p999_ms: v
+                .get("ttft_p999_ms")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+            shed_requests: v
+                .get("shed_requests")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            downgraded_requests: v
+                .get("downgraded_requests")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            slo_attainment: v
+                .get("slo_attainment")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
         })),
         "ok" => Ok(Response::Ok),
         "error" => Ok(Response::Error {
@@ -401,6 +442,11 @@ mod tests {
                 rebalance_moved_bytes: 1024,
                 shard_gpu_used: vec![512, 0, 256, 128],
                 shard_gpu_capacity: vec![2048, 512, 768, 768],
+                goodput_rps: 1.25,
+                ttft_p999_ms: 87.5,
+                shed_requests: 4,
+                downgraded_requests: 2,
+                slo_attainment: 0.9,
             }),
             Response::Ok,
             Response::Error {

@@ -5,6 +5,27 @@
 //! ([`crate::llm::cost_model`]). The controller is written against the
 //! [`Clock`] abstraction so the identical scheduling/caching/pipelining
 //! code also runs in real time for the PJRT-backed end-to-end path.
+//!
+//! ```text
+//!            SimClock (single time authority)
+//!                 ▲ advance_to(t)
+//!                 │
+//!   EventScheduler<E>  ──  binary heap on (time, seq)
+//!     schedule(t, e) → EventHandle { slot, gen }
+//!     cancel(handle)   O(log n) amortised: the slot is freed now,
+//!                      the heap entry dies lazily at pop when its
+//!                      generation stamp no longer matches
+//!     pop() → (t, e)   total order: time first, then schedule seq —
+//!                      two runs issuing the same schedule() calls
+//!                      replay the identical event order, bit for bit
+//! ```
+//!
+//! [`EventScheduler`] is the spine of the open-loop simulator
+//! ([`crate::controller::sim_server`]): arrivals fire at their trace
+//! timestamps regardless of engine occupancy, and the admission
+//! controller cancels per-request deadline/stage events through the
+//! generation-stamped handles. [`EventQueue`] is the original
+//! cancellation-free wrapper, kept for callers that only need ordering.
 
 use crate::util::heap::MinHeap;
 use std::cell::RefCell;
@@ -120,6 +141,133 @@ impl<E> EventQueue<E> {
     }
 }
 
+/// Handle to one scheduled [`EventScheduler`] event.
+///
+/// Generation-stamped: when the underlying slot is freed (the event
+/// fired or was cancelled) the generation advances, so a stale handle
+/// held past its event's lifetime can never cancel an unrelated later
+/// event that happens to reuse the slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct EventHandle {
+    slot: u32,
+    gen: u32,
+}
+
+/// Cancellable discrete-event scheduler.
+///
+/// A binary heap keyed `(time, schedule-seq)` — FIFO among same-time
+/// events, so replays are deterministic — plus a slot table holding the
+/// payloads. [`EventScheduler::cancel`] frees the slot immediately and
+/// leaves the heap entry to be skipped lazily at pop time (its
+/// generation stamp no longer matches), keeping both `schedule` and
+/// `cancel` O(log n) amortised.
+///
+/// Pop order is identical to [`EventQueue`] for the same sequence of
+/// `schedule` calls: cancellation-free users of either see the same
+/// replay, bit for bit.
+#[derive(Debug)]
+pub struct EventScheduler<E> {
+    heap: MinHeap<(u32, u32)>,
+    slots: Vec<Option<E>>,
+    gens: Vec<u32>,
+    free: Vec<u32>,
+    live: usize,
+}
+
+impl<E> Default for EventScheduler<E> {
+    fn default() -> Self {
+        EventScheduler {
+            heap: MinHeap::new(),
+            slots: Vec::new(),
+            gens: Vec::new(),
+            free: Vec::new(),
+            live: 0,
+        }
+    }
+}
+
+impl<E> EventScheduler<E> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `event` at absolute time `t`; the returned handle
+    /// cancels it (and only it) until it fires.
+    pub fn schedule(&mut self, t: f64, event: E) -> EventHandle {
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.slots.push(None);
+                self.gens.push(0);
+                (self.slots.len() - 1) as u32
+            }
+        };
+        self.slots[slot as usize] = Some(event);
+        let gen = self.gens[slot as usize];
+        self.heap.push(t, (slot, gen));
+        self.live += 1;
+        EventHandle { slot, gen }
+    }
+
+    /// Cancel the event behind `handle`. Returns `false` (and does
+    /// nothing) when it already fired or was already cancelled.
+    pub fn cancel(&mut self, handle: EventHandle) -> bool {
+        let i = handle.slot as usize;
+        if i >= self.slots.len()
+            || self.gens[i] != handle.gen
+            || self.slots[i].is_none()
+        {
+            return false;
+        }
+        self.slots[i] = None;
+        self.gens[i] = self.gens[i].wrapping_add(1);
+        self.free.push(handle.slot);
+        self.live -= 1;
+        true
+    }
+
+    /// Pop the earliest live event; cancelled heap entries are skipped.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        while let Some((t, (slot, gen))) = self.heap.pop() {
+            let i = slot as usize;
+            if self.gens[i] != gen {
+                continue; // cancelled: slot already freed (or reused)
+            }
+            let ev = self.slots[i].take().expect("live slot has payload");
+            self.gens[i] = self.gens[i].wrapping_add(1);
+            self.free.push(slot);
+            self.live -= 1;
+            return Some((t, ev));
+        }
+        None
+    }
+
+    /// Time of the earliest live event. Purges dead heap heads so the
+    /// answer is exact, not an underestimate from a cancelled entry.
+    pub fn peek_time(&mut self) -> Option<f64> {
+        loop {
+            match self.heap.peek() {
+                None => return None,
+                Some((t, &(slot, gen))) => {
+                    if self.gens[slot as usize] == gen {
+                        return Some(t);
+                    }
+                }
+            }
+            self.heap.pop();
+        }
+    }
+
+    /// Live (un-cancelled, un-fired) events.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,5 +322,94 @@ mod tests {
         let a = c.now();
         let b = c.now();
         assert!(b >= a);
+    }
+
+    #[test]
+    fn scheduler_orders_and_breaks_ties_fifo() {
+        let mut s = EventScheduler::new();
+        s.schedule(2.0, "late");
+        s.schedule(1.0, "a");
+        s.schedule(1.0, "b");
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.peek_time(), Some(1.0));
+        assert_eq!(s.pop(), Some((1.0, "a")));
+        assert_eq!(s.pop(), Some((1.0, "b")));
+        assert_eq!(s.pop(), Some((2.0, "late")));
+        assert_eq!(s.pop(), None);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn cancelled_events_never_fire() {
+        let mut s = EventScheduler::new();
+        let a = s.schedule(1.0, "a");
+        let b = s.schedule(2.0, "b");
+        s.schedule(3.0, "c");
+        assert!(s.cancel(b));
+        assert!(!s.cancel(b), "double cancel is a no-op");
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.pop(), Some((1.0, "a")));
+        assert!(!s.cancel(a), "cancel after fire is a no-op");
+        assert_eq!(s.pop(), Some((3.0, "c")));
+        assert_eq!(s.pop(), None);
+    }
+
+    #[test]
+    fn stale_handle_cannot_cancel_slot_reuse() {
+        let mut s = EventScheduler::new();
+        let a = s.schedule(1.0, "a");
+        s.pop(); // frees a's slot
+        let b = s.schedule(2.0, "b"); // reuses the slot, new generation
+        assert!(!s.cancel(a), "stale handle must not hit the new event");
+        assert_eq!(s.pop(), Some((2.0, "b")));
+        assert!(!s.cancel(b));
+    }
+
+    #[test]
+    fn cancelled_head_does_not_lie_in_peek() {
+        let mut s = EventScheduler::new();
+        let a = s.schedule(1.0, "a");
+        s.schedule(5.0, "b");
+        s.cancel(a);
+        assert_eq!(s.peek_time(), Some(5.0));
+        assert_eq!(s.pop(), Some((5.0, "b")));
+    }
+
+    #[test]
+    fn schedule_during_drain_lands_in_order() {
+        // The schedule-during-handler shape: popping an event schedules
+        // another at a later time; it must slot into the total order.
+        let mut s = EventScheduler::new();
+        s.schedule(1.0, 1u32);
+        s.schedule(3.0, 3u32);
+        let mut fired = Vec::new();
+        while let Some((t, e)) = s.pop() {
+            fired.push(e);
+            if e == 1 {
+                s.schedule(t + 1.0, 2u32);
+            }
+        }
+        assert_eq!(fired, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn scheduler_matches_event_queue_replay() {
+        // Same schedule() call sequence → same pop order as EventQueue,
+        // the conformance contract the sim server's --shed off relies on.
+        let mut q = EventQueue::new();
+        let mut s = EventScheduler::new();
+        let times = [3.0, 1.0, 2.0, 1.0, 3.0, 0.5, 2.0];
+        for (i, &t) in times.iter().enumerate() {
+            q.schedule(t, i);
+            s.schedule(t, i);
+        }
+        loop {
+            let a = q.next();
+            let b = s.pop();
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
     }
 }

@@ -101,6 +101,12 @@ impl<T> MinHeap<T> {
         self.heap.peek().map(|e| e.key.0)
     }
 
+    /// Key and payload of the head without popping — lets layered
+    /// schedulers (lazy cancellation) inspect whether the head is live.
+    pub fn peek(&self) -> Option<(f64, &T)> {
+        self.heap.peek().map(|e| (e.key.0, &e.item))
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }

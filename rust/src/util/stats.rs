@@ -84,12 +84,34 @@ impl Summary {
         self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
     }
 
+    /// Percentile in `[0, 100]` by the nearest-rank method: the smallest
+    /// sample whose rank covers `p`% of the distribution (1-based rank
+    /// `⌈p/100 · n⌉`). Unlike [`Summary::percentile`], this never
+    /// interpolates *below* the tail — p99.9 over fewer than 1000
+    /// samples is the maximum, which is what an SLO tail report must
+    /// say (the interpolated value would understate the worst case).
+    pub fn percentile_nearest(&mut self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let n = self.samples.len();
+        let rank = ((p / 100.0).clamp(0.0, 1.0) * n as f64).ceil() as usize;
+        self.samples[rank.clamp(1, n) - 1]
+    }
+
     pub fn median(&mut self) -> f64 {
         self.percentile(50.0)
     }
 
     pub fn p99(&mut self) -> f64 {
         self.percentile(99.0)
+    }
+
+    /// p99.9 tail by nearest rank (SLO reporting; see
+    /// [`Summary::percentile_nearest`]).
+    pub fn p999(&mut self) -> f64 {
+        self.percentile_nearest(99.9)
     }
 
     /// Smallest sample; NaN when empty, like `mean`/`percentile` — a
@@ -294,6 +316,39 @@ mod tests {
         assert_eq!(s.percentile(50.0), 5.0);
         assert_eq!(s.percentile(0.0), 0.0);
         assert_eq!(s.percentile(100.0), 10.0);
+    }
+
+    /// Satellite: p99.9 must never interpolate below the tail. With
+    /// n < 1000 samples the 99.9th percentile IS the maximum under
+    /// nearest-rank; the interpolating `percentile` would report less.
+    #[test]
+    fn p999_nearest_rank_small_samples() {
+        // n = 1: the only sample.
+        let mut s = Summary::new();
+        s.add(7.0);
+        assert_eq!(s.p999(), 7.0);
+
+        // n = 10: the max, NOT an interpolation below it.
+        let mut s = Summary::new();
+        s.extend(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 100.0]);
+        assert_eq!(s.p999(), 100.0);
+        assert!(
+            s.percentile(99.9) < 100.0,
+            "interpolating percentile understates the tail — that's \
+             why p999 uses nearest rank"
+        );
+
+        // n = 1000: rank ⌈0.999·1000⌉ = 999 → the 999th smallest.
+        let mut s = Summary::new();
+        for i in 1..=1000 {
+            s.add(i as f64);
+        }
+        assert_eq!(s.p999(), 999.0);
+        assert_eq!(s.percentile_nearest(100.0), 1000.0);
+        assert_eq!(s.percentile_nearest(0.0), 1.0);
+
+        // Empty stays NaN like every other aggregate.
+        assert!(Summary::new().p999().is_nan());
     }
 
     /// Satellite bugfix: an empty sample set must report NaN from every

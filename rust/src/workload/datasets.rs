@@ -83,13 +83,16 @@ impl DatasetProfile {
     /// traces over the same corpus (§Perf).
     pub fn popularity(&self, num_docs: usize) -> DocSampler {
         use std::collections::HashMap;
-        use std::sync::{Arc, Mutex};
-        static CACHE: once_cell::sync::Lazy<
+        use std::sync::{Arc, Mutex, OnceLock};
+        static CACHE: OnceLock<
             Mutex<HashMap<(&'static str, usize), Arc<Zipf>>>,
-        > = once_cell::sync::Lazy::new(|| Mutex::new(HashMap::new()));
+        > = OnceLock::new();
         let key = (self.name, num_docs);
         let zipf = {
-            let mut cache = CACHE.lock().expect("zipf cache");
+            let mut cache = CACHE
+                .get_or_init(|| Mutex::new(HashMap::new()))
+                .lock()
+                .expect("zipf cache");
             if let Some(z) = cache.get(&key) {
                 Arc::clone(z)
             } else {
@@ -98,6 +101,44 @@ impl DatasetProfile {
                     self.skew_frac,
                     self.skew_mass,
                 );
+                let z = Arc::new(Zipf::new(num_docs, s));
+                cache.insert(key, Arc::clone(&z));
+                z
+            }
+        };
+        DocSampler { zipf, num_docs }
+    }
+
+    /// Per-tenant variant of [`DatasetProfile::popularity`]: a sampler
+    /// over `num_docs` documents with an explicit skew mass (fraction of
+    /// requests landing on the top `skew_frac` documents) instead of the
+    /// dataset's. Multi-tenant traces give each tenant its own corpus
+    /// slice and its own skew, so tenants stress the cache unevenly —
+    /// the regime per-tenant SLO breakdowns exist to expose.
+    ///
+    /// Memoised like `popularity` (keyed by the mass bits as well):
+    /// per-tenant calibration re-runs the Zipf bisection otherwise.
+    pub fn popularity_with_skew(
+        &self,
+        num_docs: usize,
+        skew_mass: f64,
+    ) -> DocSampler {
+        use std::collections::HashMap;
+        use std::sync::{Arc, Mutex, OnceLock};
+        static CACHE: OnceLock<
+            Mutex<HashMap<(&'static str, usize, u64), Arc<Zipf>>>,
+        > = OnceLock::new();
+        let key = (self.name, num_docs, skew_mass.to_bits());
+        let zipf = {
+            let mut cache = CACHE
+                .get_or_init(|| Mutex::new(HashMap::new()))
+                .lock()
+                .expect("zipf skew cache");
+            if let Some(z) = cache.get(&key) {
+                Arc::clone(z)
+            } else {
+                let s =
+                    Zipf::calibrate(num_docs, self.skew_frac, skew_mass);
                 let z = Arc::new(Zipf::new(num_docs, s));
                 cache.insert(key, Arc::clone(&z));
                 z
@@ -246,6 +287,28 @@ mod tests {
             .sum::<f64>()
             / 20_000.0;
         assert!((4.0..8.0).contains(&mean), "NQ output mean {mean}");
+    }
+
+    #[test]
+    fn per_tenant_skew_sampler_varies_mass() {
+        // Multi-tenant traces calibrate one sampler per tenant with its
+        // own skew mass; more mass must measurably concentrate access.
+        let hot = MMLU.popularity_with_skew(5_000, 0.75);
+        let cool = MMLU.popularity_with_skew(5_000, 0.35);
+        let mut rng = Rng::new(4);
+        let mass = |s: &DocSampler, rng: &mut Rng| {
+            let mut counts = vec![0u64; 5_000];
+            for _ in 0..50_000 {
+                counts[s.sample(rng) as usize] += 1;
+            }
+            cdf_at(&access_cdf(&counts), 0.03)
+        };
+        let hot_mass = mass(&hot, &mut rng);
+        let cool_mass = mass(&cool, &mut rng);
+        assert!(
+            hot_mass > cool_mass + 0.1,
+            "top-3% mass {hot_mass} should exceed {cool_mass}"
+        );
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Workload generation: synthetic corpus, QA-dataset access profiles and
-//! Poisson arrival traces (paper §3.2 characterization and §7 workloads).
+//! open-loop arrival traces — Poisson, bursty (MMPP), diurnal — with
+//! optional multi-tenant corpus slicing (paper §3.2 characterization and
+//! §7 workloads).
 
 pub mod corpus;
 pub mod datasets;
@@ -7,4 +9,4 @@ pub mod trace;
 
 pub use corpus::Corpus;
 pub use datasets::DatasetProfile;
-pub use trace::{Trace, TraceRequest};
+pub use trace::{ArrivalProcess, Trace, TraceOptions, TraceRequest};

@@ -1,7 +1,14 @@
-//! Request traces: Poisson arrivals over a dataset profile + corpus.
+//! Request traces: open-loop arrival processes (Poisson, bursty MMPP,
+//! diurnal) over a dataset profile + corpus, optionally multi-tenant.
+//!
+//! Traces are *open-loop*: arrival timestamps are generated up front,
+//! independent of service capacity, so replaying one against a saturated
+//! simulator builds real queues (the overload regime admission control
+//! is tested in). Multi-tenant traces slice the corpus into contiguous
+//! per-tenant document ranges, each with its own calibrated Zipf skew.
 
 use super::corpus::Corpus;
-use super::datasets::DatasetProfile;
+use super::datasets::{DatasetProfile, DocSampler};
 use crate::util::json::Json;
 use crate::util::Rng;
 
@@ -11,6 +18,10 @@ pub struct TraceRequest {
     pub id: u64,
     /// Arrival time, seconds from trace start.
     pub arrival: f64,
+    /// Owning tenant (0 for single-tenant traces). Tenants own disjoint
+    /// contiguous corpus slices, so the tenant id also determines which
+    /// shard range this request's documents route to.
+    pub tenant: u32,
     /// Retrieved document sequence (most relevant first) — what the
     /// vector search *will* return for this request.
     pub docs: Vec<u32>,
@@ -27,6 +38,205 @@ impl TraceRequest {
     pub fn prompt_tokens(&self) -> usize {
         self.doc_tokens.iter().sum::<usize>() + self.request_tokens
     }
+}
+
+/// Arrival-process selection for open-loop trace generation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson at the configured rate (the §7 default).
+    Poisson,
+    /// Markov-modulated on/off bursts: exponential dwell in an "on"
+    /// phase (arrivals at `rate · (on_s + off_s) / on_s`, so the
+    /// long-run average stays `rate`) alternating with a silent "off"
+    /// phase of mean `off_s`.
+    Bursty { on_s: f64, off_s: f64 },
+    /// Non-homogeneous Poisson with a sinusoidal rate —
+    /// `λ(t) = rate · (1 + amplitude · sin(2πt / period_s))` — sampled
+    /// by Lewis–Shedler thinning against `λmax = rate · (1 + amplitude)`.
+    Diurnal { period_s: f64, amplitude: f64 },
+}
+
+impl ArrivalProcess {
+    /// Parse a CLI name with the default shape parameters: bursts dwell
+    /// 10 s on / 30 s off (4× rate inside a burst); the diurnal cycle
+    /// spans 300 s at ±80 % modulation.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "poisson" => ArrivalProcess::Poisson,
+            "bursty" => ArrivalProcess::Bursty {
+                on_s: 10.0,
+                off_s: 30.0,
+            },
+            "diurnal" => ArrivalProcess::Diurnal {
+                period_s: 300.0,
+                amplitude: 0.8,
+            },
+            other => anyhow::bail!(
+                "unknown arrival process '{other}' \
+                 (expected poisson|bursty|diurnal)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson => "poisson",
+            ArrivalProcess::Bursty { .. } => "bursty",
+            ArrivalProcess::Diurnal { .. } => "diurnal",
+        }
+    }
+}
+
+/// Knobs of [`Trace::generate_open_loop`] beyond the legacy positional
+/// arguments.
+#[derive(Debug, Clone)]
+pub struct TraceOptions {
+    pub top_k: usize,
+    /// Prompt budget documents are truncated into (see
+    /// [`Trace::generate_with_budget`]).
+    pub max_prompt_tokens: usize,
+    pub arrivals: ArrivalProcess,
+    /// Tenants sharing the trace; each owns a contiguous corpus slice
+    /// with its own Zipf skew. 1 = the legacy single-tenant stream.
+    pub tenants: usize,
+}
+
+impl Default for TraceOptions {
+    fn default() -> Self {
+        TraceOptions {
+            top_k: 2,
+            max_prompt_tokens: 4096,
+            arrivals: ArrivalProcess::Poisson,
+            tenants: 1,
+        }
+    }
+}
+
+/// Stateful arrival-time generator: one `next()` per request, strictly
+/// increasing timestamps for every process.
+struct ArrivalGen {
+    process: ArrivalProcess,
+    rate: f64,
+    t: f64,
+    /// Bursty state: currently in the "on" phase, and when it flips.
+    in_on: bool,
+    switch_at: f64,
+}
+
+impl ArrivalGen {
+    fn new(process: ArrivalProcess, rate: f64, rng: &mut Rng) -> Self {
+        let switch_at = match process {
+            ArrivalProcess::Bursty { on_s, .. } => {
+                rng.exponential(1.0 / on_s)
+            }
+            _ => f64::INFINITY,
+        };
+        ArrivalGen {
+            process,
+            rate,
+            t: 0.0,
+            in_on: true,
+            switch_at,
+        }
+    }
+
+    fn next(&mut self, rng: &mut Rng) -> f64 {
+        match self.process {
+            ArrivalProcess::Poisson => {
+                self.t += rng.exponential(self.rate);
+            }
+            ArrivalProcess::Bursty { on_s, off_s } => {
+                let rate_on = self.rate * (on_s + off_s) / on_s;
+                loop {
+                    if self.in_on {
+                        // Memorylessness lets us discard the partial
+                        // inter-arrival draw at a phase switch.
+                        let dt = rng.exponential(rate_on);
+                        if self.t + dt <= self.switch_at {
+                            self.t += dt;
+                            break;
+                        }
+                        self.t = self.switch_at;
+                        self.in_on = false;
+                        self.switch_at =
+                            self.t + rng.exponential(1.0 / off_s);
+                    } else {
+                        self.t = self.switch_at;
+                        self.in_on = true;
+                        self.switch_at =
+                            self.t + rng.exponential(1.0 / on_s);
+                    }
+                }
+            }
+            ArrivalProcess::Diurnal {
+                period_s,
+                amplitude,
+            } => {
+                let lambda_max = self.rate * (1.0 + amplitude);
+                loop {
+                    self.t += rng.exponential(lambda_max);
+                    let phase = 2.0 * std::f64::consts::PI * self.t
+                        / period_s;
+                    let lam =
+                        self.rate * (1.0 + amplitude * phase.sin());
+                    if lam > 0.0 && rng.chance(lam / lambda_max) {
+                        break;
+                    }
+                }
+            }
+        }
+        self.t
+    }
+}
+
+/// One tenant's view of the corpus: a popularity sampler over its slice
+/// plus the slice's base document id.
+struct TenantPlan {
+    sampler: DocSampler,
+    doc_base: u32,
+}
+
+fn tenant_plans(
+    profile: &DatasetProfile,
+    corpus: &Corpus,
+    tenants: usize,
+    top_k: usize,
+) -> Vec<TenantPlan> {
+    if tenants <= 1 {
+        // Exactly the legacy sampler: single-tenant traces must be
+        // bit-identical to what `generate` always produced.
+        return vec![TenantPlan {
+            sampler: profile.popularity(corpus.len()),
+            doc_base: 0,
+        }];
+    }
+    let n = corpus.len();
+    assert!(
+        n >= tenants * top_k,
+        "corpus of {n} docs cannot give {tenants} tenants top-{top_k} \
+         sequences from disjoint slices"
+    );
+    let base = n / tenants;
+    let rem = n % tenants;
+    let mut start = 0usize;
+    (0..tenants)
+        .map(|t| {
+            let len = base + usize::from(t < rem);
+            // Deterministic per-tenant skew spread around the dataset's
+            // calibrated mass: tenants t ≡ 0..3 (mod 4) get offsets
+            // −0.12, −0.04, +0.04, +0.12 — hot and cool tenants coexist
+            // in one trace, which is what per-tenant SLO breakdowns
+            // (and the cross-shard rebalancer) are exercised by.
+            let off = 0.08 * ((t % 4) as f64 - 1.5);
+            let mass = (profile.skew_mass + off).clamp(0.2, 0.85);
+            let plan = TenantPlan {
+                sampler: profile.popularity_with_skew(len, mass),
+                doc_base: start as u32,
+            };
+            start += len;
+            plan
+        })
+        .collect()
 }
 
 /// A generated workload trace.
@@ -76,14 +286,56 @@ impl Trace {
         max_prompt_tokens: usize,
         seed: u64,
     ) -> Trace {
+        Self::generate_open_loop(
+            profile,
+            corpus,
+            rate,
+            num_requests,
+            &TraceOptions {
+                top_k,
+                max_prompt_tokens,
+                ..TraceOptions::default()
+            },
+            seed,
+        )
+    }
+
+    /// The full open-loop generator: any [`ArrivalProcess`], any tenant
+    /// count. With `{poisson, 1 tenant}` the RNG consumption sequence is
+    /// exactly the historical [`Trace::generate`] one — per request:
+    /// inter-arrival, primary doc, question length, output length — so
+    /// legacy traces stay bit-identical under the same seed (pinned by
+    /// this module's tests).
+    pub fn generate_open_loop(
+        profile: &DatasetProfile,
+        corpus: &Corpus,
+        rate: f64,
+        num_requests: usize,
+        opts: &TraceOptions,
+        seed: u64,
+    ) -> Trace {
         let mut rng = Rng::new(seed);
-        let sampler = profile.popularity(corpus.len());
-        let mut t = 0.0;
+        let tenants = opts.tenants.max(1);
+        let plans = tenant_plans(profile, corpus, tenants, opts.top_k);
+        let mut arrivals = ArrivalGen::new(opts.arrivals, rate, &mut rng);
         let mut requests = Vec::with_capacity(num_requests);
         for id in 0..num_requests as u64 {
-            t += rng.exponential(rate);
-            let primary = sampler.sample(&mut rng);
-            let docs = sampler.doc_sequence(primary, top_k);
+            let t = arrivals.next(&mut rng);
+            // Tenant selection consumes randomness ONLY in multi-tenant
+            // traces (single-tenant must keep the legacy RNG stream).
+            let tenant = if tenants > 1 {
+                rng.index(tenants) as u32
+            } else {
+                0
+            };
+            let plan = &plans[tenant as usize];
+            let primary = plan.sampler.sample(&mut rng);
+            let docs: Vec<u32> = plan
+                .sampler
+                .doc_sequence(primary, opts.top_k)
+                .into_iter()
+                .map(|d| plan.doc_base + d)
+                .collect();
             let request_tokens = profile.sample_request_tokens(&mut rng);
             // Even per-document truncation to fit the budget, with a
             // fixed question reserve. The cap is a function of
@@ -91,9 +343,10 @@ impl Trace {
             // so a document's truncated length (and thus its KV) is
             // identical across requests, preserving reusability.
             const QUESTION_RESERVE: usize = 256;
-            let per_doc_cap = max_prompt_tokens
+            let per_doc_cap = opts
+                .max_prompt_tokens
                 .saturating_sub(QUESTION_RESERVE)
-                .checked_div(top_k)
+                .checked_div(opts.top_k)
                 .unwrap_or(usize::MAX)
                 .max(32);
             let doc_tokens = docs
@@ -103,6 +356,7 @@ impl Trace {
             requests.push(TraceRequest {
                 id,
                 arrival: t,
+                tenant,
                 docs,
                 doc_tokens,
                 request_tokens,
@@ -116,8 +370,23 @@ impl Trace {
         }
     }
 
+    /// Tenants present in this trace (max id + 1); 1 when empty.
+    pub fn num_tenants(&self) -> usize {
+        self.requests
+            .iter()
+            .map(|r| r.tenant as usize + 1)
+            .max()
+            .unwrap_or(1)
+    }
+
+    /// Trace horizon: the last arrival. Open-loop audit: requests are
+    /// generated in increasing time, but replay/merge tooling may
+    /// reorder them — take the max rather than trusting the tail.
     pub fn duration(&self) -> f64 {
-        self.requests.last().map_or(0.0, |r| r.arrival)
+        self.requests
+            .iter()
+            .map(|r| r.arrival)
+            .fold(0.0, f64::max)
     }
 
     /// Serialise for the record/replay tooling and the server protocol.
@@ -134,6 +403,7 @@ impl Trace {
                             Json::obj(vec![
                                 ("id", Json::num(r.id as f64)),
                                 ("arrival", Json::num(r.arrival)),
+                                ("tenant", Json::num(r.tenant as f64)),
                                 (
                                     "docs",
                                     Json::Arr(
@@ -204,6 +474,11 @@ impl Trace {
                     .get("arrival")
                     .and_then(Json::as_f64)
                     .ok_or_else(|| anyhow!("trace: arrival"))?,
+                // Absent in traces recorded before multi-tenancy.
+                tenant: r
+                    .get("tenant")
+                    .and_then(Json::as_u64)
+                    .unwrap_or(0) as u32,
                 docs: nums("docs")?.into_iter().map(|d| d as u32).collect(),
                 doc_tokens: nums("doc_tokens")?,
                 request_tokens: r
@@ -278,5 +553,140 @@ mod tests {
         assert_eq!(back.requests.len(), t.requests.len());
         assert_eq!(back.requests[5].docs, t.requests[5].docs);
         assert_eq!(back.requests[5].arrival, t.requests[5].arrival);
+    }
+
+    fn open_loop(arrivals: ArrivalProcess, tenants: usize) -> Trace {
+        let corpus = Corpus::tiny(64, 1);
+        Trace::generate_open_loop(
+            &MMLU,
+            &corpus,
+            2.0,
+            120,
+            &TraceOptions {
+                arrivals,
+                tenants,
+                ..TraceOptions::default()
+            },
+            21,
+        )
+    }
+
+    /// `--shed off` conformance rests on this: the generalized open-loop
+    /// generator with {poisson, 1 tenant} must reproduce the historical
+    /// `generate` stream bit for bit.
+    #[test]
+    fn open_loop_poisson_matches_legacy_generate() {
+        let corpus = Corpus::tiny(64, 1);
+        let legacy = Trace::generate(&MMLU, &corpus, 2.0, 80, 2, 5);
+        let open = Trace::generate_open_loop(
+            &MMLU,
+            &corpus,
+            2.0,
+            80,
+            &TraceOptions::default(),
+            5,
+        );
+        assert_eq!(legacy.requests.len(), open.requests.len());
+        for (a, b) in legacy.requests.iter().zip(&open.requests) {
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
+            assert_eq!(a.docs, b.docs);
+            assert_eq!(a.doc_tokens, b.doc_tokens);
+            assert_eq!(a.request_tokens, b.request_tokens);
+            assert_eq!(a.output_tokens, b.output_tokens);
+            assert_eq!(b.tenant, 0);
+        }
+    }
+
+    /// Satellite: same seed → bit-identical trace for the new arrival
+    /// generators, surviving a JSON round trip.
+    #[test]
+    fn bursty_and_diurnal_deterministic_per_seed() {
+        for arrivals in [
+            ArrivalProcess::parse("bursty").unwrap(),
+            ArrivalProcess::parse("diurnal").unwrap(),
+        ] {
+            let a = open_loop(arrivals, 4);
+            let b = open_loop(arrivals, 4);
+            let back = Trace::from_json(&a.to_json()).unwrap();
+            for ((x, y), z) in
+                a.requests.iter().zip(&b.requests).zip(&back.requests)
+            {
+                assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+                assert_eq!(x.arrival.to_bits(), z.arrival.to_bits());
+                assert_eq!(x.docs, y.docs);
+                assert_eq!(x.docs, z.docs);
+                assert_eq!(x.tenant, y.tenant);
+                assert_eq!(x.tenant, z.tenant);
+            }
+            // And the serialised form itself is identical.
+            assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        }
+    }
+
+    #[test]
+    fn arrivals_strictly_increase_for_all_processes() {
+        for name in ["poisson", "bursty", "diurnal"] {
+            let t =
+                open_loop(ArrivalProcess::parse(name).unwrap(), 1);
+            assert_eq!(t.requests.len(), 120, "{name}");
+            for w in t.requests.windows(2) {
+                assert!(w[0].arrival < w[1].arrival, "{name}");
+            }
+            assert!(t.duration() > 0.0);
+        }
+        assert!(ArrivalProcess::parse("weibull").is_err());
+    }
+
+    #[test]
+    fn bursty_bunches_arrivals() {
+        // MMPP must produce more short gaps AND more long gaps than the
+        // flat Poisson stream — dispersion, the point of burstiness.
+        let gaps = |t: &Trace| -> Vec<f64> {
+            t.requests
+                .windows(2)
+                .map(|w| w[1].arrival - w[0].arrival)
+                .collect()
+        };
+        let p = gaps(&open_loop(ArrivalProcess::Poisson, 1));
+        let b = gaps(&open_loop(
+            ArrivalProcess::parse("bursty").unwrap(),
+            1,
+        ));
+        let var = |xs: &[f64]| {
+            let m = xs.iter().sum::<f64>() / xs.len() as f64;
+            xs.iter().map(|x| (x - m).powi(2)).sum::<f64>()
+                / xs.len() as f64
+        };
+        assert!(
+            var(&b) > var(&p) * 1.5,
+            "bursty inter-arrival variance {} !> poisson {}",
+            var(&b),
+            var(&p)
+        );
+    }
+
+    #[test]
+    fn tenants_own_disjoint_corpus_slices() {
+        let corpus = Corpus::tiny(64, 1);
+        let t = open_loop(ArrivalProcess::Poisson, 4);
+        // 64 docs / 4 tenants → 16-doc slices.
+        let mut seen = [false; 4];
+        for r in &t.requests {
+            assert!((r.tenant as usize) < 4);
+            seen[r.tenant as usize] = true;
+            assert_eq!(r.doc_tokens.len(), r.docs.len());
+            for &d in &r.docs {
+                let slice = d / 16;
+                assert_eq!(
+                    slice, r.tenant,
+                    "doc {d} outside tenant {} slice",
+                    r.tenant
+                );
+                assert!(corpus.tokens(d) > 0);
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "all tenants drew traffic");
+        assert_eq!(t.num_tenants(), 4);
+        assert_eq!(small_trace().num_tenants(), 1);
     }
 }
