@@ -113,6 +113,23 @@ cargo test --release --test shard_rebalance -q
 echo "== event-driven simulator suite (--release) =="
 cargo test --release --test event_sim -q
 
+# Real-path admission control: the shed-off conformance / deterministic
+# shed / wire-merge suite under --release (wall-clock waits and staged
+# retrieval pacing want fast schedules), then the functional matrix
+# swept across --shed {off,on} on both serving shapes (off must stay
+# bit-identical to the ladder-free path; on must report live SLO stats
+# with nothing shed at the generous default SLO).
+echo "== real-path admission control suite (--release) =="
+cargo test --release --test real_shed -q
+echo "== admission-control serving sweep =="
+for sh in off on; do
+    for s in off on; do
+        echo "-- serving_matrix --workers 4 --engines 2 --speculate $s --shed $sh --"
+        cargo run --release --example serving_matrix -- \
+            --workers 4 --engines 2 --speculate "$s" --shed "$sh"
+    done
+done
+
 # Open-loop CLI sweep: every arrival process x tenancy x shedding mode
 # through the real `simulate` entry point, on a small corpus so the
 # sweep stays fast. Exercises flag parsing, trace generation, the SLO
@@ -136,6 +153,14 @@ done
 # once, with per-tenant stats summing to the aggregate.
 echo "== overload shedding gate =="
 cargo run --release --example overload_gate
+
+# Real-path overload gate: the same closed-loop fleet against a
+# retrieval-stalled TCP server with the ladder off and on; shed-on
+# must strictly win requests completed within the TTFT SLO, with
+# exact completed + shed == submitted accounting on both the client
+# and stats sides.
+echo "== real-path overload shedding gate =="
+cargo run --release --example serving_matrix -- --compare-shed
 
 # Skewed-workload gate: on a Zipfian workload routed to one hot shard,
 # rebalance-on must strictly win aggregate GPU cache-hit bytes vs the

@@ -168,6 +168,19 @@ impl QueryHandler for TcpHandler {
         self.server.serve_proto_batch(batch, &self.tok, &self.cfg)
     }
 
+    /// [`query_batch`](QueryHandler::query_batch) plus per-member
+    /// reorder-queue waits, feeding the real path's admission-control
+    /// ladder (inert unless the config arms `shed` — then identical).
+    fn query_batch_timed(
+        &mut self,
+        batch: &[(u32, String, usize)],
+        waits: &[f64],
+    ) -> Vec<anyhow::Result<proto::QueryResult>> {
+        self.server.serve_proto_batch_timed(
+            batch, waits, &self.tok, &self.cfg,
+        )
+    }
+
     /// Non-blocking entry for the `--speculate` event loop: real PJRT
     /// speculative prefills overlapped with the staged search.
     fn submit_session(
@@ -183,6 +196,26 @@ impl QueryHandler for TcpHandler {
             target_doc,
             query,
             max_new,
+            &self.tok,
+            &self.cfg,
+        )
+    }
+
+    fn submit_session_timed(
+        &mut self,
+        ticket: u64,
+        target_doc: u32,
+        query: &str,
+        max_new: usize,
+        wait: f64,
+    ) -> Option<anyhow::Result<proto::QueryResult>> {
+        self.bridge.submit_timed(
+            &mut self.server,
+            ticket,
+            target_doc,
+            query,
+            max_new,
+            wait,
             &self.tok,
             &self.cfg,
         )

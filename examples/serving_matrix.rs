@@ -33,6 +33,20 @@
 //! transfer+prefill TTFT proxy; on the in-order stream it must not
 //! lose either.
 //!
+//! `--shed on` arms the real-path admission-control ladder inside each
+//! engine: every queue pop feeds the wall-clock queue-delay EWMA,
+//! requests queued past `--ttft-slo` are shed before any admission
+//! work, and while the EWMA holds above the downgrade threshold the
+//! staged search runs single-stage. Stats report
+//! shed/goodput/attainment with `slo_enabled` set — no zero-fill.
+//!
+//! `--compare-shed` runs the overload acceptance gate: the same
+//! closed-loop client fleet against a shed-off and a shed-on server
+//! whose (blocking, timed) search latency stalls the queue well past
+//! the TTFT SLO. Shed-on must strictly win requests completed within
+//! the SLO, with exact `completed + shed == submitted` accounting on
+//! both the client and stats sides.
+//!
 //! `--bench-serving` emits `bench_out/BENCH_serving.json`: one row per
 //! chunk mode with client-measured TTFT p50/p99, throughput and the
 //! cache counters, for `ci.sh`'s regression diff against
@@ -43,15 +57,16 @@
 //!         [--max-batch B] [--speculate on|off] [--rebalance on|off]
 //!         [--rebalance-interval N]
 //!         [--chunk-cache on|off] [--boundary-tokens R]
+//!         [--shed on|off] [--ttft-slo S]
 //!         [--compare-speculation] [--compare-rebalance]
-//!         [--compare-chunk-cache] [--bench-serving]`
+//!         [--compare-chunk-cache] [--compare-shed] [--bench-serving]`
 
 use ragcache::cli::Args;
 use ragcache::config::PolicyKind;
 use ragcache::controller::{
     split_budget, Admission, BatchAdmission, FinishPath, PipelineDriver,
     RebalanceConfig, RetrievalConfig, RetrievalService, RetrievalTask,
-    SessionTable, ShardedCacheService, StageReady,
+    SessionTable, ShardedCacheService, ShedLadder, StageReady,
 };
 use ragcache::embed::EmbeddingModel;
 use ragcache::kvcache::PageSpec;
@@ -140,6 +155,48 @@ struct MatrixPending {
     ticket: u64,
     query: String,
     t0: Instant,
+    /// Reorder-queue wait the client already paid before submit (0
+    /// with the ladder off) — folded into the reported TTFT.
+    wait: f64,
+}
+
+/// Per-engine SLO admission-control state (`--shed on`): the real
+/// path's ladder over wall-clock queue delay, plus the accounting the
+/// stats fan-out reports.
+struct MatrixSlo {
+    ladder: ShedLadder,
+    started: Instant,
+    /// TTFT (queue wait + service) of every completed request, ms.
+    ttfts_ms: Vec<f64>,
+    /// Completions within the TTFT SLO.
+    good: u64,
+    shed: u64,
+    downgraded: u64,
+}
+
+impl MatrixSlo {
+    fn new(ttft_slo_s: f64) -> Self {
+        MatrixSlo {
+            ladder: ShedLadder::new(true, ttft_slo_s, 0.5),
+            started: Instant::now(),
+            ttfts_ms: Vec::new(),
+            good: 0,
+            shed: 0,
+            downgraded: 0,
+        }
+    }
+
+    /// Wall-clock now in the ladder/table time domain.
+    fn now(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    fn complete(&mut self, ttft_ms: f64) {
+        if ttft_ms <= self.ladder.ttft_slo() * 1e3 {
+            self.good += 1;
+        }
+        self.ttfts_ms.push(ttft_ms);
+    }
 }
 
 /// Engine replica: real sharded-cache admission, synthetic compute.
@@ -154,6 +211,9 @@ struct MatrixHandler {
     /// functional matrix, which wants speed, not timing).
     timed: bool,
     sessions: Option<MatrixSessions>,
+    /// `--shed on`: the admission-control ladder; `None` serves the
+    /// ladder-free path bit for bit.
+    slo: Option<MatrixSlo>,
 }
 
 impl MatrixHandler {
@@ -216,6 +276,61 @@ impl MatrixHandler {
     /// Fixed doc pair of the un-indexed (blocking) mode.
     fn pair(target: u32) -> Vec<u32> {
         vec![target, target + 1]
+    }
+
+    /// Session submit body, parameterized by the ladder's inputs:
+    /// `wait` backdates the table arrival (so deadline expiry measures
+    /// what the client saw) and `downgrade` runs the staged search
+    /// single-stage — the first stage event is final, so speculation
+    /// structurally never starts. (0.0, false) IS the untimed path.
+    fn submit_session_inner(
+        &mut self,
+        ticket: u64,
+        target_doc: u32,
+        query: &str,
+        max_new: usize,
+        wait: f64,
+        downgrade: bool,
+    ) -> Option<anyhow::Result<proto::QueryResult>> {
+        let arrival = self
+            .slo
+            .as_ref()
+            .map(|s| s.now() - wait)
+            .unwrap_or(0.0);
+        let top_k = self.timing.top_k;
+        let Some(rt) = self.sessions.as_mut() else {
+            return Some(self.query(target_doc, query, max_new));
+        };
+        let session = rt.next_session;
+        rt.next_session += 1;
+        rt.table.submit(session, arrival);
+        rt.pending.insert(
+            session,
+            MatrixPending {
+                ticket,
+                query: query.to_string(),
+                t0: Instant::now(),
+                wait,
+            },
+        );
+        let accepted = rt.service.submit(RetrievalTask {
+            session,
+            query: rt.em.document(target_doc),
+            top_k,
+            stages: if downgrade { Some(1) } else { None },
+        });
+        if !accepted {
+            // Pool gone: the session can never produce stage events —
+            // fail it now instead of leaking an admission slot.
+            rt.pending.remove(&session);
+            rt.table
+                .fail(session, "retrieval pool unavailable".to_string());
+            rt.table.take_events();
+            return Some(Err(anyhow::anyhow!(
+                "retrieval pool unavailable"
+            )));
+        }
+        None
     }
 }
 
@@ -305,6 +420,86 @@ impl QueryHandler for MatrixHandler {
         results
     }
 
+    /// [`query_batch`](QueryHandler::query_batch) through the
+    /// admission-control ladder: every pop's queue wait feeds the
+    /// EWMA, members queued past the TTFT SLO are shed before any
+    /// admission work, survivors fold their wait into the reported
+    /// TTFT, and while the EWMA holds above the downgrade threshold
+    /// the (blocking) staged search runs single-stage. With the
+    /// ladder off this IS `query_batch`.
+    fn query_batch_timed(
+        &mut self,
+        batch: &[(u32, String, usize)],
+        waits: &[f64],
+    ) -> Vec<anyhow::Result<proto::QueryResult>> {
+        if self.slo.is_none() {
+            return self.query_batch(batch);
+        }
+        enum Slot {
+            Shed(f64),
+            Keep(f64),
+        }
+        let (slo_s, downgrade, slots) = {
+            let slo = self.slo.as_mut().expect("checked above");
+            let now = slo.now();
+            let mut slots = Vec::with_capacity(batch.len());
+            for i in 0..batch.len() {
+                let wait =
+                    waits.get(i).copied().unwrap_or(0.0).max(0.0);
+                slo.ladder.observe_wait(wait, now);
+                if slo.ladder.should_shed(wait) {
+                    slo.shed += 1;
+                    slots.push(Slot::Shed(wait));
+                } else {
+                    slots.push(Slot::Keep(wait));
+                }
+            }
+            (slo.ladder.ttft_slo(), slo.ladder.downgrading(), slots)
+        };
+        let keep: Vec<(u32, String, usize)> = slots
+            .iter()
+            .zip(batch)
+            .filter(|(s, _)| matches!(s, Slot::Keep(_)))
+            .map(|(_, b)| b.clone())
+            .collect();
+        // Downgrade = single-stage search: the blocking analogue of
+        // the session path's `stages: Some(1)`.
+        let orig = self.timing;
+        if downgrade && self.timed && !keep.is_empty() {
+            self.timing.search =
+                orig.search / orig.stages.max(1) as u32;
+            if let Some(slo) = self.slo.as_mut() {
+                slo.downgraded += keep.len() as u64;
+            }
+        }
+        let served = self.query_batch(&keep);
+        self.timing = orig;
+        let mut served = served.into_iter();
+        let mut out = Vec::with_capacity(batch.len());
+        for slot in slots {
+            match slot {
+                Slot::Shed(wait) => out.push(Err(anyhow::anyhow!(
+                    "request shed: queued {wait:.3}s past the \
+                     {slo_s:.3}s TTFT SLO"
+                ))),
+                Slot::Keep(wait) => {
+                    let r =
+                        served.next().expect("one result per survivor");
+                    out.push(r.map(|mut q| {
+                        // The client paid the queue too.
+                        q.ttft_ms += wait * 1e3;
+                        q.total_ms += wait * 1e3;
+                        if let Some(slo) = self.slo.as_mut() {
+                            slo.complete(q.ttft_ms);
+                        }
+                        q
+                    }));
+                }
+            }
+        }
+        out
+    }
+
     /// Event-driven entry: dispatch the staged search and return; the
     /// result streams back through `poll_sessions`.
     fn submit_session(
@@ -314,37 +509,45 @@ impl QueryHandler for MatrixHandler {
         query: &str,
         max_new: usize,
     ) -> Option<anyhow::Result<proto::QueryResult>> {
-        let Some(rt) = self.sessions.as_mut() else {
-            return Some(self.query(target_doc, query, max_new));
+        self.submit_session_inner(
+            ticket, target_doc, query, max_new, 0.0, false,
+        )
+    }
+
+    /// [`submit_session`](QueryHandler::submit_session) through the
+    /// admission-control ladder: the queue wait feeds the EWMA, a
+    /// request queued past the SLO is shed before submit, and while
+    /// the EWMA holds above the downgrade threshold new sessions run
+    /// single-stage. With the ladder off this IS `submit_session`.
+    fn submit_session_timed(
+        &mut self,
+        ticket: u64,
+        target_doc: u32,
+        query: &str,
+        max_new: usize,
+        wait: f64,
+    ) -> Option<anyhow::Result<proto::QueryResult>> {
+        let Some(slo) = self.slo.as_mut() else {
+            return self.submit_session(ticket, target_doc, query, max_new);
         };
-        let session = rt.next_session;
-        rt.next_session += 1;
-        rt.table.submit(session, 0.0);
-        rt.pending.insert(
-            session,
-            MatrixPending {
-                ticket,
-                query: query.to_string(),
-                t0: Instant::now(),
-            },
-        );
-        let accepted = rt.service.submit(RetrievalTask {
-            session,
-            query: rt.em.document(target_doc),
-            top_k: self.timing.top_k,
-        });
-        if !accepted {
-            // Pool gone: the session can never produce stage events —
-            // fail it now instead of leaking an admission slot.
-            rt.pending.remove(&session);
-            rt.table
-                .fail(session, "retrieval pool unavailable".to_string());
-            rt.table.take_events();
+        let wait = wait.max(0.0);
+        let now = slo.now();
+        slo.ladder.observe_wait(wait, now);
+        if slo.ladder.should_shed(wait) {
+            slo.shed += 1;
+            let slo_s = slo.ladder.ttft_slo();
             return Some(Err(anyhow::anyhow!(
-                "retrieval pool unavailable"
+                "request shed: queued {wait:.3}s past the {slo_s:.3}s \
+                 TTFT SLO"
             )));
         }
-        None
+        let downgrade = slo.ladder.downgrading();
+        if downgrade {
+            slo.downgraded += 1;
+        }
+        self.submit_session_inner(
+            ticket, target_doc, query, max_new, wait, downgrade,
+        )
     }
 
     /// The event multiplexer body: Algorithm 2 per stage, pin-only
@@ -358,6 +561,33 @@ impl QueryHandler for MatrixHandler {
         let Some(mut rt) = self.sessions.take() else {
             return out;
         };
+        // Admission-control shed pass (mirrors the real server's):
+        // sessions whose TTFT deadline expired while still queued
+        // behind the staged search are shed — speculation pins
+        // released, staged retrieval cancelled, client answered now.
+        if let Some(slo) = self.slo.as_mut() {
+            let now = slo.now();
+            slo.ladder.decay_to(now);
+            let slo_s = slo.ladder.ttft_slo();
+            for (id, work) in rt.table.shed_expired(now, slo_s) {
+                if let Some(w) = work {
+                    self.cache.release(&w.payload);
+                }
+                rt.service.cancel(id);
+                let Some(p) = rt.pending.remove(&id) else {
+                    continue;
+                };
+                slo.shed += 1;
+                out.push(SessionDone {
+                    ticket: p.ticket,
+                    result: Err(anyhow::anyhow!(
+                        "request shed: TTFT SLO ({slo_s:.3}s) expired \
+                         before the final stage"
+                    )),
+                });
+            }
+            rt.table.take_events();
+        }
         let mut events = Vec::new();
         if let Ok(ev) = rt.events.recv_timeout(timeout) {
             events.push(ev);
@@ -399,13 +629,17 @@ impl QueryHandler for MatrixHandler {
                 };
                 rt.table.prefilled(id, p.t0.elapsed().as_secs_f64());
                 rt.table.decoding(id);
-                let ttft_ms = p.t0.elapsed().as_secs_f64() * 1e3;
+                let ttft_ms = (p.t0.elapsed().as_secs_f64() + p.wait)
+                    * 1e3;
                 let result = self.commit_result(
                     ev.docs.clone(),
                     adm,
                     &p.query,
                     ttft_ms,
                 );
+                if let Some(slo) = self.slo.as_mut() {
+                    slo.complete(ttft_ms);
+                }
                 rt.table.complete(id);
                 out.push(SessionDone {
                     ticket: p.ticket,
@@ -435,6 +669,30 @@ impl QueryHandler for MatrixHandler {
             .as_ref()
             .map(|rt| rt.table.totals())
             .unwrap_or_default();
+        // SLO accounting: live with `--shed on`, explicitly "not
+        // measured" (slo_enabled false) otherwise — never a zero-fill
+        // that reads as 0% attained.
+        let (goodput_rps, ttft_p999_ms, slo_attainment) = self
+            .slo
+            .as_ref()
+            .map(|slo| {
+                let mut s = ragcache::util::Summary::new();
+                for &t in &slo.ttfts_ms {
+                    s.add(t);
+                }
+                let total = slo.ttfts_ms.len() as u64 + slo.shed;
+                (
+                    slo.good as f64
+                        / slo.started.elapsed().as_secs_f64().max(1e-9),
+                    if slo.ttfts_ms.is_empty() { 0.0 } else { s.p999() },
+                    if total == 0 {
+                        0.0
+                    } else {
+                        slo.good as f64 / total as f64
+                    },
+                )
+            })
+            .unwrap_or((0.0, 0.0, 0.0));
         proto::StatsResult {
             requests: self.served as usize,
             mean_ttft_ms: 1.0,
@@ -458,9 +716,15 @@ impl QueryHandler for MatrixHandler {
                 .iter()
                 .map(|o| o.gpu_capacity)
                 .collect(),
-            // SLO accounting (goodput / p99.9 / shed) is driven by the
-            // open-loop simulator; the TCP matrix has no TTFT SLO.
-            ..Default::default()
+            goodput_rps,
+            ttft_p999_ms,
+            shed_requests: self.slo.as_ref().map_or(0, |s| s.shed),
+            downgraded_requests: self
+                .slo
+                .as_ref()
+                .map_or(0, |s| s.downgraded),
+            slo_attainment,
+            slo_enabled: self.slo.is_some(),
         }
     }
 }
@@ -498,7 +762,10 @@ fn build_cache(
     })
 }
 
-/// Spawn one matrix server; `speculate`/`timed` pick the serving shape.
+/// Spawn one matrix server; `speculate`/`timed` pick the serving shape
+/// and `ttft_slo` (seconds) arms the per-engine admission-control
+/// ladder (`--shed on`).
+#[allow(clippy::too_many_arguments)]
 fn spawn_matrix(
     svc: &ShardedCacheService,
     workers: usize,
@@ -507,6 +774,7 @@ fn spawn_matrix(
     timing: MatrixTiming,
     speculate: bool,
     timed: bool,
+    ttft_slo: Option<f64>,
 ) -> anyhow::Result<Server> {
     let est = svc.clone();
     let estimator: PriorityEstimator = Arc::new(move |req| match req {
@@ -571,6 +839,7 @@ fn spawn_matrix(
             timing,
             timed,
             sessions,
+            slo: ttft_slo.map(MatrixSlo::new),
         })
     })?;
     Ok(server)
@@ -620,6 +889,7 @@ fn rebalance_run(
         MatrixTiming::fast(),
         false,
         false,
+        None,
     )?;
     let mut cl = Client::connect(server.addr)?;
     for &t in targets {
@@ -948,6 +1218,162 @@ fn bench_serving() -> anyhow::Result<()> {
     Ok(())
 }
 
+const SHED_CLIENTS: usize = 10;
+const SHED_PER_CLIENT: usize = 6;
+const SHED_SLO_S: f64 = 0.25;
+
+/// One `--compare-shed` run: a closed-loop fleet of `SHED_CLIENTS`
+/// client threads, each issuing `SHED_PER_CLIENT` requests against a
+/// single blocking timed engine whose 60 ms search stalls the queue
+/// well past the TTFT SLO. Returns client-observed
+/// `(completed_within_slo, completed, shed)` — the within-SLO count is
+/// wall-clock around each `call`, so it includes the queue time under
+/// BOTH modes (the shed-off server has no ladder folding waits into
+/// its reported TTFT).
+fn shed_run(shed: bool) -> anyhow::Result<(usize, usize, usize)> {
+    let timing = MatrixTiming {
+        search: Duration::from_millis(60),
+        stages: 4,
+        prefill: Duration::ZERO,
+        top_k: 1,
+    };
+    let svc = build_cache(1, false, 8);
+    let server = spawn_matrix(
+        &svc,
+        SHED_CLIENTS,
+        1,
+        1,
+        timing,
+        false,
+        true,
+        shed.then_some(SHED_SLO_S),
+    )?;
+    let addr = server.addr;
+    let mut joins = Vec::new();
+    for k in 0..SHED_CLIENTS {
+        joins.push(std::thread::spawn(
+            move || -> anyhow::Result<(usize, usize, usize)> {
+                let mut cl = Client::connect(addr)?;
+                let (mut good, mut completed, mut shed_seen) =
+                    (0usize, 0usize, 0usize);
+                for j in 0..SHED_PER_CLIENT {
+                    let t = ((k * SHED_PER_CLIENT + j) % 60) as u32;
+                    let t0 = Instant::now();
+                    match cl.call(&query(t))? {
+                        proto::Response::Query(_) => {
+                            completed += 1;
+                            if t0.elapsed().as_secs_f64() <= SHED_SLO_S
+                            {
+                                good += 1;
+                            }
+                        }
+                        proto::Response::Error { message }
+                            if message.contains("shed") =>
+                        {
+                            shed_seen += 1;
+                        }
+                        other => {
+                            anyhow::bail!("unexpected {other:?}")
+                        }
+                    }
+                }
+                Ok((good, completed, shed_seen))
+            },
+        ));
+    }
+    let (mut good, mut completed, mut shed_seen) = (0, 0, 0);
+    for j in joins {
+        let (g, c, s) = j.join().expect("client thread")?;
+        good += g;
+        completed += c;
+        shed_seen += s;
+    }
+    let mut tail = Client::connect(addr)?;
+    let stats = match tail.call(&proto::Request::Stats)? {
+        proto::Response::Stats(s) => s,
+        other => anyhow::bail!("unexpected stats response {other:?}"),
+    };
+    let _ = tail.call(&proto::Request::Shutdown)?;
+    server.join();
+
+    let submitted = SHED_CLIENTS * SHED_PER_CLIENT;
+    if completed + shed_seen != submitted {
+        anyhow::bail!(
+            "accounting: {completed} completed + {shed_seen} shed != \
+             {submitted} submitted"
+        );
+    }
+    if stats.slo_enabled != shed {
+        anyhow::bail!(
+            "slo_enabled {} on a shed-{} run",
+            stats.slo_enabled,
+            if shed { "on" } else { "off" }
+        );
+    }
+    if stats.shed_requests != shed_seen as u64 {
+        anyhow::bail!(
+            "stats shed {} != {} shed answers seen by clients",
+            stats.shed_requests,
+            shed_seen
+        );
+    }
+    if stats.requests != completed {
+        anyhow::bail!(
+            "stats served {} != {completed} client completions",
+            stats.requests
+        );
+    }
+    if !shed && shed_seen != 0 {
+        anyhow::bail!("ladder off but {shed_seen} requests shed");
+    }
+    svc.check_invariants();
+    if svc.pinned_nodes() != 0 {
+        anyhow::bail!("{} pins leaked", svc.pinned_nodes());
+    }
+    Ok((good, completed, shed_seen))
+}
+
+/// Acceptance gate for real-path admission control: under the same
+/// retrieval-stall overload, shed-on must strictly win requests
+/// completed within the TTFT SLO — shedding the already-doomed (and
+/// downgrading the search while the queue-delay EWMA is high) keeps
+/// the queue short enough that fresh requests still make their
+/// deadline, where the shed-off server serves everything late.
+fn compare_shed() -> anyhow::Result<()> {
+    let (good_off, completed_off, _) = shed_run(false)?;
+    let (good_on, completed_on, shed_on) = shed_run(true)?;
+    println!(
+        "  shed off: {good_off}/{completed_off} within the \
+         {SHED_SLO_S}s SLO, 0 shed"
+    );
+    println!(
+        "  shed on : {good_on}/{completed_on} within the {SHED_SLO_S}s \
+         SLO, {shed_on} shed"
+    );
+    let mut failed = false;
+    if good_on <= good_off {
+        eprintln!(
+            "FAIL: shed-on must strictly win completions within the \
+             SLO ({good_on} !> {good_off})"
+        );
+        failed = true;
+    }
+    if shed_on == 0 {
+        eprintln!(
+            "FAIL: the overload never tripped the ladder (0 shed)"
+        );
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    println!(
+        "OK: admission control lifted within-SLO completions \
+         {good_off} -> {good_on} under overload"
+    );
+    Ok(())
+}
+
 /// Acceptance comparison: cold cache, retrieval-heavy timing (staged
 /// search latency ≥ prefill latency), identical serial workload.
 /// Speculation must strictly lower the summed TTFT: the speculative
@@ -959,7 +1385,7 @@ fn compare_speculation(workers: usize) -> anyhow::Result<()> {
     for speculate in [false, true] {
         let svc = build_cache(1, false, 8); // fresh cold cache per mode
         let server = spawn_matrix(
-            &svc, workers, 1, 8, timing, speculate, !speculate,
+            &svc, workers, 1, 8, timing, speculate, !speculate, None,
         )?;
         let mut cl = Client::connect(server.addr)?;
         let mut sum_ms = 0.0;
@@ -1007,6 +1433,7 @@ fn main() -> anyhow::Result<()> {
             "compare-speculation",
             "compare-rebalance",
             "compare-chunk-cache",
+            "compare-shed",
             "bench-serving",
         ],
     )
@@ -1054,8 +1481,22 @@ fn main() -> anyhow::Result<()> {
             "--boundary-tokens must be >= 1 with --chunk-cache on"
         );
     }
+    let shed = match args.get_or("shed", "off") {
+        "on" => true,
+        "off" => false,
+        other => anyhow::bail!("--shed expects on|off, got {other}"),
+    };
+    let ttft_slo_s: f64 = args
+        .get_parse_or("ttft-slo", 5.0)
+        .map_err(anyhow::Error::msg)?;
+    if shed && !(ttft_slo_s > 0.0) {
+        anyhow::bail!("--ttft-slo must be > 0 with --shed on");
+    }
     if args.flag("compare-speculation") {
         return compare_speculation(workers.max(1));
+    }
+    if args.flag("compare-shed") {
+        return compare_shed();
     }
     if args.flag("compare-rebalance") {
         return compare_rebalance();
@@ -1096,15 +1537,22 @@ fn main() -> anyhow::Result<()> {
         MatrixTiming::fast(),
         speculate,
         false,
+        shed.then_some(ttft_slo_s),
     )?;
     let addr = server.addr;
     println!(
         "serving matrix on {addr}: {workers} workers, {engines} engines, \
          {shards} shards, {clients} clients, {max_batch}-request \
-         batches, speculation {}, rebalancing {}, chunk cache {}",
+         batches, speculation {}, rebalancing {}, chunk cache {}, \
+         admission control {}",
         if speculate { "on" } else { "off" },
         if rebalance { "on" } else { "off" },
-        if chunk_cache { "on" } else { "off" }
+        if chunk_cache { "on" } else { "off" },
+        if shed {
+            format!("on (TTFT SLO {ttft_slo_s}s)")
+        } else {
+            "off".to_string()
+        }
     );
 
     // Warm phase: one client inserts every target's docs (cold).
@@ -1279,6 +1727,41 @@ fn main() -> anyhow::Result<()> {
             "chunk cache off but {} hits reported",
             stats.chunk_hits
         ));
+    }
+    // Admission-control gates: the wire must say whether the ladder
+    // ran; at the generous 5 s default SLO the fast matrix must not
+    // shed anything, and with the ladder on every completion is within
+    // the SLO (attainment exactly 1).
+    if stats.slo_enabled != shed {
+        failures.push(format!(
+            "slo_enabled {} but --shed {}",
+            stats.slo_enabled,
+            if shed { "on" } else { "off" }
+        ));
+    }
+    if shed {
+        if stats.shed_requests != 0 {
+            failures.push(format!(
+                "fast matrix shed {} requests at a {ttft_slo_s}s SLO",
+                stats.shed_requests
+            ));
+        }
+        if (stats.slo_attainment - 1.0).abs() > 1e-9 {
+            failures.push(format!(
+                "attainment {} != 1 with nothing shed",
+                stats.slo_attainment
+            ));
+        }
+        if stats.goodput_rps <= 0.0 {
+            failures.push("ladder on but goodput is zero".to_string());
+        }
+    } else if stats.shed_requests != 0
+        || stats.goodput_rps != 0.0
+        || stats.slo_attainment != 0.0
+    {
+        failures.push(
+            "ladder off but SLO counters are non-zero".to_string(),
+        );
     }
     // Tentpole gate: whatever the rebalancer did (or didn't — static
     // split), the shard GPU capacities must still sum to the configured

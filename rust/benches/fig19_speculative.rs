@@ -102,6 +102,7 @@ fn session_api_ttft(
             session: id,
             query: em.document(target(i)),
             top_k: 1,
+            stages: None,
         }));
         loop {
             let ev = rx

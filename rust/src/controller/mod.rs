@@ -13,20 +13,20 @@
 //!            ▼                              ▼
 //!   sim_server (driver)             real (driver)
 //!   discrete-event core over        wall clock, PJRT prefill;
-//!   EventScheduler (cancellable     sessions: submit → poll_sessions
-//!   handles): open-loop Arrival /
-//!   RetrievalDone / EngineDone /
-//!   DeadlineExpired / RebalanceTick
-//!   handlers + service_queues();
-//!   admission-control ladder
-//!   Normal → Downgrade (EWMA of
-//!   queue delay > frac × SLO:
-//!   speculation off for new
-//!   arrivals) → Shed (deadline at
-//!   arrival + TTFT SLO; admitted
-//!   prefills always graced);
-//!   --shed off is bit-identical
-//!   to the iteration-driven path
+//!   EventScheduler (cancellable     sessions: submit → poll_sessions;
+//!   handles): open-loop Arrival /   admission-control ladder
+//!   RetrievalDone / EngineDone /    (pipeline::ShedLadder, wall
+//!   DeadlineExpired / ShedDecayTick clock): queue wait measured at
+//!   handlers + service_queues();    reorder-queue pop, same 0.8/0.2
+//!   admission-control ladder        EWMA + slo/4 decay; Downgrade =
+//!   Normal → Downgrade (EWMA of     single-stage retrieval (so no
+//!   queue delay > frac × SLO:       speculation) for new submits,
+//!   speculation off for new         Shed = queued past the TTFT SLO
+//!   arrivals) → Shed (deadline at   (blocking pops AND expired
+//!   arrival + TTFT SLO; admitted    sessions: pins released, staged
+//!   prefills always graced);        retrieval cancelled); --shed off
+//!   --shed off is bit-identical     is bit-identical to the PR 7
+//!   to the iteration-driven path    real path
 //!            │                              │
 //!            │              retrieval_service (thread pool)
 //!            │              ticks VectorIndex::staged_search,
@@ -99,7 +99,7 @@ pub mod sim_server;
 pub use batch::BatchAdmission;
 pub use pipeline::{
     Admission, CacheService, CommitOutcome, Pipeline, PipelineDriver,
-    RequestState,
+    RequestState, ShedLadder,
 };
 pub use retrieval::{RetrievalTiming, StagePlan, StagedRetrieval};
 pub use retrieval_service::{

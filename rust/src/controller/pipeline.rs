@@ -61,6 +61,106 @@ pub trait PipelineDriver {
     fn transfer_time(&self, bytes: u64) -> f64;
 }
 
+/// Wall-clock admission-control ladder for the real serving path — the
+/// same Normal → Downgrade → Shed discipline the simulator runs in
+/// [`super::sim_server`], packaged so [`super::real::RealServer`] and
+/// the PJRT-free serving matrix share one implementation.
+///
+/// The ladder observes per-request queueing delay at reorder-queue pop
+/// time and maintains the PR 7 EWMA (`0.8 · ewma + 0.2 · wait`).
+/// Because the real path has no event scheduler, the periodic decay tick
+/// is folded into observation: every elapsed `ttft_slo / 4` since the
+/// last decay halves the EWMA before the new sample lands — the same
+/// fixed-point as the simulator's `ShedDecayTick`.
+///
+/// Disabled (`--shed off`) the ladder is inert: `downgrading()` and
+/// `should_shed()` are always false and no state mutates, keeping the
+/// off path bit-identical to the pre-shedding real path.
+#[derive(Debug, Clone)]
+pub struct ShedLadder {
+    enabled: bool,
+    ttft_slo: f64,
+    downgrade_frac: f64,
+    wait_ewma: f64,
+    last_decay: f64,
+}
+
+impl ShedLadder {
+    pub fn new(enabled: bool, ttft_slo: f64, downgrade_frac: f64) -> Self {
+        ShedLadder {
+            enabled,
+            ttft_slo: ttft_slo.max(1e-9),
+            downgrade_frac,
+            wait_ewma: 0.0,
+            last_decay: 0.0,
+        }
+    }
+
+    /// Inert ladder (`--shed off`).
+    pub fn disabled() -> Self {
+        ShedLadder::new(false, 5.0, 0.5)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn ttft_slo(&self) -> f64 {
+        self.ttft_slo
+    }
+
+    /// Current queue-delay EWMA, seconds.
+    pub fn wait_ewma(&self) -> f64 {
+        self.wait_ewma
+    }
+
+    /// Apply every decay period that elapsed since the last one: the
+    /// EWMA halves each `ttft_slo / 4` of wall clock, exactly like the
+    /// simulator's decay tick. Iteration-capped: past 64 periods the
+    /// EWMA is already below any meaningful threshold, so it snaps to 0.
+    pub fn decay_to(&mut self, now: f64) {
+        if !self.enabled {
+            return;
+        }
+        let period = self.ttft_slo / 4.0;
+        let mut steps = 0usize;
+        while now - self.last_decay >= period {
+            self.wait_ewma *= 0.5;
+            self.last_decay += period;
+            steps += 1;
+            if steps >= 64 {
+                self.wait_ewma = 0.0;
+                self.last_decay = now;
+                break;
+            }
+        }
+    }
+
+    /// A request popped from the reorder queue after waiting `wait`
+    /// seconds: decay the EWMA to `now`, then fold the sample in with
+    /// the PR 7 weights.
+    pub fn observe_wait(&mut self, wait: f64, now: f64) {
+        if !self.enabled {
+            return;
+        }
+        self.decay_to(now);
+        self.wait_ewma = 0.8 * self.wait_ewma + 0.2 * wait.max(0.0);
+    }
+
+    /// Downgrade new admissions (speculation off, single-stage
+    /// retrieval) while the queue-delay EWMA exceeds
+    /// `downgrade_frac × ttft_slo`.
+    pub fn downgrading(&self) -> bool {
+        self.enabled && self.wait_ewma > self.downgrade_frac * self.ttft_slo
+    }
+
+    /// Shed a request that has already waited past its TTFT SLO while
+    /// still queued (its deadline cannot be met).
+    pub fn should_shed(&self, wait: f64) -> bool {
+        self.enabled && wait > self.ttft_slo
+    }
+}
+
 /// One request's admission into the engine: the pinned cache prefix plus
 /// everything needed to commit (or abandon) the prefill afterwards.
 #[derive(Debug, Clone, Default)]
@@ -857,6 +957,46 @@ mod tests {
         p.deliver_first_token(0, old, &[1], 0.3);
         assert!(p.requests[0].spec_first_token_at.is_none());
         assert!(p.recorder.record(0).is_none());
+    }
+
+    #[test]
+    fn shed_ladder_disabled_is_inert() {
+        let mut l = ShedLadder::disabled();
+        l.observe_wait(100.0, 50.0);
+        assert_eq!(l.wait_ewma(), 0.0);
+        assert!(!l.downgrading());
+        assert!(!l.should_shed(1e9));
+    }
+
+    #[test]
+    fn shed_ladder_ewma_and_thresholds() {
+        let mut l = ShedLadder::new(true, 4.0, 0.5);
+        // One big sample: ewma = 0.2 * 10 = 2.0, right at the boundary
+        // (not strictly above 0.5 * 4.0), so not yet downgrading.
+        l.observe_wait(10.0, 0.0);
+        assert!((l.wait_ewma() - 2.0).abs() < 1e-12);
+        assert!(!l.downgrading());
+        // Second sample in the same decay period pushes it over:
+        // 0.8 * 2.0 + 0.2 * 10 = 3.6 > 2.0.
+        l.observe_wait(10.0, 0.5);
+        assert!(l.downgrading());
+        // Shedding keys on the individual wait, not the EWMA.
+        assert!(!l.should_shed(4.0));
+        assert!(l.should_shed(4.0 + 1e-9));
+    }
+
+    #[test]
+    fn shed_ladder_decay_halves_per_quarter_slo() {
+        let mut l = ShedLadder::new(true, 4.0, 0.5);
+        l.observe_wait(20.0, 0.0); // ewma = 4.0 > 2.0: downgrading
+        assert!(l.downgrading());
+        // Two decay periods (2 × slo/4 = 2.0 s) halve it twice: 1.0.
+        l.decay_to(2.0);
+        assert!((l.wait_ewma() - 1.0).abs() < 1e-12);
+        assert!(!l.downgrading());
+        // Far-future decay snaps to zero instead of looping forever.
+        l.decay_to(1e9);
+        assert_eq!(l.wait_ewma(), 0.0);
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! [`super::sim_server`].
 
 use super::batch::BatchAdmission;
-use super::pipeline::{Admission, Pipeline, PipelineDriver};
+use super::pipeline::{Admission, Pipeline, PipelineDriver, ShedLadder};
 use super::retrieval_service::{
     RetrievalConfig, RetrievalService, RetrievalTask, StageReady,
 };
@@ -69,6 +69,17 @@ pub struct RealConfig {
     /// Boundary tokens `r` re-prefilled per chunk hit (the first `r`
     /// tokens of the hit document; `--boundary-tokens`).
     pub boundary_tokens: usize,
+    /// SLO admission control on the real path (`--shed on`): the
+    /// Normal → Downgrade → Shed ladder over wall-clock queueing delay
+    /// ([`ShedLadder`]). Off serves the PR 7 path bit for bit.
+    pub shed: bool,
+    /// TTFT SLO, seconds (`--ttft-slo`): requests queued past it are
+    /// shed, and it anchors the goodput/attainment report.
+    pub ttft_slo_s: f64,
+    /// Downgrade threshold as a fraction of the SLO: new admissions run
+    /// single-stage (no speculation) while the queue-delay EWMA exceeds
+    /// `downgrade_frac × ttft_slo_s`.
+    pub downgrade_frac: f64,
 }
 
 impl Default for RealConfig {
@@ -88,6 +99,9 @@ impl Default for RealConfig {
             spec_pool: 4,
             chunk_cache: false,
             boundary_tokens: 8,
+            shed: false,
+            ttft_slo_s: 5.0,
+            downgrade_frac: 0.5,
         }
     }
 }
@@ -100,6 +114,22 @@ pub struct ServingStats {
     pub hit_rate: f64,
     /// Speculation counters (zero when `speculate` is off).
     pub spec: SpecTotals,
+    /// Whether the SLO ladder ran (`--shed on`); when false, the SLO
+    /// fields below are "not measured", never "0% attained".
+    pub slo_enabled: bool,
+    /// Requests finished within the TTFT SLO per second of trace
+    /// horizon (0 with the ladder off).
+    pub goodput_rps: f64,
+    /// p99.9 TTFT over served requests, seconds (a pure measurement —
+    /// reported with the ladder off too).
+    pub ttft_p999_s: f64,
+    /// Requests shed by admission control.
+    pub shed_requests: u64,
+    /// Admissions downgraded (single-stage retrieval, no speculation).
+    pub downgraded_requests: u64,
+    /// Fraction of requests meeting the TTFT SLO (0 with the ladder
+    /// off).
+    pub slo_attainment: f64,
 }
 
 /// One member of a batched serve call ([`RealServer::serve_batch`]).
@@ -211,6 +241,9 @@ pub struct RealServer {
     next_id: u64,
     /// Session runtime for the speculative (event-driven) path.
     spec: Option<SpecRuntime>,
+    /// Wall-clock admission-control ladder (`--shed on`); inert when
+    /// the config never enabled it, keeping the off path bit-identical.
+    ladder: ShedLadder,
 }
 
 impl RealServer {
@@ -317,7 +350,21 @@ impl RealServer {
             rng: Rng::new(0xE2E),
             next_id: 0,
             spec: None,
+            ladder: ShedLadder::disabled(),
         })
+    }
+
+    /// Arm the ladder on the first call that carries a shedding config
+    /// (the timed serving entry points and `poll_sessions` all pass
+    /// through here). A `--shed off` config leaves it inert.
+    fn ensure_ladder(&mut self, cfg: &RealConfig) {
+        if cfg.shed && !self.ladder.enabled() {
+            self.ladder = ShedLadder::new(
+                true,
+                cfg.ttft_slo_s,
+                cfg.downgrade_frac,
+            );
+        }
     }
 
     /// Snapshot of the serving metrics. O(requests served) — intended
@@ -330,15 +377,28 @@ impl RealServer {
     /// Cheap aggregates for observability polling (no record snapshot).
     pub fn stats(&self) -> ServingStats {
         let r = &self.pipeline.recorder;
+        let mut ttft = r.ttft();
+        let slo_enabled = self.ladder.enabled();
+        let slo = self.ladder.ttft_slo();
         ServingStats {
             requests: r.len(),
-            mean_ttft_s: r.ttft().mean(),
+            mean_ttft_s: ttft.mean(),
             hit_rate: r.hit_rate(),
             spec: self
                 .spec
                 .as_ref()
                 .map(|rt| rt.table.totals())
                 .unwrap_or_default(),
+            slo_enabled,
+            goodput_rps: if slo_enabled { r.goodput(slo) } else { 0.0 },
+            ttft_p999_s: ttft.p999(),
+            shed_requests: r.shed_count() as u64,
+            downgraded_requests: r.downgrade_count() as u64,
+            slo_attainment: if slo_enabled {
+                r.slo_attainment(slo)
+            } else {
+                0.0
+            },
         }
     }
 
@@ -420,8 +480,46 @@ impl RealServer {
         if cfg.speculate {
             return self.serve_batch_speculative(reqs, cfg);
         }
+        self.serve_batch_blocking(reqs, None, cfg)
+    }
+
+    /// [`serve_batch`](RealServer::serve_batch) with per-member
+    /// reorder-queue waits (seconds each member spent queued before the
+    /// engine popped it) — the TCP runtime's entry point. The waits
+    /// drive the admission-control ladder: each pop feeds the
+    /// queue-delay EWMA, members queued past the TTFT SLO are shed
+    /// before retrieval ever runs, and arrival timestamps include the
+    /// queue time so TTFT measures what the client saw. With `--shed
+    /// off` this IS `serve_batch` (the ladder stays inert and the waits
+    /// are ignored), bit for bit.
+    pub fn serve_batch_timed(
+        &mut self,
+        reqs: &[BatchRequest],
+        waits: &[f64],
+        cfg: &RealConfig,
+    ) -> Vec<Result<RealResponse>> {
+        self.ensure_ladder(cfg);
+        if !self.ladder.enabled() {
+            return self.serve_batch(reqs, cfg);
+        }
+        if cfg.speculate {
+            return self.serve_batch_speculative_timed(reqs, waits, cfg);
+        }
+        self.serve_batch_blocking(reqs, Some(waits), cfg)
+    }
+
+    fn serve_batch_blocking(
+        &mut self,
+        reqs: &[BatchRequest],
+        waits: Option<&[f64]>,
+        cfg: &RealConfig,
+    ) -> Vec<Result<RealResponse>> {
         // Phase 1: per-member retrieval (Rust vector index — real
-        // search) + the admission inputs.
+        // search) + the admission inputs. With the ladder armed, each
+        // member's queue wait feeds the EWMA first, and members whose
+        // TTFT deadline already expired in the queue are shed here —
+        // before retrieval or admission touch them, so a shed member
+        // never holds pins.
         struct Prep {
             id: u64,
             t_arrive: f64,
@@ -429,12 +527,37 @@ impl RealServer {
             docs_tokens: Vec<(u32, usize)>,
             request_tokens: usize,
         }
-        let mut preps = Vec::with_capacity(reqs.len());
-        for r in reqs {
+        enum Slot {
+            Served(usize),
+            Shed(anyhow::Error),
+        }
+        let mut preps: Vec<Prep> = Vec::with_capacity(reqs.len());
+        let mut slots: Vec<Slot> = Vec::with_capacity(reqs.len());
+        for (i, r) in reqs.iter().enumerate() {
             let id = self.next_id;
             self.next_id += 1;
-            let t_arrive = self.driver.now();
+            let wait = waits
+                .and_then(|w| w.get(i))
+                .copied()
+                .unwrap_or(0.0)
+                .max(0.0);
+            let now = self.driver.now();
+            // Arrival is when the request entered the reorder queue,
+            // not when the engine popped it: queue time is part of the
+            // TTFT the client experiences (wait is 0 on the untimed
+            // path, leaving it exactly the pop time as before).
+            let t_arrive = now - wait;
             self.pipeline.recorder.arrival(id, t_arrive);
+            self.ladder.observe_wait(wait, now);
+            if self.ladder.should_shed(wait) {
+                self.pipeline.recorder.shed(id, now);
+                slots.push(Slot::Shed(anyhow::anyhow!(
+                    "request {id} shed: queued {wait:.3}s past the \
+                     {:.3}s TTFT SLO",
+                    self.ladder.ttft_slo()
+                )));
+                continue;
+            }
             let q =
                 self.em
                     .query(r.target_doc, cfg.query_noise, &mut self.rng);
@@ -449,6 +572,7 @@ impl RealServer {
                 .collect();
             // The separator + question form the request tail.
             let request_tokens = 1 + r.query_tokens.len(); // SEP + question
+            slots.push(Slot::Served(preps.len()));
             preps.push(Prep {
                 id,
                 t_arrive,
@@ -461,14 +585,19 @@ impl RealServer {
         // Phase 2: shared batched admission — match → promote (with
         // GPU-prefix fallback) → pin → (α, β) per member, transfers
         // coalesced into one burst charged once through the driver.
-        let base = preps.first().map(|p| p.id).unwrap_or(0);
+        // (Shed members never reach this phase.)
+        let by_id: HashMap<u64, usize> = preps
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p.id, i))
+            .collect();
         let batch = {
             let pipeline = &self.pipeline;
             BatchAdmission::admit_with(
                 &self.driver,
                 preps.iter().map(|p| p.id),
                 |id| {
-                    let p = &preps[(id - base) as usize];
+                    let p = &preps[by_id[&id]];
                     Ok(pipeline.admit_one(&p.docs_tokens, p.request_tokens))
                 },
             )
@@ -486,25 +615,35 @@ impl RealServer {
         let mut admissions: HashMap<u64, Admission> =
             batch.into_members().into_iter().collect();
         let mut commit_moved = Transfers::default();
-        let results: Vec<Result<RealResponse>> = preps
+        let mut preps: Vec<Option<Prep>> =
+            preps.into_iter().map(Some).collect();
+        let results: Vec<Result<RealResponse>> = slots
             .into_iter()
             .zip(reqs)
-            .map(|(prep, r)| match admissions.remove(&prep.id) {
-                Some(adm) => self.finish_one(
-                    prep.id,
-                    prep.t_arrive,
-                    prep.docs,
-                    adm,
-                    &r.query_tokens,
-                    r.max_new,
-                    cfg,
-                    &mut commit_moved,
-                ),
-                None => Err(anyhow::anyhow!(
-                    "request {}: GPU admission failed mid-batch; \
-                     pins released, re-submit",
-                    prep.id
-                )),
+            .map(|(slot, r)| {
+                let prep = match slot {
+                    Slot::Shed(e) => return Err(e),
+                    Slot::Served(i) => {
+                        preps[i].take().expect("each prep finishes once")
+                    }
+                };
+                match admissions.remove(&prep.id) {
+                    Some(adm) => self.finish_one(
+                        prep.id,
+                        prep.t_arrive,
+                        prep.docs,
+                        adm,
+                        &r.query_tokens,
+                        r.max_new,
+                        cfg,
+                        &mut commit_moved,
+                    ),
+                    None => Err(anyhow::anyhow!(
+                        "request {}: GPU admission failed mid-batch; \
+                         pins released, re-submit",
+                        prep.id
+                    )),
+                }
             })
             .collect();
         let mut commits = BatchAdmission::new();
@@ -538,6 +677,31 @@ impl RealServer {
             })
             .collect();
         self.serve_batch(&reqs, cfg)
+            .into_iter()
+            .map(|r| r.map(|resp| resp.into_query_result(tok)))
+            .collect()
+    }
+
+    /// [`serve_proto_batch`](RealServer::serve_proto_batch) with
+    /// per-member reorder-queue waits — what the TCP engine loops call
+    /// so queue delay reaches the admission-control ladder. With
+    /// `--shed off` it IS `serve_proto_batch`, bit for bit.
+    pub fn serve_proto_batch_timed(
+        &mut self,
+        batch: &[(u32, String, usize)],
+        waits: &[f64],
+        tok: &ByteTokenizer,
+        cfg: &RealConfig,
+    ) -> Vec<Result<crate::server::proto::QueryResult>> {
+        let reqs: Vec<BatchRequest> = batch
+            .iter()
+            .map(|(doc, query, max_new)| BatchRequest {
+                target_doc: *doc,
+                query_tokens: tok.encode(query),
+                max_new: (*max_new).clamp(1, 16),
+            })
+            .collect();
+        self.serve_batch_timed(&reqs, waits, cfg)
             .into_iter()
             .map(|r| r.map(|resp| resp.into_query_result(tok)))
             .collect()
@@ -734,11 +898,62 @@ impl RealServer {
     /// session id. The response arrives through
     /// [`poll_sessions`](RealServer::poll_sessions).
     pub fn submit(&mut self, req: &BatchRequest, cfg: &RealConfig) -> u64 {
+        self.submit_inner(req, cfg, 0.0, false)
+    }
+
+    /// [`submit`](RealServer::submit) with the request's reorder-queue
+    /// wait. Feeds the admission-control ladder: the wait updates the
+    /// queue-delay EWMA; a request queued past the TTFT SLO is shed
+    /// (recorded, never submitted — `Err` carries the client-facing
+    /// reason); while the EWMA sits above the downgrade threshold, new
+    /// sessions run single-stage retrieval, which makes their first
+    /// stage event final — speculation structurally never starts. With
+    /// `--shed off` this IS `submit`, bit for bit.
+    pub fn submit_timed(
+        &mut self,
+        req: &BatchRequest,
+        wait: f64,
+        cfg: &RealConfig,
+    ) -> Result<u64> {
+        self.ensure_ladder(cfg);
+        if !self.ladder.enabled() {
+            return Ok(self.submit_inner(req, cfg, 0.0, false));
+        }
+        let wait = wait.max(0.0);
+        let now = self.driver.now();
+        self.ladder.observe_wait(wait, now);
+        if self.ladder.should_shed(wait) {
+            let id = self.next_id;
+            self.next_id += 1;
+            self.pipeline.recorder.arrival(id, now - wait);
+            self.pipeline.recorder.shed(id, now);
+            return Err(anyhow::anyhow!(
+                "request {id} shed: queued {wait:.3}s past the {:.3}s \
+                 TTFT SLO",
+                self.ladder.ttft_slo()
+            ));
+        }
+        let downgrade = self.ladder.downgrading();
+        Ok(self.submit_inner(req, cfg, wait, downgrade))
+    }
+
+    fn submit_inner(
+        &mut self,
+        req: &BatchRequest,
+        cfg: &RealConfig,
+        wait: f64,
+        downgrade: bool,
+    ) -> u64 {
         self.ensure_spec(cfg);
         let id = self.next_id;
         self.next_id += 1;
-        let t_arrive = self.driver.now();
+        // Arrival backdates to reorder-queue entry (wait is 0 on the
+        // untimed path) so TTFT spans the queue time the client saw.
+        let t_arrive = self.driver.now() - wait;
         self.pipeline.recorder.arrival(id, t_arrive);
+        if downgrade {
+            self.pipeline.recorder.downgraded(id);
+        }
         let query =
             self.em.query(req.target_doc, cfg.query_noise, &mut self.rng);
         let rt = self.spec.as_mut().expect("just ensured");
@@ -755,6 +970,7 @@ impl RealServer {
             session: id,
             query,
             top_k: cfg.top_k,
+            stages: if downgrade { Some(1) } else { None },
         });
         if !accepted {
             // The pool is gone (worker panic / teardown): no stage event
@@ -802,6 +1018,31 @@ impl RealServer {
                     "session {id}: retrieval pool unavailable"
                 )),
             ));
+        }
+        // Ladder shed pass: sessions whose TTFT deadline expired while
+        // still short of admission fail now — their speculation pins are
+        // released and their staged retrieval is cancelled, exactly like
+        // the sim path's DeadlineExpired handler. Admitted prefills are
+        // graced inside `shed_expired` (the work is already spent).
+        if self.ladder.enabled() {
+            let now = self.driver.now();
+            self.ladder.decay_to(now);
+            let slo = self.ladder.ttft_slo();
+            for (id, work) in rt.table.shed_expired(now, slo) {
+                if let Some(w) = work {
+                    self.pipeline.abort_admission(&w.payload.adm);
+                }
+                rt.pending.remove(&id);
+                rt.service.cancel(id);
+                self.pipeline.recorder.shed(id, now);
+                done.push((
+                    id,
+                    Err(anyhow::anyhow!(
+                        "session {id} shed: TTFT SLO ({slo:.3}s) expired \
+                         before admission"
+                    )),
+                ));
+            }
         }
         let mut batch = Vec::new();
         if done.is_empty() {
@@ -875,6 +1116,59 @@ impl RealServer {
                         "session {id}: retrieval never completed"
                     ))
                 })
+            })
+            .collect()
+    }
+
+    /// [`serve_batch_speculative`](RealServer::serve_batch_speculative)
+    /// with per-member reorder-queue waits. Members shed at submit time
+    /// report their error in place; survivors run the normal session
+    /// lifecycle (downgraded ones on single-stage retrieval).
+    fn serve_batch_speculative_timed(
+        &mut self,
+        reqs: &[BatchRequest],
+        waits: &[f64],
+        cfg: &RealConfig,
+    ) -> Vec<Result<RealResponse>> {
+        let slots: Vec<Result<u64>> = reqs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let wait = waits.get(i).copied().unwrap_or(0.0);
+                self.submit_timed(r, wait, cfg)
+            })
+            .collect();
+        let want: std::collections::HashSet<u64> =
+            slots.iter().filter_map(|s| s.as_ref().ok().copied()).collect();
+        let mut results: HashMap<u64, Result<RealResponse>> =
+            HashMap::new();
+        let deadline =
+            std::time::Instant::now() + Duration::from_secs(120);
+        while results.len() < want.len()
+            && std::time::Instant::now() < deadline
+        {
+            for (id, res) in
+                self.poll_sessions(Duration::from_millis(20), cfg)
+            {
+                if want.contains(&id) {
+                    results.insert(id, res);
+                } else {
+                    log::warn!(
+                        "dropping stale session {id} completion from an \
+                         earlier timed-out serve_batch call"
+                    );
+                }
+            }
+        }
+        slots
+            .into_iter()
+            .map(|slot| match slot {
+                Err(e) => Err(e),
+                Ok(id) => results.remove(&id).unwrap_or_else(|| {
+                    Err(anyhow::anyhow!(
+                        "session {id}: retrieval never completed"
+                    ))
+                }),
             })
             .collect()
     }
@@ -1071,10 +1365,15 @@ impl RealServer {
                 .iter()
                 .map(|o| o.gpu_capacity)
                 .collect(),
-            // SLO fields (goodput, p99.9, shed/downgrade counters) stay
-            // zero on the real path: admission control with a TTFT SLO
-            // runs in the open-loop simulator only.
-            ..Default::default()
+            // p99.9 TTFT is pure measurement and always reported; the
+            // SLO-relative fields come from the ladder (zero — with
+            // `slo_enabled: false` saying why — when `--shed off`).
+            ttft_p999_ms: s.ttft_p999_s * 1e3,
+            goodput_rps: s.goodput_rps,
+            shed_requests: s.shed_requests,
+            downgraded_requests: s.downgraded_requests,
+            slo_attainment: s.slo_attainment,
+            slo_enabled: s.slo_enabled,
         }
     }
 }
@@ -1110,10 +1409,33 @@ impl SessionProtoBridge {
         tok: &ByteTokenizer,
         cfg: &RealConfig,
     ) -> Option<Result<crate::server::proto::QueryResult>> {
+        self.submit_timed(
+            server, ticket, target_doc, query, max_new, 0.0, tok, cfg,
+        )
+    }
+
+    /// [`submit`](SessionProtoBridge::submit) with the request's
+    /// reorder-queue wait, so the admission-control ladder sees queue
+    /// delay in session mode too. A shed submit answers immediately
+    /// (`Some(Err(..))`) without ever opening a session. With `--shed
+    /// off` it IS `submit`, bit for bit.
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit_timed(
+        &mut self,
+        server: &mut RealServer,
+        ticket: u64,
+        target_doc: u32,
+        query: &str,
+        max_new: usize,
+        wait: f64,
+        tok: &ByteTokenizer,
+        cfg: &RealConfig,
+    ) -> Option<Result<crate::server::proto::QueryResult>> {
         if !cfg.speculate {
             return server
-                .serve_proto_batch(
+                .serve_proto_batch_timed(
                     &[(target_doc, query.to_string(), max_new)],
+                    &[wait],
                     tok,
                     cfg,
                 )
@@ -1124,9 +1446,13 @@ impl SessionProtoBridge {
             query_tokens: tok.encode(query),
             max_new: max_new.clamp(1, 16),
         };
-        let session = server.submit(&req, cfg);
-        self.tickets.insert(session, ticket);
-        None
+        match server.submit_timed(&req, wait, cfg) {
+            Ok(session) => {
+                self.tickets.insert(session, ticket);
+                None
+            }
+            Err(e) => Some(Err(e)),
+        }
     }
 
     /// Drain completed sessions as `(ticket, wire result)` pairs for

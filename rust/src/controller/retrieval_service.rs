@@ -23,6 +23,7 @@
 
 use crate::tree::DocId;
 use crate::vectordb::VectorIndex;
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
@@ -36,6 +37,12 @@ pub struct RetrievalTask {
     /// Query embedding.
     pub query: Vec<f32>,
     pub top_k: usize,
+    /// Per-task stage-count override: `Some(1)` is the admission
+    /// ladder's Downgrade — a single-stage search whose first event is
+    /// already final, so the session goes straight to the blocking
+    /// fallback and speculation never starts. `None` uses the pool's
+    /// configured [`RetrievalConfig::stages`].
+    pub stages: Option<usize>,
 }
 
 /// One completed retrieval stage, pushed into the engine's event loop.
@@ -80,6 +87,10 @@ pub struct RetrievalService {
     tx: Option<mpsc::Sender<RetrievalTask>>,
     handles: Vec<JoinHandle<()>>,
     stop: Arc<AtomicBool>,
+    /// Sessions whose searches were aborted (shed while retrieving):
+    /// workers stop emitting stages for them at the next stage
+    /// boundary. Entries clear when the owning worker observes them.
+    cancelled: Arc<Mutex<HashSet<u64>>>,
 }
 
 impl RetrievalService {
@@ -94,12 +105,14 @@ impl RetrievalService {
         let rx = Arc::new(Mutex::new(rx));
         let stop = Arc::new(AtomicBool::new(false));
         let stages = cfg.stages.max(1);
+        let cancelled = Arc::new(Mutex::new(HashSet::new()));
         let mut handles = Vec::new();
         for _ in 0..cfg.threads.max(1) {
             let rx = Arc::clone(&rx);
             let index = Arc::clone(&index);
             let events = events.clone();
             let stop = Arc::clone(&stop);
+            let cancelled = Arc::clone(&cancelled);
             let pace = cfg.stage_latency;
             handles.push(std::thread::spawn(move || loop {
                 let task = {
@@ -114,12 +127,15 @@ impl RetrievalService {
                         let snaps = index.staged_search(
                             &t.query,
                             t.top_k,
-                            stages,
+                            t.stages.unwrap_or(stages).max(1),
                         );
                         let total = snaps.len();
                         for (s, snap) in snaps.into_iter().enumerate() {
                             if stop.load(Ordering::SeqCst) {
                                 return;
+                            }
+                            if take_cancel(&cancelled, t.session) {
+                                break; // session shed: stop emitting
                             }
                             if !pace.is_zero() {
                                 std::thread::sleep(pace);
@@ -154,7 +170,20 @@ impl RetrievalService {
             tx: Some(tx),
             handles,
             stop,
+            cancelled,
         }
+    }
+
+    /// Abort a session's staged search: its worker stops emitting at the
+    /// next stage boundary. Safe to call for sessions that already
+    /// finished (the stale-session check engine-side drops any stages
+    /// that raced past the cancellation).
+    pub fn cancel(&self, session: u64) {
+        let mut guard = match self.cancelled.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        guard.insert(session);
     }
 
     /// Enqueue a staged search. Returns false once the pool has shut
@@ -165,6 +194,18 @@ impl RetrievalService {
             None => false,
         }
     }
+}
+
+/// Check-and-clear a session's cancellation mark. Session ids are never
+/// reused, so an entry that outlives its task (cancel raced past the
+/// final stage) is inert — it can never suppress a future search — and
+/// is swept here the moment any worker observes it.
+fn take_cancel(set: &Mutex<HashSet<u64>>, session: u64) -> bool {
+    let mut guard = match set.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    guard.remove(&session)
 }
 
 impl Drop for RetrievalService {
@@ -208,6 +249,7 @@ mod tests {
             session: 7,
             query: q.clone(),
             top_k: 3,
+            stages: None,
         }));
         let mut got = Vec::new();
         for _ in 0..4 {
@@ -252,6 +294,7 @@ mod tests {
                 session,
                 query: idx_query(&idx, session as u32),
                 top_k: 2,
+                stages: None,
             }));
         }
         let mut last_stage: std::collections::HashMap<u64, usize> =
@@ -275,6 +318,77 @@ mod tests {
                 finals += 1;
             }
         }
+        drop(svc);
+    }
+
+    /// The ladder's Downgrade: a `stages: Some(1)` task emits exactly
+    /// one event and it is already final, regardless of the pool's
+    /// configured stage count.
+    #[test]
+    fn single_stage_override_is_immediately_final() {
+        let idx = index(200, 8);
+        let (tx, rx) = mpsc::channel();
+        let svc = RetrievalService::spawn(
+            Arc::clone(&idx),
+            RetrievalConfig {
+                threads: 1,
+                stages: 4,
+                stage_latency: Duration::ZERO,
+            },
+            tx,
+        );
+        let q = idx_query(&idx, 5);
+        assert!(svc.submit(RetrievalTask {
+            session: 11,
+            query: q.clone(),
+            top_k: 3,
+            stages: Some(1),
+        }));
+        let ev = rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("stage event");
+        assert_eq!(ev.stage, 0);
+        assert_eq!(ev.stages, 1);
+        assert!(ev.is_final);
+        let direct: Vec<u32> =
+            idx.search(&q, 3).iter().map(|h| h.1).collect();
+        assert_eq!(ev.docs, direct, "single stage scans the full index");
+        assert!(rx.recv_timeout(Duration::from_millis(100)).is_err());
+        drop(svc);
+    }
+
+    /// A cancelled session stops emitting at the next stage boundary.
+    #[test]
+    fn cancel_stops_stage_emission() {
+        let idx = index(200, 8);
+        let (tx, rx) = mpsc::channel();
+        let svc = RetrievalService::spawn(
+            Arc::clone(&idx),
+            RetrievalConfig {
+                threads: 1,
+                stages: 4,
+                stage_latency: Duration::from_millis(40),
+            },
+            tx,
+        );
+        assert!(svc.submit(RetrievalTask {
+            session: 3,
+            query: idx_query(&idx, 9),
+            top_k: 2,
+            stages: None,
+        }));
+        let first = rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("stage 0");
+        assert_eq!(first.stage, 0);
+        svc.cancel(3);
+        // Drain anything that raced past the cancel; no final stage may
+        // arrive (the worker breaks before emitting it).
+        let mut saw_final = false;
+        while let Ok(ev) = rx.recv_timeout(Duration::from_millis(300)) {
+            saw_final |= ev.is_final;
+        }
+        assert!(!saw_final, "cancelled search must not complete");
         drop(svc);
     }
 

@@ -516,6 +516,56 @@ impl<W> SessionTable<W> {
         true
     }
 
+    /// Admission-control shedding (the real-path ladder): fail every
+    /// session whose TTFT deadline (`submitted_at + slo`) has expired
+    /// while it is still pre-admission — Submitted, Retrieving or
+    /// SpeculativePrefill. Admitted/Prefilled/Decoding sessions are
+    /// always graced, mirroring the simulator's rule that a prefill the
+    /// engine already accepted is never torn down.
+    ///
+    /// Returns `(id, spec_work)` per shed session; the caller must
+    /// release the pinned admission inside any returned work and abort
+    /// the session's staged retrieval. Each shed session gets exactly
+    /// one `Failed` terminal event (after a `SpecCancelled` if a
+    /// speculation was live).
+    pub fn shed_expired(
+        &mut self,
+        now: f64,
+        slo: f64,
+    ) -> Vec<(SessionId, Option<SpecWork<W>>)> {
+        let expired: Vec<SessionId> = self
+            .sessions
+            .values()
+            .filter(|s| {
+                matches!(
+                    s.phase,
+                    SessionPhase::Submitted
+                        | SessionPhase::Retrieving { .. }
+                        | SessionPhase::SpeculativePrefill { .. }
+                ) && now - s.submitted_at > slo
+            })
+            .map(|s| s.id)
+            .collect();
+        let mut shed = Vec::with_capacity(expired.len());
+        for id in expired {
+            let mut work = None;
+            if let Some(s) = self.sessions.get_mut(&id) {
+                if let Some(w) = s.spec_work.take() {
+                    self.active_specs -= 1;
+                    s.spec.cancel_active();
+                    self.events.push_back(SessionEvent::SpecCancelled {
+                        session: id,
+                        generation: w.generation,
+                    });
+                    work = Some(w);
+                }
+            }
+            self.fail(id, "shed: TTFT SLO expired before admission".into());
+            shed.push((id, work));
+        }
+        shed
+    }
+
     /// Tear down every live session (engine shutdown): hands back all
     /// live speculative work so the caller can release its pins, and
     /// emits a `Failed` terminal for each.
@@ -680,6 +730,45 @@ mod tests {
         let step = t.on_stage(9, 1, &[1], true);
         assert!(step.finish.is_none(), "finished session ignores stages");
         assert_eq!(t.terminals(), 1);
+    }
+
+    #[test]
+    fn shed_expired_graces_admitted_and_returns_spec_work() {
+        let mut t: SessionTable<u32> = SessionTable::new(4);
+        // Session 1: still retrieving, expired → shed.
+        t.submit(1, 0.0);
+        // Session 2: live speculation, expired → shed, work handed back.
+        t.submit(2, 0.0);
+        let step = t.on_stage(2, 0, &[5], false);
+        t.spec_started(2, step.start.unwrap(), 77);
+        // Session 3: already Admitted (final stage in) → graced.
+        t.submit(3, 0.0);
+        let step = t.on_stage(3, 0, &[6], true);
+        assert!(matches!(step.finish, Some(FinishPath::Fallback)));
+        // Session 4: fresh (within SLO) → kept.
+        t.submit(4, 9.9);
+        let shed = t.shed_expired(10.0, 5.0);
+        let ids: Vec<SessionId> = shed.iter().map(|&(id, _)| id).collect();
+        assert_eq!(shed.len(), 2);
+        assert!(ids.contains(&1) && ids.contains(&2));
+        let work = shed
+            .iter()
+            .find(|&&(id, _)| id == 2)
+            .and_then(|(_, w)| w.as_ref())
+            .expect("session 2's spec work handed back");
+        assert_eq!(work.payload, 77);
+        assert_eq!(t.active_specs(), 0);
+        assert_eq!(t.in_flight(), 2, "sessions 3 and 4 survive");
+        assert_eq!(t.terminals(), 2);
+        // Repeat at the same clock: nothing left to shed.
+        assert!(t.shed_expired(10.0, 5.0).is_empty());
+        let events = t.take_events();
+        assert_eq!(
+            events.iter().filter(|e| e.is_terminal()).count(),
+            2,
+            "exactly one terminal per shed session"
+        );
+        assert_eq!(t.totals().wasted, 1);
     }
 
     #[test]

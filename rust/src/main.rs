@@ -52,6 +52,15 @@ commands:
                                 default off = PR 5 path, bit-identical)
              [--boundary-tokens R] (tokens re-prefilled per chunk hit,
                                 default 8)
+             [--shed on|off]   (SLO admission control on the real path:
+                                queue waits measured at reorder-queue
+                                pop feed a delay EWMA — downgrade new
+                                admissions to single-stage retrieval
+                                under pressure, shed requests queued
+                                past the TTFT SLO; default off =
+                                bit-identical to the unshedded path)
+             [--ttft-slo S]    (TTFT SLO seconds for --shed on and the
+                                goodput/attainment stats, default 5.0)
   simulate   --system ragcache|vllm|sglang --dataset mmlu --rate 0.8
              --requests 500 [--config FILE] [--model NAME] [--seed N]
              [--shards K] [--rebalance on|off] [--rebalance-interval N]
@@ -171,6 +180,18 @@ impl QueryHandler for RealHandler {
         self.server.serve_proto_batch(batch, &self.tok, &self.cfg)
     }
 
+    /// Wait-aware batched entry: the engine loop's measured queue waits
+    /// feed the `--shed on` admission-control ladder (inert — identical
+    /// to `query_batch` — with `--shed off`).
+    fn query_batch_timed(
+        &mut self,
+        batch: &[(u32, String, usize)],
+        waits: &[f64],
+    ) -> Vec<Result<proto::QueryResult>> {
+        self.server
+            .serve_proto_batch_timed(batch, waits, &self.tok, &self.cfg)
+    }
+
     /// Non-blocking entry (the `--speculate on` engine loop): start a
     /// session whose staged retrieval runs on the server's thread pool;
     /// the result streams back through `poll_sessions`.
@@ -187,6 +208,28 @@ impl QueryHandler for RealHandler {
             target_doc,
             query,
             max_new,
+            &self.tok,
+            &self.cfg,
+        )
+    }
+
+    /// Wait-aware session submit: a request queued past the TTFT SLO is
+    /// shed here (`Some(Err(..))`) without opening a session.
+    fn submit_session_timed(
+        &mut self,
+        ticket: u64,
+        target_doc: u32,
+        query: &str,
+        max_new: usize,
+        wait: f64,
+    ) -> Option<Result<proto::QueryResult>> {
+        self.bridge.submit_timed(
+            &mut self.server,
+            ticket,
+            target_doc,
+            query,
+            max_new,
+            wait,
             &self.tok,
             &self.cfg,
         )
@@ -325,6 +368,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "--boundary-tokens must be >= 1 with --chunk-cache on"
         ));
     }
+    let shed = match args.get_or("shed", "off") {
+        "on" => true,
+        "off" => false,
+        other => {
+            return Err(anyhow!("--shed expects on|off, got '{other}'"))
+        }
+    };
+    let default_slo = RealConfig::default().ttft_slo_s;
+    let ttft_slo_s: f64 = args
+        .get_parse_or("ttft-slo", default_slo)
+        .map_err(|e| anyhow!(e))?;
+    if shed && !(ttft_slo_s > 0.0) {
+        return Err(anyhow!(
+            "--ttft-slo must be > 0 with --shed on, got {ttft_slo_s}"
+        ));
+    }
     if shards < engines.max(1) {
         // Engines drain shards routed shard % engines: with fewer
         // shards than engines the surplus engines would each load a
@@ -349,6 +408,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         spec_pool: max_batch,
         chunk_cache,
         boundary_tokens,
+        shed,
+        ttft_slo_s,
         ..RealConfig::default()
     };
     // One sharded cache service shared by every engine replica, the
@@ -450,11 +511,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "ragcache serving on {} ({docs} docs, {workers} connection \
          workers, {engines} engines, {shards} tree shards, \
          {max_batch}-request admission batches, speculation {}, \
-         rebalancing {}, chunk cache {})",
+         rebalancing {}, chunk cache {}, admission control {})",
         server.addr,
         if speculate { "on" } else { "off" },
         if rebalance { "on" } else { "off" },
-        if chunk_cache { "on" } else { "off" }
+        if chunk_cache { "on" } else { "off" },
+        if shed {
+            format!("on (TTFT SLO {ttft_slo_s}s)")
+        } else {
+            "off".to_string()
+        }
     );
     println!("protocol: newline-delimited JSON; ops: query/stats/shutdown");
     // Block until the acceptor thread exits (shutdown op).

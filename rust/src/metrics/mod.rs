@@ -437,6 +437,39 @@ mod tests {
         assert_eq!(r.goodput(0.0), 0.0);
     }
 
+    /// Degenerate-input regression: the wire stats divide by the trace
+    /// horizon, so an empty trace and a zero-span trace (every event at
+    /// one instant — horizon 0) must both report 0.0, never inf or NaN.
+    /// The TCP `stats` op serves these shapes routinely (stats polled
+    /// before any request, or after exactly one instantaneous one).
+    #[test]
+    fn goodput_degenerate_traces_report_zero() {
+        let empty = Recorder::new();
+        assert_eq!(empty.goodput(1.0), 0.0);
+        assert_eq!(empty.slo_attainment(1.0), 0.0);
+        assert_eq!(empty.horizon(), 0.0);
+        assert_eq!(empty.throughput(), 0.0);
+
+        // One request arriving, serving and finishing at t=0: a "good"
+        // completion exists but the horizon is zero — good/span would
+        // be 1/0 = inf without the guard.
+        let mut r = Recorder::new();
+        r.arrival(0, 0.0);
+        r.first_token(0, 0.0);
+        r.finished(0, 0.0);
+        assert_eq!(r.goodput(1.0), 0.0);
+        assert!(r.goodput(1.0).is_finite());
+        assert!((r.slo_attainment(1.0) - 1.0).abs() < 1e-12);
+
+        // Shed-only trace at one instant: zero horizon again, and the
+        // attainment denominator counts the shed request.
+        let mut s = Recorder::new();
+        s.arrival(0, 3.0);
+        s.shed(0, 3.0);
+        assert_eq!(s.goodput(1.0), 0.0);
+        assert_eq!(s.slo_attainment(1.0), 0.0);
+    }
+
     #[test]
     fn per_tenant_sums_to_aggregate() {
         let mut r = Recorder::new();

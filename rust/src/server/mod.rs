@@ -16,6 +16,17 @@
 //!                         starvation bound hold per engine)
 //!                                 │              │              │
 //!                                 ▼ pop_batch    ▼ pop_batch    ▼
+//!                       ┌─ admission-control ladder (`--shed on`) ─┐
+//!                       │ each pop stamps the member's queue wait  │
+//!                       │ (pop wall clock − arrival) and hands it  │
+//!                       │ to the handler via query_batch_timed /   │
+//!                       │ submit_session_timed; the RealServer     │
+//!                       │ ladder (controller::pipeline::ShedLadder)│
+//!                       │ EWMAs the waits, downgrades new          │
+//!                       │ admissions to single-stage retrieval,    │
+//!                       │ sheds members queued past the TTFT SLO.  │
+//!                       │ `--shed off`: waits ignored, bit-exact   │
+//!                       └───────────────────────────────────────────┘
 //!                             engine 0       engine 1  …    engine M-1
 //!                        (each engine-driver thread owns its own
 //!                         QueryHandler. Blocking mode — `--speculate
@@ -135,6 +146,35 @@ pub trait QueryHandler {
                 self.query(*doc, query, *max_new)
             })
             .collect()
+    }
+
+    /// [`QueryHandler::query_batch`] plus each member's reorder-queue
+    /// wait (seconds between queue entry and this pop). Handlers with
+    /// SLO admission control override this to feed the waits into their
+    /// shed ladder (e.g.
+    /// [`crate::controller::real::RealServer::serve_batch_timed`]); the
+    /// default ignores the waits, so plain handlers are unaffected.
+    fn query_batch_timed(
+        &mut self,
+        batch: &[(u32, String, usize)],
+        waits: &[f64],
+    ) -> Vec<Result<proto::QueryResult>> {
+        let _ = waits;
+        self.query_batch(batch)
+    }
+
+    /// [`QueryHandler::submit_session`] plus the request's reorder-queue
+    /// wait, for the session multiplexer. Default ignores the wait.
+    fn submit_session_timed(
+        &mut self,
+        ticket: u64,
+        target_doc: u32,
+        query: &str,
+        max_new: usize,
+        wait: f64,
+    ) -> Option<Result<proto::QueryResult>> {
+        let _ = wait;
+        self.submit_session(ticket, target_doc, query, max_new)
     }
 
     /// Aggregate stats line. Contract for multi-engine deployments
@@ -373,6 +413,7 @@ impl Server {
                     max_batch,
                     batch_tokens,
                     speculate,
+                    started,
                 );
             }));
         }
@@ -441,6 +482,7 @@ fn accept_loop(
     shutdown.store(true, Ordering::SeqCst);
 }
 
+#[allow(clippy::too_many_arguments)]
 fn engine_loop<H, F>(
     engine: usize,
     factory: &F,
@@ -449,6 +491,7 @@ fn engine_loop<H, F>(
     max_batch: usize,
     batch_tokens: usize,
     speculate: bool,
+    started: Instant,
 ) where
     H: QueryHandler,
     F: Fn(usize) -> Result<H>,
@@ -489,20 +532,24 @@ fn engine_loop<H, F>(
             shutdown,
             max_batch,
             batch_tokens,
+            started,
         );
         return;
     }
     // Answer a contiguous run of queries through the handler's batched
-    // entry point, pairing each response channel by position.
+    // entry point, pairing each response channel by position. The
+    // members' measured reorder-queue waits travel alongside so an
+    // SLO-aware handler can feed its admission-control ladder.
     fn flush_queries<H: QueryHandler>(
         handler: &mut H,
         queries: &mut Vec<(u32, String, usize)>,
+        waits: &mut Vec<f64>,
         resps: &mut Vec<mpsc::Sender<Response>>,
     ) {
         if queries.is_empty() {
             return;
         }
-        let results = handler.query_batch(queries);
+        let results = handler.query_batch_timed(queries, waits);
         debug_assert_eq!(
             results.len(),
             queries.len(),
@@ -519,6 +566,7 @@ fn engine_loop<H, F>(
             let _ = resp.send(response);
         }
         queries.clear();
+        waits.clear();
     }
     loop {
         let popped = jobs.pop_batch_timeout(
@@ -547,21 +595,31 @@ fn engine_loop<H, F>(
         // reordering, a stats job's infinite priority pops it at the
         // batch front anyway).
         let mut queries: Vec<(u32, String, usize)> = Vec::new();
+        let mut waits: Vec<f64> = Vec::new();
         let mut query_resp: Vec<mpsc::Sender<Response>> = Vec::new();
-        for (_pending, job) in popped {
+        for (pending, job) in popped {
             match job.req {
                 Request::Query {
                     target_doc,
                     query,
                     max_new,
                 } => {
+                    // Queue wait measured at pop time: pop wall clock
+                    // minus the arrival stamp the connection worker
+                    // recorded at push (both on the server's `started`
+                    // clock).
+                    let wait = (started.elapsed().as_secs_f64()
+                        - pending.arrival)
+                        .max(0.0);
                     queries.push((target_doc, query, max_new));
+                    waits.push(wait);
                     query_resp.push(job.resp);
                 }
                 Request::Stats => {
                     flush_queries(
                         &mut handler,
                         &mut queries,
+                        &mut waits,
                         &mut query_resp,
                     );
                     let _ = job.resp.send(Response::Stats(handler.stats()));
@@ -573,7 +631,7 @@ fn engine_loop<H, F>(
                 }
             }
         }
-        flush_queries(&mut handler, &mut queries, &mut query_resp);
+        flush_queries(&mut handler, &mut queries, &mut waits, &mut query_resp);
     }
 }
 
@@ -603,6 +661,7 @@ fn engine_loop_sessions<H: QueryHandler>(
     shutdown: &AtomicBool,
     max_batch: usize,
     batch_tokens: usize,
+    started: Instant,
 ) {
     let mut waiters: HashMap<u64, mpsc::Sender<Response>> = HashMap::new();
     let mut next_ticket = 0u64;
@@ -622,7 +681,7 @@ fn engine_loop_sessions<H: QueryHandler>(
             )
         };
         let drained_empty = popped.is_empty();
-        for (_pending, job) in popped {
+        for (pending, job) in popped {
             match job.req {
                 Request::Query {
                     target_doc,
@@ -631,11 +690,18 @@ fn engine_loop_sessions<H: QueryHandler>(
                 } => {
                     let ticket = next_ticket;
                     next_ticket += 1;
-                    match handler.submit_session(
+                    // Same pop-time queue-wait measurement as the
+                    // blocking loop; SLO-aware handlers shed or
+                    // downgrade the submit based on it.
+                    let wait = (started.elapsed().as_secs_f64()
+                        - pending.arrival)
+                        .max(0.0);
+                    match handler.submit_session_timed(
                         ticket,
                         target_doc,
                         &query,
                         max_new,
+                        wait,
                     ) {
                         Some(result) => {
                             let _ =
@@ -805,15 +871,43 @@ fn route_engine(
 /// tree once per engine.
 fn merge_stats(parts: &[proto::StatsResult]) -> proto::StatsResult {
     let requests: usize = parts.iter().map(|p| p.requests).sum();
+    // Request-weighted mean over the engines that actually have a
+    // finite value. One engine reporting NaN (e.g. a mean over zero
+    // completions) must not poison the whole merged answer, and its
+    // requests must not dilute the weights of the engines that did
+    // measure — skip the part AND its weight.
     let weighted = |f: fn(&proto::StatsResult) -> f64| -> f64 {
-        if requests == 0 {
+        let (sum, weight) = parts
+            .iter()
+            .filter(|p| p.requests > 0 && f(p).is_finite())
+            .fold((0.0, 0usize), |(s, w), p| {
+                (s + f(p) * p.requests as f64, w + p.requests)
+            });
+        if weight == 0 {
             0.0
         } else {
-            parts
-                .iter()
-                .map(|p| f(p) * p.requests as f64)
-                .sum::<f64>()
-                / requests as f64
+            sum / weight as f64
+        }
+    };
+    // SLO attainment is only meaningful on engines that ran SLO
+    // admission control: a `--shed off` engine reports 0.0 with
+    // `slo_enabled: false`, and folding that zero in would misreport
+    // the measuring engines' attainment.
+    let slo_attainment = {
+        let (sum, weight) = parts
+            .iter()
+            .filter(|p| {
+                p.slo_enabled
+                    && p.requests > 0
+                    && p.slo_attainment.is_finite()
+            })
+            .fold((0.0, 0usize), |(s, w), p| {
+                (s + p.slo_attainment * p.requests as f64, w + p.requests)
+            });
+        if weight == 0 {
+            0.0
+        } else {
+            sum / weight as f64
         }
     };
     // Per-shard gauges come from ONE self-consistent engine snapshot —
@@ -893,7 +987,8 @@ fn merge_stats(parts: &[proto::StatsResult]) -> proto::StatsResult {
             .iter()
             .map(|p| p.downgraded_requests)
             .sum(),
-        slo_attainment: weighted(|p| p.slo_attainment),
+        slo_attainment,
+        slo_enabled: parts.iter().any(|p| p.slo_enabled),
     }
 }
 
@@ -1012,5 +1107,67 @@ impl Client {
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         proto::parse_response(&line)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn part(requests: usize) -> proto::StatsResult {
+        proto::StatsResult {
+            requests,
+            engines: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn merge_skips_nan_parts_without_diluting_weights() {
+        // Engine 0 measured nothing finishable: its recorder mean is
+        // NaN. Engine 1 measured 10ms over 10 requests. The merge must
+        // report 10ms — not NaN, and not 10ms diluted by engine 0's
+        // request count.
+        let mut a = part(30);
+        a.mean_ttft_ms = f64::NAN;
+        a.hit_rate = f64::NAN;
+        let mut b = part(10);
+        b.mean_ttft_ms = 10.0;
+        b.hit_rate = 0.5;
+        let m = merge_stats(&[a, b]);
+        assert_eq!(m.requests, 40);
+        assert_eq!(m.mean_ttft_ms, 10.0);
+        assert_eq!(m.hit_rate, 0.5);
+        assert!(!m.slo_enabled);
+    }
+
+    #[test]
+    fn merge_weights_attainment_only_over_slo_engines() {
+        // Engine a ran --shed off (slo_enabled false, attainment 0.0 is
+        // "not measured", not "0% attained"); engines b and c measured.
+        let mut a = part(1000);
+        a.slo_attainment = 0.0;
+        let mut b = part(10);
+        b.slo_enabled = true;
+        b.slo_attainment = 0.9;
+        let mut c = part(30);
+        c.slo_enabled = true;
+        c.slo_attainment = 0.5;
+        let m = merge_stats(&[a, b, c]);
+        assert!(m.slo_enabled);
+        let want = (0.9 * 10.0 + 0.5 * 30.0) / 40.0;
+        assert!((m.slo_attainment - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_of_empty_and_zero_request_parts_is_zeroed() {
+        let m = merge_stats(&[part(0), part(0)]);
+        assert_eq!(m.requests, 0);
+        assert_eq!(m.mean_ttft_ms, 0.0);
+        assert_eq!(m.slo_attainment, 0.0);
+        assert!(!m.slo_enabled);
+        let empty = merge_stats(&[]);
+        assert_eq!(empty.requests, 0);
+        assert_eq!(empty.engines, 0);
     }
 }

@@ -91,8 +91,13 @@ pub struct StatsResult {
     /// Arrivals downgraded (speculation disabled); summed.
     pub downgraded_requests: u64,
     /// Fraction of all requests meeting the TTFT SLO
-    /// (request-weighted in the merge).
+    /// (request-weighted in the merge, over engines that measured one).
     pub slo_attainment: f64,
+    /// Whether this engine ran SLO admission control (`--shed on`).
+    /// Distinguishes "no SLO measured" from "0% attained" — zeros in
+    /// the fields above are only meaningful when this is true. The
+    /// fan-out merge ORs it across engines.
+    pub slo_enabled: bool,
 }
 
 /// Server → client.
@@ -231,6 +236,7 @@ pub fn encode_response(resp: &Response) -> String {
                 Json::num(s.downgraded_requests as f64),
             ),
             ("slo_attainment", Json::num(s.slo_attainment)),
+            ("slo_enabled", Json::Bool(s.slo_enabled)),
         ]),
         Response::Ok => Json::obj(vec![("type", Json::str("ok"))]),
         Response::Error { message } => Json::obj(vec![
@@ -376,6 +382,10 @@ pub fn parse_response(line: &str) -> Result<Response> {
                 .get("slo_attainment")
                 .and_then(Json::as_f64)
                 .unwrap_or(0.0),
+            slo_enabled: v
+                .get("slo_enabled")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
         })),
         "ok" => Ok(Response::Ok),
         "error" => Ok(Response::Error {
@@ -447,6 +457,7 @@ mod tests {
                 shed_requests: 4,
                 downgraded_requests: 2,
                 slo_attainment: 0.9,
+                slo_enabled: true,
             }),
             Response::Ok,
             Response::Error {

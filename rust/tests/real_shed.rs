@@ -1,0 +1,313 @@
+//! Integration: SLO admission control on the REAL serving path — the
+//! shed ladder ported from the open-loop simulator to `RealServer`.
+//!
+//! Covers the PR's contract from both ends:
+//! - `--shed off` conformance: the timed entry points are bit-identical
+//!   to the untimed PR 7 path (PJRT-backed, skipped without artifacts);
+//! - deterministic shedding with exact `completed + shed == submitted`
+//!   accounting and zero leaked pins, in the blocking batch path AND
+//!   the session multiplexer;
+//! - the new wire-level SLO fields (`slo_enabled` + goodput/attainment)
+//!   parse and merge across engines over a real TCP round trip
+//!   (PJRT-free, runs everywhere).
+
+use ragcache::controller::real::{BatchRequest, RealConfig, RealServer};
+use ragcache::embed::EmbeddingModel;
+use ragcache::runtime::{ArtifactManifest, PjrtModel};
+use ragcache::server::{
+    proto, Client, QueryHandler, Server, ServerOptions,
+};
+use ragcache::util::Rng;
+use ragcache::vectordb::{FlatIndex, VectorIndex};
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+fn build_server(
+    num_docs: usize,
+    cfg: &RealConfig,
+) -> Option<RealServer> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let manifest = ArtifactManifest::load(&dir).unwrap();
+    let model =
+        PjrtModel::load(manifest.model("tiny-gqa").unwrap()).unwrap();
+    let mut rng = Rng::new(4);
+    let doc_tokens: Vec<Vec<i32>> = (0..num_docs)
+        .map(|_| (0..32).map(|_| rng.index(256) as i32).collect())
+        .collect();
+    let dim = 16;
+    let em = EmbeddingModel::new(dim, 8);
+    let vecs: Vec<Vec<f32>> =
+        (0..num_docs as u32).map(|d| em.document(d)).collect();
+    let index: Box<dyn VectorIndex> =
+        Box::new(FlatIndex::build(dim, &vecs));
+    Some(RealServer::new(model, index, em, doc_tokens, cfg).unwrap())
+}
+
+fn reqs(targets: &[u32]) -> Vec<BatchRequest> {
+    targets
+        .iter()
+        .map(|&t| BatchRequest {
+            target_doc: t,
+            query_tokens: (10..26).collect(),
+            max_new: 3,
+        })
+        .collect()
+}
+
+/// `--shed off` conformance: `serve_batch_timed` must be the PR 7
+/// `serve_batch`, bit for bit, no matter what waits ride along — the
+/// ladder stays disabled and never observes them.
+#[test]
+fn shed_off_timed_path_is_bit_identical() {
+    let cfg = RealConfig {
+        query_noise: 0.0,
+        ..RealConfig::default()
+    };
+    assert!(!cfg.shed, "off is the default");
+    let (Some(mut a), Some(mut b)) =
+        (build_server(24, &cfg), build_server(24, &cfg))
+    else {
+        return;
+    };
+    let batch = reqs(&[3, 7, 3, 11]);
+    let waits = [0.0, 123.0, 4.5, 9999.0]; // ignored with shed off
+    let plain = a.serve_batch(&batch, &cfg);
+    let timed = b.serve_batch_timed(&batch, &waits, &cfg);
+    assert_eq!(plain.len(), timed.len());
+    for (p, t) in plain.iter().zip(timed.iter()) {
+        let (p, t) = (p.as_ref().unwrap(), t.as_ref().unwrap());
+        assert_eq!(p.docs, t.docs);
+        assert_eq!(p.output_tokens, t.output_tokens);
+        assert_eq!(p.cached_tokens, t.cached_tokens);
+        assert_eq!(p.computed_tokens, t.computed_tokens);
+        assert_eq!(p.docs_hit, t.docs_hit);
+    }
+    for s in [a.proto_stats(), b.proto_stats()] {
+        assert!(!s.slo_enabled, "off path must say so on the wire");
+        assert_eq!(s.shed_requests, 0);
+        assert_eq!(s.downgraded_requests, 0);
+        assert_eq!(s.goodput_rps, 0.0);
+        assert_eq!(s.slo_attainment, 0.0);
+        assert_eq!(s.requests, 4);
+        // p99.9 TTFT is a pure measurement: reported even with the
+        // ladder off (the old wire path zero-filled it).
+        assert!(s.ttft_p999_ms > 0.0);
+    }
+}
+
+/// Blocking path: members whose measured queue wait already exceeds the
+/// TTFT SLO are shed deterministically — exact accounting, no pins left
+/// behind, and the wire stats report the ladder's work end to end.
+#[test]
+fn blocking_shed_exact_accounting_no_leaked_pins() {
+    let cfg = RealConfig {
+        query_noise: 0.0,
+        shed: true,
+        ttft_slo_s: 30.0,
+        ..RealConfig::default()
+    };
+    let Some(mut server) = build_server(24, &cfg) else {
+        return;
+    };
+    let batch = reqs(&[2, 5, 8, 2, 9]);
+    // Members 1 and 3 were queued past the 30 s SLO; the rest were
+    // popped immediately. Deterministic: shedding keys off the supplied
+    // wait, not off wall-clock races.
+    let waits = [0.0, 31.0, 0.0, 40.0, 0.0];
+    let results = server.serve_batch_timed(&batch, &waits, &cfg);
+    assert_eq!(results.len(), 5);
+    for (i, r) in results.iter().enumerate() {
+        if waits[i] > cfg.ttft_slo_s {
+            let msg = r.as_ref().err().expect("expired member sheds");
+            assert!(msg.to_string().contains("shed"), "{msg}");
+        } else {
+            assert!(r.is_ok(), "unexpired member serves: {r:?}");
+        }
+    }
+    let stats = server.stats();
+    assert_eq!(stats.requests, 5, "shed members are still recorded");
+    assert_eq!(stats.shed_requests, 2);
+    assert!(stats.slo_enabled);
+    // 3 completions + 2 sheds == 5 submitted, exactly.
+    let completed =
+        results.iter().filter(|r| r.is_ok()).count() as u64;
+    assert_eq!(completed + stats.shed_requests, 5);
+    // Shed members never touched admission; served members released
+    // their pins at commit. Nothing may remain pinned.
+    assert_eq!(server.cache().pinned_nodes(), 0, "leaked pins");
+    server.cache().check_invariants();
+    let wire = server.proto_stats();
+    assert!(wire.slo_enabled);
+    assert_eq!(wire.shed_requests, 2);
+    assert!(wire.goodput_rps > 0.0, "served-in-SLO over the horizon");
+    assert!(wire.slo_attainment > 0.0);
+    assert!(wire.slo_attainment < 1.0, "sheds miss the SLO");
+}
+
+/// Session multiplexer: a session whose TTFT deadline expires while the
+/// staged search is still running is shed by `poll_sessions` — its
+/// staged retrieval cancelled, any speculation pins released — exactly
+/// like the sim path's `DeadlineExpired`.
+#[test]
+fn session_shed_on_slow_retrieval_releases_everything() {
+    let cfg = RealConfig {
+        query_noise: 0.0,
+        speculate: true,
+        stages: 4,
+        retrieval_threads: 1,
+        // 4 stages x 250 ms: the final stage lands ~1 s after submit,
+        // far past the 300 ms SLO — every session must shed, some after
+        // stage 0 already started a speculative prefill.
+        stage_latency_s: 0.25,
+        shed: true,
+        ttft_slo_s: 0.3,
+        ..RealConfig::default()
+    };
+    let Some(mut server) = build_server(24, &cfg) else {
+        return;
+    };
+    let mut ids = Vec::new();
+    for r in reqs(&[4, 9, 4]) {
+        ids.push(server.submit_timed(&r, 0.0, &cfg).unwrap());
+    }
+    let mut done = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while done.len() < ids.len() && Instant::now() < deadline {
+        done.extend(server.poll_sessions(Duration::from_millis(20), &cfg));
+    }
+    assert_eq!(done.len(), 3, "every session answers");
+    for (id, r) in &done {
+        let msg = r.as_ref().err().expect("expired session sheds");
+        assert!(msg.to_string().contains("shed"), "session {id}: {msg}");
+    }
+    let stats = server.stats();
+    assert_eq!(stats.shed_requests, 3);
+    assert_eq!(stats.requests, 3);
+    assert_eq!(server.in_flight_sessions(), 0);
+    assert_eq!(server.cache().pinned_nodes(), 0, "leaked pins");
+    server.cache().check_invariants();
+
+    // Second server, same ladder but a feasible SLO: sessions complete,
+    // nothing sheds, and the SLO wire fields are live (non-zero goodput
+    // and attainment with `slo_enabled`).
+    let cfg2 = RealConfig {
+        query_noise: 0.0,
+        speculate: true,
+        shed: true,
+        ttft_slo_s: 30.0,
+        ..RealConfig::default()
+    };
+    let Some(mut ok_server) = build_server(24, &cfg2) else {
+        return;
+    };
+    let results = ok_server.serve_batch_timed(
+        &reqs(&[6, 12]),
+        &[0.0, 0.0],
+        &cfg2,
+    );
+    assert!(results.iter().all(|r| r.is_ok()), "{results:?}");
+    let wire = ok_server.proto_stats();
+    assert!(wire.slo_enabled);
+    assert_eq!(wire.shed_requests, 0);
+    assert!(wire.goodput_rps > 0.0);
+    assert!((wire.slo_attainment - 1.0).abs() < 1e-9);
+    assert_eq!(ok_server.cache().pinned_nodes(), 0);
+}
+
+/// Mock engine that answers `Stats` with a preset report — lets the
+/// wire/merge assertions run PJRT-free.
+struct SloStatsHandler {
+    stats: proto::StatsResult,
+}
+
+impl QueryHandler for SloStatsHandler {
+    fn query(
+        &mut self,
+        target_doc: u32,
+        _query: &str,
+        max_new: usize,
+    ) -> anyhow::Result<proto::QueryResult> {
+        Ok(proto::QueryResult {
+            id: 1,
+            docs: vec![target_doc],
+            docs_hit: 0,
+            cached_tokens: 0,
+            computed_tokens: max_new,
+            ttft_ms: 1.0,
+            total_ms: 1.0,
+            text: String::new(),
+        })
+    }
+
+    fn stats(&self) -> proto::StatsResult {
+        self.stats.clone()
+    }
+}
+
+/// The new SLO fields survive a real TCP round trip and merge correctly
+/// across engines: shed/downgrade/goodput counters sum, p99.9 TTFT
+/// max-merges, `slo_enabled` ORs, and attainment is weighted ONLY over
+/// engines that measured an SLO — a ladder-off engine's (meaningless)
+/// attainment can no longer read as "0% attained" and dilute the fleet.
+#[test]
+fn slo_fields_roundtrip_and_merge_over_tcp() {
+    let opts = ServerOptions {
+        engines: 2,
+        ..ServerOptions::default()
+    };
+    let server = Server::spawn_sharded(0, opts, |engine| {
+        Ok(SloStatsHandler {
+            stats: if engine == 0 {
+                // Ladder-off engine. Its attainment slot holds junk on
+                // purpose: `slo_enabled: false` must gate it out of the
+                // merge entirely (the old wire format had no such flag
+                // and zero-filled everything).
+                proto::StatsResult {
+                    requests: 10,
+                    slo_enabled: false,
+                    slo_attainment: 0.25,
+                    ..Default::default()
+                }
+            } else {
+                proto::StatsResult {
+                    requests: 30,
+                    goodput_rps: 1.5,
+                    ttft_p999_ms: 250.0,
+                    shed_requests: 4,
+                    downgraded_requests: 2,
+                    slo_attainment: 0.8,
+                    slo_enabled: true,
+                    ..Default::default()
+                }
+            },
+        })
+    })
+    .expect("spawn");
+    let mut client = Client::connect(server.addr).unwrap();
+    match client.call(&proto::Request::Stats).unwrap() {
+        proto::Response::Stats(s) => {
+            assert_eq!(s.engines, 2, "both engines answered");
+            assert_eq!(s.requests, 40);
+            assert!(s.slo_enabled, "one SLO engine flips the flag");
+            assert_eq!(s.shed_requests, 4, "summed");
+            assert_eq!(s.downgraded_requests, 2, "summed");
+            assert!((s.goodput_rps - 1.5).abs() < 1e-9, "summed");
+            assert!(
+                (s.ttft_p999_ms - 250.0).abs() < 1e-9,
+                "max-merged"
+            );
+            assert!(
+                (s.slo_attainment - 0.8).abs() < 1e-9,
+                "weighted only over SLO-measuring engines, \
+                 got {}",
+                s.slo_attainment
+            );
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    server.stop();
+}

@@ -519,6 +519,7 @@ fn run_ttft_mode(
                 session: id,
                 query: em.document(t),
                 top_k: 1,
+                stages: None,
             }));
             'drive: loop {
                 let ev: StageReady =
