@@ -85,6 +85,39 @@ done
 echo "== chunk-cache reuse comparison =="
 cargo run --release --example serving_matrix -- --compare-chunk-cache
 
+# NVMe disk tier: the conformance / round-trip / interleaving suite
+# under --release (the randomized three-tier hammering wants fast
+# schedules), then the functional matrix swept across
+# --disk {off,on} x --cag {off,auto} (off/off must stay bit-identical
+# to the two-tier path; cag auto requires the chunk cache and serves
+# the pre-staged corpus without tree inserts).
+echo "== disk tier suite (--release) =="
+cargo test --release --test disk_tier -q
+echo "== disk/CAG serving sweep =="
+for d in off on; do
+    for g in off auto; do
+        cc=off
+        if [ "$g" = auto ]; then cc=on; fi
+        echo "-- serving_matrix --workers 4 --engines 2 --disk $d --cag $g --chunk-cache $cc --"
+        cargo run --release --example serving_matrix -- \
+            --workers 4 --engines 2 --disk "$d" --cag "$g" \
+            --chunk-cache "$cc"
+    done
+done
+
+# Disk-tier gate: on a Zipfian stream that thrashes the host tier,
+# disk-on must strictly reduce the recompute+transfer TTFT proxy with
+# restage hits > 0; on a stream that fits in GPU+host it must not lose.
+echo "== disk-tier TTFT comparison =="
+cargo run --release --example serving_matrix -- --compare-disk
+
+# CAG corpus-pinning gate (discrete-event sim): under a pin budget
+# sized to the smaller tenant's corpus, exactly one tenant pins, every
+# one of its requests completes with zero retrieval stages, and its
+# mean TTFT strictly beats the same tenant served as cached-RAG.
+echo "== CAG corpus-pinning comparison =="
+cargo run --release --example serving_matrix -- --compare-cag
+
 # Regression benches: emit BENCH_serving (wall-clock serving bench) and
 # BENCH_reordering (virtual-clock fig18 matrix + chunk ablation), then
 # diff both against the committed bench_baselines/ within per-column

@@ -12,10 +12,15 @@
 //!   counters are deterministic at fixed seed, so drift there is a
 //!   real behaviour change.
 //!
+//! Column sets must match EXACTLY in both directions: a column the
+//! fresh report dropped is a regression, and a column the baseline has
+//! never heard of is an emitter change that silently escapes the diff
+//! — both are explicit failures, never skipped.
+//!
 //! A baseline whose top level carries `"provisional": true` has not
 //! been pinned on real hardware yet: the differ validates that the
-//! fresh report parses and has the baseline's columns, prints how to
-//! pin it, and passes. Exits non-zero on any band violation.
+//! fresh report parses and matches the baseline's column set, prints
+//! how to pin it, and passes. Exits non-zero on any band violation.
 //!
 //! Run: `cargo run --release --example bench_diff -- --name BENCH_serving`
 
@@ -84,20 +89,32 @@ fn main() -> Result<()> {
         bail!("{out_path}: no rows emitted");
     }
 
+    // Column-set equality, both directions, before any value diffing:
+    // a missing column is a dropped measurement, an unknown column is
+    // an emitter change the baseline has never vetted — both must be
+    // explicit failures, not silently skipped cells.
+    let cols_of = |rows: &[BTreeMap<String, Json>]| {
+        rows.iter()
+            .flat_map(|r| r.keys().cloned())
+            .collect::<std::collections::BTreeSet<String>>()
+    };
+    let fresh_cols = cols_of(&fresh.rows);
+    let base_cols = cols_of(&base.rows);
+    let missing: Vec<&String> =
+        base_cols.difference(&fresh_cols).collect();
+    let unknown: Vec<&String> =
+        fresh_cols.difference(&base_cols).collect();
+    if !missing.is_empty() || !unknown.is_empty() {
+        bail!(
+            "{name}: column sets differ — fresh report is missing \
+             {missing:?}, baseline has never seen {unknown:?} (update \
+             bench_baselines/{name}.json deliberately)"
+        );
+    }
+
     if base.provisional {
-        // Schema check only: every baseline column must appear in the
-        // fresh rows, so the emitters and the baseline cannot drift
-        // silently while the numbers are still unpinned.
-        for brow in &base.rows {
-            for col in brow.keys() {
-                if !fresh.rows[0].contains_key(col) {
-                    bail!(
-                        "{out_path}: fresh report lacks baseline \
-                         column '{col}'"
-                    );
-                }
-            }
-        }
+        // Numbers are still unpinned: the column-set equality above is
+        // the whole schema check; value diffing waits for a pin.
         println!(
             "bench_diff {name}: baseline is provisional — schema OK, \
              numeric diff skipped.\nPin it with: cp {out_path} \
@@ -117,6 +134,13 @@ fn main() -> Result<()> {
     for (i, (frow, brow)) in
         fresh.rows.iter().zip(&base.rows).enumerate()
     {
+        for col in frow.keys() {
+            if !brow.contains_key(col) {
+                failures.push(format!(
+                    "row {i}: unknown column {col} not in baseline row"
+                ));
+            }
+        }
         for (col, bval) in brow {
             let Some(fval) = frow.get(col) else {
                 failures.push(format!("row {i}: missing column {col}"));

@@ -97,6 +97,22 @@ pub struct CacheConfig {
     pub chunk_cache: bool,
     /// `r`: boundary tokens re-prefilled per cross-position chunk hit.
     pub boundary_tokens: usize,
+    /// NVMe-backed third cache tier (`--disk on`): host evictions
+    /// demote to a slotted backing store instead of dropping, and
+    /// disk-resident KV is restaged host-ward on demand. `false` is
+    /// bit-identical to the two-tier path.
+    pub disk: bool,
+    /// Disk-tier capacity for KV caching, bytes.
+    pub disk_bytes: u64,
+    /// Fixed NVMe read latency per staged-read burst, seconds.
+    pub disk_latency_s: f64,
+    /// CAG-style per-tenant corpus pinning (`--cag auto`): tenants
+    /// whose whole corpus KV fits `cag_pin_bytes` are served
+    /// retrieval-free from pre-staged pinned chunk entries. Requires
+    /// the chunk cache.
+    pub cag: bool,
+    /// Pin budget the CAG admission greedily fills, bytes.
+    pub cag_pin_bytes: u64,
 }
 
 impl Default for CacheConfig {
@@ -116,6 +132,13 @@ impl Default for CacheConfig {
             rebalance_interval: 32,
             chunk_cache: false,
             boundary_tokens: 8,
+            disk: false,
+            // Paper-testbed-scale NVMe: a 1 TiB datacenter SSD share.
+            disk_bytes: 1024 * GIB,
+            disk_latency_s: 100e-6,
+            cag: false,
+            // Half the default GPU tier: pins stay a minority share.
+            cag_pin_bytes: 4 * GIB,
         }
     }
 }
@@ -382,6 +405,18 @@ impl SystemConfig {
                  (cross-position reuse always re-prefills a boundary)"
             );
         }
+        if self.cache.disk && self.cache.disk_bytes == 0 {
+            bail!("cache.disk_gib must be > 0 with the disk tier on");
+        }
+        if self.cache.disk && self.cache.disk_latency_s < 0.0 {
+            bail!("cache.disk_latency_s must be >= 0");
+        }
+        if self.cache.cag && !self.cache.chunk_cache {
+            bail!(
+                "cache.cag requires cache.chunk_cache (corpus pins are \
+                 position-independent chunk entries)"
+            );
+        }
         if self.workload.rate <= 0.0 {
             bail!("workload.rate must be > 0");
         }
@@ -473,6 +508,15 @@ fn apply_cache(c: &mut CacheConfig, v: &Json) -> Result<()> {
             }
             "chunk_cache" => c.chunk_cache = get_bool(val, k)?,
             "boundary_tokens" => c.boundary_tokens = get_usize(val, k)?,
+            "disk" => c.disk = get_bool(val, k)?,
+            "disk_gib" => {
+                c.disk_bytes = (get_f64(val, k)? * GIB as f64) as u64
+            }
+            "disk_latency_s" => c.disk_latency_s = get_f64(val, k)?,
+            "cag" => c.cag = get_bool(val, k)?,
+            "cag_pin_gib" => {
+                c.cag_pin_bytes = (get_f64(val, k)? * GIB as f64) as u64
+            }
             other => bail!("unknown cache key '{other}'"),
         }
     }
@@ -666,6 +710,29 @@ rate = 1.4
             SystemConfig::from_toml_str("[shed]\ndowngrade_frac = 1.5")
                 .is_err()
         );
+    }
+
+    #[test]
+    fn disk_and_cag_keys_parse() {
+        let doc = "[cache]\ndisk = true\ndisk_gib = 2\n\
+                   disk_latency_s = 0.0002\ncag = true\n\
+                   chunk_cache = true\ncag_pin_gib = 0.5";
+        let c = SystemConfig::from_toml_str(doc).unwrap();
+        assert!(c.cache.disk);
+        assert_eq!(c.cache.disk_bytes, 2 * GIB);
+        assert_eq!(c.cache.disk_latency_s, 0.0002);
+        assert!(c.cache.cag);
+        assert_eq!(c.cache.cag_pin_bytes, GIB / 2);
+        let d = SystemConfig::default();
+        assert!(!d.cache.disk, "disk tier off by default");
+        assert!(!d.cache.cag, "cag off by default");
+        // CAG without the chunk cache is rejected (corpus pins are
+        // chunk entries), as is an empty disk tier.
+        assert!(SystemConfig::from_toml_str("[cache]\ncag = true").is_err());
+        assert!(SystemConfig::from_toml_str(
+            "[cache]\ndisk = true\ndisk_gib = 0"
+        )
+        .is_err());
     }
 
     #[test]

@@ -109,12 +109,20 @@ impl BatchAdmission {
     }
 
     /// Close the batch and charge the coalesced burst ONCE through the
-    /// driver's link model, returning the burst seconds. Idempotent —
+    /// driver's link model, returning the burst seconds. With the disk
+    /// tier on, the members' restage reads coalesce the same way: one
+    /// staged-read burst per batch through
+    /// [`PipelineDriver::disk_read_time`], added beside the PCIe burst.
+    /// The disk term is guarded on `d2h > 0` so a disk-off batch's f64
+    /// charge stays bit-identical to the two-tier path. Idempotent —
     /// re-sealing never double-charges.
     pub fn seal(&mut self, driver: &dyn PipelineDriver) -> f64 {
         if self.sealed_time.is_none() {
-            self.sealed_time =
-                Some(driver.transfer_time(self.total_bytes()));
+            let mut t = driver.transfer_time(self.total_bytes());
+            if self.transfers.d2h_bytes > 0 {
+                t += driver.disk_read_time(self.transfers.d2h_bytes);
+            }
+            self.sealed_time = Some(t);
         }
         self.sealed_time.expect("just sealed")
     }
@@ -172,9 +180,18 @@ impl BatchAdmission {
         self.transfers
     }
 
-    /// Coalesced bytes of the whole batch (both directions).
+    /// Coalesced bytes of the whole batch (both PCIe directions —
+    /// disk-read bytes are a separate burst, see
+    /// [`disk_read_bytes`](BatchAdmission::disk_read_bytes)).
     pub fn total_bytes(&self) -> u64 {
         self.transfers.h2g_bytes + self.transfers.g2h_bytes
+    }
+
+    /// Coalesced disk restage-read bytes of the whole batch — the
+    /// staged-read burst charged by [`seal`](BatchAdmission::seal)
+    /// through [`PipelineDriver::disk_read_time`].
+    pub fn disk_read_bytes(&self) -> u64 {
+        self.transfers.d2h_bytes
     }
 
     /// Successfully admitted members in admission order.
@@ -229,6 +246,7 @@ mod tests {
             transfers: Transfers {
                 h2g_bytes: h2g,
                 g2h_bytes: g2h,
+                ..Transfers::default()
             },
             ..Admission::default()
         }
@@ -284,6 +302,7 @@ mod tests {
                     Err(Transfers {
                         h2g_bytes: 0,
                         g2h_bytes: 512, // swap-outs before the failure
+                        ..Transfers::default()
                     })
                 } else {
                     Ok(adm(1024, 0))
@@ -309,10 +328,12 @@ mod tests {
         b.push_commit(Transfers {
             h2g_bytes: 0,
             g2h_bytes: 1 << 20,
+            ..Transfers::default()
         });
         b.push_commit(Transfers {
             h2g_bytes: 0,
             g2h_bytes: 3 << 20,
+            ..Transfers::default()
         });
         assert_eq!(b.commit_transfer_time(), 0.0, "unsealed is zero");
         let t1 = b.seal_commit(&d);

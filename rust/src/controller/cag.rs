@@ -1,0 +1,237 @@
+//! CAG-style per-tenant admission policy (cache-augmented generation).
+//!
+//! A tenant whose *entire* retrieval corpus fits a KV pin budget can skip
+//! retrieval altogether: its corpus KV is pre-staged onto disk as pinned,
+//! position-independent chunk entries at server build time and promoted
+//! disk → host → GPU on first touch. That tenant runs in [`TenantMode::Cag`]
+//! mode; requests from it carry no retrieval stage at all. Tenants that do
+//! not fit start as [`TenantMode::ColdRag`] and graduate to
+//! [`TenantMode::CachedRag`] once the shared cache has seen demand from
+//! them (the first completed request) — the same demand signal the PR 5
+//! rebalancer consumes.
+//!
+//! The policy is deliberately static-at-build: corpus sizes are known from
+//! the workload metadata ([`crate::workload::TenantCorpus`]) and the pin
+//! budget is a config knob, so admission is a deterministic greedy fit
+//! (smallest corpora first, maximising the number of retrieval-free
+//! tenants per pinned byte).
+
+use std::collections::BTreeMap;
+
+use crate::kvcache::PageSpec;
+use crate::workload::TenantCorpus;
+
+/// Serving mode assigned to a tenant by the CAG admission policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TenantMode {
+    /// Corpus KV pinned; retrieval is skipped entirely.
+    Cag,
+    /// Normal RAG path, but the shared cache has seen this tenant's
+    /// demand (at least one completed request).
+    CachedRag,
+    /// Normal RAG path, no demand observed yet.
+    ColdRag,
+}
+
+impl TenantMode {
+    /// Stable label used in reports and bench columns.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TenantMode::Cag => "cag",
+            TenantMode::CachedRag => "cached-rag",
+            TenantMode::ColdRag => "cold-rag",
+        }
+    }
+
+    /// Wire code for the stats protocol (`0 = cold, 1 = cached, 2 = cag`).
+    pub fn code(self) -> u8 {
+        match self {
+            TenantMode::ColdRag => 0,
+            TenantMode::CachedRag => 1,
+            TenantMode::Cag => 2,
+        }
+    }
+
+    /// Inverse of [`TenantMode::code`]; unknown codes map to `ColdRag`
+    /// (forward-compatible: an old reader never invents a pinned tenant).
+    pub fn from_code(code: u8) -> TenantMode {
+        match code {
+            2 => TenantMode::Cag,
+            1 => TenantMode::CachedRag,
+            _ => TenantMode::ColdRag,
+        }
+    }
+}
+
+/// Per-tenant admission decisions for one server instance.
+///
+/// Built once from workload metadata via [`CagPolicy::decide`]; afterwards
+/// only [`CagPolicy::note_served`] mutates it (the cold → cached demand
+/// flip). Tenants absent from the map are treated as `ColdRag`.
+#[derive(Debug, Default)]
+pub struct CagPolicy {
+    modes: BTreeMap<u32, TenantMode>,
+    /// Total KV bytes admitted under the pin budget, for reporting.
+    pinned_bytes: u64,
+}
+
+impl CagPolicy {
+    /// Greedily admit tenants to CAG mode in ascending corpus-KV-size
+    /// order while their summed KV footprint fits `pin_budget` bytes.
+    ///
+    /// Smallest-first maximises the number of tenants that go
+    /// retrieval-free for a given budget. A tenant with an empty corpus
+    /// is never admitted (there is nothing to pin — it would report CAG
+    /// mode while still needing retrieval for correctness of accounting).
+    pub fn decide(corpora: &[TenantCorpus], page: PageSpec, pin_budget: u64) -> CagPolicy {
+        let mut sized: Vec<(u64, &TenantCorpus)> =
+            corpora.iter().map(|c| (c.kv_bytes(page), c)).collect();
+        // Stable sort: ties broken by tenant id via the original
+        // (ascending-tenant) order of `corpora`.
+        sized.sort_by_key(|(bytes, _)| *bytes);
+
+        let mut policy = CagPolicy::default();
+        let mut remaining = pin_budget;
+        for (bytes, corpus) in sized {
+            let fits = bytes > 0 && bytes <= remaining;
+            let mode = if fits {
+                remaining -= bytes;
+                policy.pinned_bytes += bytes;
+                TenantMode::Cag
+            } else {
+                TenantMode::ColdRag
+            };
+            policy.modes.insert(corpus.tenant, mode);
+        }
+        policy
+    }
+
+    /// A policy that admits nobody (CAG off). Every tenant reports
+    /// `ColdRag` until demand flips it.
+    pub fn disabled(corpora: &[TenantCorpus]) -> CagPolicy {
+        let mut policy = CagPolicy::default();
+        for corpus in corpora {
+            policy.modes.insert(corpus.tenant, TenantMode::ColdRag);
+        }
+        policy
+    }
+
+    /// Current mode of `tenant` (`ColdRag` if unknown).
+    pub fn mode(&self, tenant: u32) -> TenantMode {
+        self.modes
+            .get(&tenant)
+            .copied()
+            .unwrap_or(TenantMode::ColdRag)
+    }
+
+    /// Whether `tenant` runs retrieval-free.
+    pub fn is_cag(&self, tenant: u32) -> bool {
+        self.mode(tenant) == TenantMode::Cag
+    }
+
+    /// Demand signal: a request from `tenant` completed. Flips
+    /// `ColdRag → CachedRag`; `Cag` tenants are unaffected.
+    pub fn note_served(&mut self, tenant: u32) {
+        let entry = self.modes.entry(tenant).or_insert(TenantMode::ColdRag);
+        if *entry == TenantMode::ColdRag {
+            *entry = TenantMode::CachedRag;
+        }
+    }
+
+    /// Total KV bytes admitted under the pin budget.
+    pub fn pinned_bytes(&self) -> u64 {
+        self.pinned_bytes
+    }
+
+    /// Number of tenants admitted to CAG mode.
+    pub fn cag_tenants(&self) -> usize {
+        self.modes
+            .values()
+            .filter(|m| **m == TenantMode::Cag)
+            .count()
+    }
+
+    /// All known tenants with their current modes, ascending tenant id.
+    pub fn modes(&self) -> impl Iterator<Item = (u32, TenantMode)> + '_ {
+        self.modes.iter().map(|(t, m)| (*t, *m))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn page() -> PageSpec {
+        PageSpec {
+            block_tokens: 8,
+            kv_bytes_per_token: 16,
+        }
+    }
+
+    fn corpus(tenant: u32, doc_tokens: Vec<usize>) -> TenantCorpus {
+        TenantCorpus {
+            tenant,
+            doc_base: 0,
+            doc_tokens,
+        }
+    }
+
+    #[test]
+    fn smallest_corpora_admitted_first() {
+        // kv_bytes = sum over docs of page-rounded token bytes.
+        // tenant 0: 64 tokens -> 1024 B; tenant 1: 16 tokens -> 256 B;
+        // tenant 2: 32 tokens -> 512 B.
+        let corpora = vec![
+            corpus(0, vec![64]),
+            corpus(1, vec![16]),
+            corpus(2, vec![32]),
+        ];
+        let policy = CagPolicy::decide(&corpora, page(), 800);
+        // Budget 800: tenant 1 (256) fits, then tenant 2 (512, total 768)
+        // fits; tenant 0 (1024) does not.
+        assert_eq!(policy.mode(1), TenantMode::Cag);
+        assert_eq!(policy.mode(2), TenantMode::Cag);
+        assert_eq!(policy.mode(0), TenantMode::ColdRag);
+        assert_eq!(policy.pinned_bytes(), 768);
+        assert_eq!(policy.cag_tenants(), 2);
+    }
+
+    #[test]
+    fn empty_corpus_never_admitted() {
+        let corpora = vec![corpus(0, vec![])];
+        let policy = CagPolicy::decide(&corpora, page(), u64::MAX);
+        assert_eq!(policy.mode(0), TenantMode::ColdRag);
+        assert_eq!(policy.pinned_bytes(), 0);
+    }
+
+    #[test]
+    fn demand_flips_cold_to_cached_but_not_cag() {
+        let corpora = vec![corpus(0, vec![16]), corpus(1, vec![16])];
+        let mut policy = CagPolicy::decide(&corpora, page(), 256);
+        assert_eq!(policy.mode(0), TenantMode::Cag);
+        assert_eq!(policy.mode(1), TenantMode::ColdRag);
+        policy.note_served(0);
+        policy.note_served(1);
+        assert_eq!(policy.mode(0), TenantMode::Cag);
+        assert_eq!(policy.mode(1), TenantMode::CachedRag);
+        // Unknown tenants materialise as cached once served.
+        policy.note_served(7);
+        assert_eq!(policy.mode(7), TenantMode::CachedRag);
+    }
+
+    #[test]
+    fn wire_codes_roundtrip() {
+        for mode in [TenantMode::Cag, TenantMode::CachedRag, TenantMode::ColdRag] {
+            assert_eq!(TenantMode::from_code(mode.code()), mode);
+        }
+        assert_eq!(TenantMode::from_code(99), TenantMode::ColdRag);
+    }
+
+    #[test]
+    fn disabled_policy_admits_nobody() {
+        let corpora = vec![corpus(0, vec![16])];
+        let policy = CagPolicy::disabled(&corpora);
+        assert_eq!(policy.mode(0), TenantMode::ColdRag);
+        assert!(!policy.is_cag(0));
+    }
+}

@@ -46,16 +46,32 @@
 //!     ShardedCacheService ──► K ×              promote on final match
 //!       CacheService shards                    or fall back to the
 //!       (route by first doc)                   blocking batched path
-//!       match → promote → pin →
-//!       chunk probe (--chunk-cache
-//!       on: off-prefix docs reuse
-//!       cached KV at ANY position,
-//!       r boundary tokens join β,
-//!       h2g bytes join the batch
-//!       burst; tree-rejected KV is
-//!       salvaged as owned chunk
+//!       match → restage (--disk on:
+//!       disk-resident prefix nodes /
+//!       chunk entries staged back to
+//!       host, d2h bytes charged as
+//!       ONE NVMe read burst per
+//!       admitted batch, overlapped
+//!       with retrieval) → promote →
+//!       pin → chunk probe
+//!       (--chunk-cache on: off-prefix
+//!       docs reuse cached KV at ANY
+//!       position, r boundary tokens
+//!       join β, h2g bytes join the
+//!       batch burst; tree-rejected KV
+//!       is salvaged as owned chunk
 //!       entries) → (α,β)
 //!       → commit/release · metrics hooks
+//!       + CAG admission (cag.rs):
+//!         --cag auto pins tenants whose
+//!         whole corpus KV fits the pin
+//!         budget — corpus pre-staged to
+//!         disk at build time, promoted
+//!         disk→host→GPU on first touch,
+//!         retrieval skipped entirely;
+//!         other tenants run cold-/
+//!         cached-RAG per the demand
+//!         signal (first completed req)
 //!       + cross-shard tier rebalancer
 //!         (shard.rs): every engine
 //!         iteration / session poll is a
@@ -74,6 +90,10 @@
 //!                           │
 //!                           ▼
 //!        tree / kvcache / policy / sched substrates
+//!        (three-tier GPU → host → NVMe-disk cascade: evictions
+//!        demote down the ladder, spills are async staged writes
+//!        counted but never charged; --disk off = two tiers,
+//!        bit-identical to the prior path)
 //! ```
 //!
 //! [`pipeline`] owns the per-request admission state machine shared by
@@ -87,6 +107,7 @@
 //! the pre-session batched path) or event-driven (`--speculate on`).
 
 pub mod batch;
+pub mod cag;
 pub mod fault;
 pub mod pipeline;
 pub mod real;
@@ -97,6 +118,7 @@ pub mod shard;
 pub mod sim_server;
 
 pub use batch::BatchAdmission;
+pub use cag::{CagPolicy, TenantMode};
 pub use pipeline::{
     Admission, CacheService, CommitOutcome, Pipeline, PipelineDriver,
     RequestState, ShedLadder,

@@ -59,6 +59,15 @@ pub trait PipelineDriver {
     fn now(&self) -> f64;
     /// Seconds charged for moving `bytes` over the GPU↔host link.
     fn transfer_time(&self, bytes: u64) -> f64;
+    /// Seconds charged for one coalesced staged-read burst of `bytes`
+    /// restaged from the disk tier (`--disk on`). Callers guard on
+    /// `bytes > 0`, so the disk-off f64 arithmetic never sees this
+    /// term; the default models no disk (0.0) for drivers that predate
+    /// the third tier.
+    fn disk_read_time(&self, bytes: u64) -> f64 {
+        let _ = bytes;
+        0.0
+    }
 }
 
 /// Wall-clock admission-control ladder for the real serving path — the
@@ -183,10 +192,12 @@ pub struct Admission {
     /// special cases. The pinned backing entries are released by
     /// commit/release through the recorded [`ChunkHit::source`].
     pub chunk_hits: Vec<ChunkHit>,
-    /// Byte movement of this admission's promotion, h2g/g2h split —
-    /// what [`super::batch::BatchAdmission`] coalesces across a batch
-    /// into one PCIe burst. The combined total is
-    /// [`Admission::transfer_bytes`].
+    /// Byte movement of this admission's promotion (h2g/g2h, coalesced
+    /// across a batch into one PCIe burst by
+    /// [`super::batch::BatchAdmission`]; totalled by
+    /// [`Admission::transfer_bytes`]) plus its disk restage reads
+    /// (d2h, coalesced into the per-batch staged-read burst; totalled
+    /// by [`Admission::disk_read_bytes`]).
     pub transfers: Transfers,
     /// Estimated (sim) or measured (real) prefill seconds; set by the
     /// driver once known, consumed by the policy updates.
@@ -203,6 +214,13 @@ impl Admission {
     /// charge can never disagree on the byte total.
     pub fn transfer_bytes(&self) -> u64 {
         self.transfers.h2g_bytes + self.transfers.g2h_bytes
+    }
+
+    /// Disk restage-read bytes of this admission (`--disk on`; always 0
+    /// off) — charged per batch as one staged-read burst beside the
+    /// PCIe burst, never folded into [`Admission::transfer_bytes`].
+    pub fn disk_read_bytes(&self) -> u64 {
+        self.transfers.d2h_bytes
     }
 }
 
@@ -323,7 +341,14 @@ impl CacheService {
     ) -> Admission {
         self.with(|tree| {
             let ids: Vec<DocId> = docs.iter().map(|&(d, _)| d).collect();
-            let m = tree.lookup(&ids);
+            // Prefix walk with disk restage (`--disk on`): a walk that
+            // reaches a disk-resident node restages it disk → host and
+            // keeps matching instead of missing; the d2h bytes join
+            // this admission's transfers and are charged per batch as
+            // one staged-read burst. With the disk tier off this is
+            // exactly `lookup`.
+            let mut transfers = Transfers::default();
+            let m = tree.lookup_restage(&ids, &mut transfers);
             // Promote root-to-leaf. The promotion pins the whole match
             // for its duration (making room for a later node can never
             // evict an earlier one), stops at the first node GPU space
@@ -351,12 +376,29 @@ impl CacheService {
             // bytes to the same transfers the batch burst coalesces.
             // With the chunk cache off every probe is `None` and this
             // loop reduces bit-identically to the chunk-free path.
-            let mut transfers = promo.transfers;
+            transfers.merge(promo.transfers);
             let mut chunk_hits: Vec<ChunkHit> = Vec::new();
             let mut unmatched: Vec<(DocId, usize)> = Vec::new();
             let mut beta: usize = 0;
             for &(doc, tokens) in &docs[matched..] {
-                match tree.chunk_probe(doc, tokens) {
+                // Chunk lookup order: probe → disk restage → re-probe.
+                // A demoted (or CAG-prestaged) entry restages into a
+                // host-resident owned entry so the re-probe hits and
+                // charges the usual h2g burst bytes on top of the d2h
+                // restage read. chunk_restage is false with disk off.
+                let hit = match tree.chunk_probe(doc, tokens) {
+                    Some(hit) => Some(hit),
+                    None if tree.chunk_restage(
+                        doc,
+                        tokens,
+                        &mut transfers,
+                    ) =>
+                    {
+                        tree.chunk_probe(doc, tokens)
+                    }
+                    None => None,
+                };
+                match hit {
                     Some(hit) => {
                         alpha += hit.reused_tokens;
                         beta += hit.boundary;
@@ -697,7 +739,12 @@ impl Pipeline {
         request_tokens: usize,
     ) -> (Admission, f64) {
         let adm = self.admit_one(docs, request_tokens);
-        let extra = driver.transfer_time(adm.transfer_bytes());
+        let mut extra = driver.transfer_time(adm.transfer_bytes());
+        // Guarded like the batch seal: a disk-off admission's charge
+        // arithmetic stays bit-identical.
+        if adm.disk_read_bytes() > 0 {
+            extra += driver.disk_read_time(adm.disk_read_bytes());
+        }
         (adm, extra)
     }
 

@@ -12,6 +12,7 @@
 //! [`super::sim_server`].
 
 use super::batch::BatchAdmission;
+use super::cag::CagPolicy;
 use super::pipeline::{Admission, Pipeline, PipelineDriver, ShedLadder};
 use super::retrieval_service::{
     RetrievalConfig, RetrievalService, RetrievalTask, StageReady,
@@ -28,8 +29,10 @@ use crate::sim::{Clock, RealClock};
 use crate::tree::{KnowledgeTree, Transfers};
 use crate::util::Rng;
 use crate::vectordb::VectorIndex;
+use crate::workload::TenantCorpus;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Duration;
@@ -80,6 +83,22 @@ pub struct RealConfig {
     /// single-stage (no speculation) while the queue-delay EWMA exceeds
     /// `downgrade_frac × ttft_slo_s`.
     pub downgrade_frac: f64,
+    /// NVMe-backed third cache tier (`--disk on`): host evictions
+    /// demote to disk as async staged writes (drained by a background
+    /// flusher thread), disk-resident prefixes restage back on hit.
+    /// Off serves the two-tier PR 8 path bit for bit.
+    pub disk: bool,
+    /// Logical disk-tier budget, bytes (split across shards like the
+    /// GPU/host budgets).
+    pub disk_cache_bytes: u64,
+    /// CAG-style per-tenant corpus pinning (`--cag auto`): tenants
+    /// whose whole corpus KV fits `cag_pin_bytes` get the corpus
+    /// precomputed and pinned at [`RealServer::enable_cag`] time and
+    /// skip retrieval entirely. Requires `chunk_cache` (the pins are
+    /// position-independent chunk entries).
+    pub cag: bool,
+    /// Total pin budget shared by all CAG-admitted tenants, bytes.
+    pub cag_pin_bytes: u64,
 }
 
 impl Default for RealConfig {
@@ -102,6 +121,10 @@ impl Default for RealConfig {
             shed: false,
             ttft_slo_s: 5.0,
             downgrade_frac: 0.5,
+            disk: false,
+            disk_cache_bytes: 64 * 1024 * 1024,
+            cag: false,
+            cag_pin_bytes: 4 * 1024 * 1024,
         }
     }
 }
@@ -215,6 +238,50 @@ struct SpecPending {
     t_arrive: f64,
 }
 
+/// Background drain of the disk tier's async staging queue (`--disk
+/// on`): host→disk spills enqueue under the shard lock with their
+/// budget already charged; this thread serializes the queued payloads
+/// into the slotted backing store off the serving path, so an eviction
+/// sweep never waits on an NVMe write. The cache handle is a shared
+/// `Arc` clone, so the flusher sees exactly the shards the server
+/// serves from. Dropped (stopped + joined, with a final drain) with
+/// the server.
+struct StagingFlusher {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl StagingFlusher {
+    fn spawn(cache: ShardedCacheService) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("disk-staging".into())
+            .spawn(move || {
+                while !flag.load(Ordering::Relaxed) {
+                    if cache.flush_disk_staging() == 0 {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                }
+                cache.flush_disk_staging(); // final drain
+            })
+            .expect("spawn disk staging thread");
+        StagingFlusher {
+            stop,
+            handle: Some(handle),
+        }
+    }
+}
+
+impl Drop for StagingFlusher {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
 /// The session-serving runtime: retrieval pool, stage-event channel and
 /// the lifecycle table. Created lazily on the first speculative call.
 struct SpecRuntime {
@@ -244,6 +311,16 @@ pub struct RealServer {
     /// Wall-clock admission-control ladder (`--shed on`); inert when
     /// the config never enabled it, keeping the off path bit-identical.
     ladder: ShedLadder,
+    /// Background staging-queue drain (`--disk on`); `None` keeps the
+    /// two-tier path thread-free and bit-identical.
+    staging: Option<StagingFlusher>,
+    /// CAG per-tenant admission policy (`--cag auto`), armed by
+    /// [`RealServer::enable_cag`].
+    cag: Option<CagPolicy>,
+    /// Document → owning tenant, derived from the corpus layout at
+    /// `enable_cag` time; drives per-tenant recording and the CAG
+    /// retrieval bypass.
+    doc_tenants: Option<Vec<u32>>,
 }
 
 impl RealServer {
@@ -277,6 +354,9 @@ impl RealServer {
         if cfg.chunk_cache {
             tree.enable_chunk_cache(cfg.boundary_tokens);
         }
+        if cfg.disk && cfg.disk_cache_bytes > 0 {
+            tree.enable_disk_tier(cfg.disk_cache_bytes);
+        }
         tree
     }
 
@@ -296,6 +376,11 @@ impl RealServer {
         let page = Self::page_spec(kv_floats_per_token, cfg);
         let gpu_slices = split_budget(cfg.gpu_cache_bytes, k);
         let host_slices = split_budget(cfg.host_cache_bytes, k);
+        let disk_slices = if cfg.disk {
+            split_budget(cfg.disk_cache_bytes, k)
+        } else {
+            vec![0; k]
+        };
         ShardedCacheService::build(k, |i| {
             let mut tree = KnowledgeTree::new(
                 gpu_slices[i],
@@ -307,6 +392,9 @@ impl RealServer {
             );
             if cfg.chunk_cache {
                 tree.enable_chunk_cache(cfg.boundary_tokens);
+            }
+            if disk_slices[i] > 0 {
+                tree.enable_disk_tier(disk_slices[i]);
             }
             tree
         })
@@ -335,6 +423,9 @@ impl RealServer {
         doc_tokens: Vec<Vec<i32>>,
         cache: ShardedCacheService,
     ) -> Result<Self> {
+        let staging = cache
+            .disk_enabled()
+            .then(|| StagingFlusher::spawn(cache.clone()));
         Ok(RealServer {
             model,
             // Real-mode request ordering happens in the concurrent TCP
@@ -351,7 +442,73 @@ impl RealServer {
             next_id: 0,
             spec: None,
             ladder: ShedLadder::disabled(),
+            staging,
+            cag: None,
+            doc_tenants: None,
         })
+    }
+
+    /// Arm CAG-style corpus pinning (`--cag auto`): tenants whose whole
+    /// corpus KV fits `cfg.cag_pin_bytes` (smallest corpus first) have
+    /// every corpus document's KV computed NOW — real rows through the
+    /// compiled prefill, each document at RoPE offset 0, which is what
+    /// makes the pins position-independent chunk entries — and parked
+    /// as pinned disk entries (owned chunk entries with the disk off).
+    /// Startup staging is deliberately outside the serving clock: no
+    /// request is in flight yet, mirroring the sim's uncharged
+    /// build-time prestage. Tenants that do not fit run cold-/cached-
+    /// RAG per the demand signal; every served request records its
+    /// tenant so the stats endpoint can break SLOs down per tenant.
+    pub fn enable_cag(
+        &mut self,
+        corpora: &[TenantCorpus],
+        cfg: &RealConfig,
+    ) -> Result<()> {
+        let kv = self.model.manifest().arch.kv_floats_per_token();
+        let page = Self::page_spec(kv, cfg);
+        let policy = CagPolicy::decide(corpora, page, cfg.cag_pin_bytes);
+        let mut doc_tenants = vec![0u32; self.doc_tokens.len()];
+        for c in corpora {
+            for i in 0..c.doc_tokens.len() {
+                let d = c.doc_base as usize + i;
+                if let Some(slot) = doc_tenants.get_mut(d) {
+                    *slot = c.tenant;
+                }
+            }
+        }
+        for c in corpora {
+            if !policy.is_cag(c.tenant) {
+                continue;
+            }
+            for i in 0..c.doc_tokens.len() {
+                let doc = c.doc_base + i as u32;
+                let tokens = &self.doc_tokens[doc as usize];
+                if tokens.is_empty() {
+                    continue;
+                }
+                let mut rows = Vec::new();
+                self.chunked_prefill(&mut rows, tokens, cfg.chunk)
+                    .with_context(|| {
+                        format!("CAG prestage of doc {doc}")
+                    })?;
+                self.cache().prestage_corpus_doc(
+                    doc,
+                    tokens.len(),
+                    0,
+                    Some(KvPayload::new(rows, tokens.len())),
+                );
+            }
+        }
+        self.cache().flush_disk_staging();
+        self.cag = Some(policy);
+        self.doc_tenants = Some(doc_tenants);
+        Ok(())
+    }
+
+    /// The armed CAG policy (None until
+    /// [`enable_cag`](RealServer::enable_cag) runs).
+    pub fn cag_policy(&self) -> Option<&CagPolicy> {
+        self.cag.as_ref()
     }
 
     /// Arm the ladder on the first call that carries a shedding config
@@ -548,6 +705,13 @@ impl RealServer {
             // path, leaving it exactly the pop time as before).
             let t_arrive = now - wait;
             self.pipeline.recorder.arrival(id, t_arrive);
+            if let Some(map) = &self.doc_tenants {
+                let t = map
+                    .get(r.target_doc as usize)
+                    .copied()
+                    .unwrap_or(0);
+                self.pipeline.recorder.tenant(id, t);
+            }
             self.ladder.observe_wait(wait, now);
             if self.ladder.should_shed(wait) {
                 self.pipeline.recorder.shed(id, now);
@@ -558,11 +722,35 @@ impl RealServer {
                 )));
                 continue;
             }
-            let q =
-                self.em
-                    .query(r.target_doc, cfg.query_noise, &mut self.rng);
-            let hits = self.index.search(&q, cfg.top_k);
-            let docs: Vec<u32> = hits.iter().map(|h| h.1).collect();
+            // CAG bypass (`--cag auto`): a pinned tenant's whole corpus
+            // already sits in the cache hierarchy, so the target
+            // document IS the context — no query embedding, no vector
+            // search, retrieval completes at arrival.
+            let cag_hit = self
+                .cag
+                .as_ref()
+                .zip(self.doc_tenants.as_ref())
+                .is_some_and(|(p, map)| {
+                    p.is_cag(
+                        map.get(r.target_doc as usize)
+                            .copied()
+                            .unwrap_or(0),
+                    )
+                });
+            let docs: Vec<u32> = if cag_hit {
+                vec![r.target_doc]
+            } else {
+                let q = self.em.query(
+                    r.target_doc,
+                    cfg.query_noise,
+                    &mut self.rng,
+                );
+                self.index
+                    .search(&q, cfg.top_k)
+                    .iter()
+                    .map(|h| h.1)
+                    .collect()
+            };
             self.pipeline
                 .recorder
                 .retrieval_done(id, self.driver.now());
@@ -819,6 +1007,17 @@ impl RealServer {
         let t_done = self.driver.now();
         self.pipeline.recorder.finished(id, t_done);
         self.pipeline.record_admission(id, docs.len(), &adm);
+        // CAG demand signal: a completed request flips its tenant's
+        // cold-RAG mode to cached-RAG (never touches Cag tenants).
+        if let (Some(policy), Some(map)) =
+            (self.cag.as_mut(), self.doc_tenants.as_ref())
+        {
+            if let Some(&d) = docs.first() {
+                policy.note_served(
+                    map.get(d as usize).copied().unwrap_or(0),
+                );
+            }
+        }
 
         Ok(RealResponse {
             id,
@@ -1374,7 +1573,54 @@ impl RealServer {
             downgraded_requests: s.downgraded_requests,
             slo_attainment: s.slo_attainment,
             slo_enabled: s.slo_enabled,
+            disk_spills: c.disk_spills,
+            disk_spill_bytes: c.disk_spill_bytes,
+            disk_restage_hits: c.disk_restage_hits,
+            disk_restage_bytes: c.disk_restage_bytes,
+            disk_used: occ.iter().map(|o| o.disk_used).sum(),
+            disk_capacity: occ
+                .iter()
+                .map(|o| o.disk_capacity)
+                .sum(),
+            tenants: self.tenant_lines(),
         }
+    }
+
+    /// Per-tenant SLO breakdown for the stats wire: the recorder's
+    /// per-tenant aggregates (all requests land on tenant 0 until
+    /// [`enable_cag`](RealServer::enable_cag) installs the corpus
+    /// layout), each stamped with its CAG mode. A tenant with no
+    /// completions reports `mean_ttft_ms` 0.0 — JSON cannot carry the
+    /// recorder's NaN, and the merge skips zero-completion lines
+    /// anyway.
+    fn tenant_lines(&self) -> Vec<crate::server::proto::TenantLine> {
+        let slo = self.ladder.ttft_slo();
+        self.pipeline
+            .recorder
+            .per_tenant(slo)
+            .into_iter()
+            .map(|t| {
+                let mean = t.mean_ttft();
+                crate::server::proto::TenantLine {
+                    tenant: t.tenant,
+                    requests: t.requests as u64,
+                    completed: t.completed as u64,
+                    shed: t.shed as u64,
+                    downgraded: t.downgraded as u64,
+                    slo_ok: t.slo_ok as u64,
+                    mean_ttft_ms: if mean.is_finite() {
+                        mean * 1e3
+                    } else {
+                        0.0
+                    },
+                    mode: self
+                        .cag
+                        .as_ref()
+                        .map(|p| p.mode(t.tenant).code())
+                        .unwrap_or(0),
+                }
+            })
+            .collect()
     }
 }
 

@@ -346,6 +346,36 @@ impl ShardedCacheService {
         (lost, recovered)
     }
 
+    /// Drain every shard's async disk staging queue (`--disk on`): the
+    /// simulator calls this once per engine iteration, the real path
+    /// from its background staging thread. Returns entries written
+    /// across all shards; a no-op (0) with the disk tier off.
+    pub fn flush_disk_staging(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.with(|t| t.flush_disk_staging()))
+            .sum()
+    }
+
+    /// Whether any shard has the NVMe disk tier enabled.
+    pub fn disk_enabled(&self) -> bool {
+        self.shards.iter().any(|s| s.with(|t| t.disk_enabled()))
+    }
+
+    /// CAG corpus pre-staging on the owning shard: park `doc`'s KV as a
+    /// pinned disk entry (or a best-effort owned chunk entry with the
+    /// disk off). See [`KnowledgeTree::prestage_corpus_doc`].
+    pub fn prestage_corpus_doc(
+        &self,
+        doc: DocId,
+        tokens: usize,
+        rope_offset: usize,
+        payload: Option<KvPayload>,
+    ) -> bool {
+        self.shards[self.shard_of_doc(doc)]
+            .with(|t| t.prestage_corpus_doc(doc, tokens, rope_offset, payload))
+    }
+
     /// Per-shard tier occupancy gauges (used/capacity, both tiers) —
     /// the rebalancer's input and the stats endpoint's per-shard view.
     pub fn shard_occupancies(&self) -> Vec<TierOccupancy> {

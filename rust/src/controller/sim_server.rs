@@ -52,6 +52,7 @@
 //! not a scan) — guaranteeing termination.
 
 use super::batch::BatchAdmission;
+use super::cag::{CagPolicy, TenantMode};
 use super::pipeline::{
     request_of, Admission, Pipeline, PipelineDriver,
 };
@@ -71,7 +72,7 @@ use crate::sim::{Clock, EventHandle, EventScheduler, SimClock};
 use crate::spec::SpecAction;
 use crate::tree::{DocId, KnowledgeTree};
 use crate::util::Rng;
-use crate::workload::Trace;
+use crate::workload::{TenantCorpus, Trace};
 use std::collections::HashMap;
 use std::time::Instant;
 
@@ -153,13 +154,38 @@ pub struct SimOutcome {
     pub shed_requests: usize,
     /// Arrivals downgraded to single-stage, speculation-free service.
     pub downgraded_requests: usize,
+    /// Host→disk demotions staged by the NVMe tier (always 0 with
+    /// `--disk off`). Mirrors `tree_counters.disk_spills`.
+    pub disk_spills: u64,
+    /// KV bytes those spills staged (counted, never charged — the
+    /// staging queue writes asynchronously).
+    pub disk_spill_bytes: u64,
+    /// Disk→host restages that served an admission (tree nodes and
+    /// chunk entries).
+    pub disk_restage_hits: u64,
+    /// KV bytes those restages read — the bytes charged as the
+    /// per-batch NVMe read burst.
+    pub disk_restage_bytes: u64,
+    /// Per-tenant CAG admission modes (empty with `--cag off`),
+    /// ascending tenant id.
+    pub tenant_modes: Vec<(u32, TenantMode)>,
+    /// Corpus KV bytes pinned under the CAG budget (0 with `--cag off`).
+    pub cag_pinned_bytes: u64,
 }
+
+/// Effective NVMe sequential-read bandwidth for the staged-read model
+/// (PCIe 4.0 ×4 datacenter SSD class).
+const NVME_READ_BPS: f64 = 3.5e9;
 
 /// The simulation's [`PipelineDriver`]: virtual clock + analytic models.
 struct SimDriver {
     clock: SimClock,
     transfer: TransferModel,
     profile: CostProfile,
+    /// NVMe staged-read model (`Some` only with `--disk on`); reuses
+    /// [`TransferModel`] with SSD bandwidth + the configured read
+    /// latency.
+    disk: Option<TransferModel>,
 }
 
 impl PipelineDriver for SimDriver {
@@ -169,6 +195,10 @@ impl PipelineDriver for SimDriver {
 
     fn transfer_time(&self, bytes: u64) -> f64 {
         self.transfer.transfer_time(bytes)
+    }
+
+    fn disk_read_time(&self, bytes: u64) -> f64 {
+        self.disk.map_or(0.0, |d| d.transfer_time(bytes))
     }
 }
 
@@ -181,6 +211,12 @@ pub struct SimServer {
     pipeline: Pipeline,
     timing: RetrievalTiming,
     spec_enabled: bool,
+    /// Page geometry, kept for the CAG corpus-fit computation.
+    page: PageSpec,
+    /// CAG admission policy (`Some` only after [`SimServer::enable_cag`]).
+    /// Cag-mode tenants skip retrieval entirely: their corpus KV is
+    /// pre-staged on disk as pinned chunk entries.
+    cag: Option<CagPolicy>,
     shed: ShedState,
     /// Handles of each request's pending retrieval-stage events, so a
     /// shed can cancel them in O(log n) each (cancelling already-fired
@@ -275,10 +311,17 @@ impl SimServer {
             SystemKind::RagCache => {
                 // K shards over exact (remainder-preserving) slices of
                 // the configured budgets; the optional rebalancer then
-                // moves those slices with demand.
+                // moves the GPU/host slices with demand (disk slices
+                // stay static — NVMe capacity is not the contended
+                // resource).
                 let k = cfg.cache.shards.max(1);
                 let gpu_slices = split_budget(cfg.cache.gpu_bytes, k);
                 let host_slices = split_budget(cfg.cache.host_bytes, k);
+                let disk_slices = if cfg.cache.disk {
+                    split_budget(cfg.cache.disk_bytes, k)
+                } else {
+                    vec![0; k]
+                };
                 let mut svc = ShardedCacheService::build(k, |i| {
                     let mut tree = KnowledgeTree::new(
                         gpu_slices[i],
@@ -292,6 +335,9 @@ impl SimServer {
                         tree.enable_chunk_cache(
                             cfg.cache.boundary_tokens,
                         );
+                    }
+                    if disk_slices[i] > 0 {
+                        tree.enable_disk_tier(disk_slices[i]);
                     }
                     tree
                 });
@@ -341,12 +387,19 @@ impl SimServer {
                 clock: SimClock::new(),
                 transfer,
                 profile,
+                disk: (kind == SystemKind::RagCache && cfg.cache.disk)
+                    .then(|| TransferModel {
+                        bandwidth_bps: NVME_READ_BPS,
+                        latency_s: cfg.cache.disk_latency_s,
+                    }),
             },
             events: EventScheduler::new(),
             engine,
             pipeline,
             timing,
             spec_enabled,
+            page,
+            cag: None,
             shed: ShedState {
                 enabled: cfg.shed.enabled,
                 ttft_slo: cfg.shed.ttft_slo_s,
@@ -378,6 +431,38 @@ impl SimServer {
 
     pub fn kind(&self) -> SystemKind {
         self.kind
+    }
+
+    /// Enable CAG-style per-tenant admission: tenants whose whole
+    /// corpus KV fits `pin_budget` bytes are served retrieval-free,
+    /// their corpora pre-staged as pinned, position-independent chunk
+    /// entries (disk-resident with `--disk on`, best-effort host
+    /// entries otherwise) and promoted disk → host → GPU on first
+    /// touch. Call between [`SimServer::build`] and [`SimServer::run`].
+    /// No-op on the baseline systems (no cache). The config layer
+    /// guarantees the chunk cache is on when CAG is.
+    pub fn enable_cag(
+        &mut self,
+        corpora: &[TenantCorpus],
+        pin_budget: u64,
+    ) {
+        let Some(cache) = &self.pipeline.cache else {
+            return;
+        };
+        let policy = CagPolicy::decide(corpora, self.page, pin_budget);
+        for c in corpora {
+            if !policy.is_cag(c.tenant) {
+                continue;
+            }
+            for (i, &tokens) in c.doc_tokens.iter().enumerate() {
+                let doc: DocId = c.doc_base + i as u32;
+                // Accounting-level prestage (payload None): startup
+                // staging, neither counted nor charged.
+                cache.prestage_corpus_doc(doc, tokens, 0, None);
+            }
+        }
+        cache.flush_disk_staging();
+        self.cag = Some(policy);
     }
 
     /// Run the trace to completion and return the outcome.
@@ -427,6 +512,20 @@ impl SimServer {
             chunk_hits: tc.chunk_hits,
             chunk_hit_bytes: tc.chunk_hit_bytes,
             boundary_recompute_tokens: tc.boundary_recompute_tokens,
+            disk_spills: tc.disk_spills,
+            disk_spill_bytes: tc.disk_spill_bytes,
+            disk_restage_hits: tc.disk_restage_hits,
+            disk_restage_bytes: tc.disk_restage_bytes,
+            tenant_modes: self
+                .cag
+                .as_ref()
+                .map(|p| p.modes().collect())
+                .unwrap_or_default(),
+            cag_pinned_bytes: self
+                .cag
+                .as_ref()
+                .map(|p| p.pinned_bytes())
+                .unwrap_or(0),
             pcie_h2g_bytes: self.pcie_h2g_bytes,
             pcie_g2h_bytes: self.pcie_g2h_bytes,
             spec_started: self
@@ -465,11 +564,30 @@ impl SimServer {
 
     fn on_arrival(&mut self, i: usize) {
         let now = self.now();
+        let tenant = self.trace.requests[i].tenant;
         self.pipeline.recorder.arrival(i as u64, now);
-        self.pipeline
-            .recorder
-            .tenant(i as u64, self.trace.requests[i].tenant);
+        self.pipeline.recorder.tenant(i as u64, tenant);
         let docs = self.trace.requests[i].docs.clone();
+        // CAG fast path: the tenant's whole corpus is pinned, so the
+        // final docs are known at arrival — no retrieval stages, no
+        // speculation. The generation enqueues immediately and its KV
+        // is served from the pinned chunk entries (restaged from disk
+        // on first touch). The SLO deadline still arms: CAG skips
+        // retrieval, not the engine queue.
+        if self.cag.as_ref().is_some_and(|p| p.is_cag(tenant)) {
+            if self.shed.enabled {
+                self.deadline_handles[i] = Some(self.events.schedule(
+                    now + self.shed.ttft_slo,
+                    Event::DeadlineExpired(i),
+                ));
+            }
+            self.start_generation(i, &docs);
+            let output_tokens = self.trace.requests[i].output_tokens;
+            // Zero-cost "retrieval": confirmed at arrival, no
+            // non-overlapped search time.
+            self.pipeline.confirm_final(i, now, output_tokens, 0.0);
+            return;
+        }
         // Downgrade rung of the ladder: under sustained queueing delay,
         // new arrivals skip speculation (single-stage retrieval) so the
         // engine stops burning iterations on prefills that overload
@@ -613,6 +731,19 @@ impl SimServer {
         if terminal {
             self.terminal_counted[req] = true;
             self.live_requests -= 1;
+            // CAG demand signal: a tenant's first *completed* request
+            // flips it cold-RAG → cached-RAG (the shared cache has now
+            // seen its demand; Cag tenants are unaffected).
+            let finished = self
+                .pipeline
+                .recorder
+                .record(req as u64)
+                .is_some_and(|r| r.finished.is_some());
+            if finished {
+                if let Some(policy) = &mut self.cag {
+                    policy.note_served(self.trace.requests[req].tenant);
+                }
+            }
         }
     }
 
@@ -829,6 +960,13 @@ impl SimServer {
         }
         self.inflight_epoch = None;
         let now = self.now();
+        // Drain the disk staging queue once per engine iteration: the
+        // async spill writes serialize into backing-store slots while
+        // the GPU computes (no-op, and no state change, with --disk
+        // off).
+        if let Some(cache) = &self.pipeline.cache {
+            cache.flush_disk_staging();
+        }
         let events = self.engine.complete();
         // The iteration's commits (one per FirstToken) coalesce into
         // ONE write-back burst — the commit-phase mirror of the admit
@@ -1219,6 +1357,95 @@ mod tests {
         assert!(out.shed_requests > 0, "tight SLO must shed");
         assert!(out.completed > 0, "graced work must still finish");
         assert_eq!(out.completed + out.shed_requests, 80);
+    }
+
+    /// Tentpole: with the NVMe tier on and both upper tiers squeezed,
+    /// the GPU → host → disk cascade actually spills, the run still
+    /// completes, and restages serve admissions back out of disk.
+    #[test]
+    fn disk_tier_spills_and_restages_under_pressure() {
+        let corpus = Corpus::wikipedia_like(500, 2);
+        let trace = Trace::generate(&MMLU, &corpus, 1.0, 80, 2, 13);
+        let mut cfg = cfg_for("ragcache");
+        cfg.cache.gpu_bytes = 128 * 1024 * 1024;
+        cfg.cache.host_bytes = 192 * 1024 * 1024; // host thrashes too
+        cfg.cache.disk = true;
+        cfg.cache.disk_bytes = 8 * (1 << 30);
+        let server = SimServer::build(
+            &cfg,
+            trace,
+            500,
+            RetrievalTiming::default(),
+            7,
+        )
+        .unwrap();
+        let out = server.run();
+        assert_eq!(out.completed, 80);
+        let c = out.tree_counters.unwrap();
+        assert!(c.host_evictions > 0, "host tier must thrash: {c:?}");
+        assert!(out.disk_spills > 0, "cascade must reach disk");
+        assert_eq!(out.disk_spills, c.disk_spills);
+        assert!(
+            out.disk_restage_hits > 0,
+            "spilled KV must be served back: {c:?}"
+        );
+        assert!(out.disk_spill_bytes >= out.disk_restage_bytes / 4);
+    }
+
+    /// CAG admission: the pinned tenant's requests carry zero retrieval
+    /// (retrieval confirmed at arrival), the other tenant still runs
+    /// the normal RAG path, and the run completes everything.
+    #[test]
+    fn cag_tenant_skips_retrieval_entirely() {
+        use crate::workload::{tenant_corpora, TraceOptions};
+        let corpus = Corpus::wikipedia_like(400, 2);
+        let opts = TraceOptions {
+            tenants: 2,
+            ..TraceOptions::default()
+        };
+        let trace = Trace::generate_open_loop(
+            &MMLU, &corpus, 0.5, 40, &opts, 11,
+        );
+        let mut cfg = cfg_for("ragcache");
+        cfg.cache.chunk_cache = true;
+        cfg.cache.disk = true;
+        cfg.cache.disk_bytes = 64 * (1 << 30);
+        let mut server = SimServer::build(
+            &cfg,
+            trace.clone(),
+            400,
+            RetrievalTiming::default(),
+            5,
+        )
+        .unwrap();
+        let corpora = tenant_corpora(&corpus, &opts);
+        let page = server.page;
+        // Budget sized to the smallest corpus: exactly one tenant pins.
+        let budget =
+            corpora.iter().map(|c| c.kv_bytes(page)).min().unwrap();
+        server.enable_cag(&corpora, budget);
+        let out = server.run();
+        assert_eq!(out.completed, 40);
+        let cag: Vec<u32> = out
+            .tenant_modes
+            .iter()
+            .filter(|(_, m)| *m == TenantMode::Cag)
+            .map(|(t, _)| *t)
+            .collect();
+        assert_eq!(cag.len(), 1, "modes: {:?}", out.tenant_modes);
+        assert!(out.cag_pinned_bytes > 0);
+        assert!(out.cag_pinned_bytes <= budget);
+        // Every request of the pinned tenant confirmed retrieval at its
+        // arrival instant; every other completed request paid retrieval.
+        for r in &trace.requests {
+            let rec = out.recorder.record(r.id).unwrap();
+            let rd = rec.retrieval_done.expect("all complete");
+            if cag.contains(&r.tenant) {
+                assert_eq!(rd.to_bits(), rec.arrival.to_bits());
+            } else {
+                assert!(rd > rec.arrival);
+            }
+        }
     }
 
     #[test]

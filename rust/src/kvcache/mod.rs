@@ -12,6 +12,44 @@
 //! (`--chunk-cache on`, position-independent reuse) draw from one
 //! shared budget per tier, so enabling the chunk cache never grows the
 //! configured KV memory — see `crate::tree::chunk_cache`.
+//!
+//! # Three-tier cascade (`--disk on`)
+//!
+//! An optional NVMe-backed third tier (`crate::tree::disk_tier`) sits
+//! below the host. Eviction then cascades instead of dropping:
+//!
+//! ```text
+//!   GPU --swap-out--> host --spill--> disk --evict--> dropped
+//!    ^                 ^                |
+//!    '--(PCIe H2D)-----'--(restage)-----'
+//! ```
+//!
+//! Each demotion moves a payload exactly one level; a victim only
+//! descends when the level below admitted it (`NoRoom` degrades to the
+//! pre-disk drop, bit-identical to `--disk off`). Restage is the
+//! reverse walk: an admitted request that matches a disk-resident node
+//! pulls it back to host, and the ordinary promotion path lifts it to
+//! GPU.
+//!
+//! # Burst-charging contract
+//!
+//! The latency model charges tier traffic asymmetrically, mirroring
+//! the H2D rule the PCIe [`TransferModel`] already follows:
+//!
+//! - **Spills (downward) are counted, never charged.** Host→disk
+//!   writes ride the async staging queue (`flush_disk_staging`) off
+//!   the critical path; they appear in `disk_spills`/`disk_spill_bytes`
+//!   and in `Transfers::h2d_bytes`, but add zero seconds to any
+//!   request.
+//! - **Restages (upward) are charged as ONE coalesced read burst per
+//!   admitted batch**, exactly like the single PCIe H2D burst: all
+//!   disk reads an admission triggers sum into
+//!   `Admission::disk_read_bytes()` (= `Transfers::d2h_bytes`) and are
+//!   charged once at NVMe bandwidth plus one access latency — in the
+//!   simulator as a staged read burst, in the real path overlapped
+//!   with retrieval. `disk_read_bytes` is deliberately NOT folded into
+//!   `transfer_bytes()`, so PCIe and NVMe bursts price at their own
+//!   bandwidths.
 
 pub mod payload;
 

@@ -61,6 +61,17 @@ commands:
                                 bit-identical to the unshedded path)
              [--ttft-slo S]    (TTFT SLO seconds for --shed on and the
                                 goodput/attainment stats, default 5.0)
+             [--disk on|off]   (NVMe-backed third cache tier: host
+                                evictions demote to disk through an
+                                async staging thread and restage on
+                                hit; default off = two tiers,
+                                bit-identical)
+             [--disk-gib G]    (disk-tier budget GiB, default 0.0625)
+             [--cag off|auto]  (CAG corpus pinning: precompute and pin
+                                the whole corpus KV when it fits the
+                                pin budget, skipping retrieval;
+                                requires --chunk-cache on; default off)
+             [--cag-pin-gib G] (CAG pin budget GiB, default 0.00390625)
   simulate   --system ragcache|vllm|sglang --dataset mmlu --rate 0.8
              --requests 500 [--config FILE] [--model NAME] [--seed N]
              [--shards K] [--rebalance on|off] [--rebalance-interval N]
@@ -76,8 +87,24 @@ commands:
              [--ttft-slo S]    (TTFT SLO seconds for shedding and the
                                 goodput/attainment report, default 5.0)
              [--docs N]        (corpus size in documents, default 300000)
+             [--disk on|off]   (NVMe third cache tier behind host:
+                                evictions demote down the ladder,
+                                restages charged as ONE read burst per
+                                admitted batch; default off = two
+                                tiers, bit-identical)
+             [--disk-gib G]    (disk-tier budget GiB, default 1024)
+             [--disk-latency S] (per-read NVMe latency seconds,
+                                default 100e-6)
+             [--cag off|auto]  (per-tenant CAG corpus pinning: tenants
+                                whose whole corpus KV fits the pin
+                                budget skip retrieval entirely;
+                                requires --chunk-cache on; default off)
+             [--cag-pin-gib G] (CAG pin budget GiB, default 4)
   info       show models, GPUs, datasets, artifact status
 ";
+
+/// f64 GiB ↔ bytes for the `--*-gib` flags.
+const GIB_F: f64 = (1u64 << 30) as f64;
 
 fn main() {
     logger_init();
@@ -375,6 +402,43 @@ fn cmd_serve(args: &Args) -> Result<()> {
             return Err(anyhow!("--shed expects on|off, got '{other}'"))
         }
     };
+    let disk = match args.get_or("disk", "off") {
+        "on" => true,
+        "off" => false,
+        other => {
+            return Err(anyhow!("--disk expects on|off, got '{other}'"))
+        }
+    };
+    let disk_gib: f64 = args
+        .get_parse_or(
+            "disk-gib",
+            RealConfig::default().disk_cache_bytes as f64 / GIB_F,
+        )
+        .map_err(|e| anyhow!(e))?;
+    if disk && !(disk_gib > 0.0) {
+        return Err(anyhow!(
+            "--disk-gib must be > 0 with --disk on, got {disk_gib}"
+        ));
+    }
+    let cag = match args.get_or("cag", "off") {
+        "auto" => true,
+        "off" => false,
+        other => {
+            return Err(anyhow!("--cag expects off|auto, got '{other}'"))
+        }
+    };
+    let cag_pin_gib: f64 = args
+        .get_parse_or(
+            "cag-pin-gib",
+            RealConfig::default().cag_pin_bytes as f64 / GIB_F,
+        )
+        .map_err(|e| anyhow!(e))?;
+    if cag && !chunk_cache {
+        return Err(anyhow!(
+            "--cag auto requires --chunk-cache on (corpus pins are \
+             position-independent chunk entries)"
+        ));
+    }
     let default_slo = RealConfig::default().ttft_slo_s;
     let ttft_slo_s: f64 = args
         .get_parse_or("ttft-slo", default_slo)
@@ -410,6 +474,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         boundary_tokens,
         shed,
         ttft_slo_s,
+        disk,
+        disk_cache_bytes: (disk_gib * GIB_F) as u64,
+        cag,
+        cag_pin_bytes: (cag_pin_gib * GIB_F) as u64,
         ..RealConfig::default()
     };
     // One sharded cache service shared by every engine replica, the
@@ -497,7 +565,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let pjrt = PjrtModel::load(manifest.model(&model)?)
             .context("loading PJRT model")?;
         let parts = build_corpus_parts(docs, corpus_seed);
-        let server = RealServer::with_cache(
+        let doc_lens: Vec<usize> =
+            parts.doc_tokens.iter().map(|t| t.len()).collect();
+        let mut server = RealServer::with_cache(
             pjrt,
             parts.index,
             parts.em,
@@ -505,13 +575,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
             engine_cache.clone(),
         )
         .context(format!("assembling engine {engine}"))?;
+        if handler_cfg.cag {
+            // The serve path has one tenant owning the whole corpus;
+            // prestaging is idempotent across engine replicas (the
+            // shared cache reports already-present entries), so every
+            // engine arms its own policy against the same pins.
+            let corpora = vec![ragcache::workload::TenantCorpus {
+                tenant: 0,
+                doc_base: 0,
+                doc_tokens: doc_lens,
+            }];
+            server
+                .enable_cag(&corpora, &handler_cfg)
+                .context(format!("CAG prestage on engine {engine}"))?;
+        }
         Ok(RealHandler::new(server, handler_cfg.clone()))
     })?;
     println!(
         "ragcache serving on {} ({docs} docs, {workers} connection \
          workers, {engines} engines, {shards} tree shards, \
          {max_batch}-request admission batches, speculation {}, \
-         rebalancing {}, chunk cache {}, admission control {})",
+         rebalancing {}, chunk cache {}, admission control {}, \
+         disk tier {}, cag {})",
         server.addr,
         if speculate { "on" } else { "off" },
         if rebalance { "on" } else { "off" },
@@ -520,7 +605,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             format!("on (TTFT SLO {ttft_slo_s}s)")
         } else {
             "off".to_string()
-        }
+        },
+        if disk {
+            format!("on ({disk_gib} GiB)")
+        } else {
+            "off".to_string()
+        },
+        if cag { "auto" } else { "off" }
     );
     println!("protocol: newline-delimited JSON; ops: query/stats/shutdown");
     // Block until the acceptor thread exits (shutdown op).
@@ -609,32 +700,74 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     cfg.workload.num_docs = args
         .get_parse_or("docs", cfg.workload.num_docs)
         .map_err(|e| anyhow!(e))?;
+    if let Some(d) = args.get("disk") {
+        cfg.cache.disk = match d {
+            "on" => true,
+            "off" => false,
+            other => {
+                return Err(anyhow!(
+                    "--disk expects on|off, got '{other}'"
+                ))
+            }
+        };
+    }
+    let disk_gib: f64 = args
+        .get_parse_or("disk-gib", cfg.cache.disk_bytes as f64 / GIB_F)
+        .map_err(|e| anyhow!(e))?;
+    cfg.cache.disk_bytes = (disk_gib * GIB_F) as u64;
+    cfg.cache.disk_latency_s = args
+        .get_parse_or("disk-latency", cfg.cache.disk_latency_s)
+        .map_err(|e| anyhow!(e))?;
+    if let Some(c) = args.get("cag") {
+        cfg.cache.cag = match c {
+            "auto" => true,
+            "off" => false,
+            other => {
+                return Err(anyhow!(
+                    "--cag expects off|auto, got '{other}'"
+                ))
+            }
+        };
+    }
+    let pin_gib: f64 = args
+        .get_parse_or(
+            "cag-pin-gib",
+            cfg.cache.cag_pin_bytes as f64 / GIB_F,
+        )
+        .map_err(|e| anyhow!(e))?;
+    cfg.cache.cag_pin_bytes = (pin_gib * GIB_F) as u64;
     cfg.validate()?;
 
     let profile = DatasetProfile::lookup(&cfg.workload.dataset)?;
     let corpus = Corpus::wikipedia_like(cfg.workload.num_docs, seed);
+    let trace_opts = ragcache::workload::TraceOptions {
+        top_k: cfg.retrieval.top_k,
+        arrivals: ragcache::workload::ArrivalProcess::parse(
+            &cfg.workload.arrivals,
+        )?,
+        tenants: cfg.workload.tenants,
+        ..ragcache::workload::TraceOptions::default()
+    };
     let trace = Trace::generate_open_loop(
         profile,
         &corpus,
         cfg.workload.rate,
         cfg.workload.num_requests,
-        &ragcache::workload::TraceOptions {
-            top_k: cfg.retrieval.top_k,
-            arrivals: ragcache::workload::ArrivalProcess::parse(
-                &cfg.workload.arrivals,
-            )?,
-            tenants: cfg.workload.tenants,
-            ..ragcache::workload::TraceOptions::default()
-        },
+        &trace_opts,
         seed,
     );
-    let server = SimServer::build(
+    let mut server = SimServer::build(
         &cfg,
         trace,
         cfg.workload.num_docs,
         RetrievalTiming::default(),
         seed,
     )?;
+    if cfg.cache.cag {
+        let corpora =
+            ragcache::workload::tenant_corpora(&corpus, &trace_opts);
+        server.enable_cag(&corpora, cfg.cache.cag_pin_bytes);
+    }
     let out = server.run();
     let mut ttft = out.recorder.ttft();
     println!(
@@ -719,6 +852,34 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             ragcache::util::fmt_bytes(rb.host_bytes_moved),
             rb.refused_shrinks,
         );
+    }
+    if cfg.cache.disk {
+        println!(
+            "disk tier: {} spills ({} staged down), {} restage hits \
+             ({} read back)",
+            out.disk_spills,
+            ragcache::util::fmt_bytes(out.disk_spill_bytes),
+            out.disk_restage_hits,
+            ragcache::util::fmt_bytes(out.disk_restage_bytes),
+        );
+    }
+    if cfg.cache.cag {
+        let cag_tenants = out
+            .tenant_modes
+            .iter()
+            .filter(|(_, m)| {
+                *m == ragcache::controller::TenantMode::Cag
+            })
+            .count();
+        println!(
+            "cag: {} corpus KV pinned across {} of {} tenants",
+            ragcache::util::fmt_bytes(out.cag_pinned_bytes),
+            cag_tenants,
+            out.tenant_modes.len(),
+        );
+        for (t, m) in &out.tenant_modes {
+            println!("  tenant {t}: {}", m.as_str());
+        }
     }
     Ok(())
 }

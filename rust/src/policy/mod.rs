@@ -4,7 +4,11 @@
 //!
 //! A policy owns per-node statistics updates and the priority function;
 //! the knowledge tree owns the per-tier logical clocks and the leaf-only
-//! eviction mechanics.
+//! eviction mechanics. With the NVMe tier enabled (`--disk on`) the same
+//! priority order drives the full GPU → host → disk → drop cascade: the
+//! policy only ever names the victim, the tree decides (by room below)
+//! whether that victim demotes one level or drops — see
+//! `crate::kvcache` for the cascade and burst-charging contract.
 //!
 //! The same [`NodeStats`] + priority machinery also scores owned
 //! chunk-cache entries (`--chunk-cache on`): chunk entries compete with

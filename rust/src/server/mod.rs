@@ -989,7 +989,73 @@ fn merge_stats(parts: &[proto::StatsResult]) -> proto::StatsResult {
             .sum(),
         slo_attainment,
         slo_enabled: parts.iter().any(|p| p.slo_enabled),
+        // Disk-tier counters live in the shared tree counters: max-merge
+        // across engines like `tree_gpu_hit_bytes`; the occupancy gauges
+        // come from the same self-consistent snapshot as the shard
+        // arrays.
+        disk_spills: parts.iter().map(|p| p.disk_spills).max().unwrap_or(0),
+        disk_spill_bytes: parts
+            .iter()
+            .map(|p| p.disk_spill_bytes)
+            .max()
+            .unwrap_or(0),
+        disk_restage_hits: parts
+            .iter()
+            .map(|p| p.disk_restage_hits)
+            .max()
+            .unwrap_or(0),
+        disk_restage_bytes: parts
+            .iter()
+            .map(|p| p.disk_restage_bytes)
+            .max()
+            .unwrap_or(0),
+        disk_used: freshest.map(|p| p.disk_used).unwrap_or(0),
+        disk_capacity: freshest.map(|p| p.disk_capacity).unwrap_or(0),
+        tenants: merge_tenant_lines(parts),
     }
+}
+
+/// Element-wise merge of the per-tenant lines by tenant id: each engine
+/// serves its own request stream, so the counts sum; `mean_ttft_ms` is
+/// completed-weighted over the engines that served that tenant (an
+/// engine with no completions for a tenant contributes neither value
+/// nor weight); the CAG mode takes the max code (2 = Cag dominates —
+/// the policy is shared, so engines only ever disagree transiently on
+/// the cold→cached demand flip).
+fn merge_tenant_lines(
+    parts: &[proto::StatsResult],
+) -> Vec<proto::TenantLine> {
+    use std::collections::BTreeMap;
+    let mut by: BTreeMap<u32, proto::TenantLine> = BTreeMap::new();
+    let mut ttft_weight: BTreeMap<u32, f64> = BTreeMap::new();
+    for p in parts {
+        for t in &p.tenants {
+            let e = by.entry(t.tenant).or_insert_with(|| {
+                proto::TenantLine {
+                    tenant: t.tenant,
+                    ..Default::default()
+                }
+            });
+            e.requests += t.requests;
+            e.completed += t.completed;
+            e.shed += t.shed;
+            e.downgraded += t.downgraded;
+            e.slo_ok += t.slo_ok;
+            e.mode = e.mode.max(t.mode);
+            if t.completed > 0 && t.mean_ttft_ms.is_finite() {
+                let w = t.completed as f64;
+                // Weighted sum for now; normalized below.
+                e.mean_ttft_ms += t.mean_ttft_ms * w;
+                *ttft_weight.entry(t.tenant).or_insert(0.0) += w;
+            }
+        }
+    }
+    for (tenant, line) in by.iter_mut() {
+        let w = ttft_weight.get(tenant).copied().unwrap_or(0.0);
+        line.mean_ttft_ms =
+            if w > 0.0 { line.mean_ttft_ms / w } else { 0.0 };
+    }
+    by.into_values().collect()
 }
 
 /// Fan one `stats` request out to every engine and merge the answers,
@@ -1169,5 +1235,57 @@ mod tests {
         let empty = merge_stats(&[]);
         assert_eq!(empty.requests, 0);
         assert_eq!(empty.engines, 0);
+    }
+
+    #[test]
+    fn merge_combines_tenant_lines_and_disk_counters() {
+        let line = |tenant, completed, ttft, mode| proto::TenantLine {
+            tenant,
+            requests: completed + 1,
+            completed,
+            shed: 1,
+            slo_ok: completed,
+            mean_ttft_ms: ttft,
+            mode,
+            ..Default::default()
+        };
+        let mut a = part(8);
+        a.disk_spills = 5;
+        a.disk_restage_bytes = 4096;
+        a.disk_used = 100;
+        a.disk_capacity = 1 << 20;
+        a.tenants = vec![line(0, 4, 10.0, 2), line(1, 2, 30.0, 0)];
+        let mut b = part(8);
+        b.disk_spills = 7;
+        b.disk_restage_bytes = 2048;
+        b.disk_used = 900;
+        b.disk_capacity = 1 << 20;
+        // b is the fresher snapshot: more shard gauges reported.
+        b.shard_gpu_capacity = vec![1];
+        // Tenant 1 completed nothing on b: NaN mean must contribute
+        // neither value nor weight; the cold→cached flip (code 1)
+        // must still win the mode max.
+        b.tenants = vec![line(0, 2, 4.0, 2), line(1, 0, f64::NAN, 1)];
+        let m = merge_stats(&[a, b]);
+        // Shared-tree counters max-merge; gauges follow the freshest
+        // snapshot (b, which reported shard arrays).
+        assert_eq!(m.disk_spills, 7);
+        assert_eq!(m.disk_restage_bytes, 4096);
+        assert_eq!(m.disk_used, 900);
+        assert_eq!(m.disk_capacity, 1 << 20);
+        assert_eq!(m.tenants.len(), 2);
+        let t0 = &m.tenants[0];
+        assert_eq!(t0.tenant, 0);
+        assert_eq!(t0.requests, 8);
+        assert_eq!(t0.completed, 6);
+        assert_eq!(t0.shed, 2);
+        assert_eq!(t0.mode, 2);
+        let want = (10.0 * 4.0 + 4.0 * 2.0) / 6.0;
+        assert!((t0.mean_ttft_ms - want).abs() < 1e-12);
+        let t1 = &m.tenants[1];
+        assert_eq!(t1.tenant, 1);
+        assert_eq!(t1.completed, 2);
+        assert_eq!(t1.mean_ttft_ms, 30.0);
+        assert_eq!(t1.mode, 1);
     }
 }

@@ -28,6 +28,27 @@ pub struct QueryResult {
     pub text: String,
 }
 
+/// One tenant's slice of the aggregate serving metrics, with its CAG
+/// admission mode. The fan-out merge combines lines element-wise by
+/// tenant id: counts sum, `mean_ttft_ms` is completed-weighted.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TenantLine {
+    pub tenant: u32,
+    pub requests: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub downgraded: u64,
+    /// Requests whose TTFT met the SLO (meaningful only with
+    /// `slo_enabled` on the enclosing stats).
+    pub slo_ok: u64,
+    /// Mean TTFT over this tenant's served requests, milliseconds
+    /// (0 when none served — never NaN on the wire).
+    pub mean_ttft_ms: f64,
+    /// CAG admission mode wire code: 0 = cold-RAG, 1 = cached-RAG,
+    /// 2 = CAG (corpus pinned, retrieval-free).
+    pub mode: u8,
+}
+
 /// Aggregate stats. Tree counters aggregate every shard of the (shared)
 /// sharded cache; `engines` reports how many engine replicas answered
 /// the merged `stats` request.
@@ -98,6 +119,27 @@ pub struct StatsResult {
     /// the fields above are only meaningful when this is true. The
     /// fan-out merge ORs it across engines.
     pub slo_enabled: bool,
+    /// Disk-tier spills (host→disk demotions staged), aggregated
+    /// across shards; 0 with `--disk off`. Shared-tree counter:
+    /// max-merged across engines.
+    pub disk_spills: u64,
+    /// KV bytes those spills staged (async writes — counted, never
+    /// charged).
+    pub disk_spill_bytes: u64,
+    /// Disk→host restages that served admissions (max-merged).
+    pub disk_restage_hits: u64,
+    /// KV bytes those restages read — the per-batch NVMe read-burst
+    /// charge (max-merged).
+    pub disk_restage_bytes: u64,
+    /// Disk bytes in use across shards (gauge, from the same snapshot
+    /// as the shard arrays; both zero with `--disk off`).
+    pub disk_used: u64,
+    /// Disk capacity across shards (same snapshot).
+    pub disk_capacity: u64,
+    /// Per-tenant SLO/mode breakdown, ascending tenant id (a single
+    /// line for tenant 0 on legacy single-tenant deployments). The
+    /// fan-out merge combines lines element-wise by tenant id.
+    pub tenants: Vec<TenantLine>,
 }
 
 /// Server → client.
@@ -237,6 +279,41 @@ pub fn encode_response(resp: &Response) -> String {
             ),
             ("slo_attainment", Json::num(s.slo_attainment)),
             ("slo_enabled", Json::Bool(s.slo_enabled)),
+            ("disk_spills", Json::num(s.disk_spills as f64)),
+            ("disk_spill_bytes", Json::num(s.disk_spill_bytes as f64)),
+            ("disk_restage_hits", Json::num(s.disk_restage_hits as f64)),
+            (
+                "disk_restage_bytes",
+                Json::num(s.disk_restage_bytes as f64),
+            ),
+            ("disk_used", Json::num(s.disk_used as f64)),
+            ("disk_capacity", Json::num(s.disk_capacity as f64)),
+            (
+                "tenants",
+                Json::Arr(
+                    s.tenants
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("tenant", Json::num(t.tenant as f64)),
+                                ("requests", Json::num(t.requests as f64)),
+                                (
+                                    "completed",
+                                    Json::num(t.completed as f64),
+                                ),
+                                ("shed", Json::num(t.shed as f64)),
+                                (
+                                    "downgraded",
+                                    Json::num(t.downgraded as f64),
+                                ),
+                                ("slo_ok", Json::num(t.slo_ok as f64)),
+                                ("mean_ttft_ms", Json::num(t.mean_ttft_ms)),
+                                ("mode", Json::num(t.mode as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ]),
         Response::Ok => Json::obj(vec![("type", Json::str("ok"))]),
         Response::Error { message } => Json::obj(vec![
@@ -252,6 +329,37 @@ fn parse_u64_arr(v: &Json, key: &str) -> Vec<u64> {
         .and_then(Json::as_arr)
         .map(|a| a.iter().filter_map(Json::as_u64).collect())
         .unwrap_or_default()
+}
+
+fn parse_tenant_lines(v: &Json) -> Vec<TenantLine> {
+    let Some(arr) = v.get("tenants").and_then(Json::as_arr) else {
+        return Vec::new();
+    };
+    arr.iter()
+        .map(|t| TenantLine {
+            tenant: t.get("tenant").and_then(Json::as_u64).unwrap_or(0)
+                as u32,
+            requests: t
+                .get("requests")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            completed: t
+                .get("completed")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            shed: t.get("shed").and_then(Json::as_u64).unwrap_or(0),
+            downgraded: t
+                .get("downgraded")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            slo_ok: t.get("slo_ok").and_then(Json::as_u64).unwrap_or(0),
+            mean_ttft_ms: t
+                .get("mean_ttft_ms")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+            mode: t.get("mode").and_then(Json::as_u64).unwrap_or(0) as u8,
+        })
+        .collect()
 }
 
 pub fn parse_response(line: &str) -> Result<Response> {
@@ -386,6 +494,31 @@ pub fn parse_response(line: &str) -> Result<Response> {
                 .get("slo_enabled")
                 .and_then(Json::as_bool)
                 .unwrap_or(false),
+            disk_spills: v
+                .get("disk_spills")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            disk_spill_bytes: v
+                .get("disk_spill_bytes")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            disk_restage_hits: v
+                .get("disk_restage_hits")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            disk_restage_bytes: v
+                .get("disk_restage_bytes")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            disk_used: v
+                .get("disk_used")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            disk_capacity: v
+                .get("disk_capacity")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            tenants: parse_tenant_lines(v),
         })),
         "ok" => Ok(Response::Ok),
         "error" => Ok(Response::Error {
@@ -458,6 +591,34 @@ mod tests {
                 downgraded_requests: 2,
                 slo_attainment: 0.9,
                 slo_enabled: true,
+                disk_spills: 11,
+                disk_spill_bytes: 5632,
+                disk_restage_hits: 8,
+                disk_restage_bytes: 4096,
+                disk_used: 9216,
+                disk_capacity: 65536,
+                tenants: vec![
+                    TenantLine {
+                        tenant: 0,
+                        requests: 6,
+                        completed: 5,
+                        shed: 1,
+                        downgraded: 1,
+                        slo_ok: 4,
+                        mean_ttft_ms: 7.25,
+                        mode: 2,
+                    },
+                    TenantLine {
+                        tenant: 1,
+                        requests: 4,
+                        completed: 4,
+                        shed: 0,
+                        downgraded: 0,
+                        slo_ok: 3,
+                        mean_ttft_ms: 11.5,
+                        mode: 1,
+                    },
+                ],
             }),
             Response::Ok,
             Response::Error {

@@ -1,0 +1,525 @@
+//! NVMe-backed third cache tier (`--disk on`): a slotted backing store
+//! below the host tier, extending the eviction cascade to
+//! GPU → host → disk → drop.
+//!
+//! At production corpus scale the host tier thrashes exactly the way
+//! the GPU tier did before cross-shard rebalancing: evicted knowledge
+//! KV is recomputed from scratch. The disk tier catches those
+//! evictions instead — a host eviction *demotes* the entry's KV here
+//! when the disk budget has room, and a later request *restages* it
+//! disk → host → GPU instead of re-prefilling the document.
+//!
+//! Layout and charging model:
+//!
+//! - **Slotted backing store.** Payload rows are serialized into
+//!   fixed-size slots (one KV page per slot, mirroring the vLLM block
+//!   granularity of the RAM tiers), allocated from a free list — the
+//!   in-memory moral equivalent of a page-aligned NVMe file. Byte
+//!   accounting runs through the same [`TierAllocator`] type as the
+//!   GPU/host tiers, so the rebalancer/occupancy machinery reads all
+//!   three tiers uniformly.
+//! - **Async staging queue.** Demotions enqueue; the budget is charged
+//!   immediately but serialization into slots happens on a staging
+//!   flush (a background thread in the real path, a per-iteration
+//!   drain in the simulator). Spill *writes* therefore cost no request
+//!   latency — only the `h2d` byte counters record them. Restage
+//!   *reads* are synchronous: their `d2h` bytes coalesce into the
+//!   per-batch staged-read burst charged beside the H2D burst (see
+//!   [`crate::controller::BatchAdmission`]).
+//! - **Pinned corpus entries** (CAG mode, "Don't Do RAG"): a pinned
+//!   entry is restaged by *copy* — the disk copy is never freed, so a
+//!   CAG tenant's corpus KV can always be recovered without recompute
+//!   (the disk-tier analogue of swap-out-only-once).
+//!
+//! Keys are stable identities: a tree node's arena index (nodes are
+//! never removed from the arena, only their tier/payload cleared) or a
+//! chunk-cache document id for demoted owned entries.
+
+use super::{DocId, NodeId};
+use crate::kvcache::{KvPayload, TierAllocator};
+use std::collections::{BTreeMap, VecDeque};
+
+/// Identity of a disk-resident KV span: the tree node it belonged to,
+/// or the chunk-cache document of a demoted owned entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub(crate) enum DiskKey {
+    Node(NodeId),
+    Chunk(DocId),
+}
+
+/// Outcome of a demotion attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum SpillOutcome {
+    /// Entry accepted: budget charged, payload queued for staging.
+    Stored,
+    /// A pinned copy with the same span is already on disk — zero
+    /// movement needed (the swap-out-only-once analogue).
+    AlreadyPresent,
+    /// The disk budget cannot hold it; the caller falls back to the
+    /// pre-disk drop path.
+    NoRoom,
+}
+
+/// What a restage recovered.
+#[derive(Debug)]
+pub(crate) struct Restaged {
+    pub tokens: usize,
+    /// RoPE base offset recorded at demotion (chunk entries).
+    pub rope_offset: usize,
+    /// Page-rounded bytes the entry held on disk.
+    pub bytes: u64,
+    /// The recovered KV rows (None in accounting-only simulation).
+    pub payload: Option<KvPayload>,
+    /// Whether the disk copy was retained (pinned corpus entries).
+    pub retained: bool,
+}
+
+/// Fixed-size slot store: the file layout. Each slot holds one KV page
+/// worth of serialized rows; freed slots are reused LIFO.
+#[derive(Debug)]
+struct SlottedStore {
+    slot_bytes: usize,
+    slots: Vec<Option<Vec<u8>>>,
+    free: Vec<usize>,
+}
+
+impl SlottedStore {
+    fn new(slot_bytes: usize) -> Self {
+        SlottedStore {
+            slot_bytes: slot_bytes.max(1),
+            slots: Vec::new(),
+            free: Vec::new(),
+        }
+    }
+
+    /// Write `data` across as many slots as it needs, returning them.
+    fn write(&mut self, data: &[u8]) -> Vec<usize> {
+        let mut out = Vec::new();
+        for chunk in data.chunks(self.slot_bytes) {
+            let idx = match self.free.pop() {
+                Some(i) => {
+                    self.slots[i] = Some(chunk.to_vec());
+                    i
+                }
+                None => {
+                    self.slots.push(Some(chunk.to_vec()));
+                    self.slots.len() - 1
+                }
+            };
+            out.push(idx);
+        }
+        out
+    }
+
+    /// Reassemble `byte_len` bytes from `slots` in order.
+    fn read(&self, slots: &[usize], byte_len: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(byte_len);
+        for &i in slots {
+            let data = self.slots[i]
+                .as_ref()
+                .expect("reading a freed disk slot");
+            out.extend_from_slice(data);
+        }
+        debug_assert_eq!(out.len(), byte_len);
+        out
+    }
+
+    fn release(&mut self, slots: &[usize]) {
+        for &i in slots {
+            debug_assert!(self.slots[i].is_some(), "double-free of slot");
+            self.slots[i] = None;
+            self.free.push(i);
+        }
+    }
+
+    fn live_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+}
+
+/// Where an entry's payload currently lives.
+#[derive(Debug)]
+enum EntryState {
+    /// Queued for the staging writer; rows still in memory.
+    Staged(Option<KvPayload>),
+    /// Serialized into backing-store slots.
+    Stored {
+        slots: Vec<usize>,
+        byte_len: usize,
+        has_payload: bool,
+    },
+}
+
+/// One disk-resident KV span.
+#[derive(Debug)]
+struct DiskEntry {
+    tokens: usize,
+    rope_offset: usize,
+    /// Page-rounded bytes charged against the disk allocator.
+    bytes: u64,
+    /// CAG corpus pin: restage copies, the disk copy is never freed.
+    pinned: bool,
+    state: EntryState,
+}
+
+/// The disk tier: budget accounting + slotted store + staging queue.
+#[derive(Debug)]
+pub(crate) struct DiskTier {
+    alloc: TierAllocator,
+    store: SlottedStore,
+    entries: BTreeMap<DiskKey, DiskEntry>,
+    /// Keys awaiting the staging writer, in demotion order.
+    staging: VecDeque<DiskKey>,
+}
+
+fn serialize(p: &KvPayload) -> Vec<u8> {
+    let mut out = Vec::with_capacity(p.floats().len() * 4);
+    for f in p.floats() {
+        out.extend_from_slice(&f.to_le_bytes());
+    }
+    out
+}
+
+fn deserialize(bytes: &[u8], tokens: usize) -> KvPayload {
+    let floats: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    KvPayload::new(floats, tokens)
+}
+
+impl DiskTier {
+    pub fn new(capacity: u64, slot_bytes: usize) -> Self {
+        DiskTier {
+            alloc: TierAllocator::new(capacity),
+            store: SlottedStore::new(slot_bytes),
+            entries: BTreeMap::new(),
+            staging: VecDeque::new(),
+        }
+    }
+
+    pub fn used(&self) -> u64 {
+        self.alloc.used()
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.alloc.capacity()
+    }
+
+    pub fn contains(&self, key: DiskKey) -> bool {
+        self.entries.contains_key(&key)
+    }
+
+    /// Recorded token span of a disk entry (restage validation).
+    pub fn entry_tokens(&self, key: DiskKey) -> Option<usize> {
+        self.entries.get(&key).map(|e| e.tokens)
+    }
+
+    pub fn entry_count(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Entries still queued for the staging writer.
+    pub fn staged_len(&self) -> usize {
+        self.staging.len()
+    }
+
+    /// All resident keys in order — the tree's invariant checker walks
+    /// these to cross-validate node-keyed entries against the arena.
+    pub fn keys(&self) -> impl Iterator<Item = DiskKey> + '_ {
+        self.entries.keys().copied()
+    }
+
+    /// Demote a KV span to disk. `bytes` is the page-rounded charge.
+    /// The budget is charged immediately; the payload rides the async
+    /// staging queue until the next flush. A same-span entry already on
+    /// disk (a pinned corpus copy surviving its restage) reports
+    /// [`SpillOutcome::AlreadyPresent`] — zero movement; a stale entry
+    /// with a different span is replaced (its pin carries over).
+    pub fn spill(
+        &mut self,
+        key: DiskKey,
+        tokens: usize,
+        rope_offset: usize,
+        bytes: u64,
+        payload: Option<KvPayload>,
+        pinned: bool,
+    ) -> SpillOutcome {
+        let mut keep_pin = pinned;
+        if let Some(e) = self.entries.get(&key) {
+            if e.tokens == tokens {
+                return SpillOutcome::AlreadyPresent;
+            }
+            keep_pin |= e.pinned;
+            self.discard(key);
+        }
+        if !self.alloc.alloc(bytes) {
+            return SpillOutcome::NoRoom;
+        }
+        self.entries.insert(
+            key,
+            DiskEntry {
+                tokens,
+                rope_offset,
+                bytes,
+                pinned: keep_pin,
+                state: EntryState::Staged(payload),
+            },
+        );
+        self.staging.push_back(key);
+        SpillOutcome::Stored
+    }
+
+    /// Bring an entry back from disk. Unpinned entries are consumed
+    /// (slots freed, budget released); pinned corpus entries are read
+    /// by copy and retained. Returns None when the key is absent.
+    pub fn restage(&mut self, key: DiskKey) -> Option<Restaged> {
+        let pinned = self.entries.get(&key)?.pinned;
+        if pinned {
+            let e = self.entries.get(&key)?;
+            let payload = match &e.state {
+                EntryState::Staged(p) => p.clone(),
+                EntryState::Stored {
+                    slots,
+                    byte_len,
+                    has_payload,
+                } => has_payload.then(|| {
+                    deserialize(
+                        &self.store.read(slots, *byte_len),
+                        e.tokens,
+                    )
+                }),
+            };
+            return Some(Restaged {
+                tokens: e.tokens,
+                rope_offset: e.rope_offset,
+                bytes: e.bytes,
+                payload,
+                retained: true,
+            });
+        }
+        let e = self.entries.remove(&key)?;
+        let payload = match e.state {
+            EntryState::Staged(p) => p,
+            EntryState::Stored {
+                slots,
+                byte_len,
+                has_payload,
+            } => {
+                let p = has_payload.then(|| {
+                    deserialize(
+                        &self.store.read(&slots, byte_len),
+                        e.tokens,
+                    )
+                });
+                self.store.release(&slots);
+                p
+            }
+        };
+        self.alloc.release(e.bytes);
+        Some(Restaged {
+            tokens: e.tokens,
+            rope_offset: e.rope_offset,
+            bytes: e.bytes,
+            payload,
+            retained: false,
+        })
+    }
+
+    /// Drop an entry without reading it (a stale span superseded by a
+    /// re-cached node). Returns whether anything was dropped.
+    pub fn discard(&mut self, key: DiskKey) -> bool {
+        let Some(e) = self.entries.remove(&key) else {
+            return false;
+        };
+        if let EntryState::Stored { slots, .. } = &e.state {
+            self.store.release(slots);
+        }
+        self.alloc.release(e.bytes);
+        true
+    }
+
+    /// Drain the async staging queue: serialize every still-queued
+    /// payload into backing-store slots. Returns entries written. The
+    /// real path runs this on a background staging thread; the
+    /// simulator drains once per engine iteration.
+    pub fn flush_staging(&mut self) -> usize {
+        let mut written = 0;
+        while let Some(key) = self.staging.pop_front() {
+            let Some(e) = self.entries.get_mut(&key) else {
+                continue; // restaged or discarded before the flush
+            };
+            let EntryState::Staged(payload) = &e.state else {
+                continue; // already flushed (re-queued pin)
+            };
+            let (slots, byte_len, has_payload) = match payload {
+                Some(p) => {
+                    let data = serialize(p);
+                    let len = data.len();
+                    (self.store.write(&data), len, true)
+                }
+                None => (Vec::new(), 0, false),
+            };
+            e.state = EntryState::Stored {
+                slots,
+                byte_len,
+                has_payload,
+            };
+            written += 1;
+        }
+        written
+    }
+
+    /// Structural invariants: budget accounting matches the entry set,
+    /// and every backing-store slot is owned by exactly one entry.
+    pub fn check_invariants(&self) {
+        let total: u64 = self.entries.values().map(|e| e.bytes).sum();
+        assert_eq!(total, self.alloc.used(), "disk accounting");
+        let mut seen = std::collections::BTreeSet::new();
+        for (key, e) in &self.entries {
+            if let EntryState::Stored {
+                slots, byte_len, ..
+            } = &e.state
+            {
+                for &s in slots {
+                    assert!(
+                        seen.insert(s),
+                        "slot {s} owned twice ({key:?})"
+                    );
+                    assert!(
+                        self.store.slots[s].is_some(),
+                        "live slot {s} freed ({key:?})"
+                    );
+                }
+                let cap = slots.len() * self.store.slot_bytes;
+                assert!(
+                    *byte_len <= cap,
+                    "entry {key:?}: {byte_len} B in {cap} B of slots"
+                );
+            }
+        }
+        assert_eq!(
+            seen.len(),
+            self.store.live_slots(),
+            "orphaned live slots in the backing store"
+        );
+        for key in &self.staging {
+            // A queued key may have been consumed already (restage
+            // before flush); if present it must still be staged.
+            if let Some(e) = self.entries.get(key) {
+                assert!(
+                    matches!(e.state, EntryState::Staged(_)),
+                    "queued entry {key:?} already stored"
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node_key(i: usize) -> DiskKey {
+        DiskKey::Node(NodeId(i))
+    }
+
+    fn payload(tokens: usize, seed: f32) -> KvPayload {
+        let data: Vec<f32> =
+            (0..tokens * 4).map(|i| seed + i as f32).collect();
+        KvPayload::new(data, tokens)
+    }
+
+    #[test]
+    fn spill_restage_roundtrips_payload_bits() {
+        let mut d = DiskTier::new(4096, 128);
+        let p = payload(16, 0.5);
+        assert_eq!(
+            d.spill(node_key(1), 16, 0, 1024, Some(p.clone()), false),
+            SpillOutcome::Stored
+        );
+        assert_eq!(d.used(), 1024);
+        // Through the staging queue AND the slotted store.
+        assert_eq!(d.flush_staging(), 1);
+        d.check_invariants();
+        let r = d.restage(node_key(1)).expect("present");
+        assert_eq!(r.tokens, 16);
+        assert!(!r.retained);
+        assert_eq!(r.payload.unwrap().floats(), p.floats());
+        assert_eq!(d.used(), 0, "unpinned restage frees the bytes");
+        d.check_invariants();
+    }
+
+    #[test]
+    fn restage_before_flush_serves_from_queue() {
+        let mut d = DiskTier::new(4096, 128);
+        let p = payload(8, 3.0);
+        d.spill(node_key(2), 8, 0, 512, Some(p.clone()), false);
+        let r = d.restage(node_key(2)).expect("staged entry readable");
+        assert_eq!(r.payload.unwrap().floats(), p.floats());
+        // The queued key is now dangling; flush skips it cleanly.
+        assert_eq!(d.flush_staging(), 0);
+        assert_eq!(d.used(), 0);
+        d.check_invariants();
+    }
+
+    #[test]
+    fn pinned_entry_is_restaged_by_copy() {
+        let mut d = DiskTier::new(4096, 64);
+        let p = payload(8, 7.0);
+        d.spill(DiskKey::Chunk(9), 8, 4, 512, Some(p.clone()), true);
+        d.flush_staging();
+        for _ in 0..2 {
+            let r = d.restage(DiskKey::Chunk(9)).expect("retained");
+            assert!(r.retained);
+            assert_eq!(r.rope_offset, 4);
+            assert_eq!(r.payload.unwrap().floats(), p.floats());
+        }
+        assert_eq!(d.used(), 512, "pinned copy never freed");
+        // Re-demoting the same span is free (already present).
+        assert_eq!(
+            d.spill(DiskKey::Chunk(9), 8, 4, 512, Some(p), true),
+            SpillOutcome::AlreadyPresent
+        );
+        assert_eq!(d.used(), 512);
+        d.check_invariants();
+    }
+
+    #[test]
+    fn budget_refusal_and_slot_reuse() {
+        let mut d = DiskTier::new(1024, 32);
+        assert_eq!(
+            d.spill(node_key(1), 16, 0, 1024, Some(payload(16, 0.0)), false),
+            SpillOutcome::Stored
+        );
+        assert_eq!(
+            d.spill(node_key(2), 4, 0, 256, None, false),
+            SpillOutcome::NoRoom
+        );
+        d.flush_staging();
+        let slots_before = d.store.slots.len();
+        d.restage(node_key(1));
+        // Freed slots are reused, not leaked.
+        d.spill(node_key(3), 16, 0, 1024, Some(payload(16, 1.0)), false);
+        d.flush_staging();
+        assert_eq!(d.store.slots.len(), slots_before);
+        d.check_invariants();
+    }
+
+    #[test]
+    fn stale_span_is_replaced_and_accounting_only_entries_work() {
+        let mut d = DiskTier::new(4096, 128);
+        d.spill(node_key(5), 8, 0, 512, None, false);
+        d.flush_staging();
+        // Same key, new span (skeleton re-cached with new tokens).
+        assert_eq!(
+            d.spill(node_key(5), 16, 0, 1024, None, false),
+            SpillOutcome::Stored
+        );
+        assert_eq!(d.used(), 1024, "old charge released");
+        let r = d.restage(node_key(5)).expect("present");
+        assert_eq!(r.tokens, 16);
+        assert!(r.payload.is_none(), "accounting-only entry");
+        d.check_invariants();
+    }
+}

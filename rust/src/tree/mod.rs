@@ -4,22 +4,38 @@
 //! and `[D2,D3]` produce different KV for `D3`, hence a tree, not a map.
 //!
 //! Nodes are partitioned across the memory hierarchy: a GPU segment (a
-//! connected top region including the root), a host segment below it, and
-//! free (uncached). Eviction is leaf-frontier-only (Algorithm 1
+//! connected top region including the root), a host segment below it,
+//! an optional disk segment ([`disk_tier`], `--disk on`), and free
+//! (uncached). Eviction is leaf-frontier-only (Algorithm 1
 //! `EVICT_IN_GPU`), preserving the invariant that every cached node's
-//! parent is cached in the same or faster tier. Swap-out-only-once (§5.1)
-//! keeps a host copy after the first GPU eviction so later GPU evictions
-//! are zero-copy.
+//! parent is cached in the same or faster tier. Swap-out-only-once
+//! (§5.1) keeps a host copy after the first GPU eviction so later GPU
+//! evictions are zero-copy.
+//!
+//! With the disk tier enabled the eviction cascade is
+//! GPU → host → disk → drop: a host eviction (or a GPU eviction the
+//! host cannot absorb) *demotes* the KV to the slotted disk store when
+//! the disk budget has room, and the prefix walk *restages* a
+//! disk-resident node (disk → host, then the normal host → GPU
+//! promotion) instead of treating it as a miss:
+//!
+//! ```text
+//!                    ┌────────────── eviction cascade ──────────────┐
+//!   GPU tier ──g2h──► host tier ──h2d──► disk tier ──(no room)──► drop
+//!      ▲   promote      ▲    restage       │
+//!      └──h2g───────────┴────d2h───────────┘   (admission path)
+//! ```
 //!
 //! Beside the tree sits the optional **chunk cache** ([`chunk_cache`],
 //! `--chunk-cache on`): a per-document registry enabling
 //! position-independent KV reuse with boundary-token recompute. Lookup
-//! order is prefix walk → chunk probe → miss:
+//! order is prefix walk → chunk probe → (disk restage → re-probe) →
+//! miss:
 //!
 //! ```text
 //!   request docs ──► prefix walk (tree) ──► matched prefix → α
-//!                        │ docs that miss the prefix path
-//!                        ▼
+//!                        │ docs that miss the prefix path      ▲
+//!                        ▼                               disk restage
 //!                    chunk probe ──► hit: reuse at ANY position
 //!                        │           (tokens − r into α, r boundary
 //!                        │            tokens into β; h2g bytes ride
@@ -29,15 +45,20 @@
 //!   tier bytes:  tree nodes and OWNED chunk entries share the same
 //!   GPU/host TierAllocators and compete for eviction under the same
 //!   policy + per-tier clocks; a doc cached as a tree node is only a
-//!   zero-byte Ref in the chunk registry (no double residency).
+//!   zero-byte Ref in the chunk registry (no double residency). The
+//!   disk tier holds demoted nodes (keyed by arena index) and demoted
+//!   owned chunk entries (keyed by doc), plus CAG-pinned corpus
+//!   entries that are restaged by copy (never freed).
 //! ```
 
 pub mod chunk_cache;
+pub mod disk_tier;
 
 use crate::kvcache::{KvPayload, PageSpec, Tier, TierAllocator};
 use crate::policy::{AccessCtx, NodeStats, ReplacementPolicy};
 use chunk_cache::{ChunkEntry, ChunkSlot, ChunkState};
 pub use chunk_cache::{ChunkHit, ChunkSource};
+use disk_tier::{DiskKey, DiskTier, SpillOutcome};
 use std::collections::BTreeMap;
 
 /// Document identifier (knowledge-base key).
@@ -87,12 +108,23 @@ pub struct Transfers {
     pub h2g_bytes: u64,
     /// GPU→host bytes (first-time swap-outs).
     pub g2h_bytes: u64,
+    /// Host→disk bytes (third-tier demotions, `--disk on`). Spills ride
+    /// the async staging queue, so they are *counted* here but never
+    /// charged as request latency.
+    pub h2d_bytes: u64,
+    /// Disk→host bytes (restage reads). Synchronous: they coalesce into
+    /// the per-batch staged-read burst, charged beside the H2D burst
+    /// through [`PipelineDriver::disk_read_time`]
+    /// (`crate::controller::PipelineDriver`).
+    pub d2h_bytes: u64,
 }
 
 impl Transfers {
     pub fn merge(&mut self, other: Transfers) {
         self.h2g_bytes += other.h2g_bytes;
         self.g2h_bytes += other.g2h_bytes;
+        self.h2d_bytes += other.h2d_bytes;
+        self.d2h_bytes += other.d2h_bytes;
     }
 }
 
@@ -139,6 +171,16 @@ pub struct TreeCounters {
     /// Boundary tokens re-prefilled across all chunk hits (the `r`-token
     /// cross-attention repair cost).
     pub boundary_recompute_tokens: u64,
+    /// Host→disk demotions accepted by the third tier (`--disk on`).
+    pub disk_spills: u64,
+    /// Payload bytes those demotions wrote (async, uncharged).
+    pub disk_spill_bytes: u64,
+    /// Disk-resident entries restaged on the admission path instead of
+    /// recomputed — the third tier's hit counter.
+    pub disk_restage_hits: u64,
+    /// Payload bytes those restages read (charged per-batch as one
+    /// staged-read burst).
+    pub disk_restage_bytes: u64,
 }
 
 impl TreeCounters {
@@ -155,6 +197,10 @@ impl TreeCounters {
         self.chunk_hits += other.chunk_hits;
         self.chunk_hit_bytes += other.chunk_hit_bytes;
         self.boundary_recompute_tokens += other.boundary_recompute_tokens;
+        self.disk_spills += other.disk_spills;
+        self.disk_spill_bytes += other.disk_spill_bytes;
+        self.disk_restage_hits += other.disk_restage_hits;
+        self.disk_restage_bytes += other.disk_restage_bytes;
     }
 }
 
@@ -166,6 +212,9 @@ pub struct TierOccupancy {
     pub gpu_capacity: u64,
     pub host_used: u64,
     pub host_capacity: u64,
+    /// Third-tier gauges; both zero with `--disk off`.
+    pub disk_used: u64,
+    pub disk_capacity: u64,
 }
 
 /// The multilevel knowledge tree.
@@ -189,6 +238,9 @@ pub struct KnowledgeTree {
     /// Chunk-cache registry (`--chunk-cache on`); None = disabled, and
     /// the tree behaves bit-identically to the chunk-free path.
     chunk: Option<ChunkState>,
+    /// Disk third tier (`--disk on`); None = disabled, and every code
+    /// path reduces structurally to the two-tier cascade.
+    disk: Option<DiskTier>,
 }
 
 impl KnowledgeTree {
@@ -235,7 +287,47 @@ impl KnowledgeTree {
             gpu_resident,
             host_resident: std::collections::BTreeSet::new(),
             chunk: None,
+            disk: None,
         }
+    }
+
+    /// Enable the NVMe-backed third tier with a `disk_bytes` budget.
+    /// Called at build time; a tree never enabled carries no disk state
+    /// at all — the off path is structurally the two-tier cascade.
+    pub fn enable_disk_tier(&mut self, disk_bytes: u64) {
+        let slot_bytes =
+            self.page.block_tokens * self.page.kv_bytes_per_token;
+        self.disk = Some(DiskTier::new(disk_bytes, slot_bytes));
+    }
+
+    pub fn disk_enabled(&self) -> bool {
+        self.disk.is_some()
+    }
+
+    pub fn disk_used(&self) -> u64 {
+        self.disk.as_ref().map_or(0, |d| d.used())
+    }
+
+    pub fn disk_capacity(&self) -> u64 {
+        self.disk.as_ref().map_or(0, |d| d.capacity())
+    }
+
+    /// Disk-resident entries (nodes + demoted chunk entries).
+    pub fn disk_entry_count(&self) -> usize {
+        self.disk.as_ref().map_or(0, |d| d.entry_count())
+    }
+
+    /// Demotions still queued for the async staging writer.
+    pub fn disk_staged_len(&self) -> usize {
+        self.disk.as_ref().map_or(0, |d| d.staged_len())
+    }
+
+    /// Drain the async staging queue into the slotted store. The real
+    /// path calls this from its background staging thread; the
+    /// simulator drains once per engine iteration. Returns entries
+    /// written; a no-op (0) with the disk tier off.
+    pub fn flush_disk_staging(&mut self) -> usize {
+        self.disk.as_mut().map_or(0, |d| d.flush_staging())
     }
 
     /// Enable chunk-level position-independent reuse with `r =
@@ -312,13 +404,15 @@ impl KnowledgeTree {
         self.host.capacity()
     }
 
-    /// Snapshot of both tiers' used/capacity gauges.
+    /// Snapshot of all tiers' used/capacity gauges.
     pub fn occupancy(&self) -> TierOccupancy {
         TierOccupancy {
             gpu_used: self.gpu.used(),
             gpu_capacity: self.gpu.capacity(),
             host_used: self.host.used(),
             host_capacity: self.host.capacity(),
+            disk_used: self.disk_used(),
+            disk_capacity: self.disk_capacity(),
         }
     }
 
@@ -372,7 +466,7 @@ impl KnowledgeTree {
             }
         }
         while self.host.used() > host_bytes {
-            if !self.evict_one_host(None) {
+            if !self.evict_one_host(None, &mut transfers) {
                 return Err(transfers);
             }
         }
@@ -466,6 +560,97 @@ impl KnowledgeTree {
             cur = child;
         }
         result
+    }
+
+    /// Prefix match that treats a disk-resident node as a hit: when the
+    /// walk reaches an uncached skeleton node whose KV the disk tier
+    /// holds, the node is restaged disk → host (charged as `d2h` bytes
+    /// into `transfers`; the controller coalesces them into one
+    /// staged-read burst per admitted batch) and the walk continues.
+    /// Each matched node is pinned for the duration of the walk, so the
+    /// host evictions a later restage may cascade can never evict an
+    /// earlier match out from under the admission. With the disk tier
+    /// off this is exactly [`KnowledgeTree::lookup`].
+    pub fn lookup_restage(
+        &mut self,
+        docs: &[DocId],
+        transfers: &mut Transfers,
+    ) -> MatchResult {
+        let mut result = MatchResult::default();
+        let mut cur = self.root;
+        for &doc in docs {
+            let Some(&child) = self.nodes[cur.0].children.get(&doc) else {
+                break;
+            };
+            if self.nodes[child.0].tier.is_none()
+                && !self.restage_node(child, transfers)
+            {
+                break; // uncached and not on disk: a genuine miss
+            }
+            let node = &self.nodes[child.0];
+            let tier = node.tier.expect("cached or restaged above");
+            result.path.push(child);
+            result.matched_docs += 1;
+            result.cached_tokens += node.tokens;
+            match tier {
+                Tier::Gpu => result.gpu_tokens += node.tokens,
+                Tier::Host => result.host_tokens += node.tokens,
+            }
+            // Walk-duration pin (released below): the hierarchy keeps a
+            // restaged child's ancestors cached, and the pin keeps them
+            // safe from the restage's own host evictions.
+            self.nodes[child.0].pinned += 1;
+            cur = child;
+        }
+        self.unpin(&result.path);
+        result
+    }
+
+    /// Restage one disk-resident node into the host tier. Returns false
+    /// when the disk holds no entry for the node, the spans disagree
+    /// (the node was re-cached with a different token count after the
+    /// spill — the stale entry is discarded rather than served), or
+    /// host room cannot be made.
+    fn restage_node(
+        &mut self,
+        id: NodeId,
+        transfers: &mut Transfers,
+    ) -> bool {
+        let tokens = self.nodes[id.0].tokens;
+        let key = DiskKey::Node(id);
+        match self.disk.as_ref().and_then(|d| d.entry_tokens(key)) {
+            Some(t) if t == tokens => {}
+            Some(_) => {
+                self.disk.as_mut().expect("entry above").discard(key);
+                return false;
+            }
+            None => return false,
+        }
+        let bytes = self.page.bytes(tokens);
+        let payload_bytes = self.page.payload_bytes(tokens);
+        // Secure host room BEFORE consuming the disk entry: an unpinned
+        // restage frees it, and a failed host reservation must not lose
+        // the KV.
+        if !self.host.fits_at_all(bytes)
+            || !self.ensure_host_space(bytes, None, transfers)
+        {
+            return false;
+        }
+        let restaged = self
+            .disk
+            .as_mut()
+            .expect("entry above")
+            .restage(key)
+            .expect("entry validated above");
+        let ok = self.host.alloc(bytes);
+        debug_assert!(ok);
+        self.set_tier(id, Some(Tier::Host));
+        self.nodes[id.0].host_copy = true;
+        self.nodes[id.0].payload = restaged.payload;
+        transfers.d2h_bytes += payload_bytes;
+        self.counters.disk_restage_hits += 1;
+        self.counters.disk_restage_bytes += payload_bytes;
+        true
     }
 
     /// Pin every node on `path` (and the root) against eviction for the
@@ -703,7 +888,7 @@ impl KnowledgeTree {
             debug_assert!(ok);
             Tier::Gpu
         } else if self.host.fits_at_all(bytes)
-            && self.ensure_host_space(bytes, None)
+            && self.ensure_host_space(bytes, None, transfers)
         {
             let ok = self.host.alloc(bytes);
             debug_assert!(ok);
@@ -724,6 +909,117 @@ impl KnowledgeTree {
             }),
         );
         true
+    }
+
+    /// Restage a demoted (or CAG-prestaged) chunk entry for `doc` from
+    /// the disk tier into a host-resident OWNED entry, so an immediate
+    /// re-probe hits. Pinned (corpus-pinned) disk entries are restaged
+    /// by copy and stay on disk; unpinned ones move. `tokens` must
+    /// match the cached span — a truncation-policy mismatch is a miss.
+    /// Returns whether an entry was restaged; the `d2h` bytes merge
+    /// into `transfers` for the per-batch staged-read burst.
+    pub fn chunk_restage(
+        &mut self,
+        doc: DocId,
+        tokens: usize,
+        transfers: &mut Transfers,
+    ) -> bool {
+        let Some(state) = self.chunk.as_ref() else {
+            return false;
+        };
+        if tokens <= state.boundary_tokens {
+            return false;
+        }
+        // Same dedupe rules as chunk_insert_owned: never stack on a
+        // live or doomed slot; a stale Ref is overwritten below.
+        match state.slots.get(&doc) {
+            Some(ChunkSlot::Owned(_)) => return false,
+            Some(ChunkSlot::Ref(id))
+                if self.nodes[id.0].tier.is_some() =>
+            {
+                return false;
+            }
+            _ => {}
+        }
+        let key = DiskKey::Chunk(doc);
+        match self.disk.as_ref().and_then(|d| d.entry_tokens(key)) {
+            Some(t) if t == tokens => {}
+            _ => return false,
+        }
+        let bytes = self.page.bytes(tokens);
+        let payload_bytes = self.page.payload_bytes(tokens);
+        // Host room first (see restage_node: a failed reservation must
+        // not have consumed the entry).
+        if !self.host.fits_at_all(bytes)
+            || !self.ensure_host_space(bytes, None, transfers)
+        {
+            return false;
+        }
+        let restaged = self
+            .disk
+            .as_mut()
+            .expect("entry above")
+            .restage(key)
+            .expect("entry validated above");
+        let ok = self.host.alloc(bytes);
+        debug_assert!(ok);
+        self.chunk.as_mut().expect("checked above").slots.insert(
+            doc,
+            ChunkSlot::Owned(ChunkEntry {
+                tokens,
+                rope_offset: restaged.rope_offset,
+                tier: Tier::Host,
+                pinned: 0,
+                doomed: false,
+                stats: NodeStats::default(),
+                payload: restaged.payload,
+            }),
+        );
+        transfers.d2h_bytes += payload_bytes;
+        self.counters.disk_restage_hits += 1;
+        self.counters.disk_restage_bytes += payload_bytes;
+        true
+    }
+
+    /// CAG corpus pre-staging: park `doc`'s KV in the disk tier as a
+    /// PINNED entry — pinned entries are restaged by copy and never
+    /// freed, so the corpus survives any cache pressure and every later
+    /// touch is a hit. With the disk tier off, falls back to a
+    /// best-effort owned chunk entry in GPU/host (evictable, but warm).
+    /// Startup staging: nothing is charged. Returns whether the doc is
+    /// now pinned on disk (or cached via the fallback).
+    pub fn prestage_corpus_doc(
+        &mut self,
+        doc: DocId,
+        tokens: usize,
+        rope_offset: usize,
+        payload: Option<KvPayload>,
+    ) -> bool {
+        let Some(state) = self.chunk.as_ref() else {
+            return false; // CAG rides the chunk registry
+        };
+        if tokens <= state.boundary_tokens {
+            return false;
+        }
+        let bytes = self.page.bytes(tokens);
+        if let Some(disk) = self.disk.as_mut() {
+            return disk.spill(
+                DiskKey::Chunk(doc),
+                tokens,
+                rope_offset,
+                bytes,
+                payload,
+                true,
+            ) != SpillOutcome::NoRoom;
+        }
+        let mut startup = Transfers::default();
+        self.chunk_insert_owned(
+            doc,
+            tokens,
+            rope_offset,
+            payload,
+            &mut startup,
+        )
     }
 
     /// Dedupe hook on every successful tree insert of `doc`: the chunk
@@ -872,6 +1168,13 @@ impl KnowledgeTree {
             }
             let ok = self.gpu.alloc(bytes);
             debug_assert!(ok);
+            if self.nodes[existing.0].tokens != tokens {
+                // The node's content changes: every descendant's disk
+                // KV was computed in the OLD ancestor context and is
+                // now stale — drop the whole subtree's entries (its
+                // own included) rather than ever serving wrong KV.
+                self.discard_stale_subtree_disk(existing);
+            }
             self.nodes[existing.0].tokens = tokens;
             self.set_tier(existing, Some(Tier::Gpu));
             self.nodes[existing.0].payload = payload;
@@ -908,6 +1211,20 @@ impl KnowledgeTree {
         self.counters.inserts += 1;
         self.chunk_note_insert(doc, id);
         Some(id)
+    }
+
+    /// Drop the disk entries of `id` and its whole descendant subtree:
+    /// called when a skeleton re-cache changes `id`'s token count,
+    /// invalidating every descendant's position-dependent KV.
+    fn discard_stale_subtree_disk(&mut self, id: NodeId) {
+        let Some(disk) = self.disk.as_mut() else {
+            return;
+        };
+        let mut stack = vec![id];
+        while let Some(n) = stack.pop() {
+            disk.discard(DiskKey::Node(n));
+            stack.extend(self.nodes[n.0].children.values().copied());
+        }
     }
 
     /// Make at least `bytes` available in the GPU tier by evicting
@@ -960,26 +1277,32 @@ impl KnowledgeTree {
     }
 
     /// Host-tier counterpart of [`KnowledgeTree::evict_one_gpu`].
-    /// `exclude` protects the node currently being swapped out.
-    fn evict_one_host(&mut self, exclude: Option<NodeId>) -> bool {
+    /// `exclude` protects the node currently being swapped out. Disk
+    /// demotions performed by the eviction record their `h2d` bytes in
+    /// `transfers`.
+    fn evict_one_host(
+        &mut self,
+        exclude: Option<NodeId>,
+        transfers: &mut Transfers,
+    ) -> bool {
         let node = self.pick_host_victim(exclude);
         let chunk = self.pick_host_chunk_victim();
         match (node, chunk) {
             (Some(id), Some((cp, doc))) => {
                 let np = self.policy.priority(&self.nodes[id.0].stats);
                 if cp < np {
-                    self.evict_host_chunk(doc);
+                    self.evict_host_chunk(doc, transfers);
                 } else {
-                    self.evict_host_node(id);
+                    self.evict_host_node(id, transfers);
                 }
                 true
             }
             (Some(id), None) => {
-                self.evict_host_node(id);
+                self.evict_host_node(id, transfers);
                 true
             }
             (None, Some((_, doc))) => {
-                self.evict_host_chunk(doc);
+                self.evict_host_chunk(doc, transfers);
                 true
             }
             (None, None) => false,
@@ -992,9 +1315,10 @@ impl KnowledgeTree {
         &mut self,
         bytes: u64,
         exclude: Option<NodeId>,
+        transfers: &mut Transfers,
     ) -> bool {
         while self.host.free() < bytes {
-            if !self.evict_one_host(exclude) {
+            if !self.evict_one_host(exclude, transfers) {
                 return false;
             }
         }
@@ -1050,7 +1374,7 @@ impl KnowledgeTree {
         let payload_bytes = self.page.payload_bytes(tokens);
         self.clock_gpu = self.clock_gpu.max(priority);
         if self.host.fits_at_all(bytes)
-            && self.ensure_host_space(bytes, None)
+            && self.ensure_host_space(bytes, None, transfers)
         {
             let ok = self.host.alloc(bytes);
             debug_assert!(ok);
@@ -1065,17 +1389,24 @@ impl KnowledgeTree {
             transfers.g2h_bytes += payload_bytes;
             self.counters.swap_out_bytes += payload_bytes;
         } else {
+            // Host cannot absorb it: demote GPU→disk when the third
+            // tier has room, drop otherwise (the pre-disk behavior).
             self.gpu.release(bytes);
-            if let Some(state) = self.chunk.as_mut() {
-                state.slots.remove(&doc);
+            let entry = match self.chunk.as_mut() {
+                Some(state) => state.slots.remove(&doc),
+                None => None,
+            };
+            if let Some(ChunkSlot::Owned(e)) = entry {
+                self.spill_chunk_entry(doc, e, bytes, transfers);
             }
         }
         self.counters.gpu_evictions += 1;
     }
 
-    /// Drop one host-resident owned chunk entry. Advances the host
-    /// clock.
-    fn evict_host_chunk(&mut self, doc: DocId) {
+    /// Evict one host-resident owned chunk entry: demote it to the disk
+    /// tier when the budget has room, drop it otherwise. Advances the
+    /// host clock.
+    fn evict_host_chunk(&mut self, doc: DocId, transfers: &mut Transfers) {
         let (tokens, priority) =
             match self.chunk.as_ref().and_then(|s| s.slots.get(&doc)) {
                 Some(ChunkSlot::Owned(e)) if e.tier == Tier::Host => {
@@ -1086,10 +1417,43 @@ impl KnowledgeTree {
         let bytes = self.page.bytes(tokens);
         self.clock_host = self.clock_host.max(priority);
         self.host.release(bytes);
-        if let Some(state) = self.chunk.as_mut() {
-            state.slots.remove(&doc);
+        let entry = match self.chunk.as_mut() {
+            Some(state) => state.slots.remove(&doc),
+            None => None,
+        };
+        if let Some(ChunkSlot::Owned(e)) = entry {
+            self.spill_chunk_entry(doc, e, bytes, transfers);
         }
         self.counters.host_evictions += 1;
+    }
+
+    /// Demote a removed owned chunk entry to the disk tier, recording
+    /// the spill; a refused spill (disk off / no room) drops the KV
+    /// exactly like the pre-disk path.
+    fn spill_chunk_entry(
+        &mut self,
+        doc: DocId,
+        e: ChunkEntry,
+        bytes: u64,
+        transfers: &mut Transfers,
+    ) {
+        let payload_bytes = self.page.payload_bytes(e.tokens);
+        let Some(disk) = self.disk.as_mut() else {
+            return;
+        };
+        if disk.spill(
+            DiskKey::Chunk(doc),
+            e.tokens,
+            e.rope_offset,
+            bytes,
+            e.payload,
+            false,
+        ) == SpillOutcome::Stored
+        {
+            transfers.h2d_bytes += payload_bytes;
+            self.counters.disk_spills += 1;
+            self.counters.disk_spill_bytes += payload_bytes;
+        }
     }
 
     /// GPU leaf frontier: GPU-resident, unpinned, no GPU-resident child
@@ -1129,11 +1493,14 @@ impl KnowledgeTree {
         if needs_copy {
             // Find host space (may cascade host evictions of nodes and
             // chunk entries alike); too big for host entirely, or host
-            // cannot make room → drop from cache instead of swapping.
+            // cannot make room → demote straight to the disk tier when
+            // it has room, drop from cache otherwise.
             if !self.host.fits_at_all(bytes)
-                || !self.ensure_host_space(bytes, Some(id))
+                || !self.ensure_host_space(bytes, Some(id), &mut transfers)
             {
-                self.drop_from_gpu(id);
+                if !self.demote_gpu_to_disk(id, &mut transfers) {
+                    self.drop_from_gpu(id);
+                }
                 return transfers;
             }
             let ok = self.host.alloc(bytes);
@@ -1152,6 +1519,47 @@ impl KnowledgeTree {
         self.gpu.release(bytes);
         self.counters.gpu_evictions += 1;
         transfers
+    }
+
+    /// Demote a GPU node straight to the disk tier when the host cannot
+    /// absorb its swap-out (the GPU → disk shortcut of the cascade).
+    /// Returns false when the disk tier is off or refuses the bytes —
+    /// the caller then drops the node outright, exactly as pre-disk.
+    fn demote_gpu_to_disk(
+        &mut self,
+        id: NodeId,
+        transfers: &mut Transfers,
+    ) -> bool {
+        if self.disk.is_none() {
+            return false;
+        }
+        let tokens = self.nodes[id.0].tokens;
+        let bytes = self.page.bytes(tokens);
+        let payload_bytes = self.page.payload_bytes(tokens);
+        let payload = self.nodes[id.0].payload.take();
+        let disk = self.disk.as_mut().expect("checked above");
+        let outcome =
+            disk.spill(DiskKey::Node(id), tokens, 0, bytes, payload, false);
+        if outcome == SpillOutcome::NoRoom {
+            // Payload is gone either way: the drop path clears it too.
+            return false;
+        }
+        self.clock_gpu = self
+            .clock_gpu
+            .max(self.policy.priority(&self.nodes[id.0].stats));
+        if self.nodes[id.0].host_copy {
+            self.host.release(bytes);
+            self.nodes[id.0].host_copy = false;
+        }
+        self.set_tier(id, None);
+        self.gpu.release(bytes);
+        self.counters.gpu_evictions += 1;
+        if outcome == SpillOutcome::Stored {
+            transfers.h2d_bytes += payload_bytes;
+            self.counters.disk_spills += 1;
+            self.counters.disk_spill_bytes += payload_bytes;
+        }
+        true
     }
 
     /// Evict a GPU node without keeping any copy (host has no room).
@@ -1194,17 +1602,39 @@ impl KnowledgeTree {
         best.map(|(_, id)| id)
     }
 
-    /// Remove a node from the cache entirely (host eviction). Advances
-    /// the host clock.
-    fn evict_host_node(&mut self, id: NodeId) {
+    /// Evict a node from the host tier: demote its KV to the disk tier
+    /// when the budget has room (the host → disk leg of the cascade),
+    /// remove it from the cache entirely otherwise. Advances the host
+    /// clock. The demotion's `h2d` bytes merge into `transfers` — they
+    /// ride the async staging queue, counted but never charged.
+    fn evict_host_node(&mut self, id: NodeId, transfers: &mut Transfers) {
         debug_assert_eq!(self.nodes[id.0].tier, Some(Tier::Host));
-        let bytes = self.page.bytes(self.nodes[id.0].tokens);
+        let tokens = self.nodes[id.0].tokens;
+        let bytes = self.page.bytes(tokens);
+        let payload_bytes = self.page.payload_bytes(tokens);
         self.clock_host = self
             .clock_host
             .max(self.policy.priority(&self.nodes[id.0].stats));
         self.host.release(bytes);
         self.set_tier(id, None);
         self.nodes[id.0].host_copy = false;
+        if self.disk.is_some() {
+            let payload = self.nodes[id.0].payload.take();
+            let disk = self.disk.as_mut().expect("checked above");
+            if disk.spill(
+                DiskKey::Node(id),
+                tokens,
+                0,
+                bytes,
+                payload,
+                false,
+            ) == SpillOutcome::Stored
+            {
+                transfers.h2d_bytes += payload_bytes;
+                self.counters.disk_spills += 1;
+                self.counters.disk_spill_bytes += payload_bytes;
+            }
+        }
         self.nodes[id.0].payload = None;
         self.counters.host_evictions += 1;
     }
@@ -1316,6 +1746,27 @@ impl KnowledgeTree {
         }
         assert_eq!(gpu_bytes, self.gpu.used(), "gpu accounting");
         assert_eq!(host_bytes, self.host.used(), "host accounting");
+        // Disk tier: internal slot/byte accounting, plus every
+        // node-keyed entry must still describe its node's span (stale
+        // spans are discarded at re-cache / restage time). An entry may
+        // coexist with a cached node — the disk analogue of the
+        // swap-out-only-once host copy.
+        if let Some(disk) = &self.disk {
+            disk.check_invariants();
+            for key in disk.keys() {
+                if let DiskKey::Node(id) = key {
+                    assert!(
+                        id.0 < self.nodes.len(),
+                        "disk node key in arena range"
+                    );
+                    assert_eq!(
+                        disk.entry_tokens(key),
+                        Some(self.nodes[id.0].tokens),
+                        "disk node entry span matches its node"
+                    );
+                }
+            }
+        }
         // Residency indexes agree with node state.
         for (i, node) in self.nodes.iter().enumerate() {
             assert_eq!(
@@ -1341,8 +1792,13 @@ impl KnowledgeTree {
             return self.nodes[id.0].host_copy;
         }
         let bytes = self.page.bytes(self.nodes[id.0].tokens);
+        // Demotions cascaded by the replication are async spills:
+        // counted in the tree counters, never charged as latency — the
+        // per-op transfers can be dropped here without losing anything
+        // the replication caller would bill.
+        let mut spills = Transfers::default();
         if !self.host.fits_at_all(bytes)
-            || !self.ensure_host_space(bytes, None)
+            || !self.ensure_host_space(bytes, None, &mut spills)
         {
             return false;
         }

@@ -9,4 +9,7 @@ pub mod trace;
 
 pub use corpus::Corpus;
 pub use datasets::DatasetProfile;
-pub use trace::{ArrivalProcess, Trace, TraceOptions, TraceRequest};
+pub use trace::{
+    tenant_corpora, ArrivalProcess, TenantCorpus, Trace, TraceOptions,
+    TraceRequest,
+};

@@ -196,6 +196,88 @@ struct TenantPlan {
     doc_base: u32,
 }
 
+/// Contiguous `(start, len)` corpus slices for `tenants` tenants:
+/// `n / tenants` docs each with the remainder spread from the front —
+/// the single source of truth shared by the trace sampler
+/// ([`tenant_plans`]) and the CAG corpus-fit metadata
+/// ([`tenant_corpora`]), so the two views can never disagree on who
+/// owns a document.
+fn tenant_slices(n: usize, tenants: usize) -> Vec<(usize, usize)> {
+    let base = n / tenants;
+    let rem = n % tenants;
+    let mut start = 0usize;
+    (0..tenants)
+        .map(|t| {
+            let len = base + usize::from(t < rem);
+            let s = start;
+            start += len;
+            (s, len)
+        })
+        .collect()
+}
+
+/// Even per-document truncation cap: a function of `(budget, top_k)`
+/// only — NOT of a request's question length — so a document's
+/// truncated length (and thus its KV) is identical across requests AND
+/// across the trace / corpus-metadata views of the same options.
+fn per_doc_cap(opts: &TraceOptions) -> usize {
+    const QUESTION_RESERVE: usize = 256;
+    opts.max_prompt_tokens
+        .saturating_sub(QUESTION_RESERVE)
+        .checked_div(opts.top_k)
+        .unwrap_or(usize::MAX)
+        .max(32)
+}
+
+/// Per-tenant corpus-fit metadata for the CAG admission policy
+/// (`--cag auto`): the tenant's contiguous corpus slice with each
+/// document's TRUNCATED token count — the same per-doc cap the trace
+/// generator applies, so the corpus KV sized from this is exactly the
+/// KV the tenant's requests would carry.
+#[derive(Debug, Clone)]
+pub struct TenantCorpus {
+    pub tenant: u32,
+    /// First document id of the slice.
+    pub doc_base: u32,
+    /// Truncated token count of each slice document, in doc-id order
+    /// (`doc_base + i`).
+    pub doc_tokens: Vec<usize>,
+}
+
+impl TenantCorpus {
+    /// Total corpus tokens after truncation.
+    pub fn total_tokens(&self) -> usize {
+        self.doc_tokens.iter().sum()
+    }
+
+    /// Page-rounded KV bytes of the whole slice — the corpus-fit number
+    /// the CAG pin budget is checked against.
+    pub fn kv_bytes(&self, page: crate::kvcache::PageSpec) -> u64 {
+        self.doc_tokens.iter().map(|&t| page.bytes(t)).sum()
+    }
+}
+
+/// The per-tenant corpus slices a trace with these options draws from
+/// (single tenant: one slice covering the whole corpus).
+pub fn tenant_corpora(
+    corpus: &Corpus,
+    opts: &TraceOptions,
+) -> Vec<TenantCorpus> {
+    let tenants = opts.tenants.max(1);
+    let cap = per_doc_cap(opts);
+    tenant_slices(corpus.len(), tenants)
+        .into_iter()
+        .enumerate()
+        .map(|(t, (start, len))| TenantCorpus {
+            tenant: t as u32,
+            doc_base: start as u32,
+            doc_tokens: (start..start + len)
+                .map(|d| corpus.tokens(d as u32).min(cap))
+                .collect(),
+        })
+        .collect()
+}
+
 fn tenant_plans(
     profile: &DatasetProfile,
     corpus: &Corpus,
@@ -216,12 +298,10 @@ fn tenant_plans(
         "corpus of {n} docs cannot give {tenants} tenants top-{top_k} \
          sequences from disjoint slices"
     );
-    let base = n / tenants;
-    let rem = n % tenants;
-    let mut start = 0usize;
-    (0..tenants)
-        .map(|t| {
-            let len = base + usize::from(t < rem);
+    tenant_slices(n, tenants)
+        .into_iter()
+        .enumerate()
+        .map(|(t, (start, len))| {
             // Deterministic per-tenant skew spread around the dataset's
             // calibrated mass: tenants t ≡ 0..3 (mod 4) get offsets
             // −0.12, −0.04, +0.04, +0.12 — hot and cool tenants coexist
@@ -229,12 +309,10 @@ fn tenant_plans(
             // (and the cross-shard rebalancer) are exercised by.
             let off = 0.08 * ((t % 4) as f64 - 1.5);
             let mass = (profile.skew_mass + off).clamp(0.2, 0.85);
-            let plan = TenantPlan {
+            TenantPlan {
                 sampler: profile.popularity_with_skew(len, mass),
                 doc_base: start as u32,
-            };
-            start += len;
-            plan
+            }
         })
         .collect()
 }
@@ -338,20 +416,12 @@ impl Trace {
                 .collect();
             let request_tokens = profile.sample_request_tokens(&mut rng);
             // Even per-document truncation to fit the budget, with a
-            // fixed question reserve. The cap is a function of
-            // (budget, k) only — NOT of this request's question length —
-            // so a document's truncated length (and thus its KV) is
-            // identical across requests, preserving reusability.
-            const QUESTION_RESERVE: usize = 256;
-            let per_doc_cap = opts
-                .max_prompt_tokens
-                .saturating_sub(QUESTION_RESERVE)
-                .checked_div(opts.top_k)
-                .unwrap_or(usize::MAX)
-                .max(32);
+            // fixed question reserve (see [`per_doc_cap`] — shared with
+            // the CAG corpus-fit metadata so both size the same KV).
+            let cap = per_doc_cap(opts);
             let doc_tokens = docs
                 .iter()
-                .map(|&d| corpus.tokens(d).min(per_doc_cap))
+                .map(|&d| corpus.tokens(d).min(cap))
                 .collect();
             requests.push(TraceRequest {
                 id,

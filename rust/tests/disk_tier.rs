@@ -1,0 +1,300 @@
+//! Integration: the NVMe-backed third cache tier — `--disk off`
+//! conformance with the two-tier PR 8 path (counters, occupancies and
+//! the f64 charge proxy, bit for bit), the GPU → host → disk → GPU
+//! demote/restage round trip preserving payload bytes exactly through
+//! the slotted backing store, and randomized multi-thread interleaving
+//! with GPU failures proving zero leaked pins or bytes across all
+//! three tiers. PJRT-free.
+
+use ragcache::config::PolicyKind;
+use ragcache::controller::{CacheService, ShardedCacheService};
+use ragcache::kvcache::{KvPayload, PageSpec};
+use ragcache::policy::make_policy;
+use ragcache::tree::KnowledgeTree;
+use ragcache::util::Rng;
+
+const DOC_TOKENS: usize = 16;
+const REQ_TOKENS: usize = 8;
+
+fn page() -> PageSpec {
+    PageSpec {
+        block_tokens: 8,
+        kv_bytes_per_token: 16,
+    }
+}
+
+fn tree(
+    gpu_tokens: usize,
+    host_tokens: usize,
+    disk_tokens: usize,
+) -> KnowledgeTree {
+    let p = page();
+    let mut t = KnowledgeTree::new(
+        p.bytes(gpu_tokens),
+        p.bytes(host_tokens),
+        p,
+        make_policy(PolicyKind::Pgdsf),
+        true,
+        0,
+    );
+    if disk_tokens > 0 {
+        t.enable_disk_tier(p.bytes(disk_tokens));
+    }
+    t
+}
+
+/// A doc's synthetic KV rows: 4 floats per token, seeded by the doc id
+/// so cross-doc payload mix-ups cannot cancel out.
+fn payload(doc: u32) -> KvPayload {
+    let data: Vec<f32> = (0..DOC_TOKENS * 4)
+        .map(|i| (doc as f32) * 1000.0 + i as f32)
+        .collect();
+    KvPayload::new(data, DOC_TOKENS)
+}
+
+/// Admit + commit one doc sequence; returns the admission's
+/// (beta, moved_bytes, disk_read_bytes).
+fn serve(
+    svc: &CacheService,
+    docs: &[u32],
+    now: f64,
+    payloads: Option<Vec<KvPayload>>,
+) -> (usize, u64, u64) {
+    let dt: Vec<(u32, usize)> =
+        docs.iter().map(|&d| (d, DOC_TOKENS)).collect();
+    let adm = svc.admit(&dt, REQ_TOKENS);
+    svc.touch_hits(&adm, 1e-3, now);
+    let out = svc.commit(&adm, 1e-3, now, payloads);
+    let moved = adm.transfer_bytes()
+        + out.transfers.h2g_bytes
+        + out.transfers.g2h_bytes;
+    (adm.beta, moved, adm.disk_read_bytes())
+}
+
+/// `--disk off` conformance: the two-tier path must be bit-identical
+/// to the pre-disk tree under eviction pressure — same admissions,
+/// same counters and occupancies, same f64 charge-proxy bits, zero
+/// disk state. And a disk tier that is ON but never pressured must be
+/// indistinguishable from off: the cascade only touches it when the
+/// host actually drops something.
+#[test]
+fn disk_off_is_bit_identical_to_pre_disk_path() {
+    // Tight tiers: 4 docs of GPU, 8 of host, 24 distinct docs → the
+    // stream constantly evicts through both upper tiers.
+    let off = CacheService::new(tree(64, 128, 0));
+    let replica = CacheService::new(tree(64, 128, 0));
+    // Roomy tiers: everything fits, so the disk (when on) stays idle.
+    let roomy_off = CacheService::new(tree(4096, 8192, 0));
+    let roomy_on = CacheService::new(tree(4096, 8192, 1 << 16));
+
+    let mut rng = Rng::new(0xD15C_0FF);
+    let mut charge_off = 0.0f64;
+    let mut charge_replica = 0.0f64;
+    for i in 0..300u64 {
+        let d = rng.below(24) as u32;
+        let now = i as f64;
+        let (b1, m1, r1) = serve(&off, &[d], now, None);
+        let (b2, m2, r2) = serve(&replica, &[d], now, None);
+        assert_eq!((b1, m1, r1), (b2, m2, r2), "req {i} diverged");
+        assert_eq!(r1, 0, "req {i}: disk-off path read disk bytes");
+        charge_off += m1 as f64 / 16e9 + b1 as f64 * 50e-6;
+        charge_replica += m2 as f64 / 16e9 + b2 as f64 * 50e-6;
+        let (b3, m3, r3) = serve(&roomy_off, &[d], now, None);
+        let (b4, m4, r4) = serve(&roomy_on, &[d], now, None);
+        assert_eq!(
+            (b3, m3, r3),
+            (b4, m4, r4),
+            "req {i}: idle disk tier changed the roomy path"
+        );
+    }
+    assert_eq!(
+        charge_off.to_bits(),
+        charge_replica.to_bits(),
+        "f64 charge proxy must agree bit for bit"
+    );
+    let (co, cr) = (off.counters(), replica.counters());
+    assert_eq!(co, cr, "off path is deterministic");
+    assert!(co.gpu_evictions > 0, "stream pressured the tiers: {co:?}");
+    assert_eq!(
+        (co.disk_spills, co.disk_spill_bytes),
+        (0, 0),
+        "disk-off never spills"
+    );
+    assert_eq!(
+        (co.disk_restage_hits, co.disk_restage_bytes),
+        (0, 0),
+        "disk-off never restages"
+    );
+    let o = off.occupancy();
+    assert_eq!(o.gpu_used, replica.occupancy().gpu_used);
+    assert_eq!(o.host_used, replica.occupancy().host_used);
+    assert_eq!((o.disk_used, o.disk_capacity), (0, 0));
+    // The idle-but-on tier holds capacity and nothing else.
+    let ro = roomy_on.occupancy();
+    assert_eq!(ro.gpu_used, roomy_off.occupancy().gpu_used);
+    assert_eq!(ro.host_used, roomy_off.occupancy().host_used);
+    assert!(ro.disk_capacity > 0);
+    assert_eq!(ro.disk_used, 0, "idle disk tier stayed empty");
+    assert_eq!(roomy_on.counters().disk_spills, 0);
+    for svc in [&off, &replica, &roomy_off, &roomy_on] {
+        svc.check_invariants();
+        assert_eq!(svc.pinned_nodes(), 0);
+    }
+}
+
+/// Round-trip property: a doc's KV payload demoted GPU → host → disk
+/// (through serialization into the slotted backing store) and restaged
+/// disk → host → GPU comes back bit-identical, with every hop's byte
+/// accounting balancing (`check_invariants` enforces per-tier
+/// `used == Σ distinct payload bytes` at each step).
+#[test]
+fn demote_restage_round_trip_preserves_payload_bytes() {
+    let p = page();
+    // GPU fits 2 docs, host 1, disk plenty — inserting 4 distinct docs
+    // pushes doc 1 all the way down the cascade.
+    let svc = CacheService::new(tree(2 * DOC_TOKENS, DOC_TOKENS, 1024));
+    let original = payload(1);
+    serve(&svc, &[1], 0.0, Some(vec![original.clone()]));
+    serve(&svc, &[2], 1.0, Some(vec![payload(2)]));
+    svc.check_invariants();
+    serve(&svc, &[3], 2.0, Some(vec![payload(3)])); // doc 1 → host
+    svc.check_invariants();
+    serve(&svc, &[4], 3.0, Some(vec![payload(4)])); // doc 1 → disk
+    svc.check_invariants();
+
+    let c = svc.counters();
+    assert!(c.disk_spills >= 1, "cascade reached disk: {c:?}");
+    let payload_bytes = p.payload_bytes(DOC_TOKENS);
+    assert!(c.disk_spill_bytes >= payload_bytes);
+    assert!(svc.occupancy().disk_used >= p.bytes(DOC_TOKENS));
+    // Drain the async staging queue: the payload serializes into
+    // backing-store slots, so the restage below reads real stored
+    // bytes, not the in-queue copy.
+    let written = svc.with(|t| {
+        assert!(t.disk_staged_len() >= 1, "spill rides the queue");
+        t.flush_disk_staging()
+    });
+    assert!(written >= 1, "flush wrote the staged entries");
+    svc.check_invariants();
+
+    // Re-admit doc 1: the walk restages it disk → host and the
+    // admission promotes it back to GPU.
+    let dt = [(1u32, DOC_TOKENS)];
+    let adm = svc.admit(&dt, REQ_TOKENS);
+    assert_eq!(adm.matched_docs, 1, "restaged doc serves the match");
+    assert_eq!(adm.alpha, DOC_TOKENS, "no recompute after restage");
+    assert_eq!(
+        adm.disk_read_bytes(),
+        payload_bytes,
+        "the restage read is charged once, at payload size"
+    );
+    let id = *adm.path.last().expect("matched path");
+    svc.touch_hits(&adm, 1e-3, 4.0);
+    svc.commit(&adm, 1e-3, 4.0, None);
+    svc.check_invariants();
+
+    let c = svc.counters();
+    assert_eq!(c.disk_restage_hits, 1);
+    assert_eq!(c.disk_restage_bytes, payload_bytes);
+    svc.with(|t| {
+        let got = t.node_payload(id).expect("payload restaged");
+        assert_eq!(got.tokens(), original.tokens());
+        assert_eq!(
+            got.floats(),
+            original.floats(),
+            "payload bytes must survive the full tier round trip"
+        );
+    });
+    assert_eq!(svc.pinned_nodes(), 0);
+}
+
+/// Randomized multi-thread interleaving over all three tiers: threads
+/// hammer a sharded, chunk-enabled, disk-backed cache with reordered
+/// pairs, aborted speculation, mid-flight GPU failures and periodic
+/// staging flushes under constant eviction pressure. The ledger must
+/// balance on every tier and every pin must come back.
+#[test]
+fn randomized_interleaving_three_tiers_leaks_nothing() {
+    let p = page();
+    let svc = ShardedCacheService::build(4, |_| {
+        let mut t = KnowledgeTree::new(
+            p.bytes(64),
+            p.bytes(128),
+            p,
+            make_policy(PolicyKind::Pgdsf),
+            true,
+            0,
+        );
+        t.enable_chunk_cache(4);
+        // Small on purpose: the NoRoom refusal path (spill degrades to
+        // the pre-disk drop) gets exercised alongside stores.
+        t.enable_disk_tier(p.bytes(256));
+        t
+    });
+    let threads = 8;
+    let ops = 250;
+    let mut handles = Vec::new();
+    for t in 0..threads {
+        let svc = svc.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0xD15C + t as u64);
+            for i in 0..ops {
+                let a = rng.below(32) as u32;
+                let b = rng.below(32) as u32;
+                let docs = if i % 2 == 0 {
+                    [(a, DOC_TOKENS), (b, DOC_TOKENS)]
+                } else {
+                    [(b, DOC_TOKENS), (a, DOC_TOKENS)]
+                };
+                let adm = svc.admit(&docs, REQ_TOKENS);
+                match i % 7 {
+                    0 => svc.release(&adm), // aborted speculation
+                    1 => {
+                        // Device failure with restaged KV in flight:
+                        // whatever the walk pulled off disk dies with
+                        // the GPU tier; commit must still balance.
+                        svc.shard(adm.shard).fail_gpu();
+                        svc.commit(&adm, 1e-3, i as f64, None);
+                    }
+                    _ => {
+                        svc.touch_hits(&adm, 1e-3, i as f64);
+                        svc.commit(&adm, 1e-3, i as f64, None);
+                    }
+                }
+                if i % 25 == 0 {
+                    // Stand-in for the async staging writer.
+                    svc.flush_disk_staging();
+                }
+                if i % 50 == 0 {
+                    svc.check_invariants();
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("no hammering thread panicked");
+    }
+    svc.flush_disk_staging();
+    svc.check_invariants();
+    assert_eq!(
+        svc.pinned_nodes(),
+        0,
+        "quiescent: every path and chunk pin was returned"
+    );
+    let total = svc.counters();
+    assert!(total.inserts > 0, "traffic exercised insertion");
+    assert!(
+        total.disk_spills > 0,
+        "pressure drove the cascade to disk: {total:?}"
+    );
+    assert!(
+        total.disk_restage_hits > 0,
+        "spilled docs were served back out of disk: {total:?}"
+    );
+    for s in 0..svc.num_shards() {
+        let o = svc.shard(s).occupancy();
+        assert!(o.gpu_used <= o.gpu_capacity, "shard {s} gpu over");
+        assert!(o.host_used <= o.host_capacity, "shard {s} host over");
+        assert!(o.disk_used <= o.disk_capacity, "shard {s} disk over");
+    }
+}
