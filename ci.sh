@@ -14,6 +14,18 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+# Stats-schema drift gate: the metric registry's generated schema (wire
+# names, merge kinds, tolerance classes, bench columns) must match the
+# committed snapshot exactly — a stat silently added or removed fails
+# here, mirroring the bench_diff column-set rule. Regenerate with:
+#   cargo run --release --bin ragcache -- stats-schema \
+#     > bench_baselines/stats_schema.txt
+echo "== stats-schema drift gate =="
+mkdir -p bench_out
+cargo run --release --bin ragcache -- stats-schema \
+    > bench_out/stats_schema.txt
+diff -u bench_baselines/stats_schema.txt bench_out/stats_schema.txt
+
 if cargo fmt --version >/dev/null 2>&1; then
     echo "== cargo fmt --check =="
     cargo fmt --check

@@ -4,13 +4,16 @@
 //!
 //! Column classes:
 //! - string columns (row labels) must match exactly, row by row;
-//! - wall-clock columns (names ending `_ms` or `_rps`) get the loose
-//!   band (`--loose-tol`, default 0.75 relative) — they measure the
-//!   host, not the code;
-//! - every other numeric column gets the tight band (`--tol`, default
-//!   0.15 relative) — virtual-clock latencies, token sums and byte
-//!   counters are deterministic at fixed seed, so drift there is a
-//!   real behaviour change.
+//! - columns the metric registry knows get the tolerance class they
+//!   were registered with: `Loose` (`--loose-tol`, default 0.75
+//!   relative) for wall-clock measurements of the host, `Tight`
+//!   (`--tol`, default 0.15 relative) for deterministic counters;
+//! - columns outside the registry (bench-local workload shape,
+//!   wall-clock percentiles) fall back to the suffix rule: names
+//!   ending `_ms` or `_rps` are loose, everything else numeric is
+//!   tight — virtual-clock latencies, token sums and byte counters
+//!   are deterministic at fixed seed, so drift there is a real
+//!   behaviour change.
 //!
 //! Column sets must match EXACTLY in both directions: a column the
 //! fresh report dropped is a regression, and a column the baseline has
@@ -58,9 +61,15 @@ fn load(path: &str) -> Result<Bench> {
     Ok(Bench { rows, provisional })
 }
 
-/// Wall-clock columns: measured on the host, not simulated.
+/// Whether a column takes the loose (wall-clock) band. Registered
+/// metrics carry their tolerance class in the registry; bench-local
+/// columns fall back to the wall-clock naming rule.
 fn is_loose(col: &str) -> bool {
-    col.ends_with("_ms") || col.ends_with("_rps")
+    use ragcache::metrics::registry::{tolerance_of, Registry, Tolerance};
+    match tolerance_of(&Registry::standard(), col) {
+        Some(t) => t == Tolerance::Loose,
+        None => col.ends_with("_ms") || col.ends_with("_rps"),
+    }
 }
 
 fn main() -> Result<()> {

@@ -762,6 +762,7 @@ impl QueryHandler for MatrixHandler {
             disk_used: occ.iter().map(|o| o.disk_used).sum(),
             disk_capacity: occ.iter().map(|o| o.disk_capacity).sum(),
             tenants: Vec::new(),
+            ext: Vec::new(),
         }
     }
 }
@@ -1389,7 +1390,7 @@ fn compare_cag() -> anyhow::Result<()> {
         eprintln!("FAIL: pinned tenant holds zero corpus bytes");
         failed = true;
     }
-    if on.disk_restage_hits == 0 {
+    if on.disk_restage_hits() == 0 {
         eprintln!(
             "FAIL: pinned corpus never restaged off disk — the fast \
              path cannot have served real chunk KV"
@@ -1456,7 +1457,7 @@ fn compare_cag() -> anyhow::Result<()> {
                  {:.1} ms -> CAG {:.1} ms, {} disk restages",
                 t_off * 1e3,
                 t_on * 1e3,
-                on.disk_restage_hits
+                on.disk_restage_hits()
             );
             if t_on >= t_off {
                 eprintln!(
@@ -1490,35 +1491,19 @@ fn compare_cag() -> anyhow::Result<()> {
 /// counters. `ci.sh` diffs it against
 /// `bench_baselines/BENCH_serving.json`.
 fn bench_serving() -> anyhow::Result<()> {
+    use ragcache::metrics::registry::{serving_bench_columns, Registry};
     use ragcache::util::json::Json;
+    // Column names for the metric-backed columns come from the
+    // registry: a stat renamed or dropped there panics here instead of
+    // silently forking the bench schema from the wire schema.
+    let cols = serving_bench_columns(&Registry::standard());
     let mut r = ragcache::bench::Report::new(
         "BENCH_serving",
         "serving regression bench: reordered Zipfian doc pairs through \
          the shared admission path (chunk cache off vs on), plus the \
          squeezed three-tier cache under the host-thrashing stream \
          (disk on)",
-        &[
-            "chunk_cache",
-            "requests",
-            "ttft_p50_ms",
-            "ttft_p99_ms",
-            "throughput_rps",
-            "sum_prefill_tokens",
-            "ttft_proxy_s",
-            "gpu_hit_bytes",
-            "chunk_hits",
-            "chunk_hit_bytes",
-            "boundary_recompute_tokens",
-            "tree_inserts",
-            "swap_out_bytes",
-            "goodput_rps",
-            "ttft_p999_ms",
-            "shed_requests",
-            "disk",
-            "disk_spills",
-            "disk_restage_hits",
-            "disk_restage_bytes",
-        ],
+        &cols,
     );
     // SLO cut on the *virtual* transfer+prefill proxy, so the in-SLO
     // count is deterministic: cold pairs (β ≈ 2·DOC_TOKENS → ~3.4 ms)

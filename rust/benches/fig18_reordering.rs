@@ -72,9 +72,9 @@ fn main() {
                         .map(|c| c.gpu_hit_bytes)
                         .unwrap_or(0) as f64,
                 ),
-                Json::num(out.chunk_hits as f64),
-                Json::num(out.chunk_hit_bytes as f64),
-                Json::num(out.boundary_recompute_tokens as f64),
+                Json::num(out.chunk_hits() as f64),
+                Json::num(out.chunk_hit_bytes() as f64),
+                Json::num(out.boundary_recompute_tokens() as f64),
                 Json::num(out.pcie_h2g_bytes as f64),
                 Json::num(out.pcie_g2h_bytes as f64),
             ]);

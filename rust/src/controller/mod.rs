@@ -94,6 +94,20 @@
 //!        demote down the ladder, spills are async staged writes
 //!        counted but never charged; --disk off = two tiers,
 //!        bit-identical to the prior path)
+//!
+//!   stats surface (one schema — metrics::registry):
+//!        TreeCounters (shared tree, per-shard sums driven by
+//!        TREE_COUNTER_FIELDS) + Recorder/SpecTotals/ShedLadder
+//!        (per-engine) + shard/disk occupancy (snapshot gauges)
+//!                           │
+//!              real::proto_stats / the sim reports
+//!              build ONE proto::StatsResult each
+//!                           │
+//!                           ▼
+//!        registry descriptors drive encode → wire JSON →
+//!        parse → merge (Sum/Max/Or/weighted means/snapshot
+//!        group/by-tenant) → CLI report lines + BENCH columns
+//!        + the ci.sh stats-schema drift gate
 //! ```
 //!
 //! [`pipeline`] owns the per-request admission state machine shared by

@@ -1583,6 +1583,7 @@ impl RealServer {
                 .map(|o| o.disk_capacity)
                 .sum(),
             tenants: self.tenant_lines(),
+            ext: Vec::new(),
         }
     }
 
@@ -1608,11 +1609,9 @@ impl RealServer {
                     shed: t.shed as u64,
                     downgraded: t.downgraded as u64,
                     slo_ok: t.slo_ok as u64,
-                    mean_ttft_ms: if mean.is_finite() {
-                        mean * 1e3
-                    } else {
-                        0.0
-                    },
+                    mean_ttft_ms: crate::metrics::registry::wire_mean_ms(
+                        mean * 1e3,
+                    ),
                     mode: self
                         .cag
                         .as_ref()

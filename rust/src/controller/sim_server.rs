@@ -134,15 +134,6 @@ pub struct SimOutcome {
     /// Cross-shard rebalancer activity (zeros when `cache.rebalance`
     /// is off or the cache is single-shard).
     pub rebalance: RebalanceStats,
-    /// Position-independent chunk-cache hits (`--chunk-cache on`;
-    /// always 0 when off). Mirrors `tree_counters` for the bench
-    /// emitters and the stats endpoint.
-    pub chunk_hits: u64,
-    /// KV bytes served from chunk entries (the reused `tokens − r`
-    /// rows per hit).
-    pub chunk_hit_bytes: u64,
-    /// Boundary tokens re-prefilled across all chunk hits.
-    pub boundary_recompute_tokens: u64,
     /// Total host→GPU PCIe bytes the run charged (admission promotion
     /// bursts + chunk streaming + rebalancer moves).
     pub pcie_h2g_bytes: u64,
@@ -154,23 +145,63 @@ pub struct SimOutcome {
     pub shed_requests: usize,
     /// Arrivals downgraded to single-stage, speculation-free service.
     pub downgraded_requests: usize,
-    /// Host→disk demotions staged by the NVMe tier (always 0 with
-    /// `--disk off`). Mirrors `tree_counters.disk_spills`.
-    pub disk_spills: u64,
-    /// KV bytes those spills staged (counted, never charged — the
-    /// staging queue writes asynchronously).
-    pub disk_spill_bytes: u64,
-    /// Disk→host restages that served an admission (tree nodes and
-    /// chunk entries).
-    pub disk_restage_hits: u64,
-    /// KV bytes those restages read — the bytes charged as the
-    /// per-batch NVMe read burst.
-    pub disk_restage_bytes: u64,
     /// Per-tenant CAG admission modes (empty with `--cag off`),
     /// ascending tenant id.
     pub tenant_modes: Vec<(u32, TenantMode)>,
     /// Corpus KV bytes pinned under the CAG budget (0 with `--cag off`).
     pub cag_pinned_bytes: u64,
+}
+
+impl SimOutcome {
+    /// The run's aggregated tree counters (all-zero when the run had no
+    /// cache). The chunk-cache and disk-tier counters the reports and
+    /// bench emitters read are views into this one block — they used to
+    /// be mirrored as separate fields, a drift hazard the registry
+    /// refactor removed.
+    pub fn counters(&self) -> crate::tree::TreeCounters {
+        self.tree_counters.unwrap_or_default()
+    }
+
+    /// Position-independent chunk-cache hits (`--chunk-cache on`;
+    /// always 0 when off).
+    pub fn chunk_hits(&self) -> u64 {
+        self.counters().chunk_hits
+    }
+
+    /// KV bytes served from chunk entries (the reused `tokens − r`
+    /// rows per hit).
+    pub fn chunk_hit_bytes(&self) -> u64 {
+        self.counters().chunk_hit_bytes
+    }
+
+    /// Boundary tokens re-prefilled across all chunk hits.
+    pub fn boundary_recompute_tokens(&self) -> u64 {
+        self.counters().boundary_recompute_tokens
+    }
+
+    /// Host→disk demotions staged by the NVMe tier (always 0 with
+    /// `--disk off`).
+    pub fn disk_spills(&self) -> u64 {
+        self.counters().disk_spills
+    }
+
+    /// KV bytes those spills staged (counted, never charged — the
+    /// staging queue writes asynchronously).
+    pub fn disk_spill_bytes(&self) -> u64 {
+        self.counters().disk_spill_bytes
+    }
+
+    /// Disk→host restages that served an admission (tree nodes and
+    /// chunk entries).
+    pub fn disk_restage_hits(&self) -> u64 {
+        self.counters().disk_restage_hits
+    }
+
+    /// KV bytes those restages read — the bytes charged as the
+    /// per-batch NVMe read burst.
+    pub fn disk_restage_bytes(&self) -> u64 {
+        self.counters().disk_restage_bytes
+    }
 }
 
 /// Effective NVMe sequential-read bandwidth for the staged-read model
@@ -500,7 +531,6 @@ impl SimServer {
             .count();
         let tree_counters =
             self.pipeline.cache.as_ref().map(|c| c.counters());
-        let tc = tree_counters.clone().unwrap_or_default();
         SimOutcome {
             rebalance: self
                 .pipeline
@@ -509,13 +539,6 @@ impl SimServer {
                 .map(|c| c.rebalance_stats())
                 .unwrap_or_default(),
             tree_counters,
-            chunk_hits: tc.chunk_hits,
-            chunk_hit_bytes: tc.chunk_hit_bytes,
-            boundary_recompute_tokens: tc.boundary_recompute_tokens,
-            disk_spills: tc.disk_spills,
-            disk_spill_bytes: tc.disk_spill_bytes,
-            disk_restage_hits: tc.disk_restage_hits,
-            disk_restage_bytes: tc.disk_restage_bytes,
             tenant_modes: self
                 .cag
                 .as_ref()
@@ -1383,13 +1406,13 @@ mod tests {
         assert_eq!(out.completed, 80);
         let c = out.tree_counters.unwrap();
         assert!(c.host_evictions > 0, "host tier must thrash: {c:?}");
-        assert!(out.disk_spills > 0, "cascade must reach disk");
-        assert_eq!(out.disk_spills, c.disk_spills);
+        assert!(out.disk_spills() > 0, "cascade must reach disk");
+        assert_eq!(out.disk_spills(), c.disk_spills);
         assert!(
-            out.disk_restage_hits > 0,
+            out.disk_restage_hits() > 0,
             "spilled KV must be served back: {c:?}"
         );
-        assert!(out.disk_spill_bytes >= out.disk_restage_bytes / 4);
+        assert!(out.disk_spill_bytes() >= out.disk_restage_bytes() / 4);
     }
 
     /// CAG admission: the pinned tenant's requests carry zero retrieval

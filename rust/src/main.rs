@@ -1,9 +1,10 @@
 //! `ragcache` — the serving binary.
 //!
 //! Subcommands:
-//! - `serve`     start the PJRT-backed server on a TCP port
-//! - `simulate`  run a paper-scale simulation and print metrics
-//! - `info`      show models, GPUs, datasets and artifact status
+//! - `serve`         start the PJRT-backed server on a TCP port
+//! - `simulate`      run a paper-scale simulation and print metrics
+//! - `info`          show models, GPUs, datasets and artifact status
+//! - `stats-schema`  dump the metric registry schema (CI drift gate)
 
 use anyhow::{anyhow, Context, Result};
 use ragcache::cli::Args;
@@ -101,6 +102,9 @@ commands:
                                 requires --chunk-cache on; default off)
              [--cag-pin-gib G] (CAG pin budget GiB, default 4)
   info       show models, GPUs, datasets, artifact status
+  stats-schema  dump the declarative metric registry (wire names, merge
+             semantics, tolerance classes, bench columns); ci.sh diffs
+             the output against bench_baselines/stats_schema.txt
 ";
 
 /// f64 GiB ↔ bytes for the `--*-gib` flags.
@@ -125,6 +129,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "simulate" => cmd_simulate(&args),
         "info" => cmd_info(),
+        "stats-schema" => cmd_stats_schema(),
         _ => {
             eprint!("{USAGE}");
             std::process::exit(2);
@@ -836,9 +841,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         println!(
             "chunk cache: {} hits, {} reused, {} boundary tokens \
              recomputed",
-            out.chunk_hits,
-            ragcache::util::fmt_bytes(out.chunk_hit_bytes),
-            out.boundary_recompute_tokens,
+            out.chunk_hits(),
+            ragcache::util::fmt_bytes(out.chunk_hit_bytes()),
+            out.boundary_recompute_tokens(),
         );
     }
     if cfg.cache.rebalance {
@@ -857,10 +862,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         println!(
             "disk tier: {} spills ({} staged down), {} restage hits \
              ({} read back)",
-            out.disk_spills,
-            ragcache::util::fmt_bytes(out.disk_spill_bytes),
-            out.disk_restage_hits,
-            ragcache::util::fmt_bytes(out.disk_restage_bytes),
+            out.disk_spills(),
+            ragcache::util::fmt_bytes(out.disk_spill_bytes()),
+            out.disk_restage_hits(),
+            ragcache::util::fmt_bytes(out.disk_restage_bytes()),
         );
     }
     if cfg.cache.cag {
@@ -881,6 +886,16 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             println!("  tenant {t}: {}", m.as_str());
         }
     }
+    Ok(())
+}
+
+/// `stats-schema`: print the metric registry's generated schema. ci.sh
+/// diffs this against the committed `bench_baselines/stats_schema.txt`,
+/// so a stat added or removed without regenerating the snapshot fails
+/// CI loudly (the schema analogue of the bench_diff column-set rule).
+fn cmd_stats_schema() -> Result<()> {
+    use ragcache::metrics::registry::{schema_dump, Registry};
+    print!("{}", schema_dump(&Registry::standard()));
     Ok(())
 }
 

@@ -2,9 +2,51 @@
 //! SLO-attainment family for open-loop overload studies: goodput under a
 //! TTFT SLO, p99.9 tails, shed/downgrade counters and per-tenant
 //! breakdowns whose counts sum exactly to the aggregate.
+//!
+//! # Merge-semantics vocabulary
+//!
+//! Every aggregate stat the serving stack reports is declared once in
+//! [`registry`], and its cross-engine merge rule is picked from a small
+//! closed vocabulary ([`registry::MergeKind`]) instead of being
+//! hand-written per field:
+//!
+//! - **Sum** — per-engine counters over disjoint work (requests served,
+//!   speculations, shed/downgraded, goodput). Engines never see each
+//!   other's requests, so totals add.
+//! - **Max** — shared monotonic counters snapshotted by every engine
+//!   (the tree, the rebalancer, the disk tier): each engine reports the
+//!   SAME counter, so summing would multiply it by the engine count;
+//!   the freshest (largest) snapshot is the truth. Also worst-case
+//!   tails (`ttft_p999_ms`), where the fleet tail is the max of the
+//!   per-engine tails under disjoint request sets.
+//! - **Or** — capability flags (`slo_enabled`): the merged answer ran
+//!   SLO admission control iff any engine did.
+//! - **RequestWeightedMean** — means and rates (`mean_ttft_ms`,
+//!   `hit_rate`) weighted by each engine's request count, with the
+//!   NaN-skip rule: a part with zero requests or a non-finite value
+//!   contributes neither value nor weight, so one idle engine's NaN
+//!   neither poisons nor dilutes the engines that measured.
+//! - **SloGatedMean** — `RequestWeightedMean` restricted to engines
+//!   with `slo_enabled`: attainment is only defined where an SLO was
+//!   enforced.
+//! - **EngineCount** — the merged value is the part count itself.
+//! - **SnapshotConsistentGroup** — point-in-time gauges that are only
+//!   self-consistent within ONE engine's snapshot (per-shard
+//!   used/capacity arrays, disk occupancy): taken verbatim from the
+//!   freshest part, never mixed across parts, so a capacity move can't
+//!   report phantom bytes.
+//! - **ByKey** — the per-tenant sub-table: lines merge element-wise by
+//!   tenant id, each sub-field by its own kind (counts Sum, mode Max,
+//!   the mean request-weighted with a NaN/zero-served guard).
+//!
+//! The registry drives the wire encoder/decoder, the fan-out merge,
+//! the BENCH column set, the bench_diff tolerance bands and the CI
+//! schema snapshot from this one table — see [`registry`].
 
 use crate::util::Summary;
 use std::collections::BTreeMap;
+
+pub mod registry;
 
 /// Per-request lifecycle timestamps.
 #[derive(Debug, Clone, Default)]

@@ -1,0 +1,1172 @@
+//! Declarative metrics registry: ONE schema driving the stats wire
+//! format, the cross-engine merge, the tree-counter aggregation, the
+//! schema drift gate and the bench column/tolerance metadata.
+//!
+//! Every aggregate metric the serving stack reports is registered here
+//! exactly once as a [`MetricDesc`]: wire field name, report label,
+//! kind (counter/gauge/flag/vector/per-tenant), scope (who owns the
+//! underlying state), merge semantics (see [`MergeKind`] and the
+//! vocabulary in [`crate::metrics`]) and bench tolerance class. The
+//! wire encoder/decoder ([`Registry::encode_stats`] /
+//! [`Registry::parse_stats`]), the fan-out merge ([`Registry::merge`]),
+//! the BENCH column set ([`serving_bench_columns`]), the bench_diff
+//! tolerance bands ([`tolerance_of`]) and the CI schema snapshot
+//! ([`schema_dump`]) are all table-driven off the same descriptors, so
+//! adding a counter means ONE registry entry plus its increment site —
+//! not six hand-edited layers.
+//!
+//! Sub-schemas registered alongside the top-level table:
+//! - [`TENANT_FIELDS`]: the per-tenant line ([`TenantLine`]) merged
+//!   `ByKey` (tenant id) — counts sum, the mean is request-weighted
+//!   with a NaN/zero-served guard, the CAG mode takes the max code.
+//! - [`TREE_COUNTER_FIELDS`]: the shared-tree counters
+//!   ([`TreeCounters`]), whose per-shard aggregation is a field-wise
+//!   sum driven by the same table.
+//!
+//! Ad-hoc extension counters ([`Registry::with_counter`]) ride the
+//! `StatsResult::ext` vector through encode/parse/merge and the bench
+//! column set without touching any struct definition — the
+//! "add-a-metric means two edits" contract the conformance tests pin.
+
+use crate::server::proto::{StatsResult, TenantLine};
+use crate::tree::TreeCounters;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// What shape of measurement a metric is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    /// Monotonic event count (requests, evictions, spills).
+    Counter,
+    /// Instantaneous or derived value (means, rates, occupancy).
+    Gauge,
+    /// Boolean capability marker (e.g. "this engine measured an SLO").
+    Flag,
+    /// Per-shard numeric array from one consistent snapshot.
+    Vector,
+    /// Keyed sub-table of per-tenant lines.
+    PerTenant,
+}
+
+impl MetricKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Flag => "flag",
+            MetricKind::Vector => "vector",
+            MetricKind::PerTenant => "per_tenant",
+        }
+    }
+}
+
+/// Who owns the state behind a metric — the property that dictates its
+/// merge semantics (see the vocabulary in [`crate::metrics`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricScope {
+    /// Each engine owns its slice (its recorder, its sessions): values
+    /// from different engines describe disjoint work.
+    PerEngine,
+    /// The one shared sharded cache: every engine snapshots the SAME
+    /// monotonic counters, so cross-engine aggregation must not
+    /// double-count.
+    SharedTree,
+    /// The one shared cross-shard rebalancer.
+    SharedRebalancer,
+    /// Point-in-time gauges that are only self-consistent within one
+    /// engine's snapshot.
+    Snapshot,
+}
+
+impl MetricScope {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MetricScope::PerEngine => "per_engine",
+            MetricScope::SharedTree => "shared_tree",
+            MetricScope::SharedRebalancer => "shared_rebalancer",
+            MetricScope::Snapshot => "snapshot",
+        }
+    }
+}
+
+/// How a metric combines across the per-engine parts of one fanned-out
+/// `stats` request. The vocabulary is documented in [`crate::metrics`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MergeKind {
+    /// Σ over parts — per-engine counters over disjoint work.
+    Sum,
+    /// max over parts — shared monotonic counters (latest snapshot
+    /// wins) and worst-case tails.
+    Max,
+    /// Boolean any() — capability flags.
+    Or,
+    /// Request-weighted mean with the NaN-skip rule: parts with zero
+    /// requests or a non-finite value contribute neither value nor
+    /// weight; all-skipped merges report 0.0.
+    RequestWeightedMean,
+    /// [`MergeKind::RequestWeightedMean`] gated on `slo_enabled`: only
+    /// engines that ran SLO admission control carry weight.
+    SloGatedMean,
+    /// The merged value is the part count itself (`engines`).
+    EngineCount,
+    /// Taken verbatim from ONE freshest part (most shard gauges
+    /// reported, then most rebalance progress) so grouped gauges stay
+    /// self-consistent — mixing snapshots taken across a capacity move
+    /// could report phantom capacity.
+    SnapshotConsistentGroup,
+    /// Keyed sub-table merge: lines combine element-wise by key, each
+    /// sub-field by its own [`MergeKind`].
+    ByKey,
+    /// The sub-table key itself (never merged — it identifies the
+    /// line).
+    Key,
+}
+
+impl MergeKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MergeKind::Sum => "sum",
+            MergeKind::Max => "max",
+            MergeKind::Or => "or",
+            MergeKind::RequestWeightedMean => "request_weighted_mean",
+            MergeKind::SloGatedMean => "slo_gated_mean",
+            MergeKind::EngineCount => "engine_count",
+            MergeKind::SnapshotConsistentGroup => {
+                "snapshot_consistent_group"
+            }
+            MergeKind::ByKey => "by_key",
+            MergeKind::Key => "key",
+        }
+    }
+}
+
+/// bench_diff tolerance class: `Tight` for deterministic token/byte
+/// counters (0.15 relative by default), `Loose` for wall-clock columns
+/// that measure the host, not the code (0.75 relative).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tolerance {
+    Tight,
+    Loose,
+}
+
+impl Tolerance {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Tolerance::Tight => "tight",
+            Tolerance::Loose => "loose",
+        }
+    }
+}
+
+/// A dynamically-typed metric value — the generic snapshot cell the
+/// table-driven encode/parse/merge operate on.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    U64(u64),
+    F64(f64),
+    Bool(bool),
+    Shards(Vec<u64>),
+    Tenants(Vec<TenantLine>),
+}
+
+impl Value {
+    fn to_u64(&self) -> u64 {
+        match self {
+            Value::U64(x) => *x,
+            _ => panic!("metric value is not a u64"),
+        }
+    }
+
+    fn to_f64(&self) -> f64 {
+        match self {
+            Value::F64(x) => *x,
+            _ => panic!("metric value is not an f64"),
+        }
+    }
+
+    fn to_bool(&self) -> bool {
+        match self {
+            Value::Bool(b) => *b,
+            _ => panic!("metric value is not a bool"),
+        }
+    }
+}
+
+/// One registered metric: the single source of truth for its wire
+/// field, report label, classification, merge semantics and bench
+/// tolerance class, plus the typed accessors the table-driven
+/// encode/parse/merge use.
+pub struct MetricDesc {
+    /// Wire field name — also the registry name and the bench column
+    /// name wherever the metric is emitted.
+    pub wire: &'static str,
+    /// Human-readable report label.
+    pub label: &'static str,
+    pub kind: MetricKind,
+    pub scope: MetricScope,
+    pub merge: MergeKind,
+    pub tolerance: Tolerance,
+    pub get: fn(&StatsResult) -> Value,
+    pub set: fn(&mut StatsResult, Value),
+}
+
+/// The standard metric table, in wire-schema order (the JSON object is
+/// a sorted map, so this order is documentation, not wire layout).
+static METRICS: [MetricDesc; 31] = [
+    MetricDesc {
+        wire: "requests",
+        label: "requests served",
+        kind: MetricKind::Counter,
+        scope: MetricScope::PerEngine,
+        merge: MergeKind::Sum,
+        tolerance: Tolerance::Tight,
+        get: |s: &StatsResult| Value::U64(s.requests as u64),
+        set: |s: &mut StatsResult, v: Value| s.requests = v.to_u64() as usize,
+    },
+    MetricDesc {
+        wire: "mean_ttft_ms",
+        label: "mean TTFT (ms)",
+        kind: MetricKind::Gauge,
+        scope: MetricScope::PerEngine,
+        merge: MergeKind::RequestWeightedMean,
+        tolerance: Tolerance::Loose,
+        get: |s: &StatsResult| Value::F64(s.mean_ttft_ms),
+        set: |s: &mut StatsResult, v: Value| s.mean_ttft_ms = v.to_f64(),
+    },
+    MetricDesc {
+        wire: "hit_rate",
+        label: "cache hit rate",
+        kind: MetricKind::Gauge,
+        scope: MetricScope::PerEngine,
+        merge: MergeKind::RequestWeightedMean,
+        tolerance: Tolerance::Tight,
+        get: |s: &StatsResult| Value::F64(s.hit_rate),
+        set: |s: &mut StatsResult, v: Value| s.hit_rate = v.to_f64(),
+    },
+    MetricDesc {
+        wire: "engines",
+        label: "engine replicas merged",
+        kind: MetricKind::Gauge,
+        scope: MetricScope::PerEngine,
+        merge: MergeKind::EngineCount,
+        tolerance: Tolerance::Tight,
+        get: |s: &StatsResult| Value::U64(s.engines as u64),
+        set: |s: &mut StatsResult, v: Value| s.engines = v.to_u64() as usize,
+    },
+    MetricDesc {
+        wire: "tree_inserts",
+        label: "knowledge-tree inserts",
+        kind: MetricKind::Counter,
+        scope: MetricScope::SharedTree,
+        merge: MergeKind::Max,
+        tolerance: Tolerance::Tight,
+        get: |s: &StatsResult| Value::U64(s.tree_inserts),
+        set: |s: &mut StatsResult, v: Value| s.tree_inserts = v.to_u64(),
+    },
+    MetricDesc {
+        wire: "tree_gpu_evictions",
+        label: "GPU-tier evictions",
+        kind: MetricKind::Counter,
+        scope: MetricScope::SharedTree,
+        merge: MergeKind::Max,
+        tolerance: Tolerance::Tight,
+        get: |s: &StatsResult| Value::U64(s.tree_gpu_evictions),
+        set: |s: &mut StatsResult, v: Value| {
+            s.tree_gpu_evictions = v.to_u64()
+        },
+    },
+    MetricDesc {
+        wire: "tree_host_evictions",
+        label: "host-tier evictions",
+        kind: MetricKind::Counter,
+        scope: MetricScope::SharedTree,
+        merge: MergeKind::Max,
+        tolerance: Tolerance::Tight,
+        get: |s: &StatsResult| Value::U64(s.tree_host_evictions),
+        set: |s: &mut StatsResult, v: Value| {
+            s.tree_host_evictions = v.to_u64()
+        },
+    },
+    MetricDesc {
+        wire: "spec_started",
+        label: "speculations started",
+        kind: MetricKind::Counter,
+        scope: MetricScope::PerEngine,
+        merge: MergeKind::Sum,
+        tolerance: Tolerance::Tight,
+        get: |s: &StatsResult| Value::U64(s.spec_started),
+        set: |s: &mut StatsResult, v: Value| s.spec_started = v.to_u64(),
+    },
+    MetricDesc {
+        wire: "spec_wasted",
+        label: "speculations wasted",
+        kind: MetricKind::Counter,
+        scope: MetricScope::PerEngine,
+        merge: MergeKind::Sum,
+        tolerance: Tolerance::Tight,
+        get: |s: &StatsResult| Value::U64(s.spec_wasted),
+        set: |s: &mut StatsResult, v: Value| s.spec_wasted = v.to_u64(),
+    },
+    MetricDesc {
+        wire: "spec_promoted",
+        label: "speculations promoted",
+        kind: MetricKind::Counter,
+        scope: MetricScope::PerEngine,
+        merge: MergeKind::Sum,
+        tolerance: Tolerance::Tight,
+        get: |s: &StatsResult| Value::U64(s.spec_promoted),
+        set: |s: &mut StatsResult, v: Value| s.spec_promoted = v.to_u64(),
+    },
+    MetricDesc {
+        wire: "tree_gpu_hit_bytes",
+        label: "GPU cache-hit bytes",
+        kind: MetricKind::Counter,
+        scope: MetricScope::SharedTree,
+        merge: MergeKind::Max,
+        tolerance: Tolerance::Tight,
+        get: |s: &StatsResult| Value::U64(s.tree_gpu_hit_bytes),
+        set: |s: &mut StatsResult, v: Value| {
+            s.tree_gpu_hit_bytes = v.to_u64()
+        },
+    },
+    MetricDesc {
+        wire: "chunk_hits",
+        label: "chunk-cache hits",
+        kind: MetricKind::Counter,
+        scope: MetricScope::SharedTree,
+        merge: MergeKind::Max,
+        tolerance: Tolerance::Tight,
+        get: |s: &StatsResult| Value::U64(s.chunk_hits),
+        set: |s: &mut StatsResult, v: Value| s.chunk_hits = v.to_u64(),
+    },
+    MetricDesc {
+        wire: "chunk_hit_bytes",
+        label: "chunk-cache hit bytes",
+        kind: MetricKind::Counter,
+        scope: MetricScope::SharedTree,
+        merge: MergeKind::Max,
+        tolerance: Tolerance::Tight,
+        get: |s: &StatsResult| Value::U64(s.chunk_hit_bytes),
+        set: |s: &mut StatsResult, v: Value| {
+            s.chunk_hit_bytes = v.to_u64()
+        },
+    },
+    MetricDesc {
+        wire: "boundary_recompute_tokens",
+        label: "boundary tokens recomputed",
+        kind: MetricKind::Counter,
+        scope: MetricScope::SharedTree,
+        merge: MergeKind::Max,
+        tolerance: Tolerance::Tight,
+        get: |s: &StatsResult| Value::U64(s.boundary_recompute_tokens),
+        set: |s: &mut StatsResult, v: Value| {
+            s.boundary_recompute_tokens = v.to_u64()
+        },
+    },
+    MetricDesc {
+        wire: "rebalance_recomputes",
+        label: "rebalancer slice recomputes",
+        kind: MetricKind::Counter,
+        scope: MetricScope::SharedRebalancer,
+        merge: MergeKind::Max,
+        tolerance: Tolerance::Tight,
+        get: |s: &StatsResult| Value::U64(s.rebalance_recomputes),
+        set: |s: &mut StatsResult, v: Value| {
+            s.rebalance_recomputes = v.to_u64()
+        },
+    },
+    MetricDesc {
+        wire: "rebalance_moved_bytes",
+        label: "rebalancer capacity bytes moved",
+        kind: MetricKind::Counter,
+        scope: MetricScope::SharedRebalancer,
+        merge: MergeKind::Max,
+        tolerance: Tolerance::Tight,
+        get: |s: &StatsResult| Value::U64(s.rebalance_moved_bytes),
+        set: |s: &mut StatsResult, v: Value| {
+            s.rebalance_moved_bytes = v.to_u64()
+        },
+    },
+    MetricDesc {
+        wire: "shard_gpu_used",
+        label: "per-shard GPU bytes used",
+        kind: MetricKind::Vector,
+        scope: MetricScope::Snapshot,
+        merge: MergeKind::SnapshotConsistentGroup,
+        tolerance: Tolerance::Tight,
+        get: |s: &StatsResult| Value::Shards(s.shard_gpu_used.clone()),
+        set: |s: &mut StatsResult, v: Value| match v {
+            Value::Shards(a) => s.shard_gpu_used = a,
+            _ => panic!("metric value is not a shard array"),
+        },
+    },
+    MetricDesc {
+        wire: "shard_gpu_capacity",
+        label: "per-shard GPU capacity",
+        kind: MetricKind::Vector,
+        scope: MetricScope::Snapshot,
+        merge: MergeKind::SnapshotConsistentGroup,
+        tolerance: Tolerance::Tight,
+        get: |s: &StatsResult| {
+            Value::Shards(s.shard_gpu_capacity.clone())
+        },
+        set: |s: &mut StatsResult, v: Value| match v {
+            Value::Shards(a) => s.shard_gpu_capacity = a,
+            _ => panic!("metric value is not a shard array"),
+        },
+    },
+    MetricDesc {
+        wire: "goodput_rps",
+        label: "goodput under SLO (req/s)",
+        kind: MetricKind::Gauge,
+        scope: MetricScope::PerEngine,
+        merge: MergeKind::Sum,
+        tolerance: Tolerance::Loose,
+        get: |s: &StatsResult| Value::F64(s.goodput_rps),
+        set: |s: &mut StatsResult, v: Value| s.goodput_rps = v.to_f64(),
+    },
+    MetricDesc {
+        wire: "ttft_p999_ms",
+        label: "p99.9 TTFT (ms)",
+        kind: MetricKind::Gauge,
+        scope: MetricScope::PerEngine,
+        merge: MergeKind::Max,
+        tolerance: Tolerance::Loose,
+        get: |s: &StatsResult| Value::F64(s.ttft_p999_ms),
+        set: |s: &mut StatsResult, v: Value| s.ttft_p999_ms = v.to_f64(),
+    },
+    MetricDesc {
+        wire: "shed_requests",
+        label: "requests shed",
+        kind: MetricKind::Counter,
+        scope: MetricScope::PerEngine,
+        merge: MergeKind::Sum,
+        tolerance: Tolerance::Tight,
+        get: |s: &StatsResult| Value::U64(s.shed_requests),
+        set: |s: &mut StatsResult, v: Value| s.shed_requests = v.to_u64(),
+    },
+    MetricDesc {
+        wire: "downgraded_requests",
+        label: "arrivals downgraded",
+        kind: MetricKind::Counter,
+        scope: MetricScope::PerEngine,
+        merge: MergeKind::Sum,
+        tolerance: Tolerance::Tight,
+        get: |s: &StatsResult| Value::U64(s.downgraded_requests),
+        set: |s: &mut StatsResult, v: Value| {
+            s.downgraded_requests = v.to_u64()
+        },
+    },
+    MetricDesc {
+        wire: "slo_attainment",
+        label: "SLO attainment fraction",
+        kind: MetricKind::Gauge,
+        scope: MetricScope::PerEngine,
+        merge: MergeKind::SloGatedMean,
+        tolerance: Tolerance::Tight,
+        get: |s: &StatsResult| Value::F64(s.slo_attainment),
+        set: |s: &mut StatsResult, v: Value| {
+            s.slo_attainment = v.to_f64()
+        },
+    },
+    MetricDesc {
+        wire: "slo_enabled",
+        label: "SLO admission control active",
+        kind: MetricKind::Flag,
+        scope: MetricScope::PerEngine,
+        merge: MergeKind::Or,
+        tolerance: Tolerance::Tight,
+        get: |s: &StatsResult| Value::Bool(s.slo_enabled),
+        set: |s: &mut StatsResult, v: Value| s.slo_enabled = v.to_bool(),
+    },
+    MetricDesc {
+        wire: "disk_spills",
+        label: "disk-tier spills",
+        kind: MetricKind::Counter,
+        scope: MetricScope::SharedTree,
+        merge: MergeKind::Max,
+        tolerance: Tolerance::Tight,
+        get: |s: &StatsResult| Value::U64(s.disk_spills),
+        set: |s: &mut StatsResult, v: Value| s.disk_spills = v.to_u64(),
+    },
+    MetricDesc {
+        wire: "disk_spill_bytes",
+        label: "disk-tier spill bytes",
+        kind: MetricKind::Counter,
+        scope: MetricScope::SharedTree,
+        merge: MergeKind::Max,
+        tolerance: Tolerance::Tight,
+        get: |s: &StatsResult| Value::U64(s.disk_spill_bytes),
+        set: |s: &mut StatsResult, v: Value| {
+            s.disk_spill_bytes = v.to_u64()
+        },
+    },
+    MetricDesc {
+        wire: "disk_restage_hits",
+        label: "disk-tier restage hits",
+        kind: MetricKind::Counter,
+        scope: MetricScope::SharedTree,
+        merge: MergeKind::Max,
+        tolerance: Tolerance::Tight,
+        get: |s: &StatsResult| Value::U64(s.disk_restage_hits),
+        set: |s: &mut StatsResult, v: Value| {
+            s.disk_restage_hits = v.to_u64()
+        },
+    },
+    MetricDesc {
+        wire: "disk_restage_bytes",
+        label: "disk-tier restage bytes",
+        kind: MetricKind::Counter,
+        scope: MetricScope::SharedTree,
+        merge: MergeKind::Max,
+        tolerance: Tolerance::Tight,
+        get: |s: &StatsResult| Value::U64(s.disk_restage_bytes),
+        set: |s: &mut StatsResult, v: Value| {
+            s.disk_restage_bytes = v.to_u64()
+        },
+    },
+    MetricDesc {
+        wire: "disk_used",
+        label: "disk bytes in use",
+        kind: MetricKind::Gauge,
+        scope: MetricScope::Snapshot,
+        merge: MergeKind::SnapshotConsistentGroup,
+        tolerance: Tolerance::Tight,
+        get: |s: &StatsResult| Value::U64(s.disk_used),
+        set: |s: &mut StatsResult, v: Value| s.disk_used = v.to_u64(),
+    },
+    MetricDesc {
+        wire: "disk_capacity",
+        label: "disk capacity bytes",
+        kind: MetricKind::Gauge,
+        scope: MetricScope::Snapshot,
+        merge: MergeKind::SnapshotConsistentGroup,
+        tolerance: Tolerance::Tight,
+        get: |s: &StatsResult| Value::U64(s.disk_capacity),
+        set: |s: &mut StatsResult, v: Value| s.disk_capacity = v.to_u64(),
+    },
+    MetricDesc {
+        wire: "tenants",
+        label: "per-tenant breakdown",
+        kind: MetricKind::PerTenant,
+        scope: MetricScope::PerEngine,
+        merge: MergeKind::ByKey,
+        tolerance: Tolerance::Tight,
+        get: |s: &StatsResult| Value::Tenants(s.tenants.clone()),
+        set: |s: &mut StatsResult, v: Value| match v {
+            Value::Tenants(ts) => s.tenants = ts,
+            _ => panic!("metric value is not a tenant table"),
+        },
+    },
+];
+
+/// The standard metric descriptors, in schema order.
+pub fn descriptors() -> &'static [MetricDesc] {
+    &METRICS
+}
+
+/// One field of the per-tenant line sub-schema. Values travel as f64
+/// (the wire carries every number as f64 anyway); `float` selects the
+/// wire parse rule — `as_f64` for real-valued fields, `as_u64` for
+/// counts, so garbage like fractional counts falls to the default
+/// exactly as the hand-written parser did.
+pub struct TenantFieldDesc {
+    pub name: &'static str,
+    pub merge: MergeKind,
+    pub float: bool,
+    pub get: fn(&TenantLine) -> f64,
+    pub set: fn(&mut TenantLine, f64),
+}
+
+/// The per-tenant line sub-schema, merged [`MergeKind::ByKey`].
+pub static TENANT_FIELDS: [TenantFieldDesc; 8] = [
+    TenantFieldDesc {
+        name: "tenant",
+        merge: MergeKind::Key,
+        float: false,
+        get: |t: &TenantLine| t.tenant as f64,
+        set: |t: &mut TenantLine, v: f64| t.tenant = v as u32,
+    },
+    TenantFieldDesc {
+        name: "requests",
+        merge: MergeKind::Sum,
+        float: false,
+        get: |t: &TenantLine| t.requests as f64,
+        set: |t: &mut TenantLine, v: f64| t.requests = v as u64,
+    },
+    TenantFieldDesc {
+        name: "completed",
+        merge: MergeKind::Sum,
+        float: false,
+        get: |t: &TenantLine| t.completed as f64,
+        set: |t: &mut TenantLine, v: f64| t.completed = v as u64,
+    },
+    TenantFieldDesc {
+        name: "shed",
+        merge: MergeKind::Sum,
+        float: false,
+        get: |t: &TenantLine| t.shed as f64,
+        set: |t: &mut TenantLine, v: f64| t.shed = v as u64,
+    },
+    TenantFieldDesc {
+        name: "downgraded",
+        merge: MergeKind::Sum,
+        float: false,
+        get: |t: &TenantLine| t.downgraded as f64,
+        set: |t: &mut TenantLine, v: f64| t.downgraded = v as u64,
+    },
+    TenantFieldDesc {
+        name: "slo_ok",
+        merge: MergeKind::Sum,
+        float: false,
+        get: |t: &TenantLine| t.slo_ok as f64,
+        set: |t: &mut TenantLine, v: f64| t.slo_ok = v as u64,
+    },
+    TenantFieldDesc {
+        name: "mean_ttft_ms",
+        merge: MergeKind::RequestWeightedMean,
+        float: true,
+        get: |t: &TenantLine| t.mean_ttft_ms,
+        set: |t: &mut TenantLine, v: f64| t.mean_ttft_ms = v,
+    },
+    TenantFieldDesc {
+        name: "mode",
+        merge: MergeKind::Max,
+        float: false,
+        get: |t: &TenantLine| t.mode as f64,
+        set: |t: &mut TenantLine, v: f64| t.mode = v as u8,
+    },
+];
+
+/// One field of the shared-tree counter block ([`TreeCounters`]), whose
+/// per-shard aggregation is a field-wise sum.
+pub struct CounterFieldDesc {
+    pub name: &'static str,
+    pub get: fn(&TreeCounters) -> u64,
+    pub set: fn(&mut TreeCounters, u64),
+}
+
+/// The [`TreeCounters`] sub-schema: every field, in declaration order.
+/// [`TreeCounters::merge`] iterates this table, so a new counter added
+/// here is summed across shards with no hand-written merge line.
+pub static TREE_COUNTER_FIELDS: [CounterFieldDesc; 14] = [
+    CounterFieldDesc {
+        name: "gpu_evictions",
+        get: |c: &TreeCounters| c.gpu_evictions,
+        set: |c: &mut TreeCounters, v: u64| c.gpu_evictions = v,
+    },
+    CounterFieldDesc {
+        name: "host_evictions",
+        get: |c: &TreeCounters| c.host_evictions,
+        set: |c: &mut TreeCounters, v: u64| c.host_evictions = v,
+    },
+    CounterFieldDesc {
+        name: "swap_out_bytes",
+        get: |c: &TreeCounters| c.swap_out_bytes,
+        set: |c: &mut TreeCounters, v: u64| c.swap_out_bytes = v,
+    },
+    CounterFieldDesc {
+        name: "zero_copy_evictions",
+        get: |c: &TreeCounters| c.zero_copy_evictions,
+        set: |c: &mut TreeCounters, v: u64| c.zero_copy_evictions = v,
+    },
+    CounterFieldDesc {
+        name: "inserts",
+        get: |c: &TreeCounters| c.inserts,
+        set: |c: &mut TreeCounters, v: u64| c.inserts = v,
+    },
+    CounterFieldDesc {
+        name: "rejected_inserts",
+        get: |c: &TreeCounters| c.rejected_inserts,
+        set: |c: &mut TreeCounters, v: u64| c.rejected_inserts = v,
+    },
+    CounterFieldDesc {
+        name: "gpu_hit_bytes",
+        get: |c: &TreeCounters| c.gpu_hit_bytes,
+        set: |c: &mut TreeCounters, v: u64| c.gpu_hit_bytes = v,
+    },
+    CounterFieldDesc {
+        name: "chunk_hits",
+        get: |c: &TreeCounters| c.chunk_hits,
+        set: |c: &mut TreeCounters, v: u64| c.chunk_hits = v,
+    },
+    CounterFieldDesc {
+        name: "chunk_hit_bytes",
+        get: |c: &TreeCounters| c.chunk_hit_bytes,
+        set: |c: &mut TreeCounters, v: u64| c.chunk_hit_bytes = v,
+    },
+    CounterFieldDesc {
+        name: "boundary_recompute_tokens",
+        get: |c: &TreeCounters| c.boundary_recompute_tokens,
+        set: |c: &mut TreeCounters, v: u64| {
+            c.boundary_recompute_tokens = v
+        },
+    },
+    CounterFieldDesc {
+        name: "disk_spills",
+        get: |c: &TreeCounters| c.disk_spills,
+        set: |c: &mut TreeCounters, v: u64| c.disk_spills = v,
+    },
+    CounterFieldDesc {
+        name: "disk_spill_bytes",
+        get: |c: &TreeCounters| c.disk_spill_bytes,
+        set: |c: &mut TreeCounters, v: u64| c.disk_spill_bytes = v,
+    },
+    CounterFieldDesc {
+        name: "disk_restage_hits",
+        get: |c: &TreeCounters| c.disk_restage_hits,
+        set: |c: &mut TreeCounters, v: u64| c.disk_restage_hits = v,
+    },
+    CounterFieldDesc {
+        name: "disk_restage_bytes",
+        get: |c: &TreeCounters| c.disk_restage_bytes,
+        set: |c: &mut TreeCounters, v: u64| c.disk_restage_bytes = v,
+    },
+];
+
+/// An extension counter registered beyond the standard table: it rides
+/// `StatsResult::ext` through encode/parse/merge and (with `bench`)
+/// the serving bench column set, so adding it touches exactly the
+/// registry entry and the increment site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExtCounter {
+    pub name: &'static str,
+    /// [`MergeKind::Sum`] or [`MergeKind::Max`] — extension counters
+    /// are plain u64 event counts.
+    pub merge: MergeKind,
+    pub tolerance: Tolerance,
+    /// Whether the counter joins the serving bench column set.
+    pub bench: bool,
+}
+
+/// The metric registry: the standard descriptor table plus any
+/// extension counters. Cheap to construct; the wire/merge entry points
+/// in [`crate::server`] use [`Registry::standard`].
+pub struct Registry {
+    exts: Vec<ExtCounter>,
+}
+
+impl Registry {
+    /// The standard schema: exactly the [`descriptors`] table.
+    pub fn standard() -> Registry {
+        Registry { exts: Vec::new() }
+    }
+
+    /// Register an extension counter. Panics on a name that collides
+    /// with a standard metric or an already-registered extension —
+    /// registration is a build-time act, not a runtime condition.
+    pub fn with_counter(mut self, ext: ExtCounter) -> Registry {
+        assert!(
+            descriptors().iter().all(|d| d.wire != ext.name),
+            "{} collides with a standard metric",
+            ext.name
+        );
+        assert!(
+            self.exts.iter().all(|e| e.name != ext.name),
+            "{} is already registered",
+            ext.name
+        );
+        assert!(
+            matches!(ext.merge, MergeKind::Sum | MergeKind::Max),
+            "extension counters merge Sum or Max"
+        );
+        self.exts.push(ext);
+        self
+    }
+
+    pub fn ext_counters(&self) -> &[ExtCounter] {
+        &self.exts
+    }
+
+    /// Encode one stats answer as the wire JSON object (including the
+    /// `"type":"stats"` tag). Field set and values are exactly the
+    /// hand-written encoder's; the object is a sorted map, so pair
+    /// order cannot matter.
+    pub fn encode_stats(&self, s: &StatsResult) -> Json {
+        let mut pairs: Vec<(&str, Json)> =
+            vec![("type", Json::str("stats"))];
+        for d in descriptors() {
+            pairs.push((d.wire, value_to_json((d.get)(s))));
+        }
+        for e in &self.exts {
+            if let Some(&(_, x)) =
+                s.ext.iter().find(|(n, _)| *n == e.name)
+            {
+                pairs.push((e.name, Json::num(x as f64)));
+            }
+        }
+        Json::obj(pairs)
+    }
+
+    /// Parse one stats wire object. Missing or wrong-typed fields fall
+    /// to their defaults (`engines` defaults to 1, everything else to
+    /// zero/empty), mirroring the hand-written parser.
+    pub fn parse_stats(&self, v: &Json) -> StatsResult {
+        let mut s = StatsResult {
+            engines: 1,
+            ..Default::default()
+        };
+        for d in descriptors() {
+            let Some(jv) = v.get(d.wire) else { continue };
+            let parsed = match (d.get)(&s) {
+                Value::U64(_) => jv.as_u64().map(Value::U64),
+                Value::F64(_) => jv.as_f64().map(Value::F64),
+                Value::Bool(_) => jv.as_bool().map(Value::Bool),
+                Value::Shards(_) => jv.as_arr().map(|a| {
+                    Value::Shards(
+                        a.iter().filter_map(Json::as_u64).collect(),
+                    )
+                }),
+                Value::Tenants(_) => jv.as_arr().map(|a| {
+                    Value::Tenants(
+                        a.iter().map(parse_tenant_line).collect(),
+                    )
+                }),
+            };
+            if let Some(val) = parsed {
+                (d.set)(&mut s, val);
+            }
+        }
+        for e in &self.exts {
+            if let Some(x) = v.get(e.name).and_then(Json::as_u64) {
+                s.ext.push((e.name, x));
+            }
+        }
+        s
+    }
+
+    /// Table-driven fan-out merge: one loop over the descriptors
+    /// replaces the field-by-field merge, applying each metric's
+    /// registered [`MergeKind`] — including the NaN-skip weighting,
+    /// the `slo_enabled` gating and the one-snapshot shard-array rule
+    /// the hand-written merge implemented.
+    pub fn merge(&self, parts: &[StatsResult]) -> StatsResult {
+        // The freshest self-consistent snapshot: most shard gauges
+        // reported, then most rebalance progress. `max_by_key` keeps
+        // the LAST maximum, matching the hand-written merge exactly.
+        let freshest = parts.iter().max_by_key(|p| {
+            (p.shard_gpu_capacity.len(), p.rebalance_recomputes)
+        });
+        let mut m = StatsResult::default();
+        for d in descriptors() {
+            let template = (d.get)(&m);
+            let merged = match d.merge {
+                MergeKind::Sum => match template {
+                    Value::U64(_) => Value::U64(
+                        parts
+                            .iter()
+                            .map(|p| (d.get)(p).to_u64())
+                            .sum(),
+                    ),
+                    _ => Value::F64(
+                        parts
+                            .iter()
+                            .map(|p| (d.get)(p).to_f64())
+                            .sum(),
+                    ),
+                },
+                MergeKind::Max => match template {
+                    Value::U64(_) => Value::U64(
+                        parts
+                            .iter()
+                            .map(|p| (d.get)(p).to_u64())
+                            .max()
+                            .unwrap_or(0),
+                    ),
+                    _ => Value::F64(
+                        parts
+                            .iter()
+                            .map(|p| (d.get)(p).to_f64())
+                            .fold(0.0, f64::max),
+                    ),
+                },
+                MergeKind::Or => Value::Bool(
+                    parts.iter().any(|p| (d.get)(p).to_bool()),
+                ),
+                MergeKind::RequestWeightedMean => Value::F64(
+                    request_weighted(parts, |p| (d.get)(p).to_f64(), false),
+                ),
+                MergeKind::SloGatedMean => Value::F64(
+                    request_weighted(parts, |p| (d.get)(p).to_f64(), true),
+                ),
+                MergeKind::EngineCount => {
+                    Value::U64(parts.len() as u64)
+                }
+                MergeKind::SnapshotConsistentGroup => match freshest {
+                    Some(p) => (d.get)(p),
+                    None => template,
+                },
+                MergeKind::ByKey => {
+                    Value::Tenants(merge_tenant_lines(parts))
+                }
+                MergeKind::Key => template,
+            };
+            (d.set)(&mut m, merged);
+        }
+        for e in &self.exts {
+            let vals: Vec<u64> = parts
+                .iter()
+                .filter_map(|p| {
+                    p.ext
+                        .iter()
+                        .find(|(n, _)| *n == e.name)
+                        .map(|&(_, x)| x)
+                })
+                .collect();
+            if vals.is_empty() {
+                continue;
+            }
+            let x = match e.merge {
+                MergeKind::Sum => vals.iter().sum(),
+                _ => vals.iter().copied().max().unwrap_or(0),
+            };
+            m.ext.push((e.name, x));
+        }
+        m
+    }
+}
+
+fn value_to_json(v: Value) -> Json {
+    match v {
+        Value::U64(x) => Json::num(x as f64),
+        Value::F64(x) => Json::num(x),
+        Value::Bool(b) => Json::Bool(b),
+        Value::Shards(a) => Json::Arr(
+            a.iter().map(|&b| Json::num(b as f64)).collect(),
+        ),
+        Value::Tenants(ts) => Json::Arr(
+            ts.iter().map(encode_tenant_line).collect(),
+        ),
+    }
+}
+
+fn encode_tenant_line(t: &TenantLine) -> Json {
+    Json::obj(
+        TENANT_FIELDS
+            .iter()
+            .map(|f| (f.name, Json::num((f.get)(t))))
+            .collect(),
+    )
+}
+
+fn parse_tenant_line(v: &Json) -> TenantLine {
+    let mut t = TenantLine::default();
+    for f in TENANT_FIELDS.iter() {
+        let parsed = if f.float {
+            v.get(f.name).and_then(Json::as_f64)
+        } else {
+            v.get(f.name).and_then(Json::as_u64).map(|x| x as f64)
+        };
+        if let Some(x) = parsed {
+            (f.set)(&mut t, x);
+        }
+    }
+    t
+}
+
+/// The NaN-skip request-weighted mean: parts with zero requests or a
+/// non-finite value contribute neither value nor weight (one engine's
+/// NaN mean must not poison — or dilute — the engines that measured);
+/// with `slo_gated`, only engines running SLO admission control carry
+/// weight. All-skipped merges report 0.0.
+fn request_weighted(
+    parts: &[StatsResult],
+    f: impl Fn(&StatsResult) -> f64,
+    slo_gated: bool,
+) -> f64 {
+    let (sum, weight) = parts
+        .iter()
+        .filter(|p| {
+            (!slo_gated || p.slo_enabled)
+                && p.requests > 0
+                && f(p).is_finite()
+        })
+        .fold((0.0, 0usize), |(s, w), p| {
+            (s + f(p) * p.requests as f64, w + p.requests)
+        });
+    if weight == 0 {
+        0.0
+    } else {
+        sum / weight as f64
+    }
+}
+
+/// Element-wise merge of the per-tenant lines by tenant id
+/// ([`MergeKind::ByKey`]): counts sum, the CAG mode takes the max
+/// code, and `mean_ttft_ms` merges request-weighted with the same
+/// NaN/zero-served guard as the top-level mean — a line with no
+/// requests, no completions or a non-finite mean contributes neither
+/// value nor weight.
+pub fn merge_tenant_lines(parts: &[StatsResult]) -> Vec<TenantLine> {
+    let mut by: BTreeMap<u32, TenantLine> = BTreeMap::new();
+    let mut ttft_weight: BTreeMap<u32, f64> = BTreeMap::new();
+    for p in parts {
+        for t in &p.tenants {
+            let e = by.entry(t.tenant).or_insert_with(|| TenantLine {
+                tenant: t.tenant,
+                ..Default::default()
+            });
+            for f in TENANT_FIELDS.iter() {
+                match f.merge {
+                    MergeKind::Sum => {
+                        let v = (f.get)(e) + (f.get)(t);
+                        (f.set)(e, v);
+                    }
+                    MergeKind::Max => {
+                        let v = (f.get)(e).max((f.get)(t));
+                        (f.set)(e, v);
+                    }
+                    // Key and the mean handled outside the loop.
+                    _ => {}
+                }
+            }
+            if t.requests > 0
+                && t.completed > 0
+                && t.mean_ttft_ms.is_finite()
+            {
+                let w = t.requests as f64;
+                // Weighted sum for now; normalized below.
+                e.mean_ttft_ms += t.mean_ttft_ms * w;
+                *ttft_weight.entry(t.tenant).or_insert(0.0) += w;
+            }
+        }
+    }
+    for (tenant, line) in by.iter_mut() {
+        let w = ttft_weight.get(tenant).copied().unwrap_or(0.0);
+        line.mean_ttft_ms =
+            if w > 0.0 { line.mean_ttft_ms / w } else { 0.0 };
+    }
+    by.into_values().collect()
+}
+
+/// NaN-safe wire encoding of a mean: JSON cannot carry NaN, so an
+/// unmeasured mean reports 0.0 (the merge's zero-served guard skips
+/// such lines anyway).
+pub fn wire_mean_ms(ms: f64) -> f64 {
+    if ms.is_finite() {
+        ms
+    } else {
+        0.0
+    }
+}
+
+/// bench_diff tolerance class for a column, when the column is a
+/// registered metric (standard, tree counter, or extension). Columns
+/// the registry has never heard of return `None` — bench_diff falls
+/// back to its wall-clock suffix rule for those.
+pub fn tolerance_of(reg: &Registry, col: &str) -> Option<Tolerance> {
+    if let Some(d) = descriptors().iter().find(|d| d.wire == col) {
+        return Some(d.tolerance);
+    }
+    // Tree counters are deterministic event/byte counts: always tight.
+    if TREE_COUNTER_FIELDS.iter().any(|f| f.name == col) {
+        return Some(Tolerance::Tight);
+    }
+    reg.ext_counters()
+        .iter()
+        .find(|e| e.name == col)
+        .map(|e| e.tolerance)
+}
+
+/// The BENCH_serving column set, with every metric-backed column pulled
+/// from the registry (a typo'd or unregistered name panics at emit
+/// time instead of silently diverging from the schema) and `bench`
+/// extension counters appended. Workload-shape columns (row labels and
+/// the bench's own wall-clock measurements) are bench-local.
+pub fn serving_bench_columns(reg: &Registry) -> Vec<&'static str> {
+    let wire = |name: &'static str| -> &'static str {
+        descriptors()
+            .iter()
+            .find(|d| d.wire == name)
+            .map(|d| d.wire)
+            .expect("bench column not in the metric registry")
+    };
+    let tree = |name: &'static str| -> &'static str {
+        TREE_COUNTER_FIELDS
+            .iter()
+            .find(|f| f.name == name)
+            .map(|f| f.name)
+            .expect("bench column not in the tree-counter registry")
+    };
+    let mut cols = vec![
+        "chunk_cache",
+        "requests",
+        "ttft_p50_ms",
+        "ttft_p99_ms",
+        "throughput_rps",
+        "sum_prefill_tokens",
+        "ttft_proxy_s",
+        tree("gpu_hit_bytes"),
+        tree("chunk_hits"),
+        tree("chunk_hit_bytes"),
+        tree("boundary_recompute_tokens"),
+        wire("tree_inserts"),
+        tree("swap_out_bytes"),
+        wire("goodput_rps"),
+        wire("ttft_p999_ms"),
+        wire("shed_requests"),
+        "disk",
+        tree("disk_spills"),
+        tree("disk_restage_hits"),
+        tree("disk_restage_bytes"),
+    ];
+    for e in reg.ext_counters() {
+        if e.bench {
+            cols.push(e.name);
+        }
+    }
+    cols
+}
+
+/// The registry schema as stable text: one line per metric (and per
+/// sub-schema field, and per serving bench column). ci.sh diffs this
+/// against the committed `bench_baselines/stats_schema.txt`, so a stat
+/// silently added or removed fails loudly — the schema analogue of the
+/// bench_diff column-set rule.
+pub fn schema_dump(reg: &Registry) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "# ragcache stats schema - generated by `ragcache stats-schema`\n",
+    );
+    out.push_str(
+        "# one line per metric: wire name, kind, scope, merge \
+         semantics, bench tolerance class\n",
+    );
+    out.push_str(
+        "# regenerate and commit deliberately when the metric surface \
+         changes; ci.sh diffs this file\n",
+    );
+    for d in descriptors() {
+        out.push_str(&format!(
+            "stat {} kind={} scope={} merge={} tolerance={}\n",
+            d.wire,
+            d.kind.as_str(),
+            d.scope.as_str(),
+            d.merge.as_str(),
+            d.tolerance.as_str(),
+        ));
+    }
+    for e in reg.ext_counters() {
+        out.push_str(&format!(
+            "stat {} kind=counter scope=per_engine merge={} \
+             tolerance={} ext\n",
+            e.name,
+            e.merge.as_str(),
+            e.tolerance.as_str(),
+        ));
+    }
+    for f in TENANT_FIELDS.iter() {
+        out.push_str(&format!(
+            "tenant_field {} merge={}\n",
+            f.name,
+            f.merge.as_str(),
+        ));
+    }
+    for f in TREE_COUNTER_FIELDS.iter() {
+        out.push_str(&format!("tree_counter {} merge=sum\n", f.name));
+    }
+    for c in serving_bench_columns(reg) {
+        out.push_str(&format!("bench_serving_column {c}\n"));
+    }
+    out
+}

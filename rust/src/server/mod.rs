@@ -60,7 +60,9 @@
 //! ([`ServerOptions::router`], folded through
 //! [`crate::sched::ShardRouter`]), so a shard's working set stays with
 //! one engine. `stats` requests fan out to every engine and the replies
-//! are merged. Shutdown is graceful: every queue is sealed against new
+//! are merged by the metric registry's table-driven merge (see
+//! [`crate::metrics::registry`] and the diagram on `merge_stats`).
+//! Shutdown is graceful: every queue is sealed against new
 //! work, queued requests are drained and answered, then every thread
 //! exits. An optional [`ServerOptions::estimator`] supplies
 //! cached/compute token estimates (e.g. from a shared
@@ -863,199 +865,33 @@ fn route_engine(
     ShardRouter::new(engines).route(shard)
 }
 
-/// Merge the per-engine answers to one `stats` request. Request counts,
-/// request-weighted means and the speculation counters sum across
-/// engines (each engine owns its recorder and its sessions); the tree
-/// counters inside every part already aggregate the one shared sharded
-/// cache, so they merge by maximum — summing would count the shared
-/// tree once per engine.
+/// Merge the per-engine answers to one `stats` request by delegating to
+/// the metric registry's table-driven merge: every field combines under
+/// the [`MergeKind`](crate::metrics::registry::MergeKind) it was
+/// registered with, so the per-engine/shared-state distinctions live in
+/// ONE schema instead of a field-by-field function here.
+///
+/// ```text
+///   submit_stats ──► engine 0 ┐
+///                    engine 1 ├─ StatsResult parts (one per engine)
+///                    engine M ┘        │
+///                                      ▼
+///            metrics::registry::Registry::standard().merge(parts)
+///               │  per descriptor: Sum | Max | Or | EngineCount
+///               │  RequestWeightedMean / SloGatedMean (NaN-skip)
+///               │  SnapshotConsistentGroup (ONE freshest snapshot)
+///               │  ByKey (tenant lines, request-weighted mean)
+///               ▼
+///            one merged StatsResult ──► proto::encode_response
+///               (field set + wire names from the same registry)
+/// ```
+///
+/// See the merge-semantics vocabulary in [`crate::metrics`] for why
+/// each kind exists (shared-tree counters max-merge, gauges come from
+/// one self-consistent snapshot, means skip NaN parts without diluting
+/// weights, attainment only counts SLO-enabled engines).
 fn merge_stats(parts: &[proto::StatsResult]) -> proto::StatsResult {
-    let requests: usize = parts.iter().map(|p| p.requests).sum();
-    // Request-weighted mean over the engines that actually have a
-    // finite value. One engine reporting NaN (e.g. a mean over zero
-    // completions) must not poison the whole merged answer, and its
-    // requests must not dilute the weights of the engines that did
-    // measure — skip the part AND its weight.
-    let weighted = |f: fn(&proto::StatsResult) -> f64| -> f64 {
-        let (sum, weight) = parts
-            .iter()
-            .filter(|p| p.requests > 0 && f(p).is_finite())
-            .fold((0.0, 0usize), |(s, w), p| {
-                (s + f(p) * p.requests as f64, w + p.requests)
-            });
-        if weight == 0 {
-            0.0
-        } else {
-            sum / weight as f64
-        }
-    };
-    // SLO attainment is only meaningful on engines that ran SLO
-    // admission control: a `--shed off` engine reports 0.0 with
-    // `slo_enabled: false`, and folding that zero in would misreport
-    // the measuring engines' attainment.
-    let slo_attainment = {
-        let (sum, weight) = parts
-            .iter()
-            .filter(|p| {
-                p.slo_enabled
-                    && p.requests > 0
-                    && p.slo_attainment.is_finite()
-            })
-            .fold((0.0, 0usize), |(s, w), p| {
-                (s + p.slo_attainment * p.requests as f64, w + p.requests)
-            });
-        if weight == 0 {
-            0.0
-        } else {
-            sum / weight as f64
-        }
-    };
-    // Per-shard gauges come from ONE self-consistent engine snapshot —
-    // the freshest by rebalance progress. Element-wise max across
-    // snapshots taken at different times could combine a pre-move
-    // slice with a post-move one and report phantom capacity exceeding
-    // the conserved budget.
-    let freshest = parts.iter().max_by_key(|p| {
-        (p.shard_gpu_capacity.len(), p.rebalance_recomputes)
-    });
-    proto::StatsResult {
-        requests,
-        mean_ttft_ms: weighted(|p| p.mean_ttft_ms),
-        hit_rate: weighted(|p| p.hit_rate),
-        engines: parts.len(),
-        tree_inserts: parts.iter().map(|p| p.tree_inserts).max().unwrap_or(0),
-        tree_gpu_evictions: parts
-            .iter()
-            .map(|p| p.tree_gpu_evictions)
-            .max()
-            .unwrap_or(0),
-        tree_host_evictions: parts
-            .iter()
-            .map(|p| p.tree_host_evictions)
-            .max()
-            .unwrap_or(0),
-        spec_started: parts.iter().map(|p| p.spec_started).sum(),
-        spec_wasted: parts.iter().map(|p| p.spec_wasted).sum(),
-        spec_promoted: parts.iter().map(|p| p.spec_promoted).sum(),
-        tree_gpu_hit_bytes: parts
-            .iter()
-            .map(|p| p.tree_gpu_hit_bytes)
-            .max()
-            .unwrap_or(0),
-        // Chunk-cache counters live in the same shared tree counters:
-        // every engine snapshots the one sharded cache (summing across
-        // shards happens inside `TreeCounters::merge`), so across
-        // engines they max-merge exactly like `tree_gpu_hit_bytes`.
-        chunk_hits: parts.iter().map(|p| p.chunk_hits).max().unwrap_or(0),
-        chunk_hit_bytes: parts
-            .iter()
-            .map(|p| p.chunk_hit_bytes)
-            .max()
-            .unwrap_or(0),
-        boundary_recompute_tokens: parts
-            .iter()
-            .map(|p| p.boundary_recompute_tokens)
-            .max()
-            .unwrap_or(0),
-        rebalance_recomputes: parts
-            .iter()
-            .map(|p| p.rebalance_recomputes)
-            .max()
-            .unwrap_or(0),
-        rebalance_moved_bytes: parts
-            .iter()
-            .map(|p| p.rebalance_moved_bytes)
-            .max()
-            .unwrap_or(0),
-        shard_gpu_used: freshest
-            .map(|p| p.shard_gpu_used.clone())
-            .unwrap_or_default(),
-        shard_gpu_capacity: freshest
-            .map(|p| p.shard_gpu_capacity.clone())
-            .unwrap_or_default(),
-        // Each engine serves its own request stream, so goodput and the
-        // shed/downgrade counters sum; tail latency across engines is
-        // the worst engine's tail; SLO attainment is a per-request
-        // fraction, so it merges request-weighted like `hit_rate`.
-        goodput_rps: parts.iter().map(|p| p.goodput_rps).sum(),
-        ttft_p999_ms: parts
-            .iter()
-            .map(|p| p.ttft_p999_ms)
-            .fold(0.0, f64::max),
-        shed_requests: parts.iter().map(|p| p.shed_requests).sum(),
-        downgraded_requests: parts
-            .iter()
-            .map(|p| p.downgraded_requests)
-            .sum(),
-        slo_attainment,
-        slo_enabled: parts.iter().any(|p| p.slo_enabled),
-        // Disk-tier counters live in the shared tree counters: max-merge
-        // across engines like `tree_gpu_hit_bytes`; the occupancy gauges
-        // come from the same self-consistent snapshot as the shard
-        // arrays.
-        disk_spills: parts.iter().map(|p| p.disk_spills).max().unwrap_or(0),
-        disk_spill_bytes: parts
-            .iter()
-            .map(|p| p.disk_spill_bytes)
-            .max()
-            .unwrap_or(0),
-        disk_restage_hits: parts
-            .iter()
-            .map(|p| p.disk_restage_hits)
-            .max()
-            .unwrap_or(0),
-        disk_restage_bytes: parts
-            .iter()
-            .map(|p| p.disk_restage_bytes)
-            .max()
-            .unwrap_or(0),
-        disk_used: freshest.map(|p| p.disk_used).unwrap_or(0),
-        disk_capacity: freshest.map(|p| p.disk_capacity).unwrap_or(0),
-        tenants: merge_tenant_lines(parts),
-    }
-}
-
-/// Element-wise merge of the per-tenant lines by tenant id: each engine
-/// serves its own request stream, so the counts sum; `mean_ttft_ms` is
-/// completed-weighted over the engines that served that tenant (an
-/// engine with no completions for a tenant contributes neither value
-/// nor weight); the CAG mode takes the max code (2 = Cag dominates —
-/// the policy is shared, so engines only ever disagree transiently on
-/// the cold→cached demand flip).
-fn merge_tenant_lines(
-    parts: &[proto::StatsResult],
-) -> Vec<proto::TenantLine> {
-    use std::collections::BTreeMap;
-    let mut by: BTreeMap<u32, proto::TenantLine> = BTreeMap::new();
-    let mut ttft_weight: BTreeMap<u32, f64> = BTreeMap::new();
-    for p in parts {
-        for t in &p.tenants {
-            let e = by.entry(t.tenant).or_insert_with(|| {
-                proto::TenantLine {
-                    tenant: t.tenant,
-                    ..Default::default()
-                }
-            });
-            e.requests += t.requests;
-            e.completed += t.completed;
-            e.shed += t.shed;
-            e.downgraded += t.downgraded;
-            e.slo_ok += t.slo_ok;
-            e.mode = e.mode.max(t.mode);
-            if t.completed > 0 && t.mean_ttft_ms.is_finite() {
-                let w = t.completed as f64;
-                // Weighted sum for now; normalized below.
-                e.mean_ttft_ms += t.mean_ttft_ms * w;
-                *ttft_weight.entry(t.tenant).or_insert(0.0) += w;
-            }
-        }
-    }
-    for (tenant, line) in by.iter_mut() {
-        let w = ttft_weight.get(tenant).copied().unwrap_or(0.0);
-        line.mean_ttft_ms =
-            if w > 0.0 { line.mean_ttft_ms / w } else { 0.0 };
-    }
-    by.into_values().collect()
+    crate::metrics::registry::Registry::standard().merge(parts)
 }
 
 /// Fan one `stats` request out to every engine and merge the answers,
@@ -1280,12 +1116,45 @@ mod tests {
         assert_eq!(t0.completed, 6);
         assert_eq!(t0.shed, 2);
         assert_eq!(t0.mode, 2);
-        let want = (10.0 * 4.0 + 4.0 * 2.0) / 6.0;
+        // Request-weighted: a served tenant 0 at 10ms over 5 requests,
+        // b at 4ms over 3.
+        let want = (10.0 * 5.0 + 4.0 * 3.0) / 8.0;
         assert!((t0.mean_ttft_ms - want).abs() < 1e-12);
         let t1 = &m.tenants[1];
         assert_eq!(t1.tenant, 1);
         assert_eq!(t1.completed, 2);
         assert_eq!(t1.mean_ttft_ms, 30.0);
         assert_eq!(t1.mode, 1);
+    }
+
+    #[test]
+    fn merge_weights_tenant_mean_by_requests() {
+        // Regression: the by-tenant mean used to merge completed-
+        // weighted (and unguarded against zero-request lines). It must
+        // weight by the tenant's request count on each engine, with the
+        // same NaN/zero-served skip rule as the top-level mean.
+        let line = |requests, completed, ttft| proto::TenantLine {
+            tenant: 0,
+            requests,
+            completed,
+            mean_ttft_ms: ttft,
+            ..Default::default()
+        };
+        let mut a = part(10);
+        a.tenants = vec![line(9, 3, 12.0)];
+        let mut b = part(10);
+        b.tenants = vec![line(1, 1, 2.0)];
+        // An engine that admitted requests but completed none reports a
+        // non-finite mean: no value, no weight.
+        let mut c = part(10);
+        c.tenants = vec![line(5, 0, f64::NAN)];
+        let m = merge_stats(&[a, b, c]);
+        let t0 = &m.tenants[0];
+        assert_eq!(t0.requests, 15);
+        assert_eq!(t0.completed, 4);
+        // Request-weighted: (12*9 + 2*1) / (9 + 1), NOT the completed-
+        // weighted (12*3 + 2*1) / 4 = 9.5.
+        let want = (12.0 * 9.0 + 2.0 * 1.0) / 10.0;
+        assert!((t0.mean_ttft_ms - want).abs() < 1e-12);
     }
 }

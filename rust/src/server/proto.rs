@@ -1,4 +1,9 @@
 //! Wire protocol: newline-delimited JSON messages.
+//!
+//! The `stats` response body is schema-driven: the field set, wire
+//! names, parse defaults and merge semantics all come from the metric
+//! registry ([`crate::metrics::registry`]), so this module only defines
+//! the structs and delegates their encode/parse.
 
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
@@ -30,7 +35,8 @@ pub struct QueryResult {
 
 /// One tenant's slice of the aggregate serving metrics, with its CAG
 /// admission mode. The fan-out merge combines lines element-wise by
-/// tenant id: counts sum, `mean_ttft_ms` is completed-weighted.
+/// tenant id: counts sum, `mean_ttft_ms` is request-weighted (with a
+/// NaN/zero-served guard, like the top-level mean).
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct TenantLine {
     pub tenant: u32,
@@ -140,6 +146,11 @@ pub struct StatsResult {
     /// line for tenant 0 on legacy single-tenant deployments). The
     /// fan-out merge combines lines element-wise by tenant id.
     pub tenants: Vec<TenantLine>,
+    /// Extension counters registered beyond the standard schema
+    /// ([`crate::metrics::registry::Registry::with_counter`]): present
+    /// entries travel the wire and merge under their registered
+    /// semantics; the standard registry leaves this empty.
+    pub ext: Vec<(&'static str, u64)>,
 }
 
 /// Server → client.
@@ -216,105 +227,9 @@ pub fn encode_response(resp: &Response) -> String {
             ("total_ms", Json::num(q.total_ms)),
             ("text", Json::str(q.text.clone())),
         ]),
-        Response::Stats(s) => Json::obj(vec![
-            ("type", Json::str("stats")),
-            ("requests", Json::num(s.requests as f64)),
-            ("mean_ttft_ms", Json::num(s.mean_ttft_ms)),
-            ("hit_rate", Json::num(s.hit_rate)),
-            ("engines", Json::num(s.engines as f64)),
-            ("tree_inserts", Json::num(s.tree_inserts as f64)),
-            (
-                "tree_gpu_evictions",
-                Json::num(s.tree_gpu_evictions as f64),
-            ),
-            (
-                "tree_host_evictions",
-                Json::num(s.tree_host_evictions as f64),
-            ),
-            ("spec_started", Json::num(s.spec_started as f64)),
-            ("spec_wasted", Json::num(s.spec_wasted as f64)),
-            ("spec_promoted", Json::num(s.spec_promoted as f64)),
-            (
-                "tree_gpu_hit_bytes",
-                Json::num(s.tree_gpu_hit_bytes as f64),
-            ),
-            ("chunk_hits", Json::num(s.chunk_hits as f64)),
-            ("chunk_hit_bytes", Json::num(s.chunk_hit_bytes as f64)),
-            (
-                "boundary_recompute_tokens",
-                Json::num(s.boundary_recompute_tokens as f64),
-            ),
-            (
-                "rebalance_recomputes",
-                Json::num(s.rebalance_recomputes as f64),
-            ),
-            (
-                "rebalance_moved_bytes",
-                Json::num(s.rebalance_moved_bytes as f64),
-            ),
-            (
-                "shard_gpu_used",
-                Json::Arr(
-                    s.shard_gpu_used
-                        .iter()
-                        .map(|&b| Json::num(b as f64))
-                        .collect(),
-                ),
-            ),
-            (
-                "shard_gpu_capacity",
-                Json::Arr(
-                    s.shard_gpu_capacity
-                        .iter()
-                        .map(|&b| Json::num(b as f64))
-                        .collect(),
-                ),
-            ),
-            ("goodput_rps", Json::num(s.goodput_rps)),
-            ("ttft_p999_ms", Json::num(s.ttft_p999_ms)),
-            ("shed_requests", Json::num(s.shed_requests as f64)),
-            (
-                "downgraded_requests",
-                Json::num(s.downgraded_requests as f64),
-            ),
-            ("slo_attainment", Json::num(s.slo_attainment)),
-            ("slo_enabled", Json::Bool(s.slo_enabled)),
-            ("disk_spills", Json::num(s.disk_spills as f64)),
-            ("disk_spill_bytes", Json::num(s.disk_spill_bytes as f64)),
-            ("disk_restage_hits", Json::num(s.disk_restage_hits as f64)),
-            (
-                "disk_restage_bytes",
-                Json::num(s.disk_restage_bytes as f64),
-            ),
-            ("disk_used", Json::num(s.disk_used as f64)),
-            ("disk_capacity", Json::num(s.disk_capacity as f64)),
-            (
-                "tenants",
-                Json::Arr(
-                    s.tenants
-                        .iter()
-                        .map(|t| {
-                            Json::obj(vec![
-                                ("tenant", Json::num(t.tenant as f64)),
-                                ("requests", Json::num(t.requests as f64)),
-                                (
-                                    "completed",
-                                    Json::num(t.completed as f64),
-                                ),
-                                ("shed", Json::num(t.shed as f64)),
-                                (
-                                    "downgraded",
-                                    Json::num(t.downgraded as f64),
-                                ),
-                                ("slo_ok", Json::num(t.slo_ok as f64)),
-                                ("mean_ttft_ms", Json::num(t.mean_ttft_ms)),
-                                ("mode", Json::num(t.mode as f64)),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ),
-        ]),
+        Response::Stats(s) => {
+            crate::metrics::registry::Registry::standard().encode_stats(s)
+        }
         Response::Ok => Json::obj(vec![("type", Json::str("ok"))]),
         Response::Error { message } => Json::obj(vec![
             ("type", Json::str("error")),
@@ -322,44 +237,6 @@ pub fn encode_response(resp: &Response) -> String {
         ]),
     };
     v.to_string()
-}
-
-fn parse_u64_arr(v: &Json, key: &str) -> Vec<u64> {
-    v.get(key)
-        .and_then(Json::as_arr)
-        .map(|a| a.iter().filter_map(Json::as_u64).collect())
-        .unwrap_or_default()
-}
-
-fn parse_tenant_lines(v: &Json) -> Vec<TenantLine> {
-    let Some(arr) = v.get("tenants").and_then(Json::as_arr) else {
-        return Vec::new();
-    };
-    arr.iter()
-        .map(|t| TenantLine {
-            tenant: t.get("tenant").and_then(Json::as_u64).unwrap_or(0)
-                as u32,
-            requests: t
-                .get("requests")
-                .and_then(Json::as_u64)
-                .unwrap_or(0),
-            completed: t
-                .get("completed")
-                .and_then(Json::as_u64)
-                .unwrap_or(0),
-            shed: t.get("shed").and_then(Json::as_u64).unwrap_or(0),
-            downgraded: t
-                .get("downgraded")
-                .and_then(Json::as_u64)
-                .unwrap_or(0),
-            slo_ok: t.get("slo_ok").and_then(Json::as_u64).unwrap_or(0),
-            mean_ttft_ms: t
-                .get("mean_ttft_ms")
-                .and_then(Json::as_f64)
-                .unwrap_or(0.0),
-            mode: t.get("mode").and_then(Json::as_u64).unwrap_or(0) as u8,
-        })
-        .collect()
 }
 
 pub fn parse_response(line: &str) -> Result<Response> {
@@ -403,123 +280,9 @@ pub fn parse_response(line: &str) -> Result<Response> {
                 .unwrap_or("")
                 .to_string(),
         })),
-        "stats" => Ok(Response::Stats(StatsResult {
-            requests: v
-                .get("requests")
-                .and_then(Json::as_usize)
-                .unwrap_or(0),
-            mean_ttft_ms: v
-                .get("mean_ttft_ms")
-                .and_then(Json::as_f64)
-                .unwrap_or(0.0),
-            hit_rate: v
-                .get("hit_rate")
-                .and_then(Json::as_f64)
-                .unwrap_or(0.0),
-            engines: v
-                .get("engines")
-                .and_then(Json::as_usize)
-                .unwrap_or(1),
-            tree_inserts: v
-                .get("tree_inserts")
-                .and_then(Json::as_u64)
-                .unwrap_or(0),
-            tree_gpu_evictions: v
-                .get("tree_gpu_evictions")
-                .and_then(Json::as_u64)
-                .unwrap_or(0),
-            tree_host_evictions: v
-                .get("tree_host_evictions")
-                .and_then(Json::as_u64)
-                .unwrap_or(0),
-            spec_started: v
-                .get("spec_started")
-                .and_then(Json::as_u64)
-                .unwrap_or(0),
-            spec_wasted: v
-                .get("spec_wasted")
-                .and_then(Json::as_u64)
-                .unwrap_or(0),
-            spec_promoted: v
-                .get("spec_promoted")
-                .and_then(Json::as_u64)
-                .unwrap_or(0),
-            tree_gpu_hit_bytes: v
-                .get("tree_gpu_hit_bytes")
-                .and_then(Json::as_u64)
-                .unwrap_or(0),
-            chunk_hits: v
-                .get("chunk_hits")
-                .and_then(Json::as_u64)
-                .unwrap_or(0),
-            chunk_hit_bytes: v
-                .get("chunk_hit_bytes")
-                .and_then(Json::as_u64)
-                .unwrap_or(0),
-            boundary_recompute_tokens: v
-                .get("boundary_recompute_tokens")
-                .and_then(Json::as_u64)
-                .unwrap_or(0),
-            rebalance_recomputes: v
-                .get("rebalance_recomputes")
-                .and_then(Json::as_u64)
-                .unwrap_or(0),
-            rebalance_moved_bytes: v
-                .get("rebalance_moved_bytes")
-                .and_then(Json::as_u64)
-                .unwrap_or(0),
-            shard_gpu_used: parse_u64_arr(v, "shard_gpu_used"),
-            shard_gpu_capacity: parse_u64_arr(v, "shard_gpu_capacity"),
-            goodput_rps: v
-                .get("goodput_rps")
-                .and_then(Json::as_f64)
-                .unwrap_or(0.0),
-            ttft_p999_ms: v
-                .get("ttft_p999_ms")
-                .and_then(Json::as_f64)
-                .unwrap_or(0.0),
-            shed_requests: v
-                .get("shed_requests")
-                .and_then(Json::as_u64)
-                .unwrap_or(0),
-            downgraded_requests: v
-                .get("downgraded_requests")
-                .and_then(Json::as_u64)
-                .unwrap_or(0),
-            slo_attainment: v
-                .get("slo_attainment")
-                .and_then(Json::as_f64)
-                .unwrap_or(0.0),
-            slo_enabled: v
-                .get("slo_enabled")
-                .and_then(Json::as_bool)
-                .unwrap_or(false),
-            disk_spills: v
-                .get("disk_spills")
-                .and_then(Json::as_u64)
-                .unwrap_or(0),
-            disk_spill_bytes: v
-                .get("disk_spill_bytes")
-                .and_then(Json::as_u64)
-                .unwrap_or(0),
-            disk_restage_hits: v
-                .get("disk_restage_hits")
-                .and_then(Json::as_u64)
-                .unwrap_or(0),
-            disk_restage_bytes: v
-                .get("disk_restage_bytes")
-                .and_then(Json::as_u64)
-                .unwrap_or(0),
-            disk_used: v
-                .get("disk_used")
-                .and_then(Json::as_u64)
-                .unwrap_or(0),
-            disk_capacity: v
-                .get("disk_capacity")
-                .and_then(Json::as_u64)
-                .unwrap_or(0),
-            tenants: parse_tenant_lines(v),
-        })),
+        "stats" => Ok(Response::Stats(
+            crate::metrics::registry::Registry::standard().parse_stats(&v),
+        )),
         "ok" => Ok(Response::Ok),
         "error" => Ok(Response::Error {
             message: v
@@ -619,6 +382,7 @@ mod tests {
                         mode: 1,
                     },
                 ],
+                ext: Vec::new(),
             }),
             Response::Ok,
             Response::Error {

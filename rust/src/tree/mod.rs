@@ -185,22 +185,15 @@ pub struct TreeCounters {
 
 impl TreeCounters {
     /// Field-wise sum — aggregates per-shard counters for the `Stats`
-    /// endpoint and metrics.
+    /// endpoint and metrics. Driven by the registry's field table
+    /// ([`crate::metrics::registry::TREE_COUNTER_FIELDS`]), so a new
+    /// counter declared there is summed with no edit here; the table's
+    /// exhaustiveness is pinned by the registry conformance tests.
     pub fn merge(&mut self, other: TreeCounters) {
-        self.gpu_evictions += other.gpu_evictions;
-        self.host_evictions += other.host_evictions;
-        self.swap_out_bytes += other.swap_out_bytes;
-        self.zero_copy_evictions += other.zero_copy_evictions;
-        self.inserts += other.inserts;
-        self.rejected_inserts += other.rejected_inserts;
-        self.gpu_hit_bytes += other.gpu_hit_bytes;
-        self.chunk_hits += other.chunk_hits;
-        self.chunk_hit_bytes += other.chunk_hit_bytes;
-        self.boundary_recompute_tokens += other.boundary_recompute_tokens;
-        self.disk_spills += other.disk_spills;
-        self.disk_spill_bytes += other.disk_spill_bytes;
-        self.disk_restage_hits += other.disk_restage_hits;
-        self.disk_restage_bytes += other.disk_restage_bytes;
+        for f in crate::metrics::registry::TREE_COUNTER_FIELDS.iter() {
+            let v = (f.get)(self) + (f.get)(&other);
+            (f.set)(self, v);
+        }
     }
 }
 

@@ -1,0 +1,681 @@
+//! Conformance and property suite for the declarative metrics registry
+//! ([`ragcache::metrics::registry`]) — the one schema driving the stats
+//! wire format, the cross-engine merge, the tree-counter aggregation,
+//! the bench column/tolerance metadata and the CI schema snapshot.
+//!
+//! The refactor it pins was behavior-preserving by construction, so the
+//! suite holds it to that:
+//! - the wire bytes of a fully-populated `stats` response are pinned as
+//!   a golden string (and the committed schema snapshot as another);
+//! - randomized encode → parse roundtrips recover every field exactly,
+//!   and the wire never carries NaN/inf;
+//! - the registry merge equals the retired hand-written `merge_stats`,
+//!   replicated verbatim in-test, over randomized multi-engine parts —
+//!   including the NaN-skip weighting, the `slo_enabled` gating and the
+//!   one-snapshot shard-array rule. The ONE deliberate divergence (the
+//!   per-tenant mean is now request-weighted, not completed-weighted)
+//!   is folded into the replica and pinned by its own regression test;
+//! - adding a metric is exactly two edits: an `ExtCounter` registry
+//!   entry plus its increment site flows through encode, parse, merge,
+//!   the bench column set and the schema dump with zero other changes.
+
+use ragcache::metrics::registry::{
+    descriptors, merge_tenant_lines, schema_dump, serving_bench_columns,
+    tolerance_of, wire_mean_ms, ExtCounter, MergeKind, Registry,
+    Tolerance, TREE_COUNTER_FIELDS,
+};
+use ragcache::server::proto::{
+    encode_response, parse_response, Response, StatsResult, TenantLine,
+};
+use ragcache::tree::TreeCounters;
+use ragcache::util::Rng;
+
+/// The fully-populated fixture the proto roundtrip test ships: every
+/// standard field non-default, multi-element shard arrays, two tenant
+/// lines.
+fn populated_stats() -> StatsResult {
+    StatsResult {
+        requests: 10,
+        mean_ttft_ms: 5.5,
+        hit_rate: 0.75,
+        engines: 2,
+        tree_inserts: 40,
+        tree_gpu_evictions: 7,
+        tree_host_evictions: 3,
+        spec_started: 9,
+        spec_wasted: 2,
+        spec_promoted: 5,
+        tree_gpu_hit_bytes: 4096,
+        chunk_hits: 6,
+        chunk_hit_bytes: 768,
+        boundary_recompute_tokens: 48,
+        rebalance_recomputes: 3,
+        rebalance_moved_bytes: 1024,
+        shard_gpu_used: vec![512, 0, 256, 128],
+        shard_gpu_capacity: vec![2048, 512, 768, 768],
+        goodput_rps: 1.25,
+        ttft_p999_ms: 87.5,
+        shed_requests: 4,
+        downgraded_requests: 2,
+        slo_attainment: 0.9,
+        slo_enabled: true,
+        disk_spills: 11,
+        disk_spill_bytes: 5632,
+        disk_restage_hits: 8,
+        disk_restage_bytes: 4096,
+        disk_used: 9216,
+        disk_capacity: 65536,
+        tenants: vec![
+            TenantLine {
+                tenant: 0,
+                requests: 6,
+                completed: 5,
+                shed: 1,
+                downgraded: 1,
+                slo_ok: 4,
+                mean_ttft_ms: 7.25,
+                mode: 2,
+            },
+            TenantLine {
+                tenant: 1,
+                requests: 4,
+                completed: 4,
+                shed: 0,
+                downgraded: 0,
+                slo_ok: 3,
+                mean_ttft_ms: 11.5,
+                mode: 1,
+            },
+        ],
+        ext: Vec::new(),
+    }
+}
+
+/// Golden wire bytes: the JSON object is a sorted map, so the encoding
+/// of [`populated_stats`] is exactly this string. A changed field name,
+/// a dropped field, or a numeric formatting change all fail here.
+#[test]
+fn golden_wire_bytes() {
+    let want = concat!(
+        "{\"boundary_recompute_tokens\":48,",
+        "\"chunk_hit_bytes\":768,\"chunk_hits\":6,",
+        "\"disk_capacity\":65536,\"disk_restage_bytes\":4096,",
+        "\"disk_restage_hits\":8,\"disk_spill_bytes\":5632,",
+        "\"disk_spills\":11,\"disk_used\":9216,",
+        "\"downgraded_requests\":2,\"engines\":2,",
+        "\"goodput_rps\":1.25,\"hit_rate\":0.75,\"mean_ttft_ms\":5.5,",
+        "\"rebalance_moved_bytes\":1024,\"rebalance_recomputes\":3,",
+        "\"requests\":10,",
+        "\"shard_gpu_capacity\":[2048,512,768,768],",
+        "\"shard_gpu_used\":[512,0,256,128],\"shed_requests\":4,",
+        "\"slo_attainment\":0.9,\"slo_enabled\":true,",
+        "\"spec_promoted\":5,\"spec_started\":9,\"spec_wasted\":2,",
+        "\"tenants\":[",
+        "{\"completed\":5,\"downgraded\":1,\"mean_ttft_ms\":7.25,",
+        "\"mode\":2,\"requests\":6,\"shed\":1,\"slo_ok\":4,\"tenant\":0},",
+        "{\"completed\":4,\"downgraded\":0,\"mean_ttft_ms\":11.5,",
+        "\"mode\":1,\"requests\":4,\"shed\":0,\"slo_ok\":3,\"tenant\":1}",
+        "],",
+        "\"tree_gpu_evictions\":7,\"tree_gpu_hit_bytes\":4096,",
+        "\"tree_host_evictions\":3,\"tree_inserts\":40,",
+        "\"ttft_p999_ms\":87.5,\"type\":\"stats\"}",
+    );
+    let enc = encode_response(&Response::Stats(populated_stats()));
+    assert_eq!(enc, want);
+    // And the golden bytes parse back to the exact struct.
+    assert_eq!(
+        parse_response(want).unwrap(),
+        Response::Stats(populated_stats())
+    );
+}
+
+/// A random stats answer with every field fuzzed: counters up to 2^50
+/// (exact on the f64 wire), finite floats, shard arrays of 0..=4
+/// elements, tenant vectors of 0..=3 lines.
+fn rand_stats(rng: &mut Rng) -> StatsResult {
+    let big = |rng: &mut Rng| rng.below(1 << 50);
+    let shards = |rng: &mut Rng| -> Vec<u64> {
+        (0..rng.index(5)).map(|_| rng.below(1 << 40)).collect()
+    };
+    StatsResult {
+        requests: rng.below(1 << 30) as usize,
+        mean_ttft_ms: rng.f64() * 1e4,
+        hit_rate: rng.f64(),
+        engines: 1 + rng.index(8),
+        tree_inserts: big(rng),
+        tree_gpu_evictions: big(rng),
+        tree_host_evictions: big(rng),
+        spec_started: big(rng),
+        spec_wasted: big(rng),
+        spec_promoted: big(rng),
+        tree_gpu_hit_bytes: big(rng),
+        chunk_hits: big(rng),
+        chunk_hit_bytes: big(rng),
+        boundary_recompute_tokens: big(rng),
+        rebalance_recomputes: big(rng),
+        rebalance_moved_bytes: big(rng),
+        shard_gpu_used: shards(rng),
+        shard_gpu_capacity: shards(rng),
+        goodput_rps: rng.f64() * 100.0,
+        ttft_p999_ms: rng.f64() * 1e5,
+        shed_requests: big(rng),
+        downgraded_requests: big(rng),
+        slo_attainment: rng.f64(),
+        slo_enabled: rng.chance(0.5),
+        disk_spills: big(rng),
+        disk_spill_bytes: big(rng),
+        disk_restage_hits: big(rng),
+        disk_restage_bytes: big(rng),
+        disk_used: big(rng),
+        disk_capacity: big(rng),
+        tenants: (0..rng.index(4))
+            .map(|i| TenantLine {
+                tenant: i as u32,
+                requests: rng.below(1 << 30),
+                completed: rng.below(1 << 30),
+                shed: rng.below(1 << 20),
+                downgraded: rng.below(1 << 20),
+                slo_ok: rng.below(1 << 30),
+                mean_ttft_ms: rng.f64() * 1e3,
+                mode: rng.index(3) as u8,
+            })
+            .collect(),
+        ext: Vec::new(),
+    }
+}
+
+/// Property: encode → parse recovers every field exactly, over fully
+/// randomized answers (including empty and multi-element shard arrays
+/// and tenant vectors), and the wire never carries NaN or inf — JSON
+/// cannot represent either.
+#[test]
+fn randomized_wire_roundtrip() {
+    let mut rng = Rng::new(0x57A7_5_2E6);
+    for _ in 0..200 {
+        let s = rand_stats(&mut rng);
+        let enc = encode_response(&Response::Stats(s.clone()));
+        assert!(
+            !enc.contains("NaN") && !enc.contains("inf"),
+            "non-finite value escaped onto the wire: {enc}"
+        );
+        assert_eq!(parse_response(&enc).unwrap(), Response::Stats(s));
+    }
+}
+
+/// The NaN-safe mean encoding producers use: finite values pass
+/// through, NaN/inf (a mean over zero completions) report 0.0.
+#[test]
+fn wire_mean_is_nan_safe() {
+    assert_eq!(wire_mean_ms(3.5), 3.5);
+    assert_eq!(wire_mean_ms(0.0), 0.0);
+    assert_eq!(wire_mean_ms(f64::NAN), 0.0);
+    assert_eq!(wire_mean_ms(f64::INFINITY), 0.0);
+    assert_eq!(wire_mean_ms(f64::NEG_INFINITY), 0.0);
+}
+
+/// The retired hand-written `server::merge_tenant_lines`, replicated
+/// for the conformance comparison — with the ONE deliberate change
+/// folded in: the mean weights by `requests` under the zero-served
+/// guard (the old code weighted by `completed`; see
+/// `tenant_mean_merges_request_weighted` for the regression pin).
+fn legacy_merge_tenant_lines(parts: &[StatsResult]) -> Vec<TenantLine> {
+    use std::collections::BTreeMap;
+    let mut by: BTreeMap<u32, TenantLine> = BTreeMap::new();
+    let mut ttft_weight: BTreeMap<u32, f64> = BTreeMap::new();
+    for p in parts {
+        for t in &p.tenants {
+            let e = by.entry(t.tenant).or_insert_with(|| TenantLine {
+                tenant: t.tenant,
+                ..Default::default()
+            });
+            e.requests += t.requests;
+            e.completed += t.completed;
+            e.shed += t.shed;
+            e.downgraded += t.downgraded;
+            e.slo_ok += t.slo_ok;
+            e.mode = e.mode.max(t.mode);
+            if t.requests > 0
+                && t.completed > 0
+                && t.mean_ttft_ms.is_finite()
+            {
+                let w = t.requests as f64;
+                e.mean_ttft_ms += t.mean_ttft_ms * w;
+                *ttft_weight.entry(t.tenant).or_insert(0.0) += w;
+            }
+        }
+    }
+    for (tenant, line) in by.iter_mut() {
+        let w = ttft_weight.get(tenant).copied().unwrap_or(0.0);
+        line.mean_ttft_ms =
+            if w > 0.0 { line.mean_ttft_ms / w } else { 0.0 };
+    }
+    by.into_values().collect()
+}
+
+/// The retired hand-written `server::merge_stats`, replicated verbatim
+/// for the conformance comparison (modulo the tenant-mean fix above
+/// and the `ext` field the old struct predates).
+fn legacy_merge_stats(parts: &[StatsResult]) -> StatsResult {
+    let requests: usize = parts.iter().map(|p| p.requests).sum();
+    let weighted = |f: fn(&StatsResult) -> f64| -> f64 {
+        let (sum, weight) = parts
+            .iter()
+            .filter(|p| p.requests > 0 && f(p).is_finite())
+            .fold((0.0, 0usize), |(s, w), p| {
+                (s + f(p) * p.requests as f64, w + p.requests)
+            });
+        if weight == 0 {
+            0.0
+        } else {
+            sum / weight as f64
+        }
+    };
+    let slo_attainment = {
+        let (sum, weight) = parts
+            .iter()
+            .filter(|p| {
+                p.slo_enabled
+                    && p.requests > 0
+                    && p.slo_attainment.is_finite()
+            })
+            .fold((0.0, 0usize), |(s, w), p| {
+                (s + p.slo_attainment * p.requests as f64, w + p.requests)
+            });
+        if weight == 0 {
+            0.0
+        } else {
+            sum / weight as f64
+        }
+    };
+    let freshest = parts.iter().max_by_key(|p| {
+        (p.shard_gpu_capacity.len(), p.rebalance_recomputes)
+    });
+    StatsResult {
+        requests,
+        mean_ttft_ms: weighted(|p| p.mean_ttft_ms),
+        hit_rate: weighted(|p| p.hit_rate),
+        engines: parts.len(),
+        tree_inserts: parts
+            .iter()
+            .map(|p| p.tree_inserts)
+            .max()
+            .unwrap_or(0),
+        tree_gpu_evictions: parts
+            .iter()
+            .map(|p| p.tree_gpu_evictions)
+            .max()
+            .unwrap_or(0),
+        tree_host_evictions: parts
+            .iter()
+            .map(|p| p.tree_host_evictions)
+            .max()
+            .unwrap_or(0),
+        spec_started: parts.iter().map(|p| p.spec_started).sum(),
+        spec_wasted: parts.iter().map(|p| p.spec_wasted).sum(),
+        spec_promoted: parts.iter().map(|p| p.spec_promoted).sum(),
+        tree_gpu_hit_bytes: parts
+            .iter()
+            .map(|p| p.tree_gpu_hit_bytes)
+            .max()
+            .unwrap_or(0),
+        chunk_hits: parts.iter().map(|p| p.chunk_hits).max().unwrap_or(0),
+        chunk_hit_bytes: parts
+            .iter()
+            .map(|p| p.chunk_hit_bytes)
+            .max()
+            .unwrap_or(0),
+        boundary_recompute_tokens: parts
+            .iter()
+            .map(|p| p.boundary_recompute_tokens)
+            .max()
+            .unwrap_or(0),
+        rebalance_recomputes: parts
+            .iter()
+            .map(|p| p.rebalance_recomputes)
+            .max()
+            .unwrap_or(0),
+        rebalance_moved_bytes: parts
+            .iter()
+            .map(|p| p.rebalance_moved_bytes)
+            .max()
+            .unwrap_or(0),
+        shard_gpu_used: freshest
+            .map(|p| p.shard_gpu_used.clone())
+            .unwrap_or_default(),
+        shard_gpu_capacity: freshest
+            .map(|p| p.shard_gpu_capacity.clone())
+            .unwrap_or_default(),
+        goodput_rps: parts.iter().map(|p| p.goodput_rps).sum(),
+        ttft_p999_ms: parts
+            .iter()
+            .map(|p| p.ttft_p999_ms)
+            .fold(0.0, f64::max),
+        shed_requests: parts.iter().map(|p| p.shed_requests).sum(),
+        downgraded_requests: parts
+            .iter()
+            .map(|p| p.downgraded_requests)
+            .sum(),
+        slo_attainment,
+        slo_enabled: parts.iter().any(|p| p.slo_enabled),
+        disk_spills: parts
+            .iter()
+            .map(|p| p.disk_spills)
+            .max()
+            .unwrap_or(0),
+        disk_spill_bytes: parts
+            .iter()
+            .map(|p| p.disk_spill_bytes)
+            .max()
+            .unwrap_or(0),
+        disk_restage_hits: parts
+            .iter()
+            .map(|p| p.disk_restage_hits)
+            .max()
+            .unwrap_or(0),
+        disk_restage_bytes: parts
+            .iter()
+            .map(|p| p.disk_restage_bytes)
+            .max()
+            .unwrap_or(0),
+        disk_used: freshest.map(|p| p.disk_used).unwrap_or(0),
+        disk_capacity: freshest.map(|p| p.disk_capacity).unwrap_or(0),
+        tenants: legacy_merge_tenant_lines(parts),
+        ext: Vec::new(),
+    }
+}
+
+/// Conformance: the table-driven merge equals the hand-written one over
+/// randomized multi-engine parts — NaN means, zero-request engines,
+/// disabled-SLO engines, ragged shard arrays, overlapping tenant ids
+/// and the empty fan-out all included. The arithmetic runs in the same
+/// order on both sides, so equality is bit-exact, not approximate.
+#[test]
+fn merge_matches_legacy_merge() {
+    let mut rng = Rng::new(0xCAFE_F00D);
+    let reg = Registry::standard();
+    assert_eq!(reg.merge(&[]), legacy_merge_stats(&[]));
+    for _ in 0..200 {
+        let parts: Vec<StatsResult> = (0..1 + rng.index(5))
+            .map(|_| {
+                let mut p = rand_stats(&mut rng);
+                // NaN arrives in in-process parts (a mean over zero
+                // completions), not off the wire: inject some so the
+                // skip rules are exercised, in the mean, the
+                // attainment and the tenant lines.
+                if rng.chance(0.25) {
+                    p.mean_ttft_ms = f64::NAN;
+                }
+                if rng.chance(0.25) {
+                    p.slo_attainment = f64::NAN;
+                }
+                if rng.chance(0.25) {
+                    p.requests = 0;
+                }
+                for t in &mut p.tenants {
+                    if rng.chance(0.2) {
+                        t.mean_ttft_ms = f64::NAN;
+                    }
+                    if rng.chance(0.2) {
+                        t.completed = 0;
+                    }
+                }
+                p
+            })
+            .collect();
+        assert_eq!(reg.merge(&parts), legacy_merge_stats(&parts));
+    }
+}
+
+/// Regression (the one deliberate merge change): the per-tenant mean
+/// TTFT merges request-weighted — matching the top-level mean and the
+/// wire doc — with lines that served nothing (zero requests, zero
+/// completions) or report a non-finite mean contributing neither value
+/// nor weight.
+#[test]
+fn tenant_mean_merges_request_weighted() {
+    let line = |requests, completed, mean| TenantLine {
+        tenant: 3,
+        requests,
+        completed,
+        mean_ttft_ms: mean,
+        ..Default::default()
+    };
+    let part = |l: TenantLine| StatsResult {
+        tenants: vec![l],
+        ..Default::default()
+    };
+    let parts = [
+        part(line(9, 3, 12.0)),
+        part(line(1, 1, 2.0)),
+        part(line(5, 2, f64::NAN)), // skipped: non-finite
+        part(line(4, 0, 8.0)),      // skipped: nothing served
+    ];
+    let merged = merge_tenant_lines(&parts);
+    assert_eq!(merged.len(), 1);
+    assert_eq!(merged[0].requests, 19);
+    assert_eq!(merged[0].completed, 6);
+    // Request-weighted over the two measuring lines: 11.0 — NOT the
+    // completed-weighted 9.5 the old merge reported.
+    let want = (12.0 * 9.0 + 2.0 * 1.0) / 10.0;
+    assert!((merged[0].mean_ttft_ms - want).abs() < 1e-12);
+    // Every line guarded out → 0.0, never NaN.
+    let none = merge_tenant_lines(&[part(line(5, 0, 7.0))]);
+    assert_eq!(none[0].mean_ttft_ms, 0.0);
+}
+
+/// The one-snapshot rule: both shard arrays and the disk gauges come
+/// wholly from the freshest part (most shard gauges, then most
+/// rebalance progress; ties keep the LAST part) — never mixed
+/// element-wise across snapshots.
+#[test]
+fn shard_arrays_merge_from_one_snapshot() {
+    let snap = |cap: Vec<u64>, used: Vec<u64>, rec, du, dc| StatsResult {
+        shard_gpu_capacity: cap,
+        shard_gpu_used: used,
+        rebalance_recomputes: rec,
+        disk_used: du,
+        disk_capacity: dc,
+        ..Default::default()
+    };
+    let a = snap(vec![100, 50], vec![10, 20], 5, 1, 10);
+    let b = snap(vec![30, 200], vec![90, 1], 9, 2, 20);
+    let m = Registry::standard().merge(&[a.clone(), b.clone()]);
+    assert_eq!(m.shard_gpu_capacity, b.shard_gpu_capacity);
+    assert_eq!(m.shard_gpu_used, b.shard_gpu_used);
+    assert_eq!((m.disk_used, m.disk_capacity), (2, 20));
+    // Exact tie on (len, recomputes): the last part wins.
+    let c = snap(vec![7, 7], vec![3, 3], 9, 4, 40);
+    let m = Registry::standard().merge(&[b.clone(), c.clone()]);
+    assert_eq!(m.shard_gpu_used, c.shard_gpu_used);
+    assert_eq!((m.disk_used, m.disk_capacity), (4, 40));
+    // But rebalance counters themselves still max-merge.
+    assert_eq!(m.rebalance_recomputes, 9);
+}
+
+/// Add-a-metric demonstration: ONE `ExtCounter` registry entry plus its
+/// increment site (`StatsResult::ext`) flows through wire encode,
+/// parse, merge, the bench column set, the tolerance table and the
+/// schema dump — with zero edits to the structs, the encoder, the
+/// merge, or the bench emitters, and zero effect on the standard
+/// schema.
+#[test]
+fn add_a_metric_is_two_edits() {
+    let reg = Registry::standard().with_counter(ExtCounter {
+        name: "throwaway_total",
+        merge: MergeKind::Sum,
+        tolerance: Tolerance::Tight,
+        bench: true,
+    });
+    // Increment site: the producer pushes the counter into `ext`.
+    let mut s = populated_stats();
+    s.ext.push(("throwaway_total", 7));
+
+    // Wire encode carries it...
+    let enc = reg.encode_stats(&s);
+    assert_eq!(
+        enc.get("throwaway_total").and_then(|v| v.as_u64()),
+        Some(7)
+    );
+    // ...and parse recovers it.
+    let parsed = reg.parse_stats(&enc);
+    assert_eq!(parsed.ext, vec![("throwaway_total", 7)]);
+
+    // Merge applies the registered semantics (Sum), and a part that
+    // predates the counter simply carries no entry.
+    let mut other = populated_stats();
+    other.ext.push(("throwaway_total", 5));
+    let merged = reg.merge(&[s.clone(), other]);
+    assert_eq!(merged.ext, vec![("throwaway_total", 12)]);
+    let merged = reg.merge(&[s.clone(), populated_stats()]);
+    assert_eq!(merged.ext, vec![("throwaway_total", 7)]);
+
+    // Bench metadata: the column set appends it, the tolerance table
+    // knows it.
+    let std_cols = serving_bench_columns(&Registry::standard());
+    let ext_cols = serving_bench_columns(&reg);
+    assert_eq!(ext_cols[..std_cols.len()], std_cols[..]);
+    assert_eq!(ext_cols.last(), Some(&"throwaway_total"));
+    assert_eq!(
+        tolerance_of(&reg, "throwaway_total"),
+        Some(Tolerance::Tight)
+    );
+
+    // Schema dump lists it, marked as an extension.
+    let dump = schema_dump(&reg);
+    assert!(dump.contains(
+        "stat throwaway_total kind=counter scope=per_engine \
+         merge=sum tolerance=tight ext\n"
+    ));
+    assert!(dump.contains("bench_serving_column throwaway_total\n"));
+
+    // The standard registry is untouched: an unregistered ext entry
+    // stays off the wire, and the standard schema has never heard of
+    // the counter.
+    let std_enc = Registry::standard().encode_stats(&s);
+    assert!(std_enc.get("throwaway_total").is_none());
+    assert!(!schema_dump(&Registry::standard())
+        .contains("throwaway_total"));
+}
+
+/// The BENCH_serving column set is pinned: the registry must reproduce
+/// exactly the columns the hand-written emitter declared, in order —
+/// the bench_diff baselines depend on this set not drifting.
+#[test]
+fn serving_bench_columns_are_unchanged() {
+    assert_eq!(
+        serving_bench_columns(&Registry::standard()),
+        vec![
+            "chunk_cache",
+            "requests",
+            "ttft_p50_ms",
+            "ttft_p99_ms",
+            "throughput_rps",
+            "sum_prefill_tokens",
+            "ttft_proxy_s",
+            "gpu_hit_bytes",
+            "chunk_hits",
+            "chunk_hit_bytes",
+            "boundary_recompute_tokens",
+            "tree_inserts",
+            "swap_out_bytes",
+            "goodput_rps",
+            "ttft_p999_ms",
+            "shed_requests",
+            "disk",
+            "disk_spills",
+            "disk_restage_hits",
+            "disk_restage_bytes",
+        ]
+    );
+}
+
+/// The registry's tolerance classes reproduce the wall-clock suffix
+/// rule bench_diff used before the registry existed: loose iff the
+/// wire name ends `_ms` or `_rps`, and every tree counter tight — so
+/// swapping bench_diff onto `tolerance_of` changed no band.
+#[test]
+fn tolerance_classes_match_the_suffix_rule() {
+    let reg = Registry::standard();
+    for d in descriptors() {
+        let suffix_loose =
+            d.wire.ends_with("_ms") || d.wire.ends_with("_rps");
+        assert_eq!(
+            d.tolerance == Tolerance::Loose,
+            suffix_loose,
+            "{} would change its bench_diff band",
+            d.wire
+        );
+        assert_eq!(tolerance_of(&reg, d.wire), Some(d.tolerance));
+    }
+    for f in TREE_COUNTER_FIELDS.iter() {
+        assert!(!f.name.ends_with("_ms") && !f.name.ends_with("_rps"));
+        assert_eq!(tolerance_of(&reg, f.name), Some(Tolerance::Tight));
+    }
+    // Unregistered columns stay on bench_diff's own fallback.
+    assert_eq!(tolerance_of(&reg, "ttft_p50_ms"), None);
+    assert_eq!(tolerance_of(&reg, "chunk_cache"), None);
+}
+
+/// Registry hygiene: wire names are unique and labels non-empty — the
+/// schema is a function from name to descriptor.
+#[test]
+fn descriptor_names_are_unique() {
+    let mut seen = std::collections::BTreeSet::new();
+    for d in descriptors() {
+        assert!(seen.insert(d.wire), "duplicate metric {}", d.wire);
+        assert!(!d.label.is_empty());
+    }
+}
+
+/// The tree-counter field table is exhaustive: setting every field
+/// through the table reproduces a full struct literal (which fails to
+/// compile if `TreeCounters` grows a field the table misses), and
+/// `TreeCounters::merge` is the field-wise sum the table drives.
+#[test]
+fn tree_counter_table_is_exhaustive() {
+    let mut c = TreeCounters::default();
+    for (i, f) in TREE_COUNTER_FIELDS.iter().enumerate() {
+        (f.set)(&mut c, (i as u64 + 1) * 3);
+    }
+    let want = TreeCounters {
+        gpu_evictions: 3,
+        host_evictions: 6,
+        swap_out_bytes: 9,
+        zero_copy_evictions: 12,
+        inserts: 15,
+        rejected_inserts: 18,
+        gpu_hit_bytes: 21,
+        chunk_hits: 24,
+        chunk_hit_bytes: 27,
+        boundary_recompute_tokens: 30,
+        disk_spills: 33,
+        disk_spill_bytes: 36,
+        disk_restage_hits: 39,
+        disk_restage_bytes: 42,
+    };
+    assert_eq!(c, want);
+    let mut m = c;
+    m.merge(c);
+    for f in TREE_COUNTER_FIELDS.iter() {
+        assert_eq!((f.get)(&m), 2 * (f.get)(&c));
+    }
+}
+
+/// The generated schema matches the committed snapshot byte for byte —
+/// the same gate ci.sh runs via `ragcache stats-schema`, held here so
+/// plain `cargo test` catches drift too.
+#[test]
+fn schema_dump_matches_committed_snapshot() {
+    let committed = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/bench_baselines/stats_schema.txt"
+    ))
+    .expect("bench_baselines/stats_schema.txt is committed");
+    assert_eq!(
+        schema_dump(&Registry::standard()),
+        committed,
+        "metric schema drifted from the committed snapshot; \
+         regenerate it deliberately with \
+         `cargo run --release --bin ragcache -- stats-schema`"
+    );
+}
